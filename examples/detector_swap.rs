@@ -1,0 +1,128 @@
+//! §6.1 swap claim: run the SAME pipeline twice — once with the
+//! NN (XLA) detector, once with the classical template-matching
+//! detector — and compare quality + latency. Only the detection nodes
+//! differ between the two configs; every other node is untouched.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example detector_swap
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use mediapipe::calculators::tracking::SharedQuality;
+use mediapipe::prelude::*;
+use mediapipe::runtime::shared_engine;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+const COMMON_TAIL: &str = r#"
+node {
+  calculator: "TrackedDetectionMergerCalculator"
+  input_stream: "DETECTIONS:fresh"
+  input_stream: "TRACKED:tracked"
+  output_stream: "MERGED:merged"
+  options { iou_threshold: 0.1 }
+}
+node {
+  calculator: "BoxTrackerCalculator"
+  input_stream: "FRAME:frames"
+  back_edge_input_stream: "DETECTIONS:merged"
+  output_stream: "TRACKED:tracked"
+}
+node {
+  calculator: "DetectionQualityCalculator"
+  input_stream: "DETECTIONS:tracked"
+  input_stream: "GT:gt"
+  input_side_packet: "STATS:quality"
+  options { iou_threshold: 0.2 }
+}
+"#;
+
+const SOURCE: &str = r#"
+max_queue_size: 8
+input_side_packet: "quality"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  output_stream: "GT:gt"
+  options { frames: 400 fps: 30 objects: 2 seed: 7 width: 32 height: 32 noise: 0.01 min_size: 0.12 }
+}
+node {
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:frames"
+  output_stream: "FRAME:selected"
+  options { mode: "period" period: 5 }
+}
+"#;
+
+fn run(detector_nodes: &str, needs_engine: bool) -> MpResult<(f64, f64, std::time::Duration)> {
+    let text = format!("{SOURCE}{detector_nodes}{COMMON_TAIL}");
+    let config = GraphConfig::parse(&text)?;
+    let quality: SharedQuality = Arc::new(Mutex::new(Default::default()));
+    let mut side = SidePackets::new();
+    side.insert(
+        "quality".into(),
+        Packet::new(quality.clone(), Timestamp::UNSET),
+    );
+    if needs_engine {
+        side.insert(
+            "engine".into(),
+            Packet::new(shared_engine(ARTIFACTS)?, Timestamp::UNSET),
+        );
+    }
+    let mut graph = Graph::new(&config)?;
+    let t0 = Instant::now();
+    graph.run(side)?;
+    let dt = t0.elapsed();
+    let q = quality.lock().unwrap();
+    Ok((q.precision(), q.recall(), dt))
+}
+
+fn main() -> MpResult<()> {
+    println!("=== §6.1: swapping the detector, rest of the graph unchanged ===\n");
+
+    let nn = r#"
+input_side_packet: "engine"
+executor { name: "inference" num_threads: 1 }
+node {
+  calculator: "InferenceCalculator"
+  input_stream: "selected"
+  output_stream: "TENSORS:t"
+  input_side_packet: "ENGINE:engine"
+  executor: "inference"
+  options { model: "detector" }
+}
+node {
+  calculator: "TensorsToDetectionsCalculator"
+  input_stream: "TENSORS:t"
+  output_stream: "DETECTIONS:fresh"
+}
+"#;
+    let classical = r#"
+node {
+  calculator: "TemplateMatchDetectorCalculator"
+  input_stream: "FRAME:selected"
+  output_stream: "DETECTIONS:fresh"
+  options { grid: 8 min_score: 0.2 box_size: 0.18 }
+}
+"#;
+
+    let (p_nn, r_nn, t_nn) = run(nn, true)?;
+    let (p_cl, r_cl, t_cl) = run(classical, false)?;
+
+    println!("{:<28} {:>10} {:>8} {:>10}", "detector", "precision", "recall", "wall");
+    println!(
+        "{:<28} {:>10.2} {:>8.2} {:>10?}",
+        "NN (XLA, AOT-compiled)", p_nn, r_nn, t_nn
+    );
+    println!(
+        "{:<28} {:>10.2} {:>8.2} {:>10?}",
+        "template matching (light)", p_cl, r_cl, t_cl
+    );
+
+    assert!(r_nn > 0.5 && r_cl > 0.3, "both detectors must function");
+    println!("\nthe swap required changing ONLY the detection node(s) in the config");
+    println!("detector_swap OK");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Figure 5/6 end-to-end: face-landmark + segmentation on interleaved
+//! frame subsets (round-robin demux), temporal interpolation back to
+//! every frame, and 3-stream synchronized annotation (§6.2).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example face_landmark
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use mediapipe::prelude::*;
+use mediapipe::runtime::shared_engine;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn main() -> MpResult<()> {
+    let text = std::fs::read_to_string(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/graphs/face_landmark.pbtxt"),
+    )?;
+    let config = GraphConfig::parse(&text)?;
+
+    let engine = shared_engine(ARTIFACTS)?;
+    let mut side = SidePackets::new();
+    side.insert("engine".into(), Packet::new(engine, Timestamp::UNSET));
+
+    let mut graph = Graph::new(&config)?;
+    let annotated = Arc::new(AtomicU64::new(0));
+    let a2 = Arc::clone(&annotated);
+    // Verify every annotated frame actually carries pixels.
+    graph.observe_output("annotated", move |p| {
+        let f = p.get::<mediapipe::perception::ImageFrame>().unwrap();
+        assert!(f.width > 0 && !f.data.is_empty());
+        a2.fetch_add(1, Ordering::Relaxed);
+    })?;
+
+    let t0 = Instant::now();
+    graph.start_run(side)?;
+    graph.wait_until_done()?;
+    let dt = t0.elapsed();
+
+    let n = annotated.load(Ordering::Relaxed);
+    println!("=== Figure 5/6: face landmark + segmentation ===");
+    println!(
+        "annotated frames: {n} in {dt:?} ({:.0} FPS)",
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("landmark branch ran on even frames, segmentation on odd frames;");
+    println!("interpolation restored both on ALL frames (§6.2).");
+    // 240 source frames; the paper's claim is full-rate annotated output
+    // from two half-rate branches. The first frame(s) may be skipped
+    // before both branches have produced their first value.
+    assert!(n >= 230, "annotated {n}/240");
+    println!("face_landmark OK");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT compiler: lower every Layer-2 model to HLO **text** + write the
+artifact manifest the rust runtime reads.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; never on the request path.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer
+    # elides big constant literals as "{...}", which xla_extension
+    # 0.5.1's text parser silently turns into zeros — the baked model
+    # weights would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+# (name, forward fn wrapper, input specs, output specs)
+# Batch variants of the detector support the serving layer's dynamic
+# batcher: one compiled executable per admitted batch size.
+DETECTOR_BATCH_SIZES = (1, 2, 4, 8)
+
+
+def build_entries():
+    entries = []
+    for bs in DETECTOR_BATCH_SIZES:
+        spec = jax.ShapeDtypeStruct((bs, model.DET_IN, model.DET_IN, 1),
+                                    jnp.float32)
+        name = "detector" if bs == 1 else f"detector_b{bs}"
+        entries.append(dict(
+            name=name,
+            fn=lambda img: model.detector_fwd(img),
+            args=(spec,),
+            inputs=[("image", "f32", (bs, model.DET_IN, model.DET_IN, 1))],
+            outputs=[("boxes", "f32", (bs, model.DET_ANCHORS, 4)),
+                     ("scores", "f32", (bs, model.DET_ANCHORS))],
+        ))
+    lm_spec = jax.ShapeDtypeStruct((1, model.LM_IN, model.LM_IN, 1),
+                                   jnp.float32)
+    entries.append(dict(
+        name="landmark",
+        fn=lambda img: model.landmark_fwd(img),
+        args=(lm_spec,),
+        inputs=[("face", "f32", (1, model.LM_IN, model.LM_IN, 1))],
+        outputs=[("points", "f32", (model.LM_POINTS, 2))],
+    ))
+    entries.append(dict(
+        name="segmenter",
+        fn=lambda img: model.segmenter_fwd(img),
+        args=(lm_spec,),
+        inputs=[("image", "f32", (1, model.LM_IN, model.LM_IN, 1))],
+        outputs=[("mask", "f32", (model.SEG_OUT, model.SEG_OUT))],
+    ))
+    return entries
+
+
+def fmt_shape(shape):
+    return ",".join(str(d) for d in shape)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="build a single model by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = ["# mp-artifacts v1"]
+    for e in build_entries():
+        if args.only and e["name"] != args.only:
+            continue
+        hlo_file = f"{e['name']}.hlo.txt"
+        print(f"lowering {e['name']} ...", flush=True)
+        lowered = lower_model(e["fn"], e["args"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, hlo_file)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {len(text)} chars to {path}")
+        manifest_lines.append(f"model {e['name']} {hlo_file}")
+        for n, dt, sh in e["inputs"]:
+            manifest_lines.append(f"input {n} {dt} {fmt_shape(sh)}")
+        for n, dt, sh in e["outputs"]:
+            manifest_lines.append(f"output {n} {dt} {fmt_shape(sh)}")
+        manifest_lines.append("endmodel")
+
+    if not args.only:
+        mpath = os.path.join(args.out_dir, "manifest.txt")
+        with open(mpath, "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote manifest to {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

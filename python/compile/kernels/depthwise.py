@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernel: depthwise 3x3 convolution (SAME, stride 1).
+
+Used by the segmenter's mask-smoothing stage. On TPU a depthwise conv
+maps to the VPU (elementwise lanes), not the MXU — the kernel reads a
+(H+2, W+2, C) halo block from VMEM and accumulates the 9 taps with
+shifted slices, which is exactly the vectorization-friendly form.
+
+VMEM: (H+2)(W+2)C + 9C + HWC f32 words; at the 26x26x8 segmenter shape
+that is ~11 KiB — single block, no grid needed.
+
+Oracle: ``ref.depthwise3x3_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(xp_ref, k_ref, o_ref, *, H, W):
+    xp = xp_ref[...]
+    k = k_ref[...]
+    acc = jnp.zeros_like(o_ref)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + xp[dy:dy + H, dx:dx + W, :] * k[dy, dx, :]
+    o_ref[...] = acc
+
+
+@jax.jit
+def depthwise3x3(x, kernel):
+    """Depthwise 3x3, SAME padding: x [H,W,C], kernel [3,3,C] -> [H,W,C]."""
+    H, W, C = x.shape
+    xp = jnp.pad(x.astype(jnp.float32), ((1, 1), (1, 1), (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, H=H, W=W),
+        out_shape=jax.ShapeDtypeStruct((H, W, C), jnp.float32),
+        interpret=True,
+    )(xp, kernel.astype(jnp.float32))

@@ -1,0 +1,105 @@
+"""Layer-1 Pallas kernel: tiled matmul with fused bias+ReLU epilogue.
+
+The compute hot-spot of every model in this repo (convs lower to im2col
++ this kernel). Written the TPU way even though this image executes it
+under ``interpret=True`` on CPU:
+
+* the grid is (M/bm, N/bn, K/bk); the k axis is a reduction — on real
+  TPU it would be declared ``arbitrary`` dimension semantics and the
+  (bm, bn) accumulator lives in VMEM across k steps;
+* block shapes default to 128x128 (the MXU systolic array edge is 128;
+  bf16 inputs at 128x128x128 per step keep the MXU saturated);
+* VMEM budget per step = bm*bk + bk*bn + bm*bn f32 words. At the default
+  128 tiles that is 3 * 64 KiB = 192 KiB — comfortably inside the
+  ~16 MiB/core VMEM with room for double-buffering (see DESIGN.md §Perf
+  for the roofline arithmetic).
+
+Correctness oracle: ``ref.matmul_ref`` / ``ref.matmul_bias_relu_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, bias_ref, o_ref, *, nk, relu, use_bias):
+    """One (i, j, k) grid step: accumulate a_ref @ b_ref into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if use_bias:
+            acc = acc + bias_ref[...][None, :]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pad_to(x, multiples):
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "relu", "use_bias")
+)
+def matmul(a, b, bias=None, *, bm=128, bn=128, bk=128, relu=False,
+           use_bias=None):
+    """Tiled Pallas matmul: a [M,K] @ b [K,N] (+bias, +ReLU) -> [M,N].
+
+    Shapes need not be tile-multiples; inputs are zero-padded and the
+    result is sliced back. ``interpret=True`` so the lowered HLO runs on
+    any PJRT backend (real-TPU lowering would emit a Mosaic custom
+    call — see DESIGN.md §Hardware-Adaptation).
+    """
+    if use_bias is None:
+        use_bias = bias is not None
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, f"inner dims differ: {K} vs {K2}"
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    # Clamp tiles to the (padded) problem, keeping them >= 1.
+    bm = min(bm, max(M, 1))
+    bn = min(bn, max(N, 1))
+    bk = min(bk, max(K, 1))
+    ap = _pad_to(a.astype(jnp.float32), (bm, bk))
+    bp = _pad_to(b.astype(jnp.float32), (bk, bn))
+    biasp = _pad_to(bias.astype(jnp.float32), (bn,))
+    Mp, Kp = ap.shape
+    _, Np = bp.shape
+    nk = Kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, relu=relu, use_bias=use_bias),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=True,
+    )(ap, bp, biasp)
+    return out[:M, :N]
+
+
+def matmul_bias_relu(a, b, bias, **kw):
+    """Convenience wrapper with the fused epilogue enabled."""
+    return matmul(a, b, bias, relu=True, **kw)

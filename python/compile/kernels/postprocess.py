@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: fused SSD anchor-decode + score sigmoid.
+
+On GPU this postprocessing is usually a small elementwise CUDA kernel;
+on TPU the right shape is a row-tiled VPU (vector unit) kernel fused
+into the model so the decoded boxes come out of the same HLO module as
+the backbone — no host round-trip between backbone and decode (the same
+"keep everything on device" argument the paper makes for GPU pipelines,
+§6.2).
+
+Oracle: ``ref.decode_boxes_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(deltas_ref, logits_ref, anchors_ref, boxes_ref,
+                   scores_ref, *, scale):
+    d = deltas_ref[...]
+    a = anchors_ref[...]
+    cx = a[:, 0] + scale * jnp.tanh(d[:, 0])
+    cy = a[:, 1] + scale * jnp.tanh(d[:, 1])
+    w = a[:, 2] * jnp.exp(scale * jnp.tanh(d[:, 2]))
+    h = a[:, 3] * jnp.exp(scale * jnp.tanh(d[:, 3]))
+    boxes_ref[...] = jnp.stack([cx - w / 2, cy - h / 2, w, h], axis=-1)
+    scores_ref[...] = 1.0 / (1.0 + jnp.exp(-logits_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "scale"))
+def decode_boxes(deltas, logits, anchors, *, bn=128, scale=0.1):
+    """Decode anchors: deltas [N,4], logits [N], anchors [N,4] ->
+    (boxes [N,4], scores [N]). Row-tiled; N padded to the tile."""
+    N = deltas.shape[0]
+    bn = min(bn, max(N, 1))
+    rem = (-N) % bn
+    if rem:
+        deltas = jnp.pad(deltas, ((0, rem), (0, 0)))
+        logits = jnp.pad(logits, ((0, rem),))
+        # pad anchors with unit boxes to keep exp/log finite
+        anchors = jnp.pad(anchors, ((0, rem), (0, 0)),
+                          constant_values=0.5)
+    Np = deltas.shape[0]
+    boxes, scores = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, 4), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, 4), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 4), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, 4), jnp.float32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        interpret=True,
+    )(deltas.astype(jnp.float32), logits.astype(jnp.float32),
+      anchors.astype(jnp.float32))
+    return boxes[:N], scores[:N]

@@ -1,0 +1,83 @@
+"""Pure-jnp reference implementations (oracles) for every Pallas kernel.
+
+pytest asserts kernel-vs-ref allclose across shapes/dtypes (hypothesis
+sweeps) — this file is the CORE correctness signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain matmul: a [M,K] @ b [K,N] -> [M,N]."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_relu_ref(a, b, bias):
+    """Fused matmul + bias + ReLU epilogue."""
+    return jnp.maximum(matmul_ref(a, b) + bias[None, :], 0.0)
+
+
+def decode_boxes_ref(deltas, logits, anchors, scale=0.1):
+    """SSD-style anchor decode + score sigmoid.
+
+    deltas  [N,4]: raw (dx, dy, dw, dh) from the box head
+    logits  [N]:   raw score logits
+    anchors [N,4]: (cx, cy, w, h) normalized anchor boxes
+
+    Returns (boxes [N,4] as (x, y, w, h) top-left form, scores [N]).
+    The tanh keeps offsets bounded — matching the rust-side contract
+    that decoded boxes stay near their anchors.
+    """
+    cx = anchors[:, 0] + scale * jnp.tanh(deltas[:, 0])
+    cy = anchors[:, 1] + scale * jnp.tanh(deltas[:, 1])
+    w = anchors[:, 2] * jnp.exp(scale * jnp.tanh(deltas[:, 2]))
+    h = anchors[:, 3] * jnp.exp(scale * jnp.tanh(deltas[:, 3]))
+    boxes = jnp.stack([cx - w / 2, cy - h / 2, w, h], axis=-1)
+    scores = 1.0 / (1.0 + jnp.exp(-logits))
+    return boxes, scores
+
+
+def depthwise3x3_ref(x, kernel):
+    """Depthwise 3x3 convolution, SAME padding, stride 1.
+
+    x      [H,W,C]
+    kernel [3,3,C]
+    """
+    H, W, C = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    out = jnp.zeros_like(x)
+    for dy in range(3):
+        for dx in range(3):
+            out = out + xp[dy:dy + H, dx:dx + W, :] * kernel[dy, dx, :]
+    return out
+
+
+def im2col(x, kh, kw, stride):
+    """Unfold [H,W,C] into patch rows [(OH*OW), kh*kw*C] (VALID padding).
+
+    Build-time data rearrangement feeding the tiled matmul kernel — the
+    standard conv-as-matmul lowering for systolic-array hardware.
+    """
+    H, W, C = x.shape
+    oh = (H - kh) // stride + 1
+    ow = (W - kw) // stride + 1
+    rows = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = x[i * stride:i * stride + kh, j * stride:j * stride + kw, :]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows), oh, ow
+
+
+def conv2d_ref(x, w, b, stride, relu=True):
+    """Conv via im2col + matmul_bias (the composition the model uses).
+
+    x [H,W,Cin], w [kh,kw,Cin,Cout], b [Cout] -> [OH,OW,Cout]
+    """
+    kh, kw, cin, cout = w.shape
+    cols, oh, ow = im2col(x, kh, kw, stride)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = jnp.dot(cols, wmat) + b[None, :]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.reshape(oh, ow, cout)

@@ -1,0 +1,213 @@
+"""Layer-2 JAX models: the perception networks consumed by the rust
+inference calculators, built on the Layer-1 Pallas kernels.
+
+Three models, mirroring the paper's two example applications (§6):
+
+* ``detector``  — SSD-style bright-object detector (Fig. 1 pipeline):
+  conv backbone (im2col + tiled Pallas matmul) -> box/score heads ->
+  fused Pallas anchor-decode. Weights are *handcrafted* (box-blur
+  filters + brightness threshold) so the detector genuinely detects the
+  synthetic world's bright objects without training — see DESIGN.md
+  §Substitutions.
+* ``landmark``  — face-landmark regressor (§6.2): conv trunk + linear
+  head emitting K normalized points.
+* ``segmenter`` — portrait-mask head (§6.2): per-pixel sigmoid +
+  depthwise Pallas smoothing.
+
+Everything here runs ONCE, at build time, inside ``aot.py``; the rust
+request path only ever sees the lowered HLO.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import matmul as mm
+from compile.kernels import postprocess as post
+from compile.kernels import depthwise as dw
+from compile.kernels import ref
+
+# ----------------------------------------------------------------------
+# model hyper-parameters (shared with the manifest)
+# ----------------------------------------------------------------------
+
+DET_IN = 32          # detector input resolution (DET_IN x DET_IN x 1)
+DET_GRID = 7         # anchor grid (stride-4 backbone, VALID convs)
+DET_ANCHORS = DET_GRID * DET_GRID
+DET_BOX = 0.18       # base anchor box size (normalized)
+
+LM_IN = 24           # landmark/segmenter input resolution
+LM_POINTS = 5        # landmarks per face
+
+SEG_OUT = 24         # mask resolution
+
+
+def conv2d(x, w, b, stride, relu=True):
+    """Conv as im2col + the tiled Pallas matmul kernel (VALID padding)."""
+    kh, kw, cin, cout = w.shape
+    cols, oh, ow = ref.im2col(x, kh, kw, stride)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(cols, wmat, b, relu=relu)
+    return out.reshape(oh, ow, cout)
+
+
+# ----------------------------------------------------------------------
+# handcrafted weights
+# ----------------------------------------------------------------------
+
+def detector_weights():
+    """Threshold -> coverage -> gain score path (detects small bright
+    objects on a dim background without training).
+
+    conv1: 3x3 stride 2, 1->4. Channel 0 = ReLU(mean3x3(x) - 0.45): a
+    brightness detector that is exactly 0 on background (<= 0.37 incl.
+    noise) and 0.15..0.55 on object pixels (0.6..1.0 bright).
+    conv2: 3x3 stride 2, 4->8. Channel 0 = mean of channel 0: the
+    *coverage* of thresholded pixels in the cell's 7x7-px receptive
+    field, scaled by object brightness.
+    score head: 1x1, 8->1: logit = 60 * coverage_signal - 1.5 — fires
+    (>0.5) once roughly >17% of the receptive field is bright. Minimum
+    reliably detectable object ~0.10 of image width (documented in
+    DESIGN.md §Substitutions).
+    box head: 1x1, 8->4, zero: boxes sit exactly on their anchors.
+    """
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(0, 0.03, size=(3, 3, 1, 4)).astype(np.float32)
+    w1[:, :, 0, 0] = 1.0 / 9.0
+    b1 = np.zeros((4,), np.float32)
+    b1[0] = -0.45
+
+    w2 = rng.normal(0, 0.03, size=(3, 3, 4, 8)).astype(np.float32)
+    w2[:, :, :, 0] = 0.0
+    w2[:, :, 0, 0] = 1.0 / 9.0
+    b2 = np.zeros((8,), np.float32)
+
+    w_score = np.zeros((1, 1, 8, 1), np.float32)
+    w_score[0, 0, 0, 0] = 60.0
+    b_score = np.array([-1.5], np.float32)
+
+    w_box = np.zeros((1, 1, 8, 4), np.float32)
+    b_box = np.zeros((4,), np.float32)
+    return dict(w1=w1, b1=b1, w2=w2, b2=b2,
+                w_score=w_score, b_score=b_score,
+                w_box=w_box, b_box=b_box)
+
+
+def detector_anchors():
+    """(cx, cy, w, h) anchor per backbone cell, row-major."""
+    g = DET_GRID
+    ys, xs = np.meshgrid(np.arange(g), np.arange(g), indexing="ij")
+    cx = (xs.reshape(-1) + 0.5) / g
+    cy = (ys.reshape(-1) + 0.5) / g
+    wh = np.full_like(cx, DET_BOX, dtype=np.float64)
+    return np.stack([cx, cy, wh, wh], axis=-1).astype(np.float32)
+
+
+def landmark_weights():
+    """Conv trunk + linear head; seeded, sigmoid-squashed outputs."""
+    rng = np.random.default_rng(1)
+    w1 = rng.normal(0, 0.15, size=(3, 3, 1, 6)).astype(np.float32)
+    b1 = np.zeros((6,), np.float32)
+    feat = ((LM_IN - 3) // 2 + 1)  # stride-2 VALID
+    w_head = rng.normal(0, 0.05,
+                        size=(feat * feat * 6, LM_POINTS * 2)).astype(np.float32)
+    b_head = rng.normal(0, 0.5, size=(LM_POINTS * 2,)).astype(np.float32)
+    return dict(w1=w1, b1=b1, w_head=w_head, b_head=b_head)
+
+
+def segmenter_weights():
+    """Brightness-threshold mask + depthwise blur smoothing."""
+    blur = np.full((3, 3, 1), 1.0 / 9.0, np.float32)
+    return dict(gain=np.float32(8.0), thresh=np.float32(0.45), blur=blur)
+
+
+# ----------------------------------------------------------------------
+# forward functions (the jit roots that aot.py lowers)
+# ----------------------------------------------------------------------
+
+def detector_fwd(image, weights=None, anchors=None):
+    """image [B,32,32,1] -> (boxes [B,49,4], scores [B,49]).
+
+    Batched over B with a simple python loop at trace time (the lowered
+    HLO unrolls it; batch variants are compiled separately by aot.py).
+    """
+    if weights is None:
+        weights = detector_weights()
+    if anchors is None:
+        anchors = detector_anchors()
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+    anc = jnp.asarray(anchors)
+    boxes_all, scores_all = [], []
+    for bi in range(image.shape[0]):
+        x = image[bi]
+        h1 = conv2d(x, w["w1"], w["b1"], stride=2)           # [15,15,4]
+        h2 = conv2d(h1, w["w2"], w["b2"], stride=2)          # [7,7,8]
+        raw_box = conv2d(h2, w["w_box"], w["b_box"], stride=1,
+                         relu=False)                          # [7,7,4]
+        raw_score = conv2d(h2, w["w_score"], w["b_score"], stride=1,
+                           relu=False)                        # [7,7,1]
+        deltas = raw_box.reshape(DET_ANCHORS, 4)
+        logits = raw_score.reshape(DET_ANCHORS)
+        boxes, scores = post.decode_boxes(deltas, logits, anc)
+        boxes_all.append(boxes)
+        scores_all.append(scores)
+    return jnp.stack(boxes_all), jnp.stack(scores_all)
+
+
+def landmark_fwd(image, weights=None):
+    """image [1,24,24,1] -> points [5,2] (normalized, sigmoid)."""
+    if weights is None:
+        weights = landmark_weights()
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+    x = image[0]
+    h1 = conv2d(x, w["w1"], w["b1"], stride=2)               # [11,11,6]
+    flat = h1.reshape(1, -1)
+    out = mm.matmul(flat, w["w_head"], w["b_head"])          # [1,10]
+    pts = 1.0 / (1.0 + jnp.exp(-out))
+    return pts.reshape(LM_POINTS, 2)
+
+
+def segmenter_fwd(image, weights=None):
+    """image [1,24,24,1] -> mask [24,24] (foreground probability)."""
+    if weights is None:
+        weights = segmenter_weights()
+    x = image[0]
+    logits = weights["gain"] * (x - weights["thresh"])       # [24,24,1]
+    prob = 1.0 / (1.0 + jnp.exp(-logits))
+    smoothed = dw.depthwise3x3(prob, jnp.asarray(weights["blur"]))
+    return smoothed[:, :, 0]
+
+
+# pure-jnp references for the full models (pytest compares against the
+# kernel-built versions above)
+
+def detector_fwd_ref(image, weights=None, anchors=None):
+    if weights is None:
+        weights = detector_weights()
+    if anchors is None:
+        anchors = detector_anchors()
+    w = {k: jnp.asarray(v) for k, v in weights.items()}
+    anc = jnp.asarray(anchors)
+    boxes_all, scores_all = [], []
+    for bi in range(image.shape[0]):
+        x = image[bi]
+        h1 = ref.conv2d_ref(x, w["w1"], w["b1"], 2)
+        h2 = ref.conv2d_ref(h1, w["w2"], w["b2"], 2)
+        raw_box = ref.conv2d_ref(h2, w["w_box"], w["b_box"], 1, relu=False)
+        raw_score = ref.conv2d_ref(h2, w["w_score"], w["b_score"], 1,
+                                   relu=False)
+        boxes, scores = ref.decode_boxes_ref(
+            raw_box.reshape(DET_ANCHORS, 4),
+            raw_score.reshape(DET_ANCHORS), anc)
+        boxes_all.append(boxes)
+        scores_all.append(scores)
+    return jnp.stack(boxes_all), jnp.stack(scores_all)
+
+
+def segmenter_fwd_ref(image, weights=None):
+    if weights is None:
+        weights = segmenter_weights()
+    x = image[0]
+    logits = weights["gain"] * (x - weights["thresh"])
+    prob = 1.0 / (1.0 + jnp.exp(-logits))
+    smoothed = ref.depthwise3x3_ref(prob, jnp.asarray(weights["blur"]))
+    return smoothed[:, :, 0]

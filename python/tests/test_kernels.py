@@ -1,0 +1,199 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/seeds; numpy.testing.assert_allclose is the
+acceptance criterion.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import depthwise as dw
+from compile.kernels import matmul as mm
+from compile.kernels import postprocess as post
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(rng, *shape):
+    return rng.normal(0, 1, size=shape).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+# matmul
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (4, 4, 4), (8, 16, 8), (33, 7, 65),  # non-tile multiples
+    (128, 128, 128), (130, 50, 10),
+])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(42)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = mm.matmul(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32, bk=32)
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """The tiling must be an implementation detail: any block shape
+    produces the same numbers."""
+    rng = np.random.default_rng(7)
+    a, b = rand(rng, 40, 24), rand(rng, 24, 56)
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    got = mm.matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_bias_relu_epilogue():
+    rng = np.random.default_rng(3)
+    a, b = rand(rng, 17, 9), rand(rng, 9, 21)
+    bias = rand(rng, 21)
+    got = mm.matmul_bias_relu(jnp.asarray(a), jnp.asarray(b),
+                              jnp.asarray(bias), bm=8, bn=8, bk=8)
+    want = ref.matmul_bias_relu_ref(jnp.asarray(a), jnp.asarray(b),
+                                    jnp.asarray(bias))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    assert (np.asarray(got) >= 0).all(), "ReLU clamps negatives"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = mm.matmul(jnp.asarray(a), jnp.asarray(b), bm=16, bn=16, bk=16)
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+def test_decode_matches_ref():
+    rng = np.random.default_rng(5)
+    n = 49
+    deltas = rand(rng, n, 4)
+    logits = rand(rng, n)
+    anchors = np.abs(rand(rng, n, 4)) * 0.2 + 0.1
+    got_b, got_s = post.decode_boxes(jnp.asarray(deltas),
+                                     jnp.asarray(logits),
+                                     jnp.asarray(anchors), bn=16)
+    want_b, want_s = ref.decode_boxes_ref(jnp.asarray(deltas),
+                                          jnp.asarray(logits),
+                                          jnp.asarray(anchors))
+    np.testing.assert_allclose(got_b, want_b, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got_s, want_s, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_scores_are_probabilities():
+    rng = np.random.default_rng(6)
+    n = 10
+    _, s = post.decode_boxes(jnp.asarray(rand(rng, n, 4)),
+                             jnp.asarray(rand(rng, n) * 10),
+                             jnp.asarray(np.abs(rand(rng, n, 4))))
+    s = np.asarray(s)
+    # f32 sigmoid saturates to exactly 0.0/1.0 for large |logits|
+    assert ((s >= 0) & (s <= 1)).all()
+    # moderate logits stay strictly interior
+    _, s2 = post.decode_boxes(jnp.zeros((n, 4)),
+                              jnp.asarray(rand(rng, n)),
+                              jnp.asarray(np.abs(rand(rng, n, 4))))
+    s2 = np.asarray(s2)
+    assert ((s2 > 0) & (s2 < 1)).all()
+
+
+def test_decode_zero_deltas_return_anchors():
+    n = 8
+    anchors = np.tile(np.array([0.5, 0.5, 0.2, 0.2], np.float32), (n, 1))
+    boxes, _ = post.decode_boxes(jnp.zeros((n, 4)), jnp.zeros((n,)),
+                                 jnp.asarray(anchors))
+    want = np.tile(np.array([0.4, 0.4, 0.2, 0.2], np.float32), (n, 1))
+    np.testing.assert_allclose(boxes, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_decode_hypothesis_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    deltas = rand(rng, n, 4)
+    logits = rand(rng, n)
+    anchors = np.abs(rand(rng, n, 4)) * 0.3 + 0.05
+    got_b, got_s = post.decode_boxes(jnp.asarray(deltas),
+                                     jnp.asarray(logits),
+                                     jnp.asarray(anchors), bn=64)
+    want_b, want_s = ref.decode_boxes_ref(jnp.asarray(deltas),
+                                          jnp.asarray(logits),
+                                          jnp.asarray(anchors))
+    np.testing.assert_allclose(got_b, want_b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# depthwise
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,w,c", [(4, 4, 1), (24, 24, 1), (9, 13, 3)])
+def test_depthwise_matches_ref(h, w, c):
+    rng = np.random.default_rng(8)
+    x = rand(rng, h, w, c)
+    k = rand(rng, 3, 3, c)
+    got = dw.depthwise3x3(jnp.asarray(x), jnp.asarray(k))
+    want = ref.depthwise3x3_ref(jnp.asarray(x), jnp.asarray(k))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_depthwise_blur_preserves_constant():
+    x = np.full((8, 8, 1), 0.7, np.float32)
+    blur = np.full((3, 3, 1), 1.0 / 9.0, np.float32)
+    got = np.asarray(dw.depthwise3x3(jnp.asarray(x), jnp.asarray(blur)))
+    # interior pixels exactly preserved; borders shrink (zero halo)
+    np.testing.assert_allclose(got[1:-1, 1:-1, 0], 0.7, rtol=1e-5)
+    assert got[0, 0, 0] < 0.7
+
+
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(3, 20), w=st.integers(3, 20), c=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_depthwise_hypothesis_sweep(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, h, w, c)
+    k = rand(rng, 3, 3, c)
+    got = dw.depthwise3x3(jnp.asarray(x), jnp.asarray(k))
+    want = ref.depthwise3x3_ref(jnp.asarray(x), jnp.asarray(k))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# im2col (shared lowering helper)
+# ----------------------------------------------------------------------
+
+def test_im2col_shapes_and_content():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4, 1)
+    cols, oh, ow = ref.im2col(x, 3, 3, 1)
+    assert (oh, ow) == (2, 2)
+    assert cols.shape == (4, 9)
+    # first patch is the top-left 3x3 block
+    np.testing.assert_array_equal(
+        np.asarray(cols[0]),
+        np.asarray(x[0:3, 0:3, 0]).reshape(-1))
+
+
+def test_conv2d_via_kernels_matches_ref():
+    rng = np.random.default_rng(11)
+    x = rand(rng, 12, 12, 2)
+    w = rand(rng, 3, 3, 2, 5)
+    b = rand(rng, 5)
+    from compile.model import conv2d
+    got = conv2d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), stride=2)
+    want = ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,114 @@
+"""Layer-2 correctness: full models (kernel-composed) vs pure-jnp refs,
+plus semantic checks — the handcrafted detector must actually detect
+bright boxes, the segmenter must actually segment them.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def make_scene(size, rects, bg=0.15):
+    """Render bright rects (normalized x,y,w,h) on a dim background."""
+    img = np.full((size, size, 1), bg, np.float32)
+    for (x, y, w, h) in rects:
+        x0, y0 = int(x * size), int(y * size)
+        x1, y1 = int((x + w) * size), int((y + h) * size)
+        img[y0:y1, x0:x1, 0] = 0.9
+    return img[None, ...]  # [1,H,W,1]
+
+
+def test_detector_matches_ref():
+    rng = np.random.default_rng(0)
+    img = rng.uniform(0, 1, size=(1, model.DET_IN, model.DET_IN, 1)).astype(np.float32)
+    got_b, got_s = model.detector_fwd(jnp.asarray(img))
+    want_b, want_s = model.detector_fwd_ref(jnp.asarray(img))
+    np.testing.assert_allclose(got_b, want_b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+
+
+def test_detector_output_shapes():
+    img = jnp.zeros((2, model.DET_IN, model.DET_IN, 1))
+    boxes, scores = model.detector_fwd(img)
+    assert boxes.shape == (2, model.DET_ANCHORS, 4)
+    assert scores.shape == (2, model.DET_ANCHORS)
+    assert np.isfinite(np.asarray(boxes)).all()
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+def test_detector_detects_bright_object():
+    """The semantic contract with the rust world: a bright rectangle
+    lights up the anchors under it and nothing else."""
+    img = make_scene(model.DET_IN, [(0.55, 0.55, 0.3, 0.3)])
+    boxes, scores = model.detector_fwd(jnp.asarray(img))
+    boxes, scores = np.asarray(boxes[0]), np.asarray(scores[0])
+    anchors = model.detector_anchors()
+    hot = scores > 0.5
+    assert hot.any(), f"nothing detected; max score {scores.max():.3f}"
+    # every hot anchor center lies inside the object (with slack for the
+    # stride-4 receptive field)
+    for i in np.nonzero(hot)[0]:
+        cx, cy = anchors[i, 0], anchors[i, 1]
+        assert 0.40 <= cx <= 1.0 and 0.40 <= cy <= 1.0, \
+            f"hot anchor at ({cx:.2f},{cy:.2f}) outside object"
+    # dark scene: nothing fires
+    dark = np.full((1, model.DET_IN, model.DET_IN, 1), 0.2, np.float32)
+    _, s2 = model.detector_fwd(jnp.asarray(dark))
+    assert (np.asarray(s2) < 0.5).all()
+
+
+def test_detector_boxes_near_anchors():
+    img = make_scene(model.DET_IN, [(0.2, 0.2, 0.25, 0.25)])
+    boxes, _ = model.detector_fwd(jnp.asarray(img))
+    boxes = np.asarray(boxes[0])
+    anchors = model.detector_anchors()
+    # zero box-head weights => boxes == anchors in top-left form
+    want = np.stack([anchors[:, 0] - anchors[:, 2] / 2,
+                     anchors[:, 1] - anchors[:, 3] / 2,
+                     anchors[:, 2], anchors[:, 3]], axis=-1)
+    np.testing.assert_allclose(boxes, want, atol=1e-5)
+
+
+def test_landmark_shapes_and_range():
+    rng = np.random.default_rng(2)
+    img = rng.uniform(0, 1, size=(1, model.LM_IN, model.LM_IN, 1)).astype(np.float32)
+    pts = np.asarray(model.landmark_fwd(jnp.asarray(img)))
+    assert pts.shape == (model.LM_POINTS, 2)
+    assert ((pts > 0) & (pts < 1)).all(), "sigmoid keeps points in (0,1)"
+
+
+def test_landmark_depends_on_input():
+    a = np.zeros((1, model.LM_IN, model.LM_IN, 1), np.float32)
+    b = np.ones((1, model.LM_IN, model.LM_IN, 1), np.float32)
+    pa = np.asarray(model.landmark_fwd(jnp.asarray(a)))
+    pb = np.asarray(model.landmark_fwd(jnp.asarray(b)))
+    assert not np.allclose(pa, pb), "landmarks must respond to the image"
+
+
+def test_segmenter_matches_ref():
+    rng = np.random.default_rng(3)
+    img = rng.uniform(0, 1, size=(1, model.LM_IN, model.LM_IN, 1)).astype(np.float32)
+    got = model.segmenter_fwd(jnp.asarray(img))
+    want = model.segmenter_fwd_ref(jnp.asarray(img))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_segmenter_segments_bright_region():
+    img = make_scene(model.LM_IN, [(0.25, 0.25, 0.5, 0.5)], bg=0.1)
+    mask = np.asarray(model.segmenter_fwd(jnp.asarray(img)))
+    assert mask.shape == (model.SEG_OUT, model.SEG_OUT)
+    h = model.SEG_OUT
+    inside = mask[int(0.35 * h):int(0.65 * h), int(0.35 * h):int(0.65 * h)]
+    outside = mask[: int(0.15 * h), : int(0.15 * h)]
+    assert inside.mean() > 0.8, f"inside {inside.mean():.3f}"
+    assert outside.mean() < 0.2, f"outside {outside.mean():.3f}"
+
+
+def test_anchor_grid_covers_unit_square():
+    a = model.detector_anchors()
+    assert a.shape == (model.DET_ANCHORS, 4)
+    assert a[:, 0].min() > 0 and a[:, 0].max() < 1
+    assert a[:, 1].min() > 0 and a[:, 1].max() < 1
+    # row-major: first anchor top-left, last bottom-right
+    assert a[0, 0] < a[-1, 0] and a[0, 1] < a[-1, 1]

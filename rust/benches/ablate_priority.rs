@@ -1,0 +1,93 @@
+//! §4.1.1 ablation: layout priorities ("nodes closer to the output side
+//! of the graph have higher priority, source nodes the lowest") vs a
+//! flat-priority FIFO queue.
+//!
+//! The effect of prioritizing the output side is bounded in-flight
+//! work: the pipeline drains before the source refills. We measure the
+//! high-water mark of buffered packets and wall time on a deep chain
+//! with a bursty source.
+
+use std::time::Instant;
+
+use mediapipe::benchutil::{section, table};
+use mediapipe::prelude::*;
+
+const PACKETS: u64 = 2_000;
+const STAGES: usize = 8;
+
+fn run(fifo: bool) -> (f64, usize) {
+    let mut text = format!(
+        r#"
+{}num_threads: 1
+profiler {{ enabled: true buffer_size: 2097152 }}
+node {{ calculator: "CounterSourceCalculator" output_stream: "s0" options {{ count: {PACKETS} batch: 16 }} }}
+"#,
+        if fifo { "scheduler_fifo: true\n" } else { "" }
+    );
+    for i in 0..STAGES {
+        text.push_str(&format!(
+            r#"node {{ calculator: "PassThroughCalculator" input_stream: "s{i}" output_stream: "s{}" }}
+"#,
+            i + 1
+        ));
+    }
+    let config = GraphConfig::parse(&text).unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let t0 = Instant::now();
+    graph.run(SidePackets::new()).unwrap();
+    let wall = t0.elapsed();
+    // High-water mark of in-flight packets: reconstruct from the trace
+    // as max over time of (emitted - consumed).
+    let tf = TraceFile::capture(graph.tracer());
+    let mut level: i64 = 0;
+    let mut peak: i64 = 0;
+    let mut evs = tf.events.clone();
+    evs.sort_by_key(|e| e.event_time_us);
+    for e in &evs {
+        match e.event_type {
+            mediapipe::tracer::EventType::PacketAdded => {
+                level += 1;
+                peak = peak.max(level);
+            }
+            mediapipe::tracer::EventType::ProcessStart => {}
+            mediapipe::tracer::EventType::ProcessEnd => {
+                level -= 1; // one input set consumed per Process
+            }
+            _ => {}
+        }
+    }
+    (
+        PACKETS as f64 / wall.as_secs_f64(),
+        peak.max(0) as usize,
+    )
+}
+
+fn main() {
+    section("§4.1.1 ablation: layout priorities vs FIFO (8-stage chain, bursty source)");
+    let (tput_prio, peak_prio) = run(false);
+    let (tput_fifo, peak_fifo) = run(true);
+    let rows = vec![
+        vec![
+            "layout priorities (paper)".to_string(),
+            format!("{tput_prio:.0}"),
+            format!("{peak_prio}"),
+        ],
+        vec![
+            "flat priorities (FIFO)".to_string(),
+            format!("{tput_fifo:.0}"),
+            format!("{peak_fifo}"),
+        ],
+    ];
+    table(&["scheduler", "packets/s", "peak buffered packets"], &rows);
+    println!(
+        "\npaper shape: prioritizing the output side drains in-flight work\n\
+         before admitting more from the source, keeping the buffered-packet\n\
+         peak flat; FIFO lets the source burst ahead and buffers pile up\n\
+         ({}x higher peak here).",
+        (peak_fifo.max(1)) / peak_prio.max(1)
+    );
+    assert!(
+        peak_fifo >= peak_prio,
+        "priorities should not buffer more than FIFO"
+    );
+}

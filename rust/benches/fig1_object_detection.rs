@@ -1,0 +1,151 @@
+//! Fig. 1 bench: the object-detection pipeline across detection
+//! periods, vs. the detector-every-frame and no-tracking baselines.
+//!
+//! Paper claim (§6.1): running ML detection on a temporally sub-sampled
+//! stream and propagating boxes with a lightweight tracker keeps the
+//! full frame rate, where per-frame detection cannot.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use mediapipe::benchutil::{section, table};
+use mediapipe::calculators::tracking::SharedQuality;
+use mediapipe::prelude::*;
+use mediapipe::runtime::shared_engine;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+const FRAMES: usize = 300;
+
+fn pipeline_config(period: usize, with_tracker: bool) -> String {
+    let tracker_part = if with_tracker {
+        r#"
+node {
+  calculator: "TrackedDetectionMergerCalculator"
+  input_stream: "DETECTIONS:fresh"
+  input_stream: "TRACKED:tracked"
+  output_stream: "MERGED:merged"
+  options { iou_threshold: 0.1 }
+}
+node {
+  calculator: "BoxTrackerCalculator"
+  input_stream: "FRAME:frames"
+  back_edge_input_stream: "DETECTIONS:merged"
+  output_stream: "TRACKED:tracked"
+}
+node {
+  calculator: "DetectionQualityCalculator"
+  input_stream: "DETECTIONS:tracked"
+  input_stream: "GT:gt"
+  input_side_packet: "STATS:quality"
+  options { iou_threshold: 0.2 }
+}
+"#
+        .to_string()
+    } else {
+        // no tracking: quality measured on the sparse fresh detections
+        r#"
+node {
+  calculator: "DetectionQualityCalculator"
+  input_stream: "DETECTIONS:fresh"
+  input_stream: "GT:gt"
+  input_side_packet: "STATS:quality"
+  options { iou_threshold: 0.2 }
+}
+"#
+        .to_string()
+    };
+    format!(
+        r#"
+max_queue_size: 8
+input_side_packet: "engine"
+input_side_packet: "quality"
+executor {{ name: "inference" num_threads: 1 }}
+node {{
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  output_stream: "GT:gt"
+  options {{ frames: {FRAMES} fps: 30 objects: 2 seed: 7 width: 32 height: 32 noise: 0.01 min_size: 0.12 }}
+}}
+node {{
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:frames"
+  output_stream: "FRAME:selected"
+  options {{ mode: "period" period: {period} }}
+}}
+node {{
+  calculator: "InferenceCalculator"
+  input_stream: "selected"
+  output_stream: "TENSORS:t"
+  input_side_packet: "ENGINE:engine"
+  executor: "inference"
+  options {{ model: "detector" }}
+}}
+node {{
+  calculator: "TensorsToDetectionsCalculator"
+  input_stream: "TENSORS:t"
+  output_stream: "DETECTIONS:fresh"
+  options {{ min_score: 0.5 iou_threshold: 0.3 cluster_dist: 0.2 }}
+}}
+{tracker_part}
+"#
+    )
+}
+
+/// Quality of the sparse stream counted over ALL frames: frames with no
+/// detections at all contribute their GT objects as misses. The quality
+/// node only scores timestamps where detections exist, so for the
+/// "no tracker" rows we scale recall by the coverage fraction.
+fn run(period: usize, with_tracker: bool) -> (f64, f64, f64) {
+    let config = GraphConfig::parse(&pipeline_config(period, with_tracker)).unwrap();
+    let quality: SharedQuality = Arc::new(Mutex::new(Default::default()));
+    let mut side = SidePackets::new();
+    side.insert(
+        "engine".into(),
+        Packet::new(shared_engine(ARTIFACTS).unwrap(), Timestamp::UNSET),
+    );
+    side.insert(
+        "quality".into(),
+        Packet::new(quality.clone(), Timestamp::UNSET),
+    );
+    let mut graph = Graph::new(&config).unwrap();
+    let t0 = Instant::now();
+    graph.run(side).unwrap();
+    let dt = t0.elapsed();
+    let q = quality.lock().unwrap();
+    let coverage = (q.frames as f64 / FRAMES as f64).min(1.0);
+    (
+        FRAMES as f64 / dt.as_secs_f64(),
+        q.precision(),
+        q.recall() * coverage,
+    )
+}
+
+fn main() {
+    section("Fig. 1: detection period sweep (300 frames, 2 objects)");
+    let mut rows = Vec::new();
+    for (label, period, tracked) in [
+        ("detect every frame, no tracker", 1, false),
+        ("detect 1/5 frames, no tracker", 5, false),
+        ("detect 1/15 frames, no tracker", 15, false),
+        ("detect every frame + tracker", 1, true),
+        ("detect 1/5 frames + tracker (Fig. 1)", 5, true),
+        ("detect 1/15 frames + tracker", 15, true),
+    ] {
+        let (fps, p, r) = run(period, tracked);
+        rows.push(vec![
+            label.to_string(),
+            format!("{fps:.0}"),
+            format!("{p:.2}"),
+            format!("{r:.2}"),
+        ]);
+    }
+    table(
+        &["configuration", "FPS", "precision", "recall(all frames)"],
+        &rows,
+    );
+    println!(
+        "\npaper shape: sub-sampled detection + tracking holds recall near the\n\
+         every-frame level at a fraction of the inference cost, while\n\
+         sub-sampling WITHOUT tracking leaves most frames uncovered."
+    );
+}

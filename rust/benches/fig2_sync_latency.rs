@@ -1,0 +1,127 @@
+//! Fig. 2 / §4.1.2 bench: cost and latency of the default input
+//! policy's settled-timestamp synchronization, and the effect of
+//! explicit timestamp-bound propagation (footnote 6).
+//!
+//! Series reported:
+//!  1. raw join throughput of a 2-input node under the default policy;
+//!  2. join latency behind a THINNED stream (1-in-10 packets pass),
+//!     with and without the thinner declaring a timestamp offset —
+//!     without the declaration, the join can only settle when the next
+//!     surviving packet arrives (up to 10 steps later); with it, bounds
+//!     settle every step ("provide a tighter bound so downstream
+//!     settles sooner").
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use mediapipe::benchutil::{per_sec, section, table};
+use mediapipe::prelude::*;
+
+/// Join throughput: two dense counter sources into a 2-port node.
+fn join_throughput(n: u64) -> f64 {
+    let config_text = format!(
+        r#"
+node {{ calculator: "CounterSourceCalculator" output_stream: "a" options {{ count: {n} batch: 64 }} }}
+node {{ calculator: "CounterSourceCalculator" output_stream: "b" options {{ count: {n} batch: 64 }} }}
+node {{
+  calculator: "PassThroughCalculator"
+  input_stream: "a"
+  input_stream: "b"
+  output_stream: "oa"
+  output_stream: "ob"
+}}
+"#
+    );
+    let config = GraphConfig::parse(&config_text).unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let t0 = Instant::now();
+    graph.run(SidePackets::new()).unwrap();
+    per_sec(n as usize, t0.elapsed())
+}
+
+/// Measure bar->joined latency behind a 1-in-10 thinner, paced feed.
+fn thinned_join_latency(declare_offset: bool) -> (f64, f64) {
+    let config_text = format!(
+        r#"
+input_stream: "foo"
+input_stream: "bar"
+output_stream: "joined_b"
+node {{
+  calculator: "PacketThinnerCalculator"
+  input_stream: "foo"
+  output_stream: "thin"
+  options {{ period_us: 10 declare_offset: {declare_offset} }}
+}}
+node {{
+  calculator: "PassThroughCalculator"
+  input_stream: "thin"
+  input_stream: "bar"
+  output_stream: "joined_a"
+  output_stream: "joined_b"
+}}
+"#
+    );
+    let config = GraphConfig::parse(&config_text).unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let sent: Arc<Mutex<HashMap<i64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let waits: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+    let (s2, w2) = (Arc::clone(&sent), Arc::clone(&waits));
+    graph
+        .observe_output("joined_b", move |p| {
+            if let Some(t) = s2.lock().unwrap().get(&p.timestamp().raw()) {
+                w2.lock().unwrap().push(t.elapsed());
+            }
+        })
+        .unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    // paced feed: 1 timestamp step per 100µs of wall time
+    for t in 0..1_000i64 {
+        let ts = Timestamp::new(t);
+        sent.lock().unwrap().insert(t, Instant::now());
+        graph.add_packet("bar", Packet::new((), ts)).unwrap();
+        graph.add_packet("foo", Packet::new((), ts)).unwrap();
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    let w = waits.lock().unwrap();
+    let mut us: Vec<f64> = w.iter().map(|d| d.as_micros() as f64).collect();
+    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = us.iter().sum::<f64>() / us.len().max(1) as f64;
+    let p95 = us[((us.len() as f64 * 0.95) as usize).min(us.len().saturating_sub(1))];
+    (mean, p95)
+}
+
+fn main() {
+    section("Fig. 2 / §4.1.2: default-policy synchronization");
+    let tput = join_throughput(200_000);
+    println!("2-stream join throughput: {tput:.0} input-set/s (dense, settled pairs)");
+
+    section("join latency behind a 1-in-10 thinner (paced 100µs/step)");
+    let (mean_no, p95_no) = thinned_join_latency(false);
+    let (mean_off, p95_off) = thinned_join_latency(true);
+    let rows = vec![
+        vec![
+            "thinner without offset (waits for next survivor)".to_string(),
+            format!("{mean_no:.0}"),
+            format!("{p95_no:.0}"),
+        ],
+        vec![
+            "thinner with offset 0 (bounds settle every step)".to_string(),
+            format!("{mean_off:.0}"),
+            format!("{p95_off:.0}"),
+        ],
+    ];
+    table(&["configuration", "mean µs", "p95 µs"], &rows);
+    let speedup = mean_no / mean_off.max(1.0);
+    println!(
+        "\npaper shape (§4.1.2 footnote 6): the declared offset settles the\n\
+         thinned stream at every input timestamp instead of every 10th —\n\
+         {speedup:.1}x lower mean join latency here."
+    );
+    assert!(
+        mean_off < mean_no,
+        "offset declaration must reduce settle latency"
+    );
+}

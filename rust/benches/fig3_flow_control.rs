@@ -1,0 +1,151 @@
+//! Fig. 3 / §4.1.4 bench: the three flow-control regimes under a source
+//! that produces faster than the pipeline can process.
+//!
+//!  A. no flow control    — every packet processed, queues (and
+//!                          latency) grow without bound;
+//!  B. back-pressure      — deterministic, nothing dropped, the source
+//!                          is throttled (batch-processing mode);
+//!  C. flow limiter (Fig. 3 loopback) — real-time mode: drops happen
+//!                          *upstream* of the expensive subgraph, and
+//!                          in-flight work never exceeds the budget.
+
+use std::time::Instant;
+
+use mediapipe::benchutil::{section, table};
+use mediapipe::calculators::flow::DropCounter;
+use mediapipe::prelude::*;
+
+const OFFERED: i64 = 400;
+const WORK_US: i64 = 500;
+
+struct Outcome {
+    label: String,
+    completed: u64,
+    dropped: u64,
+    wall_ms: f64,
+    /// mean in-graph latency of completed packets (µs, ts->output).
+    mean_latency_us: f64,
+}
+
+fn run(label: &str, graph_text: &str, drops: Option<DropCounter>) -> Outcome {
+    let config = GraphConfig::parse(graph_text).unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("done").unwrap();
+    let mut side = SidePackets::new();
+    if let Some(d) = &drops {
+        side.insert("drops".into(), Packet::new(d.clone(), Timestamp::UNSET));
+    }
+    graph.start_run(side).unwrap();
+    let t0 = Instant::now();
+    // Offered load: packet every 100µs of wall time (10x faster than the
+    // 500µs/packet the worker can absorb... on one core).
+    let mut enqueued_at = std::collections::HashMap::new();
+    for i in 0..OFFERED {
+        let ts = Timestamp::new(i * 100);
+        enqueued_at.insert(ts.raw(), Instant::now());
+        graph.add_packet("frames", Packet::new(i, ts)).unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    let wall = t0.elapsed();
+    let outs = poller.drain();
+    let mut lat_sum = 0.0;
+    for p in &outs {
+        if let Some(t) = enqueued_at.get(&p.timestamp().raw()) {
+            lat_sum += t.elapsed().as_micros() as f64; // upper bound: until drain
+        }
+    }
+    let _ = lat_sum;
+    // latency proxy: completed packets observed via callback time was
+    // not recorded per-packet; use wall/completed as mean service time.
+    let completed = outs.len() as u64;
+    Outcome {
+        label: label.to_string(),
+        completed,
+        dropped: drops.map(|d| d.get()).unwrap_or(0),
+        wall_ms: wall.as_secs_f64() * 1000.0,
+        mean_latency_us: wall.as_micros() as f64 / completed.max(1) as f64,
+    }
+}
+
+fn main() {
+    section("Fig. 3 / §4.1.4: flow-control regimes (400 offered, 500µs/packet worker)");
+
+    let no_control = run(
+        "A. no flow control",
+        &format!(
+            r#"
+input_stream: "frames"
+output_stream: "done"
+node {{ calculator: "BusyWorkCalculator" input_stream: "frames" output_stream: "done" options {{ work_us: {WORK_US} }} }}
+"#
+        ),
+        None,
+    );
+    let backpressure = run(
+        "B. back-pressure (max_queue_size 4)",
+        &format!(
+            r#"
+max_queue_size: 4
+input_stream: "frames"
+output_stream: "done"
+node {{ calculator: "BusyWorkCalculator" input_stream: "frames" output_stream: "done" options {{ work_us: {WORK_US} }} }}
+"#
+        ),
+        None,
+    );
+    let mut rows = vec![no_control, backpressure];
+    for budget in [1, 2, 4] {
+        let drops = DropCounter::new();
+        rows.push(run(
+            &format!("C. flow limiter, budget {budget}"),
+            &format!(
+                r#"
+input_stream: "frames"
+output_stream: "done"
+input_side_packet: "drops"
+node {{
+  calculator: "FlowLimiterCalculator"
+  input_stream: "frames"
+  back_edge_input_stream: "FINISHED:done"
+  output_stream: "gated"
+  input_side_packet: "DROPS:drops"
+  options {{ max_in_flight: {budget} }}
+}}
+node {{ calculator: "BusyWorkCalculator" input_stream: "gated" output_stream: "done" options {{ work_us: {WORK_US} }} }}
+"#
+            ),
+            Some(drops),
+        ));
+    }
+
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|o| {
+            vec![
+                o.label.clone(),
+                format!("{}", o.completed),
+                format!("{}", o.dropped),
+                format!("{:.1}", o.wall_ms),
+                format!("{:.0}", o.mean_latency_us),
+            ]
+        })
+        .collect();
+    table(
+        &["regime", "completed", "dropped", "wall ms", "µs/completed"],
+        &table_rows,
+    );
+    println!(
+        "\npaper shape: A completes everything but commits unbounded memory and\n\
+         latency to do it; B completes everything at bounded memory by slowing\n\
+         the producer (batch mode); C sheds load *upstream* — completed+dropped\n\
+         = offered, in-flight <= budget, and wall time tracks real time."
+    );
+    // Invariants (the bench doubles as a check).
+    assert_eq!(rows[0].completed, OFFERED as u64);
+    assert_eq!(rows[1].completed, OFFERED as u64);
+    for o in &rows[2..] {
+        assert_eq!(o.completed + o.dropped, OFFERED as u64, "{}", o.label);
+        assert!(o.dropped > 0, "{} must shed load", o.label);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 4 / §5.1 bench: tracer overhead. The paper claims the tracer's
+//! mutex-free ring buffer keeps the impact on timing measurements
+//! minimal; we measure pipeline throughput with the tracer off, on, and
+//! on+export.
+
+use std::time::Instant;
+
+use mediapipe::benchutil::{per_sec, section, table};
+use mediapipe::prelude::*;
+
+const PACKETS: u64 = 50_000;
+
+fn run(traced: bool, export: bool) -> (f64, usize) {
+    let config_text = format!(
+        r#"
+node {{ calculator: "CounterSourceCalculator" output_stream: "a" options {{ count: {PACKETS} batch: 32 }} }}
+node {{ calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }}
+node {{ calculator: "PassThroughCalculator" input_stream: "b" output_stream: "c" }}
+node {{ calculator: "PassThroughCalculator" input_stream: "c" output_stream: "d" }}
+"#
+    );
+    let mut config = GraphConfig::parse(&config_text).unwrap();
+    config.profiler.enabled = traced;
+    config.profiler.buffer_size = 1 << 21;
+    let mut graph = Graph::new(&config).unwrap();
+    let t0 = Instant::now();
+    graph.run(SidePackets::new()).unwrap();
+    let dt = t0.elapsed();
+    let mut events = 0;
+    if export {
+        let tf = TraceFile::capture(graph.tracer());
+        events = tf.events.len();
+        tf.save_tsv("/tmp/fig4_bench_trace.tsv").unwrap();
+    }
+    (per_sec(PACKETS as usize, dt), events)
+}
+
+/// Realistic pipeline: calculators that actually compute (50µs each).
+fn run_realistic(traced: bool) -> f64 {
+    let packets = 2_000u64;
+    let config_text = format!(
+        r#"
+node {{ calculator: "CounterSourceCalculator" output_stream: "a" options {{ count: {packets} }} }}
+node {{ calculator: "BusyWorkCalculator" input_stream: "a" output_stream: "b" options {{ work_us: 50 }} }}
+node {{ calculator: "BusyWorkCalculator" input_stream: "b" output_stream: "c" options {{ work_us: 50 }} }}
+"#
+    );
+    let mut config = GraphConfig::parse(&config_text).unwrap();
+    config.profiler.enabled = traced;
+    config.profiler.buffer_size = 1 << 18;
+    let mut graph = Graph::new(&config).unwrap();
+    let t0 = Instant::now();
+    graph.run(SidePackets::new()).unwrap();
+    per_sec(packets as usize, t0.elapsed())
+}
+
+fn main() {
+    section("Fig. 4 / §5.1: tracer overhead (50k packets through 3 passthroughs)");
+    // Warmup + 3 repetitions each, keep the best (least-noise) figure.
+    let best = |traced, export| {
+        (0..3)
+            .map(|_| run(traced, export))
+            .map(|(t, e)| (t, e))
+            .fold((0.0f64, 0usize), |acc, v| {
+                if v.0 > acc.0 {
+                    v
+                } else {
+                    acc
+                }
+            })
+    };
+    let (off, _) = best(false, false);
+    let (on, _) = best(true, false);
+    let (on_export, events) = best(true, true);
+
+    let rows = vec![
+        vec!["tracer off".into(), format!("{off:.0}"), "-".into()],
+        vec![
+            "tracer on".into(),
+            format!("{on:.0}"),
+            format!("{:.1}%", (1.0 - on / off) * 100.0),
+        ],
+        vec![
+            "tracer on + export".into(),
+            format!("{on_export:.0}"),
+            format!("{:.1}%", (1.0 - on_export / off) * 100.0),
+        ],
+    ];
+    table(&["mode", "packets/s", "overhead"], &rows);
+    println!("\ntrace events captured in the export run: {events}");
+
+    section("realistic pipeline (2x 50µs calculators)");
+    let r_off = (0..3).map(|_| run_realistic(false)).fold(0.0f64, f64::max);
+    let r_on = (0..3).map(|_| run_realistic(true)).fold(0.0f64, f64::max);
+    let rows = vec![
+        vec!["tracer off".into(), format!("{r_off:.0}"), "-".into()],
+        vec![
+            "tracer on".into(),
+            format!("{r_on:.0}"),
+            format!("{:.1}%", (1.0 - r_on / r_off) * 100.0),
+        ],
+    ];
+    table(&["mode", "packets/s", "overhead"], &rows);
+    println!(
+        "\npaper claim: on calculators that do real work, the mutex-free ring\n\
+         records ~13 events/packet at negligible relative cost; the\n\
+         passthrough microbench above is the worst case (zero-work nodes)."
+    );
+}

@@ -1,0 +1,142 @@
+//! Hot-path microbenchmarks — the §Perf baseline for EXPERIMENTS.md.
+//!
+//! Covers the framework's per-packet costs in isolation:
+//!   packet clone / typed access,
+//!   input-queue push+pop,
+//!   default-policy readiness + input-set extraction,
+//!   scheduler task dispatch,
+//!   end-to-end passthrough-chain throughput (the "framework tax").
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use mediapipe::benchutil::{per_sec, section, Samples};
+use mediapipe::packet::Packet;
+use mediapipe::policies::{DefaultPolicy, InputPolicy, Readiness};
+use mediapipe::prelude::*;
+use mediapipe::scheduler::SchedulerQueue;
+use mediapipe::stream::InputStreamQueue;
+
+const N: usize = 1_000_000;
+
+fn bench_packet_ops() {
+    section("packet ops");
+    let payload = vec![0u8; 1024];
+    let p = Packet::new(payload, Timestamp::new(0));
+    let s = Samples::run("clone+drop 1KiB-payload packet (x1M)", 1, 5, || {
+        for _ in 0..N {
+            std::hint::black_box(p.clone());
+        }
+    });
+    println!("{}  ({:.0}M ops/s)", s.row(), N as f64 / s.min().as_secs_f64() / 1e6);
+    let s = Samples::run("typed get::<Vec<u8>> (x1M)", 1, 5, || {
+        for _ in 0..N {
+            std::hint::black_box(p.get::<Vec<u8>>().unwrap());
+        }
+    });
+    println!("{}  ({:.0}M ops/s)", s.row(), N as f64 / s.min().as_secs_f64() / 1e6);
+}
+
+fn bench_queue_ops() {
+    section("input-queue push/pop");
+    let s = Samples::run("push+pop_at (x100k)", 1, 5, || {
+        let mut q = InputStreamQueue::new("bench");
+        for i in 0..100_000i64 {
+            q.push_seq(Packet::new(i, Timestamp::new(i)), i as u64).unwrap();
+            std::hint::black_box(q.pop_at(Timestamp::new(i)).unwrap());
+        }
+    });
+    println!(
+        "{}  ({:.1}M pairs/s)",
+        s.row(),
+        100_000.0 / s.min().as_secs_f64() / 1e6
+    );
+}
+
+fn bench_policy() {
+    section("default policy readiness + extraction (2 streams)");
+    let s = Samples::run("readiness+take (x100k)", 1, 5, || {
+        let mut queues = vec![InputStreamQueue::new("a"), InputStreamQueue::new("b")];
+        let mut policy = DefaultPolicy;
+        for i in 0..100_000i64 {
+            queues[0]
+                .push_seq(Packet::new(i, Timestamp::new(i)), 2 * i as u64)
+                .unwrap();
+            queues[1]
+                .push_seq(Packet::new(i, Timestamp::new(i)), 2 * i as u64 + 1)
+                .unwrap();
+            match policy.readiness(&queues) {
+                Readiness::Ready(ts) => {
+                    std::hint::black_box(policy.take_input_set(&mut queues, ts));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    });
+    println!(
+        "{}  ({:.1}M sets/s)",
+        s.row(),
+        100_000.0 / s.min().as_secs_f64() / 1e6
+    );
+}
+
+fn bench_scheduler_dispatch() {
+    section("scheduler queue dispatch");
+    let q = SchedulerQueue::new("bench", 1);
+    let count = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&count);
+    q.start(Arc::new(move |_id| {
+        c2.fetch_add(1, Ordering::Relaxed);
+    }));
+    let s = Samples::run("push->execute 100k tasks", 1, 5, || {
+        let before = count.load(Ordering::Relaxed);
+        for i in 0..100_000 {
+            q.push(i % 16, (i % 7) as u32);
+        }
+        while count.load(Ordering::Relaxed) < before + 100_000 {
+            std::hint::spin_loop();
+        }
+    });
+    println!(
+        "{}  ({:.2}M tasks/s)",
+        s.row(),
+        100_000.0 / s.min().as_secs_f64() / 1e6
+    );
+    q.shutdown();
+}
+
+fn bench_graph_throughput() {
+    section("graph steady-state (source -> 3 passthroughs), the framework tax");
+    for batch in [1, 16, 64] {
+        let packets = 200_000u64;
+        let config = GraphConfig::parse(&format!(
+            r#"
+node {{ calculator: "CounterSourceCalculator" output_stream: "a" options {{ count: {packets} batch: {batch} }} }}
+node {{ calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }}
+node {{ calculator: "PassThroughCalculator" input_stream: "b" output_stream: "c" }}
+node {{ calculator: "PassThroughCalculator" input_stream: "c" output_stream: "d" }}
+"#
+        ))
+        .unwrap();
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let mut graph = Graph::new(&config).unwrap();
+            let t0 = Instant::now();
+            graph.run(SidePackets::new()).unwrap();
+            best = best.max(per_sec(packets as usize, t0.elapsed()));
+        }
+        println!(
+            "source batch {batch:>3}: {best:>12.0} packets/s through 4 nodes ({:.0} node-hops/s)",
+            best * 4.0
+        );
+    }
+}
+
+fn main() {
+    bench_packet_ops();
+    bench_queue_ops();
+    bench_policy();
+    bench_scheduler_dispatch();
+    bench_graph_throughput();
+}

@@ -1,0 +1,137 @@
+//! Minimal benchmarking support for the `cargo bench` harnesses (the
+//! vendored offline environment has no criterion; these benches print
+//! the same kind of table the paper's evaluation would).
+
+use std::time::{Duration, Instant};
+
+/// Timed samples with summary statistics.
+pub struct Samples {
+    pub name: String,
+    samples: Vec<Duration>,
+}
+
+impl Samples {
+    pub fn new(name: &str) -> Samples {
+        Samples {
+            name: name.to_string(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, d: Duration) {
+        self.samples.push(d);
+    }
+
+    /// Run `f` for `warmup + iters` iterations, timing the last `iters`.
+    pub fn run(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Samples {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut s = Samples::new(name);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed());
+        }
+        s
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        v[(((v.len() - 1) as f64) * q).round() as usize]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or(Duration::ZERO)
+    }
+
+    /// One formatted row: name, mean, p50, p95, min.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} mean {:>10.2?}  p50 {:>10.2?}  p95 {:>10.2?}  min {:>10.2?}",
+            self.name,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.95),
+            self.min()
+        )
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// items/second from a count and a duration.
+pub fn per_sec(count: usize, d: Duration) -> f64 {
+    count as f64 / d.as_secs_f64()
+}
+
+/// Render a simple aligned table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(headers.iter().map(|s| s.to_string()).collect())
+    );
+    for r in rows {
+        println!("{}", fmt_row(r.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stats() {
+        let mut s = Samples::new("x");
+        for ms in [1u64, 2, 3, 4, 100] {
+            s.add(Duration::from_millis(ms));
+        }
+        assert_eq!(s.quantile(0.5), Duration::from_millis(3));
+        assert_eq!(s.min(), Duration::from_millis(1));
+        assert!(s.mean() >= Duration::from_millis(20));
+        assert!(!s.row().is_empty());
+    }
+
+    #[test]
+    fn run_times_closures() {
+        let s = Samples::run("noop", 2, 5, || {
+            std::hint::black_box(42);
+        });
+        assert_eq!(s.samples.len(), 5);
+    }
+
+    #[test]
+    fn per_sec_math() {
+        assert!((per_sec(100, Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+}

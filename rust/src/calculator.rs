@@ -1,0 +1,553 @@
+//! Calculators: the nodes of a MediaPipe graph (§3.4).
+//!
+//! Every node derives from the same base and comprises four essential
+//! methods: `GetContract()`, `Open()`, `Process()` and `Close()`. In this
+//! rust port, `GetContract` lives on the [`crate::registry::CalculatorFactory`]
+//! (it is a *static* method in C++ MediaPipe), while `open/process/close`
+//! are methods of the [`Calculator`] trait, invoked by the framework with
+//! a [`CalculatorContext`].
+
+use std::collections::BTreeMap;
+
+use crate::error::{MpError, MpResult};
+use crate::packet::{Packet, PacketType};
+use crate::timestamp::{Timestamp, TimestampBound};
+
+/// Which input policy a node uses (§4.1.3). Most nodes use
+/// [`InputPolicyKind::Default`]; a calculator that needs another policy
+/// must declare it in its contract (footnote 3 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputPolicyKind {
+    /// Deterministic synchronization: input sets are formed from settled
+    /// timestamps, processed in strictly ascending order, nothing
+    /// dropped.
+    Default,
+    /// Receive every packet as soon as it arrives, sacrificing the
+    /// cross-stream alignment guarantees. Used by flow-control nodes
+    /// that must make fast decisions (§4.1.4).
+    Immediate,
+    /// Timestamp alignment enforced *within* declared sets of inputs but
+    /// not across sets (§4.1.3 last paragraph).
+    SyncSets,
+}
+
+/// One stream port (input or output) declared by a contract.
+#[derive(Clone, Debug)]
+pub struct PortSpec {
+    /// Tag, e.g. "FRAME"; empty for untagged (index-addressed) ports.
+    pub tag: String,
+    /// Declared packet type; checked at graph initialization.
+    pub packet_type: PacketType,
+    /// Optional ports may be left unconnected in the config.
+    pub optional: bool,
+}
+
+/// One side-packet port declared by a contract (§3.3).
+#[derive(Clone, Debug)]
+pub struct SidePortSpec {
+    pub tag: String,
+    pub packet_type: PacketType,
+    pub optional: bool,
+}
+
+/// The calculator's declared interface, verified against the graph
+/// config when the graph is initialized (§3.4 GetContract, §3.5 check 3).
+#[derive(Clone, Debug)]
+pub struct Contract {
+    pub inputs: Vec<PortSpec>,
+    pub outputs: Vec<PortSpec>,
+    pub input_side: Vec<SidePortSpec>,
+    pub output_side: Vec<SidePortSpec>,
+    pub policy: InputPolicyKind,
+    /// `Some(k)`: producing output at input-ts + k is guaranteed, so the
+    /// framework auto-propagates output bounds from input bounds. `None`:
+    /// the calculator manages bounds itself (or simply delays settling).
+    pub timestamp_offset: Option<i64>,
+    /// For `SyncSets`: port indices grouped into independently
+    /// synchronized sets.
+    pub sync_sets: Vec<Vec<usize>>,
+    /// Advanced (§3 footnote 1): max simultaneous Process() invocations,
+    /// assuming temporal independence. Default 1.
+    pub max_in_flight: usize,
+}
+
+impl Contract {
+    pub fn new() -> Contract {
+        Contract {
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            input_side: Vec::new(),
+            output_side: Vec::new(),
+            policy: InputPolicyKind::Default,
+            timestamp_offset: None,
+            sync_sets: Vec::new(),
+            max_in_flight: 1,
+        }
+    }
+
+    /// Declare one input stream port.
+    pub fn input(mut self, tag: &str, ty: PacketType) -> Self {
+        self.inputs.push(PortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: false,
+        });
+        self
+    }
+
+    /// Declare `n` input ports sharing a tag (addressed TAG:0 .. TAG:n-1).
+    pub fn input_repeated(mut self, tag: &str, ty: PacketType, n: usize) -> Self {
+        for _ in 0..n {
+            self.inputs.push(PortSpec {
+                tag: tag.to_string(),
+                packet_type: ty,
+                optional: false,
+            });
+        }
+        self
+    }
+
+    pub fn optional_input(mut self, tag: &str, ty: PacketType) -> Self {
+        self.inputs.push(PortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: true,
+        });
+        self
+    }
+
+    /// Declare one output stream port.
+    pub fn output(mut self, tag: &str, ty: PacketType) -> Self {
+        self.outputs.push(PortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: false,
+        });
+        self
+    }
+
+    pub fn output_repeated(mut self, tag: &str, ty: PacketType, n: usize) -> Self {
+        for _ in 0..n {
+            self.outputs.push(PortSpec {
+                tag: tag.to_string(),
+                packet_type: ty,
+                optional: false,
+            });
+        }
+        self
+    }
+
+    pub fn optional_output(mut self, tag: &str, ty: PacketType) -> Self {
+        self.outputs.push(PortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: true,
+        });
+        self
+    }
+
+    /// Declare one input side packet (§3.3).
+    pub fn side_input(mut self, tag: &str, ty: PacketType) -> Self {
+        self.input_side.push(SidePortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: false,
+        });
+        self
+    }
+
+    pub fn optional_side_input(mut self, tag: &str, ty: PacketType) -> Self {
+        self.input_side.push(SidePortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: true,
+        });
+        self
+    }
+
+    /// Declare one output side packet.
+    pub fn side_output(mut self, tag: &str, ty: PacketType) -> Self {
+        self.output_side.push(SidePortSpec {
+            tag: tag.to_string(),
+            packet_type: ty,
+            optional: false,
+        });
+        self
+    }
+
+    /// Select a non-default input policy (must be declared here, §4.1.3
+    /// footnote: calculators written for a special policy declare it in
+    /// their contract).
+    pub fn with_policy(mut self, p: InputPolicyKind) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Group input ports into independently synchronized sets (implies
+    /// the SyncSets policy).
+    pub fn with_sync_sets(mut self, sets: Vec<Vec<usize>>) -> Self {
+        self.policy = InputPolicyKind::SyncSets;
+        self.sync_sets = sets;
+        self
+    }
+
+    /// Declare the timestamp offset for automatic bound propagation.
+    pub fn with_timestamp_offset(mut self, k: i64) -> Self {
+        self.timestamp_offset = Some(k);
+        self
+    }
+
+    /// Allow up to `n` parallel Process() calls (§3 footnote 1).
+    pub fn with_max_in_flight(mut self, n: usize) -> Self {
+        self.max_in_flight = n.max(1);
+        self
+    }
+
+    /// Index of the first input port with `tag`, plus port count.
+    pub fn find_input(&self, tag: &str) -> Option<usize> {
+        self.inputs.iter().position(|p| p.tag == tag)
+    }
+
+    pub fn find_output(&self, tag: &str) -> Option<usize> {
+        self.outputs.iter().position(|p| p.tag == tag)
+    }
+
+    pub fn find_side_input(&self, tag: &str) -> Option<usize> {
+        self.input_side.iter().position(|p| p.tag == tag)
+    }
+}
+
+impl Default for Contract {
+    fn default() -> Self {
+        Contract::new()
+    }
+}
+
+/// What `Process()` tells the framework (§3.4/§3.5). Sources signal the
+/// end of their data with [`ProcessOutcome::Stop`]; the framework then
+/// closes the node ("source calculators indicate that they have finished
+/// sending packets").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProcessOutcome {
+    /// Keep the node alive.
+    Continue,
+    /// The node is done producing; close it and mark outputs Done.
+    Stop,
+}
+
+/// Buffered output mutations collected during one `open/process/close`
+/// call, flushed by the scheduler after the call returns. Buffering keeps
+/// all stream mutation on the scheduler's side, so calculator code never
+/// touches shared state.
+#[derive(Debug, Default)]
+pub struct OutputPortBuffer {
+    pub packets: Vec<Packet>,
+    /// Explicit bound update (§4.1.2 footnote 6: a producer may advance
+    /// the bound farther than the last packet implies).
+    pub next_bound: Option<TimestampBound>,
+    /// Close this output stream.
+    pub close: bool,
+}
+
+/// The per-invocation view a calculator gets of its node (§3.4).
+pub struct CalculatorContext<'a> {
+    pub(crate) node_name: &'a str,
+    /// Timestamp of the current input set (UNSTARTED in Open/Close).
+    pub(crate) input_timestamp: Timestamp,
+    /// One slot per contract input port; `Packet::empty()` if the port
+    /// has no packet at this timestamp (paper footnote 7).
+    pub(crate) inputs: &'a [Packet],
+    /// Current bound of each input stream (advanced policies, limiters).
+    pub(crate) input_bounds: &'a [TimestampBound],
+    pub(crate) outputs: &'a mut [OutputPortBuffer],
+    /// One slot per contract side-input port.
+    pub(crate) side_inputs: &'a [Packet],
+    /// Side outputs (set once, at Open or Close).
+    pub(crate) side_outputs: &'a mut [Packet],
+    pub(crate) contract: &'a Contract,
+    /// Filled by the serving layer / options at graph build.
+    pub(crate) options: &'a Options,
+}
+
+impl<'a> CalculatorContext<'a> {
+    /// Name of this node instance in the graph.
+    pub fn node_name(&self) -> &str {
+        self.node_name
+    }
+
+    /// Timestamp of the current input set.
+    pub fn input_timestamp(&self) -> Timestamp {
+        self.input_timestamp
+    }
+
+    /// Packet on input port `i` (may be empty — footnote 7).
+    pub fn input(&self, i: usize) -> &Packet {
+        &self.inputs[i]
+    }
+
+    /// Packet on the first input port tagged `tag`.
+    pub fn input_tag(&self, tag: &str) -> MpResult<&Packet> {
+        let i = self
+            .contract
+            .find_input(tag)
+            .ok_or_else(|| MpError::internal(format!("no input tag {tag}")))?;
+        Ok(&self.inputs[i])
+    }
+
+    /// Number of input ports.
+    pub fn input_count(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Current timestamp bound of input stream `i`.
+    pub fn input_bound(&self, i: usize) -> TimestampBound {
+        self.input_bounds[i]
+    }
+
+    /// Emit `packet` on output port `i`.
+    pub fn output(&mut self, i: usize, packet: Packet) {
+        self.outputs[i].packets.push(packet);
+    }
+
+    /// Emit a value on output port `i` at the current input timestamp.
+    /// Footnote 5: outputting at the input timestamp inherently obeys the
+    /// monotonicity requirement.
+    pub fn output_now<T: Send + Sync + 'static>(&mut self, i: usize, value: T) {
+        let ts = self.input_timestamp;
+        self.outputs[i].packets.push(Packet::new(value, ts));
+    }
+
+    /// Emit on the first output port tagged `tag`.
+    pub fn output_tag(&mut self, tag: &str, packet: Packet) -> MpResult<()> {
+        let i = self
+            .contract
+            .find_output(tag)
+            .ok_or_else(|| MpError::internal(format!("no output tag {tag}")))?;
+        self.outputs[i].packets.push(packet);
+        Ok(())
+    }
+
+    /// Number of output ports.
+    pub fn output_count(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Explicitly advance the bound of output `i` (footnote 6: provide a
+    /// tighter bound so downstream settles sooner).
+    pub fn set_next_timestamp_bound(&mut self, i: usize, bound: TimestampBound) {
+        self.outputs[i].next_bound = Some(bound);
+    }
+
+    /// Close output stream `i`: no more packets will be sent on it.
+    pub fn close_output(&mut self, i: usize) {
+        self.outputs[i].close = true;
+    }
+
+    /// Side packet on side-input port `i`.
+    pub fn side_input(&self, i: usize) -> &Packet {
+        &self.side_inputs[i]
+    }
+
+    /// Side packet on the first side-input port tagged `tag`.
+    pub fn side_input_tag(&self, tag: &str) -> MpResult<&Packet> {
+        let i = self
+            .contract
+            .find_side_input(tag)
+            .ok_or_else(|| MpError::MissingSidePacket(tag.to_string()))?;
+        Ok(&self.side_inputs[i])
+    }
+
+    /// Set side output `i` (valid in Open or Close).
+    pub fn set_side_output(&mut self, i: usize, packet: Packet) {
+        self.side_outputs[i] = packet;
+    }
+
+    /// Node options from the GraphConfig (§3.6 node-specific options).
+    pub fn options(&self) -> &Options {
+        self.options
+    }
+}
+
+/// Node-specific options from the GraphConfig (§3.6). MediaPipe uses
+/// per-calculator protos; we use a typed key-value map with the same
+/// role.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Options {
+    map: BTreeMap<String, OptionValue>,
+}
+
+/// A single option value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptionValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+    FloatList(Vec<f64>),
+    StrList(Vec<String>),
+}
+
+impl Options {
+    pub fn new() -> Options {
+        Options::default()
+    }
+
+    pub fn set(&mut self, key: &str, v: OptionValue) -> &mut Self {
+        self.map.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn with(mut self, key: &str, v: OptionValue) -> Self {
+        self.map.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&OptionValue> {
+        self.map.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.map.get(key) {
+            Some(OptionValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.map.get(key) {
+            Some(OptionValue::Int(v)) => Some(*v),
+            Some(OptionValue::Float(v)) if v.fract() == 0.0 => Some(*v as i64),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.map.get(key) {
+            Some(OptionValue::Float(v)) => Some(*v),
+            Some(OptionValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.map.get(key) {
+            Some(OptionValue::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_int_list(&self, key: &str) -> Option<&[i64]> {
+        match self.map.get(key) {
+            Some(OptionValue::IntList(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get_int(key).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get_float(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get_bool(key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get_str(key).unwrap_or(default)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &OptionValue)> {
+        self.map.iter()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// The calculator behaviour trait (§3.4). `open` is called once after the
+/// graph starts (side packets available; may emit packets); `process` is
+/// called whenever the node's input policy forms an input set (or, for
+/// sources, whenever the node is scheduled); `close` is always called if
+/// `open` succeeded — even if the run is terminating due to an error.
+pub trait Calculator: Send {
+    /// Prepare per-graph-run state; may emit packets.
+    fn open(&mut self, _ctx: &mut CalculatorContext) -> MpResult<()> {
+        Ok(())
+    }
+
+    /// Handle one input set (or produce spontaneously, for sources).
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome>;
+
+    /// Tear down; may emit final packets (paper footnote 2: a media
+    /// decoder flushing frames buffered in its encoding state).
+    fn close(&mut self, _ctx: &mut CalculatorContext) -> MpResult<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contract_builder_and_lookup() {
+        let c = Contract::new()
+            .input("FRAME", PacketType::Any)
+            .input("DETECTIONS", PacketType::of::<Vec<u8>>())
+            .output("OUT", PacketType::Any)
+            .side_input("MODEL", PacketType::of::<String>())
+            .with_timestamp_offset(0);
+        assert_eq!(c.find_input("DETECTIONS"), Some(1));
+        assert_eq!(c.find_input("NOPE"), None);
+        assert_eq!(c.find_output("OUT"), Some(0));
+        assert_eq!(c.find_side_input("MODEL"), Some(0));
+        assert_eq!(c.timestamp_offset, Some(0));
+        assert_eq!(c.policy, InputPolicyKind::Default);
+    }
+
+    #[test]
+    fn repeated_ports_share_tag() {
+        let c = Contract::new().input_repeated("IN", PacketType::Any, 3);
+        assert_eq!(c.inputs.len(), 3);
+        assert!(c.inputs.iter().all(|p| p.tag == "IN"));
+        // find_input returns the first.
+        assert_eq!(c.find_input("IN"), Some(0));
+    }
+
+    #[test]
+    fn sync_sets_sets_policy() {
+        let c = Contract::new()
+            .input_repeated("A", PacketType::Any, 2)
+            .input("B", PacketType::Any)
+            .with_sync_sets(vec![vec![0, 1], vec![2]]);
+        assert_eq!(c.policy, InputPolicyKind::SyncSets);
+        assert_eq!(c.sync_sets.len(), 2);
+    }
+
+    #[test]
+    fn options_typed_access() {
+        let mut o = Options::new();
+        o.set("n", OptionValue::Int(4));
+        o.set("rate", OptionValue::Float(0.5));
+        o.set("name", OptionValue::Str("det".into()));
+        o.set("on", OptionValue::Bool(true));
+        assert_eq!(o.get_int("n"), Some(4));
+        assert_eq!(o.get_float("rate"), Some(0.5));
+        // int/float coercion both ways
+        assert_eq!(o.get_float("n"), Some(4.0));
+        assert_eq!(o.get_str("name"), Some("det"));
+        assert_eq!(o.get_bool("on"), Some(true));
+        assert_eq!(o.int_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn max_in_flight_clamped_to_one() {
+        let c = Contract::new().with_max_in_flight(0);
+        assert_eq!(c.max_in_flight, 1);
+    }
+}

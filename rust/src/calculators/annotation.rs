@@ -1,0 +1,116 @@
+//! Annotation calculators (§6.1-6.2): overlay detections, landmarks and
+//! masks onto camera frames. The default input policy aligns the
+//! annotation streams with the frame stream automatically — "the end
+//! result is a slightly delayed viewfinder output that is perfectly
+//! aligned with the computed and tracked detections, effectively hiding
+//! model latency in a dynamic way."
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::MpResult;
+use crate::packet::PacketType;
+use crate::perception::image::ImageBuilder;
+use crate::perception::types::{Detections, LandmarkList, Mask};
+use crate::perception::ImageFrame;
+use crate::registry::CalculatorRegistry;
+
+/// Overlays detection boxes on frames (Fig. 1 "detection annotation").
+/// The two inputs synchronize on timestamp by the default policy.
+pub struct DetectionAnnotator;
+
+impl Calculator for DetectionAnnotator {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let frame_in = ctx.input(0);
+        if frame_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frame = frame_in.get::<ImageFrame>()?;
+        let mut b = ImageBuilder::from_frame(frame);
+        let dets_in = ctx.input(1);
+        if !dets_in.is_empty() {
+            for d in dets_in.get::<Detections>()? {
+                // class-coded outline intensity
+                let v = 0.5 + 0.25 * (d.class_id % 3) as f32;
+                b.stroke_rect(&d.bbox, &[v]);
+            }
+        }
+        ctx.output_now(0, b.finish());
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Overlays landmark points (+ optional mask) on frames — the §6.2
+/// three-stream synchronized annotator.
+pub struct LandmarkAnnotator;
+
+impl Calculator for LandmarkAnnotator {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let frame_in = ctx.input(0);
+        if frame_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frame = frame_in.get::<ImageFrame>()?;
+        let mut b = ImageBuilder::from_frame(frame);
+        let lm_in = ctx.input(1);
+        if !lm_in.is_empty() {
+            let lms = lm_in.get::<LandmarkList>()?;
+            for &(x, y) in &lms.points {
+                let px = (x * (frame.width - 1) as f32) as usize;
+                let py = (y * (frame.height - 1) as f32) as usize;
+                for c in 0..frame.channels {
+                    b.set(px, py, c, 1.0);
+                }
+            }
+        }
+        if ctx.input_count() > 2 {
+            let mask_in = ctx.input(2);
+            if !mask_in.is_empty() {
+                let mask = mask_in.get::<Mask>()?;
+                // darken background where mask says "not person"
+                let (mw, mh) = (mask.width, mask.height);
+                for y in 0..frame.height {
+                    for x in 0..frame.width {
+                        let mx = x * mw / frame.width;
+                        let my = y * mh / frame.height;
+                        if mask.at(mx, my) < 0.5 {
+                            for c in 0..frame.channels {
+                                let v = frame.at(x, y, c) * 0.4;
+                                b.set(x, y, c, v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ctx.output_now(0, b.finish());
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "DetectionAnnotatorCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("DETECTIONS", PacketType::of::<Detections>())
+                .output("FRAME", PacketType::of::<ImageFrame>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(DetectionAnnotator)),
+    );
+    r.register_fn(
+        "LandmarkAnnotatorCalculator",
+        |node| {
+            let mut c = Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("LANDMARKS", PacketType::of::<LandmarkList>());
+            if node.input_count_with_tag("MASK") > 0 {
+                c = c.input("MASK", PacketType::of::<Mask>());
+            }
+            Ok(c
+                .output("FRAME", PacketType::of::<ImageFrame>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(LandmarkAnnotator)),
+    );
+}

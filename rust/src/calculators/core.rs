@@ -1,0 +1,524 @@
+//! Core reusable calculators: the framework's standard library of
+//! plumbing nodes (pass-through, gating, mux/demux, sources, sinks,
+//! resampling). These are the "collection of re-usable ... processing
+//! components" of the paper's part (c).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::calculator::{
+    Calculator, CalculatorContext, Contract, ProcessOutcome,
+};
+use crate::error::MpResult;
+use crate::packet::{Packet, PacketType};
+use crate::registry::CalculatorRegistry;
+use crate::timestamp::{Timestamp, TimestampBound};
+
+// ---------------------------------------------------------------------
+// PassThroughCalculator
+// ---------------------------------------------------------------------
+
+/// Forwards every input packet unchanged (N inputs -> N outputs,
+/// port-wise). The canonical trivial calculator.
+pub struct PassThrough;
+
+impl Calculator for PassThrough {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        for i in 0..ctx.input_count() {
+            let p = ctx.input(i).clone();
+            if !p.is_empty() {
+                ctx.output(i, p);
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CounterSourceCalculator
+// ---------------------------------------------------------------------
+
+/// Source emitting `count` packets of `u64` at `period_us` timestamp
+/// intervals starting at `start_us`. The workhorse of tests/benches.
+/// Options: `count` (default 10), `period_us` (default 1), `start_us`
+/// (default 0), `batch` (packets per Process call, default 1).
+pub struct CounterSource {
+    next: u64,
+    count: u64,
+    period_us: i64,
+    start_us: i64,
+    batch: u64,
+}
+
+impl Calculator for CounterSource {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        self.count = o.int_or("count", 10) as u64;
+        self.period_us = o.int_or("period_us", 1);
+        self.start_us = o.int_or("start_us", 0);
+        self.batch = o.int_or("batch", 1).max(1) as u64;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        for _ in 0..self.batch {
+            if self.next >= self.count {
+                return Ok(ProcessOutcome::Stop);
+            }
+            let ts = Timestamp::new(self.start_us + self.next as i64 * self.period_us);
+            ctx.output(0, Packet::new(self.next, ts));
+            self.next += 1;
+        }
+        if self.next >= self.count {
+            Ok(ProcessOutcome::Stop)
+        } else {
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SidePacketToStreamCalculator
+// ---------------------------------------------------------------------
+
+/// Emits the side packet once on its output stream at `Timestamp::PRESTREAM`
+/// (or at `at_us` if set), then stops producing.
+pub struct SidePacketToStream {
+    emitted: bool,
+}
+
+impl Calculator for SidePacketToStream {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let at = ctx.options().get_int("at_us");
+        let ts = match at {
+            Some(us) => Timestamp::new(us),
+            None => Timestamp::PRESTREAM,
+        };
+        let p = ctx.side_input(0).clone().at(ts);
+        ctx.output(0, p);
+        self.emitted = true;
+        Ok(())
+    }
+
+    fn process(&mut self, _ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        Ok(ProcessOutcome::Stop)
+    }
+}
+
+// ---------------------------------------------------------------------
+// GateCalculator
+// ---------------------------------------------------------------------
+
+/// Forwards packets on the data input while the most recent packet on
+/// the ALLOW stream (a `bool`) is true. Control and data are
+/// timestamp-synchronized by the default input policy (matching
+/// MediaPipe's GateCalculator): a control packet at timestamp T governs
+/// data from T onwards, deterministically.
+pub struct Gate {
+    allow: bool,
+}
+
+impl Calculator for Gate {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.allow = ctx.options().bool_or("initial", true);
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let ctrl = ctx.input(1);
+        if !ctrl.is_empty() {
+            self.allow = *ctrl.get::<bool>()?;
+        }
+        let data = ctx.input(0);
+        if !data.is_empty() && self.allow {
+            let p = data.clone();
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// MuxCalculator / RoundRobinDemuxCalculator
+// ---------------------------------------------------------------------
+
+/// Forwards the packet from whichever of its IN ports has one, merging
+/// several streams into one (inputs must have disjoint timestamps —
+/// enforced by the output stream's monotonicity check).
+pub struct Mux;
+
+impl Calculator for Mux {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        for i in 0..ctx.input_count() {
+            let p = ctx.input(i);
+            if !p.is_empty() {
+                let p = p.clone();
+                ctx.output(0, p);
+                break; // one packet per timestamp
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Splits the input stream into N interleaving subsets of packets, each
+/// going to a separate output stream — the demultiplexing node of the
+/// §6.2 face-landmark/segmentation example.
+pub struct RoundRobinDemux {
+    next: usize,
+}
+
+impl Calculator for RoundRobinDemux {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0).clone();
+        if !p.is_empty() {
+            let port = self.next;
+            self.next = (self.next + 1) % ctx.output_count();
+            // Other outputs learn that this timestamp carries nothing
+            // for them (keeps downstream synchronization fast).
+            let bound = TimestampBound::after_packet(p.timestamp());
+            for o in 0..ctx.output_count() {
+                if o == port {
+                    ctx.output(o, p.clone());
+                } else {
+                    ctx.set_next_timestamp_bound(o, bound);
+                }
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// PacketClonerCalculator
+// ---------------------------------------------------------------------
+
+/// Emits the most recent packet from the VALUE input whenever a TICK
+/// packet arrives (cloned at the tick's timestamp). MediaPipe's
+/// PacketClonerCalculator; used to align slow data to a fast clock.
+pub struct PacketCloner {
+    latest: Option<Packet>,
+}
+
+impl Calculator for PacketCloner {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let v = ctx.input(1);
+        if !v.is_empty() {
+            self.latest = Some(v.clone());
+        }
+        let tick = ctx.input(0);
+        if !tick.is_empty() {
+            if let Some(latest) = &self.latest {
+                let out = latest.at(tick.timestamp());
+                ctx.output(0, out);
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// PreviousLoopbackCalculator
+// ---------------------------------------------------------------------
+
+/// Pairs each MAIN packet with the most recent LOOP packet from a
+/// previous timestamp (the LOOP input is a declared back edge).
+/// Emits the previous loop value — or an empty marker at the first
+/// timestamp — so cyclic graphs stay live. Mirrors MediaPipe's
+/// PreviousLoopbackCalculator.
+pub struct PreviousLoopback {
+    prev: Option<Packet>,
+}
+
+impl Calculator for PreviousLoopback {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let loopb = ctx.input(1);
+        if !loopb.is_empty() {
+            self.prev = Some(loopb.clone());
+        }
+        let main = ctx.input(0);
+        if !main.is_empty() {
+            let ts = main.timestamp();
+            match &self.prev {
+                Some(p) => {
+                    let out = p.at(ts);
+                    ctx.output(0, out);
+                }
+                None => ctx.output(0, Packet::new(LoopbackEmpty, ts)),
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Marker payload emitted by [`PreviousLoopback`] before the first loop
+/// value exists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoopbackEmpty;
+
+// ---------------------------------------------------------------------
+// CallbackSinkCalculator (test/instrumentation aid)
+// ---------------------------------------------------------------------
+
+/// Invokes a user closure for every input packet. Register per-graph by
+/// passing the closure through a side packet of type [`SinkFn`].
+pub struct CallbackSink;
+
+/// The closure payload consumed by [`CallbackSink`].
+pub type SinkFn = Arc<dyn Fn(&Packet) + Send + Sync>;
+
+impl Calculator for CallbackSink {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let f = ctx.side_input(0).get::<SinkFn>()?.clone();
+        for i in 0..ctx.input_count() {
+            let p = ctx.input(i);
+            if !p.is_empty() {
+                f(p);
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SequenceShiftCalculator
+// ---------------------------------------------------------------------
+
+/// Re-timestamps packets by `offset` positions within the sequence
+/// (positive = packet content appears at a later timestamp). MediaPipe's
+/// SequenceShiftCalculator, used for temporal alignment.
+pub struct SequenceShift {
+    offset: i64,
+    buffer: Vec<Packet>,
+    timestamps: Vec<Timestamp>,
+}
+
+impl Calculator for SequenceShift {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.offset = ctx.options().int_or("offset", 1);
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let ts = ctx.input_timestamp();
+        if self.offset > 0 {
+            // Packet k surfaces at the timestamp of packet k+offset.
+            self.buffer.push(p.clone());
+            self.timestamps.push(ts);
+            if self.buffer.len() > self.offset as usize {
+                let out = self.buffer.remove(0);
+                self.timestamps.remove(0);
+                let out = out.at(ts);
+                ctx.output(0, out);
+            }
+        } else {
+            // Non-positive offsets pass through unchanged (offset 0) —
+            // negative shifts would violate monotonicity.
+            let out = p.clone();
+            ctx.output(0, out);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// BusyWorkCalculator (bench workload)
+// ---------------------------------------------------------------------
+
+/// Burns `work_us` microseconds of CPU per packet, then forwards it.
+/// The synthetic stand-in for heavy processing stages in Fig. 1/3
+/// benches (deterministic spin, not sleep, to model CPU contention).
+pub struct BusyWork {
+    work_us: u64,
+}
+
+/// Global knob letting benches scale all BusyWork nodes at once.
+pub static BUSY_WORK_SCALE_PERCENT: AtomicU64 = AtomicU64::new(100);
+
+impl Calculator for BusyWork {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.work_us = ctx.options().int_or("work_us", 100) as u64;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let scale = BUSY_WORK_SCALE_PERCENT.load(Ordering::Relaxed);
+        let dur = std::time::Duration::from_micros(self.work_us * scale / 100);
+        let start = std::time::Instant::now();
+        while start.elapsed() < dur {
+            std::hint::spin_loop();
+        }
+        let p = ctx.input(0).clone();
+        if !p.is_empty() {
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CollectorCalculator (test aid): accumulates into a shared Vec
+// ---------------------------------------------------------------------
+
+/// Appends every `(timestamp, data_id)` it sees to a shared vector
+/// provided via side packet — the standard assertion point in tests.
+pub struct Collector;
+
+/// Shared sink payload for [`Collector`].
+pub type Collected = Arc<Mutex<Vec<(Timestamp, u64)>>>;
+
+impl Calculator for Collector {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let sink = ctx.side_input(0).get::<Collected>()?.clone();
+        for i in 0..ctx.input_count() {
+            let p = ctx.input(i);
+            if !p.is_empty() {
+                sink.lock().unwrap().push((p.timestamp(), p.data_id()));
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------
+// registration
+// ---------------------------------------------------------------------
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "PassThroughCalculator",
+        |node| {
+            let n = node.inputs.len().max(1);
+            Ok(Contract::new()
+                .input_repeated("", PacketType::Any, n)
+                .output_repeated("", PacketType::Any, node.outputs.len().max(1))
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(PassThrough)),
+    );
+    r.register_fn(
+        "CounterSourceCalculator",
+        |_| Ok(Contract::new().output("", PacketType::of::<u64>())),
+        |_| {
+            Ok(Box::new(CounterSource {
+                next: 0,
+                count: 0,
+                period_us: 1,
+                start_us: 0,
+                batch: 1,
+            }))
+        },
+    );
+    r.register_fn(
+        "SidePacketToStreamCalculator",
+        |_| {
+            Ok(Contract::new()
+                .output("", PacketType::Any)
+                .side_input("PACKET", PacketType::Any))
+        },
+        |_| Ok(Box::new(SidePacketToStream { emitted: false })),
+    );
+    r.register_fn(
+        "GateCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .input("ALLOW", PacketType::of::<bool>())
+                .output("", PacketType::Any)
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(Gate { allow: true })),
+    );
+    r.register_fn(
+        "MuxCalculator",
+        |node| {
+            Ok(Contract::new()
+                .input_repeated("IN", PacketType::Any, node.input_count_with_tag("IN").max(1))
+                .output("", PacketType::Any)
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(Mux)),
+    );
+    r.register_fn(
+        "RoundRobinDemuxCalculator",
+        |node| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output_repeated(
+                    "OUT",
+                    PacketType::Any,
+                    node.output_count_with_tag("OUT").max(1),
+                ))
+        },
+        |_| Ok(Box::new(RoundRobinDemux { next: 0 })),
+    );
+    r.register_fn(
+        "PacketClonerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("TICK", PacketType::Any)
+                .input("VALUE", PacketType::Any)
+                .output("", PacketType::Any)
+                .with_sync_sets(vec![vec![0], vec![1]]))
+        },
+        |_| Ok(Box::new(PacketCloner { latest: None })),
+    );
+    r.register_fn(
+        "PreviousLoopbackCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("MAIN", PacketType::Any)
+                .input("LOOP", PacketType::Any)
+                .output("PREV", PacketType::Any)
+                .with_sync_sets(vec![vec![0], vec![1]]))
+        },
+        |_| Ok(Box::new(PreviousLoopback { prev: None })),
+    );
+    r.register_fn(
+        "CallbackSinkCalculator",
+        |node| {
+            Ok(Contract::new()
+                .input_repeated("", PacketType::Any, node.inputs.len().max(1))
+                .side_input("CALLBACK", PacketType::of::<SinkFn>()))
+        },
+        |_| Ok(Box::new(CallbackSink)),
+    );
+    r.register_fn(
+        "SequenceShiftCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any))
+        },
+        |_| {
+            Ok(Box::new(SequenceShift {
+                offset: 1,
+                buffer: Vec::new(),
+                timestamps: Vec::new(),
+            }))
+        },
+    );
+    r.register_fn(
+        "BusyWorkCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any)
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(BusyWork { work_us: 100 })),
+    );
+    r.register_fn(
+        "CollectorCalculator",
+        |node| {
+            Ok(Contract::new()
+                .input_repeated("", PacketType::Any, node.inputs.len().max(1))
+                .side_input("SINK", PacketType::of::<Collected>()))
+        },
+        |_| Ok(Box::new(Collector)),
+    );
+}

@@ -1,0 +1,194 @@
+//! Flow-control calculators (§4.1.4, Fig. 3): the node-based system that
+//! drops packets according to real-time constraints.
+//!
+//! "The second system consists of inserting special nodes which can drop
+//! packets ... Typically, these nodes use special input policies to be
+//! able to make fast decisions on their inputs."
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::MpResult;
+use crate::packet::{Packet, PacketType};
+use crate::registry::CalculatorRegistry;
+use crate::timestamp::{Timestamp, TimestampBound};
+
+/// Shared drop counter so benches/tests can observe shedding (Fig. 3
+/// evaluation: "measure drops, in-flight, latency").
+#[derive(Clone, Default)]
+pub struct DropCounter(pub Arc<AtomicU64>);
+
+impl DropCounter {
+    pub fn new() -> DropCounter {
+        DropCounter::default()
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The Fig. 3 flow limiter: admits packets from its main input into the
+/// downstream subgraph while fewer than `max_in_flight` timestamps are
+/// being processed; the FINISHED back-edge input (loopback from the
+/// subgraph's final output) retires them. Excess packets are dropped
+/// **upstream**, avoiding "the wasted work that would result from
+/// partially processing a timestamp and then dropping packets between
+/// intermediate stages".
+///
+/// Uses the Immediate input policy: admission decisions must react to
+/// each packet as it arrives, not wait for cross-stream settling.
+pub struct FlowLimiter {
+    max_in_flight: usize,
+    in_flight: usize,
+    dropped: u64,
+    counter: Option<DropCounter>,
+}
+
+impl Calculator for FlowLimiter {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.max_in_flight = ctx.options().int_or("max_in_flight", 1).max(1) as usize;
+        if let Ok(p) = ctx.side_input_tag("DROPS") {
+            if !p.is_empty() {
+                self.counter = Some(p.get::<DropCounter>()?.clone());
+            }
+        }
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        // FINISHED retires an in-flight timestamp.
+        let fin = ctx.input(1);
+        if !fin.is_empty() {
+            self.in_flight = self.in_flight.saturating_sub(1);
+        }
+        let main = ctx.input(0);
+        if !main.is_empty() {
+            if self.in_flight < self.max_in_flight {
+                self.in_flight += 1;
+                let p = main.clone();
+                ctx.output(0, p);
+            } else {
+                self.dropped += 1;
+                if let Some(c) = &self.counter {
+                    c.0.fetch_add(1, Ordering::Relaxed);
+                }
+                // Even when dropping, settle downstream at this
+                // timestamp so synchronization with side branches that
+                // did receive the frame is not stalled.
+                let bound = TimestampBound::after_packet(main.timestamp());
+                ctx.set_next_timestamp_bound(0, bound);
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Passes through at most one packet per `period_us` of *timestamp*
+/// time: a deterministic rate limiter (the "limiting frequency" part of
+/// the §6.1 frame-selection node, usable standalone).
+pub struct PacketThinner {
+    period_us: i64,
+    next_allowed: Timestamp,
+}
+
+impl Calculator for PacketThinner {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.period_us = ctx.options().int_or("period_us", 1).max(1);
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if !p.is_empty() {
+            let ts = p.timestamp();
+            if ts >= self.next_allowed {
+                self.next_allowed = Timestamp::new(
+                    (ts.micros() / self.period_us + 1) * self.period_us,
+                );
+                let p = p.clone();
+                ctx.output(0, p);
+            }
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Emits every packet it receives but never more than `capacity` queued
+/// timestamps downstream, *blocking* semantics (real back-pressure is
+/// provided by the framework's `max_queue_size`; this node instead keeps
+/// the most recent packet, dropping stale ones — a "real-time queue" of
+/// size 1). Mirrors MediaPipe's RealTimeFlowLimiter usage for display
+/// paths.
+pub struct LatestOnly {
+    latest: Option<Packet>,
+}
+
+impl Calculator for LatestOnly {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if !p.is_empty() {
+            self.latest = Some(p.clone());
+        }
+        // Forward the newest immediately; stale intermediates are
+        // replaced before a downstream slow consumer sees them.
+        if let Some(latest) = self.latest.take() {
+            ctx.output(0, latest);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "FlowLimiterCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .input("FINISHED", PacketType::Any)
+                .output("", PacketType::Any)
+                .optional_side_input("DROPS", PacketType::of::<DropCounter>())
+                .with_policy(crate::calculator::InputPolicyKind::Immediate))
+        },
+        |_| {
+            Ok(Box::new(FlowLimiter {
+                max_in_flight: 1,
+                in_flight: 0,
+                dropped: 0,
+                counter: None,
+            }))
+        },
+    );
+    r.register_fn(
+        "PacketThinnerCalculator",
+        |node| {
+            // `declare_offset: true` lets the thinner promise offset 0 so
+            // dropped timestamps still settle downstream (§4.1.2 fn.6) —
+            // benches contrast joins with and without the declaration.
+            let mut c = Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any);
+            if node.options.bool_or("declare_offset", false) {
+                c = c.with_timestamp_offset(0);
+            }
+            Ok(c)
+        },
+        |_| {
+            Ok(Box::new(PacketThinner {
+                period_us: 1,
+                next_allowed: Timestamp::MIN,
+            }))
+        },
+    );
+    r.register_fn(
+        "LatestOnlyCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any)
+                .with_policy(crate::calculator::InputPolicyKind::Immediate))
+        },
+        |_| Ok(Box::new(LatestOnly { latest: None })),
+    );
+}

@@ -1,0 +1,284 @@
+//! Landmark/mask temporal calculators (§6.2): interpolate sparse
+//! landmark and segmentation results back onto every frame timestamp.
+//!
+//! "To derive the detected landmarks and segmentation masks on all
+//! frames, the landmarks and masks are temporally interpolated across
+//! frames. The target timestamps for interpolation are simply those of
+//! all incoming frames."
+
+use std::collections::VecDeque;
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::MpResult;
+use crate::packet::{Packet, PacketType};
+use crate::perception::types::{LandmarkList, Mask};
+use crate::perception::ImageFrame;
+use crate::registry::CalculatorRegistry;
+use crate::timestamp::Timestamp;
+
+/// Generic two-point temporal interpolator driven by frame timestamps.
+/// FRAME input supplies target timestamps; VALUE input supplies sparse
+/// values. For each frame timestamp between two values, emits the lerp;
+/// before the first value, emits nothing; after the last, holds it.
+struct TemporalInterpolator<T, F> {
+    /// (timestamp µs, value)
+    history: VecDeque<(i64, T)>,
+    pending_frames: VecDeque<i64>,
+    lerp: F,
+    hold_last: bool,
+}
+
+impl<T: Clone + Send + 'static, F: Fn(&T, &T, f32) -> T + Send> TemporalInterpolator<T, F> {
+    fn new(lerp: F) -> Self {
+        TemporalInterpolator {
+            history: VecDeque::new(),
+            pending_frames: VecDeque::new(),
+            lerp,
+            hold_last: true,
+        }
+    }
+
+    fn push_value(&mut self, ts: i64, v: T) {
+        self.history.push_back((ts, v));
+        while self.history.len() > 2 {
+            self.history.pop_front();
+        }
+    }
+
+    /// Emit interpolated values for all pending frame timestamps that
+    /// are now bracketed (or holdable).
+    fn drain_ready(&mut self, value_bound_exceeds: i64) -> Vec<(i64, T)> {
+        let mut out = Vec::new();
+        while let Some(&fts) = self.pending_frames.front() {
+            match self.history.len() {
+                0 => {
+                    if value_bound_exceeds > fts {
+                        // no value will ever cover this frame; skip it
+                        self.pending_frames.pop_front();
+                        continue;
+                    }
+                    break;
+                }
+                1 => {
+                    let (vts, v) = &self.history[0];
+                    if fts <= *vts {
+                        out.push((fts, v.clone()));
+                        self.pending_frames.pop_front();
+                    } else if value_bound_exceeds > fts {
+                        if self.hold_last {
+                            out.push((fts, v.clone()));
+                        }
+                        self.pending_frames.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                _ => {
+                    let (t0, v0) = &self.history[0];
+                    let (t1, v1) = &self.history[1];
+                    if fts <= *t0 {
+                        out.push((fts, v0.clone()));
+                        self.pending_frames.pop_front();
+                    } else if fts <= *t1 {
+                        let alpha = (fts - t0) as f32 / (*t1 - *t0).max(1) as f32;
+                        out.push((fts, (self.lerp)(v0, v1, alpha)));
+                        self.pending_frames.pop_front();
+                    } else {
+                        // frame beyond newest value: drop oldest, retry
+                        self.history.pop_front();
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Landmark interpolator calculator. Inputs: FRAME (dense),
+/// LANDMARKS (sparse). Output: LANDMARKS at every frame timestamp.
+pub struct LandmarkInterpolator {
+    interp: TemporalInterpolator<LandmarkList, fn(&LandmarkList, &LandmarkList, f32) -> LandmarkList>,
+}
+
+impl Calculator for LandmarkInterpolator {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let v_in = ctx.input(1);
+        if !v_in.is_empty() {
+            self.interp
+                .push_value(v_in.timestamp().raw(), v_in.get::<LandmarkList>()?.clone());
+        }
+        let f_in = ctx.input(0);
+        if !f_in.is_empty() {
+            self.interp.pending_frames.push_back(f_in.timestamp().raw());
+        }
+        let value_bound = ctx.input_bound(1).0.raw();
+        for (ts, v) in self.interp.drain_ready(value_bound) {
+            ctx.output(0, Packet::new(v, Timestamp::new(ts)));
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Mask interpolator calculator (same pattern, pixel-wise lerp).
+pub struct MaskInterpolator {
+    interp: TemporalInterpolator<Mask, fn(&Mask, &Mask, f32) -> Mask>,
+}
+
+impl Calculator for MaskInterpolator {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let v_in = ctx.input(1);
+        if !v_in.is_empty() {
+            self.interp
+                .push_value(v_in.timestamp().raw(), v_in.get::<Mask>()?.clone());
+        }
+        let f_in = ctx.input(0);
+        if !f_in.is_empty() {
+            self.interp.pending_frames.push_back(f_in.timestamp().raw());
+        }
+        let value_bound = ctx.input_bound(1).0.raw();
+        for (ts, v) in self.interp.drain_ready(value_bound) {
+            ctx.output(0, Packet::new(v, Timestamp::new(ts)));
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Exponential landmark smoother (jitter reduction — the "incremental
+/// improvement" §1 motivates; also an ablation point).
+pub struct LandmarkSmoother {
+    alpha: f32,
+    state: Option<LandmarkList>,
+}
+
+impl Calculator for LandmarkSmoother {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.alpha = ctx.options().float_or("alpha", 0.5) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let lm = p.get::<LandmarkList>()?;
+        let sm = match &self.state {
+            Some(prev) => prev.lerp(lm, self.alpha),
+            None => lm.clone(),
+        };
+        self.state = Some(sm.clone());
+        ctx.output_now(0, sm);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "LandmarkInterpolatorCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("LANDMARKS", PacketType::of::<LandmarkList>())
+                .output("LANDMARKS", PacketType::of::<LandmarkList>())
+                .with_sync_sets(vec![vec![0], vec![1]]))
+        },
+        |_| {
+            Ok(Box::new(LandmarkInterpolator {
+                interp: TemporalInterpolator::new(LandmarkList::lerp as _),
+            }))
+        },
+    );
+    r.register_fn(
+        "MaskInterpolatorCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("MASK", PacketType::of::<Mask>())
+                .output("MASK", PacketType::of::<Mask>())
+                .with_sync_sets(vec![vec![0], vec![1]]))
+        },
+        |_| {
+            Ok(Box::new(MaskInterpolator {
+                interp: TemporalInterpolator::new(Mask::lerp as _),
+            }))
+        },
+    );
+    r.register_fn(
+        "LandmarkSmootherCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::of::<LandmarkList>())
+                .output("", PacketType::of::<LandmarkList>())
+                .with_timestamp_offset(0))
+        },
+        |_| {
+            Ok(Box::new(LandmarkSmoother {
+                alpha: 0.5,
+                state: None,
+            }))
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm(x: f32) -> LandmarkList {
+        LandmarkList::new(vec![(x, x)])
+    }
+
+    #[test]
+    fn interpolator_brackets_frames() {
+        let mut it: TemporalInterpolator<LandmarkList, _> =
+            TemporalInterpolator::new(|a: &LandmarkList, b: &LandmarkList, t: f32| a.lerp(b, t));
+        it.push_value(0, lm(0.0));
+        it.push_value(100, lm(1.0));
+        for f in [0i64, 25, 50, 75, 100] {
+            it.pending_frames.push_back(f);
+        }
+        let out = it.drain_ready(101);
+        assert_eq!(out.len(), 5);
+        let xs: Vec<f32> = out.iter().map(|(_, l)| l.points[0].0).collect();
+        assert_eq!(xs, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn interpolator_waits_for_bracketing_value() {
+        let mut it: TemporalInterpolator<LandmarkList, _> =
+            TemporalInterpolator::new(|a: &LandmarkList, b: &LandmarkList, t: f32| a.lerp(b, t));
+        it.push_value(0, lm(0.0));
+        it.pending_frames.push_back(50);
+        // value stream settled only to 10: frame@50 must wait
+        assert!(it.drain_ready(10).is_empty());
+        // once the value stream is settled past 50 with no new value,
+        // hold the last one
+        let out = it.drain_ready(60);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.points[0].0, 0.0);
+    }
+
+    #[test]
+    fn interpolator_skips_frames_before_first_value() {
+        let mut it: TemporalInterpolator<LandmarkList, _> =
+            TemporalInterpolator::new(|a: &LandmarkList, b: &LandmarkList, t: f32| a.lerp(b, t));
+        it.pending_frames.push_back(5);
+        // no value ever arrives at/before 5 and the bound passed it
+        let out = it.drain_ready(10);
+        assert!(out.is_empty());
+        assert!(it.pending_frames.is_empty(), "frame consumed, not stuck");
+    }
+
+    #[test]
+    fn interpolator_slides_window_forward() {
+        let mut it: TemporalInterpolator<LandmarkList, _> =
+            TemporalInterpolator::new(|a: &LandmarkList, b: &LandmarkList, t: f32| a.lerp(b, t));
+        it.push_value(0, lm(0.0));
+        it.push_value(10, lm(1.0));
+        it.push_value(20, lm(0.5)); // window slides to [10, 20]
+        it.pending_frames.push_back(15);
+        let out = it.drain_ready(21);
+        assert_eq!(out.len(), 1);
+        assert!((out[0].1.points[0].0 - 0.75).abs() < 1e-6);
+    }
+}

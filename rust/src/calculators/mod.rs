@@ -1,0 +1,24 @@
+//! The calculator library: re-usable inference and processing
+//! components (part (c) of the paper's three main parts).
+
+pub mod annotation;
+pub mod core;
+pub mod flow;
+pub mod inference;
+pub mod landmark;
+pub mod tracking;
+pub mod video;
+
+use crate::registry::CalculatorRegistry;
+
+/// Register every built-in calculator (invoked once for the global
+/// registry; tests may call it on private registries).
+pub fn register_builtins(r: &CalculatorRegistry) {
+    annotation::register(r);
+    core::register(r);
+    flow::register(r);
+    inference::register(r);
+    landmark::register(r);
+    tracking::register(r);
+    video::register(r);
+}

@@ -1,0 +1,460 @@
+//! Tracking calculators (§6.1): the lightweight tracker that propagates
+//! detections to every frame while the detector runs on a sub-sampled
+//! stream, and the detection-merging node that reconciles fresh
+//! detections with tracked ones.
+
+use std::collections::HashMap;
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::MpResult;
+use crate::packet::PacketType;
+use crate::perception::types::{iou, Detection, Detections, Rect};
+use crate::perception::ImageFrame;
+use crate::registry::CalculatorRegistry;
+
+/// One tracked target: constant-velocity motion model updated by
+/// appearance (brightness-centroid) correlation against each new frame.
+#[derive(Clone, Debug)]
+struct Track {
+    id: u64,
+    rect: Rect,
+    vx: f32,
+    vy: f32,
+    class_id: u32,
+    score: f32,
+    /// Frames since the last detector confirmation.
+    age: u32,
+}
+
+/// §6.1 BoxTracker: "the tracking branch updates earlier detections and
+/// advances their locations to the current camera frame."
+///
+/// Inputs: FRAME (every frame), DETECTIONS (sparse, from the merger's
+/// loopback — initializes/confirms tracks). Output: tracked detections
+/// on every frame. Uses sync sets so frames are not blocked by the
+/// sparse detection stream (the parallel-branches property of Fig. 1).
+///
+/// Options: `max_age` — drop tracks unconfirmed for this many frames
+/// (default 30), `search` — local search radius in normalized units for
+/// appearance correlation (default 0.05).
+pub struct BoxTracker {
+    tracks: Vec<Track>,
+    next_id: u64,
+    max_age: u32,
+    search: f32,
+    match_iou: f32,
+    prev_frame: Option<ImageFrame>,
+}
+
+impl BoxTracker {
+    /// Refine a predicted rect by local appearance search (the inline
+    /// copy in `process` is the hot path; this method is the documented
+    /// reference version, exercised by unit tests).
+    #[cfg_attr(not(test), allow(dead_code))]
+    /// Refine a predicted rect by local appearance search: among shifted
+    /// candidates pick the brightest-interior one (our synthetic objects
+    /// are bright boxes; a real impl would correlate patches).
+    fn refine(&self, frame: &ImageFrame, rect: &Rect) -> Rect {
+        // Candidate order matters: the UNSHIFTED position comes first and
+        // wins ties (strict improvement required to move). Without this,
+        // an object larger than the search step produces a plateau of
+        // equal scores and the arbitrary first candidate causes a
+        // constant directional drift.
+        let mut best = rect.clamped();
+        let mut best_score = frame.cropped(&best).mean();
+        for (dx, dy) in [
+            (0.0f32, -1.0f32), (0.0, 1.0), (-1.0, 0.0), (1.0, 0.0),
+            (-1.0, -1.0), (1.0, -1.0), (-1.0, 1.0), (1.0, 1.0),
+        ] {
+            let cand = rect
+                .translated(dx * self.search, dy * self.search)
+                .clamped();
+            let score = frame.cropped(&cand).mean();
+            if score > best_score {
+                best_score = score;
+                best = cand;
+            }
+        }
+        best
+    }
+}
+
+impl Calculator for BoxTracker {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        self.max_age = o.int_or("max_age", 30) as u32;
+        self.search = o.float_or("search", 0.05) as f32;
+        self.match_iou = o.float_or("match_iou", 0.1) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        // Sparse detections (when present) confirm/initialize tracks.
+        // The loopback carries merged detections (§6.1: "sends merged
+        // detections back to the tracker to initialize new tracking
+        // targets if needed"). Detections carrying a track_id are this
+        // tracker's own, possibly stale snapshots: they *refresh* their
+        // track by id (never spawn — spawning from stale self-snapshots
+        // is a positive feedback loop that explodes the track list).
+        // Only id-less (fresh detector) detections may create tracks.
+        let det_in = ctx.input(1);
+        if !det_in.is_empty() {
+            let dets = det_in.get::<Detections>()?.clone();
+            for d in dets {
+                if d.track_id.is_some() {
+                    // Our own snapshot coming back around the loop: not a
+                    // confirmation (only the detector confirms) — ignore,
+                    // so unconfirmed tracks still expire via max_age.
+                    continue;
+                }
+                // fresh detection: match to an existing track by IoU
+                let mut best: Option<(usize, f32)> = None;
+                for (i, t) in self.tracks.iter().enumerate() {
+                    let v = iou(&t.rect, &d.bbox);
+                    if v > self.match_iou {
+                        best = match best {
+                            Some((_, bv)) if bv >= v => best,
+                            _ => Some((i, v)),
+                        };
+                    }
+                }
+                match best {
+                    Some((i, _)) => {
+                        let t = &mut self.tracks[i];
+                        // velocity from confirmed displacement
+                        t.vx = 0.5 * t.vx + 0.5 * (d.bbox.x - t.rect.x);
+                        t.vy = 0.5 * t.vy + 0.5 * (d.bbox.y - t.rect.y);
+                        t.rect = d.bbox;
+                        t.score = d.score;
+                        t.class_id = d.class_id;
+                        t.age = 0;
+                    }
+                    None => {
+                        self.tracks.push(Track {
+                            id: self.next_id,
+                            rect: d.bbox,
+                            vx: 0.0,
+                            vy: 0.0,
+                            class_id: d.class_id,
+                            score: d.score,
+                            age: 0,
+                        });
+                        self.next_id += 1;
+                    }
+                }
+            }
+            // Safety net: merge tracks that converged onto the same
+            // object (keep the older id — stable identities).
+            let mut i = 0;
+            while i < self.tracks.len() {
+                let mut j = i + 1;
+                while j < self.tracks.len() {
+                    if self.tracks[i].class_id == self.tracks[j].class_id
+                        && iou(&self.tracks[i].rect, &self.tracks[j].rect) > 0.5
+                    {
+                        self.tracks.remove(j);
+                    } else {
+                        j += 1;
+                    }
+                }
+                i += 1;
+            }
+        }
+
+        // Per-frame advance (the fast branch).
+        let frame_in = ctx.input(0);
+        if !frame_in.is_empty() {
+            let frame = frame_in.get::<ImageFrame>()?;
+            let search = self.search;
+            let max_age = self.max_age;
+            let mut refined: Vec<Rect> = Vec::with_capacity(self.tracks.len());
+            for t in &self.tracks {
+                let predicted = t.rect.translated(t.vx, t.vy).clamped();
+                let r = {
+                    // inline refine (same tie-breaking as Self::refine:
+                    // unshifted candidate first, strict improvement to move)
+                    let mut best = predicted;
+                    let mut best_score = frame.cropped(&best).mean();
+                    for (dx, dy) in [
+                        (0.0f32, -1.0f32), (0.0, 1.0), (-1.0, 0.0), (1.0, 0.0),
+                        (-1.0, -1.0), (1.0, -1.0), (-1.0, 1.0), (1.0, 1.0),
+                    ] {
+                        let cand = predicted.translated(dx * search, dy * search).clamped();
+                        let score = frame.cropped(&cand).mean();
+                        if score > best_score {
+                            best_score = score;
+                            best = cand;
+                        }
+                    }
+                    best
+                };
+                refined.push(r);
+            }
+            for (t, r) in self.tracks.iter_mut().zip(refined) {
+                t.vx = 0.7 * t.vx + 0.3 * (r.x - t.rect.x);
+                t.vy = 0.7 * t.vy + 0.3 * (r.y - t.rect.y);
+                t.rect = r;
+                t.age += 1;
+            }
+            self.tracks.retain(|t| t.age <= max_age);
+            self.prev_frame = Some(frame.clone());
+
+            let out: Detections = self
+                .tracks
+                .iter()
+                .map(|t| Detection {
+                    bbox: t.rect,
+                    score: t.score * 0.99f32.powi(t.age as i32),
+                    class_id: t.class_id,
+                    track_id: Some(t.id),
+                })
+                .collect();
+            ctx.output(0, crate::packet::Packet::new(out, frame_in.timestamp()));
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// §6.1 detection merging: "compares results and merges them with
+/// detections from earlier frames removing duplicate results based on
+/// their location in the frame and/or class proximity." Operates on the
+/// same timestamp as the fresh detections (default input policy aligns
+/// the two streams — exactly the property the paper calls out).
+///
+/// Inputs: DETECTIONS (fresh, sparse), TRACKED (from the tracker, dense
+/// — only the set at matching timestamps is merged). Output: merged
+/// detections (also fed back to the tracker in Fig. 1).
+pub struct TrackedDetectionMerger {
+    iou_thr: f32,
+}
+
+impl Calculator for TrackedDetectionMerger {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.iou_thr = ctx.options().float_or("iou_threshold", 0.4) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let fresh_in = ctx.input(0);
+        let tracked_in = ctx.input(1);
+        if fresh_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let mut merged: Detections = fresh_in.get::<Detections>()?.clone();
+        if !tracked_in.is_empty() {
+            for t in tracked_in.get::<Detections>()? {
+                let dup = merged
+                    .iter()
+                    .any(|m| m.class_id == t.class_id && iou(&m.bbox, &t.bbox) > self.iou_thr);
+                if !dup {
+                    merged.push(t.clone());
+                }
+            }
+        }
+        ctx.output_now(0, merged);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Quality metric node: matches detections against ground truth and
+/// accumulates precision/recall (used by the Fig. 1 bench and the
+/// detector-swap example).
+pub struct DetectionQuality {
+    iou_thr: f32,
+    pub stats: QualityStats,
+    sink: Option<SharedQuality>,
+}
+
+/// Aggregated matching counts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QualityStats {
+    pub true_pos: u64,
+    pub false_pos: u64,
+    pub false_neg: u64,
+    pub frames: u64,
+}
+
+impl QualityStats {
+    pub fn precision(&self) -> f64 {
+        let d = self.true_pos + self.false_pos;
+        if d == 0 {
+            0.0
+        } else {
+            self.true_pos as f64 / d as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let d = self.true_pos + self.false_neg;
+        if d == 0 {
+            0.0
+        } else {
+            self.true_pos as f64 / d as f64
+        }
+    }
+}
+
+/// Shared stats payload (side packet).
+pub type SharedQuality = std::sync::Arc<std::sync::Mutex<QualityStats>>;
+
+impl Calculator for DetectionQuality {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.iou_thr = ctx.options().float_or("iou_threshold", 0.3) as f32;
+        self.sink = Some(ctx.side_input(0).get::<SharedQuality>()?.clone());
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let dets_in = ctx.input(0);
+        let gt_in = ctx.input(1);
+        if dets_in.is_empty() || gt_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let dets = dets_in.get::<Detections>()?;
+        let gts = gt_in.get::<Detections>()?;
+        let mut matched_gt = vec![false; gts.len()];
+        let mut tp = 0u64;
+        let mut fp = 0u64;
+        for d in dets {
+            let mut hit = false;
+            for (i, g) in gts.iter().enumerate() {
+                if !matched_gt[i] && iou(&d.bbox, &g.bbox) > self.iou_thr {
+                    matched_gt[i] = true;
+                    hit = true;
+                    break;
+                }
+            }
+            if hit {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+        }
+        let fne = matched_gt.iter().filter(|&&m| !m).count() as u64;
+        let mut s = self.sink.as_ref().unwrap().lock().unwrap();
+        s.true_pos += tp;
+        s.false_pos += fp;
+        s.false_neg += fne;
+        s.frames += 1;
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Simple per-track latency probe: emits (track count) so benches can
+/// observe tracker liveness without depending on payload internals.
+pub struct DetectionCounter;
+
+impl Calculator for DetectionCounter {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if !p.is_empty() {
+            let n = p.get::<Detections>()?.len() as u64;
+            ctx.output_now(0, n);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "BoxTrackerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("DETECTIONS", PacketType::of::<Detections>())
+                .output("TRACKED", PacketType::of::<Detections>())
+                .with_sync_sets(vec![vec![0], vec![1]]))
+        },
+        |_| {
+            Ok(Box::new(BoxTracker {
+                tracks: Vec::new(),
+                next_id: 1,
+                max_age: 30,
+                search: 0.05,
+                match_iou: 0.1,
+                prev_frame: None,
+            }))
+        },
+    );
+    r.register_fn(
+        "TrackedDetectionMergerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("DETECTIONS", PacketType::of::<Detections>())
+                .input("TRACKED", PacketType::of::<Detections>())
+                .output("MERGED", PacketType::of::<Detections>()))
+        },
+        |_| Ok(Box::new(TrackedDetectionMerger { iou_thr: 0.4 })),
+    );
+    r.register_fn(
+        "DetectionQualityCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("DETECTIONS", PacketType::of::<Detections>())
+                .input("GT", PacketType::of::<Detections>())
+                .side_input("STATS", PacketType::of::<SharedQuality>()))
+        },
+        |_| {
+            Ok(Box::new(DetectionQuality {
+                iou_thr: 0.3,
+                stats: QualityStats::default(),
+                sink: None,
+            }))
+        },
+    );
+    r.register_fn(
+        "DetectionCounterCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::of::<Detections>())
+                .output("", PacketType::of::<u64>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(DetectionCounter)),
+    );
+    let _ = HashMap::<u8, u8>::new(); // keep import used under cfg(test) variations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timestamp::Timestamp;
+    
+    #[test]
+    fn quality_stats_math() {
+        let s = QualityStats {
+            true_pos: 8,
+            false_pos: 2,
+            false_neg: 2,
+            frames: 10,
+        };
+        assert!((s.precision() - 0.8).abs() < 1e-9);
+        assert!((s.recall() - 0.8).abs() < 1e-9);
+        let empty = QualityStats::default();
+        assert_eq!(empty.precision(), 0.0);
+        assert_eq!(empty.recall(), 0.0);
+    }
+
+    #[test]
+    fn refine_moves_towards_bright_region() {
+        let tracker = BoxTracker {
+            tracks: Vec::new(),
+            next_id: 1,
+            max_age: 30,
+            search: 0.1,
+            match_iou: 0.1,
+            prev_frame: None,
+        };
+        // bright box at (0.5, 0.5, 0.2, 0.2); prediction slightly off
+        let mut b = ImageFrame::build(64, 64, 1);
+        b.fill(0.1)
+            .fill_rect(&Rect::new(0.5, 0.5, 0.2, 0.2), &[1.0]);
+        let frame = b.finish();
+        let refined = tracker.refine(&frame, &Rect::new(0.42, 0.42, 0.2, 0.2));
+        let before = frame.cropped(&Rect::new(0.42, 0.42, 0.2, 0.2)).mean();
+        let after = frame.cropped(&refined).mean();
+        assert!(after >= before, "refinement never worsens appearance");
+        assert!(refined.x > 0.42 && refined.y > 0.42, "{refined:?}");
+        let _ = Timestamp::new(0);
+    }
+}

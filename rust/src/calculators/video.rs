@@ -1,0 +1,391 @@
+//! Video calculators (§6.1): synthetic camera source, frame selection
+//! (rate limiting + scene-change analysis), and image transforms.
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::{MpError, MpResult};
+use crate::packet::{Packet, PacketType};
+use crate::perception::{Detections, ImageFrame, SyntheticWorld};
+use crate::registry::CalculatorRegistry;
+use crate::timestamp::Timestamp;
+
+/// Synthetic camera (DESIGN.md substitution for the live feed). Emits
+/// [`ImageFrame`]s at `fps` on FRAME, and ground-truth [`Detections`]
+/// on the optional GT output.
+///
+/// Options: `width`, `height` (default 64), `objects` (3), `seed` (1),
+/// `frames` (total; default 300), `fps` (30), `scene_cut_every` (0),
+/// `noise` (0.02), `min_size`/`max_size` (object size range, default
+/// 0.08..0.2 — the compiled detector reliably sees >= ~0.10), and
+/// `realtime` (false: emit as fast as downstream allows; true: sleep to
+/// wall-clock pace).
+pub struct SyntheticVideoSource {
+    world: Option<SyntheticWorld>,
+    emitted: u64,
+    total: u64,
+    period_us: i64,
+    realtime: bool,
+    started: Option<std::time::Instant>,
+}
+
+impl Calculator for SyntheticVideoSource {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        let w = o.int_or("width", 64) as usize;
+        let h = o.int_or("height", 64) as usize;
+        let mut world = SyntheticWorld::new(w, h, o.int_or("objects", 3) as usize, o.int_or("seed", 1) as u64)
+            .with_noise(o.float_or("noise", 0.02) as f32)
+            .with_object_sizes(
+                o.float_or("min_size", 0.08) as f32,
+                o.float_or("max_size", 0.2) as f32,
+            );
+        let cuts = o.int_or("scene_cut_every", 0);
+        if cuts > 0 {
+            world = world.with_scene_cuts(cuts as u64);
+        }
+        self.world = Some(world);
+        self.total = o.int_or("frames", 300) as u64;
+        let fps = o.int_or("fps", 30).max(1);
+        self.period_us = 1_000_000 / fps;
+        self.realtime = o.bool_or("realtime", false);
+        self.started = Some(std::time::Instant::now());
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        if self.emitted >= self.total {
+            return Ok(ProcessOutcome::Stop);
+        }
+        let world = self.world.as_mut().expect("opened");
+        world.step();
+        let ts = Timestamp::new(self.emitted as i64 * self.period_us);
+        if self.realtime {
+            let target = std::time::Duration::from_micros((self.emitted * self.period_us as u64) as u64);
+            let elapsed = self.started.unwrap().elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        let frame = world.render();
+        ctx.output(0, Packet::new(frame, ts));
+        if ctx.output_count() > 1 {
+            ctx.output(1, Packet::new(world.ground_truth(), ts));
+        }
+        self.emitted += 1;
+        if self.emitted >= self.total {
+            Ok(ProcessOutcome::Stop)
+        } else {
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+}
+
+/// §6.1 frame selection: "a frame-selection node first selects frames to
+/// go through detection based on limiting frequency or scene-change
+/// analysis, and passes them to the detector while dropping the
+/// irrelevant frames."
+///
+/// Options: `mode` = "period" | "scene_change" | "both" (default
+/// "period"), `period` = pass every k-th frame (default 5),
+/// `threshold` = mean-absolute-difference trigger (default 0.05).
+pub struct FrameSelection {
+    mode: String,
+    period: u64,
+    threshold: f32,
+    seen: u64,
+    last_selected: Option<ImageFrame>,
+}
+
+impl Calculator for FrameSelection {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        self.mode = o.str_or("mode", "period").to_string();
+        self.period = o.int_or("period", 5).max(1) as u64;
+        self.threshold = o.float_or("threshold", 0.05) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frame = p.get::<ImageFrame>()?;
+        let idx = self.seen;
+        self.seen += 1;
+        let periodic = idx % self.period == 0;
+        let changed = match &self.last_selected {
+            Some(prev) if prev.data.len() == frame.data.len() => {
+                frame.mad(prev) > self.threshold
+            }
+            _ => true,
+        };
+        let selected = match self.mode.as_str() {
+            "period" => periodic,
+            "scene_change" => changed,
+            "both" => periodic || changed,
+            other => {
+                return Err(MpError::internal(format!(
+                    "unknown frame-selection mode '{other}'"
+                )))
+            }
+        };
+        if selected {
+            self.last_selected = Some(frame.clone());
+            let out = p.clone();
+            ctx.output(0, out);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Image transform: resize / normalize (the pre-inference adapter).
+/// Options: `out_width`, `out_height` (required), `scale` (1.0),
+/// `offset` (0.0) applied as `v * scale + offset`.
+pub struct ImageTransform {
+    ow: usize,
+    oh: usize,
+    scale: f32,
+    offset: f32,
+}
+
+impl Calculator for ImageTransform {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        self.ow = o.int_or("out_width", 32) as usize;
+        self.oh = o.int_or("out_height", 32) as usize;
+        self.scale = o.float_or("scale", 1.0) as f32;
+        self.offset = o.float_or("offset", 0.0) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frame = p.get::<ImageFrame>()?;
+        let mut resized = frame.resized(self.ow, self.oh);
+        if self.scale != 1.0 || self.offset != 0.0 {
+            let data: Vec<f32> = resized
+                .data
+                .iter()
+                .map(|v| v * self.scale + self.offset)
+                .collect();
+            resized = ImageFrame::new(self.ow, self.oh, frame.channels, data);
+        }
+        ctx.output_now(0, resized);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Template-matching detector (§6.1: "a heavy NN-based object detector
+/// may be swapped out with a light template matching detector, and the
+/// rest of the graph can stay unchanged"). Slides a bright-box score
+/// over a coarse grid — classical CV, no model artifact needed.
+///
+/// Options: `grid` (default 8), `min_score` (default 0.5),
+/// `box_size` (default 0.15, normalized).
+pub struct TemplateMatchDetector {
+    grid: usize,
+    min_score: f32,
+    box_size: f32,
+}
+
+impl Calculator for TemplateMatchDetector {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        let o = ctx.options();
+        self.grid = o.int_or("grid", 8).max(2) as usize;
+        self.min_score = o.float_or("min_score", 0.5) as f32;
+        self.box_size = o.float_or("box_size", 0.15) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frame = p.get::<ImageFrame>()?;
+        let g = self.grid;
+        let bg = frame.mean();
+        let mut dets: Detections = Vec::new();
+        for gy in 0..g {
+            for gx in 0..g {
+                // cell mean brightness vs global mean = template score
+                let x0 = gx * frame.width / g;
+                let y0 = gy * frame.height / g;
+                let x1 = ((gx + 1) * frame.width / g).max(x0 + 1);
+                let y1 = ((gy + 1) * frame.height / g).max(y0 + 1);
+                let mut sum = 0.0f32;
+                for y in y0..y1 {
+                    for x in x0..x1 {
+                        sum += frame.at(x, y, 0);
+                    }
+                }
+                let mean = sum / ((x1 - x0) * (y1 - y0)) as f32;
+                let score = (mean - bg).clamp(0.0, 1.0);
+                if score > self.min_score {
+                    let cx = (gx as f32 + 0.5) / g as f32;
+                    let cy = (gy as f32 + 0.5) / g as f32;
+                    dets.push(crate::perception::Detection::new(
+                        crate::perception::Rect::new(
+                            cx - self.box_size / 2.0,
+                            cy - self.box_size / 2.0,
+                            self.box_size,
+                            self.box_size,
+                        )
+                        .clamped(),
+                        score,
+                        0,
+                    ));
+                }
+            }
+        }
+        let dets = crate::perception::types::non_max_suppression(dets, 0.3);
+        ctx.output_now(0, dets);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "SyntheticVideoSourceCalculator",
+        |node| {
+            let mut c = Contract::new().output("FRAME", PacketType::of::<ImageFrame>());
+            if node.output_count_with_tag("GT") > 0 {
+                c = c.output("GT", PacketType::of::<Detections>());
+            }
+            Ok(c)
+        },
+        |_| {
+            Ok(Box::new(SyntheticVideoSource {
+                world: None,
+                emitted: 0,
+                total: 0,
+                period_us: 33_333,
+                realtime: false,
+                started: None,
+            }))
+        },
+    );
+    r.register_fn(
+        "FrameSelectionCalculator",
+        |_| {
+            // timestamp offset 0: dropped frames still settle the output
+            // stream so downstream joins (e.g. the detection merger)
+            // don't stall between selections (§4.1.2 footnote 6).
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .output("FRAME", PacketType::of::<ImageFrame>())
+                .with_timestamp_offset(0))
+        },
+        |_| {
+            Ok(Box::new(FrameSelection {
+                mode: String::new(),
+                period: 5,
+                threshold: 0.05,
+                seen: 0,
+                last_selected: None,
+            }))
+        },
+    );
+    r.register_fn(
+        "ImageTransformCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::of::<ImageFrame>())
+                .output("", PacketType::of::<ImageFrame>())
+                .with_timestamp_offset(0))
+        },
+        |_| {
+            Ok(Box::new(ImageTransform {
+                ow: 32,
+                oh: 32,
+                scale: 1.0,
+                offset: 0.0,
+            }))
+        },
+    );
+    r.register_fn(
+        "TemplateMatchDetectorCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .output("DETECTIONS", PacketType::of::<Detections>())
+                .with_timestamp_offset(0))
+        },
+        |_| {
+            Ok(Box::new(TemplateMatchDetector {
+                grid: 8,
+                min_score: 0.5,
+                box_size: 0.15,
+            }))
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perception::types::iou;
+
+    fn ctx_harness() -> crate::calculator::Options {
+        crate::calculator::Options::new()
+    }
+
+    // Direct unit tests of calculator logic via a minimal harness are in
+    // rust/tests/perception_calculators.rs (they need graph plumbing);
+    // here we test the pure pieces.
+
+    #[test]
+    fn template_detector_finds_bright_boxes() {
+        let mut world = SyntheticWorld::new(64, 64, 2, 9).with_noise(0.0);
+        world.step();
+        let frame = world.render();
+        let gt = world.ground_truth();
+
+        // run the detector core manually
+        let mut det = TemplateMatchDetector {
+            grid: 8,
+            min_score: 0.2,
+            box_size: 0.2,
+        };
+        let _ = &mut det;
+        // score via the same path the calculator uses: emulate process
+        // with an inline copy of its scan (kept in sync by the e2e test).
+        let g = det.grid;
+        let bg = frame.mean();
+        let mut found = Vec::new();
+        for gy in 0..g {
+            for gx in 0..g {
+                let x0 = gx * frame.width / g;
+                let y0 = gy * frame.height / g;
+                let x1 = ((gx + 1) * frame.width / g).max(x0 + 1);
+                let y1 = ((gy + 1) * frame.height / g).max(y0 + 1);
+                let mut sum = 0.0;
+                for y in y0..y1 {
+                    for x in x0..x1 {
+                        sum += frame.at(x, y, 0);
+                    }
+                }
+                let mean = sum / ((x1 - x0) * (y1 - y0)) as f32;
+                if (mean - bg).clamp(0.0, 1.0) > det.min_score {
+                    found.push((gx, gy));
+                }
+            }
+        }
+        // at least one grid cell fires inside each GT box
+        for d in &gt {
+            let (cx, cy) = d.bbox.center();
+            let cell = ((cx * g as f32) as usize, (cy * g as f32) as usize);
+            assert!(
+                found.iter().any(|&(x, y)| {
+                    (x as i32 - cell.0 as i32).abs() <= 1 && (y as i32 - cell.1 as i32).abs() <= 1
+                }),
+                "no activation near GT {cell:?}: {found:?}"
+            );
+        }
+        let _ = ctx_harness();
+        let _ = iou; // referenced to keep the import meaningful
+    }
+}

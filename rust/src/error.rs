@@ -1,0 +1,135 @@
+//! Framework-wide error type.
+//!
+//! MediaPipe reports graph failures as a single status propagated out of
+//! `Graph::wait_until_done()`; any calculator error terminates the graph
+//! run (§3.5). We mirror that with one `MpError` enum used across the
+//! framework, and a `MpResult<T>` alias.
+
+use thiserror::Error;
+
+/// Result alias used across the framework.
+pub type MpResult<T> = Result<T, MpError>;
+
+/// Framework-wide error type.
+#[derive(Error, Debug, Clone)]
+pub enum MpError {
+    /// Graph configuration failed validation (§3.5: stream produced by
+    /// more than one source, type mismatch, contract violation, ...).
+    #[error("graph validation error: {0}")]
+    Validation(String),
+
+    /// GraphConfig text could not be parsed.
+    #[error("config parse error at line {line}: {message}")]
+    Parse { line: usize, message: String },
+
+    /// A calculator name was not found in the registry.
+    #[error("unknown calculator type: {0}")]
+    UnknownCalculator(String),
+
+    /// A subgraph type was not found in the subgraph registry.
+    #[error("unknown subgraph type: {0}")]
+    UnknownSubgraph(String),
+
+    /// Packet payload was accessed with the wrong type.
+    #[error("packet type mismatch: expected {expected}, got {actual}")]
+    PacketTypeMismatch {
+        expected: &'static str,
+        actual: &'static str,
+    },
+
+    /// Attempted to read an empty packet (no payload at this timestamp).
+    #[error("empty packet")]
+    EmptyPacket,
+
+    /// A packet violated the monotonically-increasing timestamp
+    /// requirement on a stream (§4.1.2).
+    #[error("timestamp violation on stream '{stream}': packet ts {packet_ts} < bound {bound}")]
+    TimestampViolation {
+        stream: String,
+        packet_ts: i64,
+        bound: i64,
+    },
+
+    /// A calculator returned an error from Open(); terminates the run.
+    #[error("calculator '{node}' failed in Open(): {message}")]
+    OpenFailed { node: String, message: String },
+
+    /// A calculator returned an error from Process(); the framework calls
+    /// Close() and the graph run terminates (§3.4).
+    #[error("calculator '{node}' failed in Process(): {message}")]
+    ProcessFailed { node: String, message: String },
+
+    /// A calculator returned an error from Close().
+    #[error("calculator '{node}' failed in Close(): {message}")]
+    CloseFailed { node: String, message: String },
+
+    /// Side packet requested by a calculator was not provided.
+    #[error("missing side packet '{0}'")]
+    MissingSidePacket(String),
+
+    /// Graph input stream operations after the graph finished, etc.
+    #[error("invalid graph state: {0}")]
+    InvalidState(String),
+
+    /// Runtime (PJRT / XLA artifact) failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// I/O wrapper (trace export, artifact load, ...).
+    #[error("io error: {0}")]
+    Io(String),
+
+    /// Catch-all for calculator-internal errors.
+    #[error("{0}")]
+    Internal(String),
+}
+
+impl MpError {
+    /// Convenience constructor used by calculators.
+    pub fn internal(msg: impl Into<String>) -> Self {
+        MpError::Internal(msg.into())
+    }
+}
+
+impl From<std::io::Error> for MpError {
+    fn from(e: std::io::Error) -> Self {
+        MpError::Io(e.to_string())
+    }
+}
+
+impl From<anyhow::Error> for MpError {
+    fn from(e: anyhow::Error) -> Self {
+        MpError::Internal(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_node_name() {
+        let e = MpError::ProcessFailed {
+            node: "detector".into(),
+            message: "boom".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("detector"));
+        assert!(s.contains("boom"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: MpError = io.into();
+        assert!(matches!(e, MpError::Io(_)));
+    }
+
+    #[test]
+    fn errors_are_cloneable_for_fanout() {
+        // The graph clones the terminating error into every waiter.
+        let e = MpError::Validation("dup stream".into());
+        let e2 = e.clone();
+        assert_eq!(e.to_string(), e2.to_string());
+    }
+}

@@ -1,0 +1,432 @@
+//! GpuContextSim: a simulated multi-context GPU (§4.2 substrate).
+//!
+//! The paper's GPU support rests on three mechanisms we reproduce
+//! faithfully enough to test and benchmark without hardware
+//! (DESIGN.md §Substitutions):
+//!
+//! 1. **one dedicated thread per GL context**, each building a *serial*
+//!    command queue executed asynchronously ("one GL context corresponds
+//!    to one sequential command queue");
+//! 2. **sync fences** for cross-context ordering: CPU-side thread
+//!    synchronization is NOT enough — command *execution* is reordered
+//!    across queues unless a wait-on-fence is inserted into the
+//!    consumer's queue. We simulate that hazard: a read command that
+//!    executes before the producer's fence signals observes the
+//!    buffer's *stale* contents (and the simulator counts it);
+//! 3. **buffer recycling** gated on consumer fences ("before passing it
+//!    to a new producer for writing, the framework waits for all
+//!    existing consumers to finish reading").
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A sync fence: signalled once by the producer queue, waitable by any
+/// other queue (GL fence-sync semantics).
+#[derive(Clone, Default)]
+pub struct Fence {
+    inner: Arc<FenceInner>,
+}
+
+#[derive(Default)]
+struct FenceInner {
+    signalled: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Fence {
+    pub fn new() -> Fence {
+        Fence::default()
+    }
+
+    pub fn signal(&self) {
+        let mut s = self.inner.signalled.lock().unwrap();
+        *s = true;
+        self.inner.cv.notify_all();
+    }
+
+    pub fn wait(&self) {
+        let mut s = self.inner.signalled.lock().unwrap();
+        while !*s {
+            s = self.inner.cv.wait(s).unwrap();
+        }
+    }
+
+    pub fn is_signalled(&self) -> bool {
+        *self.inner.signalled.lock().unwrap()
+    }
+}
+
+/// A shared GPU buffer: a version counter stands in for the texels.
+/// Writers bump the version when the *write command executes*; readers
+/// snapshot it. A consumer that runs before the producer's write
+/// completed sees the old version — the §4.2 data race.
+pub struct SimBuffer {
+    pub id: u64,
+    version: AtomicU64,
+    /// Set while a write command is mid-flight (models partial writes).
+    writing: AtomicBool,
+}
+
+impl SimBuffer {
+    pub fn new(id: u64) -> Arc<SimBuffer> {
+        Arc::new(SimBuffer {
+            id,
+            version: AtomicU64::new(0),
+            writing: AtomicBool::new(false),
+        })
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+/// One command in a context's serial queue.
+pub enum Command {
+    /// Execute `work` after simulating `gpu_time` of execution; a write
+    /// bumps the buffer version at the END of the simulated time.
+    Write {
+        buffer: Arc<SimBuffer>,
+        gpu_time: Duration,
+    },
+    /// Read the buffer; reports (buffer id, observed version, torn) to
+    /// the callback. `torn` is true when the read overlapped a write.
+    Read {
+        buffer: Arc<SimBuffer>,
+        gpu_time: Duration,
+        on_value: Box<dyn FnOnce(u64, bool) + Send>,
+    },
+    /// Insert a fence signal (producer side: "write complete").
+    SignalFence(Fence),
+    /// Wait for a fence signalled by another queue (consumer side).
+    WaitFence(Fence),
+    /// Generic timed work (e.g. rendering cost).
+    Work { gpu_time: Duration },
+    /// Run arbitrary host code from the queue thread (test hooks).
+    Callback(Box<dyn FnOnce() + Send>),
+}
+
+struct ContextInner {
+    queue: Mutex<VecDeque<Command>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Commands executed (stats).
+    executed: AtomicU64,
+}
+
+/// One simulated GL context: a serial command queue with a dedicated
+/// execution thread.
+pub struct GpuContext {
+    pub name: String,
+    inner: Arc<ContextInner>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl GpuContext {
+    pub fn new(name: &str) -> GpuContext {
+        let inner = Arc::new(ContextInner {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            executed: AtomicU64::new(0),
+        });
+        let i2 = Arc::clone(&inner);
+        let worker = std::thread::Builder::new()
+            .name(format!("gpusim-{name}"))
+            .spawn(move || loop {
+                let cmd = {
+                    let mut q = i2.queue.lock().unwrap();
+                    loop {
+                        if let Some(c) = q.pop_front() {
+                            break Some(c);
+                        }
+                        if i2.shutdown.load(Ordering::Acquire) {
+                            break None;
+                        }
+                        q = i2.cv.wait(q).unwrap();
+                    }
+                };
+                let Some(cmd) = cmd else { return };
+                // Count up-front: finish() observers must see a stable
+                // count the moment their callback runs.
+                i2.executed.fetch_add(1, Ordering::Relaxed);
+                match cmd {
+                    Command::Write { buffer, gpu_time } => {
+                        buffer.writing.store(true, Ordering::Release);
+                        spin_for(gpu_time);
+                        buffer.version.fetch_add(1, Ordering::AcqRel);
+                        buffer.writing.store(false, Ordering::Release);
+                    }
+                    Command::Read {
+                        buffer,
+                        gpu_time,
+                        on_value,
+                    } => {
+                        let torn = buffer.writing.load(Ordering::Acquire);
+                        let v = buffer.version();
+                        spin_for(gpu_time);
+                        on_value(v, torn);
+                    }
+                    Command::SignalFence(f) => f.signal(),
+                    Command::WaitFence(f) => f.wait(),
+                    Command::Work { gpu_time } => spin_for(gpu_time),
+                    Command::Callback(f) => f(),
+                }
+            })
+            .expect("spawn gpusim worker");
+        GpuContext {
+            name: name.to_string(),
+            inner,
+            worker: Some(worker),
+        }
+    }
+
+    /// Append a command to this context's serial queue (returns
+    /// immediately — execution is asynchronous, like glFlush-less GL).
+    pub fn submit(&self, cmd: Command) {
+        let mut q = self.inner.queue.lock().unwrap();
+        q.push_back(cmd);
+        drop(q);
+        self.inner.cv.notify_one();
+    }
+
+    /// Block until the queue is empty (glFinish).
+    pub fn finish(&self) {
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let d2 = Arc::clone(&done);
+        self.submit(Command::Callback(Box::new(move || {
+            let (m, cv) = &*d2;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        })));
+        let (m, cv) = &*done;
+        let mut g = m.lock().unwrap();
+        while !*g {
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    pub fn executed(&self) -> u64 {
+        self.inner.executed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for GpuContext {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Simulated GPU execution time. Sleep-based, NOT spin-based: the
+/// simulated GPU is a *different device* — its "execution" must not
+/// consume host CPU, and queue overlap must be observable even on a
+/// single-core host.
+fn spin_for(d: Duration) {
+    if !d.is_zero() {
+        std::thread::sleep(d);
+    }
+}
+
+/// The framework-managed buffer pool (§4.2.2 last paragraph): tracks a
+/// producer fence and consumer fences per buffer, and recycles only
+/// after all consumers signalled.
+pub struct BufferPool {
+    next_id: AtomicU64,
+    free: Mutex<Vec<PooledBuffer>>,
+}
+
+struct PooledBuffer {
+    buffer: Arc<SimBuffer>,
+    consumer_fences: Vec<Fence>,
+}
+
+/// A buffer checked out of the pool with its bookkeeping.
+pub struct BufferLease {
+    pub buffer: Arc<SimBuffer>,
+    /// "write complete" — signalled by the producer queue.
+    pub producer_fence: Fence,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            next_id: AtomicU64::new(1),
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Acquire a buffer for a new producer. If recycling, WAITS for all
+    /// previous consumers' fences first (the §4.2 recycle rule).
+    pub fn acquire(&self) -> BufferLease {
+        let recycled = self.free.lock().unwrap().pop();
+        let buffer = match recycled {
+            Some(pb) => {
+                for f in &pb.consumer_fences {
+                    f.wait();
+                }
+                pb.buffer
+            }
+            None => SimBuffer::new(self.next_id.fetch_add(1, Ordering::Relaxed)),
+        };
+        BufferLease {
+            buffer,
+            producer_fence: Fence::new(),
+        }
+    }
+
+    /// Return a buffer with the consumer fences that must signal before
+    /// the next producer may write it.
+    pub fn release(&self, buffer: Arc<SimBuffer>, consumer_fences: Vec<Fence>) {
+        self.free.lock().unwrap().push(PooledBuffer {
+            buffer,
+            consumer_fences,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn commands_execute_serially_within_context() {
+        let ctx = GpuContext::new("a");
+        let buf = SimBuffer::new(1);
+        for _ in 0..3 {
+            ctx.submit(Command::Write {
+                buffer: Arc::clone(&buf),
+                gpu_time: MS,
+            });
+        }
+        ctx.finish();
+        assert_eq!(buf.version(), 3);
+        assert_eq!(ctx.executed(), 4); // 3 writes + finish callback
+    }
+
+    #[test]
+    fn cross_context_without_fence_races() {
+        // Producer writes slowly; consumer reads immediately: without a
+        // fence the read observes the stale version.
+        let prod = GpuContext::new("prod");
+        let cons = GpuContext::new("cons");
+        let buf = SimBuffer::new(1);
+        let (tx, rx) = mpsc::channel();
+        prod.submit(Command::Write {
+            buffer: Arc::clone(&buf),
+            gpu_time: Duration::from_millis(20),
+        });
+        cons.submit(Command::Read {
+            buffer: Arc::clone(&buf),
+            gpu_time: MS,
+            on_value: Box::new(move |v, torn| {
+                let _ = tx.send((v, torn));
+            }),
+        });
+        let (v, torn) = rx.recv().unwrap();
+        assert!(v == 0 || torn, "read must observe staleness: v={v} torn={torn}");
+        prod.finish();
+        cons.finish();
+    }
+
+    #[test]
+    fn fence_orders_cross_context_access() {
+        let prod = GpuContext::new("prod");
+        let cons = GpuContext::new("cons");
+        let buf = SimBuffer::new(1);
+        let fence = Fence::new();
+        let (tx, rx) = mpsc::channel();
+        prod.submit(Command::Write {
+            buffer: Arc::clone(&buf),
+            gpu_time: Duration::from_millis(20),
+        });
+        prod.submit(Command::SignalFence(fence.clone()));
+        cons.submit(Command::WaitFence(fence));
+        cons.submit(Command::Read {
+            buffer: Arc::clone(&buf),
+            gpu_time: MS,
+            on_value: Box::new(move |v, torn| {
+                let _ = tx.send((v, torn));
+            }),
+        });
+        let (v, torn) = rx.recv().unwrap();
+        assert_eq!(v, 1, "fence guarantees the write is visible");
+        assert!(!torn);
+        prod.finish();
+        cons.finish();
+    }
+
+    #[test]
+    fn fences_do_not_serialize_unrelated_work() {
+        // Two contexts doing independent work overlap in wall time.
+        let a = GpuContext::new("a");
+        let b = GpuContext::new("b");
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            a.submit(Command::Work {
+                gpu_time: Duration::from_millis(2),
+            });
+            b.submit(Command::Work {
+                gpu_time: Duration::from_millis(2),
+            });
+        }
+        a.finish();
+        b.finish();
+        let elapsed = t0.elapsed();
+        // serial would be >= 40ms; parallel ~20ms + overhead.
+        assert!(
+            elapsed < Duration::from_millis(38),
+            "contexts did not overlap: {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn pool_recycle_waits_for_consumers() {
+        let pool = BufferPool::new();
+        let lease = pool.acquire();
+        let id = lease.buffer.id;
+        let consumer_fence = Fence::new();
+        pool.release(Arc::clone(&lease.buffer), vec![consumer_fence.clone()]);
+        // Re-acquire from another thread: must block until the consumer
+        // fence signals.
+        let pool = Arc::new(pool);
+        let p2 = Arc::clone(&pool);
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            let lease2 = p2.acquire();
+            let _ = tx.send(lease2.buffer.id);
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(30)).is_err(),
+            "acquire returned before the consumer finished"
+        );
+        consumer_fence.signal();
+        let got = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(got, id, "recycled the same buffer");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn fence_is_sticky() {
+        let f = Fence::new();
+        assert!(!f.is_signalled());
+        f.signal();
+        f.wait(); // returns immediately
+        assert!(f.is_signalled());
+    }
+}

@@ -1,0 +1,213 @@
+//! Programmatic graph construction (§3.5: "a graph is typically defined
+//! via a graph configuration ... or can be built programmatically in
+//! code").
+
+use crate::calculator::{Options, OptionValue};
+use crate::graph::config::{ExecutorConfig, GraphConfig, NodeConfig, StreamBinding};
+
+/// Fluent builder producing a [`GraphConfig`].
+#[derive(Default)]
+pub struct GraphBuilder {
+    config: GraphConfig,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    /// Declare a graph input stream.
+    pub fn input_stream(mut self, name: &str) -> Self {
+        self.config
+            .input_streams
+            .push(StreamBinding::parse(name));
+        self
+    }
+
+    /// Declare a graph output stream.
+    pub fn output_stream(mut self, name: &str) -> Self {
+        self.config
+            .output_streams
+            .push(StreamBinding::parse(name));
+        self
+    }
+
+    /// Declare an app-provided side packet.
+    pub fn input_side_packet(mut self, name: &str) -> Self {
+        self.config
+            .input_side_packets
+            .push(StreamBinding::parse(name));
+        self
+    }
+
+    /// Graph-wide default input-queue limit (§4.1.4 back-pressure).
+    pub fn max_queue_size(mut self, n: usize) -> Self {
+        self.config.max_queue_size = Some(n);
+        self
+    }
+
+    /// Default executor thread count.
+    pub fn num_threads(mut self, n: usize) -> Self {
+        self.config.num_threads = Some(n);
+        self
+    }
+
+    /// Declare an additional executor (§3.6/§4.1.1).
+    pub fn executor(mut self, name: &str, num_threads: usize) -> Self {
+        self.config.executors.push(ExecutorConfig {
+            name: name.to_string(),
+            num_threads,
+        });
+        self
+    }
+
+    /// Enable the tracer (§5.1).
+    pub fn enable_tracing(mut self, buffer_size: usize) -> Self {
+        self.config.profiler.enabled = true;
+        self.config.profiler.buffer_size = buffer_size;
+        self
+    }
+
+    /// Mark this config as a reusable subgraph type (§3.6).
+    pub fn type_name(mut self, name: &str) -> Self {
+        self.config.type_name = Some(name.to_string());
+        self
+    }
+
+    /// Add a node; configure it in the closure.
+    pub fn node(mut self, calculator: &str, f: impl FnOnce(NodeBuilder) -> NodeBuilder) -> Self {
+        let nb = f(NodeBuilder {
+            node: NodeConfig::new(calculator),
+        });
+        self.config.nodes.push(nb.node);
+        self
+    }
+
+    pub fn build(self) -> GraphConfig {
+        self.config
+    }
+}
+
+/// Builder for one node entry.
+pub struct NodeBuilder {
+    node: NodeConfig,
+}
+
+impl NodeBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.node.name = name.to_string();
+        self
+    }
+
+    /// Connect an input stream ("TAG:name" or "name").
+    pub fn input(mut self, binding: &str) -> Self {
+        self.node.inputs.push(StreamBinding::parse(binding));
+        self
+    }
+
+    /// Connect an input stream that closes a cycle (Fig. 3 loopback).
+    pub fn back_edge_input(mut self, binding: &str) -> Self {
+        let b = StreamBinding::parse(binding);
+        self.node.back_edges.push(b.name.clone());
+        self.node.inputs.push(b);
+        self
+    }
+
+    pub fn output(mut self, binding: &str) -> Self {
+        self.node.outputs.push(StreamBinding::parse(binding));
+        self
+    }
+
+    pub fn side_input(mut self, binding: &str) -> Self {
+        self.node.input_side.push(StreamBinding::parse(binding));
+        self
+    }
+
+    pub fn side_output(mut self, binding: &str) -> Self {
+        self.node.output_side.push(StreamBinding::parse(binding));
+        self
+    }
+
+    /// Pin the node to a declared executor.
+    pub fn executor(mut self, name: &str) -> Self {
+        self.node.executor = Some(name.to_string());
+        self
+    }
+
+    pub fn option(mut self, key: &str, v: OptionValue) -> Self {
+        self.node.options.set(key, v);
+        self
+    }
+
+    pub fn option_int(self, key: &str, v: i64) -> Self {
+        self.option(key, OptionValue::Int(v))
+    }
+
+    pub fn option_float(self, key: &str, v: f64) -> Self {
+        self.option(key, OptionValue::Float(v))
+    }
+
+    pub fn option_str(self, key: &str, v: &str) -> Self {
+        self.option(key, OptionValue::Str(v.to_string()))
+    }
+
+    pub fn option_bool(self, key: &str, v: bool) -> Self {
+        self.option(key, OptionValue::Bool(v))
+    }
+
+    pub fn options(mut self, o: Options) -> Self {
+        self.node.options = o;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_equivalent_to_parsed() {
+        let built = GraphBuilder::new()
+            .input_stream("in")
+            .output_stream("out")
+            .max_queue_size(8)
+            .node("PassThroughCalculator", |n| {
+                n.input("in").output("mid").option_int("k", 3)
+            })
+            .node("PassThroughCalculator", |n| n.input("mid").output("out"))
+            .build();
+        let parsed = GraphConfig::parse(
+            r#"
+input_stream: "in"
+output_stream: "out"
+max_queue_size: 8
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "mid" options { k: 3 } }
+node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "out" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(built, parsed);
+    }
+
+    #[test]
+    fn back_edge_builder() {
+        let c = GraphBuilder::new()
+            .node("FlowLimiterCalculator", |n| {
+                n.input("frames").back_edge_input("FINISHED:done").output("gated")
+            })
+            .build();
+        assert_eq!(c.nodes[0].back_edges, vec!["done".to_string()]);
+        assert_eq!(c.nodes[0].inputs.len(), 2);
+    }
+
+    #[test]
+    fn roundtrips_through_text() {
+        let built = GraphBuilder::new()
+            .input_stream("x")
+            .executor("gpu", 1)
+            .node("A", |n| n.input("x").output("y").executor("gpu"))
+            .build();
+        let text = built.to_text();
+        assert_eq!(GraphConfig::parse(&text).unwrap(), built);
+    }
+}

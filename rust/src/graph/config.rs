@@ -1,0 +1,923 @@
+//! `GraphConfig`: the textual specification of a graph (§3.6).
+//!
+//! MediaPipe specifies graphs with a `GraphConfig` protocol buffer,
+//! usually written as text-format protobuf. We implement a pbtxt-style
+//! syntax with the same surface:
+//!
+//! ```text
+//! # Graph-level settings
+//! input_stream: "input_video"
+//! output_stream: "OUT:annotated"
+//! max_queue_size: 16
+//! num_threads: 4
+//!
+//! executor { name: "inference" num_threads: 1 }
+//!
+//! node {
+//!   calculator: "FrameSelectionCalculator"
+//!   input_stream: "FRAME:input_video"
+//!   output_stream: "FRAME:selected"
+//!   input_side_packet: "MODEL:model_path"
+//!   executor: "inference"
+//!   options { period: 5 threshold: 0.25 mode: "scene_change" }
+//! }
+//! ```
+//!
+//! Stream entries are `"TAG:name"` or plain `"name"` (untagged,
+//! index-addressed). A node input that closes a cycle must be declared
+//! with `back_edge_input_stream` (used by the Fig. 3 flow-limiter
+//! loopback), mirroring MediaPipe's `input_stream_info { back_edge }`.
+
+use std::fmt;
+
+use crate::calculator::{Options, OptionValue};
+use crate::error::{MpError, MpResult};
+
+/// A `TAG:name` stream reference in a node or graph interface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamBinding {
+    /// Port tag ("" when untagged).
+    pub tag: String,
+    /// Graph-unique stream (or side packet) name.
+    pub name: String,
+}
+
+impl StreamBinding {
+    pub fn parse(s: &str) -> StreamBinding {
+        match s.split_once(':') {
+            Some((tag, name)) => StreamBinding {
+                tag: tag.to_string(),
+                name: name.to_string(),
+            },
+            None => StreamBinding {
+                tag: String::new(),
+                name: s.to_string(),
+            },
+        }
+    }
+
+    pub fn untagged(name: &str) -> StreamBinding {
+        StreamBinding {
+            tag: String::new(),
+            name: name.to_string(),
+        }
+    }
+
+    pub fn tagged(tag: &str, name: &str) -> StreamBinding {
+        StreamBinding {
+            tag: tag.to_string(),
+            name: name.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for StreamBinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.tag.is_empty() {
+            write!(f, "{}", self.name)
+        } else {
+            write!(f, "{}:{}", self.tag, self.name)
+        }
+    }
+}
+
+/// One node entry in the config (§3.6: instance of a calculator — or of
+/// a subgraph, expanded at load).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeConfig {
+    /// Registered calculator (or subgraph) type name.
+    pub calculator: String,
+    /// Optional instance name (defaults to `calculator_<index>`).
+    pub name: String,
+    pub inputs: Vec<StreamBinding>,
+    pub outputs: Vec<StreamBinding>,
+    pub input_side: Vec<StreamBinding>,
+    pub output_side: Vec<StreamBinding>,
+    /// Input stream *names* that are declared back edges (cycle closers).
+    pub back_edges: Vec<String>,
+    /// Scheduler queue this node is pinned to (§4.1.1).
+    pub executor: Option<String>,
+    /// Node-specific options.
+    pub options: Options,
+    /// Override of the contract's max_in_flight (§3 footnote 1).
+    pub max_in_flight: Option<usize>,
+}
+
+impl NodeConfig {
+    pub fn new(calculator: &str) -> NodeConfig {
+        NodeConfig {
+            calculator: calculator.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Count of input ports with the given tag (used by variadic
+    /// contracts such as Mux).
+    pub fn input_count_with_tag(&self, tag: &str) -> usize {
+        self.inputs.iter().filter(|b| b.tag == tag).count()
+    }
+
+    pub fn output_count_with_tag(&self, tag: &str) -> usize {
+        self.outputs.iter().filter(|b| b.tag == tag).count()
+    }
+}
+
+/// A scheduler-queue/executor declaration (§4.1.1: "each scheduler queue
+/// has exactly one executor; nodes are statically assigned").
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutorConfig {
+    pub name: String,
+    /// Thread count; 0 means "based on system capabilities".
+    pub num_threads: usize,
+}
+
+/// Trace/profiler settings (§5.1: enabled via a section of GraphConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfilerConfig {
+    pub enabled: bool,
+    /// Ring-buffer capacity per thread, in events.
+    pub buffer_size: usize,
+    /// Write the trace to this path at the end of the run (optional).
+    pub trace_path: Option<String>,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig {
+            enabled: false,
+            buffer_size: 1 << 16,
+            trace_path: None,
+        }
+    }
+}
+
+/// The parsed graph specification (§3.6).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GraphConfig {
+    /// Set when this config defines a reusable subgraph type.
+    pub type_name: Option<String>,
+    /// Graph input streams (fed by the application).
+    pub input_streams: Vec<StreamBinding>,
+    /// Graph output streams (observable by the application).
+    pub output_streams: Vec<StreamBinding>,
+    /// Side packets supplied by the application at run start.
+    pub input_side_packets: Vec<StreamBinding>,
+    pub nodes: Vec<NodeConfig>,
+    pub executors: Vec<ExecutorConfig>,
+    /// Default max queue size per input stream before back-pressure
+    /// engages (§4.1.4); None = unbounded.
+    pub max_queue_size: Option<usize>,
+    /// Default executor thread count (0/None = system capabilities).
+    pub num_threads: Option<usize>,
+    /// ABLATION ONLY: disable layout priorities (§4.1.1) — every node
+    /// gets equal priority, the queue degenerates to FIFO. Exists so
+    /// benches can quantify what priority scheduling buys.
+    pub scheduler_fifo: bool,
+    pub profiler: ProfilerConfig,
+}
+
+impl GraphConfig {
+    pub fn new() -> GraphConfig {
+        GraphConfig::default()
+    }
+
+    /// Parse a pbtxt-style graph config.
+    pub fn parse(text: &str) -> MpResult<GraphConfig> {
+        let msg = parse_message_text(text)?;
+        config_from_message(&msg)
+    }
+
+    /// Serialize back to pbtxt (round-trip support; tests rely on
+    /// `parse(print(c)) == c`).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.type_name {
+            out.push_str(&format!("type: \"{t}\"\n"));
+        }
+        for s in &self.input_streams {
+            out.push_str(&format!("input_stream: \"{s}\"\n"));
+        }
+        for s in &self.output_streams {
+            out.push_str(&format!("output_stream: \"{s}\"\n"));
+        }
+        for s in &self.input_side_packets {
+            out.push_str(&format!("input_side_packet: \"{s}\"\n"));
+        }
+        if let Some(m) = self.max_queue_size {
+            out.push_str(&format!("max_queue_size: {m}\n"));
+        }
+        if let Some(n) = self.num_threads {
+            out.push_str(&format!("num_threads: {n}\n"));
+        }
+        if self.scheduler_fifo {
+            out.push_str("scheduler_fifo: true\n");
+        }
+        if self.profiler.enabled {
+            out.push_str("profiler {\n  enabled: true\n");
+            out.push_str(&format!("  buffer_size: {}\n", self.profiler.buffer_size));
+            if let Some(p) = &self.profiler.trace_path {
+                out.push_str(&format!("  trace_path: \"{p}\"\n"));
+            }
+            out.push_str("}\n");
+        }
+        for e in &self.executors {
+            out.push_str(&format!(
+                "executor {{\n  name: \"{}\"\n  num_threads: {}\n}}\n",
+                e.name, e.num_threads
+            ));
+        }
+        for n in &self.nodes {
+            out.push_str("node {\n");
+            out.push_str(&format!("  calculator: \"{}\"\n", n.calculator));
+            if !n.name.is_empty() {
+                out.push_str(&format!("  name: \"{}\"\n", n.name));
+            }
+            for s in &n.inputs {
+                if n.back_edges.contains(&s.name) {
+                    out.push_str(&format!("  back_edge_input_stream: \"{s}\"\n"));
+                } else {
+                    out.push_str(&format!("  input_stream: \"{s}\"\n"));
+                }
+            }
+            for s in &n.outputs {
+                out.push_str(&format!("  output_stream: \"{s}\"\n"));
+            }
+            for s in &n.input_side {
+                out.push_str(&format!("  input_side_packet: \"{s}\"\n"));
+            }
+            for s in &n.output_side {
+                out.push_str(&format!("  output_side_packet: \"{s}\"\n"));
+            }
+            if let Some(e) = &n.executor {
+                out.push_str(&format!("  executor: \"{e}\"\n"));
+            }
+            if let Some(m) = n.max_in_flight {
+                out.push_str(&format!("  max_in_flight: {m}\n"));
+            }
+            if !n.options.is_empty() {
+                out.push_str("  options {\n");
+                for (k, v) in n.options.iter() {
+                    out.push_str(&format!("    {k}: {}\n", print_option(v)));
+                }
+                out.push_str("  }\n");
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+}
+
+fn print_option(v: &OptionValue) -> String {
+    match v {
+        OptionValue::Str(s) => format!("\"{s}\""),
+        OptionValue::Int(i) => i.to_string(),
+        OptionValue::Float(f) => {
+            if f.fract() == 0.0 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        OptionValue::Bool(b) => b.to_string(),
+        OptionValue::IntList(v) => format!(
+            "[{}]",
+            v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+        OptionValue::FloatList(v) => format!(
+            "[{}]",
+            v.iter().map(|f| format!("{f}")).collect::<Vec<_>>().join(", ")
+        ),
+        OptionValue::StrList(v) => format!(
+            "[{}]",
+            v.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// pbtxt tokenizer + generic message parser
+// ---------------------------------------------------------------------
+
+/// Generic parsed value (we parse to a tree first, then interpret).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PbValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<PbValue>),
+    Msg(PbMessage),
+}
+
+/// An ordered list of `key: value` / `key { ... }` fields.
+pub type PbMessage = Vec<(String, PbValue)>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(String),
+    Colon,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+}
+
+fn tokenize(text: &str) -> MpResult<Vec<(Tok, usize)>> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut chars = text.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            '\n' => {
+                line += 1;
+                chars.next();
+            }
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            '#' => {
+                // comment to end of line
+                for c in chars.by_ref() {
+                    if c == '\n' {
+                        line += 1;
+                        break;
+                    }
+                }
+            }
+            ':' => {
+                chars.next();
+                toks.push((Tok::Colon, line));
+            }
+            '{' => {
+                chars.next();
+                toks.push((Tok::LBrace, line));
+            }
+            '}' => {
+                chars.next();
+                toks.push((Tok::RBrace, line));
+            }
+            '[' => {
+                chars.next();
+                toks.push((Tok::LBracket, line));
+            }
+            ']' => {
+                chars.next();
+                toks.push((Tok::RBracket, line));
+            }
+            ',' => {
+                chars.next();
+                toks.push((Tok::Comma, line));
+            }
+            '"' => {
+                chars.next();
+                let mut s = String::new();
+                let mut closed = false;
+                while let Some(c) = chars.next() {
+                    match c {
+                        '"' => {
+                            closed = true;
+                            break;
+                        }
+                        '\\' => {
+                            // minimal escapes
+                            match chars.next() {
+                                Some('n') => s.push('\n'),
+                                Some('t') => s.push('\t'),
+                                Some(other) => s.push(other),
+                                None => break,
+                            }
+                        }
+                        '\n' => {
+                            return Err(MpError::Parse {
+                                line,
+                                message: "unterminated string".into(),
+                            })
+                        }
+                        c => s.push(c),
+                    }
+                }
+                if !closed {
+                    return Err(MpError::Parse {
+                        line,
+                        message: "unterminated string".into(),
+                    });
+                }
+                toks.push((Tok::Str(s), line));
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '+' || c == '.' => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_ascii_digit() || "+-.eE_".contains(c) {
+                        s.push(c);
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                toks.push((Tok::Num(s), line));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_alphanumeric() || c == '_' {
+                        s.push(c);
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                toks.push((Tok::Ident(s), line));
+            }
+            other => {
+                return Err(MpError::Parse {
+                    line,
+                    message: format!("unexpected character '{other}'"),
+                })
+            }
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|(_, l)| *l)
+            .unwrap_or(0)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|(t, _)| t.clone());
+        self.pos += 1;
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> MpError {
+        MpError::Parse {
+            line: self.line(),
+            message: msg.into(),
+        }
+    }
+
+    /// Parse fields until `}` or EOF.
+    fn parse_fields(&mut self, until_brace: bool) -> MpResult<PbMessage> {
+        let mut msg = PbMessage::new();
+        loop {
+            match self.peek() {
+                None => {
+                    if until_brace {
+                        return Err(self.err("unexpected end of input, expected '}'"));
+                    }
+                    return Ok(msg);
+                }
+                Some(Tok::RBrace) if until_brace => {
+                    self.next();
+                    return Ok(msg);
+                }
+                Some(Tok::Ident(_)) => {
+                    let key = match self.next() {
+                        Some(Tok::Ident(k)) => k,
+                        _ => unreachable!(),
+                    };
+                    match self.peek() {
+                        Some(Tok::Colon) => {
+                            self.next();
+                            let v = self.parse_value()?;
+                            msg.push((key, v));
+                        }
+                        Some(Tok::LBrace) => {
+                            self.next();
+                            let inner = self.parse_fields(true)?;
+                            msg.push((key, PbValue::Msg(inner)));
+                        }
+                        _ => return Err(self.err(format!("expected ':' or '{{' after '{key}'"))),
+                    }
+                }
+                Some(t) => return Err(self.err(format!("unexpected token {t:?}"))),
+            }
+        }
+    }
+
+    fn parse_value(&mut self) -> MpResult<PbValue> {
+        match self.next() {
+            Some(Tok::Str(s)) => Ok(PbValue::Str(s)),
+            Some(Tok::Num(n)) => parse_number(&n).ok_or_else(|| self.err(format!("bad number '{n}'"))),
+            Some(Tok::Ident(id)) => match id.as_str() {
+                "true" => Ok(PbValue::Bool(true)),
+                "false" => Ok(PbValue::Bool(false)),
+                other => Ok(PbValue::Str(other.to_string())), // bare enum-ish value
+            },
+            Some(Tok::LBrace) => Ok(PbValue::Msg(self.parse_fields(true)?)),
+            Some(Tok::LBracket) => {
+                let mut items = Vec::new();
+                loop {
+                    match self.peek() {
+                        Some(Tok::RBracket) => {
+                            self.next();
+                            break;
+                        }
+                        Some(Tok::Comma) => {
+                            self.next();
+                        }
+                        Some(_) => items.push(self.parse_value()?),
+                        None => return Err(self.err("unterminated list")),
+                    }
+                }
+                Ok(PbValue::List(items))
+            }
+            other => Err(self.err(format!("expected a value, got {other:?}"))),
+        }
+    }
+}
+
+fn parse_number(s: &str) -> Option<PbValue> {
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(PbValue::Int(i));
+    }
+    clean.parse::<f64>().ok().map(PbValue::Float)
+}
+
+/// Parse arbitrary pbtxt into the generic tree.
+pub fn parse_message_text(text: &str) -> MpResult<PbMessage> {
+    let toks = tokenize(text)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.parse_fields(false)
+}
+
+// ---------------------------------------------------------------------
+// interpretation: generic tree -> GraphConfig
+// ---------------------------------------------------------------------
+
+fn as_str(v: &PbValue, key: &str) -> MpResult<String> {
+    match v {
+        PbValue::Str(s) => Ok(s.clone()),
+        other => Err(MpError::Parse {
+            line: 0,
+            message: format!("field '{key}' expects a string, got {other:?}"),
+        }),
+    }
+}
+
+fn as_usize(v: &PbValue, key: &str) -> MpResult<usize> {
+    match v {
+        PbValue::Int(i) if *i >= 0 => Ok(*i as usize),
+        other => Err(MpError::Parse {
+            line: 0,
+            message: format!("field '{key}' expects a non-negative int, got {other:?}"),
+        }),
+    }
+}
+
+fn options_from_message(msg: &PbMessage) -> MpResult<Options> {
+    let mut o = Options::new();
+    for (k, v) in msg {
+        let val = match v {
+            PbValue::Str(s) => OptionValue::Str(s.clone()),
+            PbValue::Int(i) => OptionValue::Int(*i),
+            PbValue::Float(f) => OptionValue::Float(*f),
+            PbValue::Bool(b) => OptionValue::Bool(*b),
+            PbValue::List(items) => {
+                if items.iter().all(|i| matches!(i, PbValue::Int(_))) {
+                    OptionValue::IntList(
+                        items
+                            .iter()
+                            .map(|i| match i {
+                                PbValue::Int(v) => *v,
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                    )
+                } else if items
+                    .iter()
+                    .all(|i| matches!(i, PbValue::Float(_) | PbValue::Int(_)))
+                {
+                    OptionValue::FloatList(
+                        items
+                            .iter()
+                            .map(|i| match i {
+                                PbValue::Float(v) => *v,
+                                PbValue::Int(v) => *v as f64,
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                    )
+                } else if items.iter().all(|i| matches!(i, PbValue::Str(_))) {
+                    OptionValue::StrList(
+                        items
+                            .iter()
+                            .map(|i| match i {
+                                PbValue::Str(v) => v.clone(),
+                                _ => unreachable!(),
+                            })
+                            .collect(),
+                    )
+                } else {
+                    return Err(MpError::Parse {
+                        line: 0,
+                        message: format!("heterogeneous list for option '{k}'"),
+                    });
+                }
+            }
+            PbValue::Msg(_) => {
+                return Err(MpError::Parse {
+                    line: 0,
+                    message: format!("nested message not allowed in options ('{k}')"),
+                })
+            }
+        };
+        o.set(k, val);
+    }
+    Ok(o)
+}
+
+fn node_from_message(msg: &PbMessage) -> MpResult<NodeConfig> {
+    let mut n = NodeConfig::default();
+    for (k, v) in msg {
+        match k.as_str() {
+            "calculator" => n.calculator = as_str(v, k)?,
+            "name" => n.name = as_str(v, k)?,
+            "input_stream" => n.inputs.push(StreamBinding::parse(&as_str(v, k)?)),
+            "back_edge_input_stream" => {
+                let b = StreamBinding::parse(&as_str(v, k)?);
+                n.back_edges.push(b.name.clone());
+                n.inputs.push(b);
+            }
+            "output_stream" => n.outputs.push(StreamBinding::parse(&as_str(v, k)?)),
+            "input_side_packet" => n.input_side.push(StreamBinding::parse(&as_str(v, k)?)),
+            "output_side_packet" => n.output_side.push(StreamBinding::parse(&as_str(v, k)?)),
+            "executor" => n.executor = Some(as_str(v, k)?),
+            "max_in_flight" => n.max_in_flight = Some(as_usize(v, k)?),
+            "options" => match v {
+                PbValue::Msg(m) => n.options = options_from_message(m)?,
+                _ => {
+                    return Err(MpError::Parse {
+                        line: 0,
+                        message: "options must be a message".into(),
+                    })
+                }
+            },
+            other => {
+                return Err(MpError::Parse {
+                    line: 0,
+                    message: format!("unknown node field '{other}'"),
+                })
+            }
+        }
+    }
+    if n.calculator.is_empty() {
+        return Err(MpError::Parse {
+            line: 0,
+            message: "node missing 'calculator'".into(),
+        });
+    }
+    Ok(n)
+}
+
+fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
+    let mut c = GraphConfig::new();
+    for (k, v) in msg {
+        match k.as_str() {
+            "type" => c.type_name = Some(as_str(v, k)?),
+            "input_stream" => c.input_streams.push(StreamBinding::parse(&as_str(v, k)?)),
+            "output_stream" => c.output_streams.push(StreamBinding::parse(&as_str(v, k)?)),
+            "input_side_packet" => c
+                .input_side_packets
+                .push(StreamBinding::parse(&as_str(v, k)?)),
+            "max_queue_size" => c.max_queue_size = Some(as_usize(v, k)?),
+            "num_threads" => c.num_threads = Some(as_usize(v, k)?),
+            "scheduler_fifo" => c.scheduler_fifo = matches!(v, PbValue::Bool(true)),
+            "node" => match v {
+                PbValue::Msg(m) => c.nodes.push(node_from_message(m)?),
+                _ => {
+                    return Err(MpError::Parse {
+                        line: 0,
+                        message: "node must be a message".into(),
+                    })
+                }
+            },
+            "executor" => match v {
+                PbValue::Msg(m) => {
+                    let mut name = String::new();
+                    let mut num_threads = 0usize;
+                    for (ek, ev) in m {
+                        match ek.as_str() {
+                            "name" => name = as_str(ev, ek)?,
+                            "num_threads" => num_threads = as_usize(ev, ek)?,
+                            other => {
+                                return Err(MpError::Parse {
+                                    line: 0,
+                                    message: format!("unknown executor field '{other}'"),
+                                })
+                            }
+                        }
+                    }
+                    c.executors.push(ExecutorConfig { name, num_threads });
+                }
+                _ => {
+                    return Err(MpError::Parse {
+                        line: 0,
+                        message: "executor must be a message".into(),
+                    })
+                }
+            },
+            "profiler" => match v {
+                PbValue::Msg(m) => {
+                    for (pk, pv) in m {
+                        match pk.as_str() {
+                            "enabled" => {
+                                c.profiler.enabled = matches!(pv, PbValue::Bool(true));
+                            }
+                            "buffer_size" => c.profiler.buffer_size = as_usize(pv, pk)?,
+                            "trace_path" => c.profiler.trace_path = Some(as_str(pv, pk)?),
+                            other => {
+                                return Err(MpError::Parse {
+                                    line: 0,
+                                    message: format!("unknown profiler field '{other}'"),
+                                })
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    return Err(MpError::Parse {
+                        line: 0,
+                        message: "profiler must be a message".into(),
+                    })
+                }
+            },
+            other => {
+                return Err(MpError::Parse {
+                    line: 0,
+                    message: format!("unknown graph field '{other}'"),
+                })
+            }
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Fig. 1-style graph
+input_stream: "input_video"
+output_stream: "OUT:annotated"
+input_side_packet: "model_path"
+max_queue_size: 16
+num_threads: 4
+
+executor { name: "inference" num_threads: 1 }
+
+node {
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:input_video"
+  output_stream: "FRAME:selected"
+  options { period: 5 mode: "scene_change" threshold: 0.25 }
+}
+
+node {
+  calculator: "ObjectDetectionCalculator"
+  input_stream: "FRAME:selected"
+  input_side_packet: "MODEL:model_path"
+  output_stream: "DETECTIONS:dets"
+  executor: "inference"
+}
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = GraphConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.input_streams, vec![StreamBinding::untagged("input_video")]);
+        assert_eq!(
+            c.output_streams,
+            vec![StreamBinding::tagged("OUT", "annotated")]
+        );
+        assert_eq!(c.max_queue_size, Some(16));
+        assert_eq!(c.num_threads, Some(4));
+        assert_eq!(c.executors.len(), 1);
+        assert_eq!(c.executors[0].name, "inference");
+        assert_eq!(c.nodes.len(), 2);
+        let n0 = &c.nodes[0];
+        assert_eq!(n0.calculator, "FrameSelectionCalculator");
+        assert_eq!(n0.inputs[0], StreamBinding::tagged("FRAME", "input_video"));
+        assert_eq!(n0.options.get_int("period"), Some(5));
+        assert_eq!(n0.options.get_str("mode"), Some("scene_change"));
+        assert_eq!(n0.options.get_float("threshold"), Some(0.25));
+        assert_eq!(c.nodes[1].executor.as_deref(), Some("inference"));
+        assert_eq!(
+            c.nodes[1].input_side[0],
+            StreamBinding::tagged("MODEL", "model_path")
+        );
+    }
+
+    #[test]
+    fn roundtrip_parse_print_parse() {
+        let c = GraphConfig::parse(SAMPLE).unwrap();
+        let printed = c.to_text();
+        let c2 = GraphConfig::parse(&printed).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn back_edge_is_marked() {
+        let text = r#"
+node {
+  calculator: "FlowLimiterCalculator"
+  input_stream: "frames"
+  back_edge_input_stream: "FINISHED:out"
+  output_stream: "gated"
+}
+"#;
+        let c = GraphConfig::parse(text).unwrap();
+        let n = &c.nodes[0];
+        assert_eq!(n.inputs.len(), 2);
+        assert_eq!(n.back_edges, vec!["out".to_string()]);
+    }
+
+    #[test]
+    fn comments_and_whitespace_ignored() {
+        let c = GraphConfig::parse("# only a comment\n\n  # another\n").unwrap();
+        assert!(c.nodes.is_empty());
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = GraphConfig::parse("node {\n  calculator \"X\"\n}").unwrap_err();
+        match err {
+            MpError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unterminated_string_is_error() {
+        assert!(GraphConfig::parse("input_stream: \"oops\n").is_err());
+    }
+
+    #[test]
+    fn unknown_field_is_error() {
+        assert!(GraphConfig::parse("bogus_field: 3\n").is_err());
+        assert!(GraphConfig::parse("node { calculator: \"X\" wat: 1 }").is_err());
+    }
+
+    #[test]
+    fn node_requires_calculator() {
+        assert!(GraphConfig::parse("node { name: \"n\" }").is_err());
+    }
+
+    #[test]
+    fn option_lists() {
+        let c = GraphConfig::parse(
+            "node { calculator: \"X\" options { sizes: [1, 2, 3] names: [\"a\", \"b\"] } }",
+        )
+        .unwrap();
+        let o = &c.nodes[0].options;
+        assert_eq!(o.get_int_list("sizes"), Some(&[1i64, 2, 3][..]));
+        match o.get("names") {
+            Some(OptionValue::StrList(v)) => assert_eq!(v, &["a", "b"]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn profiler_section() {
+        let c = GraphConfig::parse(
+            "profiler { enabled: true buffer_size: 1024 trace_path: \"/tmp/t.json\" }",
+        )
+        .unwrap();
+        assert!(c.profiler.enabled);
+        assert_eq!(c.profiler.buffer_size, 1024);
+        assert_eq!(c.profiler.trace_path.as_deref(), Some("/tmp/t.json"));
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let c = GraphConfig::parse("node { calculator: \"X\" options { a: -5 b: -0.5 } }").unwrap();
+        let o = &c.nodes[0].options;
+        assert_eq!(o.get_int("a"), Some(-5));
+        assert_eq!(o.get_float("b"), Some(-0.5));
+    }
+
+    #[test]
+    fn binding_display_roundtrip() {
+        for s in ["FRAME:video", "plain"] {
+            assert_eq!(StreamBinding::parse(s).to_string(), s);
+        }
+    }
+}

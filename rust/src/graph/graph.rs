@@ -1,0 +1,1564 @@
+//! The Graph runtime (§3.5, §4.1): node execution, decentralized
+//! synchronization, flow control and lifecycle.
+//!
+//! Execution is decentralized: there is no global clock; each node's
+//! readiness is decided locally by its input policy, and ready nodes are
+//! dispatched to their scheduler queue (§4.1.1-4.1.2). Each calculator
+//! executes on at most one thread at a time; packets are immutable; so
+//! pipelining across nodes is safe by construction (§3).
+//!
+//! Locking discipline: each node's mutable state sits behind its own
+//! mutex. A worker never holds two node locks at once — output flushing
+//! locks consumers one at a time with the producer's lock released, and
+//! all scheduling decisions collected while a lock is held are executed
+//! after it is dropped. This makes back edges (Fig. 3 loopbacks)
+//! deadlock-free by construction.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::calculator::{
+    Calculator, CalculatorContext, Contract, Options, OutputPortBuffer, ProcessOutcome,
+};
+use crate::error::{MpError, MpResult};
+use crate::graph::config::GraphConfig;
+use crate::graph::subgraph::{expand_subgraphs, SubgraphRegistry};
+use crate::graph::validation::{plan, Plan, Producer, SideSource};
+use crate::packet::Packet;
+use crate::policies::{make_policy, output_bound_hint, InputPolicy, Readiness};
+use crate::registry::CalculatorRegistry;
+use crate::scheduler::SchedulerQueue;
+use crate::stream::InputStreamQueue;
+use crate::timestamp::{Timestamp, TimestampBound};
+use crate::tracer::{EventType, TraceEvent, Tracer};
+
+/// Side packets handed to `start_run` (§3.3).
+pub type SidePackets = HashMap<String, Packet>;
+
+/// Unbounded queue marker.
+const UNLIMITED: usize = usize::MAX;
+
+/// Where packets from an output port go.
+#[derive(Clone, Copy, Debug)]
+enum Endpoint {
+    /// `(node index, input port index)`
+    Node(usize, usize),
+    /// Graph-output observer index.
+    Observer(usize),
+}
+
+/// Immutable per-node metadata (no lock needed).
+struct NodeMeta {
+    name: String,
+    priority: u32,
+    queue: usize,
+    is_source: bool,
+    contract: Contract,
+    options: Options,
+    /// Consumers of each output port.
+    out_edges: Vec<Vec<Endpoint>>,
+    /// Global stream index per output port (tracing); NO_STREAM if the
+    /// optional port is unconnected.
+    out_stream_ids: Vec<u32>,
+    in_stream_ids: Vec<u32>,
+    /// Producer node of each input port (None = graph input).
+    in_producers: Vec<Option<usize>>,
+    /// Mirror of each input queue's length, readable without the node
+    /// lock (throttle checks from producer side, §4.1.4).
+    in_queue_lens: Vec<Arc<AtomicUsize>>,
+    /// Queue limit per input port; relaxed by the deadlock-avoidance
+    /// system when needed (§4.1.4).
+    in_limits: Vec<Arc<AtomicUsize>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NodeStatus {
+    NotStarted,
+    Opened,
+    Closed,
+}
+
+/// Mutable per-node state, behind the node's mutex.
+struct NodeState {
+    queues: Vec<InputStreamQueue>,
+    policy: Box<dyn InputPolicy>,
+    calculator: Option<Box<dyn Calculator>>,
+    status: NodeStatus,
+    scheduled: bool,
+    running: bool,
+    /// A source (or any node) returned ProcessOutcome::Stop.
+    stop_requested: bool,
+    side_inputs: Vec<Packet>,
+    side_outputs: Vec<Packet>,
+    /// Last bound propagated on each output port (dedup).
+    out_bounds: Vec<TimestampBound>,
+    out_closed: Vec<bool>,
+    /// Node-wide arrival counter: orders packets across this node's
+    /// input streams for the Immediate policy.
+    arrivals: u64,
+    /// Pooled per-invocation output buffers (§Perf: reused across
+    /// Process calls so the steady-state hot loop allocates nothing —
+    /// drained Vecs keep their capacity).
+    out_bufs: Vec<OutputPortBuffer>,
+}
+
+struct ObserverState {
+    queue: VecDeque<Packet>,
+    done: bool,
+}
+
+/// A graph-output observation point: poller queue + optional callback.
+struct Observer {
+    stream_name: String,
+    stream_id: u32,
+    state: Mutex<ObserverState>,
+    cv: Condvar,
+    callback: Mutex<Option<Box<dyn Fn(&Packet) + Send + Sync>>>,
+}
+
+struct GraphInput {
+    consumers: Vec<(usize, usize)>,
+    stream_id: u32,
+    /// App-side monotonicity guard.
+    bound: Mutex<TimestampBound>,
+}
+
+/// Everything shared between the app thread and the workers.
+struct GraphCore {
+    metas: Vec<NodeMeta>,
+    states: Vec<Mutex<NodeState>>,
+    queues: Vec<Arc<SchedulerQueue>>,
+    observers: Vec<Arc<Observer>>,
+    graph_inputs: HashMap<String, GraphInput>,
+    tracer: Tracer,
+    error: Mutex<Option<MpError>>,
+    cancelled: AtomicBool,
+    /// Nodes not yet closed.
+    remaining: AtomicUsize,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    /// Scheduled-but-not-finished task count (deadlock detection).
+    activity: AtomicUsize,
+    /// Signalled whenever an input queue drains below its limit
+    /// (blocking graph-input backpressure).
+    space_mx: Mutex<()>,
+    space_cv: Condvar,
+}
+
+enum Action {
+    Process {
+        ts: Timestamp,
+        inputs: Vec<Packet>,
+        calc: Box<dyn Calculator>,
+        side_inputs: Vec<Packet>,
+        input_bounds: Vec<TimestampBound>,
+        out_bufs: Vec<OutputPortBuffer>,
+    },
+    ProcessSource {
+        calc: Box<dyn Calculator>,
+        side_inputs: Vec<Packet>,
+        out_bufs: Vec<OutputPortBuffer>,
+    },
+    Close,
+    /// Not ready, but offset bound propagation may still be pending.
+    BoundOnly,
+    None,
+}
+
+impl GraphCore {
+    // ------------------------------------------------------------------
+    // scheduling
+    // ------------------------------------------------------------------
+
+    /// §4.1.4: a node is throttled when any of its output streams'
+    /// consumer queues is at its limit.
+    fn is_throttled(&self, id: usize) -> bool {
+        let meta = &self.metas[id];
+        for edges in &meta.out_edges {
+            for ep in edges {
+                if let Endpoint::Node(c, port) = ep {
+                    let cm = &self.metas[*c];
+                    let len = cm.in_queue_lens[*port].load(Ordering::Relaxed);
+                    let lim = cm.in_limits[*port].load(Ordering::Relaxed);
+                    if len >= lim {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Invoke the readiness function and enqueue a task if the node
+    /// should run (§4.1.1). Must be called WITHOUT holding any node lock.
+    fn maybe_schedule(self: &Arc<Self>, id: usize) {
+        let meta = &self.metas[id];
+        let mut st = self.states[id].lock().unwrap();
+        if st.scheduled || st.running || st.status != NodeStatus::Opened {
+            return;
+        }
+        if self.cancelled.load(Ordering::Acquire) {
+            return;
+        }
+        let ready = if meta.is_source {
+            st.stop_requested || !self.is_throttled(id)
+        } else {
+            match st.policy.readiness(&st.queues) {
+                Readiness::Ready(_) => !self.is_throttled(id),
+                Readiness::Closed => true,
+                Readiness::NotReady => {
+                    // Offset nodes may still owe a bound propagation.
+                    self.pending_bound_only(meta, &st)
+                }
+            }
+        };
+        if ready {
+            st.scheduled = true;
+            self.activity.fetch_add(1, Ordering::AcqRel);
+            drop(st);
+            self.queues[meta.queue].push(id, meta.priority);
+        }
+    }
+
+    /// Does an offset-declaring node have an output bound advance to
+    /// publish even though no input set is ready?
+    fn pending_bound_only(&self, meta: &NodeMeta, st: &NodeState) -> bool {
+        let Some(k) = meta.contract.timestamp_offset else {
+            return false;
+        };
+        if meta.is_source {
+            return false;
+        }
+        let hint = output_bound_hint(&st.queues, k);
+        meta.out_stream_ids
+            .iter()
+            .enumerate()
+            .any(|(p, &sid)| sid != TraceEvent::NO_STREAM && !st.out_closed[p] && hint > st.out_bounds[p])
+    }
+
+    // ------------------------------------------------------------------
+    // node execution (the scheduler queue's run callback)
+    // ------------------------------------------------------------------
+
+    fn run_node(self: &Arc<Self>, id: usize) {
+        let meta = &self.metas[id];
+        let mut to_schedule: Vec<usize> = Vec::new();
+
+        let action = {
+            let mut st = self.states[id].lock().unwrap();
+            st.scheduled = false;
+            if self.cancelled.load(Ordering::Acquire)
+                || st.running
+                || st.status != NodeStatus::Opened
+            {
+                Action::None
+            } else if meta.is_source {
+                if st.stop_requested {
+                    st.running = true;
+                    Action::Close
+                } else if self.is_throttled(id) {
+                    Action::None
+                } else {
+                    st.running = true;
+                    Action::ProcessSource {
+                        calc: st.calculator.take().expect("calculator present"),
+                        side_inputs: st.side_inputs.clone(),
+                        out_bufs: std::mem::take(&mut st.out_bufs),
+                    }
+                }
+            } else {
+                match st.policy.readiness(&st.queues) {
+                    Readiness::Ready(_) if self.is_throttled(id) => Action::BoundOnly,
+                    Readiness::Ready(ts) => {
+                        let stref = &mut *st;
+                        let inputs = stref.policy.take_input_set(&mut stref.queues, ts);
+                        // Update queue-length mirrors; wake producers that
+                        // may have been throttle-blocked on us.
+                        for (port, q) in st.queues.iter().enumerate() {
+                            let len = q.len();
+                            let was =
+                                meta.in_queue_lens[port].swap(len, Ordering::AcqRel);
+                            let lim = meta.in_limits[port].load(Ordering::Relaxed);
+                            if was >= lim && len < lim {
+                                if let Some(prod) = meta.in_producers[port] {
+                                    to_schedule.push(prod);
+                                }
+                                self.space_cv.notify_all();
+                            }
+                        }
+                        let input_bounds = st.queues.iter().map(|q| q.bound()).collect();
+                        st.running = true;
+                        Action::Process {
+                            ts,
+                            inputs,
+                            calc: st.calculator.take().expect("calculator present"),
+                            side_inputs: st.side_inputs.clone(),
+                            input_bounds,
+                            out_bufs: std::mem::take(&mut st.out_bufs),
+                        }
+                    }
+                    Readiness::Closed => {
+                        st.running = true;
+                        Action::Close
+                    }
+                    Readiness::NotReady => Action::BoundOnly,
+                }
+            }
+        };
+
+        match action {
+            Action::Process {
+                ts,
+                inputs,
+                mut calc,
+                side_inputs,
+                input_bounds,
+                mut out_bufs,
+            } => {
+                let mut side_scratch: Vec<Packet> = Vec::new();
+                self.tracer
+                    .record(EventType::ProcessStart, id as u32, TraceEvent::NO_STREAM, ts, 0);
+                let result = {
+                    let mut ctx = CalculatorContext {
+                        node_name: &meta.name,
+                        input_timestamp: ts,
+                        inputs: &inputs,
+                        input_bounds: &input_bounds,
+                        outputs: &mut out_bufs,
+                        side_inputs: &side_inputs,
+                        side_outputs: &mut side_scratch,
+                        contract: &meta.contract,
+                        options: &meta.options,
+                    };
+                    calc.process(&mut ctx)
+                };
+                self.tracer
+                    .record(EventType::ProcessEnd, id as u32, TraceEvent::NO_STREAM, ts, 0);
+                self.finish_run(id, calc, out_bufs, result, ts, &mut to_schedule);
+            }
+            Action::ProcessSource {
+                mut calc,
+                side_inputs,
+                mut out_bufs,
+            } => {
+                let mut side_scratch: Vec<Packet> = Vec::new();
+                self.tracer.record(
+                    EventType::ProcessStart,
+                    id as u32,
+                    TraceEvent::NO_STREAM,
+                    Timestamp::UNSET,
+                    0,
+                );
+                let result = {
+                    let mut ctx = CalculatorContext {
+                        node_name: &meta.name,
+                        input_timestamp: Timestamp::UNSET,
+                        inputs: &[],
+                        input_bounds: &[],
+                        outputs: &mut out_bufs,
+                        side_inputs: &side_inputs,
+                        side_outputs: &mut side_scratch,
+                        contract: &meta.contract,
+                        options: &meta.options,
+                    };
+                    calc.process(&mut ctx)
+                };
+                self.tracer.record(
+                    EventType::ProcessEnd,
+                    id as u32,
+                    TraceEvent::NO_STREAM,
+                    Timestamp::UNSET,
+                    0,
+                );
+                self.finish_run(id, calc, out_bufs, result, Timestamp::UNSET, &mut to_schedule);
+            }
+            Action::Close => {
+                self.close_node(id, &mut to_schedule);
+            }
+            Action::BoundOnly => {
+                self.propagate_offset_bounds(id, &mut to_schedule);
+            }
+            Action::None => {}
+        }
+
+        // Dedup: a batched flush pushes one entry per delivered packet;
+        // one readiness check per node suffices (§Perf iteration 6).
+        to_schedule.sort_unstable();
+        to_schedule.dedup();
+        for n in to_schedule {
+            self.maybe_schedule(n);
+        }
+        // Task complete: if the graph went quiet, check for throttle
+        // deadlock (§4.1.4 deadlock-avoidance relaxes limits).
+        if self.activity.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.relax_if_deadlocked();
+        }
+    }
+
+    /// Common epilogue of a Process call: flush outputs, restore the
+    /// calculator, propagate bounds, reschedule or close.
+    fn finish_run(
+        self: &Arc<Self>,
+        id: usize,
+        calc: Box<dyn Calculator>,
+        mut out_bufs: Vec<OutputPortBuffer>,
+        result: MpResult<ProcessOutcome>,
+        _ts: Timestamp,
+        to_schedule: &mut Vec<usize>,
+    ) {
+        let meta = &self.metas[id];
+        // Flush before examining the result: §3.4 allows a failing
+        // Process to have produced partial output; MediaPipe discards on
+        // error, and so do we.
+        let flush_result = match &result {
+            Ok(_) => self.flush_outputs(id, &mut out_bufs, to_schedule),
+            Err(_) => {
+                // §3.4: output from a failing Process is discarded; the
+                // pooled buffers must not leak it into the next call.
+                for b in out_bufs.iter_mut() {
+                    b.packets.clear();
+                    b.next_bound = None;
+                    b.close = false;
+                }
+                Ok(())
+            }
+        };
+
+        let mut close_now = false;
+        {
+            let mut st = self.states[id].lock().unwrap();
+            st.calculator = Some(calc);
+            st.out_bufs = out_bufs;
+            st.running = false;
+            match (&result, &flush_result) {
+                (Err(e), _) => {
+                    let e = MpError::ProcessFailed {
+                        node: meta.name.clone(),
+                        message: e.to_string(),
+                    };
+                    drop(st);
+                    self.fail(e);
+                    close_now = true;
+                }
+                (_, Err(e)) => {
+                    let e = e.clone();
+                    drop(st);
+                    self.fail(e);
+                    close_now = true;
+                }
+                (Ok(ProcessOutcome::Stop), _) => {
+                    st.stop_requested = true;
+                    close_now = true;
+                }
+                (Ok(ProcessOutcome::Continue), _) => {
+                    // Reschedule if more work is available.
+                    drop(st);
+                    self.propagate_offset_bounds(id, to_schedule);
+                    to_schedule.push(id);
+                }
+            }
+        }
+        if close_now {
+            let mut st = self.states[id].lock().unwrap();
+            if st.status == NodeStatus::Opened && !st.running {
+                st.running = true;
+                drop(st);
+                self.close_node(id, to_schedule);
+            }
+        }
+    }
+
+    /// Deliver buffered outputs to consumer queues and observers.
+    /// Called WITHOUT holding the producer's lock.
+    fn flush_outputs(
+        self: &Arc<Self>,
+        id: usize,
+        out_bufs: &mut [OutputPortBuffer],
+        to_schedule: &mut Vec<usize>,
+    ) -> MpResult<()> {
+        let meta = &self.metas[id];
+        for (port, buf) in out_bufs.iter_mut().enumerate() {
+            let sid = meta.out_stream_ids[port];
+            if sid == TraceEvent::NO_STREAM && !buf.packets.is_empty() {
+                return Err(MpError::Internal(format!(
+                    "node '{}' wrote to unconnected output port {port}",
+                    meta.name
+                )));
+            }
+            for pkt in buf.packets.drain(..) {
+                // Runtime type check against the declared port type.
+                let want = meta.contract.outputs[port].packet_type;
+                if !want.accepts(&pkt) {
+                    return Err(MpError::PacketTypeMismatch {
+                        expected: want.name(),
+                        actual: pkt.type_name(),
+                    });
+                }
+                self.tracer.record(
+                    EventType::PacketEmitted,
+                    id as u32,
+                    sid,
+                    pkt.timestamp(),
+                    pkt.data_id(),
+                );
+                self.deliver(meta, port, &pkt, to_schedule)?;
+            }
+            // Explicit bound advance / close.
+            if let Some(b) = buf.next_bound.take() {
+                self.deliver_bound(id, port, b, to_schedule);
+            }
+            if buf.close {
+                buf.close = false; // buffers are pooled: reset the flag
+                self.deliver_close(id, port, to_schedule);
+            }
+        }
+        Ok(())
+    }
+
+    /// Deliver one packet to every consumer of `(id, port)`.
+    fn deliver(
+        self: &Arc<Self>,
+        meta: &NodeMeta,
+        port: usize,
+        pkt: &Packet,
+        to_schedule: &mut Vec<usize>,
+    ) -> MpResult<()> {
+        for ep in &meta.out_edges[port] {
+            match ep {
+                Endpoint::Node(c, cport) => {
+                    let cm = &self.metas[*c];
+                    {
+                        let mut cst = self.states[*c].lock().unwrap();
+                        let seq = cst.arrivals;
+                        cst.arrivals += 1;
+                        cst.queues[*cport].push_seq(pkt.clone(), seq)?;
+                        cm.in_queue_lens[*cport]
+                            .store(cst.queues[*cport].len(), Ordering::Release);
+                    }
+                    self.tracer.record(
+                        EventType::PacketAdded,
+                        *c as u32,
+                        cm.in_stream_ids[*cport],
+                        pkt.timestamp(),
+                        pkt.data_id(),
+                    );
+                    to_schedule.push(*c);
+                }
+                Endpoint::Observer(oi) => {
+                    let obs = &self.observers[*oi];
+                    self.tracer.record(
+                        EventType::GraphOutput,
+                        TraceEvent::NO_NODE,
+                        obs.stream_id,
+                        pkt.timestamp(),
+                        pkt.data_id(),
+                    );
+                    if let Some(cb) = obs.callback.lock().unwrap().as_ref() {
+                        cb(pkt);
+                    }
+                    let mut ost = obs.state.lock().unwrap();
+                    ost.queue.push_back(pkt.clone());
+                    drop(ost);
+                    obs.cv.notify_all();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn deliver_bound(
+        self: &Arc<Self>,
+        id: usize,
+        port: usize,
+        bound: TimestampBound,
+        to_schedule: &mut Vec<usize>,
+    ) {
+        let meta = &self.metas[id];
+        for ep in &meta.out_edges[port] {
+            match ep {
+                Endpoint::Node(c, cport) => {
+                    let advanced = {
+                        let mut cst = self.states[*c].lock().unwrap();
+                        cst.queues[*cport].advance_bound(bound)
+                    };
+                    if advanced {
+                        self.tracer.record(
+                            EventType::BoundAdvanced,
+                            *c as u32,
+                            self.metas[*c].in_stream_ids[*cport],
+                            bound.0,
+                            0,
+                        );
+                        to_schedule.push(*c);
+                    }
+                }
+                Endpoint::Observer(_) => {}
+            }
+        }
+    }
+
+    fn deliver_close(self: &Arc<Self>, id: usize, port: usize, to_schedule: &mut Vec<usize>) {
+        let meta = &self.metas[id];
+        for ep in &meta.out_edges[port] {
+            match ep {
+                Endpoint::Node(c, cport) => {
+                    {
+                        let mut cst = self.states[*c].lock().unwrap();
+                        cst.queues[*cport].close();
+                    }
+                    to_schedule.push(*c);
+                }
+                Endpoint::Observer(oi) => {
+                    let obs = &self.observers[*oi];
+                    let mut ost = obs.state.lock().unwrap();
+                    ost.done = true;
+                    drop(ost);
+                    obs.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Publish `output_bound_hint` advances for offset-declaring nodes
+    /// (§4.1.2 footnote 6 — settle downstream as early as possible).
+    fn propagate_offset_bounds(self: &Arc<Self>, id: usize, to_schedule: &mut Vec<usize>) {
+        let meta = &self.metas[id];
+        let Some(k) = meta.contract.timestamp_offset else {
+            return;
+        };
+        if meta.is_source {
+            return;
+        }
+        let mut updates: Vec<(usize, TimestampBound)> = Vec::new();
+        {
+            let mut st = self.states[id].lock().unwrap();
+            if st.status != NodeStatus::Opened {
+                return;
+            }
+            let hint = output_bound_hint(&st.queues, k);
+            for (p, &sid) in meta.out_stream_ids.iter().enumerate() {
+                if sid != TraceEvent::NO_STREAM && !st.out_closed[p] && hint > st.out_bounds[p] {
+                    st.out_bounds[p] = hint;
+                    updates.push((p, hint));
+                }
+            }
+        }
+        for (p, b) in updates {
+            self.deliver_bound(id, p, b, to_schedule);
+        }
+    }
+
+    /// Close a node: Close() is always called if Open() succeeded, even
+    /// on error termination (§3.4). Caller must have set `running`.
+    fn close_node(self: &Arc<Self>, id: usize, to_schedule: &mut Vec<usize>) {
+        let meta = &self.metas[id];
+        let (mut calc, side_inputs) = {
+            let mut st = self.states[id].lock().unwrap();
+            debug_assert!(st.running);
+            match st.calculator.take() {
+                Some(c) => (c, st.side_inputs.clone()),
+                None => return, // already closed concurrently
+            }
+        };
+        let mut out_bufs: Vec<OutputPortBuffer> = (0..meta.contract.outputs.len())
+            .map(|_| OutputPortBuffer::default())
+            .collect();
+        let mut side_scratch: Vec<Packet> = Vec::new();
+        self.tracer.record(
+            EventType::CloseStart,
+            id as u32,
+            TraceEvent::NO_STREAM,
+            Timestamp::UNSET,
+            0,
+        );
+        let result = {
+            let mut ctx = CalculatorContext {
+                node_name: &meta.name,
+                input_timestamp: Timestamp::UNSET,
+                inputs: &[],
+                input_bounds: &[],
+                outputs: &mut out_bufs,
+                side_inputs: &side_inputs,
+                side_outputs: &mut side_scratch,
+                contract: &meta.contract,
+                options: &meta.options,
+            };
+            calc.close(&mut ctx)
+        };
+        self.tracer.record(
+            EventType::CloseEnd,
+            id as u32,
+            TraceEvent::NO_STREAM,
+            Timestamp::UNSET,
+            0,
+        );
+        // Close may emit final packets (§3.4 footnote 2).
+        if result.is_ok() && !self.cancelled.load(Ordering::Acquire) {
+            if let Err(e) = self.flush_outputs(id, &mut out_bufs, to_schedule) {
+                self.fail(e);
+            }
+        }
+        if let Err(e) = result {
+            self.fail(MpError::CloseFailed {
+                node: meta.name.clone(),
+                message: e.to_string(),
+            });
+        }
+        // Mark closed; all outputs become Done.
+        {
+            let mut st = self.states[id].lock().unwrap();
+            st.status = NodeStatus::Closed;
+            st.running = false;
+            st.calculator = None;
+            for c in st.out_closed.iter_mut() {
+                *c = true;
+            }
+        }
+        for port in 0..meta.out_edges.len() {
+            self.deliver_close(id, port, to_schedule);
+        }
+        // A closing node frees its input queues: producers waiting on
+        // back-pressure must re-check.
+        for prod in meta.in_producers.iter().flatten() {
+            to_schedule.push(*prod);
+        }
+        self.space_cv.notify_all();
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.done_mx.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Record the first error and cancel the run (§3.5: any error stops
+    /// the graph with a message).
+    fn fail(self: &Arc<Self>, e: MpError) {
+        {
+            let mut slot = self.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+        self.cancelled.store(true, Ordering::Release);
+        let _g = self.done_mx.lock().unwrap();
+        self.done_cv.notify_all();
+        self.space_cv.notify_all();
+        // Wake pollers so they observe the failure.
+        for obs in &self.observers {
+            obs.cv.notify_all();
+        }
+    }
+
+    /// §4.1.4 + §3.5: the quiet-graph check. Invoked whenever the graph
+    /// runs out of scheduled work. Two responsibilities:
+    ///
+    /// 1. **Deadlock avoidance** (§4.1.4): any node that is
+    ///    ready-but-throttled gets its blocking limits doubled
+    ///    ("relaxes configured limits when needed").
+    /// 2. **Cycle termination** (§3.5): when every source has finished,
+    ///    every graph input stream is closed and nothing is ready, nodes
+    ///    still open can only be waiting on a cycle (e.g. the Fig. 3
+    ///    loopback). Cascading Done propagation cannot resolve a cycle,
+    ///    so the quiescent nodes are closed directly — matching
+    ///    MediaPipe's "all source calculators ... finished and all graph
+    ///    input streams have been closed" stop condition.
+    fn relax_if_deadlocked(self: &Arc<Self>) {
+        if self.cancelled.load(Ordering::Acquire) || self.remaining.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut to_schedule = Vec::new();
+        let mut any_live = false; // something is (or will become) runnable
+        let mut stuck: Vec<usize> = Vec::new();
+        for id in 0..self.metas.len() {
+            let meta = &self.metas[id];
+            let st = self.states[id].lock().unwrap();
+            if st.status != NodeStatus::Opened || st.running || st.scheduled {
+                if st.status == NodeStatus::Opened && (st.running || st.scheduled) {
+                    any_live = true;
+                }
+                continue;
+            }
+            let blocked = if meta.is_source {
+                if !st.stop_requested {
+                    any_live = true;
+                    self.is_throttled(id)
+                } else {
+                    false
+                }
+            } else {
+                match st.policy.readiness(&st.queues) {
+                    Readiness::Ready(_) => {
+                        any_live = true;
+                        self.is_throttled(id)
+                    }
+                    Readiness::Closed => {
+                        any_live = true;
+                        drop(st);
+                        to_schedule.push(id);
+                        continue;
+                    }
+                    Readiness::NotReady => {
+                        drop(st);
+                        stuck.push(id);
+                        continue;
+                    }
+                }
+            };
+            drop(st);
+            if blocked {
+                // Double every limit currently blocking this node.
+                for edges in &meta.out_edges {
+                    for ep in edges {
+                        if let Endpoint::Node(c, port) = ep {
+                            let cm = &self.metas[*c];
+                            let len = cm.in_queue_lens[*port].load(Ordering::Relaxed);
+                            let lim = cm.in_limits[*port].load(Ordering::Relaxed);
+                            if len >= lim {
+                                let new = lim.saturating_mul(2).max(lim + 1);
+                                cm.in_limits[*port].store(new, Ordering::Relaxed);
+                                self.tracer.record(
+                                    EventType::Unthrottled,
+                                    *c as u32,
+                                    cm.in_stream_ids[*port],
+                                    Timestamp::UNSET,
+                                    0,
+                                );
+                            }
+                        }
+                    }
+                }
+                to_schedule.push(id);
+            }
+        }
+        // Cycle termination: only when nothing can make progress and the
+        // application can no longer feed the graph.
+        if !any_live && to_schedule.is_empty() {
+            let inputs_closed = self
+                .graph_inputs
+                .values()
+                .all(|gi| gi.bound.lock().unwrap().is_done());
+            if inputs_closed {
+                for id in stuck {
+                    let proceed = {
+                        let mut st = self.states[id].lock().unwrap();
+                        if st.status == NodeStatus::Opened && !st.running && !st.scheduled {
+                            st.running = true;
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if proceed {
+                        self.close_node(id, &mut to_schedule);
+                    }
+                }
+            }
+        }
+        for id in to_schedule {
+            self.maybe_schedule(id);
+        }
+    }
+}
+
+/// A runnable MediaPipe graph (§3.5). Build with [`Graph::new`], start
+/// with [`Graph::start_run`], feed packets, then [`Graph::wait_until_done`].
+pub struct Graph {
+    core: Arc<GraphCore>,
+    plan: Plan,
+    started: bool,
+    finished: Option<MpResult<()>>,
+}
+
+/// Blocking handle for one graph output stream ("poll any output
+/// streams via output stream polling functions", §3.5).
+pub struct OutputStreamPoller {
+    core: Arc<GraphCore>,
+    obs: Arc<Observer>,
+}
+
+/// Result of a poll.
+#[derive(Debug)]
+pub enum Poll {
+    /// A packet arrived.
+    Packet(Packet),
+    /// The stream closed; no more packets.
+    Done,
+    /// Timed out waiting.
+    TimedOut,
+}
+
+impl OutputStreamPoller {
+    /// Next packet, waiting up to `timeout`.
+    pub fn poll(&self, timeout: Duration) -> Poll {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.obs.state.lock().unwrap();
+        loop {
+            if let Some(p) = st.queue.pop_front() {
+                return Poll::Packet(p);
+            }
+            if st.done || self.core.cancelled.load(Ordering::Acquire) {
+                return Poll::Done;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Poll::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .obs
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Drain everything currently queued without waiting.
+    pub fn drain(&self) -> Vec<Packet> {
+        let mut st = self.obs.state.lock().unwrap();
+        st.queue.drain(..).collect()
+    }
+
+    /// Stream name.
+    pub fn stream_name(&self) -> &str {
+        &self.obs.stream_name
+    }
+}
+
+impl Graph {
+    /// Build a graph from a config against the global registries.
+    pub fn new(config: &GraphConfig) -> MpResult<Graph> {
+        Graph::with_registries(
+            config,
+            CalculatorRegistry::global(),
+            SubgraphRegistry::global(),
+        )
+    }
+
+    /// Build against explicit registries (hermetic tests).
+    pub fn with_registries(
+        config: &GraphConfig,
+        registry: &CalculatorRegistry,
+        subgraphs: &SubgraphRegistry,
+    ) -> MpResult<Graph> {
+        let expanded = expand_subgraphs(config, subgraphs, registry)?;
+        let plan = plan(&expanded, registry)?;
+        Graph::from_plan(plan, registry, &expanded)
+    }
+
+    fn from_plan(
+        plan: Plan,
+        registry: &CalculatorRegistry,
+        config: &GraphConfig,
+    ) -> MpResult<Graph> {
+        let n = plan.nodes.len();
+        // Tracer (enabled per config §5.1).
+        let tracer = if config.profiler.enabled {
+            Tracer::new(config.profiler.buffer_size)
+        } else {
+            Tracer::disabled()
+        };
+        tracer.set_names(
+            plan.nodes.iter().map(|p| p.config.name.clone()).collect(),
+            plan.streams.iter().map(|s| s.name.clone()).collect(),
+        );
+
+        // Observers for graph outputs.
+        let mut observers = Vec::new();
+        let mut observer_of_stream: HashMap<usize, usize> = HashMap::new();
+        for (name, si) in &plan.graph_outputs {
+            observer_of_stream.insert(*si, observers.len());
+            observers.push(Arc::new(Observer {
+                stream_name: name.clone(),
+                stream_id: *si as u32,
+                state: Mutex::new(ObserverState {
+                    queue: VecDeque::new(),
+                    done: false,
+                }),
+                cv: Condvar::new(),
+                callback: Mutex::new(None),
+            }));
+        }
+
+        // Per-node metadata + state.
+        let default_limit = plan.max_queue_size.unwrap_or(UNLIMITED);
+        let mut metas = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        for (ni, pn) in plan.nodes.iter().enumerate() {
+            let nin = pn.contract.inputs.len();
+            let nout = pn.contract.outputs.len();
+            let mut out_edges: Vec<Vec<Endpoint>> = vec![Vec::new(); nout];
+            let mut out_stream_ids = vec![TraceEvent::NO_STREAM; nout];
+            for (port, &si) in pn.out_streams.iter().enumerate() {
+                if si == usize::MAX {
+                    continue;
+                }
+                out_stream_ids[port] = si as u32;
+                for &(c, cport) in &plan.streams[si].consumers {
+                    out_edges[port].push(Endpoint::Node(c, cport));
+                }
+                if let Some(&oi) = observer_of_stream.get(&si) {
+                    out_edges[port].push(Endpoint::Observer(oi));
+                }
+            }
+            let in_stream_ids: Vec<u32> = pn.in_streams.iter().map(|&s| s as u32).collect();
+            let in_producers: Vec<Option<usize>> = pn
+                .in_streams
+                .iter()
+                .map(|&si| match plan.streams[si].producer {
+                    Producer::Node(p, _) => Some(p),
+                    Producer::GraphInput => None,
+                })
+                .collect();
+            // Back-edge input queues must never throttle their producer
+            // (the Fig. 3 loopback would self-deadlock): unbounded.
+            let in_limits: Vec<Arc<AtomicUsize>> = (0..nin)
+                .map(|port| {
+                    let lim = if pn.in_is_back_edge[port] {
+                        UNLIMITED
+                    } else {
+                        default_limit
+                    };
+                    Arc::new(AtomicUsize::new(lim))
+                })
+                .collect();
+
+            let factory = registry.get(&pn.config.calculator)?;
+            let calculator = factory.create(&pn.config)?;
+            let policy = make_policy(pn.contract.policy, &pn.contract.sync_sets, nin);
+
+            metas.push(NodeMeta {
+                name: pn.config.name.clone(),
+                priority: pn.priority,
+                queue: pn.queue,
+                is_source: pn.is_source,
+                contract: pn.contract.clone(),
+                options: pn.config.options.clone(),
+                out_edges,
+                out_stream_ids,
+                in_stream_ids,
+                in_producers,
+                in_queue_lens: (0..nin).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+                in_limits,
+            });
+            states.push(Mutex::new(NodeState {
+                queues: pn
+                    .in_streams
+                    .iter()
+                    .map(|&si| InputStreamQueue::new(plan.streams[si].name.clone()))
+                    .collect(),
+                policy,
+                calculator: Some(calculator),
+                status: NodeStatus::NotStarted,
+                scheduled: false,
+                running: false,
+                stop_requested: false,
+                side_inputs: vec![Packet::empty(); pn.contract.input_side.len()],
+                side_outputs: vec![Packet::empty(); pn.contract.output_side.len()],
+                out_bounds: vec![TimestampBound::UNSTARTED; nout],
+                out_closed: vec![false; nout],
+                arrivals: 0,
+                out_bufs: (0..nout).map(|_| OutputPortBuffer::default()).collect(),
+            }));
+            let _ = ni;
+        }
+
+        // Graph inputs.
+        let mut graph_inputs = HashMap::new();
+        for (name, &si) in &plan.graph_inputs {
+            graph_inputs.insert(
+                name.clone(),
+                GraphInput {
+                    consumers: plan.streams[si].consumers.clone(),
+                    stream_id: si as u32,
+                    bound: Mutex::new(TimestampBound::UNSTARTED),
+                },
+            );
+        }
+
+        // Scheduler queues.
+        let queues: Vec<Arc<SchedulerQueue>> = plan
+            .queue_names
+            .iter()
+            .zip(&plan.queue_threads)
+            .map(|(name, &threads)| SchedulerQueue::new(name, threads))
+            .collect();
+
+        let core = Arc::new(GraphCore {
+            metas,
+            states,
+            queues,
+            observers,
+            graph_inputs,
+            tracer,
+            error: Mutex::new(None),
+            cancelled: AtomicBool::new(false),
+            remaining: AtomicUsize::new(n),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            activity: AtomicUsize::new(0),
+            space_mx: Mutex::new(()),
+            space_cv: Condvar::new(),
+        });
+
+        Ok(Graph {
+            core,
+            plan,
+            started: false,
+            finished: None,
+        })
+    }
+
+    /// The tracer attached to this graph.
+    pub fn tracer(&self) -> &Tracer {
+        &self.core.tracer
+    }
+
+    /// Names of the nodes in plan order (diagnostics).
+    pub fn node_names(&self) -> Vec<String> {
+        self.core.metas.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// The resolved plan (visualizer "graph view" topology source).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Register a callback on a graph output stream (§3.5: "an
+    /// application can also receive outputs using callbacks"). Must be
+    /// called before `start_run`.
+    pub fn observe_output(
+        &self,
+        stream: &str,
+        cb: impl Fn(&Packet) + Send + Sync + 'static,
+    ) -> MpResult<()> {
+        for obs in &self.core.observers {
+            if obs.stream_name == stream {
+                *obs.callback.lock().unwrap() = Some(Box::new(cb));
+                return Ok(());
+            }
+        }
+        Err(MpError::InvalidState(format!(
+            "'{stream}' is not a graph output stream"
+        )))
+    }
+
+    /// A blocking poller for a graph output stream.
+    pub fn poller(&self, stream: &str) -> MpResult<OutputStreamPoller> {
+        for obs in &self.core.observers {
+            if obs.stream_name == stream {
+                return Ok(OutputStreamPoller {
+                    core: Arc::clone(&self.core),
+                    obs: Arc::clone(obs),
+                });
+            }
+        }
+        Err(MpError::InvalidState(format!(
+            "'{stream}' is not a graph output stream"
+        )))
+    }
+
+    /// Start the run: resolve side packets, Open() every node (in side-
+    /// packet dependency order), then start the executors (§3.4-3.5).
+    pub fn start_run(&mut self, side_packets: SidePackets) -> MpResult<()> {
+        if self.started {
+            return Err(MpError::InvalidState("graph already started".into()));
+        }
+        self.started = true;
+        let core = &self.core;
+        let n = core.metas.len();
+
+        // Side-packet dependency order (producers before consumers).
+        let mut order: Vec<usize> = (0..n).collect();
+        {
+            let mut rank = vec![0usize; n];
+            // Longest chain of SideSource::Node dependencies; graphs of
+            // side deps are tiny, iterate to fixpoint.
+            for _ in 0..n {
+                let mut changed = false;
+                for (ni, pn) in self.plan.nodes.iter().enumerate() {
+                    for src in &pn.side_sources {
+                        if let SideSource::Node(p, _) = src {
+                            if rank[ni] <= rank[*p] {
+                                rank[ni] = rank[*p] + 1;
+                                changed = true;
+                            }
+                        }
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            order.sort_by_key(|&i| rank[i]);
+        }
+
+        // Open each node.
+        let mut opened: Vec<usize> = Vec::new();
+        let mut open_error: Option<MpError> = None;
+        'open: for &id in &order {
+            let meta = &core.metas[id];
+            let pn = &self.plan.nodes[id];
+            // Resolve side inputs.
+            let mut side_inputs = Vec::with_capacity(pn.side_sources.len());
+            for src in &pn.side_sources {
+                let pkt = match src {
+                    SideSource::App(name) => match side_packets.get(name) {
+                        Some(p) => p.clone(),
+                        None => {
+                            open_error = Some(MpError::MissingSidePacket(name.clone()));
+                            break 'open;
+                        }
+                    },
+                    SideSource::Node(p, port) => {
+                        let pst = core.states[*p].lock().unwrap();
+                        let pkt = pst.side_outputs[*port].clone();
+                        if pkt.is_empty() {
+                            open_error = Some(MpError::MissingSidePacket(format!(
+                                "side output {port} of node '{}' (must be set in Open)",
+                                core.metas[*p].name
+                            )));
+                            break 'open;
+                        }
+                        pkt
+                    }
+                    SideSource::Absent => Packet::empty(),
+                };
+                side_inputs.push(pkt);
+            }
+
+            let (mut calc, mut side_outputs) = {
+                let mut st = core.states[id].lock().unwrap();
+                st.side_inputs = side_inputs.clone();
+                (
+                    st.calculator.take().expect("calculator present"),
+                    std::mem::take(&mut st.side_outputs),
+                )
+            };
+            let mut out_bufs: Vec<OutputPortBuffer> = (0..meta.contract.outputs.len())
+                .map(|_| OutputPortBuffer::default())
+                .collect();
+            core.tracer.record(
+                EventType::OpenStart,
+                id as u32,
+                TraceEvent::NO_STREAM,
+                Timestamp::UNSET,
+                0,
+            );
+            let result = {
+                let mut ctx = CalculatorContext {
+                    node_name: &meta.name,
+                    input_timestamp: Timestamp::UNSTARTED,
+                    inputs: &[],
+                    input_bounds: &[],
+                    outputs: &mut out_bufs,
+                    side_inputs: &side_inputs,
+                    side_outputs: &mut side_outputs,
+                    contract: &meta.contract,
+                    options: &meta.options,
+                };
+                calc.open(&mut ctx)
+            };
+            core.tracer.record(
+                EventType::OpenEnd,
+                id as u32,
+                TraceEvent::NO_STREAM,
+                Timestamp::UNSET,
+                0,
+            );
+            {
+                let mut st = core.states[id].lock().unwrap();
+                st.calculator = Some(calc);
+                st.side_outputs = side_outputs;
+            }
+            match result {
+                Ok(()) => {
+                    let mut st = core.states[id].lock().unwrap();
+                    st.status = NodeStatus::Opened;
+                    drop(st);
+                    opened.push(id);
+                    // Open may emit packets (§3.4).
+                    let mut to_schedule = Vec::new();
+                    if let Err(e) = core.flush_outputs(id, &mut out_bufs, &mut to_schedule) {
+                        open_error = Some(e);
+                        break 'open;
+                    }
+                    // Scheduling happens below once everything is open.
+                }
+                Err(e) => {
+                    open_error = Some(MpError::OpenFailed {
+                        node: meta.name.clone(),
+                        message: e.to_string(),
+                    });
+                    break 'open;
+                }
+            }
+        }
+
+        if let Some(e) = open_error {
+            // Close whatever opened (Close always called after a
+            // successful Open, §3.4), then fail the run.
+            for &id in &opened {
+                let mut st = core.states[id].lock().unwrap();
+                if st.status == NodeStatus::Opened {
+                    st.running = true;
+                    drop(st);
+                    let mut ts = Vec::new();
+                    core.close_node(id, &mut ts);
+                }
+            }
+            core.fail(e.clone());
+            return Err(e);
+        }
+
+        // Start executors, then make the initial scheduling pass.
+        let run = {
+            let core = Arc::clone(core);
+            Arc::new(move |id: usize| core.run_node(id)) as Arc<dyn Fn(usize) + Send + Sync>
+        };
+        for q in &core.queues {
+            q.start(Arc::clone(&run));
+        }
+        for id in 0..n {
+            core.maybe_schedule(id);
+        }
+        Ok(())
+    }
+
+    /// Feed a packet into a graph input stream (§3.5). Blocks while the
+    /// consumers' queues are at their configured limit (back-pressure).
+    pub fn add_packet(&self, stream: &str, packet: Packet) -> MpResult<()> {
+        let core = &self.core;
+        let gi = core
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        if core.cancelled.load(Ordering::Acquire) {
+            return Err(self.current_error());
+        }
+        // App-side monotonicity check.
+        {
+            let mut b = gi.bound.lock().unwrap();
+            let ts = packet.timestamp();
+            if !ts.is_allowed_in_stream() || b.is_settled(ts) || b.is_done() {
+                return Err(MpError::TimestampViolation {
+                    stream: stream.to_string(),
+                    packet_ts: ts.raw(),
+                    bound: b.0.raw(),
+                });
+            }
+            b.advance_to(TimestampBound::after_packet(ts));
+        }
+        // Back-pressure: wait for space on all consumer queues.
+        loop {
+            let mut full = false;
+            for &(c, port) in &gi.consumers {
+                let cm = &core.metas[c];
+                if cm.in_queue_lens[port].load(Ordering::Relaxed)
+                    >= cm.in_limits[port].load(Ordering::Relaxed)
+                {
+                    full = true;
+                    break;
+                }
+            }
+            if !full {
+                break;
+            }
+            if core.cancelled.load(Ordering::Acquire) {
+                return Err(self.current_error());
+            }
+            let g = core.space_mx.lock().unwrap();
+            let _ = core
+                .space_cv
+                .wait_timeout(g, Duration::from_millis(10))
+                .unwrap();
+        }
+        core.tracer.record(
+            EventType::GraphInput,
+            TraceEvent::NO_NODE,
+            gi.stream_id,
+            packet.timestamp(),
+            packet.data_id(),
+        );
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            let cm = &core.metas[c];
+            {
+                let mut cst = core.states[c].lock().unwrap();
+                if cst.status == NodeStatus::Closed {
+                    continue;
+                }
+                let seq = cst.arrivals;
+                cst.arrivals += 1;
+                cst.queues[port].push_seq(packet.clone(), seq)?;
+                cm.in_queue_lens[port].store(cst.queues[port].len(), Ordering::Release);
+            }
+            to_schedule.push(c);
+        }
+        for id in to_schedule {
+            core.maybe_schedule(id);
+        }
+        Ok(())
+    }
+
+    /// Advance the bound of a graph input stream without a packet
+    /// (footnote 6).
+    pub fn set_input_bound(&self, stream: &str, bound: TimestampBound) -> MpResult<()> {
+        let core = &self.core;
+        let gi = core
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        gi.bound.lock().unwrap().advance_to(bound);
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            let advanced = {
+                let mut cst = core.states[c].lock().unwrap();
+                cst.queues[port].advance_bound(bound)
+            };
+            if advanced {
+                to_schedule.push(c);
+            }
+        }
+        for id in to_schedule {
+            core.maybe_schedule(id);
+        }
+        Ok(())
+    }
+
+    /// Close one graph input stream.
+    pub fn close_input(&self, stream: &str) -> MpResult<()> {
+        let core = &self.core;
+        let gi = core
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        *gi.bound.lock().unwrap() = TimestampBound::DONE;
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            {
+                let mut cst = core.states[c].lock().unwrap();
+                cst.queues[port].close();
+            }
+            to_schedule.push(c);
+        }
+        for id in to_schedule {
+            core.maybe_schedule(id);
+        }
+        // If no task got scheduled, run the quiet-graph check directly —
+        // cycle nodes may now be terminable (§3.5 stop condition 2).
+        if core.activity.load(Ordering::Acquire) == 0 {
+            core.relax_if_deadlocked();
+        }
+        Ok(())
+    }
+
+    /// Close every graph input stream.
+    pub fn close_all_inputs(&self) -> MpResult<()> {
+        let names: Vec<String> = self.core.graph_inputs.keys().cloned().collect();
+        for n in names {
+            self.close_input(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Abort the run (error-free cancellation).
+    pub fn cancel(&self) {
+        self.core.cancelled.store(true, Ordering::Release);
+        let _g = self.core.done_mx.lock().unwrap();
+        self.core.done_cv.notify_all();
+        self.core.space_cv.notify_all();
+        for obs in &self.core.observers {
+            obs.cv.notify_all();
+        }
+    }
+
+    fn current_error(&self) -> MpError {
+        self.core
+            .error
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| MpError::InvalidState("graph cancelled".into()))
+    }
+
+    /// Wait for the run to finish (§3.5 stop conditions: all calculators
+    /// closed, or an error). Also performs teardown: executors stop and
+    /// any still-open calculator gets its Close() call.
+    pub fn wait_until_done(&mut self) -> MpResult<()> {
+        if let Some(r) = &self.finished {
+            return r.clone().map(|_| ());
+        }
+        if !self.started {
+            return Err(MpError::InvalidState("graph was never started".into()));
+        }
+        let core = &self.core;
+        {
+            let mut g = core.done_mx.lock().unwrap();
+            loop {
+                if core.remaining.load(Ordering::Acquire) == 0
+                    || core.cancelled.load(Ordering::Acquire)
+                {
+                    break;
+                }
+                let (guard, _) = core
+                    .done_cv
+                    .wait_timeout(g, Duration::from_millis(50))
+                    .unwrap();
+                g = guard;
+            }
+        }
+        // Stop executors (drains remaining tasks quickly when
+        // cancelled).
+        for q in &core.queues {
+            q.shutdown();
+        }
+        // Teardown: Close() any node still open (error path).
+        let core2 = Arc::clone(core);
+        for id in 0..core.metas.len() {
+            let mut st = core.states[id].lock().unwrap();
+            if st.status == NodeStatus::Opened && !st.running {
+                st.running = true;
+                drop(st);
+                let mut ts = Vec::new();
+                core2.close_node(id, &mut ts);
+            }
+        }
+        // Mark observers done so pollers drain and stop.
+        for obs in &core.observers {
+            let mut ost = obs.state.lock().unwrap();
+            ost.done = true;
+            drop(ost);
+            obs.cv.notify_all();
+        }
+        let result = match core.error.lock().unwrap().clone() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        };
+        self.finished = Some(result.clone());
+        result
+    }
+
+    /// Convenience: run to completion with no graph inputs (source-
+    /// driven graphs).
+    pub fn run(&mut self, side_packets: SidePackets) -> MpResult<()> {
+        self.start_run(side_packets)?;
+        self.wait_until_done()
+    }
+
+    /// Has the run finished (any reason)?
+    pub fn is_done(&self) -> bool {
+        self.core.remaining.load(Ordering::Acquire) == 0
+            || self.core.cancelled.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for Graph {
+    fn drop(&mut self) {
+        if self.started && self.finished.is_none() {
+            self.cancel();
+            let _ = self.wait_until_done();
+        }
+    }
+}

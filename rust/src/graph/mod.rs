@@ -1,0 +1,14 @@
+//! Graph specification, validation and runtime (§3.5-3.6, §4.1).
+
+pub mod builder;
+pub mod config;
+#[allow(clippy::module_inception)]
+pub mod graph;
+pub mod subgraph;
+pub mod validation;
+
+pub use builder::{GraphBuilder, NodeBuilder};
+pub use config::{ExecutorConfig, GraphConfig, NodeConfig, ProfilerConfig, StreamBinding};
+pub use graph::{Graph, OutputStreamPoller, Poll, SidePackets};
+pub use subgraph::{expand_subgraphs, SubgraphRegistry};
+pub use validation::{plan, Plan, PlannedNode, PlannedStream, Producer, SideSource};

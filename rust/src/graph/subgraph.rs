@@ -1,0 +1,356 @@
+//! Subgraphs (§3.6): a graph defined once and included in other graphs
+//! as if it were a calculator.
+//!
+//! "When a MediaPipe graph is loaded from a GraphConfig, each subgraph
+//! node is replaced by the corresponding graph of calculators. As a
+//! result, the semantics and performance of the subgraph is identical to
+//! the corresponding graph of calculators." — we implement exactly that:
+//! expansion is purely textual/structural, done before validation, with
+//! interior names mangled for uniqueness.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use once_cell::sync::Lazy;
+
+use crate::error::{MpError, MpResult};
+use crate::graph::config::{GraphConfig, NodeConfig, StreamBinding};
+use crate::registry::CalculatorRegistry;
+
+/// Name → subgraph config. A subgraph's public interface is its graph
+/// input/output streams (and input side packets).
+#[derive(Default)]
+pub struct SubgraphRegistry {
+    map: RwLock<HashMap<String, GraphConfig>>,
+}
+
+impl SubgraphRegistry {
+    pub fn new() -> SubgraphRegistry {
+        SubgraphRegistry::default()
+    }
+
+    /// The process-global subgraph registry.
+    pub fn global() -> &'static SubgraphRegistry {
+        static GLOBAL: Lazy<SubgraphRegistry> = Lazy::new(SubgraphRegistry::new);
+        &GLOBAL
+    }
+
+    /// Register `config` under its `type` name.
+    pub fn register(&self, config: GraphConfig) -> MpResult<()> {
+        let name = config.type_name.clone().ok_or_else(|| {
+            MpError::Validation("subgraph config needs a 'type' field".into())
+        })?;
+        self.map.write().unwrap().insert(name, config);
+        Ok(())
+    }
+
+    pub fn register_as(&self, name: &str, mut config: GraphConfig) {
+        config.type_name = Some(name.to_string());
+        self.map.write().unwrap().insert(name.to_string(), config);
+    }
+
+    pub fn get(&self, name: &str) -> Option<GraphConfig> {
+        self.map.read().unwrap().get(name).cloned()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.read().unwrap().contains_key(name)
+    }
+}
+
+const MAX_DEPTH: usize = 32;
+
+/// Replace every node whose `calculator` names a registered subgraph
+/// with that subgraph's nodes (recursively).
+pub fn expand_subgraphs(
+    config: &GraphConfig,
+    subgraphs: &SubgraphRegistry,
+    registry: &CalculatorRegistry,
+) -> MpResult<GraphConfig> {
+    expand_rec(config, subgraphs, registry, 0)
+}
+
+fn expand_rec(
+    config: &GraphConfig,
+    subgraphs: &SubgraphRegistry,
+    registry: &CalculatorRegistry,
+    depth: usize,
+) -> MpResult<GraphConfig> {
+    if depth > MAX_DEPTH {
+        return Err(MpError::Validation(
+            "subgraph nesting too deep (cycle in subgraph definitions?)".into(),
+        ));
+    }
+    let mut out = config.clone();
+    out.nodes.clear();
+    for (ni, node) in config.nodes.iter().enumerate() {
+        if let Some(sub) = subgraphs.get(&node.calculator) {
+            let instance = if node.name.is_empty() {
+                format!("{}_{ni}", node.calculator)
+            } else {
+                node.name.clone()
+            };
+            let inlined = inline_one(node, &instance, &sub)?;
+            // Inner nodes may themselves be subgraphs.
+            let inner_expanded = expand_rec(
+                &GraphConfig {
+                    nodes: inlined,
+                    ..GraphConfig::default()
+                },
+                subgraphs,
+                registry,
+                depth + 1,
+            )?;
+            out.nodes.extend(inner_expanded.nodes);
+        } else {
+            // Leave real calculators as-is; unknown names fail later in
+            // plan() with a precise error.
+            out.nodes.push(node.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Inline a single subgraph node: rename interface streams to the outer
+/// bindings and mangle interior names with the instance prefix.
+fn inline_one(
+    node: &NodeConfig,
+    instance: &str,
+    sub: &GraphConfig,
+) -> MpResult<Vec<NodeConfig>> {
+    // Map subgraph-interface stream name -> outer stream name.
+    let mut rename: HashMap<String, String> = HashMap::new();
+
+    fn bind(
+        what: &str,
+        instance: &str,
+        outer: &[StreamBinding],
+        interface: &[StreamBinding],
+        rename: &mut HashMap<String, String>,
+    ) -> MpResult<()> {
+        // Match outer bindings to interface entries tag-by-tag, in order
+        // of appearance per tag.
+        let mut used = vec![false; interface.len()];
+        for ob in outer {
+            let slot = interface
+                .iter()
+                .enumerate()
+                .position(|(i, ib)| !used[i] && ib.tag == ob.tag);
+            match slot {
+                Some(i) => {
+                    used[i] = true;
+                    rename.insert(interface[i].name.clone(), ob.name.clone());
+                }
+                None => {
+                    return Err(MpError::Validation(format!(
+                        "subgraph instance '{instance}': {what} '{ob}' does not match the subgraph interface"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    bind("input", instance, &node.inputs, &sub.input_streams, &mut rename)?;
+    bind(
+        "output",
+        instance,
+        &node.outputs,
+        &sub.output_streams,
+        &mut rename,
+    )?;
+    bind(
+        "side packet",
+        instance,
+        &node.input_side,
+        &sub.input_side_packets,
+        &mut rename,
+    )?;
+
+    let mangle = |name: &str, rename: &HashMap<String, String>| -> String {
+        rename
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| format!("{instance}__{name}"))
+    };
+
+    let mut out = Vec::with_capacity(sub.nodes.len());
+    for (ii, inner) in sub.nodes.iter().enumerate() {
+        let mut n = inner.clone();
+        n.name = if inner.name.is_empty() {
+            format!("{instance}__{}_{ii}", inner.calculator)
+        } else {
+            format!("{instance}__{}", inner.name)
+        };
+        for b in n.inputs.iter_mut() {
+            b.name = mangle(&b.name, &rename);
+        }
+        n.back_edges = n
+            .back_edges
+            .iter()
+            .map(|name| mangle(name, &rename))
+            .collect();
+        for b in n.outputs.iter_mut() {
+            b.name = mangle(&b.name, &rename);
+        }
+        for b in n.input_side.iter_mut() {
+            b.name = mangle(&b.name, &rename);
+        }
+        for b in n.output_side.iter_mut() {
+            b.name = mangle(&b.name, &rename);
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> CalculatorRegistry {
+        CalculatorRegistry::new()
+    }
+
+    fn sub_twice() -> GraphConfig {
+        GraphConfig::parse(
+            r#"
+type: "TwiceSubgraph"
+input_stream: "IN:sub_in"
+output_stream: "OUT:sub_out"
+node { calculator: "Double" input_stream: "sub_in" output_stream: "mid" }
+node { calculator: "Double" input_stream: "mid" output_stream: "sub_out" }
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn expands_and_mangles() {
+        let subs = SubgraphRegistry::new();
+        subs.register(sub_twice()).unwrap();
+        let outer = GraphConfig::parse(
+            r#"
+input_stream: "x"
+output_stream: "y"
+node { calculator: "TwiceSubgraph" name: "t" input_stream: "IN:x" output_stream: "OUT:y" }
+"#,
+        )
+        .unwrap();
+        let e = expand_subgraphs(&outer, &subs, &reg()).unwrap();
+        assert_eq!(e.nodes.len(), 2);
+        // interface renamed to outer names
+        assert_eq!(e.nodes[0].inputs[0].name, "x");
+        assert_eq!(e.nodes[1].outputs[0].name, "y");
+        // interior stream mangled with the instance prefix
+        assert_eq!(e.nodes[0].outputs[0].name, "t__mid");
+        assert_eq!(e.nodes[1].inputs[0].name, "t__mid");
+        // node names mangled
+        assert!(e.nodes[0].name.starts_with("t__"));
+    }
+
+    #[test]
+    fn two_instances_dont_collide() {
+        let subs = SubgraphRegistry::new();
+        subs.register(sub_twice()).unwrap();
+        let outer = GraphConfig::parse(
+            r#"
+input_stream: "x"
+node { calculator: "TwiceSubgraph" name: "a" input_stream: "IN:x" output_stream: "OUT:y1" }
+node { calculator: "TwiceSubgraph" name: "b" input_stream: "IN:x" output_stream: "OUT:y2" }
+"#,
+        )
+        .unwrap();
+        let e = expand_subgraphs(&outer, &subs, &reg()).unwrap();
+        assert_eq!(e.nodes.len(), 4);
+        let streams: Vec<&str> = e
+            .nodes
+            .iter()
+            .flat_map(|n| n.outputs.iter().map(|b| b.name.as_str()))
+            .collect();
+        assert!(streams.contains(&"a__mid"));
+        assert!(streams.contains(&"b__mid"));
+    }
+
+    #[test]
+    fn nested_subgraphs() {
+        let subs = SubgraphRegistry::new();
+        subs.register(sub_twice()).unwrap();
+        subs.register(
+            GraphConfig::parse(
+                r#"
+type: "QuadSubgraph"
+input_stream: "IN:qin"
+output_stream: "OUT:qout"
+node { calculator: "TwiceSubgraph" input_stream: "IN:qin" output_stream: "OUT:qmid" }
+node { calculator: "TwiceSubgraph" input_stream: "IN:qmid" output_stream: "OUT:qout" }
+"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let outer = GraphConfig::parse(
+            r#"
+input_stream: "x"
+node { calculator: "QuadSubgraph" name: "q" input_stream: "IN:x" output_stream: "OUT:y" }
+"#,
+        )
+        .unwrap();
+        let e = expand_subgraphs(&outer, &subs, &reg()).unwrap();
+        assert_eq!(e.nodes.len(), 4, "{:#?}", e.nodes);
+        // End-to-end renaming held up.
+        assert_eq!(e.nodes[0].inputs[0].name, "x");
+        assert_eq!(e.nodes[3].outputs[0].name, "y");
+    }
+
+    #[test]
+    fn unmatched_binding_is_error() {
+        let subs = SubgraphRegistry::new();
+        subs.register(sub_twice()).unwrap();
+        let outer = GraphConfig::parse(
+            r#"node { calculator: "TwiceSubgraph" input_stream: "WRONG:x" output_stream: "OUT:y" }"#,
+        )
+        .unwrap();
+        assert!(expand_subgraphs(&outer, &subs, &reg()).is_err());
+    }
+
+    #[test]
+    fn registration_requires_type() {
+        let subs = SubgraphRegistry::new();
+        let err = subs.register(GraphConfig::new()).unwrap_err();
+        assert!(err.to_string().contains("type"));
+    }
+
+    #[test]
+    fn back_edges_survive_inlining() {
+        let subs = SubgraphRegistry::new();
+        subs.register(
+            GraphConfig::parse(
+                r#"
+type: "LoopSub"
+input_stream: "IN:lin"
+output_stream: "OUT:lout"
+node {
+  calculator: "Limiter"
+  input_stream: "lin"
+  back_edge_input_stream: "lout"
+  output_stream: "gated"
+}
+node { calculator: "Work" input_stream: "gated" output_stream: "lout" }
+"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let outer = GraphConfig::parse(
+            r#"
+input_stream: "x"
+node { calculator: "LoopSub" name: "l" input_stream: "IN:x" output_stream: "OUT:y" }
+"#,
+        )
+        .unwrap();
+        let e = expand_subgraphs(&outer, &subs, &reg()).unwrap();
+        // back edge renamed to the outer stream name
+        assert_eq!(e.nodes[0].back_edges, vec!["y".to_string()]);
+    }
+}

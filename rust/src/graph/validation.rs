@@ -1,0 +1,734 @@
+//! Graph validation and execution planning (§3.5).
+//!
+//! When a graph is initialized the following constraints are checked:
+//! 1. each stream / side packet is produced by exactly one source;
+//! 2. connected stream types are compatible;
+//! 3. each node's connections are compatible with its contract.
+//!
+//! We additionally check acyclicity (cycles must be closed through
+//! inputs explicitly declared as back edges, as used by the Fig. 3
+//! flow-limiter loopback) and that graph outputs exist. The result of
+//! planning is a [`Plan`]: a fully resolved, index-based description the
+//! runtime executes without further name lookups.
+
+use std::collections::HashMap;
+
+use crate::calculator::Contract;
+use crate::error::{MpError, MpResult};
+use crate::graph::config::{GraphConfig, NodeConfig};
+use crate::packet::PacketType;
+use crate::registry::CalculatorRegistry;
+use crate::scheduler::layout_priorities;
+
+/// Who produces a stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Producer {
+    /// `(node index, output port index)`.
+    Node(usize, usize),
+    /// Fed by the application through a graph input stream.
+    GraphInput,
+}
+
+/// One fully resolved stream.
+#[derive(Clone, Debug)]
+pub struct PlannedStream {
+    pub name: String,
+    pub producer: Producer,
+    /// `(node index, input port index)` consumers.
+    pub consumers: Vec<(usize, usize)>,
+    /// Is this stream observable as a graph output?
+    pub is_graph_output: bool,
+    pub packet_type: PacketType,
+}
+
+/// Where a node's side-input port gets its packet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SideSource {
+    /// Application-provided side packet (by name).
+    App(String),
+    /// Produced by another node's output side port.
+    Node(usize, usize),
+    /// Optional and unconnected.
+    Absent,
+}
+
+/// One fully resolved node.
+#[derive(Clone, Debug)]
+pub struct PlannedNode {
+    pub config: NodeConfig,
+    pub contract: Contract,
+    /// Stream index feeding each contract input port.
+    pub in_streams: Vec<usize>,
+    /// True for ports whose stream closes a cycle (declared back edge).
+    pub in_is_back_edge: Vec<bool>,
+    /// Stream index for each contract output port (usize::MAX when the
+    /// optional port is unconnected).
+    pub out_streams: Vec<usize>,
+    pub side_sources: Vec<SideSource>,
+    /// Output-side-packet names per contract side-output port.
+    pub side_output_names: Vec<String>,
+    /// Scheduler queue index (§4.1.1 static assignment).
+    pub queue: usize,
+    /// Layout priority (§4.1.1).
+    pub priority: u32,
+    /// No input streams => source node.
+    pub is_source: bool,
+}
+
+/// The resolved execution plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub nodes: Vec<PlannedNode>,
+    pub streams: Vec<PlannedStream>,
+    /// Graph input stream name -> stream index.
+    pub graph_inputs: HashMap<String, usize>,
+    /// Graph output stream names in config order -> stream index.
+    pub graph_outputs: Vec<(String, usize)>,
+    /// Executor queue names in index order (index 0 = default).
+    pub queue_names: Vec<String>,
+    /// Threads per queue (0 = system default).
+    pub queue_threads: Vec<usize>,
+    /// Per-input-stream queue limit before back-pressure (None = off).
+    pub max_queue_size: Option<usize>,
+    /// Names of app-supplied side packets.
+    pub input_side_packets: Vec<String>,
+}
+
+/// Build and validate the plan. `config` must already have subgraphs
+/// expanded (see [`crate::graph::subgraph`]).
+pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Plan> {
+    // --- resolve contracts -------------------------------------------------
+    let mut contracts = Vec::with_capacity(config.nodes.len());
+    for node in &config.nodes {
+        let factory = registry.get(&node.calculator)?;
+        contracts.push(factory.contract(node)?);
+    }
+
+    // --- name the node instances ------------------------------------------
+    let mut node_names = Vec::with_capacity(config.nodes.len());
+    {
+        let mut seen = HashMap::new();
+        for (i, node) in config.nodes.iter().enumerate() {
+            let base = if node.name.is_empty() {
+                format!("{}_{i}", node.calculator)
+            } else {
+                node.name.clone()
+            };
+            if seen.insert(base.clone(), i).is_some() {
+                return Err(MpError::Validation(format!(
+                    "duplicate node name '{base}'"
+                )));
+            }
+            node_names.push(base);
+        }
+    }
+
+    // --- match config bindings to contract ports ---------------------------
+    // For each node, contract input port k with tag T binds to the k-th
+    // config entry carrying tag T (same for outputs/side packets).
+    fn match_ports(
+        kind: &str,
+        node_name: &str,
+        specs: &[(String, bool)], // (tag, optional)
+        bindings: &[crate::graph::config::StreamBinding],
+    ) -> MpResult<Vec<Option<usize>>> {
+        let mut used = vec![false; bindings.len()];
+        let mut out = Vec::with_capacity(specs.len());
+        for (tag, optional) in specs {
+            let found = bindings
+                .iter()
+                .enumerate()
+                .position(|(bi, b)| !used[bi] && &b.tag == tag);
+            match found {
+                Some(bi) => {
+                    used[bi] = true;
+                    out.push(Some(bi));
+                }
+                None if *optional => out.push(None),
+                None => {
+                    return Err(MpError::Validation(format!(
+                        "node '{node_name}': required {kind} port '{}' not connected",
+                        if tag.is_empty() { "<untagged>" } else { tag }
+                    )))
+                }
+            }
+        }
+        if let Some(bi) = (0..bindings.len()).find(|&bi| !used[bi]) {
+            return Err(MpError::Validation(format!(
+                "node '{node_name}': {kind} '{}' does not match any contract port",
+                bindings[bi]
+            )));
+        }
+        Ok(out)
+    }
+
+    fn port_tags(specs: &[crate::calculator::PortSpec]) -> Vec<(String, bool)> {
+        specs.iter().map(|p| (p.tag.clone(), p.optional)).collect()
+    }
+
+    fn side_tags(specs: &[crate::calculator::SidePortSpec]) -> Vec<(String, bool)> {
+        specs.iter().map(|p| (p.tag.clone(), p.optional)).collect()
+    }
+
+    // --- build the stream table --------------------------------------------
+    let mut stream_index: HashMap<String, usize> = HashMap::new();
+    let mut streams: Vec<PlannedStream> = Vec::new();
+    let mut intern = |name: &str, streams: &mut Vec<PlannedStream>| -> usize {
+        *stream_index.entry(name.to_string()).or_insert_with(|| {
+            streams.push(PlannedStream {
+                name: name.to_string(),
+                producer: Producer::GraphInput, // provisional
+                consumers: Vec::new(),
+                is_graph_output: false,
+                packet_type: PacketType::Any,
+            });
+            streams.len() - 1
+        })
+    };
+
+    let mut produced: HashMap<usize, String> = HashMap::new(); // stream -> producer description
+    let mut graph_inputs = HashMap::new();
+    for b in &config.input_streams {
+        let si = intern(&b.name, &mut streams);
+        if produced.insert(si, "graph input".into()).is_some() {
+            return Err(MpError::Validation(format!(
+                "stream '{}' produced more than once (check 1)",
+                b.name
+            )));
+        }
+        streams[si].producer = Producer::GraphInput;
+        graph_inputs.insert(b.name.clone(), si);
+    }
+
+    // Outputs first so every stream has a unique producer (check 1).
+    let mut node_out_streams: Vec<Vec<usize>> = Vec::new();
+    for (ni, node) in config.nodes.iter().enumerate() {
+        let slots = match_ports("output", &node_names[ni], &port_tags(&contracts[ni].outputs), &node.outputs)?;
+        let mut outs = Vec::with_capacity(slots.len());
+        for (port, slot) in slots.iter().enumerate() {
+            match slot {
+                Some(bi) => {
+                    let name = &node.outputs[*bi].name;
+                    let si = intern(name, &mut streams);
+                    if let Some(prev) = produced.insert(si, node_names[ni].clone()) {
+                        return Err(MpError::Validation(format!(
+                            "stream '{name}' produced by both '{prev}' and '{}' (check 1)",
+                            node_names[ni]
+                        )));
+                    }
+                    streams[si].producer = Producer::Node(ni, port);
+                    // Record the declared packet type of the producer port.
+                    streams[si].packet_type = contracts[ni].outputs[port].packet_type;
+                    outs.push(si);
+                }
+                None => outs.push(usize::MAX),
+            }
+        }
+        node_out_streams.push(outs);
+    }
+
+    // Consumers + type checks (checks 2 and 3).
+    let mut node_in_streams: Vec<Vec<usize>> = Vec::new();
+    let mut node_back_edges: Vec<Vec<bool>> = Vec::new();
+    for (ni, node) in config.nodes.iter().enumerate() {
+        let slots = match_ports("input", &node_names[ni], &port_tags(&contracts[ni].inputs), &node.inputs)?;
+        let mut ins = Vec::with_capacity(slots.len());
+        let mut backs = Vec::with_capacity(slots.len());
+        for (port, slot) in slots.iter().enumerate() {
+            let bi = slot.ok_or_else(|| {
+                MpError::Validation(format!(
+                    "node '{}': optional input ports must still be connected in this version",
+                    node_names[ni]
+                ))
+            })?;
+            let binding = &node.inputs[bi];
+            let si = *stream_index.get(&binding.name).ok_or_else(|| {
+                MpError::Validation(format!(
+                    "node '{}' consumes stream '{}' which nothing produces (check 1)",
+                    node_names[ni], binding.name
+                ))
+            })?;
+            // Type compatibility (check 2): producer port type vs
+            // consumer port type.
+            let want = contracts[ni].inputs[port].packet_type;
+            if !streams[si].packet_type.compatible(&want) {
+                return Err(MpError::Validation(format!(
+                    "stream '{}': producer type {} incompatible with input type {} of node '{}' (check 2)",
+                    binding.name,
+                    streams[si].packet_type.name(),
+                    want.name(),
+                    node_names[ni]
+                )));
+            }
+            streams[si].consumers.push((ni, port));
+            ins.push(si);
+            backs.push(node.back_edges.contains(&binding.name));
+        }
+        node_in_streams.push(ins);
+        node_back_edges.push(backs);
+    }
+
+    // Graph outputs must exist.
+    let mut graph_outputs = Vec::new();
+    for b in &config.output_streams {
+        let si = *stream_index.get(&b.name).ok_or_else(|| {
+            MpError::Validation(format!(
+                "graph output stream '{}' is not produced by any node",
+                b.name
+            ))
+        })?;
+        streams[si].is_graph_output = true;
+        graph_outputs.push((b.name.clone(), si));
+    }
+
+    // --- side packets -------------------------------------------------------
+    let app_side: Vec<String> = config
+        .input_side_packets
+        .iter()
+        .map(|b| b.name.clone())
+        .collect();
+    // Producer map for node side outputs.
+    let mut side_produced: HashMap<String, (usize, usize)> = HashMap::new();
+    let mut side_output_names: Vec<Vec<String>> = Vec::new();
+    for (ni, node) in config.nodes.iter().enumerate() {
+        let slots = match_ports(
+            "output side packet",
+            &node_names[ni],
+            &side_tags(&contracts[ni].output_side),
+            &node.output_side,
+        )?;
+        let mut names = Vec::new();
+        for (port, slot) in slots.iter().enumerate() {
+            let name = match slot {
+                Some(bi) => node.output_side[*bi].name.clone(),
+                None => String::new(),
+            };
+            if !name.is_empty() {
+                if app_side.contains(&name) {
+                    return Err(MpError::Validation(format!(
+                        "side packet '{name}' produced by both the app and node '{}' (check 1)",
+                        node_names[ni]
+                    )));
+                }
+                if let Some((prev, _)) = side_produced.insert(name.clone(), (ni, port)) {
+                    return Err(MpError::Validation(format!(
+                        "side packet '{name}' produced by two nodes ('{}' and '{}')",
+                        node_names[prev].clone(),
+                        node_names[ni]
+                    )));
+                }
+            }
+            names.push(name);
+        }
+        side_output_names.push(names);
+    }
+    let mut side_sources: Vec<Vec<SideSource>> = Vec::new();
+    for (ni, node) in config.nodes.iter().enumerate() {
+        let slots = match_ports(
+            "input side packet",
+            &node_names[ni],
+            &side_tags(&contracts[ni].input_side),
+            &node.input_side,
+        )?;
+        let mut srcs = Vec::new();
+        for slot in &slots {
+            match slot {
+                Some(bi) => {
+                    let name = &node.input_side[*bi].name;
+                    if let Some(&(pn, pp)) = side_produced.get(name) {
+                        srcs.push(SideSource::Node(pn, pp));
+                    } else if app_side.contains(name) {
+                        srcs.push(SideSource::App(name.clone()));
+                    } else {
+                        return Err(MpError::Validation(format!(
+                            "node '{}' needs side packet '{name}' which nothing provides",
+                            node_names[ni]
+                        )));
+                    }
+                }
+                None => srcs.push(SideSource::Absent),
+            }
+        }
+        side_sources.push(srcs);
+    }
+
+    // --- acyclicity (excluding declared back edges) -------------------------
+    let n = config.nodes.len();
+    let mut consumers_adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (ni, ins) in node_in_streams.iter().enumerate() {
+        for (port, &si) in ins.iter().enumerate() {
+            if node_back_edges[ni][port] {
+                continue;
+            }
+            if let Producer::Node(pn, _) = streams[si].producer {
+                consumers_adj[pn].push(ni);
+            }
+        }
+    }
+    {
+        // Kahn's algorithm; leftover nodes => undeclared cycle.
+        let mut indeg = vec![0usize; n];
+        for cs in &consumers_adj {
+            for &c in cs {
+                indeg[c] += 1;
+            }
+        }
+        let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = stack.pop() {
+            seen += 1;
+            for &c in &consumers_adj[u] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    stack.push(c);
+                }
+            }
+        }
+        if seen != n {
+            let cyclic: Vec<&String> = (0..n)
+                .filter(|&i| indeg[i] > 0)
+                .map(|i| &node_names[i])
+                .collect();
+            return Err(MpError::Validation(format!(
+                "cycle without declared back edge involving nodes {cyclic:?}"
+            )));
+        }
+    }
+
+    // --- executors / queues -------------------------------------------------
+    let mut queue_names = vec!["".to_string()];
+    let mut queue_threads = vec![config.num_threads.unwrap_or(0)];
+    for e in &config.executors {
+        if e.name.is_empty() || queue_names.contains(&e.name) {
+            return Err(MpError::Validation(format!(
+                "bad or duplicate executor name '{}'",
+                e.name
+            )));
+        }
+        queue_names.push(e.name.clone());
+        queue_threads.push(e.num_threads);
+    }
+    let mut node_queue = Vec::with_capacity(n);
+    for node in &config.nodes {
+        match &node.executor {
+            None => node_queue.push(0usize),
+            Some(name) => match queue_names.iter().position(|q| q == name) {
+                Some(qi) => node_queue.push(qi),
+                None => {
+                    return Err(MpError::Validation(format!(
+                        "node executor '{name}' is not declared"
+                    )))
+                }
+            },
+        }
+    }
+
+    // --- priorities (§4.1.1) -------------------------------------------------
+    let is_source: Vec<bool> = node_in_streams.iter().map(|ins| ins.is_empty()).collect();
+    let priorities = if config.scheduler_fifo {
+        vec![1u32; n] // ablation: flat priorities = FIFO dispatch
+    } else {
+        layout_priorities(&consumers_adj, &is_source)
+    };
+
+    // --- assemble -------------------------------------------------------------
+    let mut nodes = Vec::with_capacity(n);
+    for ni in 0..n {
+        let mut cfg = config.nodes[ni].clone();
+        cfg.name = node_names[ni].clone();
+        nodes.push(PlannedNode {
+            contract: contracts[ni].clone(),
+            in_streams: node_in_streams[ni].clone(),
+            in_is_back_edge: node_back_edges[ni].clone(),
+            out_streams: node_out_streams[ni].clone(),
+            side_sources: side_sources[ni].clone(),
+            side_output_names: side_output_names[ni].clone(),
+            queue: node_queue[ni],
+            priority: priorities[ni],
+            is_source: is_source[ni],
+            config: cfg,
+        });
+    }
+
+    Ok(Plan {
+        nodes,
+        streams,
+        graph_inputs,
+        graph_outputs,
+        queue_names,
+        queue_threads,
+        max_queue_size: config.max_queue_size,
+        input_side_packets: app_side,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calculator::{Calculator, CalculatorContext, ProcessOutcome};
+    use crate::error::MpResult;
+
+    struct Nop;
+    impl Calculator for Nop {
+        fn process(&mut self, _: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+
+    fn test_registry() -> CalculatorRegistry {
+        let r = CalculatorRegistry::new();
+        r.register_fn(
+            "Pass",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any))
+            },
+            |_| Ok(Box::new(Nop)),
+        );
+        r.register_fn(
+            "Src",
+            |_| Ok(Contract::new().output("", PacketType::Any)),
+            |_| Ok(Box::new(Nop)),
+        );
+        r.register_fn(
+            "SinkI32",
+            |_| Ok(Contract::new().input("", PacketType::of::<i32>())),
+            |_| Ok(Box::new(Nop)),
+        );
+        r.register_fn(
+            "SrcI32",
+            |_| Ok(Contract::new().output("", PacketType::of::<i32>())),
+            |_| Ok(Box::new(Nop)),
+        );
+        r.register_fn(
+            "SrcF64",
+            |_| Ok(Contract::new().output("", PacketType::of::<f64>())),
+            |_| Ok(Box::new(Nop)),
+        );
+        r
+    }
+
+    fn parse_plan(text: &str) -> MpResult<Plan> {
+        let cfg = GraphConfig::parse(text).unwrap();
+        plan(&cfg, &test_registry())
+    }
+
+    #[test]
+    fn simple_chain_plans() {
+        let p = parse_plan(
+            r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "Pass" input_stream: "in" output_stream: "mid" }
+node { calculator: "Pass" input_stream: "mid" output_stream: "out" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.nodes.len(), 2);
+        assert_eq!(p.streams.len(), 3);
+        assert_eq!(p.graph_outputs.len(), 1);
+        assert!(!p.nodes[0].is_source); // fed by graph input
+        assert_eq!(p.streams[p.graph_inputs["in"]].consumers.len(), 1);
+    }
+
+    #[test]
+    fn check1_duplicate_producer() {
+        let err = parse_plan(
+            r#"
+node { calculator: "Src" output_stream: "x" }
+node { calculator: "Src" output_stream: "x" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("check 1"), "{err}");
+    }
+
+    #[test]
+    fn check1_missing_producer() {
+        let err = parse_plan(r#"node { calculator: "Pass" input_stream: "ghost" output_stream: "y" }"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn check2_type_mismatch() {
+        let err = parse_plan(
+            r#"
+node { calculator: "SrcF64" output_stream: "x" }
+node { calculator: "SinkI32" input_stream: "x" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("check 2"), "{err}");
+    }
+
+    #[test]
+    fn check2_matching_types_ok() {
+        parse_plan(
+            r#"
+node { calculator: "SrcI32" output_stream: "x" }
+node { calculator: "SinkI32" input_stream: "x" }
+"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn check3_contract_arity() {
+        // Pass wants exactly one input; giving two violates its contract.
+        let err = parse_plan(
+            r#"
+node { calculator: "Src" output_stream: "a" }
+node { calculator: "Src" output_stream: "b" }
+node { calculator: "Pass" input_stream: "a" input_stream: "b" output_stream: "c" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_port() {
+        let err = parse_plan(r#"node { calculator: "Pass" output_stream: "c" }"#).unwrap_err();
+        assert!(err.to_string().contains("not connected"), "{err}");
+    }
+
+    #[test]
+    fn undeclared_cycle_rejected() {
+        let err = parse_plan(
+            r#"
+node { calculator: "Pass" input_stream: "b" output_stream: "a" }
+node { calculator: "Pass" input_stream: "a" output_stream: "b" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn declared_back_edge_allows_cycle() {
+        parse_plan(
+            r#"
+node { calculator: "Pass" back_edge_input_stream: "b" output_stream: "a" }
+node { calculator: "Pass" input_stream: "a" output_stream: "b" }
+"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_calculator() {
+        assert!(matches!(
+            parse_plan(r#"node { calculator: "Nope" }"#),
+            Err(MpError::UnknownCalculator(_))
+        ));
+    }
+
+    #[test]
+    fn graph_output_must_exist() {
+        let err = parse_plan(
+            r#"
+output_stream: "nope"
+node { calculator: "Src" output_stream: "x" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn executor_assignment() {
+        let p = parse_plan(
+            r#"
+executor { name: "infer" num_threads: 1 }
+node { calculator: "Src" output_stream: "x" executor: "infer" }
+node { calculator: "SinkI32" input_stream: "x" }
+"#,
+        );
+        // Src output is Any-typed; SinkI32 accepts via Any-compat. Check queue.
+        let p = p.unwrap();
+        assert_eq!(p.queue_names, vec!["".to_string(), "infer".to_string()]);
+        assert_eq!(p.nodes[0].queue, 1);
+        assert_eq!(p.nodes[1].queue, 0);
+    }
+
+    #[test]
+    fn undeclared_executor_rejected() {
+        let err = parse_plan(r#"node { calculator: "Src" output_stream: "x" executor: "ghost" }"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn side_packet_resolution_app() {
+        let r = test_registry();
+        r.register_fn(
+            "NeedsSide",
+            |_| {
+                Ok(Contract::new()
+                    .output("", PacketType::Any)
+                    .side_input("MODEL", PacketType::Any))
+            },
+            |_| Ok(Box::new(Nop)),
+        );
+        let cfg = GraphConfig::parse(
+            r#"
+input_side_packet: "model_path"
+node { calculator: "NeedsSide" output_stream: "x" input_side_packet: "MODEL:model_path" }
+"#,
+        )
+        .unwrap();
+        let p = plan(&cfg, &r).unwrap();
+        assert_eq!(
+            p.nodes[0].side_sources[0],
+            SideSource::App("model_path".into())
+        );
+    }
+
+    #[test]
+    fn side_packet_missing_provider() {
+        let r = test_registry();
+        r.register_fn(
+            "NeedsSide",
+            |_| {
+                Ok(Contract::new()
+                    .output("", PacketType::Any)
+                    .side_input("MODEL", PacketType::Any))
+            },
+            |_| Ok(Box::new(Nop)),
+        );
+        let cfg = GraphConfig::parse(
+            r#"node { calculator: "NeedsSide" output_stream: "x" input_side_packet: "MODEL:ghost" }"#,
+        )
+        .unwrap();
+        assert!(plan(&cfg, &r).is_err());
+    }
+
+    #[test]
+    fn duplicate_node_names_rejected() {
+        let err = parse_plan(
+            r#"
+node { calculator: "Src" name: "n" output_stream: "a" }
+node { calculator: "Src" name: "n" output_stream: "b" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate node name"), "{err}");
+    }
+
+    #[test]
+    fn source_detection_and_priorities() {
+        let p = parse_plan(
+            r#"
+node { calculator: "Src" output_stream: "a" }
+node { calculator: "Pass" input_stream: "a" output_stream: "b" }
+node { calculator: "Pass" input_stream: "b" output_stream: "c" }
+"#,
+        )
+        .unwrap();
+        assert!(p.nodes[0].is_source);
+        assert_eq!(p.nodes[0].priority, 0);
+        assert!(p.nodes[2].priority > p.nodes[1].priority);
+    }
+}

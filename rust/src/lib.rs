@@ -1,0 +1,72 @@
+//! # mediapipe-rs
+//!
+//! A reproduction of **"MediaPipe: A Framework for Building Perception
+//! Pipelines"** (Lugaresi et al., Google Research, 2019) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the framework itself: timestamped
+//!   immutable [`packet::Packet`]s flowing over streams between
+//!   [`calculator::Calculator`] nodes, a decentralized priority
+//!   [`scheduler`], deterministic [`policies`] (settled-timestamp input
+//!   sets), flow control, [`graph::GraphConfig`] with subgraphs, a
+//!   mutex-free [`tracer`], and a [`visualizer`] — plus the calculator
+//!   library and a serving front-end.
+//! * **Layer 2 (python/compile, build-time)** — the perception models
+//!   (object detector, face-landmark, segmenter) written in JAX and
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels
+//!   for the model hot-spots, verified against pure-jnp oracles.
+//!
+//! At run time the [`runtime`] module loads the HLO artifacts through
+//! the PJRT C API (`xla` crate) and inference calculators execute them
+//! — Python is never on the request path.
+//!
+//! ```no_run
+//! use mediapipe::prelude::*;
+//!
+//! let config = GraphConfig::parse(r#"
+//!     input_stream: "in"
+//!     output_stream: "out"
+//!     node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+//! "#).unwrap();
+//! let mut graph = Graph::new(&config).unwrap();
+//! graph.start_run(Default::default()).unwrap();
+//! graph.add_packet("in", Packet::new(42i64, Timestamp::new(0))).unwrap();
+//! graph.close_all_inputs().unwrap();
+//! graph.wait_until_done().unwrap();
+//! ```
+
+pub mod benchutil;
+pub mod calculator;
+pub mod calculators;
+pub mod error;
+pub mod gpusim;
+pub mod graph;
+pub mod metrics;
+pub mod packet;
+pub mod perception;
+pub mod policies;
+pub mod registry;
+pub mod runtime;
+pub mod scheduler;
+pub mod serving;
+pub mod stream;
+pub mod timestamp;
+pub mod tracer;
+pub mod visualizer;
+
+/// Commonly used types, one import away.
+pub mod prelude {
+    pub use crate::calculator::{
+        Calculator, CalculatorContext, Contract, InputPolicyKind, Options, OptionValue,
+        ProcessOutcome,
+    };
+    pub use crate::error::{MpError, MpResult};
+    pub use crate::graph::{
+        Graph, GraphBuilder, GraphConfig, OutputStreamPoller, Poll, SidePackets, SubgraphRegistry,
+    };
+    pub use crate::packet::{Packet, PacketType};
+    pub use crate::registry::CalculatorRegistry;
+    pub use crate::timestamp::{Timestamp, TimestampBound};
+    pub use crate::tracer::{export::TraceFile, EventType, Tracer};
+}

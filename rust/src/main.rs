@@ -1,0 +1,271 @@
+//! The `mediapipe` CLI: run graphs from pbtxt configs, validate them,
+//! analyze and visualize traces, serve the detector, list calculators.
+//!
+//! ```text
+//! mediapipe run graphs/object_detection.pbtxt --trace /tmp/t.tsv
+//! mediapipe validate graphs/face_landmark.pbtxt
+//! mediapipe trace /tmp/t.tsv
+//! mediapipe visualize /tmp/t.tsv -o /tmp/t.html
+//! mediapipe serve --requests 1000 --max-batch 8
+//! mediapipe list-calculators
+//! ```
+
+use std::time::Duration;
+
+use mediapipe::prelude::*;
+use mediapipe::runtime::shared_engine;
+use mediapipe::serving::{PipelineServer, ServerConfig};
+use mediapipe::visualizer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        Some("visualize") => cmd_visualize(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("list-calculators") => cmd_list(),
+        _ => {
+            eprintln!(
+                "usage: mediapipe <run|validate|trace|visualize|serve|list-calculators> ..."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+/// Provide standard side packets any graph may reference: the inference
+/// engine (when artifacts are built) under the side-packet name
+/// "engine".
+fn standard_side_packets(config: &GraphConfig) -> MpResult<SidePackets> {
+    let mut side = SidePackets::new();
+    for sp in &config.input_side_packets {
+        if sp.name == "engine" {
+            let dir = std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            let engine = shared_engine(&dir)?;
+            side.insert("engine".into(), Packet::new(engine, Timestamp::UNSET));
+        }
+    }
+    Ok(side)
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: mediapipe run <graph.pbtxt> [--trace out.tsv] [--html out.html]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let run = || -> MpResult<()> {
+        let mut config = GraphConfig::parse(&text)?;
+        if args.iter().any(|a| a == "--trace" || a == "--html") && !config.profiler.enabled {
+            config.profiler.enabled = true;
+            config.profiler.buffer_size = 1 << 18;
+        }
+        let mut graph = Graph::new(&config)?;
+        let side = standard_side_packets(&config)?;
+        // Attach counters to every graph output.
+        let mut counters = Vec::new();
+        let outputs: Vec<String> = graph
+            .plan()
+            .graph_outputs
+            .iter()
+            .map(|(n, _)| n.clone())
+            .collect();
+        for name in outputs {
+            let c = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let c2 = std::sync::Arc::clone(&c);
+            graph.observe_output(&name, move |_p| {
+                c2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            })?;
+            counters.push((name, c));
+        }
+        let t0 = std::time::Instant::now();
+        graph.start_run(side)?;
+        graph.wait_until_done()?;
+        let dt = t0.elapsed();
+        println!("graph finished in {dt:?}");
+        for (name, c) in counters {
+            let n = c.load(std::sync::atomic::Ordering::Relaxed);
+            println!(
+                "output '{name}': {n} packets ({:.1}/s)",
+                n as f64 / dt.as_secs_f64()
+            );
+        }
+        if let Some(tp) = flag_value(args, "--trace") {
+            let tf = TraceFile::capture(graph.tracer());
+            tf.save_tsv(tp)?;
+            println!("trace written to {tp} ({} events)", tf.events.len());
+        }
+        if let Some(hp) = flag_value(args, "--html") {
+            let tf = TraceFile::capture(graph.tracer());
+            visualizer::save_html(&tf, hp)?;
+            println!("visualization written to {hp}");
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_validate(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: mediapipe validate <graph.pbtxt>");
+        return 2;
+    };
+    let run = || -> MpResult<()> {
+        let text = std::fs::read_to_string(path)?;
+        let config = GraphConfig::parse(&text)?;
+        let expanded = mediapipe::graph::expand_subgraphs(
+            &config,
+            SubgraphRegistry::global(),
+            CalculatorRegistry::global(),
+        )?;
+        let plan = mediapipe::graph::plan(&expanded, CalculatorRegistry::global())?;
+        println!(
+            "OK: {} nodes, {} streams",
+            plan.nodes.len(),
+            plan.streams.len()
+        );
+        for n in &plan.nodes {
+            println!(
+                "  [{}] {} (queue '{}', priority {}{})",
+                n.config.name,
+                n.config.calculator,
+                plan.queue_names[n.queue],
+                n.priority,
+                if n.is_source { ", source" } else { "" }
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("INVALID: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_trace(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: mediapipe trace <trace.tsv>");
+        return 2;
+    };
+    match TraceFile::load_tsv(path) {
+        Ok(tf) => {
+            let mut prof = mediapipe::tracer::profile::analyze(&tf);
+            print!("{}", mediapipe::tracer::profile::report(&mut prof));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_visualize(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: mediapipe visualize <trace.tsv> [-o out.html]");
+        return 2;
+    };
+    match TraceFile::load_tsv(path) {
+        Ok(tf) => {
+            print!("{}", visualizer::timeline_ascii(&tf, 100));
+            print!("{}", visualizer::graph_ascii(&tf));
+            if let Some(out) = flag_value(args, "-o") {
+                if let Err(e) = visualizer::save_html(&tf, out) {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+                println!("wrote {out}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let requests: usize = flag_value(args, "--requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    let max_batch: usize = flag_value(args, "--max-batch")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let clients: usize = flag_value(args, "--clients")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let run = || -> MpResult<()> {
+        let server = PipelineServer::start(ServerConfig {
+            artifact_dir: std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        })?;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let h = server.handle();
+            let per = requests / clients.max(1);
+            handles.push(std::thread::spawn(move || {
+                let mut world =
+                    mediapipe::perception::SyntheticWorld::new(32, 32, 2, 100 + c as u64)
+                        .with_object_sizes(0.12, 0.2);
+                for _ in 0..per {
+                    world.step();
+                    let frame = world.render();
+                    let _ = h.detect(&frame);
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let dt = t0.elapsed();
+        println!("{}", server.metrics().report());
+        println!(
+            "throughput: {:.1} req/s over {dt:?}",
+            server.metrics().requests.get() as f64 / dt.as_secs_f64()
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    for name in CalculatorRegistry::global().names() {
+        println!("{name}");
+    }
+    0
+}

@@ -1,0 +1,119 @@
+//! Lightweight metrics used by the serving layer and the bench harness:
+//! counters and latency recorders with percentile queries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency sample store with percentile queries. Keeps all samples (µs)
+/// — fine for bench-scale runs; `snapshot` sorts a copy.
+#[derive(Default, Debug)]
+pub struct LatencyRecorder {
+    samples_us: Mutex<Vec<u64>>,
+}
+
+/// Immutable percentile summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencyRecorder {
+    pub fn record(&self, d: Duration) {
+        self.samples_us.lock().unwrap().push(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.samples_us.lock().unwrap().push(us);
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let mut v = self.samples_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return LatencySummary::default();
+        }
+        v.sort_unstable();
+        let n = v.len();
+        let q = |p: f64| v[(((n - 1) as f64) * p).round() as usize];
+        LatencySummary {
+            count: n,
+            mean_us: v.iter().sum::<u64>() as f64 / n as f64,
+            p50_us: q(0.50),
+            p95_us: q(0.95),
+            p99_us: q(0.99),
+            max_us: v[n - 1],
+        }
+    }
+
+    pub fn clear(&self) {
+        self.samples_us.lock().unwrap().clear();
+    }
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.0}µs p50={}µs p95={}µs p99={}µs max={}µs",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us, self.max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let r = LatencyRecorder::default();
+        for us in 1..=100u64 {
+            r.record_us(us);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 100);
+        // nearest-rank with round-half-up: upper median for even counts
+        assert_eq!(s.p50_us, 51);
+        assert_eq!(s.p95_us, 95);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.summary(), LatencySummary::default());
+    }
+}

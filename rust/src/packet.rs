@@ -1,0 +1,232 @@
+//! Packets: the basic data unit (§3.1).
+//!
+//! A packet is a numeric timestamp plus a shared pointer to an
+//! **immutable** payload of any type. Packets are value classes: copying
+//! is cheap (an `Arc` bump) and each copy shares ownership of the payload
+//! while carrying its own timestamp. Immutability of payloads + the
+//! at-most-one-thread-per-calculator rule is what lets calculator authors
+//! avoid multithreaded-programming expertise (§3).
+
+use std::any::{Any, TypeId};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{MpError, MpResult};
+use crate::timestamp::Timestamp;
+
+/// Monotonic id generator so the tracer can follow an individual payload
+/// across the graph (§5.1: `packet_data_id`).
+static NEXT_DATA_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Payload {
+    data_id: u64,
+    type_name: &'static str,
+    value: Box<dyn Any + Send + Sync>,
+}
+
+/// A timestamped, immutable, cheaply-copyable unit of data.
+#[derive(Clone)]
+pub struct Packet {
+    payload: Option<Arc<Payload>>,
+    timestamp: Timestamp,
+}
+
+impl Packet {
+    /// A packet with a payload of type `T` at timestamp `ts`.
+    pub fn new<T: Any + Send + Sync>(value: T, ts: Timestamp) -> Packet {
+        Packet {
+            payload: Some(Arc::new(Payload {
+                data_id: NEXT_DATA_ID.fetch_add(1, Ordering::Relaxed),
+                type_name: std::any::type_name::<T>(),
+                value: Box::new(value),
+            })),
+            timestamp: ts,
+        }
+    }
+
+    /// A payload-less packet (used for side-packet defaults and as the
+    /// "no packet on this stream in the input set" marker).
+    pub fn empty() -> Packet {
+        Packet {
+            payload: None,
+            timestamp: Timestamp::UNSET,
+        }
+    }
+
+    /// Same payload (shared), different timestamp — "each copy has its
+    /// own timestamp" (§3.1).
+    pub fn at(&self, ts: Timestamp) -> Packet {
+        Packet {
+            payload: self.payload.clone(),
+            timestamp: ts,
+        }
+    }
+
+    /// The packet's timestamp.
+    pub fn timestamp(&self) -> Timestamp {
+        self.timestamp
+    }
+
+    /// True if the packet has no payload.
+    pub fn is_empty(&self) -> bool {
+        self.payload.is_none()
+    }
+
+    /// Tracer id of the shared payload (0 for empty packets).
+    pub fn data_id(&self) -> u64 {
+        self.payload.as_ref().map_or(0, |p| p.data_id)
+    }
+
+    /// The payload's registered type name (diagnostics / contracts).
+    pub fn type_name(&self) -> &'static str {
+        self.payload.as_ref().map_or("<empty>", |p| p.type_name)
+    }
+
+    /// `TypeId` of the payload, if any.
+    pub fn type_id(&self) -> Option<TypeId> {
+        self.payload.as_ref().map(|p| p.value.as_ref().type_id())
+    }
+
+    /// Borrow the payload as `&T`, failing with a descriptive error on
+    /// type mismatch or empty packet.
+    pub fn get<T: Any + Send + Sync>(&self) -> MpResult<&T> {
+        let p = self.payload.as_ref().ok_or(MpError::EmptyPacket)?;
+        p.value.downcast_ref::<T>().ok_or(MpError::PacketTypeMismatch {
+            expected: std::any::type_name::<T>(),
+            actual: p.type_name,
+        })
+    }
+
+    /// Number of copies sharing this payload (test/diagnostic aid).
+    pub fn ref_count(&self) -> usize {
+        self.payload.as_ref().map_or(0, Arc::strong_count)
+    }
+}
+
+impl fmt::Debug for Packet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.payload {
+            Some(p) => write!(f, "Packet<{}>@{:?}", p.type_name, self.timestamp),
+            None => write!(f, "Packet<empty>@{:?}", self.timestamp),
+        }
+    }
+}
+
+/// The declared type of a stream port in a calculator contract. `Any`
+/// ports accept every packet type (used by generic calculators such as
+/// PassThrough); `Of(TypeId)` ports are checked at graph-initialization
+/// time (§3.4 GetContract) and again on every packet in debug builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PacketType {
+    /// Accepts any payload type.
+    Any,
+    /// Accepts exactly this payload type.
+    Of(TypeId, &'static str),
+}
+
+impl PacketType {
+    /// Declare a port of concrete type `T`.
+    pub fn of<T: Any + Send + Sync>() -> PacketType {
+        PacketType::Of(TypeId::of::<T>(), std::any::type_name::<T>())
+    }
+
+    /// Human-readable name for validation error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PacketType::Any => "Any",
+            PacketType::Of(_, n) => n,
+        }
+    }
+
+    /// Are two declared port types compatible (§3.5 check 2)?
+    pub fn compatible(&self, other: &PacketType) -> bool {
+        match (self, other) {
+            (PacketType::Any, _) | (_, PacketType::Any) => true,
+            (PacketType::Of(a, _), PacketType::Of(b, _)) => a == b,
+        }
+    }
+
+    /// Does a concrete packet satisfy this port type?
+    pub fn accepts(&self, packet: &Packet) -> bool {
+        match self {
+            PacketType::Any => true,
+            PacketType::Of(tid, _) => packet.type_id().map_or(true, |t| t == *tid),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrip() {
+        let p = Packet::new(vec![1u8, 2, 3], Timestamp::new(7));
+        assert_eq!(p.timestamp(), Timestamp::new(7));
+        assert_eq!(p.get::<Vec<u8>>().unwrap(), &vec![1u8, 2, 3]);
+    }
+
+    #[test]
+    fn wrong_type_is_descriptive_error() {
+        let p = Packet::new(1.5f64, Timestamp::new(0));
+        let err = p.get::<i32>().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("f64"), "got: {msg}");
+        assert!(msg.contains("i32"), "got: {msg}");
+    }
+
+    #[test]
+    fn empty_packet_errors() {
+        let p = Packet::empty();
+        assert!(p.is_empty());
+        assert!(matches!(p.get::<i32>(), Err(MpError::EmptyPacket)));
+        assert_eq!(p.data_id(), 0);
+    }
+
+    #[test]
+    fn copies_share_payload_with_own_timestamp() {
+        // §3.1: copies share ownership (refcount), each with its own ts.
+        let a = Packet::new(String::from("x"), Timestamp::new(1));
+        let b = a.at(Timestamp::new(9));
+        assert_eq!(a.data_id(), b.data_id());
+        assert_eq!(b.timestamp(), Timestamp::new(9));
+        assert_eq!(a.timestamp(), Timestamp::new(1));
+        assert_eq!(a.ref_count(), 2);
+        drop(b);
+        assert_eq!(a.ref_count(), 1);
+    }
+
+    #[test]
+    fn data_ids_are_unique_per_payload() {
+        let a = Packet::new(0u32, Timestamp::new(0));
+        let b = Packet::new(0u32, Timestamp::new(0));
+        assert_ne!(a.data_id(), b.data_id());
+        // but clones keep the id
+        assert_eq!(a.data_id(), a.clone().data_id());
+    }
+
+    #[test]
+    fn packet_type_compatibility() {
+        let t_i32 = PacketType::of::<i32>();
+        let t_f64 = PacketType::of::<f64>();
+        assert!(t_i32.compatible(&t_i32));
+        assert!(!t_i32.compatible(&t_f64));
+        assert!(PacketType::Any.compatible(&t_i32));
+        assert!(t_f64.compatible(&PacketType::Any));
+    }
+
+    #[test]
+    fn packet_type_accepts_checks_payload() {
+        let t_i32 = PacketType::of::<i32>();
+        assert!(t_i32.accepts(&Packet::new(5i32, Timestamp::new(0))));
+        assert!(!t_i32.accepts(&Packet::new(5.0f64, Timestamp::new(0))));
+        assert!(PacketType::Any.accepts(&Packet::new(5.0f64, Timestamp::new(0))));
+    }
+
+    #[test]
+    fn send_sync_bounds() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Packet>();
+    }
+}

@@ -1,0 +1,299 @@
+//! Image frames: the video payload type. Grayscale-or-RGB f32 HWC,
+//! immutable-after-construction, cheap to clone (Arc storage) — matching
+//! the packet immutability contract (§3.1).
+
+use std::sync::Arc;
+
+use crate::perception::types::Rect;
+
+/// An image frame. `channels` ∈ {1, 3}; pixels are f32 in [0, 1], HWC
+/// layout.
+#[derive(Clone, Debug)]
+pub struct ImageFrame {
+    pub width: usize,
+    pub height: usize,
+    pub channels: usize,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl ImageFrame {
+    pub fn new(width: usize, height: usize, channels: usize, data: Vec<f32>) -> ImageFrame {
+        assert_eq!(data.len(), width * height * channels);
+        ImageFrame {
+            width,
+            height,
+            channels,
+            data: Arc::new(data),
+        }
+    }
+
+    /// A constant-colour frame.
+    pub fn filled(width: usize, height: usize, channels: usize, value: f32) -> ImageFrame {
+        ImageFrame::new(width, height, channels, vec![value; width * height * channels])
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize, c: usize) -> f32 {
+        self.data[(y * self.width + x) * self.channels + c]
+    }
+
+    /// Mean intensity (scene-change detection input, §6.1).
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Mean absolute difference against another frame of the same shape
+    /// (the §6.1 frame-selection "scene-change analysis" metric).
+    pub fn mad(&self, other: &ImageFrame) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / self.data.len() as f32
+    }
+
+    /// Bilinear resize.
+    pub fn resized(&self, nw: usize, nh: usize) -> ImageFrame {
+        let mut out = vec![0.0f32; nw * nh * self.channels];
+        let sx = self.width as f32 / nw as f32;
+        let sy = self.height as f32 / nh as f32;
+        for y in 0..nh {
+            let fy = ((y as f32 + 0.5) * sy - 0.5).max(0.0);
+            let y0 = fy as usize;
+            let y1 = (y0 + 1).min(self.height - 1);
+            let wy = fy - y0 as f32;
+            for x in 0..nw {
+                let fx = ((x as f32 + 0.5) * sx - 0.5).max(0.0);
+                let x0 = fx as usize;
+                let x1 = (x0 + 1).min(self.width - 1);
+                let wx = fx - x0 as f32;
+                for c in 0..self.channels {
+                    let v00 = self.at(x0, y0, c);
+                    let v10 = self.at(x1, y0, c);
+                    let v01 = self.at(x0, y1, c);
+                    let v11 = self.at(x1, y1, c);
+                    let v = v00 * (1.0 - wx) * (1.0 - wy)
+                        + v10 * wx * (1.0 - wy)
+                        + v01 * (1.0 - wx) * wy
+                        + v11 * wx * wy;
+                    out[(y * nw + x) * self.channels + c] = v;
+                }
+            }
+        }
+        ImageFrame::new(nw, nh, self.channels, out)
+    }
+
+    /// Crop a normalized rect (clamped to bounds).
+    pub fn cropped(&self, r: &Rect) -> ImageFrame {
+        let r = r.clamped();
+        let x0 = (r.x * self.width as f32) as usize;
+        let y0 = (r.y * self.height as f32) as usize;
+        let w = ((r.w * self.width as f32) as usize).max(1).min(self.width - x0);
+        let h = ((r.h * self.height as f32) as usize)
+            .max(1)
+            .min(self.height - y0);
+        let mut out = Vec::with_capacity(w * h * self.channels);
+        for y in y0..y0 + h {
+            for x in x0..x0 + w {
+                for c in 0..self.channels {
+                    out.push(self.at(x, y, c));
+                }
+            }
+        }
+        ImageFrame::new(w, h, self.channels, out)
+    }
+
+    /// Flattened copy as a plain tensor (input to inference).
+    pub fn to_tensor(&self) -> Vec<f32> {
+        self.data.as_ref().clone()
+    }
+
+    /// A mutable builder for composing synthetic frames / annotations.
+    pub fn build(width: usize, height: usize, channels: usize) -> ImageBuilder {
+        ImageBuilder {
+            width,
+            height,
+            channels,
+            data: vec![0.0; width * height * channels],
+        }
+    }
+}
+
+/// Mutable image under construction; `finish()` freezes it into an
+/// [`ImageFrame`].
+pub struct ImageBuilder {
+    pub width: usize,
+    pub height: usize,
+    pub channels: usize,
+    data: Vec<f32>,
+}
+
+impl ImageBuilder {
+    pub fn fill(&mut self, value: f32) -> &mut Self {
+        self.data.fill(value);
+        self
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, c: usize, v: f32) -> &mut Self {
+        if x < self.width && y < self.height && c < self.channels {
+            self.data[(y * self.width + x) * self.channels + c] = v;
+        }
+        self
+    }
+
+    /// Fill a normalized rect with a per-channel colour.
+    pub fn fill_rect(&mut self, r: &Rect, colour: &[f32]) -> &mut Self {
+        let r = r.clamped();
+        let x0 = (r.x * self.width as f32) as usize;
+        let y0 = (r.y * self.height as f32) as usize;
+        let x1 = (((r.x + r.w) * self.width as f32) as usize).min(self.width);
+        let y1 = (((r.y + r.h) * self.height as f32) as usize).min(self.height);
+        for y in y0..y1 {
+            for x in x0..x1 {
+                for c in 0..self.channels {
+                    self.data[(y * self.width + x) * self.channels + c] =
+                        colour[c % colour.len()];
+                }
+            }
+        }
+        self
+    }
+
+    /// Draw a 1px normalized-rect outline (annotation overlays, §6.1).
+    pub fn stroke_rect(&mut self, r: &Rect, colour: &[f32]) -> &mut Self {
+        let r = r.clamped();
+        let x0 = (r.x * self.width as f32) as usize;
+        let y0 = (r.y * self.height as f32) as usize;
+        let x1 = ((((r.x + r.w) * self.width as f32) as usize).min(self.width)).max(x0 + 1);
+        let y1 = ((((r.y + r.h) * self.height as f32) as usize).min(self.height)).max(y0 + 1);
+        for x in x0..x1 {
+            for c in 0..self.channels {
+                self.set(x, y0, c, colour[c % colour.len()]);
+                self.set(x, y1 - 1, c, colour[c % colour.len()]);
+            }
+        }
+        for y in y0..y1 {
+            for c in 0..self.channels {
+                self.set(x0, y, c, colour[c % colour.len()]);
+                self.set(x1 - 1, y, c, colour[c % colour.len()]);
+            }
+        }
+        self
+    }
+
+    /// Add uniform noise in [-amp, amp] (synthetic sensor noise).
+    pub fn add_noise(&mut self, rng: &mut crate::perception::rng::XorShift, amp: f32) -> &mut Self {
+        for v in self.data.iter_mut() {
+            *v = (*v + rng.range_f32(-amp, amp)).clamp(0.0, 1.0);
+        }
+        self
+    }
+
+    /// Start from an existing frame (annotation on top of video).
+    pub fn from_frame(frame: &ImageFrame) -> ImageBuilder {
+        ImageBuilder {
+            width: frame.width,
+            height: frame.height,
+            channels: frame.channels,
+            data: frame.data.as_ref().clone(),
+        }
+    }
+
+    pub fn finish(self) -> ImageFrame {
+        ImageFrame::new(self.width, self.height, self.channels, self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let f = ImageFrame::filled(4, 3, 1, 0.5);
+        assert_eq!(f.at(3, 2, 0), 0.5);
+        assert_eq!(f.mean(), 0.5);
+    }
+
+    #[test]
+    fn clone_shares_data() {
+        let f = ImageFrame::filled(8, 8, 3, 0.1);
+        let g = f.clone();
+        assert!(Arc::ptr_eq(&f.data, &g.data));
+    }
+
+    #[test]
+    fn resize_preserves_constant_image() {
+        let f = ImageFrame::filled(16, 16, 1, 0.7);
+        let g = f.resized(4, 4);
+        assert_eq!(g.width, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                assert!((g.at(x, y, 0) - 0.7).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn resize_interpolates_gradient() {
+        // left half 0, right half 1: the downsampled middle is in between
+        let mut b = ImageFrame::build(8, 2, 1);
+        b.fill_rect(&Rect::new(0.5, 0.0, 0.5, 1.0), &[1.0]);
+        let f = b.finish();
+        let g = f.resized(4, 1);
+        assert!(g.at(0, 0, 0) < 0.3);
+        assert!(g.at(3, 0, 0) > 0.7);
+    }
+
+    #[test]
+    fn crop_extracts_region() {
+        let mut b = ImageFrame::build(10, 10, 1);
+        b.fill_rect(&Rect::new(0.5, 0.5, 0.5, 0.5), &[1.0]);
+        let f = b.finish();
+        let c = f.cropped(&Rect::new(0.5, 0.5, 0.5, 0.5));
+        assert_eq!(c.width, 5);
+        assert_eq!(c.height, 5);
+        assert!(c.mean() > 0.99);
+        let c2 = f.cropped(&Rect::new(0.0, 0.0, 0.5, 0.5));
+        assert!(c2.mean() < 0.01);
+    }
+
+    #[test]
+    fn mad_detects_change() {
+        let a = ImageFrame::filled(4, 4, 1, 0.0);
+        let b = ImageFrame::filled(4, 4, 1, 1.0);
+        assert_eq!(a.mad(&b), 1.0);
+        assert_eq!(a.mad(&a), 0.0);
+    }
+
+    #[test]
+    fn stroke_rect_draws_outline() {
+        let mut b = ImageFrame::build(10, 10, 1);
+        b.stroke_rect(&Rect::new(0.2, 0.2, 0.6, 0.6), &[1.0]);
+        let f = b.finish();
+        assert_eq!(f.at(2, 2, 0), 1.0); // corner on the outline
+        assert_eq!(f.at(5, 5, 0), 0.0); // interior untouched
+    }
+
+    #[test]
+    fn noise_is_bounded_and_deterministic() {
+        let mut r1 = crate::perception::rng::XorShift::new(5);
+        let mut r2 = crate::perception::rng::XorShift::new(5);
+        let mut a = ImageFrame::build(8, 8, 1);
+        a.fill(0.5).add_noise(&mut r1, 0.1);
+        let mut b = ImageFrame::build(8, 8, 1);
+        b.fill(0.5).add_noise(&mut r2, 0.1);
+        let (a, b) = (a.finish(), b.finish());
+        assert_eq!(a.data, b.data);
+        assert!(a.data.iter().all(|&v| (0.4 - 1e-6..=0.6 + 1e-6).contains(&v)));
+    }
+}

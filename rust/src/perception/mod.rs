@@ -1,0 +1,13 @@
+//! Perception data types shared by the video / inference / tracking /
+//! annotation calculators — the domain payloads that flow through the
+//! §6 example graphs.
+
+pub mod image;
+pub mod rng;
+pub mod types;
+pub mod world;
+
+pub use image::ImageFrame;
+pub use rng::XorShift;
+pub use types::{iou, Detection, Detections, LandmarkList, Mask, Rect};
+pub use world::{SyntheticWorld, WorldObject};

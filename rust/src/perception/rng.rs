@@ -1,0 +1,104 @@
+//! Deterministic xorshift64* RNG — the repo is fully offline (no `rand`
+//! crate) and everything synthetic must be reproducible across runs and
+//! thread counts.
+
+/// xorshift64* PRNG. Deterministic, seedable, Copy.
+#[derive(Clone, Copy, Debug)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> XorShift {
+        XorShift {
+            state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            self.next_u64() % n
+        }
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = XorShift::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut r = XorShift::new(1);
+        let mut buckets = [0usize; 10];
+        for _ in 0..100_000 {
+            buckets[(r.next_f32() * 10.0) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "{buckets:?}");
+        }
+    }
+
+    #[test]
+    fn below_zero_is_safe() {
+        let mut r = XorShift::new(1);
+        assert_eq!(r.below(0), 0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Detection / landmark / mask payload types (the §6 graphs' currency).
+
+use std::sync::Arc;
+
+/// An axis-aligned box in normalized [0,1] image coordinates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rect {
+    pub x: f32,
+    pub y: f32,
+    pub w: f32,
+    pub h: f32,
+}
+
+impl Rect {
+    pub fn new(x: f32, y: f32, w: f32, h: f32) -> Rect {
+        Rect { x, y, w, h }
+    }
+
+    pub fn area(&self) -> f32 {
+        self.w.max(0.0) * self.h.max(0.0)
+    }
+
+    pub fn center(&self) -> (f32, f32) {
+        (self.x + self.w / 2.0, self.y + self.h / 2.0)
+    }
+
+    pub fn intersection(&self, o: &Rect) -> f32 {
+        let x0 = self.x.max(o.x);
+        let y0 = self.y.max(o.y);
+        let x1 = (self.x + self.w).min(o.x + o.w);
+        let y1 = (self.y + self.h).min(o.y + o.h);
+        (x1 - x0).max(0.0) * (y1 - y0).max(0.0)
+    }
+
+    /// Clamp to the unit square.
+    pub fn clamped(&self) -> Rect {
+        let x = self.x.clamp(0.0, 1.0);
+        let y = self.y.clamp(0.0, 1.0);
+        Rect {
+            x,
+            y,
+            w: self.w.min(1.0 - x).max(0.0),
+            h: self.h.min(1.0 - y).max(0.0),
+        }
+    }
+
+    /// Shift by (dx, dy).
+    pub fn translated(&self, dx: f32, dy: f32) -> Rect {
+        Rect {
+            x: self.x + dx,
+            y: self.y + dy,
+            ..*self
+        }
+    }
+}
+
+/// Intersection-over-union of two boxes (tracker matching, NMS,
+/// detection-merging §6.1).
+pub fn iou(a: &Rect, b: &Rect) -> f32 {
+    let inter = a.intersection(b);
+    let union = a.area() + b.area() - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// One detected object: box + class + score (Fig. 1 "detections").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    pub bbox: Rect,
+    pub score: f32,
+    pub class_id: u32,
+    /// Stable id assigned by the tracker (None for fresh detections).
+    pub track_id: Option<u64>,
+}
+
+impl Detection {
+    pub fn new(bbox: Rect, score: f32, class_id: u32) -> Detection {
+        Detection {
+            bbox,
+            score,
+            class_id,
+            track_id: None,
+        }
+    }
+}
+
+/// The packet payload carried on detection streams.
+pub type Detections = Vec<Detection>;
+
+/// A set of 2D landmarks in normalized coordinates (§6.2 face
+/// landmarks).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LandmarkList {
+    pub points: Vec<(f32, f32)>,
+}
+
+impl LandmarkList {
+    pub fn new(points: Vec<(f32, f32)>) -> LandmarkList {
+        LandmarkList { points }
+    }
+
+    /// Linear interpolation between two landmark sets (temporal
+    /// interpolation across frames, §6.2). `t` in [0,1].
+    pub fn lerp(&self, other: &LandmarkList, t: f32) -> LandmarkList {
+        let n = self.points.len().min(other.points.len());
+        LandmarkList {
+            points: (0..n)
+                .map(|i| {
+                    let (ax, ay) = self.points[i];
+                    let (bx, by) = other.points[i];
+                    (ax + (bx - ax) * t, ay + (by - ay) * t)
+                })
+                .collect(),
+        }
+    }
+
+    /// Mean position (used by smoothing / tests).
+    pub fn centroid(&self) -> (f32, f32) {
+        if self.points.is_empty() {
+            return (0.0, 0.0);
+        }
+        let (mut sx, mut sy) = (0.0f32, 0.0f32);
+        for (x, y) in &self.points {
+            sx += x;
+            sy += y;
+        }
+        let n = self.points.len() as f32;
+        (sx / n, sy / n)
+    }
+}
+
+/// A segmentation mask: per-pixel foreground probability (§6.2 portrait
+/// segmentation). Shares storage on clone.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    pub width: usize,
+    pub height: usize,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl Mask {
+    pub fn new(width: usize, height: usize, data: Vec<f32>) -> Mask {
+        assert_eq!(data.len(), width * height);
+        Mask {
+            width,
+            height,
+            data: Arc::new(data),
+        }
+    }
+
+    pub fn at(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    /// Pixel-wise lerp (temporal interpolation, §6.2).
+    pub fn lerp(&self, other: &Mask, t: f32) -> Mask {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        Mask::new(
+            self.width,
+            self.height,
+            self.data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a + (b - a) * t)
+                .collect(),
+        )
+    }
+
+    /// Fraction of pixels above `thr`.
+    pub fn coverage(&self, thr: f32) -> f32 {
+        let n = self.data.iter().filter(|&&v| v > thr).count();
+        n as f32 / self.data.len().max(1) as f32
+    }
+}
+
+/// Greedy non-maximum suppression: drop detections overlapping a
+/// higher-scoring detection of the same class by more than `iou_thr`.
+pub fn non_max_suppression(mut dets: Detections, iou_thr: f32) -> Detections {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    let mut keep: Detections = Vec::new();
+    'outer: for d in dets {
+        for k in &keep {
+            if k.class_id == d.class_id && iou(&k.bbox, &d.bbox) > iou_thr {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_geometry() {
+        let r = Rect::new(0.2, 0.2, 0.4, 0.2);
+        assert!((r.area() - 0.08).abs() < 1e-6);
+        assert_eq!(r.center(), (0.4, 0.3));
+        let o = Rect::new(0.4, 0.3, 0.4, 0.2);
+        assert!(r.intersection(&o) > 0.0);
+        assert_eq!(r.intersection(&Rect::new(0.9, 0.9, 0.1, 0.1)), 0.0);
+    }
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let r = Rect::new(0.1, 0.1, 0.3, 0.3);
+        assert!((iou(&r, &r) - 1.0).abs() < 1e-6);
+        assert_eq!(iou(&r, &Rect::new(0.8, 0.8, 0.1, 0.1)), 0.0);
+        // Half-overlap sanity.
+        let a = Rect::new(0.0, 0.0, 0.2, 0.2);
+        let b = Rect::new(0.1, 0.0, 0.2, 0.2);
+        let v = iou(&a, &b);
+        assert!((0.3..0.4).contains(&v), "{v}");
+    }
+
+    #[test]
+    fn rect_clamp() {
+        let r = Rect::new(-0.1, 0.9, 0.5, 0.5).clamped();
+        assert_eq!(r.x, 0.0);
+        assert!(r.y + r.h <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn nms_keeps_best_per_cluster() {
+        let dets = vec![
+            Detection::new(Rect::new(0.1, 0.1, 0.2, 0.2), 0.9, 1),
+            Detection::new(Rect::new(0.11, 0.11, 0.2, 0.2), 0.8, 1), // dup of 0
+            Detection::new(Rect::new(0.6, 0.6, 0.2, 0.2), 0.7, 1),   // separate
+            Detection::new(Rect::new(0.1, 0.1, 0.2, 0.2), 0.85, 2),  // other class
+        ];
+        let kept = non_max_suppression(dets, 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!((kept[0].score - 0.9).abs() < 1e-6);
+        assert!(kept.iter().any(|d| d.class_id == 2));
+    }
+
+    #[test]
+    fn landmarks_lerp_and_centroid() {
+        let a = LandmarkList::new(vec![(0.0, 0.0), (1.0, 1.0)]);
+        let b = LandmarkList::new(vec![(1.0, 0.0), (0.0, 1.0)]);
+        let m = a.lerp(&b, 0.5);
+        assert_eq!(m.points, vec![(0.5, 0.0), (0.5, 1.0)]);
+        assert_eq!(m.centroid(), (0.5, 0.5));
+    }
+
+    #[test]
+    fn mask_lerp_and_coverage() {
+        let a = Mask::new(2, 2, vec![0.0, 0.0, 1.0, 1.0]);
+        let b = Mask::new(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let m = a.lerp(&b, 0.5);
+        assert_eq!(m.at(0, 0), 0.5);
+        assert_eq!(m.at(1, 1), 1.0);
+        assert_eq!(a.coverage(0.5), 0.5);
+    }
+
+    #[test]
+    fn mask_clone_shares_storage() {
+        let a = Mask::new(2, 2, vec![0.0; 4]);
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.data, &b.data));
+    }
+}

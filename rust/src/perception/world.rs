@@ -1,0 +1,233 @@
+//! The synthetic camera: a deterministic 2D world of moving objects,
+//! rendered to [`ImageFrame`]s with ground-truth [`Detections`].
+//!
+//! Substitutes for the paper's live camera feed (DESIGN.md
+//! §Substitutions): it produces the same stream shape (timestamped
+//! frames at a configurable FPS), plus ground truth so detector/tracker
+//! quality is measurable, plus scene cuts so §6.1 scene-change frame
+//! selection has something to detect.
+
+use crate::perception::image::ImageFrame;
+use crate::perception::rng::XorShift;
+use crate::perception::types::{Detection, Detections, Rect};
+
+/// One moving object: a bright rectangle with constant velocity,
+/// bouncing off the frame edges.
+#[derive(Clone, Debug)]
+pub struct WorldObject {
+    pub rect: Rect,
+    pub vx: f32,
+    pub vy: f32,
+    pub class_id: u32,
+    pub brightness: f32,
+}
+
+/// Deterministic scene generator.
+pub struct SyntheticWorld {
+    pub width: usize,
+    pub height: usize,
+    pub channels: usize,
+    objects: Vec<WorldObject>,
+    rng: XorShift,
+    background: f32,
+    noise: f32,
+    /// A scene cut (background + object reshuffle) every N frames;
+    /// 0 = never.
+    scene_cut_every: u64,
+    frame_index: u64,
+    size_range: (f32, f32),
+}
+
+impl SyntheticWorld {
+    pub fn new(width: usize, height: usize, num_objects: usize, seed: u64) -> SyntheticWorld {
+        let mut rng = XorShift::new(seed);
+        let size_range = (0.08, 0.2);
+        let objects = (0..num_objects)
+            .map(|i| Self::spawn(&mut rng, i as u32, size_range))
+            .collect();
+        SyntheticWorld {
+            width,
+            height,
+            channels: 1,
+            objects,
+            rng,
+            background: 0.1,
+            noise: 0.02,
+            scene_cut_every: 0,
+            frame_index: 0,
+            size_range,
+        }
+    }
+
+    /// Constrain object sizes (e.g. the detector's minimum reliably
+    /// detectable size is ~0.10 of image width — DESIGN.md
+    /// §Substitutions). Respawns the scene with the new range.
+    pub fn with_object_sizes(mut self, min: f32, max: f32) -> SyntheticWorld {
+        self.size_range = (min, max);
+        let n = self.objects.len();
+        self.objects = (0..n)
+            .map(|i| Self::spawn(&mut self.rng, i as u32, self.size_range))
+            .collect();
+        self
+    }
+
+    pub fn with_scene_cuts(mut self, every: u64) -> SyntheticWorld {
+        self.scene_cut_every = every;
+        self
+    }
+
+    pub fn with_noise(mut self, amp: f32) -> SyntheticWorld {
+        self.noise = amp;
+        self
+    }
+
+    fn spawn(rng: &mut XorShift, index: u32, sizes: (f32, f32)) -> WorldObject {
+        WorldObject {
+            rect: Rect::new(
+                rng.range_f32(0.05, 0.7),
+                rng.range_f32(0.05, 0.7),
+                rng.range_f32(sizes.0, sizes.1),
+                rng.range_f32(sizes.0, sizes.1),
+            ),
+            vx: rng.range_f32(-0.02, 0.02),
+            vy: rng.range_f32(-0.02, 0.02),
+            class_id: index % 3,
+            brightness: rng.range_f32(0.6, 1.0),
+        }
+    }
+
+    /// Advance one frame: move objects (bouncing), maybe scene-cut.
+    pub fn step(&mut self) {
+        self.frame_index += 1;
+        if self.scene_cut_every > 0 && self.frame_index % self.scene_cut_every == 0 {
+            self.background = self.rng.range_f32(0.05, 0.35);
+            let n = self.objects.len();
+            let sizes = self.size_range;
+            self.objects = (0..n)
+                .map(|i| Self::spawn(&mut self.rng, i as u32, sizes))
+                .collect();
+            return;
+        }
+        for o in self.objects.iter_mut() {
+            o.rect.x += o.vx;
+            o.rect.y += o.vy;
+            if o.rect.x <= 0.0 || o.rect.x + o.rect.w >= 1.0 {
+                o.vx = -o.vx;
+                o.rect.x = o.rect.x.clamp(0.0, 1.0 - o.rect.w);
+            }
+            if o.rect.y <= 0.0 || o.rect.y + o.rect.h >= 1.0 {
+                o.vy = -o.vy;
+                o.rect.y = o.rect.y.clamp(0.0, 1.0 - o.rect.h);
+            }
+        }
+    }
+
+    /// Render the current scene.
+    pub fn render(&mut self) -> ImageFrame {
+        let mut b = ImageFrame::build(self.width, self.height, self.channels);
+        b.fill(self.background);
+        for o in &self.objects {
+            b.fill_rect(&o.rect, &[o.brightness]);
+        }
+        if self.noise > 0.0 {
+            b.add_noise(&mut self.rng, self.noise);
+        }
+        b.finish()
+    }
+
+    /// Ground-truth boxes for the current scene.
+    pub fn ground_truth(&self) -> Detections {
+        self.objects
+            .iter()
+            .map(|o| Detection::new(o.rect, 1.0, o.class_id))
+            .collect()
+    }
+
+    pub fn frame_index(&self) -> u64 {
+        self.frame_index
+    }
+
+    pub fn objects(&self) -> &[WorldObject] {
+        &self.objects
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perception::types::iou;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = SyntheticWorld::new(32, 32, 3, 7);
+        let mut b = SyntheticWorld::new(32, 32, 3, 7);
+        for _ in 0..10 {
+            a.step();
+            b.step();
+        }
+        assert_eq!(a.render().data, b.render().data);
+    }
+
+    #[test]
+    fn objects_stay_in_bounds() {
+        let mut w = SyntheticWorld::new(16, 16, 4, 3);
+        for _ in 0..500 {
+            w.step();
+            for o in w.objects() {
+                assert!(o.rect.x >= -1e-4 && o.rect.x + o.rect.w <= 1.0 + 1e-4);
+                assert!(o.rect.y >= -1e-4 && o.rect.y + o.rect.h <= 1.0 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn ground_truth_matches_rendered_bright_areas() {
+        let mut w = SyntheticWorld::new(64, 64, 1, 11).with_noise(0.0);
+        w.step();
+        let frame = w.render();
+        let gt = w.ground_truth();
+        assert_eq!(gt.len(), 1);
+        let r = gt[0].bbox;
+        // centre of the GT box is bright, far corner is background.
+        let (cx, cy) = r.center();
+        let px = frame.at(
+            (cx * 63.0) as usize,
+            (cy * 63.0) as usize,
+            0,
+        );
+        assert!(px > 0.5, "{px}");
+    }
+
+    #[test]
+    fn scene_cut_changes_everything() {
+        let mut w = SyntheticWorld::new(32, 32, 2, 5).with_scene_cuts(10).with_noise(0.0);
+        for _ in 0..9 {
+            w.step();
+        }
+        let before = w.ground_truth();
+        let f_before = w.render();
+        w.step(); // frame 10: cut
+        let after = w.ground_truth();
+        let f_after = w.render();
+        // objects reshuffled: overlap with previous positions is low
+        let overlap: f32 = before
+            .iter()
+            .zip(after.iter())
+            .map(|(a, b)| iou(&a.bbox, &b.bbox))
+            .sum();
+        assert!(overlap < 1.0, "{overlap}");
+        assert!(f_before.mad(&f_after) > 0.01);
+    }
+
+    #[test]
+    fn motion_is_continuous_without_cuts() {
+        let mut w = SyntheticWorld::new(32, 32, 2, 5);
+        w.step();
+        let a = w.ground_truth();
+        w.step();
+        let b = w.ground_truth();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!(iou(&x.bbox, &y.bbox) > 0.5, "small per-frame motion");
+        }
+    }
+}

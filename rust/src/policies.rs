@@ -1,0 +1,446 @@
+//! Input policies (§4.1.3): how a node's input streams are coordinated
+//! into input sets.
+//!
+//! Synchronization is handled **locally on each node** using the policy
+//! its contract declares. The default policy provides deterministic
+//! synchronization: packets with equal timestamps are processed
+//! together, input sets ascend strictly in timestamp, nothing is
+//! dropped, and the node becomes ready as early as the guarantees allow.
+
+use crate::packet::Packet;
+use crate::stream::{Frontier, InputStreamQueue};
+use crate::timestamp::{Timestamp, TimestampBound};
+
+/// Result of a readiness query (§4.1.1: a readiness function determines
+/// whether a node is ready to run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Readiness {
+    /// No valid input set can be formed yet.
+    NotReady,
+    /// An input set at this timestamp is ready for Process().
+    Ready(Timestamp),
+    /// All input streams are exhausted: the node should Close().
+    Closed,
+}
+
+/// An input policy: pure logic over the node's input queues. The
+/// scheduler owns the queues; policies only inspect and extract.
+pub trait InputPolicy: Send {
+    /// Is an input set ready, and at which timestamp?
+    fn readiness(&self, queues: &[InputStreamQueue]) -> Readiness;
+
+    /// Extract the input set at `ts` (one slot per port; empty packets
+    /// for ports with no data at `ts` — paper footnote 7).
+    fn take_input_set(&mut self, queues: &mut [InputStreamQueue], ts: Timestamp) -> Vec<Packet>;
+}
+
+/// The settled frontier of one stream for synchronization purposes: the
+/// timestamp of the queued front packet, or the bound if empty.
+fn frontier_ts(q: &InputStreamQueue) -> Timestamp {
+    match q.frontier() {
+        Frontier::Packet(ts) => ts,
+        Frontier::EmptyUntil(b) => b.0,
+    }
+}
+
+/// Conservative bound on the node's *next possible input-set timestamp*:
+/// the minimum over streams of the settled frontier. With a declared
+/// timestamp offset `k`, the node's outputs are therefore settled below
+/// `frontier + k`; the scheduler uses this for automatic output-bound
+/// propagation (§4.1.2 footnote 6).
+pub fn output_bound_hint(queues: &[InputStreamQueue], offset: i64) -> TimestampBound {
+    let mut min = Timestamp::DONE;
+    for q in queues {
+        let f = frontier_ts(q);
+        if f < min {
+            min = f;
+        }
+    }
+    TimestampBound(min.add_offset(offset))
+}
+
+// ---------------------------------------------------------------------
+// Default policy
+// ---------------------------------------------------------------------
+
+/// The default deterministic policy (§4.1.3): a node is ready iff there
+/// is a timestamp settled across all input streams that carries a packet
+/// on at least one stream.
+#[derive(Debug, Default)]
+pub struct DefaultPolicy;
+
+impl InputPolicy for DefaultPolicy {
+    fn readiness(&self, queues: &[InputStreamQueue]) -> Readiness {
+        readiness_of_set(queues, &(0..queues.len()).collect::<Vec<_>>())
+    }
+
+    fn take_input_set(&mut self, queues: &mut [InputStreamQueue], ts: Timestamp) -> Vec<Packet> {
+        queues
+            .iter_mut()
+            .map(|q| q.pop_at(ts).unwrap_or_else(Packet::empty))
+            .collect()
+    }
+}
+
+/// Default-policy readiness restricted to a subset of ports (shared with
+/// SyncSetsPolicy).
+fn readiness_of_set(queues: &[InputStreamQueue], ports: &[usize]) -> Readiness {
+    if ports.is_empty() {
+        return Readiness::NotReady;
+    }
+    if ports.iter().all(|&i| queues[i].is_exhausted()) {
+        return Readiness::Closed;
+    }
+    // T = min front-packet timestamp over non-empty queues in the set.
+    let mut t: Option<Timestamp> = None;
+    for &i in ports {
+        if let Some(f) = queues[i].front_timestamp() {
+            t = Some(match t {
+                Some(cur) if cur <= f => cur,
+                _ => f,
+            });
+        }
+    }
+    let Some(t) = t else {
+        return Readiness::NotReady; // no packets anywhere yet
+    };
+    // T must be settled on every stream in the set. Streams with a queued
+    // packet are settled at T automatically (front >= T and monotonicity
+    // settles everything below front); empty streams need bound > T.
+    for &i in ports {
+        if queues[i].is_empty() && !queues[i].bound().is_settled(t) {
+            return Readiness::NotReady;
+        }
+    }
+    Readiness::Ready(t)
+}
+
+// ---------------------------------------------------------------------
+// Immediate policy
+// ---------------------------------------------------------------------
+
+/// Deliver each packet as soon as it arrives (§4.1.3: "a node can choose
+/// to receive all inputs immediately, sacrificing several of the
+/// guarantees"). Used by flow-control nodes that must react quickly
+/// (§4.1.4). Input sets contain exactly one packet, delivered in
+/// **arrival order** across all input streams (not timestamp order —
+/// that is the whole point: the node reacts to what is happening *now*).
+#[derive(Debug, Default)]
+pub struct ImmediatePolicy;
+
+impl ImmediatePolicy {
+    /// Stream holding the earliest-arrived front packet.
+    fn earliest_arrival(queues: &[InputStreamQueue]) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, q) in queues.iter().enumerate() {
+            if let Some(seq) = q.front_seq() {
+                best = match best {
+                    Some((bseq, _)) if bseq <= seq => best,
+                    _ => Some((seq, i)),
+                };
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+}
+
+impl InputPolicy for ImmediatePolicy {
+    fn readiness(&self, queues: &[InputStreamQueue]) -> Readiness {
+        if queues.iter().all(|q| q.is_exhausted()) {
+            return Readiness::Closed;
+        }
+        match Self::earliest_arrival(queues) {
+            Some(i) => Readiness::Ready(queues[i].front_timestamp().unwrap()),
+            None => Readiness::NotReady,
+        }
+    }
+
+    fn take_input_set(&mut self, queues: &mut [InputStreamQueue], ts: Timestamp) -> Vec<Packet> {
+        // Pop the single earliest-arrived packet; all other slots stay
+        // empty. `ts` is advisory (the readiness answer): we re-derive
+        // the stream to stay consistent under concurrent arrivals.
+        let mut set: Vec<Packet> = (0..queues.len()).map(|_| Packet::empty()).collect();
+        if let Some(i) = Self::earliest_arrival(queues) {
+            let _ = ts;
+            set[i] = queues[i].pop_front().unwrap();
+        }
+        set
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sync-sets policy
+// ---------------------------------------------------------------------
+
+/// Timestamp synchronization enforced *within* each declared set of
+/// inputs but not across sets (§4.1.3, last paragraph).
+#[derive(Debug)]
+pub struct SyncSetsPolicy {
+    sets: Vec<Vec<usize>>,
+}
+
+impl SyncSetsPolicy {
+    /// `sets` partitions (a subset of) the port indices. Ports not in
+    /// any set form an implicit singleton set each.
+    pub fn new(mut sets: Vec<Vec<usize>>, num_ports: usize) -> SyncSetsPolicy {
+        let mut covered = vec![false; num_ports];
+        for s in &sets {
+            for &i in s {
+                covered[i] = true;
+            }
+        }
+        for (i, c) in covered.iter().enumerate() {
+            if !c {
+                sets.push(vec![i]);
+            }
+        }
+        SyncSetsPolicy { sets }
+    }
+
+    /// The ready set with the earliest timestamp (ties -> lowest index),
+    /// for deterministic extraction.
+    fn best_ready(&self, queues: &[InputStreamQueue]) -> Option<(usize, Timestamp)> {
+        let mut best: Option<(usize, Timestamp)> = None;
+        for (si, ports) in self.sets.iter().enumerate() {
+            if let Readiness::Ready(t) = readiness_of_set(queues, ports) {
+                best = match best {
+                    Some((_, bt)) if bt <= t => best,
+                    _ => Some((si, t)),
+                };
+            }
+        }
+        best
+    }
+}
+
+impl InputPolicy for SyncSetsPolicy {
+    fn readiness(&self, queues: &[InputStreamQueue]) -> Readiness {
+        if queues.iter().all(|q| q.is_exhausted()) {
+            return Readiness::Closed;
+        }
+        self.best_ready(queues)
+            .map_or(Readiness::NotReady, |(_, t)| Readiness::Ready(t))
+    }
+
+    fn take_input_set(&mut self, queues: &mut [InputStreamQueue], ts: Timestamp) -> Vec<Packet> {
+        let mut set: Vec<Packet> = (0..queues.len()).map(|_| Packet::empty()).collect();
+        if let Some((si, t)) = self.best_ready(queues) {
+            if t == ts {
+                for &i in &self.sets[si] {
+                    if let Some(p) = queues[i].pop_at(t) {
+                        set[i] = p;
+                    }
+                }
+            }
+        }
+        set
+    }
+}
+
+/// Build the policy object a contract asks for.
+pub fn make_policy(
+    kind: crate::calculator::InputPolicyKind,
+    sync_sets: &[Vec<usize>],
+    num_ports: usize,
+) -> Box<dyn InputPolicy> {
+    use crate::calculator::InputPolicyKind::*;
+    match kind {
+        Default => Box::new(DefaultPolicy),
+        Immediate => Box::new(ImmediatePolicy),
+        SyncSets => Box::new(SyncSetsPolicy::new(sync_sets.to_vec(), num_ports)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(name: &str) -> InputStreamQueue {
+        InputStreamQueue::new(name)
+    }
+
+    fn push(qu: &mut InputStreamQueue, ts: i64) {
+        qu.push(Packet::new(ts, Timestamp::new(ts))).unwrap();
+    }
+
+    /// The exact Figure-2 scenario from the paper: FOO has packets at
+    /// {10, 20}, BAR at {10, 30}. Sets at 10 (both) and 20 (FOO only)
+    /// are ready; 30 must wait because FOO is unsettled past 20.
+    #[test]
+    fn figure2_default_policy() {
+        let mut queues = vec![q("FOO"), q("BAR")];
+        push(&mut queues[0], 10);
+        push(&mut queues[0], 20);
+        push(&mut queues[1], 10);
+        push(&mut queues[1], 30);
+
+        let mut p = DefaultPolicy;
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(10)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(10));
+        assert!(!set[0].is_empty() && !set[1].is_empty());
+
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(20)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(20));
+        assert!(!set[0].is_empty());
+        assert!(set[1].is_empty(), "BAR has no packet at 20 (footnote 7)");
+
+        // 30 is not ready: FOO's state past 20 is unknown.
+        assert_eq!(p.readiness(&queues), Readiness::NotReady);
+
+        // "if FOO sends a packet with timestamp 25, it will have to be
+        // processed before 30" (§4.1.3).
+        push(&mut queues[0], 25);
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(25)));
+        p.take_input_set(&mut queues, Timestamp::new(25));
+
+        // Now closing FOO settles everything: 30 becomes ready.
+        queues[0].close();
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(30)));
+        p.take_input_set(&mut queues, Timestamp::new(30));
+
+        queues[1].close();
+        assert_eq!(p.readiness(&queues), Readiness::Closed);
+    }
+
+    #[test]
+    fn default_policy_bound_advance_settles_without_packet() {
+        // Footnote 6: an explicit tighter bound lets downstream settle
+        // sooner.
+        let mut queues = vec![q("A"), q("B")];
+        push(&mut queues[0], 10);
+        assert_eq!(DefaultPolicy.readiness(&queues), Readiness::NotReady);
+        queues[1].advance_bound(TimestampBound(Timestamp::new(11)));
+        assert_eq!(
+            DefaultPolicy.readiness(&queues),
+            Readiness::Ready(Timestamp::new(10))
+        );
+    }
+
+    #[test]
+    fn default_policy_single_stream() {
+        let mut queues = vec![q("A")];
+        assert_eq!(DefaultPolicy.readiness(&queues), Readiness::NotReady);
+        push(&mut queues[0], 5);
+        assert_eq!(
+            DefaultPolicy.readiness(&queues),
+            Readiness::Ready(Timestamp::new(5))
+        );
+    }
+
+    #[test]
+    fn default_policy_closed_only_when_exhausted() {
+        let mut queues = vec![q("A")];
+        push(&mut queues[0], 5);
+        queues[0].close();
+        // Still a packet to drain: Ready, not Closed.
+        assert_eq!(
+            DefaultPolicy.readiness(&queues),
+            Readiness::Ready(Timestamp::new(5))
+        );
+        DefaultPolicy.take_input_set(&mut queues, Timestamp::new(5));
+        assert_eq!(DefaultPolicy.readiness(&queues), Readiness::Closed);
+    }
+
+    #[test]
+    fn default_policy_strictly_ascending_sets() {
+        // Guarantee 2 of §4.1.3.
+        let mut queues = vec![q("A"), q("B")];
+        for t in [1, 3, 5] {
+            push(&mut queues[0], t);
+        }
+        for t in [2, 3, 6] {
+            push(&mut queues[1], t);
+        }
+        queues[0].close();
+        queues[1].close();
+        let mut p = DefaultPolicy;
+        let mut last = Timestamp::UNSTARTED;
+        let mut count = 0;
+        while let Readiness::Ready(t) = p.readiness(&queues) {
+            assert!(t > last, "sets must strictly ascend");
+            last = t;
+            let set = p.take_input_set(&mut queues, t);
+            assert!(set.iter().any(|pk| !pk.is_empty()));
+            count += 1;
+        }
+        // timestamps {1,2,3,5,6}: 5 distinct sets, none dropped.
+        assert_eq!(count, 5);
+    }
+
+    #[test]
+    fn immediate_policy_delivers_in_arrival_order() {
+        let mut queues = vec![q("A"), q("B")];
+        // A@10 arrives first (seq 0), B@5 second (seq 1): arrival order
+        // wins over timestamp order — the flow-limiter semantics.
+        queues[0]
+            .push_seq(Packet::new(10i64, Timestamp::new(10)), 0)
+            .unwrap();
+        queues[1]
+            .push_seq(Packet::new(5i64, Timestamp::new(5)), 1)
+            .unwrap();
+        let mut p = ImmediatePolicy;
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(10)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(10));
+        assert!(!set[0].is_empty() && set[1].is_empty());
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(5)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(5));
+        assert!(set[0].is_empty() && !set[1].is_empty());
+    }
+
+    #[test]
+    fn immediate_policy_closed() {
+        let mut queues = vec![q("A")];
+        queues[0].close();
+        assert_eq!(ImmediatePolicy.readiness(&queues), Readiness::Closed);
+    }
+
+    #[test]
+    fn sync_sets_independent_alignment() {
+        // Ports {0,1} form a set; port 2 is independent.
+        let mut queues = vec![q("A"), q("B"), q("C")];
+        push(&mut queues[2], 50);
+        let mut p = SyncSetsPolicy::new(vec![vec![0, 1]], 3);
+        // C alone is ready at 50 even though A/B have nothing.
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(50)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(50));
+        assert!(set[2].is_empty() == false);
+        assert!(set[0].is_empty() && set[1].is_empty());
+
+        // The {A,B} set still follows default-policy alignment.
+        push(&mut queues[0], 10);
+        assert_eq!(p.readiness(&queues), Readiness::NotReady);
+        push(&mut queues[1], 10);
+        assert_eq!(p.readiness(&queues), Readiness::Ready(Timestamp::new(10)));
+        let set = p.take_input_set(&mut queues, Timestamp::new(10));
+        assert!(!set[0].is_empty() && !set[1].is_empty());
+    }
+
+    #[test]
+    fn sync_sets_uncovered_ports_get_singletons() {
+        let p = SyncSetsPolicy::new(vec![vec![0]], 3);
+        assert_eq!(p.sets.len(), 3);
+    }
+
+    #[test]
+    fn output_bound_hint_min_frontier() {
+        let mut queues = vec![q("A"), q("B")];
+        push(&mut queues[0], 10);
+        queues[1].advance_bound(TimestampBound(Timestamp::new(7)));
+        // min(front=10, bound=7) = 7; offset 0 -> bound 7.
+        assert_eq!(
+            output_bound_hint(&queues, 0),
+            TimestampBound(Timestamp::new(7))
+        );
+        assert_eq!(
+            output_bound_hint(&queues, 3),
+            TimestampBound(Timestamp::new(10))
+        );
+    }
+
+    #[test]
+    fn output_bound_hint_done_when_all_closed() {
+        let mut queues = vec![q("A")];
+        queues[0].close();
+        assert!(output_bound_hint(&queues, 0).is_done());
+    }
+}

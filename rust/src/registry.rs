@@ -1,0 +1,200 @@
+//! Calculator registry (§3.4: "each calculator included in a program is
+//! registered with the framework so that the graph configuration can
+//! reference it by name").
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use once_cell::sync::Lazy;
+
+use crate::calculator::{Calculator, Contract};
+use crate::error::{MpError, MpResult};
+use crate::graph::config::NodeConfig;
+
+/// Factory for one calculator type: the static `GetContract()` plus
+/// object construction. The contract may depend on the node config
+/// (variadic calculators such as Mux size their port lists from the
+/// number of connected streams).
+pub trait CalculatorFactory: Send + Sync {
+    /// `GetContract()`: declare expected inputs/outputs for this node.
+    fn contract(&self, node: &NodeConfig) -> MpResult<Contract>;
+    /// Construct a fresh calculator object for one graph run (§3.4: the
+    /// calculator object is destroyed when the graph finishes).
+    fn create(&self, node: &NodeConfig) -> MpResult<Box<dyn Calculator>>;
+}
+
+/// A factory built from two closures — the common case.
+pub struct FnFactory {
+    contract_fn: Box<dyn Fn(&NodeConfig) -> MpResult<Contract> + Send + Sync>,
+    create_fn: Box<dyn Fn(&NodeConfig) -> MpResult<Box<dyn Calculator>> + Send + Sync>,
+}
+
+impl FnFactory {
+    pub fn new(
+        contract_fn: impl Fn(&NodeConfig) -> MpResult<Contract> + Send + Sync + 'static,
+        create_fn: impl Fn(&NodeConfig) -> MpResult<Box<dyn Calculator>> + Send + Sync + 'static,
+    ) -> FnFactory {
+        FnFactory {
+            contract_fn: Box::new(contract_fn),
+            create_fn: Box::new(create_fn),
+        }
+    }
+}
+
+impl CalculatorFactory for FnFactory {
+    fn contract(&self, node: &NodeConfig) -> MpResult<Contract> {
+        (self.contract_fn)(node)
+    }
+
+    fn create(&self, node: &NodeConfig) -> MpResult<Box<dyn Calculator>> {
+        (self.create_fn)(node)
+    }
+}
+
+/// Name → factory map. A process-global instance is available through
+/// [`CalculatorRegistry::global`]; graphs may also be built against a
+/// private registry (hermetic tests).
+#[derive(Default)]
+pub struct CalculatorRegistry {
+    map: RwLock<HashMap<String, Arc<dyn CalculatorFactory>>>,
+}
+
+impl CalculatorRegistry {
+    pub fn new() -> CalculatorRegistry {
+        CalculatorRegistry::default()
+    }
+
+    /// The process-global registry, pre-populated with every built-in
+    /// calculator (the "collection of re-usable components" the paper
+    /// ships).
+    pub fn global() -> &'static CalculatorRegistry {
+        static GLOBAL: Lazy<CalculatorRegistry> = Lazy::new(|| {
+            let r = CalculatorRegistry::new();
+            crate::calculators::register_builtins(&r);
+            r
+        });
+        &GLOBAL
+    }
+
+    /// Register a factory under `name`. Re-registration replaces the
+    /// previous factory (useful for tests swapping implementations).
+    pub fn register(&self, name: &str, factory: Arc<dyn CalculatorFactory>) {
+        self.map.write().unwrap().insert(name.to_string(), factory);
+    }
+
+    /// Register from a pair of closures.
+    pub fn register_fn(
+        &self,
+        name: &str,
+        contract_fn: impl Fn(&NodeConfig) -> MpResult<Contract> + Send + Sync + 'static,
+        create_fn: impl Fn(&NodeConfig) -> MpResult<Box<dyn Calculator>> + Send + Sync + 'static,
+    ) {
+        self.register(name, Arc::new(FnFactory::new(contract_fn, create_fn)));
+    }
+
+    /// Look up a factory.
+    pub fn get(&self, name: &str) -> MpResult<Arc<dyn CalculatorFactory>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| MpError::UnknownCalculator(name.to_string()))
+    }
+
+    /// Is `name` registered?
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.read().unwrap().contains_key(name)
+    }
+
+    /// All registered names (sorted; diagnostics / CLI listing).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calculator::{CalculatorContext, ProcessOutcome};
+    use crate::packet::PacketType;
+
+    struct Nop;
+
+    impl Calculator for Nop {
+        fn process(&mut self, _ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let r = CalculatorRegistry::new();
+        r.register_fn(
+            "Nop",
+            |_| Ok(Contract::new().input("IN", PacketType::Any)),
+            |_| Ok(Box::new(Nop)),
+        );
+        assert!(r.contains("Nop"));
+        let f = r.get("Nop").unwrap();
+        let node = NodeConfig::new("Nop");
+        let c = f.contract(&node).unwrap();
+        assert_eq!(c.inputs.len(), 1);
+        let _calc = f.create(&node).unwrap();
+    }
+
+    #[test]
+    fn unknown_name_is_error() {
+        let r = CalculatorRegistry::new();
+        assert!(matches!(
+            r.get("Missing"),
+            Err(MpError::UnknownCalculator(_))
+        ));
+    }
+
+    #[test]
+    fn contract_can_depend_on_node_config() {
+        // Variadic contract: one input port per connected stream.
+        let r = CalculatorRegistry::new();
+        r.register_fn(
+            "Mux",
+            |node| {
+                Ok(Contract::new().input_repeated(
+                    "IN",
+                    PacketType::Any,
+                    node.input_count_with_tag("IN"),
+                ))
+            },
+            |_| Ok(Box::new(Nop)),
+        );
+        let mut node = NodeConfig::new("Mux");
+        for name in ["a", "b", "c"] {
+            node.inputs
+                .push(crate::graph::config::StreamBinding::tagged("IN", name));
+        }
+        let c = r.get("Mux").unwrap().contract(&node).unwrap();
+        assert_eq!(c.inputs.len(), 3);
+    }
+
+    #[test]
+    fn global_registry_has_builtins() {
+        let g = CalculatorRegistry::global();
+        assert!(g.contains("PassThroughCalculator"));
+        assert!(!g.names().is_empty());
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let r = CalculatorRegistry::new();
+        r.register_fn("X", |_| Ok(Contract::new()), |_| Ok(Box::new(Nop)));
+        r.register_fn(
+            "X",
+            |_| Ok(Contract::new().output("O", PacketType::Any)),
+            |_| Ok(Box::new(Nop)),
+        );
+        let c = r.get("X").unwrap().contract(&NodeConfig::new("X")).unwrap();
+        assert_eq!(c.outputs.len(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! The artifact manifest: `python/compile/aot.py` writes
+//! `artifacts/manifest.txt` describing every lowered model's I/O
+//! signature; the rust runtime reads it to validate tensors at the
+//! boundary. Deliberately a trivial line format (no JSON dependency):
+//!
+//! ```text
+//! # mp-artifacts v1
+//! model detector detector.hlo.txt
+//! input image f32 1,32,32,1
+//! output boxes f32 48,4
+//! output scores f32 48
+//! endmodel
+//! ```
+
+use crate::error::{MpError, MpResult};
+
+/// One tensor port of a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model entry.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> MpResult<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ModelSpec> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let err = |msg: &str| MpError::Parse {
+                line: ln + 1,
+                message: msg.to_string(),
+            };
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts[0] {
+                "model" => {
+                    if cur.is_some() {
+                        return Err(err("nested model"));
+                    }
+                    if parts.len() != 3 {
+                        return Err(err("model needs: model <name> <hlo-file>"));
+                    }
+                    cur = Some(ModelSpec {
+                        name: parts[1].to_string(),
+                        hlo_file: parts[2].to_string(),
+                        ..Default::default()
+                    });
+                }
+                "input" | "output" => {
+                    let model = cur.as_mut().ok_or_else(|| err("tensor outside model"))?;
+                    if parts.len() != 4 {
+                        return Err(err("tensor needs: input|output <name> <dtype> <d0,d1,..>"));
+                    }
+                    let shape: Result<Vec<usize>, _> =
+                        parts[3].split(',').map(|d| d.parse::<usize>()).collect();
+                    let spec = TensorSpec {
+                        name: parts[1].to_string(),
+                        dtype: parts[2].to_string(),
+                        shape: shape.map_err(|_| err("bad shape"))?,
+                    };
+                    if parts[0] == "input" {
+                        model.inputs.push(spec);
+                    } else {
+                        model.outputs.push(spec);
+                    }
+                }
+                "endmodel" => {
+                    let model = cur.take().ok_or_else(|| err("endmodel without model"))?;
+                    m.models.push(model);
+                }
+                other => return Err(err(&format!("unknown directive '{other}'"))),
+            }
+        }
+        if cur.is_some() {
+            return Err(MpError::Parse {
+                line: 0,
+                message: "unterminated model".into(),
+            });
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &str) -> MpResult<Manifest> {
+        Manifest::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("# mp-artifacts v1\n");
+        for m in &self.models {
+            out.push_str(&format!("model {} {}\n", m.name, m.hlo_file));
+            for t in &m.inputs {
+                out.push_str(&format!(
+                    "input {} {} {}\n",
+                    t.name,
+                    t.dtype,
+                    t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ));
+            }
+            for t in &m.outputs {
+                out.push_str(&format!(
+                    "output {} {} {}\n",
+                    t.name,
+                    t.dtype,
+                    t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ));
+            }
+            out.push_str("endmodel\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# mp-artifacts v1
+model detector detector.hlo.txt
+input image f32 1,32,32,1
+output boxes f32 48,4
+output scores f32 48
+endmodel
+model landmark landmark.hlo.txt
+input face f32 1,24,24,1
+output points f32 10,2
+endmodel
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 2);
+        let d = m.get("detector").unwrap();
+        assert_eq!(d.hlo_file, "detector.hlo.txt");
+        assert_eq!(d.inputs[0].shape, vec![1, 32, 32, 1]);
+        assert_eq!(d.outputs.len(), 2);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let m2 = Manifest::parse(&m.to_text()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("model onlyname\n").is_err());
+        assert!(Manifest::parse("input x f32 1,2\n").is_err());
+        assert!(Manifest::parse("model a b\ninput x f32 a,b\nendmodel\n").is_err());
+        assert!(Manifest::parse("model a b\n").is_err()); // unterminated
+        assert!(Manifest::parse("bogus\n").is_err());
+        assert!(Manifest::parse("model a b\nmodel c d\n").is_err()); // nested
+        assert!(Manifest::parse("endmodel\n").is_err());
+    }
+}

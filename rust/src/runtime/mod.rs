@@ -1,0 +1,303 @@
+//! The XLA/PJRT runtime: loads AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them on the request path —
+//! Python is never involved at run time.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! runtime runs a **dedicated inference-service thread** that owns the
+//! client and all compiled executables; calculators talk to it through
+//! a channel. This mirrors the paper's own deployment advice (§3.6):
+//! "attaching a heavy model-inference calculator to a separate executor
+//! can improve the performance of a real-time application".
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{MpError, MpResult};
+pub use manifest::{Manifest, ModelSpec, TensorSpec};
+
+/// A dense f32 tensor (the only dtype our models exchange at the
+/// boundary; bf16/int8 live inside the HLO).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+enum Request {
+    Infer {
+        model: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<MpResult<Vec<Tensor>>>,
+    },
+    ListModels {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the inference service. Safe to stash in a side
+/// packet and share across calculators/threads.
+#[derive(Clone)]
+pub struct InferenceEngine {
+    tx: mpsc::Sender<Request>,
+    // Keep a liveness guard so the service stops when the last handle
+    // drops.
+    _guard: Arc<EngineGuard>,
+}
+
+struct EngineGuard {
+    tx: mpsc::Sender<Request>,
+}
+
+impl Drop for EngineGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+impl InferenceEngine {
+    /// Start the service: load the manifest in `artifact_dir`, compile
+    /// every listed model on the PJRT CPU client, and serve requests.
+    pub fn start(artifact_dir: &str) -> MpResult<InferenceEngine> {
+        let manifest = Manifest::load(&format!("{artifact_dir}/manifest.txt"))?;
+        Self::start_with_manifest(artifact_dir, manifest)
+    }
+
+    /// Start with an explicit manifest (tests).
+    pub fn start_with_manifest(
+        artifact_dir: &str,
+        manifest: Manifest,
+    ) -> MpResult<InferenceEngine> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<MpResult<()>>();
+        let dir = artifact_dir.to_string();
+        std::thread::Builder::new()
+            .name("mp-inference".into())
+            .spawn(move || service_main(dir, manifest, rx, ready_tx))
+            .map_err(|e| MpError::Runtime(format!("spawn inference thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| MpError::Runtime("inference service died during init".into()))??;
+        Ok(InferenceEngine {
+            tx: tx.clone(),
+            _guard: Arc::new(EngineGuard { tx }),
+        })
+    }
+
+    /// Execute `model` on `inputs`. Blocks until the result is ready.
+    pub fn infer(&self, model: &str, inputs: Vec<Tensor>) -> MpResult<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Infer {
+                model: model.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| MpError::Runtime("inference service gone".into()))?;
+        rx.recv()
+            .map_err(|_| MpError::Runtime("inference service dropped request".into()))?
+    }
+
+    /// Names of the loaded models.
+    pub fn models(&self) -> Vec<String> {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Request::ListModels { reply }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ModelSpec,
+}
+
+fn service_main(
+    dir: String,
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<MpResult<()>>,
+) {
+    // Own the (non-Send) client on this thread.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(MpError::Runtime(format!("PjRtClient::cpu: {e}"))));
+            return;
+        }
+    };
+    let mut models: HashMap<String, LoadedModel> = HashMap::new();
+    for spec in manifest.models {
+        let path = format!("{dir}/{}", spec.hlo_file);
+        let load = (|| -> MpResult<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| MpError::Runtime(format!("load {path}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| MpError::Runtime(format!("compile {}: {e}", spec.name)))
+        })();
+        match load {
+            Ok(exe) => {
+                models.insert(spec.name.clone(), LoadedModel { exe, spec });
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::ListModels { reply } => {
+                let mut names: Vec<String> = models.keys().cloned().collect();
+                names.sort();
+                let _ = reply.send(names);
+            }
+            Request::Infer {
+                model,
+                inputs,
+                reply,
+            } => {
+                let _ = reply.send(run_model(&models, &model, inputs));
+            }
+        }
+    }
+}
+
+fn run_model(
+    models: &HashMap<String, LoadedModel>,
+    model: &str,
+    inputs: Vec<Tensor>,
+) -> MpResult<Vec<Tensor>> {
+    let m = models
+        .get(model)
+        .ok_or_else(|| MpError::Runtime(format!("unknown model '{model}'")))?;
+    if inputs.len() != m.spec.inputs.len() {
+        return Err(MpError::Runtime(format!(
+            "model '{model}' expects {} inputs, got {}",
+            m.spec.inputs.len(),
+            inputs.len()
+        )));
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (t, spec) in inputs.iter().zip(&m.spec.inputs) {
+        let want: usize = spec.shape.iter().product();
+        if t.data.len() != want {
+            return Err(MpError::Runtime(format!(
+                "model '{model}' input '{}' expects {:?} ({} elems), got {} elems",
+                spec.name,
+                spec.shape,
+                want,
+                t.data.len()
+            )));
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| MpError::Runtime(format!("reshape input: {e}")))?;
+        literals.push(lit);
+    }
+    let result = m
+        .exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| MpError::Runtime(format!("execute '{model}': {e}")))?;
+    let out = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| MpError::Runtime(format!("fetch result: {e}")))?;
+    // aot.py lowers with return_tuple=True: the output is always a tuple.
+    let parts = out
+        .to_tuple()
+        .map_err(|e| MpError::Runtime(format!("untuple result: {e}")))?;
+    if parts.len() != m.spec.outputs.len() {
+        return Err(MpError::Runtime(format!(
+            "model '{model}' declared {} outputs, produced {}",
+            m.spec.outputs.len(),
+            parts.len()
+        )));
+    }
+    let mut tensors = Vec::with_capacity(parts.len());
+    for (lit, spec) in parts.into_iter().zip(&m.spec.outputs) {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| MpError::Runtime(format!("read output '{}': {e}", spec.name)))?;
+        tensors.push(Tensor::new(spec.shape.clone(), data));
+    }
+    Ok(tensors)
+}
+
+/// Global engine cache so multiple graphs/examples share one service
+/// per artifact dir.
+static ENGINES: once_cell::sync::Lazy<Mutex<HashMap<String, InferenceEngine>>> =
+    once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (or start) the shared engine for an artifact directory.
+pub fn shared_engine(artifact_dir: &str) -> MpResult<InferenceEngine> {
+    let mut map = ENGINES.lock().unwrap();
+    if let Some(e) = map.get(artifact_dir) {
+        return Ok(e.clone());
+    }
+    let e = InferenceEngine::start(artifact_dir)?;
+    map.insert(artifact_dir.to_string(), e.clone());
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.data.len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn missing_manifest_is_clean_error() {
+        match InferenceEngine::start("/nonexistent/dir") {
+            Err(e) => assert!(matches!(e, MpError::Io(_) | MpError::Runtime(_))),
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+
+    // End-to-end engine tests live in rust/tests/runtime_e2e.rs and are
+    // skipped when `make artifacts` has not run.
+}

@@ -1,0 +1,303 @@
+//! Scheduler queues and executors (§4.1.1).
+//!
+//! Each graph has at least one scheduler queue; each queue has exactly
+//! one executor (a thread pool). Nodes are statically assigned to a
+//! queue. When a node becomes ready, a task is added to its queue — a
+//! **priority queue**: at initialization nodes are topologically sorted
+//! and prioritized by layout, nodes closer to the output side run first
+//! and sources last, which bounds in-flight work and favours draining
+//! the pipeline.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One schedulable unit: "run node `node_id` once".
+#[derive(Debug, Eq, PartialEq)]
+struct Task {
+    /// Higher runs first.
+    priority: u32,
+    /// FIFO tie-break (lower sequence first) for determinism.
+    seq: u64,
+    node_id: usize,
+}
+
+impl Ord for Task {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap by priority, then *earlier* seq first.
+        self.priority
+            .cmp(&other.priority)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Task {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct QueueInner {
+    heap: Mutex<BinaryHeap<Task>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A scheduler queue plus its executor threads (§4.1.1: "executors are
+/// responsible for actually running the task by invoking the
+/// calculator's code").
+pub struct SchedulerQueue {
+    pub name: String,
+    inner: Arc<QueueInner>,
+    seq: AtomicU64,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    num_threads: usize,
+}
+
+impl SchedulerQueue {
+    /// Create a queue; `num_threads == 0` means "based on the system's
+    /// capabilities".
+    pub fn new(name: &str, num_threads: usize) -> Arc<SchedulerQueue> {
+        let n = if num_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(4)
+        } else {
+            num_threads
+        };
+        Arc::new(SchedulerQueue {
+            name: name.to_string(),
+            inner: Arc::new(QueueInner {
+                heap: Mutex::new(BinaryHeap::new()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            }),
+            seq: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+            num_threads: n,
+        })
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.num_threads
+    }
+
+    /// Start the executor threads; each pops tasks and hands them to
+    /// `run` (the graph's node-execution entry point).
+    pub fn start(&self, run: Arc<dyn Fn(usize) + Send + Sync>) {
+        let mut workers = self.workers.lock().unwrap();
+        assert!(workers.is_empty(), "queue '{}' already started", self.name);
+        for wi in 0..self.num_threads {
+            let inner = Arc::clone(&self.inner);
+            let run = Arc::clone(&run);
+            let name = format!("mp-{}-{}", self.name, wi);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || loop {
+                        let task = {
+                            let mut heap = inner.heap.lock().unwrap();
+                            loop {
+                                if let Some(t) = heap.pop() {
+                                    break Some(t);
+                                }
+                                if inner.shutdown.load(Ordering::Acquire) {
+                                    break None;
+                                }
+                                heap = inner.cv.wait(heap).unwrap();
+                            }
+                        };
+                        match task {
+                            Some(t) => run(t.node_id),
+                            None => return,
+                        }
+                    })
+                    .expect("spawn scheduler worker"),
+            );
+        }
+    }
+
+    /// Enqueue a node run.
+    pub fn push(&self, node_id: usize, priority: u32) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut heap = self.inner.heap.lock().unwrap();
+        heap.push(Task {
+            priority,
+            seq,
+            node_id,
+        });
+        drop(heap);
+        self.inner.cv.notify_one();
+    }
+
+    /// Number of queued (not yet running) tasks.
+    pub fn len(&self) -> usize {
+        self.inner.heap.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop the executor threads after the queue drains.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for SchedulerQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Compute per-node priorities from the graph layout (§4.1.1): nodes are
+/// topologically sorted; nodes closer to the output side of the graph
+/// get **higher** priority, sources get the lowest. `consumers[i]` lists
+/// the node ids fed by node `i` (back edges must be excluded by the
+/// caller); `is_source[i]` marks nodes without input streams.
+pub fn layout_priorities(consumers: &[Vec<usize>], is_source: &[bool]) -> Vec<u32> {
+    let n = consumers.len();
+    // depth-to-sink via reverse topological relaxation (DAG after back
+    // edges are removed; cycles would already have failed validation).
+    let mut depth = vec![0u32; n];
+    // Kahn ordering on the forward graph, then relax in reverse.
+    let mut indeg = vec![0usize; n];
+    for cs in consumers {
+        for &c in cs {
+            indeg[c] += 1;
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut stack: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    while let Some(u) = stack.pop() {
+        order.push(u);
+        for &c in &consumers[u] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                stack.push(c);
+            }
+        }
+    }
+    for &u in order.iter().rev() {
+        for &c in &consumers[u] {
+            depth[u] = depth[u].max(depth[c] + 1);
+        }
+    }
+    let max_depth = depth.iter().copied().max().unwrap_or(0);
+    (0..n)
+        .map(|i| {
+            if is_source[i] {
+                0 // sources always lowest
+            } else {
+                // closer to output (small depth) -> higher priority
+                1 + (max_depth - depth[i])
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn task_ordering_priority_then_fifo() {
+        let mut h = BinaryHeap::new();
+        h.push(Task {
+            priority: 1,
+            seq: 0,
+            node_id: 10,
+        });
+        h.push(Task {
+            priority: 5,
+            seq: 1,
+            node_id: 20,
+        });
+        h.push(Task {
+            priority: 5,
+            seq: 2,
+            node_id: 30,
+        });
+        assert_eq!(h.pop().unwrap().node_id, 20); // highest prio, earliest seq
+        assert_eq!(h.pop().unwrap().node_id, 30);
+        assert_eq!(h.pop().unwrap().node_id, 10);
+    }
+
+    #[test]
+    fn queue_runs_tasks() {
+        let q = SchedulerQueue::new("t", 2);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        q.start(Arc::new(move |_id| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        for i in 0..100 {
+            q.push(i, 1);
+        }
+        while count.load(Ordering::SeqCst) < 100 {
+            std::thread::yield_now();
+        }
+        q.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drains() {
+        let q = SchedulerQueue::new("t", 1);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hit);
+        q.start(Arc::new(move |_| {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        q.push(0, 0);
+        while hit.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        q.shutdown();
+        q.shutdown();
+    }
+
+    #[test]
+    fn zero_threads_uses_system_capabilities() {
+        let q = SchedulerQueue::new("t", 0);
+        assert!(q.num_threads() >= 1);
+    }
+
+    #[test]
+    fn priorities_favor_output_side() {
+        // 0 -> 1 -> 2 (source -> mid -> sink)
+        let consumers = vec![vec![1], vec![2], vec![]];
+        let is_source = vec![true, false, false];
+        let p = layout_priorities(&consumers, &is_source);
+        assert_eq!(p[0], 0, "source lowest");
+        assert!(p[2] > p[1], "sink outranks mid: {p:?}");
+    }
+
+    #[test]
+    fn priorities_diamond() {
+        //    0
+        //   / \
+        //  1   2
+        //   \ /
+        //    3
+        let consumers = vec![vec![1, 2], vec![3], vec![3], vec![]];
+        let is_source = vec![true, false, false, false];
+        let p = layout_priorities(&consumers, &is_source);
+        assert_eq!(p[1], p[2], "symmetric branches equal priority");
+        assert!(p[3] > p[1]);
+        assert_eq!(p[0], 0);
+    }
+
+    #[test]
+    fn priorities_empty_graph() {
+        assert!(layout_priorities(&[], &[]).is_empty());
+    }
+}

@@ -1,0 +1,290 @@
+//! The serving front-end: request intake + dynamic batching over the
+//! AOT-compiled detector variants.
+//!
+//! This is the "deploy it as a performant application" half of the
+//! paper's pitch, structured like a model-serving router: callers
+//! submit frames; a batcher thread coalesces requests up to
+//! `max_batch`/`max_wait`, executes the right `detector_bN` executable,
+//! decodes and replies per-request, and records latency/throughput
+//! metrics. Python never appears on this path.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{MpError, MpResult};
+use crate::metrics::{Counter, LatencyRecorder, LatencySummary};
+use crate::perception::types::{non_max_suppression, Detection, Detections, Rect};
+use crate::perception::ImageFrame;
+use crate::runtime::{InferenceEngine, Tensor};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifact_dir: String,
+    /// Largest admitted batch (must have a compiled variant).
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Detector decode parameters.
+    pub min_score: f32,
+    pub iou_threshold: f32,
+    /// Input resolution the detector was compiled for.
+    pub input_size: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifact_dir: "artifacts".into(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            min_score: 0.5,
+            iou_threshold: 0.4,
+            input_size: 32,
+        }
+    }
+}
+
+struct Job {
+    tensor: Vec<f32>,
+    reply: mpsc::Sender<MpResult<Detections>>,
+    enqueued: Instant,
+}
+
+/// Aggregated server statistics.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests: Counter,
+    pub batches: Counter,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: Counter,
+    pub errors: Counter,
+    pub e2e_latency: LatencyRecorder,
+    pub queue_latency: LatencyRecorder,
+    pub infer_latency: LatencyRecorder,
+}
+
+impl ServerMetrics {
+    pub fn report(&self) -> String {
+        let e2e = self.e2e_latency.summary();
+        let q = self.queue_latency.summary();
+        let inf = self.infer_latency.summary();
+        let batches = self.batches.get().max(1);
+        format!(
+            "requests={} batches={} mean_batch={:.2} errors={}\n  e2e:   {}\n  queue: {}\n  infer: {}",
+            self.requests.get(),
+            self.batches.get(),
+            self.batched_requests.get() as f64 / batches as f64,
+            self.errors.get(),
+            e2e,
+            q,
+            inf
+        )
+    }
+
+    pub fn e2e(&self) -> LatencySummary {
+        self.e2e_latency.summary()
+    }
+}
+
+/// A running detection server. Cheap to clone handles via [`PipelineServer::handle`].
+pub struct PipelineServer {
+    tx: mpsc::Sender<Job>,
+    metrics: Arc<ServerMetrics>,
+    cfg: ServerConfig,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Job>,
+    input_size: usize,
+}
+
+impl ServerHandle {
+    /// Submit a frame; returns a receiver for the detections.
+    pub fn submit(&self, frame: &ImageFrame) -> mpsc::Receiver<MpResult<Detections>> {
+        let (reply, rx) = mpsc::channel();
+        let tensor = if frame.width == self.input_size && frame.height == self.input_size {
+            frame.to_tensor()
+        } else {
+            frame.resized(self.input_size, self.input_size).to_tensor()
+        };
+        let job = Job {
+            tensor,
+            reply,
+            enqueued: Instant::now(),
+        };
+        let _ = self.tx.send(job); // a dropped server yields RecvError below
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn detect(&self, frame: &ImageFrame) -> MpResult<Detections> {
+        self.submit(frame)
+            .recv()
+            .map_err(|_| MpError::Runtime("server stopped".into()))?
+    }
+}
+
+impl PipelineServer {
+    /// Start the server: loads artifacts (shared engine) and spawns the
+    /// batcher thread.
+    pub fn start(cfg: ServerConfig) -> MpResult<PipelineServer> {
+        let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
+        // Supported batch variants, descending.
+        let mut variants: Vec<usize> = Vec::new();
+        for m in engine.models() {
+            if m == "detector" {
+                variants.push(1);
+            } else if let Some(n) = m.strip_prefix("detector_b") {
+                if let Ok(n) = n.parse::<usize>() {
+                    variants.push(n);
+                }
+            }
+        }
+        if variants.is_empty() {
+            return Err(MpError::Runtime(
+                "no detector models in the artifact manifest".into(),
+            ));
+        }
+        variants.sort_unstable();
+        let metrics = Arc::new(ServerMetrics::default());
+        let (tx, rx) = mpsc::channel::<Job>();
+        let m2 = Arc::clone(&metrics);
+        let cfg2 = cfg.clone();
+        let worker = std::thread::Builder::new()
+            .name("mp-serving-batcher".into())
+            .spawn(move || batcher_main(cfg2, engine, variants, rx, m2))
+            .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
+        Ok(PipelineServer {
+            tx,
+            metrics,
+            cfg,
+            worker: Some(worker),
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            tx: self.tx.clone(),
+            input_size: self.cfg.input_size,
+        }
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+}
+
+impl Drop for PipelineServer {
+    fn drop(&mut self) {
+        // Closing the channel stops the batcher after it drains.
+        let (dead_tx, _) = mpsc::channel();
+        self.tx = dead_tx;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_main(
+    cfg: ServerConfig,
+    engine: InferenceEngine,
+    variants: Vec<usize>,
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<ServerMetrics>,
+) {
+    let frame_elems = cfg.input_size * cfg.input_size;
+    loop {
+        // Block for the first job of a batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => batch.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.batches.inc();
+        metrics.batched_requests.add(batch.len() as u64);
+        for j in &batch {
+            metrics
+                .queue_latency
+                .record(j.enqueued.elapsed());
+        }
+
+        // Pad to the smallest compiled variant >= batch len.
+        let bs = *variants
+            .iter()
+            .find(|&&v| v >= batch.len())
+            .unwrap_or(variants.last().unwrap());
+        let model = if bs == 1 {
+            "detector".to_string()
+        } else {
+            format!("detector_b{bs}")
+        };
+        let mut data = Vec::with_capacity(bs * frame_elems);
+        for j in &batch {
+            data.extend_from_slice(&j.tensor);
+        }
+        while data.len() < bs * frame_elems {
+            // replicate the last frame as padding
+            let start = data.len() - frame_elems;
+            data.extend_from_within(start..start + frame_elems);
+        }
+        let t0 = Instant::now();
+        let result = engine.infer(
+            &model,
+            vec![Tensor::new(
+                vec![bs, cfg.input_size, cfg.input_size, 1],
+                data,
+            )],
+        );
+        metrics.infer_latency.record(t0.elapsed());
+
+        match result {
+            Ok(outputs) => {
+                let boxes = &outputs[0];
+                let scores = &outputs[1];
+                let n = scores.data.len() / bs;
+                for (row, job) in batch.iter().enumerate() {
+                    let mut dets: Detections = Vec::new();
+                    for i in 0..n {
+                        let s = scores.data[row * n + i];
+                        if s >= cfg.min_score {
+                            let o = (row * n + i) * 4;
+                            let b = &boxes.data[o..o + 4];
+                            dets.push(Detection::new(
+                                Rect::new(b[0], b[1], b[2], b[3]).clamped(),
+                                s,
+                                0,
+                            ));
+                        }
+                    }
+                    let dets = non_max_suppression(dets, cfg.iou_threshold);
+                    metrics.requests.inc();
+                    metrics.e2e_latency.record(job.enqueued.elapsed());
+                    let _ = job.reply.send(Ok(dets));
+                }
+            }
+            Err(e) => {
+                for job in &batch {
+                    metrics.errors.inc();
+                    let _ = job.reply.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}

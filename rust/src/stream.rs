@@ -1,0 +1,295 @@
+//! Streams: timestamped packet queues between nodes (§3.2).
+//!
+//! An output stream can be connected to any number of input streams of
+//! the same type; **each input stream receives its own copy of the
+//! packets and maintains its own queue**, so the receiving node consumes
+//! at its own pace. Packets on a stream must have monotonically
+//! increasing timestamps, and every stream carries a timestamp bound
+//! (§4.1.2).
+
+use std::collections::VecDeque;
+
+use crate::error::{MpError, MpResult};
+use crate::packet::Packet;
+use crate::timestamp::{Timestamp, TimestampBound};
+
+/// The per-consumer receive queue of one input stream (§3.2: "maintains
+/// its own queue to allow the receiving node to consume the packets at
+/// its own pace").
+#[derive(Debug)]
+pub struct InputStreamQueue {
+    /// Stream name (diagnostics / tracer).
+    pub name: String,
+    queue: VecDeque<(Packet, u64)>,
+    bound: TimestampBound,
+    /// Monotonic count of packets ever enqueued (tracer/metrics).
+    total_added: u64,
+    /// High-water mark of the queue length (visualizer, flow control).
+    max_depth: usize,
+}
+
+impl InputStreamQueue {
+    pub fn new(name: impl Into<String>) -> InputStreamQueue {
+        InputStreamQueue {
+            name: name.into(),
+            queue: VecDeque::new(),
+            bound: TimestampBound::UNSTARTED,
+            total_added: 0,
+            max_depth: 0,
+        }
+    }
+
+    /// Enqueue a packet, enforcing the per-stream monotonicity invariant
+    /// (§4.1.2). On success the bound advances to `ts + 1`.
+    /// Uses a queue-local arrival sequence; the graph runner uses
+    /// [`InputStreamQueue::push_seq`] with a node-wide counter so the
+    /// Immediate policy can order arrivals *across* streams.
+    pub fn push(&mut self, packet: Packet) -> MpResult<()> {
+        let seq = self.total_added;
+        self.push_seq(packet, seq)
+    }
+
+    /// Enqueue with an explicit arrival sequence number (shared across
+    /// all queues of one node).
+    pub fn push_seq(&mut self, packet: Packet, seq: u64) -> MpResult<()> {
+        let ts = packet.timestamp();
+        if !ts.is_allowed_in_stream() {
+            return Err(MpError::TimestampViolation {
+                stream: self.name.clone(),
+                packet_ts: ts.raw(),
+                bound: self.bound.0.raw(),
+            });
+        }
+        if self.bound.is_settled(ts) || self.bound.is_done() {
+            return Err(MpError::TimestampViolation {
+                stream: self.name.clone(),
+                packet_ts: ts.raw(),
+                bound: self.bound.0.raw(),
+            });
+        }
+        self.bound = TimestampBound::after_packet(ts);
+        self.queue.push_back((packet, seq));
+        self.total_added += 1;
+        self.max_depth = self.max_depth.max(self.queue.len());
+        Ok(())
+    }
+
+    /// Advance the bound without a packet (explicit bound propagation,
+    /// footnote 6). Backwards moves are ignored (monotonic).
+    pub fn advance_bound(&mut self, bound: TimestampBound) -> bool {
+        self.bound.advance_to(bound)
+    }
+
+    /// Close the stream: bound becomes Done.
+    pub fn close(&mut self) {
+        self.bound = TimestampBound::DONE;
+    }
+
+    /// Current timestamp bound.
+    pub fn bound(&self) -> TimestampBound {
+        self.bound
+    }
+
+    /// Stream is closed and nothing is left to consume.
+    pub fn is_exhausted(&self) -> bool {
+        self.bound.is_done() && self.queue.is_empty()
+    }
+
+    /// Timestamp of the front (oldest unconsumed) packet.
+    pub fn front_timestamp(&self) -> Option<Timestamp> {
+        self.queue.front().map(|(p, _)| p.timestamp())
+    }
+
+    /// Arrival sequence of the front packet (Immediate-policy ordering).
+    pub fn front_seq(&self) -> Option<u64> {
+        self.queue.front().map(|(_, s)| *s)
+    }
+
+    /// The **settled frontier** of this stream for the default input
+    /// policy: if a packet is queued, its timestamp (a settled timestamp
+    /// carrying data); otherwise the bound tells how far emptiness is
+    /// certain.
+    pub fn frontier(&self) -> Frontier {
+        match self.queue.front() {
+            Some((p, _)) => Frontier::Packet(p.timestamp()),
+            None => Frontier::EmptyUntil(self.bound),
+        }
+    }
+
+    /// Pop the front packet iff its timestamp equals `ts`.
+    pub fn pop_at(&mut self, ts: Timestamp) -> Option<Packet> {
+        if self.queue.front().map(|(p, _)| p.timestamp()) == Some(ts) {
+            self.queue.pop_front().map(|(p, _)| p)
+        } else {
+            None
+        }
+    }
+
+    /// Pop the front packet unconditionally (Immediate policy).
+    pub fn pop_front(&mut self) -> Option<Packet> {
+        self.queue.pop_front().map(|(p, _)| p)
+    }
+
+    /// Drop all queued packets with timestamp < `ts` (used by real-time
+    /// load-shedding policies). Returns how many were dropped.
+    pub fn discard_before(&mut self, ts: Timestamp) -> usize {
+        let mut dropped = 0;
+        while let Some((front, _)) = self.queue.front() {
+            if front.timestamp() < ts {
+                self.queue.pop_front();
+                dropped += 1;
+            } else {
+                break;
+            }
+        }
+        dropped
+    }
+
+    /// Number of packets currently queued (flow control input, §4.1.4).
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Lifetime count of packets enqueued.
+    pub fn total_added(&self) -> u64 {
+        self.total_added
+    }
+
+    /// High-water mark of queue depth.
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+}
+
+/// Where a stream's knowledge currently ends, from the consumer's view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frontier {
+    /// A packet with this timestamp is queued (settled, has data).
+    Packet(Timestamp),
+    /// No packet queued; all timestamps `< bound` are settled-empty.
+    EmptyUntil(TimestampBound),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(ts: i64) -> Packet {
+        Packet::new(ts, Timestamp::new(ts))
+    }
+
+    #[test]
+    fn push_advances_bound() {
+        let mut q = InputStreamQueue::new("s");
+        assert_eq!(q.bound(), TimestampBound::UNSTARTED);
+        q.push(pkt(10)).unwrap();
+        assert_eq!(q.bound(), TimestampBound(Timestamp::new(11)));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn monotonicity_enforced() {
+        let mut q = InputStreamQueue::new("s");
+        q.push(pkt(10)).unwrap();
+        // equal timestamp: bound is 11, 10 is settled -> rejected
+        let err = q.push(pkt(10)).unwrap_err();
+        assert!(matches!(err, MpError::TimestampViolation { .. }));
+        // going backwards: rejected
+        assert!(q.push(pkt(5)).is_err());
+        // strictly forward: fine
+        q.push(pkt(11)).unwrap();
+    }
+
+    #[test]
+    fn rejects_after_close() {
+        let mut q = InputStreamQueue::new("s");
+        q.close();
+        assert!(q.push(pkt(1)).is_err());
+        assert!(q.is_exhausted());
+    }
+
+    #[test]
+    fn prestream_then_series() {
+        let mut q = InputStreamQueue::new("s");
+        q.push(Packet::new(0u8, Timestamp::PRESTREAM)).unwrap();
+        assert_eq!(q.bound(), TimestampBound(Timestamp::MIN));
+        q.push(pkt(0)).unwrap();
+        // a second PreStream packet is illegal
+        let mut q2 = InputStreamQueue::new("s2");
+        q2.push(Packet::new(0u8, Timestamp::PRESTREAM)).unwrap();
+        assert!(q2.push(Packet::new(1u8, Timestamp::PRESTREAM)).is_err());
+    }
+
+    #[test]
+    fn poststream_closes() {
+        let mut q = InputStreamQueue::new("s");
+        q.push(Packet::new(0u8, Timestamp::POSTSTREAM)).unwrap();
+        assert!(q.bound().is_done());
+        assert!(!q.is_exhausted()); // packet still queued
+        q.pop_front();
+        assert!(q.is_exhausted());
+    }
+
+    #[test]
+    fn explicit_bound_is_monotonic() {
+        let mut q = InputStreamQueue::new("s");
+        assert!(q.advance_bound(TimestampBound(Timestamp::new(50))));
+        assert!(!q.advance_bound(TimestampBound(Timestamp::new(20))));
+        // a packet beyond the bound is fine; before it is not
+        assert!(q.push(pkt(20)).is_err());
+        q.push(pkt(50)).unwrap();
+    }
+
+    #[test]
+    fn frontier_reports_packet_or_bound() {
+        let mut q = InputStreamQueue::new("s");
+        assert_eq!(
+            q.frontier(),
+            Frontier::EmptyUntil(TimestampBound::UNSTARTED)
+        );
+        q.push(pkt(10)).unwrap();
+        assert_eq!(q.frontier(), Frontier::Packet(Timestamp::new(10)));
+        q.pop_at(Timestamp::new(10)).unwrap();
+        assert_eq!(
+            q.frontier(),
+            Frontier::EmptyUntil(TimestampBound(Timestamp::new(11)))
+        );
+    }
+
+    #[test]
+    fn pop_at_only_matches_front() {
+        let mut q = InputStreamQueue::new("s");
+        q.push(pkt(10)).unwrap();
+        q.push(pkt(20)).unwrap();
+        assert!(q.pop_at(Timestamp::new(20)).is_none());
+        assert!(q.pop_at(Timestamp::new(10)).is_some());
+        assert!(q.pop_at(Timestamp::new(20)).is_some());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn discard_before_drops_stale() {
+        let mut q = InputStreamQueue::new("s");
+        for t in [10, 20, 30] {
+            q.push(pkt(t)).unwrap();
+        }
+        assert_eq!(q.discard_before(Timestamp::new(25)), 2);
+        assert_eq!(q.front_timestamp(), Some(Timestamp::new(30)));
+    }
+
+    #[test]
+    fn stats_track_depth_and_total() {
+        let mut q = InputStreamQueue::new("s");
+        for t in [1, 2, 3] {
+            q.push(pkt(t)).unwrap();
+        }
+        q.pop_front();
+        q.push(pkt(4)).unwrap();
+        assert_eq!(q.total_added(), 4);
+        assert_eq!(q.max_depth(), 3);
+    }
+}

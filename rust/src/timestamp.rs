@@ -1,0 +1,287 @@
+//! Timestamps and timestamp bounds (§3.1, §4.1.2).
+//!
+//! A MediaPipe timestamp is a monotonically increasing value within a
+//! stream; its *primary* role is to serve as a synchronization key. The
+//! value range is `i64` microseconds plus a handful of special values at
+//! the extremes, mirroring upstream MediaPipe:
+//!
+//! ```text
+//!   Unset < Unstarted < PreStream < Min <= normal values <= Max < PostStream < Done
+//! ```
+//!
+//! * `PreStream` — a packet delivered before the time-series starts
+//!   (e.g. a header); only valid as the first packet of a stream.
+//! * `PostStream` — a packet delivered after the series ends (e.g. a
+//!   whole-stream aggregate); must be the only packet or follow Max.
+//! * `Done` — the bound value signalling "no more packets, ever".
+//!
+//! Each stream carries a [`TimestampBound`]: the lowest timestamp a new
+//! packet on the stream may still have. When a packet with timestamp `T`
+//! arrives, the bound advances to `T + 1` (§4.1.2), which is how
+//! downstream nodes learn that timestamps `<= T` are *settled*.
+
+use std::fmt;
+
+const UNSET: i64 = i64::MIN;
+const UNSTARTED: i64 = i64::MIN + 1;
+const PRESTREAM: i64 = i64::MIN + 2;
+const MIN: i64 = i64::MIN + 3;
+const MAX: i64 = i64::MAX - 2;
+const POSTSTREAM: i64 = i64::MAX - 1;
+const DONE: i64 = i64::MAX;
+
+/// A packet timestamp: i64 microseconds with reserved special values.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Timestamp(i64);
+
+impl Timestamp {
+    /// Timestamp of a default-constructed (unset) packet.
+    pub const UNSET: Timestamp = Timestamp(UNSET);
+    /// Before any packet: initial bound value of every stream.
+    pub const UNSTARTED: Timestamp = Timestamp(UNSTARTED);
+    /// Header packets: delivered before the time series proper.
+    pub const PRESTREAM: Timestamp = Timestamp(PRESTREAM);
+    /// Smallest normal timestamp.
+    pub const MIN: Timestamp = Timestamp(MIN);
+    /// Largest normal timestamp.
+    pub const MAX: Timestamp = Timestamp(MAX);
+    /// Aggregate packets: delivered after the time series ends.
+    pub const POSTSTREAM: Timestamp = Timestamp(POSTSTREAM);
+    /// Bound value meaning the stream is closed: no packet will ever
+    /// arrive. Not a valid packet timestamp.
+    pub const DONE: Timestamp = Timestamp(DONE);
+
+    /// A normal timestamp from a microsecond value. Panics if the value
+    /// collides with a reserved special value.
+    pub fn new(micros: i64) -> Timestamp {
+        assert!(
+            (MIN..=MAX).contains(&micros),
+            "timestamp {micros} outside the normal range"
+        );
+        Timestamp(micros)
+    }
+
+    /// Construct from a raw value that may be special (used by config
+    /// parsing and trace import).
+    pub fn from_raw(raw: i64) -> Timestamp {
+        Timestamp(raw)
+    }
+
+    /// The raw i64, including special values.
+    pub fn raw(self) -> i64 {
+        self.0
+    }
+
+    /// Microsecond value; panics on special timestamps.
+    pub fn micros(self) -> i64 {
+        assert!(self.is_normal(), "micros() on special timestamp {self:?}");
+        self.0
+    }
+
+    /// True for values in `[MIN, MAX]` (i.e. an actual instant).
+    pub fn is_normal(self) -> bool {
+        (MIN..=MAX).contains(&self.0)
+    }
+
+    /// True if this timestamp may appear on a packet in a stream
+    /// (normal, PreStream or PostStream).
+    pub fn is_allowed_in_stream(self) -> bool {
+        self.is_normal() || self == Timestamp::PRESTREAM || self == Timestamp::POSTSTREAM
+    }
+
+    /// The smallest timestamp a following packet may carry — the bound
+    /// value after observing a packet at `self` (§4.1.2): normally
+    /// `self + 1`; `PreStream` is followed by `Min`; `Max` and
+    /// `PostStream` are followed by `Done`.
+    pub fn next_allowed_in_stream(self) -> Timestamp {
+        match self.0 {
+            PRESTREAM => Timestamp::MIN,
+            MAX | POSTSTREAM => Timestamp::DONE,
+            v if self.is_normal() => Timestamp(v + 1),
+            _ => panic!("next_allowed_in_stream on {self:?}"),
+        }
+    }
+
+    /// Successor value used for bound arithmetic (saturating at DONE).
+    pub fn successor(self) -> Timestamp {
+        if self.0 >= DONE {
+            Timestamp::DONE
+        } else {
+            Timestamp(self.0 + 1)
+        }
+    }
+
+    /// `self + offset` µs, clamped to the normal range. Used by
+    /// timestamp-offset bound propagation.
+    pub fn add_offset(self, offset: i64) -> Timestamp {
+        if !self.is_normal() {
+            return self;
+        }
+        Timestamp(self.0.saturating_add(offset).clamp(MIN, MAX))
+    }
+}
+
+impl fmt::Debug for Timestamp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.0 {
+            UNSET => write!(f, "Timestamp::Unset"),
+            UNSTARTED => write!(f, "Timestamp::Unstarted"),
+            PRESTREAM => write!(f, "Timestamp::PreStream"),
+            POSTSTREAM => write!(f, "Timestamp::PostStream"),
+            DONE => write!(f, "Timestamp::Done"),
+            v => write!(f, "Timestamp({v})"),
+        }
+    }
+}
+
+impl fmt::Display for Timestamp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// The lowest possible timestamp allowed for a *new* packet on a stream
+/// (§4.1.2). A timestamp `T` is **settled** for the stream once
+/// `T < bound`: either a packet at `T` already arrived, or it is certain
+/// none ever will.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TimestampBound(pub Timestamp);
+
+impl TimestampBound {
+    /// The initial bound of every stream: nothing has happened yet.
+    pub const UNSTARTED: TimestampBound = TimestampBound(Timestamp::UNSTARTED);
+    /// The final bound: the stream is closed.
+    pub const DONE: TimestampBound = TimestampBound(Timestamp::DONE);
+
+    /// Is `ts` settled under this bound?
+    pub fn is_settled(self, ts: Timestamp) -> bool {
+        ts < self.0
+    }
+
+    /// Is the stream closed?
+    pub fn is_done(self) -> bool {
+        self.0 == Timestamp::DONE
+    }
+
+    /// Bound after a packet at `ts` arrives.
+    pub fn after_packet(ts: Timestamp) -> TimestampBound {
+        TimestampBound(ts.next_allowed_in_stream())
+    }
+
+    /// Monotonic merge: a bound can only move forward. Returns whether
+    /// it actually advanced.
+    pub fn advance_to(&mut self, other: TimestampBound) -> bool {
+        if other.0 > self.0 {
+            self.0 = other.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl fmt::Debug for TimestampBound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bound({:?})", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_value_ordering() {
+        assert!(Timestamp::UNSET < Timestamp::UNSTARTED);
+        assert!(Timestamp::UNSTARTED < Timestamp::PRESTREAM);
+        assert!(Timestamp::PRESTREAM < Timestamp::MIN);
+        assert!(Timestamp::MIN < Timestamp::new(0));
+        assert!(Timestamp::new(0) < Timestamp::MAX);
+        assert!(Timestamp::MAX < Timestamp::POSTSTREAM);
+        assert!(Timestamp::POSTSTREAM < Timestamp::DONE);
+    }
+
+    #[test]
+    fn normal_range_classification() {
+        assert!(Timestamp::new(42).is_normal());
+        assert!(Timestamp::MIN.is_normal());
+        assert!(Timestamp::MAX.is_normal());
+        assert!(!Timestamp::PRESTREAM.is_normal());
+        assert!(!Timestamp::DONE.is_normal());
+    }
+
+    #[test]
+    fn allowed_in_stream() {
+        assert!(Timestamp::new(0).is_allowed_in_stream());
+        assert!(Timestamp::PRESTREAM.is_allowed_in_stream());
+        assert!(Timestamp::POSTSTREAM.is_allowed_in_stream());
+        assert!(!Timestamp::UNSET.is_allowed_in_stream());
+        assert!(!Timestamp::DONE.is_allowed_in_stream());
+        assert!(!Timestamp::UNSTARTED.is_allowed_in_stream());
+    }
+
+    #[test]
+    fn next_allowed_semantics() {
+        // §4.1.2: packet at T advances the bound to T+1.
+        assert_eq!(
+            Timestamp::new(10).next_allowed_in_stream(),
+            Timestamp::new(11)
+        );
+        // PreStream is followed by the series proper.
+        assert_eq!(Timestamp::PRESTREAM.next_allowed_in_stream(), Timestamp::MIN);
+        // Max / PostStream end the stream.
+        assert_eq!(Timestamp::MAX.next_allowed_in_stream(), Timestamp::DONE);
+        assert_eq!(
+            Timestamp::POSTSTREAM.next_allowed_in_stream(),
+            Timestamp::DONE
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn next_allowed_rejects_unset() {
+        Timestamp::UNSET.next_allowed_in_stream();
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_special_collision() {
+        Timestamp::new(i64::MAX);
+    }
+
+    #[test]
+    fn settled_definition() {
+        // "a timestamp is settled for a stream once it is lower than the
+        // timestamp bound" (§4.1.3).
+        let bound = TimestampBound::after_packet(Timestamp::new(20));
+        assert!(bound.is_settled(Timestamp::new(20)));
+        assert!(bound.is_settled(Timestamp::new(10)));
+        assert!(!bound.is_settled(Timestamp::new(21)));
+        assert!(!bound.is_settled(Timestamp::new(30)));
+    }
+
+    #[test]
+    fn bound_is_monotonic() {
+        let mut b = TimestampBound::UNSTARTED;
+        assert!(b.advance_to(TimestampBound::after_packet(Timestamp::new(5))));
+        // Moving backwards is a no-op.
+        assert!(!b.advance_to(TimestampBound::after_packet(Timestamp::new(3))));
+        assert_eq!(b, TimestampBound(Timestamp::new(6)));
+        assert!(b.advance_to(TimestampBound::DONE));
+        assert!(b.is_done());
+    }
+
+    #[test]
+    fn add_offset_clamps() {
+        assert_eq!(Timestamp::new(10).add_offset(5), Timestamp::new(15));
+        assert_eq!(Timestamp::MAX.add_offset(10), Timestamp::MAX);
+        // Special values pass through untouched.
+        assert_eq!(Timestamp::PRESTREAM.add_offset(10), Timestamp::PRESTREAM);
+    }
+
+    #[test]
+    fn successor_saturates() {
+        assert_eq!(Timestamp::DONE.successor(), Timestamp::DONE);
+        assert_eq!(Timestamp::new(1).successor(), Timestamp::new(2));
+    }
+}

@@ -1,0 +1,254 @@
+//! Trace export/import (§5.1-5.2): traces are written to disk and fed
+//! to the visualizer.
+//!
+//! Two formats:
+//! * **mptrace TSV** — our native format, loss-free, loadable back by
+//!   the visualizer (`load_tsv`).
+//! * **Chrome trace JSON** — write-only, loadable in chrome://tracing
+//!   or Perfetto for the Timeline view of Fig. 4.
+
+use std::io::Write;
+
+use crate::error::{MpError, MpResult};
+use crate::tracer::{EventType, TraceEvent, Tracer};
+
+/// A self-contained exported trace (events + name tables).
+#[derive(Clone, Debug, Default)]
+pub struct TraceFile {
+    pub node_names: Vec<String>,
+    pub stream_names: Vec<String>,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceFile {
+    /// Capture the tracer's current contents.
+    pub fn capture(tracer: &Tracer) -> TraceFile {
+        TraceFile {
+            node_names: tracer.node_names(),
+            stream_names: tracer.stream_names(),
+            events: tracer.snapshot(),
+        }
+    }
+
+    pub fn node_name(&self, id: u32) -> &str {
+        self.node_names
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<graph>")
+    }
+
+    pub fn stream_name(&self, id: u32) -> &str {
+        self.stream_names
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<none>")
+    }
+
+    // -----------------------------------------------------------------
+    // native TSV
+    // -----------------------------------------------------------------
+
+    /// Serialize to the native TSV format.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("#mptrace\tv1\n");
+        for n in &self.node_names {
+            out.push_str(&format!("#node\t{n}\n"));
+        }
+        for s in &self.stream_names {
+            out.push_str(&format!("#stream\t{s}\n"));
+        }
+        out.push_str("#columns\ttime_us\tevent\tnode\tstream\tpacket_ts\tdata_id\tthread\n");
+        for e in &self.events {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                e.event_time_us,
+                e.event_type as u8,
+                e.node_id,
+                e.stream_id,
+                e.packet_ts,
+                e.packet_data_id,
+                e.thread_id,
+            ));
+        }
+        out
+    }
+
+    /// Parse the native TSV format.
+    pub fn from_tsv(text: &str) -> MpResult<TraceFile> {
+        let mut tf = TraceFile::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let err = |msg: &str| MpError::Parse {
+                line: lineno + 1,
+                message: msg.to_string(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                let mut it = rest.split('\t');
+                match it.next() {
+                    Some("node") => tf
+                        .node_names
+                        .push(it.next().ok_or_else(|| err("missing node name"))?.to_string()),
+                    Some("stream") => tf.stream_names.push(
+                        it.next()
+                            .ok_or_else(|| err("missing stream name"))?
+                            .to_string(),
+                    ),
+                    _ => {} // header/columns comments
+                }
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                return Err(err("expected 7 columns"));
+            }
+            let parse_u64 =
+                |s: &str| s.parse::<u64>().map_err(|_| err("bad unsigned integer"));
+            let ev = TraceEvent {
+                event_time_us: parse_u64(cols[0])?,
+                event_type: EventType::from_u8(
+                    cols[1].parse::<u8>().map_err(|_| err("bad event type"))?,
+                )
+                .ok_or_else(|| err("unknown event type"))?,
+                node_id: cols[2].parse::<u32>().map_err(|_| err("bad node id"))?,
+                stream_id: cols[3].parse::<u32>().map_err(|_| err("bad stream id"))?,
+                packet_ts: cols[4].parse::<i64>().map_err(|_| err("bad packet ts"))?,
+                packet_data_id: parse_u64(cols[5])?,
+                thread_id: cols[6].parse::<u32>().map_err(|_| err("bad thread id"))?,
+            };
+            tf.events.push(ev);
+        }
+        Ok(tf)
+    }
+
+    /// Write the native format to a file.
+    pub fn save_tsv(&self, path: &str) -> MpResult<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_tsv().as_bytes())?;
+        Ok(())
+    }
+
+    /// Load the native format from a file.
+    pub fn load_tsv(path: &str) -> MpResult<TraceFile> {
+        let text = std::fs::read_to_string(path)?;
+        TraceFile::from_tsv(&text)
+    }
+
+    // -----------------------------------------------------------------
+    // Chrome trace JSON (write-only)
+    // -----------------------------------------------------------------
+
+    /// Serialize to the Chrome trace-event format (load in
+    /// chrome://tracing or https://ui.perfetto.dev): ProcessStart/End
+    /// become duration events on per-thread rows; packet events become
+    /// instants.
+    pub fn to_chrome_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut parts: Vec<String> = Vec::new();
+        for e in &self.events {
+            let name = match e.event_type {
+                EventType::ProcessStart
+                | EventType::ProcessEnd
+                | EventType::OpenStart
+                | EventType::OpenEnd
+                | EventType::CloseStart
+                | EventType::CloseEnd => esc(self.node_name(e.node_id)),
+                _ => format!(
+                    "{}:{}",
+                    e.event_type.name(),
+                    esc(self.stream_name(e.stream_id))
+                ),
+            };
+            let ph = match e.event_type {
+                EventType::ProcessStart | EventType::OpenStart | EventType::CloseStart => "B",
+                EventType::ProcessEnd | EventType::OpenEnd | EventType::CloseEnd => "E",
+                _ => "i",
+            };
+            let mut obj = format!(
+                "{{\"name\":\"{name}\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":1,\"tid\":{}",
+                e.event_time_us, e.thread_id
+            );
+            if ph == "i" {
+                obj.push_str(",\"s\":\"t\"");
+            }
+            obj.push_str(&format!(
+                ",\"args\":{{\"packet_ts\":{},\"data_id\":{}}}}}",
+                e.packet_ts, e.packet_data_id
+            ));
+            parts.push(obj);
+        }
+        format!("{{\"traceEvents\":[{}]}}", parts.join(","))
+    }
+
+    /// Write Chrome JSON to a file.
+    pub fn save_chrome_json(&self, path: &str) -> MpResult<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_chrome_json().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timestamp::Timestamp;
+
+    fn sample() -> TraceFile {
+        let t = Tracer::new(64);
+        t.set_names(
+            vec!["det".into(), "tracker".into()],
+            vec!["frames".into(), "dets".into()],
+        );
+        t.record(EventType::ProcessStart, 0, TraceEvent::NO_STREAM, Timestamp::new(10), 0);
+        t.record(EventType::PacketEmitted, 0, 1, Timestamp::new(10), 7);
+        t.record(EventType::ProcessEnd, 0, TraceEvent::NO_STREAM, Timestamp::new(10), 0);
+        TraceFile::capture(&t)
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let tf = sample();
+        let text = tf.to_tsv();
+        let tf2 = TraceFile::from_tsv(&text).unwrap();
+        assert_eq!(tf.node_names, tf2.node_names);
+        assert_eq!(tf.stream_names, tf2.stream_names);
+        assert_eq!(tf.events, tf2.events);
+    }
+
+    #[test]
+    fn tsv_rejects_garbage() {
+        assert!(TraceFile::from_tsv("1\t2\t3\n").is_err());
+        assert!(TraceFile::from_tsv("a\t99\t0\t0\t0\t0\t0\n").is_err());
+    }
+
+    #[test]
+    fn chrome_json_is_wellformed_enough() {
+        let tf = sample();
+        let j = tf.to_chrome_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.ends_with("]}"));
+        assert!(j.contains("\"ph\":\"B\""));
+        assert!(j.contains("\"ph\":\"E\""));
+        assert!(j.contains("\"ph\":\"i\""));
+        assert!(j.contains("det"));
+        // balanced braces (cheap sanity check)
+        let opens = j.matches('{').count();
+        let closes = j.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let tf = sample();
+        let dir = std::env::temp_dir().join("mp_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tsv");
+        tf.save_tsv(p.to_str().unwrap()).unwrap();
+        let tf2 = TraceFile::load_tsv(p.to_str().unwrap()).unwrap();
+        assert_eq!(tf.events.len(), tf2.events.len());
+    }
+}

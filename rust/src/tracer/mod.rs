@@ -1,0 +1,299 @@
+//! The tracer module (§5.1): follows individual packets across a graph
+//! and records timing events along the way.
+//!
+//! Each event records a [`TraceEvent`] with `event_time`,
+//! `packet_timestamp`, `packet_data_id`, `node_id` and `stream_id` —
+//! sufficient to follow the flow of data and execution across the graph.
+//! Events land in a **mutex-free thread-safe circular buffer**
+//! ([`ring::TraceRing`]) to avoid contention and minimize the impact on
+//! timing measurements. Aggregation (histograms, critical path) happens
+//! offline in [`profile`].
+
+pub mod export;
+pub mod profile;
+pub mod ring;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::timestamp::Timestamp;
+use ring::TraceRing;
+
+/// What happened (§5.1 lists packet-flow and calculator-execution
+/// events; we add flow-control events used by the Fig. 3 benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventType {
+    OpenStart = 0,
+    OpenEnd = 1,
+    ProcessStart = 2,
+    ProcessEnd = 3,
+    CloseStart = 4,
+    CloseEnd = 5,
+    /// A packet was added to a node's input-stream queue.
+    PacketAdded = 6,
+    /// A packet was emitted on a node's output stream.
+    PacketEmitted = 7,
+    /// A stream's timestamp bound advanced without a packet.
+    BoundAdvanced = 8,
+    /// A producer was throttled by back-pressure (§4.1.4).
+    Throttled = 9,
+    Unthrottled = 10,
+    /// A packet was dropped by a flow-control node (§4.1.4).
+    PacketDropped = 11,
+    /// A graph-input packet entered the graph.
+    GraphInput = 12,
+    /// A packet reached a graph output observer.
+    GraphOutput = 13,
+}
+
+impl EventType {
+    pub fn from_u8(v: u8) -> Option<EventType> {
+        use EventType::*;
+        Some(match v {
+            0 => OpenStart,
+            1 => OpenEnd,
+            2 => ProcessStart,
+            3 => ProcessEnd,
+            4 => CloseStart,
+            5 => CloseEnd,
+            6 => PacketAdded,
+            7 => PacketEmitted,
+            8 => BoundAdvanced,
+            9 => Throttled,
+            10 => Unthrottled,
+            11 => PacketDropped,
+            12 => GraphInput,
+            13 => GraphOutput,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        use EventType::*;
+        match self {
+            OpenStart => "open_start",
+            OpenEnd => "open_end",
+            ProcessStart => "process_start",
+            ProcessEnd => "process_end",
+            CloseStart => "close_start",
+            CloseEnd => "close_end",
+            PacketAdded => "packet_added",
+            PacketEmitted => "packet_emitted",
+            BoundAdvanced => "bound_advanced",
+            Throttled => "throttled",
+            Unthrottled => "unthrottled",
+            PacketDropped => "packet_dropped",
+            GraphInput => "graph_input",
+            GraphOutput => "graph_output",
+        }
+    }
+}
+
+/// One recorded event (§5.1's TraceEvent structure).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the trace epoch.
+    pub event_time_us: u64,
+    pub event_type: EventType,
+    /// Node index in the built graph (u32::MAX when not node-scoped).
+    pub node_id: u32,
+    /// Stream index (u32::MAX when not stream-scoped).
+    pub stream_id: u32,
+    /// Raw packet timestamp (synchronization key).
+    pub packet_ts: i64,
+    /// Payload identity, to follow one datum across the graph.
+    pub packet_data_id: u64,
+    /// Worker thread ordinal.
+    pub thread_id: u32,
+}
+
+impl TraceEvent {
+    pub const NO_NODE: u32 = u32::MAX;
+    pub const NO_STREAM: u32 = u32::MAX;
+}
+
+/// The tracer attached to a graph run. Cheap to clone (Arc inside).
+/// When disabled, `record` is a single atomic load — the paper's
+/// "tracer module records timing information on demand" (it can also be
+/// compiled out entirely with `--no-default-features`-style flags in
+/// C++; here the disabled path is one branch).
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<TracerInner>,
+}
+
+struct TracerInner {
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring: TraceRing,
+    /// Node index -> name (filled at graph build for export).
+    node_names: std::sync::RwLock<Vec<String>>,
+    /// Stream index -> name.
+    stream_names: std::sync::RwLock<Vec<String>>,
+}
+
+thread_local! {
+    static THREAD_ORDINAL: u32 = {
+        use std::sync::atomic::AtomicU32;
+        static NEXT: AtomicU32 = AtomicU32::new(0);
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    };
+}
+
+impl Tracer {
+    /// A tracer with an event ring of `capacity` (rounded up to a power
+    /// of two).
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            inner: Arc::new(TracerInner {
+                enabled: AtomicBool::new(true),
+                epoch: Instant::now(),
+                ring: TraceRing::new(capacity),
+                node_names: std::sync::RwLock::new(Vec::new()),
+                stream_names: std::sync::RwLock::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// A disabled tracer: `record` costs one atomic load.
+    pub fn disabled() -> Tracer {
+        let t = Tracer::new(2);
+        t.inner.enabled.store(false, Ordering::Release);
+        t
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Acquire)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Release);
+    }
+
+    /// Register graph metadata for export (called at graph build).
+    pub fn set_names(&self, nodes: Vec<String>, streams: Vec<String>) {
+        *self.inner.node_names.write().unwrap() = nodes;
+        *self.inner.stream_names.write().unwrap() = streams;
+    }
+
+    pub fn node_names(&self) -> Vec<String> {
+        self.inner.node_names.read().unwrap().clone()
+    }
+
+    pub fn stream_names(&self) -> Vec<String> {
+        self.inner.stream_names.read().unwrap().clone()
+    }
+
+    /// Record one event. Hot path: one atomic load when disabled; one
+    /// clock read + one atomic RMW + one slot write when enabled.
+    #[inline]
+    pub fn record(
+        &self,
+        event_type: EventType,
+        node_id: u32,
+        stream_id: u32,
+        packet_ts: Timestamp,
+        packet_data_id: u64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ev = TraceEvent {
+            event_time_us: self.inner.epoch.elapsed().as_micros() as u64,
+            event_type,
+            node_id,
+            stream_id,
+            packet_ts: packet_ts.raw(),
+            packet_data_id,
+            thread_id: THREAD_ORDINAL.with(|t| *t),
+        };
+        self.inner.ring.push(ev);
+    }
+
+    /// Snapshot the buffered events in chronological order. Intended to
+    /// be called when the graph is quiescent (after `wait_until_done`).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut evs = self.inner.ring.snapshot();
+        evs.sort_by_key(|e| e.event_time_us);
+        evs
+    }
+
+    /// Number of events dropped due to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.inner.ring.overwritten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let t = Tracer::new(128);
+        t.record(EventType::ProcessStart, 3, 1, Timestamp::new(10), 42);
+        t.record(EventType::ProcessEnd, 3, 1, Timestamp::new(10), 42);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].event_type, EventType::ProcessStart);
+        assert_eq!(evs[0].node_id, 3);
+        assert_eq!(evs[0].packet_data_id, 42);
+        assert!(evs[1].event_time_us >= evs[0].event_time_us);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let t = Tracer::disabled();
+        t.record(EventType::ProcessStart, 0, 0, Timestamp::new(0), 0);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn toggling_on_demand() {
+        let t = Tracer::new(16);
+        t.set_enabled(false);
+        t.record(EventType::ProcessStart, 0, 0, Timestamp::new(0), 1);
+        t.set_enabled(true);
+        t.record(EventType::ProcessEnd, 0, 0, Timestamp::new(0), 2);
+        let evs = t.snapshot();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].packet_data_id, 2);
+    }
+
+    #[test]
+    fn event_type_roundtrip() {
+        for v in 0..=13u8 {
+            let e = EventType::from_u8(v).unwrap();
+            assert_eq!(e as u8, v);
+            assert!(!e.name().is_empty());
+        }
+        assert!(EventType::from_u8(200).is_none());
+    }
+
+    #[test]
+    fn concurrent_recording_is_safe() {
+        let t = Tracer::new(1 << 12);
+        let mut handles = Vec::new();
+        for thread in 0..4 {
+            let t2 = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    t2.record(
+                        EventType::PacketAdded,
+                        thread,
+                        0,
+                        Timestamp::new(i as i64),
+                        i,
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.snapshot().len(), 2000);
+        assert_eq!(t.dropped(), 0);
+    }
+}

@@ -1,0 +1,396 @@
+//! Offline trace analysis (§5.1): "histograms of various resources,
+//! such as the elapsed CPU time across each calculator and across each
+//! stream", aggregated latencies, and critical-path extraction.
+
+use std::collections::HashMap;
+
+use crate::tracer::export::TraceFile;
+use crate::tracer::EventType;
+
+/// Latency/duration statistics over a set of samples (µs).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn add(&mut self, v: u64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum() as f64 / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// q in [0, 1]; nearest-rank.
+    pub fn quantile(&mut self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    pub fn p50(&mut self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&mut self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Log-bucketed counts (1-2-5 decades), for the text visualizer.
+    pub fn buckets(&self) -> Vec<(u64, usize)> {
+        const EDGES: [u64; 15] = [
+            1, 2, 5, 10, 20, 50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000, 100_000, 1_000_000,
+        ];
+        let mut counts = vec![0usize; EDGES.len() + 1];
+        for &s in &self.samples {
+            let i = EDGES.iter().position(|&e| s < e).unwrap_or(EDGES.len());
+            counts[i] += 1;
+        }
+        let mut out = Vec::new();
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                let edge = if i < EDGES.len() { EDGES[i] } else { u64::MAX };
+                out.push((edge, c));
+            }
+        }
+        out
+    }
+}
+
+/// Per-node aggregate extracted from a trace.
+#[derive(Clone, Debug, Default)]
+pub struct NodeProfile {
+    pub name: String,
+    /// Process() wall durations.
+    pub process: Histogram,
+    pub invocations: usize,
+    /// Total µs inside Process (the "elapsed CPU time across each
+    /// calculator" histogram input).
+    pub total_us: u64,
+}
+
+/// Per-stream aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct StreamProfile {
+    pub name: String,
+    pub packets: usize,
+    /// µs between PacketEmitted and the matched PacketAdded (transport +
+    /// queueing is ~0 in-process; dominated by queue wait downstream).
+    pub queue_wait: Histogram,
+}
+
+/// End-to-end per-packet-timestamp path statistics.
+#[derive(Clone, Debug, Default)]
+pub struct PathStats {
+    /// GraphInput (or first emit) -> last GraphOutput latency.
+    pub e2e_latency: Histogram,
+    /// Node name -> total µs attributed on the critical path.
+    pub critical_us: HashMap<String, u64>,
+}
+
+/// Full analysis result.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    pub nodes: Vec<NodeProfile>,
+    pub streams: Vec<StreamProfile>,
+    pub paths: PathStats,
+    pub dropped_events: u64,
+    pub span_us: u64,
+}
+
+/// Aggregate a trace (§5.1: "timing data can be aggregated to report
+/// average and extreme latencies ... and to identify the calculators
+/// along the critical path, whose performance determines end-to-end
+/// latency").
+pub fn analyze(trace: &TraceFile) -> Profile {
+    let mut prof = Profile {
+        nodes: trace
+            .node_names
+            .iter()
+            .map(|n| NodeProfile {
+                name: n.clone(),
+                ..Default::default()
+            })
+            .collect(),
+        streams: trace
+            .stream_names
+            .iter()
+            .map(|n| StreamProfile {
+                name: n.clone(),
+                ..Default::default()
+            })
+            .collect(),
+        ..Default::default()
+    };
+
+    // Node process durations: match Start/End per (node, thread).
+    let mut open_start: HashMap<(u32, u32), u64> = HashMap::new();
+    // E2E: first GraphInput time and last GraphOutput time per packet_ts.
+    let mut first_in: HashMap<i64, u64> = HashMap::new();
+    let mut last_out: HashMap<i64, u64> = HashMap::new();
+    // Per-packet_ts processing spans for the critical path.
+    let mut spans: HashMap<i64, Vec<(u32, u64, u64)>> = HashMap::new(); // ts -> (node, start, end)
+    let mut span_start: HashMap<(u32, u32), (i64, u64)> = HashMap::new();
+    // Stream queue wait: PacketEmitted(data_id) -> GraphOutput/Added.
+    let mut emitted_at: HashMap<u64, u64> = HashMap::new();
+
+    let (mut tmin, mut tmax) = (u64::MAX, 0u64);
+    for e in &trace.events {
+        tmin = tmin.min(e.event_time_us);
+        tmax = tmax.max(e.event_time_us);
+        match e.event_type {
+            EventType::ProcessStart => {
+                open_start.insert((e.node_id, e.thread_id), e.event_time_us);
+                span_start.insert((e.node_id, e.thread_id), (e.packet_ts, e.event_time_us));
+            }
+            EventType::ProcessEnd => {
+                if let Some(s) = open_start.remove(&(e.node_id, e.thread_id)) {
+                    let d = e.event_time_us.saturating_sub(s);
+                    if let Some(np) = prof.nodes.get_mut(e.node_id as usize) {
+                        np.process.add(d);
+                        np.invocations += 1;
+                        np.total_us += d;
+                    }
+                }
+                if let Some((ts, s)) = span_start.remove(&(e.node_id, e.thread_id)) {
+                    spans
+                        .entry(ts)
+                        .or_default()
+                        .push((e.node_id, s, e.event_time_us));
+                }
+            }
+            EventType::PacketEmitted => {
+                emitted_at.insert(e.packet_data_id, e.event_time_us);
+                if let Some(sp) = prof.streams.get_mut(e.stream_id as usize) {
+                    sp.packets += 1;
+                }
+            }
+            EventType::PacketAdded => {
+                if let Some(&em) = emitted_at.get(&e.packet_data_id) {
+                    if let Some(sp) = prof.streams.get_mut(e.stream_id as usize) {
+                        sp.queue_wait.add(e.event_time_us.saturating_sub(em));
+                    }
+                }
+            }
+            EventType::GraphInput => {
+                first_in.entry(e.packet_ts).or_insert(e.event_time_us);
+            }
+            EventType::GraphOutput => {
+                let slot = last_out.entry(e.packet_ts).or_insert(0);
+                *slot = (*slot).max(e.event_time_us);
+            }
+            _ => {}
+        }
+    }
+    if tmin != u64::MAX {
+        prof.span_us = tmax - tmin;
+    }
+
+    // E2E latency per timestamp; attribute critical-path time to the
+    // nodes whose Process spans overlapped that timestamp's lifetime.
+    for (ts, &out_t) in &last_out {
+        let in_t = first_in
+            .get(ts)
+            .copied()
+            .or_else(|| spans.get(ts).and_then(|v| v.iter().map(|s| s.1).min()));
+        if let Some(in_t) = in_t {
+            if out_t >= in_t {
+                prof.paths.e2e_latency.add(out_t - in_t);
+            }
+        }
+        if let Some(nodespans) = spans.get(ts) {
+            for (node, s, e) in nodespans {
+                let name = trace.node_name(*node).to_string();
+                *prof.paths.critical_us.entry(name).or_insert(0) += e.saturating_sub(*s);
+            }
+        }
+    }
+    prof
+}
+
+/// Render a human-readable report (the CLI `trace` subcommand output).
+pub fn report(prof: &mut Profile) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace span: {:.3} ms\n\nper-calculator Process() time (µs):\n",
+        prof.span_us as f64 / 1000.0
+    ));
+    out.push_str(&format!(
+        "{:<32} {:>8} {:>10} {:>8} {:>8} {:>8} {:>8}\n",
+        "calculator", "calls", "total", "mean", "p50", "p95", "max"
+    ));
+    let mut idx: Vec<usize> = (0..prof.nodes.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(prof.nodes[i].total_us));
+    for i in idx {
+        let n = &mut prof.nodes[i];
+        if n.invocations == 0 {
+            continue;
+        }
+        let (mean, p50, p95, max) = (n.process.mean(), n.process.p50(), n.process.p95(), n.process.max());
+        out.push_str(&format!(
+            "{:<32} {:>8} {:>10} {:>8.1} {:>8} {:>8} {:>8}\n",
+            n.name, n.invocations, n.total_us, mean, p50, p95, max
+        ));
+    }
+    out.push_str("\nper-stream packets / queue-wait µs (p50/p95):\n");
+    for s in &mut prof.streams {
+        if s.packets == 0 {
+            continue;
+        }
+        let (p50, p95) = (s.queue_wait.p50(), s.queue_wait.p95());
+        out.push_str(&format!(
+            "{:<32} {:>8} {:>8} {:>8}\n",
+            s.name, s.packets, p50, p95
+        ));
+    }
+    if prof.paths.e2e_latency.count() > 0 {
+        let l = &mut prof.paths.e2e_latency;
+        out.push_str(&format!(
+            "\nend-to-end latency µs: n={} mean={:.1} p50={} p95={} p99={} max={}\n",
+            l.count(),
+            l.mean(),
+            l.p50(),
+            l.p95(),
+            l.p99(),
+            l.max()
+        ));
+        let mut crit: Vec<(&String, &u64)> = prof.paths.critical_us.iter().collect();
+        crit.sort_by_key(|(_, &v)| std::cmp::Reverse(v));
+        out.push_str("critical-path attribution (total µs while a timestamp was live):\n");
+        for (name, us) in crit.iter().take(10) {
+            out.push_str(&format!("  {:<30} {us}\n", name));
+        }
+    }
+    if prof.dropped_events > 0 {
+        out.push_str(&format!(
+            "\nWARNING: {} events overwritten (grow profiler buffer_size)\n",
+            prof.dropped_events
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timestamp::Timestamp;
+    use crate::tracer::{TraceEvent, Tracer};
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            h.add(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 55);
+        assert!((h.mean() - 5.5).abs() < 1e-9);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10);
+        assert_eq!(h.p50(), 6); // nearest-rank on 0-indexed
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(1.0), 10);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 3, 50, 5000] {
+            h.add(v);
+        }
+        let b = h.buckets();
+        let total: usize = b.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn analyze_process_durations_and_e2e() {
+        let t = Tracer::new(256);
+        t.set_names(vec!["a".into(), "b".into()], vec!["s0".into(), "s1".into()]);
+        // simulate: input ts=10 at t=0; a processes 0..100; emits; b 100..250; output at 250
+        let ts = Timestamp::new(10);
+        let mk = |time, et, node, stream, data| TraceEvent {
+            event_time_us: time,
+            event_type: et,
+            node_id: node,
+            stream_id: stream,
+            packet_ts: ts.raw(),
+            packet_data_id: data,
+            thread_id: 0,
+        };
+        let evs = vec![
+            mk(0, EventType::GraphInput, TraceEvent::NO_NODE, 0, 1),
+            mk(5, EventType::PacketAdded, 0, 0, 1),
+            mk(10, EventType::ProcessStart, 0, TraceEvent::NO_STREAM, 0),
+            mk(110, EventType::ProcessEnd, 0, TraceEvent::NO_STREAM, 0),
+            mk(110, EventType::PacketEmitted, 0, 1, 2),
+            mk(112, EventType::PacketAdded, 1, 1, 2),
+            mk(120, EventType::ProcessStart, 1, TraceEvent::NO_STREAM, 0),
+            mk(250, EventType::ProcessEnd, 1, TraceEvent::NO_STREAM, 0),
+            mk(250, EventType::GraphOutput, TraceEvent::NO_NODE, 1, 3),
+        ];
+        let tf = TraceFile {
+            node_names: t.node_names(),
+            stream_names: t.stream_names(),
+            events: evs,
+        };
+        let mut p = analyze(&tf);
+        assert_eq!(p.nodes[0].invocations, 1);
+        assert_eq!(p.nodes[0].total_us, 100);
+        assert_eq!(p.nodes[1].total_us, 130);
+        assert_eq!(p.paths.e2e_latency.count(), 1);
+        assert_eq!(p.paths.e2e_latency.max(), 250);
+        assert_eq!(p.paths.critical_us["b"], 130);
+        // queue wait on stream 1: 112 - 110
+        assert_eq!(p.streams[1].packets, 1);
+        assert_eq!(p.streams[1].queue_wait.max(), 2);
+        let rep = report(&mut p);
+        assert!(rep.contains("end-to-end latency"));
+        assert!(rep.contains('a'));
+    }
+
+    #[test]
+    fn empty_trace_analyzes() {
+        let tf = TraceFile::default();
+        let mut p = analyze(&tf);
+        assert_eq!(p.span_us, 0);
+        let _ = report(&mut p);
+    }
+}

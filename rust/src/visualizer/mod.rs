@@ -1,0 +1,292 @@
+//! The visualizer (§5.2, Fig. 4): Timeline view + Graph view, rendered
+//! from a recorded trace file.
+//!
+//! * **Timeline view**: "load a pre-recorded trace file and see the
+//!   precise timing of packets as they move through threads and
+//!   calculators" — rendered as per-thread rows of calculator spans
+//!   (ASCII for the terminal, HTML for the browser).
+//! * **Graph view**: "visualize the topology of a graph as inferred
+//!   from the same trace file" — node boxes with packet counts and
+//!   queue statistics, edges from the observed packet flow.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::error::MpResult;
+use crate::tracer::export::TraceFile;
+use crate::tracer::EventType;
+
+/// One rendered span: a calculator execution on a thread row.
+#[derive(Clone, Debug)]
+struct Span {
+    thread: u32,
+    node: u32,
+    start_us: u64,
+    end_us: u64,
+}
+
+fn collect_spans(trace: &TraceFile) -> Vec<Span> {
+    let mut open: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut spans = Vec::new();
+    for e in &trace.events {
+        match e.event_type {
+            EventType::ProcessStart | EventType::OpenStart | EventType::CloseStart => {
+                open.insert((e.node_id, e.thread_id), e.event_time_us);
+            }
+            EventType::ProcessEnd | EventType::OpenEnd | EventType::CloseEnd => {
+                if let Some(s) = open.remove(&(e.node_id, e.thread_id)) {
+                    spans.push(Span {
+                        thread: e.thread_id,
+                        node: e.node_id,
+                        start_us: s,
+                        end_us: e.event_time_us.max(s),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    spans
+}
+
+/// Edge statistics observed from the trace (graph view).
+#[derive(Clone, Debug, Default)]
+struct EdgeStats {
+    packets: u64,
+}
+
+/// Render the Timeline view as ASCII: one row per thread, time flowing
+/// right, each span labelled by calculator initial.
+pub fn timeline_ascii(trace: &TraceFile, width: usize) -> String {
+    let spans = collect_spans(trace);
+    if spans.is_empty() {
+        return "(empty trace)\n".to_string();
+    }
+    let t0 = spans.iter().map(|s| s.start_us).min().unwrap();
+    let t1 = spans.iter().map(|s| s.end_us).max().unwrap().max(t0 + 1);
+    let scale = width as f64 / (t1 - t0) as f64;
+
+    // stable label per node: A, B, C ... (legend below)
+    let mut node_ids: Vec<u32> = spans.iter().map(|s| s.node).collect();
+    node_ids.sort_unstable();
+    node_ids.dedup();
+    let label_of = |node: u32| -> char {
+        let idx = node_ids.iter().position(|&n| n == node).unwrap_or(0);
+        (b'A' + (idx % 26) as u8) as char
+    };
+
+    let mut threads: BTreeMap<u32, Vec<char>> = BTreeMap::new();
+    for s in &spans {
+        let row = threads
+            .entry(s.thread)
+            .or_insert_with(|| vec!['.'; width]);
+        let a = ((s.start_us - t0) as f64 * scale) as usize;
+        let b = (((s.end_us - t0) as f64 * scale) as usize).min(width.saturating_sub(1));
+        for cell in row.iter_mut().take(b + 1).skip(a.min(width - 1)) {
+            *cell = label_of(s.node);
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Timeline ({} µs total, {} spans)\n",
+        t1 - t0,
+        spans.len()
+    ));
+    for (tid, row) in &threads {
+        out.push_str(&format!("thread {tid:>2} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out.push_str("legend: ");
+    for &n in &node_ids {
+        out.push_str(&format!("{}={} ", label_of(n), trace.node_name(n)));
+    }
+    out.push('\n');
+    out
+}
+
+/// Render the Graph view as ASCII: topology inferred from the trace's
+/// packet flow (PacketEmitted on stream S by node A + PacketAdded on S
+/// at node B => edge A -> B), annotated with packet counts.
+pub fn graph_ascii(trace: &TraceFile) -> String {
+    // stream -> producing node
+    let mut producer: HashMap<u32, u32> = HashMap::new();
+    // (producer, stream, consumer) -> stats
+    let mut edges: BTreeMap<(u32, u32, u32), EdgeStats> = BTreeMap::new();
+    let mut node_packets: BTreeMap<u32, u64> = BTreeMap::new();
+    for e in &trace.events {
+        match e.event_type {
+            EventType::PacketEmitted => {
+                producer.insert(e.stream_id, e.node_id);
+                *node_packets.entry(e.node_id).or_default() += 1;
+            }
+            EventType::PacketAdded => {
+                let from = producer.get(&e.stream_id).copied().unwrap_or(u32::MAX);
+                edges
+                    .entry((from, e.stream_id, e.node_id))
+                    .or_default()
+                    .packets += 1;
+            }
+            EventType::GraphInput => {
+                producer.insert(e.stream_id, u32::MAX);
+            }
+            _ => {}
+        }
+    }
+    let mut out = String::from("Graph view (from trace)\n");
+    for (node, pkts) in &node_packets {
+        out.push_str(&format!(
+            "[{}] emitted {pkts} packets\n",
+            trace.node_name(*node)
+        ));
+    }
+    for ((from, stream, to), st) in &edges {
+        let from_name = if *from == u32::MAX {
+            "<input>"
+        } else {
+            trace.node_name(*from)
+        };
+        out.push_str(&format!(
+            "  {from_name} --{}--> {} ({} packets)\n",
+            trace.stream_name(*stream),
+            trace.node_name(*to),
+            st.packets
+        ));
+    }
+    out
+}
+
+/// Self-contained HTML page with both views (open in a browser — the
+/// Fig. 4 experience): an SVG timeline plus the topology list.
+pub fn render_html(trace: &TraceFile) -> String {
+    let spans = collect_spans(trace);
+    let t0 = spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let t1 = spans.iter().map(|s| s.end_us).max().unwrap_or(1).max(t0 + 1);
+    let width = 1100.0f64;
+    let scale = width / (t1 - t0) as f64;
+    let row_h = 26.0;
+    let mut threads: Vec<u32> = spans.iter().map(|s| s.thread).collect();
+    threads.sort_unstable();
+    threads.dedup();
+    let row_of = |t: u32| threads.iter().position(|&x| x == t).unwrap_or(0);
+
+    const PALETTE: [&str; 8] = [
+        "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc948", "#b07aa1", "#9c755f",
+    ];
+    let mut svg = String::new();
+    for s in &spans {
+        let x = (s.start_us - t0) as f64 * scale;
+        let w = (((s.end_us - s.start_us) as f64) * scale).max(1.0);
+        let y = row_of(s.thread) as f64 * row_h + 4.0;
+        let color = PALETTE[s.node as usize % PALETTE.len()];
+        svg.push_str(&format!(
+            r##"<rect x="{x:.1}" y="{y:.1}" width="{w:.1}" height="18" fill="{color}"><title>{} [{}..{} µs]</title></rect>"##,
+            trace.node_name(s.node),
+            s.start_us - t0,
+            s.end_us - t0
+        ));
+    }
+    let height = threads.len() as f64 * row_h + 10.0;
+    let legend: String = {
+        let mut nodes: Vec<u32> = spans.iter().map(|s| s.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+            .iter()
+            .map(|&n| {
+                format!(
+                    r##"<span style="color:{}">&#9632; {}</span> "##,
+                    PALETTE[n as usize % PALETTE.len()],
+                    trace.node_name(n)
+                )
+            })
+            .collect()
+    };
+    format!(
+        r##"<!doctype html><html><head><meta charset="utf-8"><title>mediapipe-rs trace</title>
+<style>body{{font-family:monospace;background:#fafafa}}</style></head><body>
+<h2>Timeline view</h2><div>{legend}</div>
+<svg width="{width}" height="{height}" style="background:#fff;border:1px solid #ccc">{svg}</svg>
+<h2>Graph view</h2><pre>{graph}</pre>
+<h2>Profile</h2><pre>{profile}</pre>
+</body></html>"##,
+        graph = graph_ascii(trace),
+        profile = {
+            let mut p = crate::tracer::profile::analyze(trace);
+            crate::tracer::profile::report(&mut p)
+        },
+    )
+}
+
+/// Write the HTML visualization to a file.
+pub fn save_html(trace: &TraceFile, path: &str) -> MpResult<()> {
+    std::fs::write(path, render_html(trace))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracer::{TraceEvent, Tracer};
+
+    fn sample_trace() -> TraceFile {
+        let t = Tracer::new(256);
+        t.set_names(
+            vec!["source".into(), "detector".into()],
+            vec!["frames".into()],
+        );
+        let mk = |time, et, node, stream, thread, data| TraceEvent {
+            event_time_us: time,
+            event_type: et,
+            node_id: node,
+            stream_id: stream,
+            packet_ts: 0,
+            packet_data_id: data,
+            thread_id: thread,
+        };
+        TraceFile {
+            node_names: t.node_names(),
+            stream_names: t.stream_names(),
+            events: vec![
+                mk(0, EventType::ProcessStart, 0, TraceEvent::NO_STREAM, 0, 0),
+                mk(50, EventType::PacketEmitted, 0, 0, 0, 1),
+                mk(60, EventType::ProcessEnd, 0, TraceEvent::NO_STREAM, 0, 0),
+                mk(61, EventType::PacketAdded, 1, 0, 0, 1),
+                mk(70, EventType::ProcessStart, 1, TraceEvent::NO_STREAM, 1, 0),
+                mk(170, EventType::ProcessEnd, 1, TraceEvent::NO_STREAM, 1, 0),
+            ],
+        }
+    }
+
+    #[test]
+    fn timeline_renders_threads_and_legend() {
+        let a = timeline_ascii(&sample_trace(), 60);
+        assert!(a.contains("thread  0"));
+        assert!(a.contains("thread  1"));
+        assert!(a.contains("A=source"));
+        assert!(a.contains("B=detector"));
+    }
+
+    #[test]
+    fn graph_view_infers_edges() {
+        let g = graph_ascii(&sample_trace());
+        assert!(g.contains("source --frames--> detector (1 packets)"), "{g}");
+    }
+
+    #[test]
+    fn html_is_generated() {
+        let h = render_html(&sample_trace());
+        assert!(h.contains("<svg"));
+        assert!(h.contains("detector"));
+        assert!(h.contains("Timeline view"));
+        assert!(h.contains("Graph view"));
+    }
+
+    #[test]
+    fn empty_trace_is_fine() {
+        let empty = TraceFile::default();
+        assert!(timeline_ascii(&empty, 40).contains("empty"));
+        let _ = graph_ascii(&empty);
+        let _ = render_html(&empty);
+    }
+}

@@ -1,0 +1,255 @@
+//! Integration tests for §4.1.4: back-pressure with deadlock avoidance,
+//! and the Fig. 3 flow-limiter-with-loopback pattern.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mediapipe::calculators::core::Collected;
+use mediapipe::calculators::flow::DropCounter;
+use mediapipe::prelude::*;
+
+fn collected() -> (Collected, Packet) {
+    let c: Collected = Arc::new(Mutex::new(Vec::new()));
+    let p = Packet::new(c.clone(), Timestamp::UNSET);
+    (c, p)
+}
+
+/// Back-pressure: a fast source into a slow consumer with max_queue_size
+/// keeps the in-queue depth bounded and delivers every packet
+/// (deterministic behaviour, "suitable for batch operations").
+#[test]
+fn backpressure_bounds_queue_and_loses_nothing() {
+    let config = GraphConfig::parse(
+        r#"
+max_queue_size: 4
+input_side_packet: "sink"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 300 } }
+node { calculator: "BusyWorkCalculator" input_stream: "n" output_stream: "slow" options { work_us: 50 } }
+node { calculator: "CollectorCalculator" input_stream: "slow" input_side_packet: "SINK:sink" }
+"#,
+    )
+    .unwrap();
+    let (c, p) = collected();
+    let mut graph = Graph::new(&config).unwrap();
+    let mut side = SidePackets::new();
+    side.insert("sink".into(), p);
+    graph.run(side).unwrap();
+    let got = c.lock().unwrap();
+    assert_eq!(got.len(), 300, "no packets dropped under back-pressure");
+    for w in got.windows(2) {
+        assert!(w[0].0 < w[1].0);
+    }
+}
+
+/// Deadlock avoidance: a 2-input join where one branch buffers far more
+/// than max_queue_size would normally deadlock (the source throttles
+/// before the other branch's data arrives). §4.1.4 requires the limits
+/// to relax.
+#[test]
+fn deadlock_avoidance_relaxes_limits() {
+    // thin branch passes 1 in 50 packets: the join's BAR queue starves
+    // while FOO fills; the source throttles on FOO; relaxation must
+    // unstick it.
+    let config = GraphConfig::parse(
+        r#"
+max_queue_size: 2
+input_side_packet: "sink"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 200 } }
+node { calculator: "PacketThinnerCalculator" input_stream: "n" output_stream: "thin" options { period_us: 50 } }
+node {
+  calculator: "CollectorCalculator"
+  input_stream: "n"
+  input_stream: "thin"
+  input_side_packet: "SINK:sink"
+}
+"#,
+    )
+    .unwrap();
+    let (c, p) = collected();
+    let mut graph = Graph::new(&config).unwrap();
+    let mut side = SidePackets::new();
+    side.insert("sink".into(), p);
+    graph.run(side).unwrap();
+    // Every packet on both ports arrives (200 on port 0 + 4 thinned).
+    let got = c.lock().unwrap();
+    assert_eq!(got.len(), 204, "got {}", got.len());
+}
+
+/// Fig. 3: flow limiter with loopback. A fast source, a slow "subgraph"
+/// (busy work), and the limiter keeping at most `max_in_flight`
+/// timestamps in flight. Excess packets are dropped upstream; the ones
+/// admitted all complete.
+#[test]
+fn flow_limiter_loopback_drops_upstream() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "frames"
+output_stream: "done"
+input_side_packet: "drops"
+node {
+  calculator: "FlowLimiterCalculator"
+  input_stream: "frames"
+  back_edge_input_stream: "FINISHED:done"
+  output_stream: "gated"
+  input_side_packet: "DROPS:drops"
+  options { max_in_flight: 1 }
+}
+node { calculator: "BusyWorkCalculator" input_stream: "gated" output_stream: "done" options { work_us: 300 } }
+"#,
+    )
+    .unwrap();
+    let drops = DropCounter::new();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("done").unwrap();
+    let mut side = SidePackets::new();
+    side.insert("drops".into(), Packet::new(drops.clone(), Timestamp::UNSET));
+    graph.start_run(side).unwrap();
+
+    // Fire 100 frames as fast as possible.
+    for i in 0..100i64 {
+        graph
+            .add_packet("frames", Packet::new(i, Timestamp::new(i * 10)))
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+
+    let completed = poller.drain().len() as u64;
+    let dropped = drops.get();
+    assert_eq!(completed + dropped, 100, "admitted + dropped = offered");
+    assert!(dropped > 0, "fast source must overflow the limiter");
+    assert!(completed >= 1);
+}
+
+/// Larger budgets admit more (Fig. 3 parameter sweep smoke).
+#[test]
+fn flow_limiter_budget_scales_admission() {
+    let run = |budget: i64| -> (u64, u64) {
+        let config_text = format!(
+            r#"
+input_stream: "frames"
+output_stream: "done"
+input_side_packet: "drops"
+node {{
+  calculator: "FlowLimiterCalculator"
+  input_stream: "frames"
+  back_edge_input_stream: "FINISHED:done"
+  output_stream: "gated"
+  input_side_packet: "DROPS:drops"
+  options {{ max_in_flight: {budget} }}
+}}
+node {{ calculator: "BusyWorkCalculator" input_stream: "gated" output_stream: "done" options {{ work_us: 100 }} }}
+"#
+        );
+        let config = GraphConfig::parse(&config_text).unwrap();
+        let drops = DropCounter::new();
+        let mut graph = Graph::new(&config).unwrap();
+        let poller = graph.poller("done").unwrap();
+        let mut side = SidePackets::new();
+        side.insert("drops".into(), Packet::new(drops.clone(), Timestamp::UNSET));
+        graph.start_run(side).unwrap();
+        for i in 0..200i64 {
+            graph
+                .add_packet("frames", Packet::new(i, Timestamp::new(i)))
+                .unwrap();
+        }
+        graph.close_all_inputs().unwrap();
+        graph.wait_until_done().unwrap();
+        (poller.drain().len() as u64, drops.get())
+    };
+    let (done1, drop1) = run(1);
+    let (done8, drop8) = run(8);
+    assert_eq!(done1 + drop1, 200);
+    assert_eq!(done8 + drop8, 200);
+    assert!(
+        done8 >= done1,
+        "larger budget should not admit fewer ({done8} vs {done1})"
+    );
+}
+
+/// LatestOnly keeps the display path realtime: it may drop stale
+/// packets but always delivers the newest one.
+#[test]
+fn latest_only_delivers_newest() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "LatestOnlyCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("out").unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    for i in 0..50i64 {
+        graph.add_packet("in", Packet::new(i, Timestamp::new(i))).unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    let outs: Vec<i64> = poller
+        .drain()
+        .iter()
+        .map(|p| *p.get::<i64>().unwrap())
+        .collect();
+    assert!(!outs.is_empty());
+    assert_eq!(*outs.last().unwrap(), 49, "newest packet always arrives");
+    for w in outs.windows(2) {
+        assert!(w[0] < w[1]);
+    }
+}
+
+/// Unbounded default: without max_queue_size, a burst is fully buffered
+/// (no throttling, no loss).
+#[test]
+fn unbounded_by_default() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "BusyWorkCalculator" input_stream: "in" output_stream: "out" options { work_us: 10 } }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("out").unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    for i in 0..1000i64 {
+        graph.add_packet("in", Packet::new(i, Timestamp::new(i))).unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    assert_eq!(poller.drain().len(), 1000);
+}
+
+/// add_packet blocks (rather than erroring) when consumer queues are
+/// full, and resumes when the consumer drains — app-side back-pressure.
+#[test]
+fn graph_input_backpressure_blocks_then_resumes() {
+    let config = GraphConfig::parse(
+        r#"
+max_queue_size: 2
+input_stream: "in"
+output_stream: "out"
+node { calculator: "BusyWorkCalculator" input_stream: "in" output_stream: "out" options { work_us: 100 } }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("out").unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..50i64 {
+        graph.add_packet("in", Packet::new(i, Timestamp::new(i))).unwrap();
+    }
+    // With queue limit 2 and 100µs work, the 50 adds must have taken at
+    // least ~46*100µs (the app thread was throttled).
+    assert!(
+        t0.elapsed() >= Duration::from_millis(3),
+        "add_packet never blocked: {:?}",
+        t0.elapsed()
+    );
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    assert_eq!(poller.drain().len(), 50);
+}

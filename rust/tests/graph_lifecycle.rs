@@ -1,0 +1,455 @@
+//! Integration tests: graph lifecycle (§3.4-3.5) — open/process/close
+//! ordering, source-driven and input-driven runs, error termination,
+//! pollers and callbacks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mediapipe::calculators::core::{Collected, SinkFn};
+use mediapipe::prelude::*;
+
+fn collected() -> (Collected, Packet) {
+    let c: Collected = Arc::new(Mutex::new(Vec::new()));
+    let p = Packet::new(c.clone(), Timestamp::UNSET);
+    (c, p)
+}
+
+#[test]
+fn source_driven_run_to_completion() {
+    let config = GraphConfig::parse(
+        r#"
+input_side_packet: "sink"
+node {
+  calculator: "CounterSourceCalculator"
+  output_stream: "nums"
+  options { count: 50 }
+}
+node { calculator: "CollectorCalculator" input_stream: "nums" input_side_packet: "SINK:sink" }
+"#,
+    )
+    .unwrap();
+    let (c, p) = collected();
+    let mut graph = Graph::new(&config).unwrap();
+    let mut side = SidePackets::new();
+    side.insert("sink".into(), p);
+    graph.run(side).unwrap();
+    let got = c.lock().unwrap();
+    assert_eq!(got.len(), 50);
+    // default policy: strictly ascending timestamps, nothing dropped
+    for w in got.windows(2) {
+        assert!(w[0].0 < w[1].0);
+    }
+}
+
+#[test]
+fn input_driven_passthrough_chain() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "a" }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }
+node { calculator: "PassThroughCalculator" input_stream: "b" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let poller = graph.poller("out").unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    for i in 0..20i64 {
+        graph
+            .add_packet("in", Packet::new(i, Timestamp::new(i)))
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    let mut got = Vec::new();
+    loop {
+        match poller.poll(Duration::from_secs(5)) {
+            Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
+            Poll::Done => break,
+            Poll::TimedOut => panic!("timed out"),
+        }
+    }
+    graph.wait_until_done().unwrap();
+    assert_eq!(got, (0..20).collect::<Vec<_>>());
+}
+
+#[test]
+fn callbacks_fire_in_timestamp_order() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let mut graph = Graph::new(&config).unwrap();
+    let seen2 = Arc::clone(&seen);
+    graph
+        .observe_output("out", move |p| {
+            seen2.lock().unwrap().push(p.timestamp());
+        })
+        .unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    for i in 0..10i64 {
+        graph
+            .add_packet("in", Packet::new(i, Timestamp::new(i * 10)))
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+    let seen = seen.lock().unwrap();
+    assert_eq!(seen.len(), 10);
+    for w in seen.windows(2) {
+        assert!(w[0] < w[1]);
+    }
+}
+
+// A calculator that fails on the 3rd process call.
+struct FailsOnThird {
+    calls: usize,
+}
+
+impl Calculator for FailsOnThird {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        self.calls += 1;
+        if self.calls == 3 {
+            return Err(MpError::internal("synthetic failure"));
+        }
+        let p = ctx.input(0).clone();
+        if !p.is_empty() {
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+static CLOSES: AtomicUsize = AtomicUsize::new(0);
+
+struct CountsClose;
+
+impl Calculator for CountsClose {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0).clone();
+        if !p.is_empty() {
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+
+    fn close(&mut self, _ctx: &mut CalculatorContext) -> MpResult<()> {
+        CLOSES.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+#[test]
+fn process_error_terminates_run_and_still_closes_everyone() {
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    registry.register_fn(
+        "FailsOnThird",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any))
+        },
+        |_| Ok(Box::new(FailsOnThird { calls: 0 })),
+    );
+    registry.register_fn(
+        "CountsClose",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any))
+        },
+        |_| Ok(Box::new(CountsClose)),
+    );
+    let config = GraphConfig::parse(
+        r#"
+node { calculator: "CounterSourceCalculator" output_stream: "nums" options { count: 1000000 period_us: 1 } }
+node { calculator: "FailsOnThird" input_stream: "nums" output_stream: "mid" }
+node { calculator: "CountsClose" input_stream: "mid" output_stream: "end" }
+"#,
+    )
+    .unwrap();
+    CLOSES.store(0, Ordering::SeqCst);
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    let err = graph.wait_until_done().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("synthetic failure"), "{msg}");
+    assert!(msg.contains("FailsOnThird"), "{msg}");
+    // Close() is always called if Open() succeeded (§3.4).
+    assert_eq!(CLOSES.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn open_error_fails_start() {
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    struct BadOpen;
+    impl Calculator for BadOpen {
+        fn open(&mut self, _: &mut CalculatorContext) -> MpResult<()> {
+            Err(MpError::internal("bad open"))
+        }
+        fn process(&mut self, _: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+    registry.register_fn(
+        "BadOpen",
+        |_| Ok(Contract::new().output("", PacketType::Any)),
+        |_| Ok(Box::new(BadOpen)),
+    );
+    let config = GraphConfig::parse(r#"node { calculator: "BadOpen" output_stream: "x" }"#).unwrap();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    let err = graph.start_run(SidePackets::new()).unwrap_err();
+    assert!(err.to_string().contains("bad open"), "{err}");
+}
+
+#[test]
+fn missing_side_packet_fails_start() {
+    let config = GraphConfig::parse(
+        r#"
+input_side_packet: "sink"
+node { calculator: "CounterSourceCalculator" output_stream: "n" }
+node { calculator: "CollectorCalculator" input_stream: "n" input_side_packet: "SINK:sink" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let err = graph.start_run(SidePackets::new()).unwrap_err();
+    assert!(matches!(err, MpError::MissingSidePacket(_)), "{err}");
+}
+
+#[test]
+fn close_may_emit_final_packets() {
+    // §3.4 footnote 2: a node can flush buffered data in Close().
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    struct FlushAtClose {
+        held: Vec<Packet>,
+    }
+    impl Calculator for FlushAtClose {
+        fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            let p = ctx.input(0);
+            if !p.is_empty() {
+                self.held.push(p.clone());
+            }
+            Ok(ProcessOutcome::Continue)
+        }
+        fn close(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+            for p in self.held.drain(..) {
+                ctx.output(0, p);
+            }
+            Ok(())
+        }
+    }
+    registry.register_fn(
+        "FlushAtClose",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any))
+        },
+        |_| Ok(Box::new(FlushAtClose { held: Vec::new() })),
+    );
+    let config = GraphConfig::parse(
+        r#"
+input_side_packet: "sink"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 5 } }
+node { calculator: "FlushAtClose" input_stream: "n" output_stream: "flushed" }
+node { calculator: "CollectorCalculator" input_stream: "flushed" input_side_packet: "SINK:sink" }
+"#,
+    )
+    .unwrap();
+    let (c, p) = collected();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    let mut side = SidePackets::new();
+    side.insert("sink".into(), p);
+    graph.run(side).unwrap();
+    assert_eq!(c.lock().unwrap().len(), 5);
+}
+
+#[test]
+fn sink_fn_callback_calculator() {
+    let config = GraphConfig::parse(
+        r#"
+input_side_packet: "cb"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 7 } }
+node { calculator: "CallbackSinkCalculator" input_stream: "n" input_side_packet: "CALLBACK:cb" }
+"#,
+    )
+    .unwrap();
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h2 = Arc::clone(&hits);
+    let f: SinkFn = Arc::new(move |_p| {
+        h2.fetch_add(1, Ordering::SeqCst);
+    });
+    let mut graph = Graph::new(&config).unwrap();
+    let mut side = SidePackets::new();
+    side.insert("cb".into(), Packet::new(f, Timestamp::UNSET));
+    graph.run(side).unwrap();
+    assert_eq!(hits.load(Ordering::SeqCst), 7);
+}
+
+#[test]
+fn graph_input_monotonicity_enforced() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "x" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    graph
+        .add_packet("in", Packet::new(0i64, Timestamp::new(10)))
+        .unwrap();
+    let err = graph
+        .add_packet("in", Packet::new(0i64, Timestamp::new(10)))
+        .unwrap_err();
+    assert!(matches!(err, MpError::TimestampViolation { .. }));
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+}
+
+#[test]
+fn unknown_stream_rejected() {
+    let config = GraphConfig::parse(
+        r#"
+input_stream: "in"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "x" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    assert!(graph
+        .add_packet("nope", Packet::new(0i64, Timestamp::new(0)))
+        .is_err());
+    assert!(graph.poller("nope").is_err());
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+}
+
+#[test]
+fn cancel_stops_infinite_source() {
+    let config = GraphConfig::parse(
+        r#"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 9000000000 } }
+node { calculator: "PassThroughCalculator" input_stream: "n" output_stream: "x" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    graph.cancel();
+    // cancellation is not an error
+    graph.wait_until_done().unwrap();
+}
+
+#[test]
+fn drop_unfinished_graph_does_not_hang() {
+    let config = GraphConfig::parse(
+        r#"
+node { calculator: "CounterSourceCalculator" output_stream: "n" options { count: 9000000000 } }
+node { calculator: "PassThroughCalculator" input_stream: "n" output_stream: "x" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    drop(graph); // Drop impl cancels + joins
+}
+
+#[test]
+fn side_packet_produced_by_node_feeds_another() {
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    struct SideProducer;
+    impl Calculator for SideProducer {
+        fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+            ctx.set_side_output(0, Packet::new(123i64, Timestamp::UNSET));
+            Ok(())
+        }
+        fn process(&mut self, _: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            Ok(ProcessOutcome::Stop)
+        }
+    }
+    struct SideChecker;
+    impl Calculator for SideChecker {
+        fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+            let v = *ctx.side_input(0).get::<i64>()?;
+            if v != 123 {
+                return Err(MpError::internal("wrong side value"));
+            }
+            Ok(())
+        }
+        fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            let p = ctx.input(0).clone();
+            if !p.is_empty() {
+                ctx.output(0, p);
+            }
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+    registry.register_fn(
+        "SideProducer",
+        |_| {
+            Ok(Contract::new()
+                .output("", PacketType::Any)
+                .side_output("VAL", PacketType::of::<i64>()))
+        },
+        |_| Ok(Box::new(SideProducer)),
+    );
+    registry.register_fn(
+        "SideChecker",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any)
+                .side_input("VAL", PacketType::of::<i64>()))
+        },
+        |_| Ok(Box::new(SideChecker)),
+    );
+    let config = GraphConfig::parse(
+        r#"
+node { calculator: "SideProducer" output_stream: "a" output_side_packet: "VAL:v" }
+node { calculator: "SideChecker" input_stream: "a" output_stream: "b" input_side_packet: "VAL:v" }
+"#,
+    )
+    .unwrap();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    graph.run(SidePackets::new()).unwrap();
+}
+
+#[test]
+fn wait_without_start_is_error() {
+    let config =
+        GraphConfig::parse(r#"node { calculator: "CounterSourceCalculator" output_stream: "n" }"#)
+            .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    assert!(graph.wait_until_done().is_err());
+}
+
+#[test]
+fn double_start_is_error() {
+    let config =
+        GraphConfig::parse(r#"node { calculator: "CounterSourceCalculator" output_stream: "n" }"#)
+            .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    assert!(graph.start_run(SidePackets::new()).is_err());
+    graph.wait_until_done().unwrap();
+}

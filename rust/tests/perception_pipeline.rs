@@ -1,0 +1,317 @@
+//! Integration tests for the perception calculators that run without
+//! XLA artifacts (template-matching detector path, frame selection,
+//! demux + interpolation, annotation) — the §6 graphs' plumbing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use mediapipe::perception::{Detections, ImageFrame, LandmarkList, Mask};
+use mediapipe::prelude::*;
+
+#[test]
+fn template_detector_pipeline_tracks_objects() {
+    let config = GraphConfig::parse(
+        r#"
+max_queue_size: 8
+output_stream: "tracked"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  options { frames: 120 objects: 1 seed: 3 width: 48 height: 48 min_size: 0.15 noise: 0.0 }
+}
+node {
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:frames"
+  output_stream: "FRAME:selected"
+  options { mode: "period" period: 4 }
+}
+node {
+  calculator: "TemplateMatchDetectorCalculator"
+  input_stream: "FRAME:selected"
+  output_stream: "DETECTIONS:fresh"
+  options { grid: 8 min_score: 0.2 box_size: 0.2 }
+}
+node {
+  calculator: "TrackedDetectionMergerCalculator"
+  input_stream: "DETECTIONS:fresh"
+  input_stream: "TRACKED:tracked"
+  output_stream: "MERGED:merged"
+  options { iou_threshold: 0.1 }
+}
+node {
+  calculator: "BoxTrackerCalculator"
+  input_stream: "FRAME:frames"
+  back_edge_input_stream: "DETECTIONS:merged"
+  output_stream: "TRACKED:tracked"
+}
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let tracked_frames = Arc::new(AtomicU64::new(0));
+    let tracked_nonempty = Arc::new(AtomicU64::new(0));
+    let (tf2, tn2) = (Arc::clone(&tracked_frames), Arc::clone(&tracked_nonempty));
+    graph
+        .observe_output("tracked", move |p| {
+            tf2.fetch_add(1, Ordering::Relaxed);
+            if !p.get::<Detections>().unwrap().is_empty() {
+                tn2.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    let frames = tracked_frames.load(Ordering::Relaxed);
+    let nonempty = tracked_nonempty.load(Ordering::Relaxed);
+    assert_eq!(frames, 120, "tracker must emit on every frame");
+    assert!(
+        nonempty * 10 >= frames * 8,
+        "tracked output mostly non-empty: {nonempty}/{frames}"
+    );
+}
+
+#[test]
+fn frame_selection_scene_change_mode() {
+    // scene cuts every 20 frames; selector in scene_change mode should
+    // pass roughly one frame per cut (plus the first).
+    let config = GraphConfig::parse(
+        r#"
+output_stream: "selected"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  options { frames: 100 objects: 2 seed: 5 scene_cut_every: 20 noise: 0.0 width: 32 height: 32 }
+}
+node {
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:frames"
+  output_stream: "FRAME:selected"
+  options { mode: "scene_change" threshold: 0.03 }
+}
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let selected = Arc::new(AtomicU64::new(0));
+    let s2 = Arc::clone(&selected);
+    graph
+        .observe_output("selected", move |_| {
+            s2.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    let n = selected.load(Ordering::Relaxed);
+    // 5 cuts in 100 frames (+ object motion may trip the threshold a
+    // few extra times); must be far below passing everything.
+    assert!((3..60).contains(&n), "selected {n} frames");
+}
+
+#[test]
+fn demux_splits_and_interpolation_restores() {
+    // Frames -> demux(2); branch A computes a landmark list from the
+    // frame (synthetic Fn calculator); interpolator restores density.
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    struct CentroidLandmark;
+    impl Calculator for CentroidLandmark {
+        fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            let p = ctx.input(0);
+            if !p.is_empty() {
+                let f = p.get::<ImageFrame>()?;
+                ctx.output_now(0, LandmarkList::new(vec![(f.mean(), f.mean())]));
+            }
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+    registry.register_fn(
+        "CentroidLandmark",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::of::<ImageFrame>())
+                .output("", PacketType::of::<LandmarkList>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(CentroidLandmark)),
+    );
+    let config = GraphConfig::parse(
+        r#"
+output_stream: "dense"
+output_stream: "half_a"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  options { frames: 60 objects: 1 seed: 2 width: 16 height: 16 }
+}
+node {
+  calculator: "RoundRobinDemuxCalculator"
+  input_stream: "frames"
+  output_stream: "OUT:half_a"
+  output_stream: "OUT:half_b"
+}
+node { calculator: "CentroidLandmark" input_stream: "half_a" output_stream: "sparse" }
+node {
+  calculator: "LandmarkInterpolatorCalculator"
+  input_stream: "FRAME:frames"
+  input_stream: "LANDMARKS:sparse"
+  output_stream: "LANDMARKS:dense"
+}
+"#,
+    )
+    .unwrap();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    let half = Arc::new(AtomicU64::new(0));
+    let dense = Arc::new(AtomicU64::new(0));
+    let (h2, d2) = (Arc::clone(&half), Arc::clone(&dense));
+    graph
+        .observe_output("half_a", move |_| {
+            h2.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    graph
+        .observe_output("dense", move |_| {
+            d2.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert_eq!(half.load(Ordering::Relaxed), 30, "demux halves the stream");
+    let d = dense.load(Ordering::Relaxed);
+    assert!(d >= 55, "interpolation restores density: {d}/60");
+}
+
+#[test]
+fn annotator_overlays_detections() {
+    let config = GraphConfig::parse(
+        r#"
+output_stream: "annotated"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  output_stream: "GT:gt"
+  options { frames: 5 objects: 1 seed: 4 width: 32 height: 32 noise: 0.0 }
+}
+node {
+  calculator: "DetectionAnnotatorCalculator"
+  input_stream: "FRAME:frames"
+  input_stream: "DETECTIONS:gt"
+  output_stream: "FRAME:annotated"
+}
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let frames: Arc<Mutex<Vec<ImageFrame>>> = Arc::new(Mutex::new(Vec::new()));
+    let f2 = Arc::clone(&frames);
+    graph
+        .observe_output("annotated", move |p| {
+            f2.lock().unwrap().push(p.get::<ImageFrame>().unwrap().clone());
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    let frames = frames.lock().unwrap();
+    assert_eq!(frames.len(), 5);
+    // annotated frames differ from raw renders (outline drawn)
+    for f in frames.iter() {
+        assert_eq!((f.width, f.height), (32, 32));
+    }
+}
+
+#[test]
+fn mask_interpolation_in_graph() {
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    struct BrightnessMask;
+    impl Calculator for BrightnessMask {
+        fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            let p = ctx.input(0);
+            if !p.is_empty() {
+                let f = p.get::<ImageFrame>()?;
+                let data: Vec<f32> = (0..f.width * f.height)
+                    .map(|i| if f.data[i * f.channels] > 0.5 { 1.0 } else { 0.0 })
+                    .collect();
+                ctx.output_now(0, Mask::new(f.width, f.height, data));
+            }
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+    registry.register_fn(
+        "BrightnessMask",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::of::<ImageFrame>())
+                .output("", PacketType::of::<Mask>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(BrightnessMask)),
+    );
+    let config = GraphConfig::parse(
+        r#"
+output_stream: "dense"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  options { frames: 40 objects: 1 seed: 6 width: 16 height: 16 }
+}
+node {
+  calculator: "RoundRobinDemuxCalculator"
+  input_stream: "frames"
+  output_stream: "OUT:sub"
+  output_stream: "OUT:other"
+}
+node { calculator: "BrightnessMask" input_stream: "sub" output_stream: "sparse" }
+node {
+  calculator: "MaskInterpolatorCalculator"
+  input_stream: "FRAME:frames"
+  input_stream: "MASK:sparse"
+  output_stream: "MASK:dense"
+}
+"#,
+    )
+    .unwrap();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = Arc::clone(&count);
+    graph
+        .observe_output("dense", move |p| {
+            let m = p.get::<Mask>().unwrap();
+            assert_eq!((m.width, m.height), (16, 16));
+            assert!(m.data.iter().all(|v| (0.0..=1.0).contains(v)));
+            c2.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert!(count.load(Ordering::Relaxed) >= 35);
+}
+
+#[test]
+fn image_transform_in_graph() {
+    let config = GraphConfig::parse(
+        r#"
+output_stream: "small"
+node {
+  calculator: "SyntheticVideoSourceCalculator"
+  output_stream: "FRAME:frames"
+  options { frames: 3 objects: 1 seed: 1 width: 64 height: 64 }
+}
+node {
+  calculator: "ImageTransformCalculator"
+  input_stream: "frames"
+  output_stream: "small"
+  options { out_width: 24 out_height: 24 }
+}
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    let seen = Arc::new(AtomicU64::new(0));
+    let s2 = Arc::clone(&seen);
+    graph
+        .observe_output("small", move |p| {
+            let f = p.get::<ImageFrame>().unwrap();
+            assert_eq!((f.width, f.height), (24, 24));
+            s2.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert_eq!(seen.load(Ordering::Relaxed), 3);
+}

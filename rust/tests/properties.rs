@@ -1,0 +1,295 @@
+//! Randomized property tests over the coordinator's invariants.
+//!
+//! The offline vendor set has no `proptest`, so this file uses a small
+//! hand-rolled harness with the same shape: seeded random generation,
+//! many iterations, and failure messages that include the seed. (The
+//! substitution is documented in DESIGN.md §4.)
+
+use std::sync::{Arc, Mutex};
+
+use mediapipe::calculators::core::Collected;
+use mediapipe::perception::XorShift;
+use mediapipe::prelude::*;
+
+/// Run `f` for `iters` random seeds; panic with the seed on failure.
+fn property(name: &str, iters: u64, f: impl Fn(&mut XorShift)) {
+    let base = 0xC0FFEE;
+    for i in 0..iters {
+        let seed = base + i;
+        let mut rng = XorShift::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+/// PROPERTY: for a random 2-input join fed random (monotonic per-
+/// stream) timestamps in random arrival order, the default policy
+/// processes every timestamp exactly once, in strictly ascending order,
+/// pairing equal timestamps — regardless of thread count.
+#[test]
+fn default_policy_guarantees_hold_for_random_inputs() {
+    property("default-policy-guarantees", 25, |rng| {
+        // random monotonic timestamp sets for two streams
+        fn gen_ts(rng: &mut XorShift, n: usize) -> Vec<i64> {
+            let mut t = 0i64;
+            (0..n)
+                .map(|_| {
+                    t += 1 + rng.below(5) as i64;
+                    t
+                })
+                .collect()
+        }
+        let nf = rng.index(30) + 1;
+        let foo_ts = gen_ts(rng, nf);
+        let nb = rng.index(30) + 1;
+        let bar_ts = gen_ts(rng, nb);
+        let threads = 1 + rng.index(4);
+
+        let config = GraphConfig::parse(&format!(
+            r#"
+num_threads: {threads}
+input_stream: "foo"
+input_stream: "bar"
+input_side_packet: "sink"
+node {{
+  calculator: "CollectorCalculator"
+  input_stream: "foo"
+  input_stream: "bar"
+  input_side_packet: "SINK:sink"
+}}
+"#
+        ))
+        .unwrap();
+        let collected: Collected = Arc::new(Mutex::new(Vec::new()));
+        let mut side = SidePackets::new();
+        side.insert(
+            "sink".into(),
+            Packet::new(collected.clone(), Timestamp::UNSET),
+        );
+        let mut graph = Graph::new(&config).unwrap();
+        graph.start_run(side).unwrap();
+        // random interleaving of the two feeds
+        let mut fi = 0;
+        let mut bi = 0;
+        while fi < foo_ts.len() || bi < bar_ts.len() {
+            let pick_foo = bi >= bar_ts.len() || (fi < foo_ts.len() && rng.chance(0.5));
+            if pick_foo {
+                graph
+                    .add_packet("foo", Packet::new(0u8, Timestamp::new(foo_ts[fi])))
+                    .unwrap();
+                fi += 1;
+            } else {
+                graph
+                    .add_packet("bar", Packet::new(0u8, Timestamp::new(bar_ts[bi])))
+                    .unwrap();
+                bi += 1;
+            }
+        }
+        graph.close_all_inputs().unwrap();
+        graph.wait_until_done().unwrap();
+
+        let got = collected.lock().unwrap().clone();
+        // every packet delivered exactly once
+        assert_eq!(got.len(), foo_ts.len() + bar_ts.len());
+        // non-decreasing timestamps; ties only within a (foo,bar) pair
+        for w in got.windows(2) {
+            assert!(w[0].0 <= w[1].0, "out of order: {got:?}");
+        }
+        let mut all: Vec<i64> = foo_ts.iter().chain(bar_ts.iter()).copied().collect();
+        all.sort_unstable();
+        let mut got_ts: Vec<i64> = got.iter().map(|(t, _)| t.raw()).collect();
+        got_ts.sort_unstable();
+        assert_eq!(got_ts, all, "lost or duplicated packets");
+    });
+}
+
+/// PROPERTY: random passthrough DAGs (random depth/fan-out) deliver
+/// every source packet to every sink exactly once, under random
+/// max_queue_size (back-pressure never deadlocks, §4.1.4).
+#[test]
+fn random_dags_with_backpressure_complete() {
+    property("random-dag-completion", 20, |rng| {
+        let layers = 2 + rng.index(3); // 2..4 layers
+        let width = 1 + rng.index(3); // 1..3 nodes per layer
+        let count = 50 + rng.index(100) as u64;
+        let maxq = 1 + rng.index(8);
+        let mut text = format!(
+            "max_queue_size: {maxq}\ninput_side_packet: \"sink\"\n\
+             node {{ calculator: \"CounterSourceCalculator\" output_stream: \"l0_0\" options {{ count: {count} }} }}\n"
+        );
+        let mut prev: Vec<String> = vec!["l0_0".into()];
+        for l in 1..=layers {
+            let mut cur = Vec::new();
+            for w in 0..width {
+                // each node consumes a random upstream stream
+                let src = &prev[rng.index(prev.len())];
+                let name = format!("l{l}_{w}");
+                text.push_str(&format!(
+                    "node {{ calculator: \"PassThroughCalculator\" input_stream: \"{src}\" output_stream: \"{name}\" }}\n"
+                ));
+                cur.push(name);
+            }
+            prev = cur;
+        }
+        // a collector on the last layer's first stream
+        text.push_str(&format!(
+            "node {{ calculator: \"CollectorCalculator\" input_stream: \"{}\" input_side_packet: \"SINK:sink\" }}\n",
+            prev[0]
+        ));
+        let config = GraphConfig::parse(&text).unwrap();
+        let collected: Collected = Arc::new(Mutex::new(Vec::new()));
+        let mut side = SidePackets::new();
+        side.insert(
+            "sink".into(),
+            Packet::new(collected.clone(), Timestamp::UNSET),
+        );
+        let mut graph = Graph::new(&config).unwrap();
+        graph.run(side).unwrap(); // must terminate (no deadlock)
+        assert_eq!(collected.lock().unwrap().len() as u64, count);
+    });
+}
+
+/// PROPERTY: the Fig. 3 flow limiter never exceeds its in-flight budget
+/// and conserves packets (completed + dropped == offered).
+#[test]
+fn flow_limiter_conserves_and_bounds() {
+    property("flow-limiter-budget", 12, |rng| {
+        let budget = 1 + rng.index(4);
+        let offered = 30 + rng.index(120) as i64;
+        let work = 20 + rng.below(300) as i64;
+        let config = GraphConfig::parse(&format!(
+            r#"
+input_stream: "frames"
+output_stream: "done"
+input_side_packet: "drops"
+node {{
+  calculator: "FlowLimiterCalculator"
+  input_stream: "frames"
+  back_edge_input_stream: "FINISHED:done"
+  output_stream: "gated"
+  input_side_packet: "DROPS:drops"
+  options {{ max_in_flight: {budget} }}
+}}
+node {{ calculator: "BusyWorkCalculator" input_stream: "gated" output_stream: "done" options {{ work_us: {work} }} }}
+"#
+        ))
+        .unwrap();
+        let drops = mediapipe::calculators::flow::DropCounter::new();
+        let mut graph = Graph::new(&config).unwrap();
+        let poller = graph.poller("done").unwrap();
+        let mut side = SidePackets::new();
+        side.insert("drops".into(), Packet::new(drops.clone(), Timestamp::UNSET));
+        graph.start_run(side).unwrap();
+        for i in 0..offered {
+            graph
+                .add_packet("frames", Packet::new(i, Timestamp::new(i)))
+                .unwrap();
+        }
+        graph.close_all_inputs().unwrap();
+        graph.wait_until_done().unwrap();
+        let completed = poller.drain().len() as u64;
+        assert_eq!(
+            completed + drops.get(),
+            offered as u64,
+            "conservation violated"
+        );
+        assert!(completed >= 1);
+    });
+}
+
+/// PROPERTY: GraphConfig::parse(to_text(c)) == c for randomly generated
+/// configs (parser/printer round-trip).
+#[test]
+fn config_roundtrip_fuzz() {
+    property("config-roundtrip", 50, |rng| {
+        let mut b = GraphBuilder::new();
+        if rng.chance(0.5) {
+            b = b.input_stream(&format!("in{}", rng.below(10)));
+        }
+        if rng.chance(0.3) {
+            b = b.max_queue_size(1 + rng.index(64));
+        }
+        if rng.chance(0.3) {
+            b = b.executor("x", rng.index(4));
+        }
+        let nodes = 1 + rng.index(5);
+        for i in 0..nodes {
+            let with_opts = rng.chance(0.5);
+            let tagged = rng.chance(0.5);
+            b = b.node("PassThroughCalculator", |mut n| {
+                n = n.name(&format!("n{i}"));
+                n = if tagged {
+                    n.input(&format!("TAG:s{i}"))
+                } else {
+                    n.input(&format!("s{i}"))
+                };
+                n = n.output(&format!("s{}", i + 1));
+                if with_opts {
+                    n = n
+                        .option_int("k", 42)
+                        .option_float("f", 0.5)
+                        .option_str("s", "hello world")
+                        .option_bool("b", true);
+                }
+                n
+            });
+        }
+        let config = b.build();
+        let printed = config.to_text();
+        let reparsed = GraphConfig::parse(&printed)
+            .unwrap_or_else(|e| panic!("reparse failed: {e}\n{printed}"));
+        assert_eq!(config, reparsed, "round-trip mismatch:\n{printed}");
+    });
+}
+
+/// PROPERTY: a calculator never runs concurrently with itself (§3: each
+/// calculator executes on at most one thread at a time), even with many
+/// executor threads and bursty input.
+#[test]
+fn no_self_concurrency() {
+    use std::sync::atomic::{AtomicI32, Ordering};
+    static IN_FLIGHT: AtomicI32 = AtomicI32::new(0);
+    static VIOLATIONS: AtomicI32 = AtomicI32::new(0);
+
+    struct Guarded;
+    impl Calculator for Guarded {
+        fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+            let now = IN_FLIGHT.fetch_add(1, Ordering::SeqCst);
+            if now != 0 {
+                VIOLATIONS.fetch_add(1, Ordering::SeqCst);
+            }
+            std::thread::yield_now(); // widen the race window
+            IN_FLIGHT.fetch_sub(1, Ordering::SeqCst);
+            let p = ctx.input(0).clone();
+            if !p.is_empty() {
+                ctx.output(0, p);
+            }
+            Ok(ProcessOutcome::Continue)
+        }
+    }
+    let registry = CalculatorRegistry::new();
+    mediapipe::calculators::register_builtins(&registry);
+    registry.register_fn(
+        "Guarded",
+        |_| {
+            Ok(Contract::new()
+                .input("", PacketType::Any)
+                .output("", PacketType::Any))
+        },
+        |_| Ok(Box::new(Guarded)),
+    );
+    let config = GraphConfig::parse(
+        r#"
+num_threads: 8
+node { calculator: "CounterSourceCalculator" output_stream: "a" options { count: 5000 batch: 32 } }
+node { calculator: "Guarded" input_stream: "a" output_stream: "b" }
+"#,
+    )
+    .unwrap();
+    let subs = SubgraphRegistry::new();
+    let mut graph = Graph::with_registries(&config, &registry, &subs).unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert_eq!(VIOLATIONS.load(std::sync::atomic::Ordering::SeqCst), 0);
+}

@@ -1,0 +1,208 @@
+//! End-to-end runtime tests: load the AOT artifacts, execute models via
+//! PJRT, and validate the semantic contract (the detector detects, the
+//! segmenter segments). Skipped with a notice when `make artifacts` has
+//! not run yet.
+
+use mediapipe::perception::{ImageFrame, Rect, SyntheticWorld};
+use mediapipe::runtime::{shared_engine, Tensor};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(&format!("{ARTIFACTS}/manifest.txt")).exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_loads_all_models() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let models = engine.models();
+    for want in ["detector", "detector_b4", "landmark", "segmenter"] {
+        assert!(models.iter().any(|m| m == want), "missing {want}: {models:?}");
+    }
+}
+
+#[test]
+fn detector_detects_synthetic_objects() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    // Scene with one bright object at a known location.
+    let mut b = ImageFrame::build(32, 32, 1);
+    b.fill(0.15)
+        .fill_rect(&Rect::new(0.5, 0.5, 0.3, 0.3), &[0.9]);
+    let img = b.finish();
+    let out = engine
+        .infer(
+            "detector",
+            vec![Tensor::new(vec![1, 32, 32, 1], img.to_tensor())],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let (boxes, scores) = (&out[0], &out[1]);
+    assert_eq!(boxes.shape, vec![1, 49, 4]);
+    assert_eq!(scores.shape, vec![1, 49]);
+    // hot anchors exist and sit inside the object
+    let hot: Vec<usize> = (0..49).filter(|&i| scores.data[i] > 0.5).collect();
+    assert!(!hot.is_empty(), "nothing detected");
+    for &i in &hot {
+        let bx = &boxes.data[i * 4..i * 4 + 4];
+        let (cx, cy) = (bx[0] + bx[2] / 2.0, bx[1] + bx[3] / 2.0);
+        assert!(cx > 0.4 && cy > 0.4, "hot anchor at ({cx:.2},{cy:.2})");
+    }
+    // dark scene: silence
+    let dark = ImageFrame::filled(32, 32, 1, 0.2);
+    let out = engine
+        .infer(
+            "detector",
+            vec![Tensor::new(vec![1, 32, 32, 1], dark.to_tensor())],
+        )
+        .unwrap();
+    assert!(out[1].data.iter().all(|&s| s < 0.5));
+}
+
+#[test]
+fn detector_matches_world_ground_truth() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let mut world = SyntheticWorld::new(32, 32, 1, 13)
+        .with_noise(0.0)
+        .with_object_sizes(0.12, 0.2);
+    let mut hits = 0;
+    let mut frames = 0;
+    for _ in 0..20 {
+        world.step();
+        let frame = world.render();
+        let gt = world.ground_truth();
+        let out = engine
+            .infer(
+                "detector",
+                vec![Tensor::new(vec![1, 32, 32, 1], frame.to_tensor())],
+            )
+            .unwrap();
+        let (boxes, scores) = (&out[0], &out[1]);
+        frames += 1;
+        // does any hot anchor overlap the GT object?
+        let got_hit = (0..49).any(|i| {
+            scores.data[i] > 0.5 && {
+                let b = &boxes.data[i * 4..i * 4 + 4];
+                mediapipe::perception::iou(
+                    &Rect::new(b[0], b[1], b[2], b[3]),
+                    &gt[0].bbox,
+                ) > 0.1
+            }
+        });
+        if got_hit {
+            hits += 1;
+        }
+    }
+    assert!(
+        hits * 10 >= frames * 7,
+        "detector found the object in only {hits}/{frames} frames"
+    );
+}
+
+#[test]
+fn batched_detector_variants_agree() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let mut b = ImageFrame::build(32, 32, 1);
+    b.fill(0.2).fill_rect(&Rect::new(0.1, 0.1, 0.3, 0.3), &[0.95]);
+    let img = b.finish().to_tensor();
+    // batch-4 input = same image repeated
+    let mut batch = Vec::new();
+    for _ in 0..4 {
+        batch.extend_from_slice(&img);
+    }
+    let single = engine
+        .infer("detector", vec![Tensor::new(vec![1, 32, 32, 1], img)])
+        .unwrap();
+    let batched = engine
+        .infer("detector_b4", vec![Tensor::new(vec![4, 32, 32, 1], batch)])
+        .unwrap();
+    // every batch row equals the single-image result
+    for row in 0..4 {
+        let n = 49;
+        let got = &batched[1].data[row * n..(row + 1) * n];
+        for (a, b) in got.iter().zip(&single[1].data) {
+            assert!((a - b).abs() < 1e-4, "batch row {row} diverged");
+        }
+    }
+}
+
+#[test]
+fn segmenter_masks_bright_pixels() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let mut b = ImageFrame::build(24, 24, 1);
+    b.fill(0.1).fill_rect(&Rect::new(0.25, 0.25, 0.5, 0.5), &[0.9]);
+    let out = engine
+        .infer(
+            "segmenter",
+            vec![Tensor::new(vec![1, 24, 24, 1], b.finish().to_tensor())],
+        )
+        .unwrap();
+    let mask = &out[0];
+    assert_eq!(mask.shape, vec![24, 24]);
+    let at = |x: usize, y: usize| mask.data[y * 24 + x];
+    assert!(at(12, 12) > 0.8, "centre {}", at(12, 12));
+    assert!(at(1, 1) < 0.2, "corner {}", at(1, 1));
+}
+
+#[test]
+fn landmark_outputs_normalized_points() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let img = ImageFrame::filled(24, 24, 1, 0.6);
+    let out = engine
+        .infer(
+            "landmark",
+            vec![Tensor::new(vec![1, 24, 24, 1], img.to_tensor())],
+        )
+        .unwrap();
+    assert_eq!(out[0].shape, vec![5, 2]);
+    assert!(out[0].data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+}
+
+#[test]
+fn wrong_input_shape_is_clean_error() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let err = engine
+        .infer("detector", vec![Tensor::new(vec![1, 4, 4, 1], vec![0.0; 16])])
+        .unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+    let err = engine.infer("nope", vec![]).unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    require_artifacts!();
+    let engine = shared_engine(ARTIFACTS).unwrap();
+    let img = ImageFrame::filled(32, 32, 1, 0.5).to_tensor();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let e = engine.clone();
+        let img = img.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..5 {
+                let out = e
+                    .infer("detector", vec![Tensor::new(vec![1, 32, 32, 1], img.clone())])
+                    .unwrap();
+                assert_eq!(out[1].data.len(), 49);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

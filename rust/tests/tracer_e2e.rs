@@ -1,0 +1,158 @@
+//! Tracer + visualizer end-to-end (§5): trace a real run, check event
+//! coherence, round-trip the export, analyze, render.
+
+use mediapipe::prelude::*;
+use mediapipe::tracer::profile;
+use mediapipe::visualizer;
+
+fn traced_run() -> (TraceFile, u64) {
+    let config_text = r#"
+profiler { enabled: true buffer_size: 262144 }
+node { calculator: "CounterSourceCalculator" output_stream: "a" options { count: 500 } }
+node { calculator: "BusyWorkCalculator" input_stream: "a" output_stream: "b" options { work_us: 20 } }
+node { calculator: "PassThroughCalculator" input_stream: "b" output_stream: "c" }
+"#;
+    let config = GraphConfig::parse(config_text).unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    let dropped = graph.tracer().dropped();
+    (TraceFile::capture(graph.tracer()), dropped)
+}
+
+#[test]
+fn events_are_coherent() {
+    let (tf, dropped) = traced_run();
+    assert_eq!(dropped, 0, "ring must not wrap in this test");
+    // Start/End pairing per node.
+    use mediapipe::tracer::EventType::*;
+    let mut opens = std::collections::HashMap::new();
+    for e in &tf.events {
+        match e.event_type {
+            ProcessStart | OpenStart | CloseStart => {
+                *opens.entry((e.node_id, e.thread_id)).or_insert(0i64) += 1;
+            }
+            ProcessEnd | OpenEnd | CloseEnd => {
+                let c = opens.entry((e.node_id, e.thread_id)).or_insert(0i64);
+                *c -= 1;
+                assert!(*c >= 0, "End before Start for node {}", e.node_id);
+            }
+            _ => {}
+        }
+    }
+    assert!(opens.values().all(|&v| v == 0), "unbalanced spans: {opens:?}");
+    // Every node opened and closed exactly once.
+    let open_count = tf
+        .events
+        .iter()
+        .filter(|e| e.event_type == OpenStart)
+        .count();
+    let close_count = tf
+        .events
+        .iter()
+        .filter(|e| e.event_type == CloseStart)
+        .count();
+    assert_eq!(open_count, 3);
+    assert_eq!(close_count, 3);
+}
+
+#[test]
+fn packet_flow_is_traceable() {
+    let (tf, _) = traced_run();
+    use mediapipe::tracer::EventType::*;
+    // 500 packets emitted by the source on stream 'a', 500 added at the
+    // busywork node, 500 emitted on 'b', 500 added at passthrough.
+    let emitted = tf.events.iter().filter(|e| e.event_type == PacketEmitted).count();
+    let added = tf.events.iter().filter(|e| e.event_type == PacketAdded).count();
+    assert_eq!(emitted, 1500); // a, b, c
+    assert_eq!(added, 1000); // consumers of a and b (c unconsumed)
+    // data ids line up between emit and add
+    let mut emitted_ids: Vec<u64> = tf
+        .events
+        .iter()
+        .filter(|e| e.event_type == PacketEmitted)
+        .map(|e| e.packet_data_id)
+        .collect();
+    emitted_ids.sort_unstable();
+    for e in tf.events.iter().filter(|e| e.event_type == PacketAdded) {
+        assert!(emitted_ids.binary_search(&e.packet_data_id).is_ok());
+    }
+}
+
+#[test]
+fn profile_identifies_the_hot_node() {
+    let (tf, _) = traced_run();
+    let mut prof = profile::analyze(&tf);
+    let busy = prof
+        .nodes
+        .iter_mut()
+        .find(|n| n.name.contains("BusyWork"))
+        .unwrap();
+    assert_eq!(busy.invocations, 500);
+    assert!(busy.process.mean() >= 18.0, "mean {}", busy.process.mean());
+    // BusyWork dominates total time vs PassThrough.
+    let busy_total = prof
+        .nodes
+        .iter()
+        .find(|n| n.name.contains("BusyWork"))
+        .unwrap()
+        .total_us;
+    let pass_total = prof
+        .nodes
+        .iter()
+        .find(|n| n.name.contains("PassThrough"))
+        .unwrap()
+        .total_us;
+    assert!(busy_total > pass_total * 3, "{busy_total} vs {pass_total}");
+    let report = profile::report(&mut prof);
+    assert!(report.contains("BusyWork"));
+}
+
+#[test]
+fn export_roundtrip_and_render() {
+    let (tf, _) = traced_run();
+    let tsv = tf.to_tsv();
+    let tf2 = TraceFile::from_tsv(&tsv).unwrap();
+    assert_eq!(tf.events.len(), tf2.events.len());
+    let timeline = visualizer::timeline_ascii(&tf2, 80);
+    assert!(timeline.contains("thread"));
+    assert!(timeline.contains("BusyWork"));
+    let graph_view = visualizer::graph_ascii(&tf2);
+    assert!(graph_view.contains("-->"), "{graph_view}");
+    let html = visualizer::render_html(&tf2);
+    assert!(html.contains("<svg"));
+    let json = tf.to_chrome_json();
+    assert!(json.contains("traceEvents"));
+}
+
+#[test]
+fn disabled_profiler_records_nothing() {
+    let config = GraphConfig::parse(
+        r#"
+node { calculator: "CounterSourceCalculator" output_stream: "a" options { count: 10 } }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert!(TraceFile::capture(graph.tracer()).events.is_empty());
+}
+
+#[test]
+fn ring_wraps_without_corruption() {
+    let config = GraphConfig::parse(
+        r#"
+profiler { enabled: true buffer_size: 256 }
+node { calculator: "CounterSourceCalculator" output_stream: "a" options { count: 2000 } }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }
+"#,
+    )
+    .unwrap();
+    let mut graph = Graph::new(&config).unwrap();
+    graph.run(SidePackets::new()).unwrap();
+    assert!(graph.tracer().dropped() > 0);
+    let tf = TraceFile::capture(graph.tracer());
+    assert!(tf.events.len() <= 256);
+    // all surviving events parse/render fine
+    let _ = visualizer::render_html(&tf);
+}
