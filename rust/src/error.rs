@@ -3,47 +3,42 @@
 //! MediaPipe reports graph failures as a single status propagated out of
 //! `Graph::wait_until_done()`; any calculator error terminates the graph
 //! run (§3.5). We mirror that with one `MpError` enum used across the
-//! framework, and a `MpResult<T>` alias.
+//! framework, and a `MpResult<T>` alias. `Display` and `std::error::Error`
+//! are implemented by hand — the crate builds offline with zero
+//! dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used across the framework.
 pub type MpResult<T> = Result<T, MpError>;
 
 /// Framework-wide error type.
-#[derive(Error, Debug, Clone)]
+#[derive(Debug, Clone)]
 pub enum MpError {
     /// Graph configuration failed validation (§3.5: stream produced by
     /// more than one source, type mismatch, contract violation, ...).
-    #[error("graph validation error: {0}")]
     Validation(String),
 
     /// GraphConfig text could not be parsed.
-    #[error("config parse error at line {line}: {message}")]
     Parse { line: usize, message: String },
 
     /// A calculator name was not found in the registry.
-    #[error("unknown calculator type: {0}")]
     UnknownCalculator(String),
 
     /// A subgraph type was not found in the subgraph registry.
-    #[error("unknown subgraph type: {0}")]
     UnknownSubgraph(String),
 
     /// Packet payload was accessed with the wrong type.
-    #[error("packet type mismatch: expected {expected}, got {actual}")]
     PacketTypeMismatch {
         expected: &'static str,
         actual: &'static str,
     },
 
     /// Attempted to read an empty packet (no payload at this timestamp).
-    #[error("empty packet")]
     EmptyPacket,
 
     /// A packet violated the monotonically-increasing timestamp
     /// requirement on a stream (§4.1.2).
-    #[error("timestamp violation on stream '{stream}': packet ts {packet_ts} < bound {bound}")]
     TimestampViolation {
         stream: String,
         packet_ts: i64,
@@ -51,38 +46,71 @@ pub enum MpError {
     },
 
     /// A calculator returned an error from Open(); terminates the run.
-    #[error("calculator '{node}' failed in Open(): {message}")]
     OpenFailed { node: String, message: String },
 
     /// A calculator returned an error from Process(); the framework calls
     /// Close() and the graph run terminates (§3.4).
-    #[error("calculator '{node}' failed in Process(): {message}")]
     ProcessFailed { node: String, message: String },
 
     /// A calculator returned an error from Close().
-    #[error("calculator '{node}' failed in Close(): {message}")]
     CloseFailed { node: String, message: String },
 
     /// Side packet requested by a calculator was not provided.
-    #[error("missing side packet '{0}'")]
     MissingSidePacket(String),
 
     /// Graph input stream operations after the graph finished, etc.
-    #[error("invalid graph state: {0}")]
     InvalidState(String),
 
-    /// Runtime (PJRT / XLA artifact) failures.
-    #[error("runtime error: {0}")]
+    /// Runtime (model backend / artifact) failures.
     Runtime(String),
 
     /// I/O wrapper (trace export, artifact load, ...).
-    #[error("io error: {0}")]
     Io(String),
 
     /// Catch-all for calculator-internal errors.
-    #[error("{0}")]
     Internal(String),
 }
+
+impl fmt::Display for MpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpError::Validation(m) => write!(f, "graph validation error: {m}"),
+            MpError::Parse { line, message } => {
+                write!(f, "config parse error at line {line}: {message}")
+            }
+            MpError::UnknownCalculator(n) => write!(f, "unknown calculator type: {n}"),
+            MpError::UnknownSubgraph(n) => write!(f, "unknown subgraph type: {n}"),
+            MpError::PacketTypeMismatch { expected, actual } => {
+                write!(f, "packet type mismatch: expected {expected}, got {actual}")
+            }
+            MpError::EmptyPacket => write!(f, "empty packet"),
+            MpError::TimestampViolation {
+                stream,
+                packet_ts,
+                bound,
+            } => write!(
+                f,
+                "timestamp violation on stream '{stream}': packet ts {packet_ts} < bound {bound}"
+            ),
+            MpError::OpenFailed { node, message } => {
+                write!(f, "calculator '{node}' failed in Open(): {message}")
+            }
+            MpError::ProcessFailed { node, message } => {
+                write!(f, "calculator '{node}' failed in Process(): {message}")
+            }
+            MpError::CloseFailed { node, message } => {
+                write!(f, "calculator '{node}' failed in Close(): {message}")
+            }
+            MpError::MissingSidePacket(n) => write!(f, "missing side packet '{n}'"),
+            MpError::InvalidState(m) => write!(f, "invalid graph state: {m}"),
+            MpError::Runtime(m) => write!(f, "runtime error: {m}"),
+            MpError::Io(m) => write!(f, "io error: {m}"),
+            MpError::Internal(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for MpError {}
 
 impl MpError {
     /// Convenience constructor used by calculators.
@@ -94,12 +122,6 @@ impl MpError {
 impl From<std::io::Error> for MpError {
     fn from(e: std::io::Error) -> Self {
         MpError::Io(e.to_string())
-    }
-}
-
-impl From<anyhow::Error> for MpError {
-    fn from(e: anyhow::Error) -> Self {
-        MpError::Internal(format!("{e:#}"))
     }
 }
 
@@ -131,5 +153,11 @@ mod tests {
         let e = MpError::Validation("dup stream".into());
         let e2 = e.clone();
         assert_eq!(e.to_string(), e2.to_string());
+    }
+
+    #[test]
+    fn implements_std_error() {
+        fn takes_err(_: &dyn std::error::Error) {}
+        takes_err(&MpError::EmptyPacket);
     }
 }

@@ -1,0 +1,396 @@
+//! Executors: the threads that actually run scheduled tasks (§4.1.1).
+//!
+//! The paper separates *scheduler queues* from *executors*: "each queue
+//! has exactly one executor ... the executor is configurable, and can be
+//! shared between queues". Before this layer existed, every
+//! [`crate::scheduler::SchedulerQueue`] owned its worker threads, so N
+//! concurrent graph runs meant N private thread pools — a dead end for
+//! serving many simultaneous pipelines. Now the queue is only a priority
+//! queue; it *submits* ready tasks to an [`Executor`], and executors are
+//! ordinary `Arc` values that any number of queues — across any number
+//! of graphs — can share.
+//!
+//! Three implementations:
+//!
+//! * [`ThreadPoolExecutor`] — a fixed pool of worker threads draining a
+//!   FIFO of submitted tasks. This is the production executor; construct
+//!   one per process (or per serving tier) and hand it to every graph
+//!   via [`crate::graph::Graph::with_executor`].
+//! * [`InlineExecutor`] — runs every task on the submitting thread, with
+//!   a trampoline so recursive submissions (node A scheduling node B)
+//!   become a loop instead of unbounded stack growth. Deterministic and
+//!   thread-free: the executor of choice for tests.
+//! * [`process_pool`] — a lazily created process-wide
+//!   `ThreadPoolExecutor` sized to the host ("based on the system's
+//!   capabilities"), reachable from graph configs via
+//!   `executor { name: "x" type: "shared" }`.
+//!
+//! Sharing an executor never mixes graph *state* — queues own their
+//! heaps and graphs own their nodes; the executor only supplies threads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A unit of work submitted by a scheduler queue.
+pub type ExecutorTask = Box<dyn FnOnce() + Send>;
+
+/// Something that can run submitted tasks (§4.1.1: "executors are
+/// responsible for actually running the task").
+pub trait Executor: Send + Sync {
+    /// Submit one task; the executor runs it as soon as capacity allows.
+    /// Tasks submitted from the same thread are started in submission
+    /// order (they may still overlap when the executor is parallel).
+    fn execute(&self, task: ExecutorTask);
+
+    /// Worker parallelism (1 for inline executors).
+    fn num_threads(&self) -> usize;
+
+    /// Diagnostic name.
+    fn name(&self) -> &str;
+}
+
+/// Total worker threads ever spawned by [`ThreadPoolExecutor`]s in this
+/// process. Tests use this to prove that graph runs sharing a pool do
+/// not spawn per-graph workers.
+static WORKERS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// How many pool worker threads have been spawned process-wide.
+pub fn worker_threads_spawned() -> usize {
+    WORKERS_SPAWNED.load(Ordering::Acquire)
+}
+
+struct PoolInner {
+    tasks: Mutex<VecDeque<ExecutorTask>>,
+    cv: Condvar,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// A fixed-size worker pool draining submitted tasks in FIFO order.
+/// Shareable: clone the `Arc` and hand it to as many scheduler queues /
+/// graphs as you like. Dropping the last handle joins the workers after
+/// the queue drains.
+pub struct ThreadPoolExecutor {
+    name: String,
+    inner: Arc<PoolInner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    num_threads: usize,
+}
+
+impl ThreadPoolExecutor {
+    /// Create a pool; `num_threads == 0` means "based on the system's
+    /// capabilities". Workers are spawned eagerly so thread counts are
+    /// observable before any task runs.
+    pub fn new(name: &str, num_threads: usize) -> ThreadPoolExecutor {
+        let n = if num_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|v| v.get())
+                .unwrap_or(4)
+        } else {
+            num_threads
+        };
+        let inner = Arc::new(PoolInner {
+            tasks: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+        });
+        let mut workers = Vec::with_capacity(n);
+        for wi in 0..n {
+            let inner = Arc::clone(&inner);
+            let tname = format!("mpx-{name}-{wi}");
+            WORKERS_SPAWNED.fetch_add(1, Ordering::AcqRel);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(tname)
+                    .spawn(move || loop {
+                        let task = {
+                            let mut q = inner.tasks.lock().unwrap();
+                            loop {
+                                if let Some(t) = q.pop_front() {
+                                    break Some(t);
+                                }
+                                if inner.shutdown.load(Ordering::Acquire) {
+                                    break None;
+                                }
+                                q = inner.cv.wait(q).unwrap();
+                            }
+                        };
+                        match task {
+                            Some(t) => {
+                                // A panicking task must not kill the
+                                // worker: the pool may be shared by many
+                                // graphs, and each lost worker would
+                                // shrink capacity for all of them. The
+                                // panic is contained here; the failing
+                                // graph's own accounting (drop guards)
+                                // keeps its shutdown correct.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(t),
+                                );
+                            }
+                            None => return,
+                        }
+                    })
+                    .expect("spawn executor worker"),
+            );
+        }
+        ThreadPoolExecutor {
+            name: name.to_string(),
+            inner,
+            workers: Mutex::new(workers),
+            num_threads: n,
+        }
+    }
+
+    /// Number of tasks queued (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.inner.tasks.lock().unwrap().len()
+    }
+
+    /// Stop the workers once the task queue drains. Idempotent. The
+    /// shutdown flag flips under the task-queue lock so a concurrent
+    /// `execute` either lands its task before the flip (a live worker
+    /// must drain the queue before exiting) or sees the flip and runs
+    /// the task on the submitting thread — no task is ever stranded.
+    pub fn shutdown(&self) {
+        {
+            let _q = self.inner.tasks.lock().unwrap();
+            self.inner.shutdown.store(true, Ordering::Release);
+        }
+        self.inner.cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Executor for ThreadPoolExecutor {
+    fn execute(&self, task: ExecutorTask) {
+        let run_inline = {
+            let mut q = self.inner.tasks.lock().unwrap();
+            if self.inner.shutdown.load(Ordering::Acquire) {
+                Some(task)
+            } else {
+                q.push_back(task);
+                None
+            }
+        };
+        match run_inline {
+            Some(t) => t(), // pool shut down: degrade to caller-inline
+            None => self.inner.cv.notify_one(),
+        }
+    }
+
+    fn num_threads(&self) -> usize {
+        self.num_threads
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Drop for ThreadPoolExecutor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct InlineState {
+    queue: VecDeque<ExecutorTask>,
+    active: bool,
+}
+
+/// Runs every task on the thread that submits it. A trampoline turns
+/// recursive submissions (a running task scheduling follow-up tasks)
+/// into iteration, so arbitrarily long pipelines execute in constant
+/// stack space. Single-threaded and deterministic: tasks run in exactly
+/// the order they were submitted.
+pub struct InlineExecutor {
+    state: Mutex<InlineState>,
+}
+
+impl InlineExecutor {
+    pub fn new() -> InlineExecutor {
+        InlineExecutor {
+            state: Mutex::new(InlineState {
+                queue: VecDeque::new(),
+                active: false,
+            }),
+        }
+    }
+}
+
+impl Default for InlineExecutor {
+    fn default() -> Self {
+        InlineExecutor::new()
+    }
+}
+
+impl Executor for InlineExecutor {
+    fn execute(&self, task: ExecutorTask) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.queue.push_back(task);
+            if st.active {
+                // A task submitted from inside a running task: the
+                // draining loop below (on the outer frame) will run it.
+                return;
+            }
+            st.active = true;
+        }
+        // If a task panics, clear `active` so later submissions resume
+        // draining the queue instead of parking forever behind a flag
+        // nobody will reset; the panic itself propagates to the caller.
+        struct ActiveGuard<'a>(&'a Mutex<InlineState>);
+        impl Drop for ActiveGuard<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.lock().unwrap_or_else(|e| e.into_inner()).active = false;
+                }
+            }
+        }
+        let _guard = ActiveGuard(&self.state);
+        loop {
+            let next = {
+                let mut st = self.state.lock().unwrap();
+                match st.queue.pop_front() {
+                    Some(t) => t,
+                    None => {
+                        st.active = false;
+                        return;
+                    }
+                }
+            };
+            next();
+        }
+    }
+
+    fn num_threads(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &str {
+        "inline"
+    }
+}
+
+/// The process-wide shared pool ("based on the system's capabilities"),
+/// created on first use and never torn down. Graph configs reach it with
+/// `executor { name: "x" type: "shared" }`; code reaches it here.
+pub fn process_pool() -> Arc<ThreadPoolExecutor> {
+    static POOL: OnceLock<Arc<ThreadPoolExecutor>> = OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(ThreadPoolExecutor::new("shared", 0))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+
+    #[test]
+    fn pool_runs_submitted_tasks() {
+        let pool = ThreadPoolExecutor::new("t", 2);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..50usize {
+            let tx = tx.clone();
+            pool.execute(Box::new(move || {
+                tx.send(i).unwrap();
+            }));
+        }
+        drop(tx);
+        let mut got: Vec<usize> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_shutdown_is_idempotent() {
+        let pool = ThreadPoolExecutor::new("t", 1);
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hit);
+        let (tx, rx) = mpsc::channel();
+        pool.execute(Box::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+            tx.send(()).unwrap();
+        }));
+        rx.recv().unwrap();
+        pool.shutdown();
+        pool.shutdown();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_runs_on_caller() {
+        let pool = ThreadPoolExecutor::new("t", 1);
+        pool.shutdown();
+        let hit = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hit);
+        pool.execute(Box::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        // Ran synchronously on this thread — never stranded.
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn pool_zero_threads_uses_system_capabilities() {
+        let pool = ThreadPoolExecutor::new("t", 0);
+        assert!(pool.num_threads() >= 1);
+    }
+
+    #[test]
+    fn spawn_counter_tracks_pool_workers() {
+        // Other tests may spawn pools concurrently, so only monotonic
+        // claims are safe here; the exact-count proof lives in the
+        // single-purpose integration test (tests/shared_executor.rs).
+        let before = worker_threads_spawned();
+        let pool = ThreadPoolExecutor::new("t", 3);
+        assert!(worker_threads_spawned() >= before + 3);
+        drop(pool);
+        // Joining workers does not decrement: the counter records spawns.
+        assert!(worker_threads_spawned() >= before + 3);
+    }
+
+    #[test]
+    fn inline_runs_immediately_in_order() {
+        let ex = InlineExecutor::new();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = Arc::clone(&order);
+        ex.execute(Box::new(move || {
+            o2.lock().unwrap().push(1);
+        }));
+        assert_eq!(*order.lock().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn inline_trampolines_recursive_submissions() {
+        // Each task submits the next; naive recursion would need 100k
+        // stack frames.
+        let ex = Arc::new(InlineExecutor::new());
+        let count = Arc::new(AtomicUsize::new(0));
+        fn submit(ex: &Arc<InlineExecutor>, count: &Arc<AtomicUsize>, left: usize) {
+            if left == 0 {
+                return;
+            }
+            let ex2 = Arc::clone(ex);
+            let c2 = Arc::clone(count);
+            ex.execute(Box::new(move || {
+                c2.fetch_add(1, Ordering::Relaxed);
+                submit(&ex2, &c2, left - 1);
+            }));
+        }
+        submit(&ex, &count, 100_000);
+        assert_eq!(count.load(Ordering::Relaxed), 100_000);
+    }
+
+    #[test]
+    fn process_pool_is_singleton() {
+        let a = process_pool();
+        let b = process_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -57,7 +57,32 @@ impl GraphBuilder {
         self.config.executors.push(ExecutorConfig {
             name: name.to_string(),
             num_threads,
+            kind: Default::default(),
         });
+        self
+    }
+
+    /// Declare an executor with an explicit kind (`shared` binds the
+    /// queue to the process-wide pool; `inline` runs deterministically on
+    /// the submitting thread).
+    pub fn executor_kind(
+        mut self,
+        name: &str,
+        num_threads: usize,
+        kind: crate::graph::config::ExecutorKind,
+    ) -> Self {
+        self.config.executors.push(ExecutorConfig {
+            name: name.to_string(),
+            num_threads,
+            kind,
+        });
+        self
+    }
+
+    /// Route all nodes without an explicit `executor` to this declared
+    /// executor.
+    pub fn default_executor(mut self, name: &str) -> Self {
+        self.config.default_executor = Some(name.to_string());
         self
     }
 

@@ -122,13 +122,55 @@ impl NodeConfig {
     }
 }
 
+/// What kind of executor backs a scheduler queue (§4.1.1: the executor
+/// "is configurable, and can be shared between queues").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// A thread pool owned by this graph instance (the default).
+    #[default]
+    ThreadPool,
+    /// The process-wide shared pool ([`crate::executor::process_pool`]):
+    /// every graph run declaring this shares one set of workers.
+    Shared,
+    /// Run tasks inline on the submitting thread — deterministic,
+    /// thread-free ([`crate::executor::InlineExecutor`]).
+    Inline,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> MpResult<ExecutorKind> {
+        match s {
+            "threadpool" => Ok(ExecutorKind::ThreadPool),
+            "shared" => Ok(ExecutorKind::Shared),
+            "inline" => Ok(ExecutorKind::Inline),
+            other => Err(MpError::Parse {
+                line: 0,
+                message: format!(
+                    "unknown executor type '{other}' (want threadpool|shared|inline)"
+                ),
+            }),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecutorKind::ThreadPool => "threadpool",
+            ExecutorKind::Shared => "shared",
+            ExecutorKind::Inline => "inline",
+        }
+    }
+}
+
 /// A scheduler-queue/executor declaration (§4.1.1: "each scheduler queue
 /// has exactly one executor; nodes are statically assigned").
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecutorConfig {
     pub name: String,
-    /// Thread count; 0 means "based on system capabilities".
+    /// Thread count; 0 means "based on system capabilities". Ignored for
+    /// `shared` (the process pool sizes itself) and `inline`.
     pub num_threads: usize,
+    /// Which executor implementation backs the queue.
+    pub kind: ExecutorKind,
 }
 
 /// Trace/profiler settings (§5.1: enabled via a section of GraphConfig).
@@ -164,6 +206,11 @@ pub struct GraphConfig {
     pub input_side_packets: Vec<StreamBinding>,
     pub nodes: Vec<NodeConfig>,
     pub executors: Vec<ExecutorConfig>,
+    /// Queue for nodes that declare no `executor:` of their own; must
+    /// name a declared executor. None = the graph's implicit default
+    /// queue. This is how a whole graph is pointed at a shared pool
+    /// without annotating every node.
+    pub default_executor: Option<String>,
     /// Default max queue size per input stream before back-pressure
     /// engages (§4.1.4); None = unbounded.
     pub max_queue_size: Option<usize>,
@@ -209,6 +256,9 @@ impl GraphConfig {
         if let Some(n) = self.num_threads {
             out.push_str(&format!("num_threads: {n}\n"));
         }
+        if let Some(d) = &self.default_executor {
+            out.push_str(&format!("default_executor: \"{d}\"\n"));
+        }
         if self.scheduler_fifo {
             out.push_str("scheduler_fifo: true\n");
         }
@@ -222,9 +272,13 @@ impl GraphConfig {
         }
         for e in &self.executors {
             out.push_str(&format!(
-                "executor {{\n  name: \"{}\"\n  num_threads: {}\n}}\n",
+                "executor {{\n  name: \"{}\"\n  num_threads: {}\n",
                 e.name, e.num_threads
             ));
+            if e.kind != ExecutorKind::default() {
+                out.push_str(&format!("  type: \"{}\"\n", e.kind.as_str()));
+            }
+            out.push_str("}\n");
         }
         for n in &self.nodes {
             out.push_str("node {\n");
@@ -699,6 +753,7 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                 .push(StreamBinding::parse(&as_str(v, k)?)),
             "max_queue_size" => c.max_queue_size = Some(as_usize(v, k)?),
             "num_threads" => c.num_threads = Some(as_usize(v, k)?),
+            "default_executor" => c.default_executor = Some(as_str(v, k)?),
             "scheduler_fifo" => c.scheduler_fifo = matches!(v, PbValue::Bool(true)),
             "node" => match v {
                 PbValue::Msg(m) => c.nodes.push(node_from_message(m)?),
@@ -713,10 +768,12 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                 PbValue::Msg(m) => {
                     let mut name = String::new();
                     let mut num_threads = 0usize;
+                    let mut kind = ExecutorKind::default();
                     for (ek, ev) in m {
                         match ek.as_str() {
                             "name" => name = as_str(ev, ek)?,
                             "num_threads" => num_threads = as_usize(ev, ek)?,
+                            "type" => kind = ExecutorKind::parse(&as_str(ev, ek)?)?,
                             other => {
                                 return Err(MpError::Parse {
                                     line: 0,
@@ -725,7 +782,11 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                             }
                         }
                     }
-                    c.executors.push(ExecutorConfig { name, num_threads });
+                    c.executors.push(ExecutorConfig {
+                        name,
+                        num_threads,
+                        kind,
+                    });
                 }
                 _ => {
                     return Err(MpError::Parse {
@@ -912,6 +973,25 @@ node {
         let o = &c.nodes[0].options;
         assert_eq!(o.get_int("a"), Some(-5));
         assert_eq!(o.get_float("b"), Some(-0.5));
+    }
+
+    #[test]
+    fn executor_kind_and_default_executor() {
+        let text = r#"
+default_executor: "pool"
+executor { name: "pool" num_threads: 4 type: "shared" }
+executor { name: "solo" num_threads: 1 type: "inline" }
+node { calculator: "X" }
+"#;
+        let c = GraphConfig::parse(text).unwrap();
+        assert_eq!(c.default_executor.as_deref(), Some("pool"));
+        assert_eq!(c.executors[0].kind, ExecutorKind::Shared);
+        assert_eq!(c.executors[1].kind, ExecutorKind::Inline);
+        // round-trip
+        let c2 = GraphConfig::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+        // unknown kind rejected
+        assert!(GraphConfig::parse("executor { name: \"x\" type: \"bogus\" }").is_err());
     }
 
     #[test]

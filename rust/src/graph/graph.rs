@@ -24,7 +24,8 @@ use crate::calculator::{
     Calculator, CalculatorContext, Contract, Options, OutputPortBuffer, ProcessOutcome,
 };
 use crate::error::{MpError, MpResult};
-use crate::graph::config::GraphConfig;
+use crate::executor::{process_pool, Executor, InlineExecutor, ThreadPoolExecutor};
+use crate::graph::config::{ExecutorKind, GraphConfig};
 use crate::graph::subgraph::{expand_subgraphs, SubgraphRegistry};
 use crate::graph::validation::{plan, Plan, Producer, SideSource};
 use crate::packet::Packet;
@@ -927,12 +928,28 @@ impl OutputStreamPoller {
 }
 
 impl Graph {
-    /// Build a graph from a config against the global registries.
+    /// Build a graph from a config against the global registries. Each
+    /// queue gets the executor its config declares (a private thread
+    /// pool unless the config says otherwise).
     pub fn new(config: &GraphConfig) -> MpResult<Graph> {
         Graph::with_registries(
             config,
             CalculatorRegistry::global(),
             SubgraphRegistry::global(),
+        )
+    }
+
+    /// Build a graph whose every scheduler queue submits to `executor`
+    /// instead of owning threads (§4.1.1: executors "can be shared
+    /// between queues" — and, via this constructor, between graphs). Any
+    /// number of concurrently running graphs may share one executor;
+    /// none of them spawns workers of its own.
+    pub fn with_executor(config: &GraphConfig, executor: Arc<dyn Executor>) -> MpResult<Graph> {
+        Graph::with_registries_and_executor(
+            config,
+            CalculatorRegistry::global(),
+            SubgraphRegistry::global(),
+            executor,
         )
     }
 
@@ -942,15 +959,35 @@ impl Graph {
         registry: &CalculatorRegistry,
         subgraphs: &SubgraphRegistry,
     ) -> MpResult<Graph> {
+        Graph::build(config, registry, subgraphs, None)
+    }
+
+    /// Explicit registries + a shared executor.
+    pub fn with_registries_and_executor(
+        config: &GraphConfig,
+        registry: &CalculatorRegistry,
+        subgraphs: &SubgraphRegistry,
+        executor: Arc<dyn Executor>,
+    ) -> MpResult<Graph> {
+        Graph::build(config, registry, subgraphs, Some(executor))
+    }
+
+    fn build(
+        config: &GraphConfig,
+        registry: &CalculatorRegistry,
+        subgraphs: &SubgraphRegistry,
+        executor: Option<Arc<dyn Executor>>,
+    ) -> MpResult<Graph> {
         let expanded = expand_subgraphs(config, subgraphs, registry)?;
         let plan = plan(&expanded, registry)?;
-        Graph::from_plan(plan, registry, &expanded)
+        Graph::from_plan(plan, registry, &expanded, executor)
     }
 
     fn from_plan(
         plan: Plan,
         registry: &CalculatorRegistry,
         config: &GraphConfig,
+        executor_override: Option<Arc<dyn Executor>>,
     ) -> MpResult<Graph> {
         let n = plan.nodes.len();
         // Tracer (enabled per config §5.1).
@@ -1077,12 +1114,44 @@ impl Graph {
             );
         }
 
-        // Scheduler queues.
+        // Scheduler queues. Each queue resolves to an executor: an
+        // override shares one executor across every queue (and, when the
+        // caller reuses it, across graphs); otherwise the config decides
+        // per queue. Queues no node is assigned to get a thread-free
+        // inline executor so idle `executor {}` declarations cost
+        // nothing.
+        let mut queue_used = vec![false; plan.queue_names.len()];
+        for pn in &plan.nodes {
+            queue_used[pn.queue] = true;
+        }
+        // One inline executor per graph, shared by its inline queues, so
+        // recursive cross-queue scheduling trampolines in one place.
+        let mut graph_inline: Option<Arc<InlineExecutor>> = None;
         let queues: Vec<Arc<SchedulerQueue>> = plan
             .queue_names
             .iter()
-            .zip(&plan.queue_threads)
-            .map(|(name, &threads)| SchedulerQueue::new(name, threads))
+            .enumerate()
+            .map(|(qi, name)| {
+                let display = if name.is_empty() {
+                    "default"
+                } else {
+                    name.as_str()
+                };
+                let exec: Arc<dyn Executor> = match &executor_override {
+                    Some(e) => Arc::clone(e),
+                    None if !queue_used[qi] || plan.queue_kinds[qi] == ExecutorKind::Inline => {
+                        let inline = graph_inline
+                            .get_or_insert_with(|| Arc::new(InlineExecutor::new()));
+                        Arc::clone(inline) as Arc<dyn Executor>
+                    }
+                    None => match plan.queue_kinds[qi] {
+                        ExecutorKind::Shared => process_pool() as Arc<dyn Executor>,
+                        _ => Arc::new(ThreadPoolExecutor::new(display, plan.queue_threads[qi]))
+                            as Arc<dyn Executor>,
+                    },
+                };
+                SchedulerQueue::with_executor(name, exec)
+            })
             .collect();
 
         let core = Arc::new(GraphCore {
@@ -1545,6 +1614,13 @@ impl Graph {
     pub fn run(&mut self, side_packets: SidePackets) -> MpResult<()> {
         self.start_run(side_packets)?;
         self.wait_until_done()
+    }
+
+    /// Has `start_run` ever been called on this instance? A started
+    /// graph cannot run again ([`crate::serving::GraphPool`] uses this
+    /// to decide between reuse and replacement at check-in).
+    pub fn was_started(&self) -> bool {
+        self.started
     }
 
     /// Has the run finished (any reason)?

@@ -8,7 +8,9 @@ pub mod subgraph;
 pub mod validation;
 
 pub use builder::{GraphBuilder, NodeBuilder};
-pub use config::{ExecutorConfig, GraphConfig, NodeConfig, ProfilerConfig, StreamBinding};
+pub use config::{
+    ExecutorConfig, ExecutorKind, GraphConfig, NodeConfig, ProfilerConfig, StreamBinding,
+};
 pub use graph::{Graph, OutputStreamPoller, Poll, SidePackets};
 pub use subgraph::{expand_subgraphs, SubgraphRegistry};
 pub use validation::{plan, Plan, PlannedNode, PlannedStream, Producer, SideSource};

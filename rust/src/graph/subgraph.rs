@@ -9,9 +9,7 @@
 //! interior names mangled for uniqueness.
 
 use std::collections::HashMap;
-use std::sync::RwLock;
-
-use once_cell::sync::Lazy;
+use std::sync::{OnceLock, RwLock};
 
 use crate::error::{MpError, MpResult};
 use crate::graph::config::{GraphConfig, NodeConfig, StreamBinding};
@@ -31,8 +29,8 @@ impl SubgraphRegistry {
 
     /// The process-global subgraph registry.
     pub fn global() -> &'static SubgraphRegistry {
-        static GLOBAL: Lazy<SubgraphRegistry> = Lazy::new(SubgraphRegistry::new);
-        &GLOBAL
+        static GLOBAL: OnceLock<SubgraphRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(SubgraphRegistry::new)
     }
 
     /// Register `config` under its `type` name.

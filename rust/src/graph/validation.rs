@@ -15,7 +15,7 @@ use std::collections::HashMap;
 
 use crate::calculator::Contract;
 use crate::error::{MpError, MpResult};
-use crate::graph::config::{GraphConfig, NodeConfig};
+use crate::graph::config::{ExecutorKind, GraphConfig, NodeConfig};
 use crate::packet::PacketType;
 use crate::registry::CalculatorRegistry;
 use crate::scheduler::layout_priorities;
@@ -88,6 +88,9 @@ pub struct Plan {
     pub queue_names: Vec<String>,
     /// Threads per queue (0 = system default).
     pub queue_threads: Vec<usize>,
+    /// Executor implementation per queue (§4.1.1: configurable,
+    /// shareable executors).
+    pub queue_kinds: Vec<ExecutorKind>,
     /// Per-input-stream queue limit before back-pressure (None = off).
     pub max_queue_size: Option<usize>,
     /// Names of app-supplied side packets.
@@ -398,6 +401,7 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
     // --- executors / queues -------------------------------------------------
     let mut queue_names = vec!["".to_string()];
     let mut queue_threads = vec![config.num_threads.unwrap_or(0)];
+    let mut queue_kinds = vec![ExecutorKind::default()];
     for e in &config.executors {
         if e.name.is_empty() || queue_names.contains(&e.name) {
             return Err(MpError::Validation(format!(
@@ -407,11 +411,18 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
         }
         queue_names.push(e.name.clone());
         queue_threads.push(e.num_threads);
+        queue_kinds.push(e.kind);
     }
+    let default_queue = match &config.default_executor {
+        None => 0usize,
+        Some(name) => queue_names.iter().position(|q| q == name).ok_or_else(|| {
+            MpError::Validation(format!("default_executor '{name}' is not declared"))
+        })?,
+    };
     let mut node_queue = Vec::with_capacity(n);
     for node in &config.nodes {
         match &node.executor {
-            None => node_queue.push(0usize),
+            None => node_queue.push(default_queue),
             Some(name) => match queue_names.iter().position(|q| q == name) {
                 Some(qi) => node_queue.push(qi),
                 None => {
@@ -457,6 +468,7 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
         graph_outputs,
         queue_names,
         queue_threads,
+        queue_kinds,
         max_queue_size: config.max_queue_size,
         input_side_packets: app_side,
     })
@@ -651,6 +663,36 @@ node { calculator: "SinkI32" input_stream: "x" }
         assert_eq!(p.queue_names, vec!["".to_string(), "infer".to_string()]);
         assert_eq!(p.nodes[0].queue, 1);
         assert_eq!(p.nodes[1].queue, 0);
+    }
+
+    #[test]
+    fn default_executor_routes_unassigned_nodes() {
+        let p = parse_plan(
+            r#"
+default_executor: "pool"
+executor { name: "pool" num_threads: 2 type: "shared" }
+executor { name: "solo" num_threads: 1 }
+node { calculator: "Src" output_stream: "x" }
+node { calculator: "SinkI32" input_stream: "x" executor: "solo" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.nodes[0].queue, 1, "unassigned node follows default");
+        assert_eq!(p.nodes[1].queue, 2, "explicit assignment wins");
+        assert_eq!(p.queue_kinds[1], ExecutorKind::Shared);
+        assert_eq!(p.queue_kinds[2], ExecutorKind::ThreadPool);
+    }
+
+    #[test]
+    fn undeclared_default_executor_rejected() {
+        let err = parse_plan(
+            r#"
+default_executor: "ghost"
+node { calculator: "Src" output_stream: "x" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! * **Layer 3 (this crate)** — the framework itself: timestamped
 //!   immutable [`packet::Packet`]s flowing over streams between
 //!   [`calculator::Calculator`] nodes, a decentralized priority
-//!   [`scheduler`], deterministic [`policies`] (settled-timestamp input
+//!   [`scheduler`] submitting to shareable [`executor`]s (one pool can
+//!   serve many concurrent graphs), deterministic [`policies`] (settled-timestamp input
 //!   sets), flow control, [`graph::GraphConfig`] with subgraphs, a
 //!   mutex-free [`tracer`], and a [`visualizer`] — plus the calculator
 //!   library and a serving front-end.
@@ -40,6 +41,7 @@ pub mod benchutil;
 pub mod calculator;
 pub mod calculators;
 pub mod error;
+pub mod executor;
 pub mod gpusim;
 pub mod graph;
 pub mod metrics;
@@ -62,6 +64,7 @@ pub mod prelude {
         ProcessOutcome,
     };
     pub use crate::error::{MpError, MpResult};
+    pub use crate::executor::{Executor, InlineExecutor, ThreadPoolExecutor};
     pub use crate::graph::{
         Graph, GraphBuilder, GraphConfig, OutputStreamPoller, Poll, SidePackets, SubgraphRegistry,
     };

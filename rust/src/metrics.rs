@@ -23,11 +23,45 @@ impl Counter {
     }
 }
 
-/// Latency sample store with percentile queries. Keeps all samples (µs)
-/// — fine for bench-scale runs; `snapshot` sorts a copy.
-#[derive(Default, Debug)]
+/// Latency sample store with percentile queries — **bounded memory**.
+///
+/// Long serving runs record one sample per request forever, so the
+/// recorder keeps at most `cap` samples (default 65 536) via [reservoir
+/// sampling](https://en.wikipedia.org/wiki/Reservoir_sampling): once the
+/// reservoir is full, the i-th new sample replaces a uniformly random
+/// slot with probability `cap / i`, so the retained set stays a uniform
+/// sample of *everything* seen.
+///
+/// Accuracy trade-off: `count` and `mean_us` remain exact (tracked as
+/// running totals); percentiles (`p50/p95/p99`) become estimates drawn
+/// from the reservoir — for the default capacity the p99 estimate's
+/// standard error is a fraction of a percentile point, which is ample
+/// for serving dashboards. `max_us` is exact (tracked separately, since
+/// an extreme value is exactly what sampling would lose).
+#[derive(Debug)]
 pub struct LatencyRecorder {
-    samples_us: Mutex<Vec<u64>>,
+    inner: Mutex<RecorderInner>,
+}
+
+#[derive(Debug)]
+struct RecorderInner {
+    samples_us: Vec<u64>,
+    cap: usize,
+    /// Total samples ever recorded.
+    seen: u64,
+    /// Running sum of all samples (exact mean).
+    sum_us: u64,
+    /// Largest sample ever recorded (exact max).
+    max_us: u64,
+    /// xorshift64* state for reservoir replacement (deterministic, no
+    /// external RNG dependency).
+    rng: u64,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        LatencyRecorder::with_capacity(LatencyRecorder::DEFAULT_CAPACITY)
+    }
 }
 
 /// Immutable percentile summary.
@@ -42,16 +76,57 @@ pub struct LatencySummary {
 }
 
 impl LatencyRecorder {
+    /// Default reservoir size.
+    pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+    /// A recorder retaining at most `cap` samples.
+    pub fn with_capacity(cap: usize) -> LatencyRecorder {
+        LatencyRecorder {
+            inner: Mutex::new(RecorderInner {
+                samples_us: Vec::new(),
+                cap: cap.max(1),
+                seen: 0,
+                sum_us: 0,
+                max_us: 0,
+                rng: 0x9E37_79B9_7F4A_7C15,
+            }),
+        }
+    }
+
     pub fn record(&self, d: Duration) {
-        self.samples_us.lock().unwrap().push(d.as_micros() as u64);
+        self.record_us(d.as_micros() as u64);
     }
 
     pub fn record_us(&self, us: u64) {
-        self.samples_us.lock().unwrap().push(us);
+        let mut r = self.inner.lock().unwrap();
+        r.seen += 1;
+        r.sum_us = r.sum_us.saturating_add(us);
+        r.max_us = r.max_us.max(us);
+        if r.samples_us.len() < r.cap {
+            r.samples_us.push(us);
+        } else {
+            // xorshift64*: cheap, deterministic uniform index in 0..seen.
+            r.rng ^= r.rng >> 12;
+            r.rng ^= r.rng << 25;
+            r.rng ^= r.rng >> 27;
+            let j = r.rng.wrapping_mul(0x2545_F491_4F6C_DD1D) % r.seen;
+            if (j as usize) < r.cap {
+                let slot = j as usize;
+                r.samples_us[slot] = us;
+            }
+        }
+    }
+
+    /// Samples currently retained (== total seen until the cap engages).
+    pub fn retained(&self) -> usize {
+        self.inner.lock().unwrap().samples_us.len()
     }
 
     pub fn summary(&self) -> LatencySummary {
-        let mut v = self.samples_us.lock().unwrap().clone();
+        let (mut v, seen, sum, max) = {
+            let r = self.inner.lock().unwrap();
+            (r.samples_us.clone(), r.seen, r.sum_us, r.max_us)
+        };
         if v.is_empty() {
             return LatencySummary::default();
         }
@@ -59,17 +134,21 @@ impl LatencyRecorder {
         let n = v.len();
         let q = |p: f64| v[(((n - 1) as f64) * p).round() as usize];
         LatencySummary {
-            count: n,
-            mean_us: v.iter().sum::<u64>() as f64 / n as f64,
+            count: seen as usize,
+            mean_us: sum as f64 / seen as f64,
             p50_us: q(0.50),
             p95_us: q(0.95),
             p99_us: q(0.99),
-            max_us: v[n - 1],
+            max_us: max,
         }
     }
 
     pub fn clear(&self) {
-        self.samples_us.lock().unwrap().clear();
+        let mut r = self.inner.lock().unwrap();
+        r.samples_us.clear();
+        r.seen = 0;
+        r.sum_us = 0;
+        r.max_us = 0;
     }
 }
 
@@ -115,5 +194,42 @@ mod tests {
     fn empty_summary_is_zero() {
         let r = LatencyRecorder::default();
         assert_eq!(r.summary(), LatencySummary::default());
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_with_exact_count_mean_max() {
+        let r = LatencyRecorder::with_capacity(128);
+        let n = 100_000u64;
+        for us in 1..=n {
+            r.record_us(us);
+        }
+        assert_eq!(r.retained(), 128, "memory stays at the cap");
+        let s = r.summary();
+        assert_eq!(s.count, n as usize, "count is exact");
+        assert_eq!(s.max_us, n, "max is exact");
+        let true_mean = (n + 1) as f64 / 2.0;
+        assert!((s.mean_us - true_mean).abs() < 1e-6, "mean is exact");
+        // Percentiles are estimates from a uniform sample: for 128
+        // samples of Uniform(1..=100_000) the median estimate lands
+        // well within +-20% of the true median with overwhelming
+        // probability (the RNG is deterministic, so no flakiness).
+        assert!(
+            (s.p50_us as f64) > true_mean * 0.8 && (s.p50_us as f64) < true_mean * 1.2,
+            "p50 estimate {} too far from {}",
+            s.p50_us,
+            true_mean
+        );
+        assert!(s.p95_us >= s.p50_us && s.p99_us >= s.p95_us);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let r = LatencyRecorder::with_capacity(4);
+        for us in 0..100 {
+            r.record_us(us);
+        }
+        r.clear();
+        assert_eq!(r.summary(), LatencySummary::default());
+        assert_eq!(r.retained(), 0);
     }
 }

@@ -3,9 +3,7 @@
 //! reference it by name").
 
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::calculator::{Calculator, Contract};
 use crate::error::{MpError, MpResult};
@@ -68,12 +66,12 @@ impl CalculatorRegistry {
     /// calculator (the "collection of re-usable components" the paper
     /// ships).
     pub fn global() -> &'static CalculatorRegistry {
-        static GLOBAL: Lazy<CalculatorRegistry> = Lazy::new(|| {
+        static GLOBAL: OnceLock<CalculatorRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
             let r = CalculatorRegistry::new();
             crate::calculators::register_builtins(&r);
             r
-        });
-        &GLOBAL
+        })
     }
 
     /// Register a factory under `name`. Re-registration replaces the

@@ -1,17 +1,25 @@
-//! Scheduler queues and executors (§4.1.1).
+//! Scheduler queues (§4.1.1).
 //!
 //! Each graph has at least one scheduler queue; each queue has exactly
-//! one executor (a thread pool). Nodes are statically assigned to a
-//! queue. When a node becomes ready, a task is added to its queue — a
-//! **priority queue**: at initialization nodes are topologically sorted
-//! and prioritized by layout, nodes closer to the output side run first
-//! and sources last, which bounds in-flight work and favours draining
-//! the pipeline.
+//! one executor. Nodes are statically assigned to a queue. When a node
+//! becomes ready, a task is added to its queue — a **priority queue**:
+//! at initialization nodes are topologically sorted and prioritized by
+//! layout, nodes closer to the output side run first and sources last,
+//! which bounds in-flight work and favours draining the pipeline.
+//!
+//! The queue does not own threads. For every pushed task it submits one
+//! *drain* to its [`Executor`]; the drain pops the currently
+//! highest-priority task and runs it. Because the executor is just an
+//! `Arc`, the same pool can serve many queues across many graphs (§4.1.1:
+//! the executor "can be shared between queues") — see
+//! [`crate::executor`] for the available executors.
 
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::executor::{Executor, ThreadPoolExecutor};
 
 /// One schedulable unit: "run node `node_id` once".
 #[derive(Debug, Eq, PartialEq)]
@@ -38,116 +46,141 @@ impl PartialOrd for Task {
     }
 }
 
-struct QueueInner {
+type RunFn = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct QueueCore {
     heap: Mutex<BinaryHeap<Task>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
+    /// The graph's node-execution entry point, installed by `start`.
+    run: Mutex<Option<RunFn>>,
+    /// Drains submitted to the executor but not yet finished.
+    in_flight: AtomicUsize,
+    idle_mx: Mutex<()>,
+    idle_cv: Condvar,
+    seq: AtomicU64,
 }
 
-/// A scheduler queue plus its executor threads (§4.1.1: "executors are
-/// responsible for actually running the task by invoking the
-/// calculator's code").
+impl QueueCore {
+    /// Pop and run the highest-priority task. Executed on the executor.
+    /// The in-flight decrement lives in a drop guard so a panicking node
+    /// callback cannot leave `shutdown()` waiting forever.
+    fn drain_one(&self) {
+        struct InFlightGuard<'a>(&'a QueueCore);
+        impl Drop for InFlightGuard<'_> {
+            fn drop(&mut self) {
+                if self.0.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    let _g = self
+                        .0
+                        .idle_mx
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    self.0.idle_cv.notify_all();
+                }
+            }
+        }
+        let _guard = InFlightGuard(self);
+        let task = self.heap.lock().unwrap().pop();
+        if let Some(t) = task {
+            let run = self.run.lock().unwrap().clone();
+            if let Some(run) = run {
+                run(t.node_id);
+            }
+        }
+    }
+}
+
+/// A scheduler queue: a priority heap of ready-node tasks plus a handle
+/// to the executor that runs them (§4.1.1).
 pub struct SchedulerQueue {
     pub name: String,
-    inner: Arc<QueueInner>,
-    seq: AtomicU64,
-    workers: Mutex<Vec<JoinHandle<()>>>,
-    num_threads: usize,
+    executor: Arc<dyn Executor>,
+    core: Arc<QueueCore>,
 }
 
 impl SchedulerQueue {
-    /// Create a queue; `num_threads == 0` means "based on the system's
-    /// capabilities".
+    /// Create a queue with a *private* thread pool — the pre-refactor
+    /// behaviour, kept for standalone uses. `num_threads == 0` means
+    /// "based on the system's capabilities".
     pub fn new(name: &str, num_threads: usize) -> Arc<SchedulerQueue> {
-        let n = if num_threads == 0 {
-            std::thread::available_parallelism()
-                .map(|v| v.get())
-                .unwrap_or(4)
-        } else {
-            num_threads
-        };
+        SchedulerQueue::with_executor(name, Arc::new(ThreadPoolExecutor::new(name, num_threads)))
+    }
+
+    /// Create a queue that submits its tasks to `executor` (possibly
+    /// shared with other queues and other graphs).
+    pub fn with_executor(name: &str, executor: Arc<dyn Executor>) -> Arc<SchedulerQueue> {
         Arc::new(SchedulerQueue {
             name: name.to_string(),
-            inner: Arc::new(QueueInner {
+            executor,
+            core: Arc::new(QueueCore {
                 heap: Mutex::new(BinaryHeap::new()),
-                cv: Condvar::new(),
-                shutdown: AtomicBool::new(false),
+                run: Mutex::new(None),
+                in_flight: AtomicUsize::new(0),
+                idle_mx: Mutex::new(()),
+                idle_cv: Condvar::new(),
+                seq: AtomicU64::new(0),
             }),
-            seq: AtomicU64::new(0),
-            workers: Mutex::new(Vec::new()),
-            num_threads: n,
         })
     }
 
+    /// The executor this queue submits to.
+    pub fn executor(&self) -> &Arc<dyn Executor> {
+        &self.executor
+    }
+
+    /// Worker parallelism of the underlying executor.
     pub fn num_threads(&self) -> usize {
-        self.num_threads
+        self.executor.num_threads()
     }
 
-    /// Start the executor threads; each pops tasks and hands them to
-    /// `run` (the graph's node-execution entry point).
-    pub fn start(&self, run: Arc<dyn Fn(usize) + Send + Sync>) {
-        let mut workers = self.workers.lock().unwrap();
-        assert!(workers.is_empty(), "queue '{}' already started", self.name);
-        for wi in 0..self.num_threads {
-            let inner = Arc::clone(&self.inner);
-            let run = Arc::clone(&run);
-            let name = format!("mp-{}-{}", self.name, wi);
-            workers.push(
-                std::thread::Builder::new()
-                    .name(name)
-                    .spawn(move || loop {
-                        let task = {
-                            let mut heap = inner.heap.lock().unwrap();
-                            loop {
-                                if let Some(t) = heap.pop() {
-                                    break Some(t);
-                                }
-                                if inner.shutdown.load(Ordering::Acquire) {
-                                    break None;
-                                }
-                                heap = inner.cv.wait(heap).unwrap();
-                            }
-                        };
-                        match task {
-                            Some(t) => run(t.node_id),
-                            None => return,
-                        }
-                    })
-                    .expect("spawn scheduler worker"),
-            );
-        }
+    /// Install the node-execution entry point. Must be called before the
+    /// first `push`; tasks pushed earlier would be dropped.
+    pub fn start(&self, run: RunFn) {
+        let mut slot = self.core.run.lock().unwrap();
+        assert!(slot.is_none(), "queue '{}' already started", self.name);
+        *slot = Some(run);
     }
 
-    /// Enqueue a node run.
+    /// Enqueue a node run and submit a drain to the executor.
     pub fn push(&self, node_id: usize, priority: u32) {
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let mut heap = self.inner.heap.lock().unwrap();
-        heap.push(Task {
-            priority,
-            seq,
-            node_id,
-        });
-        drop(heap);
-        self.inner.cv.notify_one();
+        let seq = self.core.seq.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut heap = self.core.heap.lock().unwrap();
+            heap.push(Task {
+                priority,
+                seq,
+                node_id,
+            });
+        }
+        self.core.in_flight.fetch_add(1, Ordering::AcqRel);
+        let core = Arc::clone(&self.core);
+        self.executor.execute(Box::new(move || core.drain_one()));
     }
 
     /// Number of queued (not yet running) tasks.
     pub fn len(&self) -> usize {
-        self.inner.heap.lock().unwrap().len()
+        self.core.heap.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Stop the executor threads after the queue drains.
+    /// Wait until every submitted task has run, then detach from the
+    /// graph (drops the run callback, breaking the queue→graph reference
+    /// cycle). The executor itself keeps running — it may be shared.
+    /// Idempotent.
     pub fn shutdown(&self) {
-        self.inner.shutdown.store(true, Ordering::Release);
-        self.inner.cv.notify_all();
-        let mut workers = self.workers.lock().unwrap();
-        for w in workers.drain(..) {
-            let _ = w.join();
+        {
+            let mut g = self.core.idle_mx.lock().unwrap();
+            while self.core.in_flight.load(Ordering::Acquire) != 0 {
+                let (guard, _) = self
+                    .core
+                    .idle_cv
+                    .wait_timeout(g, Duration::from_millis(10))
+                    .unwrap();
+                g = guard;
+            }
         }
+        *self.core.run.lock().unwrap() = None;
     }
 }
 
@@ -206,7 +239,9 @@ pub fn layout_priorities(consumers: &[Vec<usize>], is_source: &[bool]) -> Vec<u3
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::executor::InlineExecutor;
     use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
 
     #[test]
     fn task_ordering_priority_then_fifo() {
@@ -235,16 +270,19 @@ mod tests {
     fn queue_runs_tasks() {
         let q = SchedulerQueue::new("t", 2);
         let count = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = mpsc::channel();
         let c2 = Arc::clone(&count);
         q.start(Arc::new(move |_id| {
-            c2.fetch_add(1, Ordering::SeqCst);
+            if c2.fetch_add(1, Ordering::SeqCst) + 1 == 100 {
+                done_tx.send(()).unwrap();
+            }
         }));
         for i in 0..100 {
             q.push(i, 1);
         }
-        while count.load(Ordering::SeqCst) < 100 {
-            std::thread::yield_now();
-        }
+        done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("tasks did not complete");
         q.shutdown();
         assert_eq!(count.load(Ordering::SeqCst), 100);
     }
@@ -254,21 +292,84 @@ mod tests {
         let q = SchedulerQueue::new("t", 1);
         let hit = Arc::new(AtomicUsize::new(0));
         let h2 = Arc::clone(&hit);
+        let (tx, rx) = mpsc::channel();
         q.start(Arc::new(move |_| {
             h2.fetch_add(1, Ordering::SeqCst);
+            tx.send(()).unwrap();
         }));
         q.push(0, 0);
-        while hit.load(Ordering::SeqCst) == 0 {
-            std::thread::yield_now();
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("task did not run");
+        q.shutdown();
+        q.shutdown();
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn shutdown_waits_for_all_submitted_tasks() {
+        // After shutdown returns, every pushed task must have run — the
+        // old implementation guaranteed this by joining its workers; the
+        // submission-based queue must guarantee it by waiting.
+        let q = SchedulerQueue::new("t", 2);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        q.start(Arc::new(move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        for i in 0..500 {
+            q.push(i, (i % 5) as u32);
         }
         q.shutdown();
-        q.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 500);
+        assert!(q.is_empty());
     }
 
     #[test]
     fn zero_threads_uses_system_capabilities() {
         let q = SchedulerQueue::new("t", 0);
         assert!(q.num_threads() >= 1);
+    }
+
+    #[test]
+    fn inline_executor_is_deterministic() {
+        // With the inline executor each push drains synchronously on the
+        // pushing thread, so execution order equals push order — the
+        // deterministic mode tests rely on.
+        let ex = Arc::new(InlineExecutor::new());
+        let q = SchedulerQueue::with_executor("t", ex);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o2 = Arc::clone(&order);
+        q.start(Arc::new(move |id| {
+            o2.lock().unwrap().push(id);
+        }));
+        q.push(1, 1);
+        q.push(2, 5);
+        q.push(3, 3);
+        q.shutdown();
+        // Inline: task 1 runs during the first push (heap has only it);
+        // tasks 2 and 3 likewise run immediately in push order.
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn queues_share_one_executor() {
+        let pool: Arc<dyn Executor> = Arc::new(ThreadPoolExecutor::new("shared-q", 2));
+        let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool));
+        let qb = SchedulerQueue::with_executor("b", Arc::clone(&pool));
+        let count = Arc::new(AtomicUsize::new(0));
+        for q in [&qa, &qb] {
+            let c2 = Arc::clone(&count);
+            q.start(Arc::new(move |_| {
+                c2.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        for i in 0..50 {
+            qa.push(i, 1);
+            qb.push(i, 1);
+        }
+        qa.shutdown();
+        qb.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
     }
 
     #[test]

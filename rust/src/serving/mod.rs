@@ -1,22 +1,37 @@
-//! The serving front-end: request intake + dynamic batching over the
-//! AOT-compiled detector variants.
+//! The serving front-end: request intake, dynamic batching, and
+//! execution through **pooled perception graphs**.
 //!
 //! This is the "deploy it as a performant application" half of the
-//! paper's pitch, structured like a model-serving router: callers
-//! submit frames; a batcher thread coalesces requests up to
-//! `max_batch`/`max_wait`, executes the right `detector_bN` executable,
-//! decodes and replies per-request, and records latency/throughput
-//! metrics. Python never appears on this path.
+//! paper's pitch, structured like a model-serving router: callers submit
+//! frames; a batcher thread coalesces requests up to
+//! `max_batch`/`max_wait`; each batch is then driven through a real
+//! MediaPipe graph (preprocess → inference → postprocess calculators,
+//! see [`pipeline`]) checked out of a [`GraphPool`]. All pooled graphs
+//! submit their node tasks to **one shared
+//! [`ThreadPoolExecutor`](crate::executor::ThreadPoolExecutor)**, so
+//! concurrent request processing never multiplies worker threads, and
+//! every request leaves tracer evidence of its graph run. Python never
+//! appears on this path.
+
+pub mod pipeline;
+pub mod pool;
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{MpError, MpResult};
+use crate::executor::{Executor, ThreadPoolExecutor};
+use crate::graph::{Poll, SidePackets};
 use crate::metrics::{Counter, LatencyRecorder, LatencySummary};
-use crate::perception::types::{non_max_suppression, Detection, Detections, Rect};
+use crate::packet::Packet;
+use crate::perception::types::Detections;
 use crate::perception::ImageFrame;
-use crate::runtime::{InferenceEngine, Tensor};
+use crate::runtime::InferenceEngine;
+use crate::timestamp::Timestamp;
+
+pub use pipeline::{BatchFrames, BatchInfo};
+pub use pool::{GraphPool, PooledGraph};
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -31,6 +46,11 @@ pub struct ServerConfig {
     pub iou_threshold: f32,
     /// Input resolution the detector was compiled for.
     pub input_size: usize,
+    /// Warm graph instances kept by the [`GraphPool`].
+    pub pool_capacity: usize,
+    /// Workers in the shared executor all pooled graphs submit to
+    /// (0 = based on the system's capabilities).
+    pub executor_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -42,6 +62,8 @@ impl Default for ServerConfig {
             min_score: 0.5,
             iou_threshold: 0.4,
             input_size: 32,
+            pool_capacity: 2,
+            executor_threads: 0,
         }
     }
 }
@@ -60,8 +82,14 @@ pub struct ServerMetrics {
     /// Sum of batch sizes (for mean batch size).
     pub batched_requests: Counter,
     pub errors: Counter,
+    /// Completed graph runs (each batch = one run through the pipeline).
+    pub graph_runs: Counter,
+    /// Tracer events recorded across all serving graph runs — direct
+    /// evidence requests execute through graphs, not raw engine calls.
+    pub trace_events: Counter,
     pub e2e_latency: LatencyRecorder,
     pub queue_latency: LatencyRecorder,
+    /// Time a batch spends inside its graph run (pipeline latency).
     pub infer_latency: LatencyRecorder,
 }
 
@@ -72,11 +100,13 @@ impl ServerMetrics {
         let inf = self.infer_latency.summary();
         let batches = self.batches.get().max(1);
         format!(
-            "requests={} batches={} mean_batch={:.2} errors={}\n  e2e:   {}\n  queue: {}\n  infer: {}",
+            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
             self.requests.get(),
             self.batches.get(),
             self.batched_requests.get() as f64 / batches as f64,
             self.errors.get(),
+            self.graph_runs.get(),
+            self.trace_events.get(),
             e2e,
             q,
             inf
@@ -94,6 +124,10 @@ pub struct PipelineServer {
     metrics: Arc<ServerMetrics>,
     cfg: ServerConfig,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// The shared executor all pooled serving graphs submit to. Held so
+    /// callers can introspect it; workers stop when the last graph and
+    /// this handle are gone.
+    executor: Arc<ThreadPoolExecutor>,
 }
 
 /// Cloneable submission handle.
@@ -130,11 +164,12 @@ impl ServerHandle {
 }
 
 impl PipelineServer {
-    /// Start the server: loads artifacts (shared engine) and spawns the
-    /// batcher thread.
-    pub fn start(cfg: ServerConfig) -> MpResult<PipelineServer> {
+    /// Start the server: load artifacts (shared engine), pre-build the
+    /// graph pool on one shared executor, and spawn the batcher thread.
+    pub fn start(mut cfg: ServerConfig) -> MpResult<PipelineServer> {
+        pipeline::ensure_registered();
         let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
-        // Supported batch variants, descending.
+        // Supported batch variants, ascending.
         let mut variants: Vec<usize> = Vec::new();
         for m in engine.models() {
             if m == "detector" {
@@ -151,19 +186,36 @@ impl PipelineServer {
             ));
         }
         variants.sort_unstable();
+        // A batch can only be as large as the largest compiled variant —
+        // the preprocess node cannot pad *down*.
+        let largest = *variants.last().expect("non-empty");
+        cfg.max_batch = cfg.max_batch.clamp(1, largest);
+
+        let executor = Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads));
+        let graph_config =
+            pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?;
+        let pool = GraphPool::with_executor(
+            &graph_config,
+            cfg.pool_capacity.max(1),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+        )?;
+        // Keep graph rebuilds off the batcher thread.
+        pool.set_async_refill(true);
+
         let metrics = Arc::new(ServerMetrics::default());
         let (tx, rx) = mpsc::channel::<Job>();
         let m2 = Arc::clone(&metrics);
         let cfg2 = cfg.clone();
         let worker = std::thread::Builder::new()
             .name("mp-serving-batcher".into())
-            .spawn(move || batcher_main(cfg2, engine, variants, rx, m2))
+            .spawn(move || batcher_main(cfg2, engine, variants, pool, rx, m2))
             .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
         Ok(PipelineServer {
             tx,
             metrics,
             cfg,
             worker: Some(worker),
+            executor,
         })
     }
 
@@ -176,6 +228,11 @@ impl PipelineServer {
 
     pub fn metrics(&self) -> &ServerMetrics {
         &self.metrics
+    }
+
+    /// The shared executor backing all pooled serving graphs.
+    pub fn executor(&self) -> &Arc<ThreadPoolExecutor> {
+        &self.executor
     }
 }
 
@@ -190,14 +247,65 @@ impl Drop for PipelineServer {
     }
 }
 
+/// Drive one batch through a pooled graph run; returns one detections
+/// list per request row.
+fn run_batch(
+    pool: &GraphPool,
+    engine: &InferenceEngine,
+    variants: &[usize],
+    frames: BatchFrames,
+    metrics: &ServerMetrics,
+) -> MpResult<Vec<Detections>> {
+    let rows = frames.len();
+    let mut g = pool.checkout()?;
+    let poller = g.poller("detections")?;
+    let mut side = SidePackets::new();
+    side.insert(
+        "engine".into(),
+        Packet::new(engine.clone(), Timestamp::UNSET),
+    );
+    side.insert(
+        "variants".into(),
+        Packet::new(variants.to_vec(), Timestamp::UNSET),
+    );
+    g.start_run(side)?;
+    g.add_packet("frames", Packet::new(frames, Timestamp::new(0)))?;
+    g.close_all_inputs()?;
+    let out = match poller.poll(Duration::from_secs(60)) {
+        Poll::Packet(p) => p.get::<Vec<Detections>>()?.clone(),
+        Poll::Done => {
+            // The run terminated without producing output: surface the
+            // graph's error.
+            g.wait_until_done()?;
+            return Err(MpError::Runtime(
+                "serving pipeline closed without output".into(),
+            ));
+        }
+        Poll::TimedOut => return Err(MpError::Runtime("serving pipeline timed out".into())),
+    };
+    g.wait_until_done()?;
+    metrics.graph_runs.inc();
+    metrics
+        .trace_events
+        .add(g.tracer().snapshot().len() as u64);
+    if out.len() != rows {
+        return Err(MpError::Internal(format!(
+            "pipeline returned {} rows for {} requests",
+            out.len(),
+            rows
+        )));
+    }
+    Ok(out)
+}
+
 fn batcher_main(
     cfg: ServerConfig,
     engine: InferenceEngine,
     variants: Vec<usize>,
+    pool: GraphPool,
     rx: mpsc::Receiver<Job>,
     metrics: Arc<ServerMetrics>,
 ) {
-    let frame_elems = cfg.input_size * cfg.input_size;
     loop {
         // Block for the first job of a batch.
         let first = match rx.recv() {
@@ -220,60 +328,20 @@ fn batcher_main(
         metrics.batches.inc();
         metrics.batched_requests.add(batch.len() as u64);
         for j in &batch {
-            metrics
-                .queue_latency
-                .record(j.enqueued.elapsed());
+            metrics.queue_latency.record(j.enqueued.elapsed());
         }
 
-        // Pad to the smallest compiled variant >= batch len.
-        let bs = *variants
-            .iter()
-            .find(|&&v| v >= batch.len())
-            .unwrap_or(variants.last().unwrap());
-        let model = if bs == 1 {
-            "detector".to_string()
-        } else {
-            format!("detector_b{bs}")
-        };
-        let mut data = Vec::with_capacity(bs * frame_elems);
-        for j in &batch {
-            data.extend_from_slice(&j.tensor);
-        }
-        while data.len() < bs * frame_elems {
-            // replicate the last frame as padding
-            let start = data.len() - frame_elems;
-            data.extend_from_within(start..start + frame_elems);
-        }
+        let frames: BatchFrames = batch
+            .iter_mut()
+            .map(|j| std::mem::take(&mut j.tensor))
+            .collect();
         let t0 = Instant::now();
-        let result = engine.infer(
-            &model,
-            vec![Tensor::new(
-                vec![bs, cfg.input_size, cfg.input_size, 1],
-                data,
-            )],
-        );
+        let result = run_batch(&pool, &engine, &variants, frames, &metrics);
         metrics.infer_latency.record(t0.elapsed());
 
         match result {
-            Ok(outputs) => {
-                let boxes = &outputs[0];
-                let scores = &outputs[1];
-                let n = scores.data.len() / bs;
-                for (row, job) in batch.iter().enumerate() {
-                    let mut dets: Detections = Vec::new();
-                    for i in 0..n {
-                        let s = scores.data[row * n + i];
-                        if s >= cfg.min_score {
-                            let o = (row * n + i) * 4;
-                            let b = &boxes.data[o..o + 4];
-                            dets.push(Detection::new(
-                                Rect::new(b[0], b[1], b[2], b[3]).clamped(),
-                                s,
-                                0,
-                            ));
-                        }
-                    }
-                    let dets = non_max_suppression(dets, cfg.iou_threshold);
+            Ok(per_request) => {
+                for (dets, job) in per_request.into_iter().zip(&batch) {
                     metrics.requests.inc();
                     metrics.e2e_latency.record(job.enqueued.elapsed());
                     let _ = job.reply.send(Ok(dets));

@@ -1,0 +1,304 @@
+//! A pool of pre-built [`Graph`] instances for the serving path.
+//!
+//! Building a graph (subgraph expansion, validation, planning, node
+//! construction) is pure CPU work we do not want on the request path,
+//! and a `Graph` is a single-run object: once `start_run` has been
+//! called it cannot be restarted, because calculators accumulate
+//! per-run state. `GraphPool` therefore keeps `capacity` *fresh* (never
+//! started) instances warm:
+//!
+//! * [`GraphPool::checkout`] hands out a warm instance (building one on
+//!   the spot only if the pool is momentarily empty under burst load);
+//! * dropping the returned [`PooledGraph`] checks it back in: an
+//!   *unused* instance goes straight back, a *used* one is replaced by
+//!   a freshly built instance.
+//!
+//! Replacing used instances is what guarantees **zero cross-run state
+//! leakage** — no second request can ever observe calculator state,
+//! queued packets or tracer events from a previous request, because it
+//! never receives an object that has run before. The executor is shared
+//! (injected at pool construction), so pooled graphs add no threads of
+//! their own.
+
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::MpResult;
+use crate::executor::Executor;
+use crate::graph::config::GraphConfig;
+use crate::graph::Graph;
+
+struct PoolShared {
+    config: GraphConfig,
+    executor: Option<Arc<dyn Executor>>,
+    ready: Mutex<VecDeque<Graph>>,
+    capacity: usize,
+    /// Total graph instances ever built (stats / tests).
+    built: AtomicUsize,
+    /// Refill used slots on a background thread instead of the dropping
+    /// (request-path) thread.
+    async_refill: AtomicBool,
+}
+
+impl PoolShared {
+    /// Build one fresh instance and park it in `ready` (unless the pool
+    /// already refilled, e.g. a racing unused check-in).
+    fn refill_one(&self) {
+        let needs = self.ready.lock().unwrap().len() < self.capacity;
+        if !needs {
+            return;
+        }
+        // Build outside the lock; ignore failures (the next checkout
+        // surfaces them).
+        if let Ok(fresh) = self.build_graph() {
+            let mut ready = self.ready.lock().unwrap();
+            if ready.len() < self.capacity {
+                ready.push_back(fresh);
+            }
+            // A concurrent refill won the race: drop the extra.
+        }
+    }
+}
+
+impl PoolShared {
+    fn build_graph(&self) -> MpResult<Graph> {
+        self.built.fetch_add(1, Ordering::AcqRel);
+        match &self.executor {
+            Some(e) => Graph::with_executor(&self.config, Arc::clone(e)),
+            None => Graph::new(&self.config),
+        }
+    }
+}
+
+/// A checkout/check-in pool of warm, never-started graph instances.
+pub struct GraphPool {
+    shared: Arc<PoolShared>,
+}
+
+impl GraphPool {
+    /// Pre-build `capacity` instances of `config`. Each instance owns
+    /// its executors as the config dictates.
+    pub fn new(config: &GraphConfig, capacity: usize) -> MpResult<GraphPool> {
+        GraphPool::build(config, capacity, None)
+    }
+
+    /// Pre-build `capacity` instances that all submit their work to
+    /// `executor` — the pool adds no threads.
+    pub fn with_executor(
+        config: &GraphConfig,
+        capacity: usize,
+        executor: Arc<dyn Executor>,
+    ) -> MpResult<GraphPool> {
+        GraphPool::build(config, capacity, Some(executor))
+    }
+
+    fn build(
+        config: &GraphConfig,
+        capacity: usize,
+        executor: Option<Arc<dyn Executor>>,
+    ) -> MpResult<GraphPool> {
+        let shared = Arc::new(PoolShared {
+            config: config.clone(),
+            executor,
+            ready: Mutex::new(VecDeque::new()),
+            capacity: capacity.max(1),
+            built: AtomicUsize::new(0),
+            async_refill: AtomicBool::new(false),
+        });
+        {
+            let mut ready = shared.ready.lock().unwrap();
+            for _ in 0..shared.capacity {
+                ready.push_back(shared.build_graph()?);
+            }
+        }
+        Ok(GraphPool { shared })
+    }
+
+    /// Take a warm instance; builds one synchronously if the pool is
+    /// empty (burst beyond `capacity`). Never blocks on other requests.
+    pub fn checkout(&self) -> MpResult<PooledGraph> {
+        let existing = self.shared.ready.lock().unwrap().pop_front();
+        let graph = match existing {
+            Some(g) => g,
+            None => self.shared.build_graph()?,
+        };
+        Ok(PooledGraph {
+            graph: Some(graph),
+            shared: Arc::clone(&self.shared),
+        })
+    }
+
+    /// Warm instances currently available.
+    pub fn available(&self) -> usize {
+        self.shared.ready.lock().unwrap().len()
+    }
+
+    /// Target number of warm instances.
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Total graph instances built over the pool's lifetime (capacity
+    /// prebuilds + per-use replacements + burst builds).
+    pub fn graphs_built(&self) -> usize {
+        self.shared.built.load(Ordering::Acquire)
+    }
+
+    /// Refill used slots on a detached background thread so the graph
+    /// build never sits on the request path (serving uses this; the
+    /// default synchronous refill keeps tests deterministic).
+    pub fn set_async_refill(&self, on: bool) {
+        self.shared.async_refill.store(on, Ordering::Release);
+    }
+}
+
+/// RAII checkout handle; derefs to [`Graph`]. Dropping it checks the
+/// instance back in (used instances are replaced with fresh builds).
+pub struct PooledGraph {
+    graph: Option<Graph>,
+    shared: Arc<PoolShared>,
+}
+
+impl Deref for PooledGraph {
+    type Target = Graph;
+
+    fn deref(&self) -> &Graph {
+        self.graph.as_ref().expect("graph present until drop")
+    }
+}
+
+impl DerefMut for PooledGraph {
+    fn deref_mut(&mut self) -> &mut Graph {
+        self.graph.as_mut().expect("graph present until drop")
+    }
+}
+
+impl Drop for PooledGraph {
+    fn drop(&mut self) {
+        let Some(graph) = self.graph.take() else {
+            return;
+        };
+        let used = graph.was_started();
+        if !used {
+            let mut ready = self.shared.ready.lock().unwrap();
+            if ready.len() < self.shared.capacity {
+                ready.push_back(graph);
+            }
+            return;
+        }
+        // Used instance: finish/teardown (Graph::drop cancels a run
+        // still in flight), then refill the slot with a fresh build —
+        // on a background thread when the pool serves a request path.
+        drop(graph);
+        if self.shared.async_refill.load(Ordering::Acquire) {
+            let shared = Arc::clone(&self.shared);
+            let spawned = std::thread::Builder::new()
+                .name("mp-pool-refill".into())
+                .spawn(move || shared.refill_one());
+            if spawned.is_ok() {
+                return;
+            }
+            // Spawn failed (resource exhaustion): fall through to the
+            // synchronous path rather than leak the slot.
+        }
+        self.shared.refill_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::executor::ThreadPoolExecutor;
+    use crate::graph::SidePackets;
+    use crate::packet::Packet;
+    use crate::timestamp::Timestamp;
+    use std::time::Duration;
+
+    fn chain_config() -> GraphConfig {
+        GraphConfig::parse(
+            r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "mid" }
+node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "out" }
+"#,
+        )
+        .unwrap()
+    }
+
+    fn run_once(mut g: PooledGraph, values: &[i64]) -> Vec<i64> {
+        let poller = g.poller("out").unwrap();
+        g.start_run(SidePackets::new()).unwrap();
+        for &v in values {
+            g.add_packet("in", Packet::new(v, Timestamp::new(v))).unwrap();
+        }
+        g.close_all_inputs().unwrap();
+        let mut got = Vec::new();
+        loop {
+            match poller.poll(Duration::from_secs(5)) {
+                crate::graph::Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
+                crate::graph::Poll::Done => break,
+                crate::graph::Poll::TimedOut => panic!("timed out"),
+            }
+        }
+        g.wait_until_done().unwrap();
+        got
+    }
+
+    #[test]
+    fn prebuilds_capacity_instances() {
+        let pool = GraphPool::new(&chain_config(), 3).unwrap();
+        assert_eq!(pool.available(), 3);
+        assert_eq!(pool.capacity(), 3);
+        assert_eq!(pool.graphs_built(), 3);
+    }
+
+    #[test]
+    fn unused_checkout_returns_same_instance() {
+        let pool = GraphPool::new(&chain_config(), 2).unwrap();
+        let g = pool.checkout().unwrap();
+        assert_eq!(pool.available(), 1);
+        drop(g); // never started: goes straight back
+        assert_eq!(pool.available(), 2);
+        assert_eq!(pool.graphs_built(), 2, "no rebuild for unused instance");
+    }
+
+    #[test]
+    fn used_instance_is_replaced_and_second_run_sees_no_state() {
+        let pool = GraphPool::new(&chain_config(), 1).unwrap();
+        let out1 = run_once(pool.checkout().unwrap(), &[1, 2, 3]);
+        assert_eq!(out1, vec![1, 2, 3]);
+        assert_eq!(pool.available(), 1, "slot refilled after use");
+        assert_eq!(pool.graphs_built(), 2, "used instance replaced by a fresh build");
+        // The second run must not observe packets, bounds or tracer
+        // state from the first.
+        let out2 = run_once(pool.checkout().unwrap(), &[10, 20]);
+        assert_eq!(out2, vec![10, 20]);
+    }
+
+    #[test]
+    fn burst_beyond_capacity_builds_on_demand() {
+        let pool = GraphPool::new(&chain_config(), 1).unwrap();
+        let a = pool.checkout().unwrap();
+        let b = pool.checkout().unwrap(); // pool empty: built on demand
+        assert_eq!(pool.graphs_built(), 2);
+        drop(a);
+        drop(b); // pool already full: extra unused instance is dropped
+        assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn pooled_graphs_share_injected_executor() {
+        // Functional check only — the no-per-graph-workers thread-count
+        // proof lives in tests/shared_executor.rs, where no concurrent
+        // test perturbs the global spawn counter.
+        let pool_exec: Arc<dyn Executor> = Arc::new(ThreadPoolExecutor::new("pool-test", 2));
+        let pool = GraphPool::with_executor(&chain_config(), 4, pool_exec).unwrap();
+        let out = run_once(pool.checkout().unwrap(), &[7, 8]);
+        assert_eq!(out, vec![7, 8]);
+        let out2 = run_once(pool.checkout().unwrap(), &[9]);
+        assert_eq!(out2, vec![9]);
+    }
+}

@@ -14,6 +14,13 @@ fn artifacts_ready() -> bool {
 
 macro_rules! require_artifacts {
     () => {
+        if cfg!(not(feature = "xla")) {
+            eprintln!(
+                "SKIP: built without the `xla` feature — the reference backend \
+                 does not reproduce model semantics"
+            );
+            return;
+        }
         if !artifacts_ready() {
             eprintln!("SKIP: artifacts missing — run `make artifacts` first");
             return;

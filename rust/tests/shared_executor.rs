@@ -1,0 +1,161 @@
+//! Integration proof for the shared executor runtime (§4.1.1): many
+//! concurrent graph runs can share one thread pool without spawning
+//! per-graph workers, configs can bind queues to the process-wide pool
+//! or an inline executor, and results stay correct either way.
+//!
+//! These tests assert *exact* global worker-spawn counts, so every
+//! counting test takes `COUNTER_LOCK` for its whole body and no test in
+//! this binary may build a graph that owns a private pool outside the
+//! lock.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mediapipe::executor::{
+    process_pool, worker_threads_spawned, Executor, ThreadPoolExecutor,
+};
+use mediapipe::prelude::*;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn chain_config() -> GraphConfig {
+    GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "a" }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }
+node { calculator: "PassThroughCalculator" input_stream: "b" output_stream: "out" }
+"#,
+    )
+    .unwrap()
+}
+
+/// Feed `values` through a built graph and return what comes out.
+fn drive(mut g: Graph, values: &[i64]) -> Vec<i64> {
+    let poller = g.poller("out").unwrap();
+    g.start_run(SidePackets::new()).unwrap();
+    for (i, &v) in values.iter().enumerate() {
+        g.add_packet("in", Packet::new(v, Timestamp::new(i as i64)))
+            .unwrap();
+    }
+    g.close_all_inputs().unwrap();
+    let mut got = Vec::new();
+    loop {
+        match poller.poll(Duration::from_secs(10)) {
+            Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
+            Poll::Done => break,
+            Poll::TimedOut => panic!("poller timed out"),
+        }
+    }
+    g.wait_until_done().unwrap();
+    got
+}
+
+#[test]
+fn eight_concurrent_graphs_share_one_pool_without_new_workers() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = process_pool(); // warm the lazy process pool outside the window
+    let pool: Arc<dyn Executor> = Arc::new(ThreadPoolExecutor::new("t8", 4));
+    let before = worker_threads_spawned();
+    std::thread::scope(|s| {
+        for t in 0..8i64 {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                let values: Vec<i64> = (0..50).map(|i| t * 1000 + i).collect();
+                let g = Graph::with_executor(&chain_config(), pool).unwrap();
+                assert_eq!(drive(g, &values), values);
+            });
+        }
+    });
+    assert_eq!(
+        worker_threads_spawned(),
+        before,
+        "8 concurrent graph runs on one shared ThreadPoolExecutor must not spawn per-graph workers"
+    );
+}
+
+#[test]
+fn config_level_shared_executor_spawns_no_private_workers() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = process_pool();
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+default_executor: "pool"
+executor { name: "pool" type: "shared" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let before = worker_threads_spawned();
+    for round in 0..3i64 {
+        let values: Vec<i64> = (0..20).map(|i| round * 100 + i).collect();
+        let g = Graph::new(&cfg).unwrap();
+        assert_eq!(drive(g, &values), values);
+    }
+    assert_eq!(
+        worker_threads_spawned(),
+        before,
+        "graphs bound to the process pool via config must not spawn workers"
+    );
+}
+
+#[test]
+fn inline_executor_is_deterministic_and_thread_free() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+default_executor: "det"
+executor { name: "det" type: "inline" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "a" }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let before = worker_threads_spawned();
+    let values: Vec<i64> = (0..200).collect();
+    // Two identical runs: identical results, in order, zero threads.
+    for _ in 0..2 {
+        let g = Graph::new(&cfg).unwrap();
+        assert_eq!(drive(g, &values), values);
+    }
+    assert_eq!(
+        worker_threads_spawned(),
+        before,
+        "inline-executor graphs spawn no worker threads at all"
+    );
+}
+
+#[test]
+fn mixed_queues_can_share_one_injected_executor() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = process_pool();
+    // Two declared queues + the default queue; the injected executor
+    // backs all three (§4.1.1: one executor, many queues).
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+executor { name: "a" num_threads: 2 }
+executor { name: "b" num_threads: 2 }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "x" executor: "a" }
+node { calculator: "PassThroughCalculator" input_stream: "x" output_stream: "y" executor: "b" }
+node { calculator: "PassThroughCalculator" input_stream: "y" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let pool: Arc<dyn Executor> = Arc::new(ThreadPoolExecutor::new("mixed", 2));
+    let before = worker_threads_spawned();
+    let values: Vec<i64> = (0..100).collect();
+    let g = Graph::with_executor(&cfg, Arc::clone(&pool)).unwrap();
+    assert_eq!(drive(g, &values), values);
+    assert_eq!(
+        worker_threads_spawned(),
+        before,
+        "declared executors are overridden by the injected one — no private pools"
+    );
+}
