@@ -2,20 +2,37 @@
 //!
 //! The paper separates *scheduler queues* from *executors*: "each queue
 //! has exactly one executor ... the executor is configurable, and can be
-//! shared between queues". Before this layer existed, every
-//! [`crate::scheduler::SchedulerQueue`] owned its worker threads, so N
-//! concurrent graph runs meant N private thread pools — a dead end for
-//! serving many simultaneous pipelines. Now the queue is only a priority
-//! queue; it *submits* ready tasks to an [`Executor`], and executors are
-//! ordinary `Arc` values that any number of queues — across any number
-//! of graphs — can share.
+//! shared between queues". A [`crate::scheduler::SchedulerQueue`] is only
+//! a priority heap; the executor supplies the threads, and one executor
+//! (an ordinary `Arc`) can serve any number of queues across any number
+//! of graphs.
+//!
+//! Queues hand work to an executor in one of two ways:
+//!
+//! * **Work stealing** (the default on [`ThreadPoolExecutor`]): the
+//!   queue registers itself as a [`TaskSource`] — an object exposing the
+//!   priority of its top task and a way to pop-and-run it. An idle
+//!   worker scans every registered source and runs the **globally
+//!   highest-priority task across all queues bound to the pool**, so a
+//!   high-priority task from one graph is stolen ahead of another
+//!   graph's backlog instead of queueing behind it in arrival order.
+//! * **FIFO drains** (executors without source support, and the
+//!   explicit ablation mode): every push submits one closure via
+//!   [`Executor::execute`]; the pool runs submissions in arrival order,
+//!   so priority only orders tasks *within* a queue.
 //!
 //! Three implementations:
 //!
-//! * [`ThreadPoolExecutor`] — a fixed pool of worker threads draining a
-//!   FIFO of submitted tasks. This is the production executor; construct
-//!   one per process (or per serving tier) and hand it to every graph
-//!   via [`crate::graph::Graph::with_executor`].
+//! * [`ThreadPoolExecutor`] — a fixed pool of workers that prefer
+//!   directly submitted tasks (FIFO) and otherwise steal from registered
+//!   sources by priority. Construct one per process or per resource
+//!   class and hand it to every graph via
+//!   [`crate::graph::Graph::with_executor`], or reach it from configs
+//!   through the **named-pool registry** ([`ensure_named_pool`]):
+//!   `executor { type: "shared" pool: "gpu" }` binds a queue to the
+//!   process-wide pool named `"gpu"`, so e.g. all inference queues
+//!   across graphs share one pool while video-decode queues share
+//!   another — the paper's GPU/TPU executor split.
 //! * [`InlineExecutor`] — runs every task on the submitting thread, with
 //!   a trampoline so recursive submissions (node A scheduling node B)
 //!   become a loop instead of unbounded stack growth. Deterministic and
@@ -23,18 +40,36 @@
 //! * [`process_pool`] — a lazily created process-wide
 //!   `ThreadPoolExecutor` sized to the host ("based on the system's
 //!   capabilities"), reachable from graph configs via
-//!   `executor { name: "x" type: "shared" }`.
+//!   `executor { type: "shared" }` with no `pool:` name.
 //!
 //! Sharing an executor never mixes graph *state* — queues own their
 //! heaps and graphs own their nodes; the executor only supplies threads.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// A unit of work submitted by a scheduler queue.
 pub type ExecutorTask = Box<dyn FnOnce() + Send>;
+
+/// Identifier of a registered [`TaskSource`] within one executor.
+pub type SourceId = u64;
+
+/// A priority-ordered task supplier an executor's workers can steal
+/// from. Scheduler queues implement this: [`TaskSource::top_priority`]
+/// peeks the queue's heap, [`TaskSource::run_one`] pops and runs the top
+/// task.
+pub trait TaskSource: Send + Sync {
+    /// Priority of the highest-priority queued task (`None` when the
+    /// source is empty). Higher runs first.
+    fn top_priority(&self) -> Option<u32>;
+
+    /// Pop the top task and run it on the calling thread. Returns
+    /// `false` when the source turned out to be empty (another worker
+    /// won the steal race) — the caller just rescans.
+    fn run_one(&self) -> bool;
+}
 
 /// Something that can run submitted tasks (§4.1.1: "executors are
 /// responsible for actually running the task").
@@ -49,6 +84,25 @@ pub trait Executor: Send + Sync {
 
     /// Diagnostic name.
     fn name(&self) -> &str;
+
+    /// Register a work-stealing task source. Executors without stealing
+    /// support return `None`; callers then fall back to FIFO drains via
+    /// [`Executor::execute`].
+    fn register_source(&self, _source: Arc<dyn TaskSource>) -> Option<SourceId> {
+        None
+    }
+
+    /// Remove a previously registered source. Idempotent; unknown ids
+    /// are ignored.
+    fn unregister_source(&self, _id: SourceId) {}
+
+    /// Signal that some registered source gained a task. Returns `false`
+    /// when the executor has shut down and no worker will ever come —
+    /// the caller must then run the task itself (see
+    /// `SchedulerQueue::push`).
+    fn notify_source(&self) -> bool {
+        false
+    }
 }
 
 /// Total worker threads ever spawned by [`ThreadPoolExecutor`]s in this
@@ -61,16 +115,79 @@ pub fn worker_threads_spawned() -> usize {
     WORKERS_SPAWNED.load(Ordering::Acquire)
 }
 
-struct PoolInner {
-    tasks: Mutex<VecDeque<ExecutorTask>>,
-    cv: Condvar,
-    shutdown: std::sync::atomic::AtomicBool,
+struct SourceEntry {
+    id: SourceId,
+    source: Arc<dyn TaskSource>,
 }
 
-/// A fixed-size worker pool draining submitted tasks in FIFO order.
-/// Shareable: clone the `Arc` and hand it to as many scheduler queues /
-/// graphs as you like. Dropping the last handle joins the workers after
-/// the queue drains.
+struct PoolState {
+    /// Directly submitted tasks ([`Executor::execute`]), FIFO.
+    tasks: VecDeque<ExecutorTask>,
+    /// Registered work-stealing sources (scheduler queues).
+    sources: Vec<SourceEntry>,
+    next_source: SourceId,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// What a worker decided to do after scanning the pool state.
+enum Work {
+    Plain(ExecutorTask),
+    Steal(Arc<dyn TaskSource>),
+    Exit,
+}
+
+impl PoolInner {
+    /// Pick the next unit of work, or park until one appears.
+    ///
+    /// Lock discipline: this holds the pool-state lock while calling
+    /// `top_priority()` (which takes each source's heap lock), so a
+    /// source must never call back into the pool while holding its heap
+    /// lock — `SchedulerQueue::push` releases the heap lock before
+    /// `notify_source`.
+    fn next_work(&self) -> Work {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // Direct submissions first: they carry no priority and keep
+            // the pre-stealing `execute` contract (arrival order).
+            if let Some(t) = st.tasks.pop_front() {
+                return Work::Plain(t);
+            }
+            // Steal the globally highest-priority task across all
+            // registered queues. Ties go to the earliest-registered
+            // source.
+            let mut best: Option<(u32, usize)> = None;
+            for (i, e) in st.sources.iter().enumerate() {
+                if let Some(p) = e.source.top_priority() {
+                    let better = match best {
+                        None => true,
+                        Some((bp, _)) => p > bp,
+                    };
+                    if better {
+                        best = Some((p, i));
+                    }
+                }
+            }
+            if let Some((_, i)) = best {
+                return Work::Steal(Arc::clone(&st.sources[i].source));
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return Work::Exit;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// A fixed-size worker pool. Directly submitted tasks run in FIFO
+/// order; registered [`TaskSource`]s are drained highest-priority-first
+/// across all of them (work stealing). Shareable: clone the `Arc` and
+/// hand it to as many scheduler queues / graphs as you like. Dropping
+/// the last handle joins the workers after all pending work drains.
 pub struct ThreadPoolExecutor {
     name: String,
     inner: Arc<PoolInner>,
@@ -91,9 +208,13 @@ impl ThreadPoolExecutor {
             num_threads
         };
         let inner = Arc::new(PoolInner {
-            tasks: Mutex::new(VecDeque::new()),
+            state: Mutex::new(PoolState {
+                tasks: VecDeque::new(),
+                sources: Vec::new(),
+                next_source: 0,
+            }),
             cv: Condvar::new(),
-            shutdown: std::sync::atomic::AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
         });
         let mut workers = Vec::with_capacity(n);
         for wi in 0..n {
@@ -104,20 +225,8 @@ impl ThreadPoolExecutor {
                 std::thread::Builder::new()
                     .name(tname)
                     .spawn(move || loop {
-                        let task = {
-                            let mut q = inner.tasks.lock().unwrap();
-                            loop {
-                                if let Some(t) = q.pop_front() {
-                                    break Some(t);
-                                }
-                                if inner.shutdown.load(Ordering::Acquire) {
-                                    break None;
-                                }
-                                q = inner.cv.wait(q).unwrap();
-                            }
-                        };
-                        match task {
-                            Some(t) => {
+                        match inner.next_work() {
+                            Work::Plain(t) => {
                                 // A panicking task must not kill the
                                 // worker: the pool may be shared by many
                                 // graphs, and each lost worker would
@@ -129,7 +238,14 @@ impl ThreadPoolExecutor {
                                     std::panic::AssertUnwindSafe(t),
                                 );
                             }
-                            None => return,
+                            Work::Steal(src) => {
+                                // `run_one` may pop nothing (steal
+                                // race); the next loop just rescans.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| src.run_one()),
+                                );
+                            }
+                            Work::Exit => return,
                         }
                     })
                     .expect("spawn executor worker"),
@@ -143,19 +259,29 @@ impl ThreadPoolExecutor {
         }
     }
 
-    /// Number of tasks queued (not yet picked up by a worker).
+    /// Number of directly submitted tasks queued (not yet picked up by a
+    /// worker). Tasks waiting in registered sources are not counted —
+    /// they belong to their queues.
     pub fn queued(&self) -> usize {
-        self.inner.tasks.lock().unwrap().len()
+        self.inner.state.lock().unwrap().tasks.len()
     }
 
-    /// Stop the workers once the task queue drains. Idempotent. The
-    /// shutdown flag flips under the task-queue lock so a concurrent
+    /// Registered work-stealing sources (diagnostics).
+    pub fn num_sources(&self) -> usize {
+        self.inner.state.lock().unwrap().sources.len()
+    }
+
+    /// Stop the workers once all pending work drains — both the FIFO of
+    /// direct submissions and every registered source. Idempotent. The
+    /// shutdown flag flips under the pool-state lock, so a concurrent
     /// `execute` either lands its task before the flip (a live worker
-    /// must drain the queue before exiting) or sees the flip and runs
-    /// the task on the submitting thread — no task is ever stranded.
+    /// must drain everything before exiting) or sees the flip and runs
+    /// the task on the submitting thread; likewise a concurrent
+    /// `notify_source` either finds a live worker or returns `false` so
+    /// the queue runs the task itself — no task is ever stranded.
     pub fn shutdown(&self) {
         {
-            let _q = self.inner.tasks.lock().unwrap();
+            let _st = self.inner.state.lock().unwrap();
             self.inner.shutdown.store(true, Ordering::Release);
         }
         self.inner.cv.notify_all();
@@ -169,11 +295,11 @@ impl ThreadPoolExecutor {
 impl Executor for ThreadPoolExecutor {
     fn execute(&self, task: ExecutorTask) {
         let run_inline = {
-            let mut q = self.inner.tasks.lock().unwrap();
+            let mut st = self.inner.state.lock().unwrap();
             if self.inner.shutdown.load(Ordering::Acquire) {
                 Some(task)
             } else {
-                q.push_back(task);
+                st.tasks.push_back(task);
                 None
             }
         };
@@ -189,6 +315,28 @@ impl Executor for ThreadPoolExecutor {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn register_source(&self, source: Arc<dyn TaskSource>) -> Option<SourceId> {
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.next_source;
+        st.next_source += 1;
+        st.sources.push(SourceEntry { id, source });
+        Some(id)
+    }
+
+    fn unregister_source(&self, id: SourceId) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.sources.retain(|e| e.id != id);
+    }
+
+    fn notify_source(&self) -> bool {
+        let _st = self.inner.state.lock().unwrap();
+        if self.inner.shutdown.load(Ordering::Acquire) {
+            return false;
+        }
+        self.inner.cv.notify_one();
+        true
     }
 }
 
@@ -207,7 +355,8 @@ struct InlineState {
 /// recursive submissions (a running task scheduling follow-up tasks)
 /// into iteration, so arbitrarily long pipelines execute in constant
 /// stack space. Single-threaded and deterministic: tasks run in exactly
-/// the order they were submitted.
+/// the order they were submitted. No work stealing: `register_source`
+/// returns `None`, so queues bound here use FIFO drains.
 pub struct InlineExecutor {
     state: Mutex<InlineState>,
 }
@@ -285,6 +434,45 @@ pub fn process_pool() -> Arc<ThreadPoolExecutor> {
     Arc::clone(POOL.get_or_init(|| Arc::new(ThreadPoolExecutor::new("shared", 0))))
 }
 
+// ---------------------------------------------------------------------
+// Named-pool registry (§4.1.1: specialized executors — GPU, TPU, ... —
+// shared by queues across graphs).
+// ---------------------------------------------------------------------
+
+fn named_pools() -> &'static Mutex<HashMap<String, Arc<ThreadPoolExecutor>>> {
+    static POOLS: OnceLock<Mutex<HashMap<String, Arc<ThreadPoolExecutor>>>> = OnceLock::new();
+    POOLS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Create (or fetch) the process-wide named pool `name`. The pool is
+/// created on the first call with `num_threads` workers (0 = system
+/// capabilities) and lives for the process; later calls return the same
+/// pool and ignore `num_threads`. Graph configs bind queues to it with
+/// `executor { type: "shared" pool: "<name>" }` — the config is
+/// validated against this registry, so register pools before building
+/// graphs that name them.
+pub fn ensure_named_pool(name: &str, num_threads: usize) -> Arc<ThreadPoolExecutor> {
+    let mut pools = named_pools().lock().unwrap();
+    if let Some(p) = pools.get(name) {
+        return Arc::clone(p);
+    }
+    let p = Arc::new(ThreadPoolExecutor::new(name, num_threads));
+    pools.insert(name.to_string(), Arc::clone(&p));
+    p
+}
+
+/// Look up a registered named pool.
+pub fn named_pool(name: &str) -> Option<Arc<ThreadPoolExecutor>> {
+    named_pools().lock().unwrap().get(name).map(Arc::clone)
+}
+
+/// Names of all registered pools, sorted (for error messages).
+pub fn named_pool_names() -> Vec<String> {
+    let mut names: Vec<String> = named_pools().lock().unwrap().keys().cloned().collect();
+    names.sort_unstable();
+    names
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +543,90 @@ mod tests {
         assert!(worker_threads_spawned() >= before + 3);
     }
 
+    /// Minimal hand-rolled source for worker-loop tests: a priority,
+    /// a queue of tags, and a log of what ran.
+    struct TestSource {
+        priority: u32,
+        pending: Mutex<usize>,
+        log: Arc<Mutex<Vec<u32>>>,
+    }
+
+    impl TaskSource for TestSource {
+        fn top_priority(&self) -> Option<u32> {
+            (*self.pending.lock().unwrap() > 0).then_some(self.priority)
+        }
+
+        fn run_one(&self) -> bool {
+            {
+                let mut p = self.pending.lock().unwrap();
+                if *p == 0 {
+                    return false;
+                }
+                *p -= 1;
+            }
+            self.log.lock().unwrap().push(self.priority);
+            true
+        }
+    }
+
+    #[test]
+    fn workers_steal_highest_priority_source_first() {
+        let pool = ThreadPoolExecutor::new("steal", 1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        // Park the single worker so both sources fill before any steal.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        pool.execute(Box::new(move || {
+            entered_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+        }));
+        entered_rx.recv().unwrap();
+        let lo = Arc::new(TestSource {
+            priority: 1,
+            pending: Mutex::new(3),
+            log: Arc::clone(&log),
+        });
+        let hi = Arc::new(TestSource {
+            priority: 7,
+            pending: Mutex::new(2),
+            log: Arc::clone(&log),
+        });
+        // Register low first: precedence must come from priority, not
+        // registration order.
+        pool.register_source(lo as Arc<dyn TaskSource>).unwrap();
+        pool.register_source(hi as Arc<dyn TaskSource>).unwrap();
+        assert_eq!(pool.num_sources(), 2);
+        gate_tx.send(()).unwrap();
+        pool.shutdown(); // drains all sources before stopping
+        assert_eq!(*log.lock().unwrap(), vec![7, 7, 1, 1, 1]);
+    }
+
+    #[test]
+    fn shutdown_drains_registered_sources() {
+        let pool = ThreadPoolExecutor::new("drain", 2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Arc::new(TestSource {
+            priority: 3,
+            pending: Mutex::new(10),
+            log: Arc::clone(&log),
+        });
+        let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        pool.notify_source();
+        pool.shutdown();
+        assert_eq!(log.lock().unwrap().len(), 10, "all source tasks ran before exit");
+        pool.unregister_source(id);
+        pool.unregister_source(id); // idempotent
+        assert_eq!(pool.num_sources(), 0);
+    }
+
+    #[test]
+    fn notify_source_reports_shutdown() {
+        let pool = ThreadPoolExecutor::new("n", 1);
+        assert!(pool.notify_source());
+        pool.shutdown();
+        assert!(!pool.notify_source(), "dead pool must tell the queue to run inline");
+    }
+
     #[test]
     fn inline_runs_immediately_in_order() {
         let ex = InlineExecutor::new();
@@ -364,6 +636,19 @@ mod tests {
             o2.lock().unwrap().push(1);
         }));
         assert_eq!(*order.lock().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn inline_has_no_stealing_support() {
+        let ex = InlineExecutor::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Arc::new(TestSource {
+            priority: 1,
+            pending: Mutex::new(1),
+            log,
+        });
+        assert!(ex.register_source(src as Arc<dyn TaskSource>).is_none());
+        assert!(!ex.notify_source());
     }
 
     #[test]
@@ -392,5 +677,20 @@ mod tests {
         let a = process_pool();
         let b = process_pool();
         assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn named_pools_are_singletons_per_name() {
+        let a = ensure_named_pool("exec-test-a", 2);
+        let b = ensure_named_pool("exec-test-a", 4); // sizing ignored after creation
+        let c = ensure_named_pool("exec-test-b", 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(a.num_threads(), 2);
+        assert_eq!(named_pool("exec-test-a").unwrap().num_threads(), 2);
+        assert!(named_pool("exec-test-nope").is_none());
+        let names = named_pool_names();
+        assert!(names.contains(&"exec-test-a".to_string()));
+        assert!(names.contains(&"exec-test-b".to_string()));
     }
 }

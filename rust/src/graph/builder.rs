@@ -58,6 +58,7 @@ impl GraphBuilder {
             name: name.to_string(),
             num_threads,
             kind: Default::default(),
+            pool: None,
         });
         self
     }
@@ -75,6 +76,22 @@ impl GraphBuilder {
             name: name.to_string(),
             num_threads,
             kind,
+            pool: None,
+        });
+        self
+    }
+
+    /// Declare an executor bound to a process-wide **named shared pool**
+    /// (`executor { type: "shared" pool: "<pool>" }`): every queue —
+    /// across graphs — naming the same pool shares its workers. The pool
+    /// must be registered with
+    /// [`crate::executor::ensure_named_pool`] before the graph is built.
+    pub fn executor_shared_pool(mut self, name: &str, pool: &str) -> Self {
+        self.config.executors.push(ExecutorConfig {
+            name: name.to_string(),
+            num_threads: 0,
+            kind: crate::graph::config::ExecutorKind::Shared,
+            pool: Some(pool.to_string()),
         });
         self
     }
@@ -234,5 +251,24 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
             .build();
         let text = built.to_text();
         assert_eq!(GraphConfig::parse(&text).unwrap(), built);
+    }
+
+    #[test]
+    fn shared_pool_builder_matches_parsed() {
+        let built = GraphBuilder::new()
+            .input_stream("x")
+            .executor_shared_pool("infer", "gpu")
+            .node("A", |n| n.input("x").output("y").executor("infer"))
+            .build();
+        let parsed = GraphConfig::parse(
+            r#"
+input_stream: "x"
+executor { name: "infer" num_threads: 0 type: "shared" pool: "gpu" }
+node { calculator: "A" input_stream: "x" output_stream: "y" executor: "infer" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(built, parsed);
+        assert_eq!(GraphConfig::parse(&built.to_text()).unwrap(), built);
     }
 }

@@ -171,6 +171,13 @@ pub struct ExecutorConfig {
     pub num_threads: usize,
     /// Which executor implementation backs the queue.
     pub kind: ExecutorKind,
+    /// For `type: "shared"`: the **named pool** to bind to
+    /// (`executor { type: "shared" pool: "gpu" }`). Named pools are
+    /// process-wide and shared by every queue — across graphs — naming
+    /// them, mirroring the paper's GPU/TPU executor split; they must be
+    /// registered via [`crate::executor::ensure_named_pool`] before a
+    /// graph naming them is built. `None` = the anonymous process pool.
+    pub pool: Option<String>,
 }
 
 /// Trace/profiler settings (§5.1: enabled via a section of GraphConfig).
@@ -220,6 +227,16 @@ pub struct GraphConfig {
     /// gets equal priority, the queue degenerates to FIFO. Exists so
     /// benches can quantify what priority scheduling buys.
     pub scheduler_fifo: bool,
+    /// ABLATION ONLY: disable work stealing — every queue submits FIFO
+    /// drains to its executor (the pre-stealing behaviour), so a shared
+    /// pool serves queues in task arrival order instead of pulling the
+    /// globally highest-priority task. Exists so benches can quantify
+    /// what cross-queue stealing buys. Give ablation graphs a pool of
+    /// their own (as `benches/sched_work_stealing.rs` does): drain
+    /// submissions are served ahead of stealing queues' tasks, so mixing
+    /// both modes on one pool would let the ablation graph's drains
+    /// preempt stealing graphs regardless of priority.
+    pub executor_fifo_drains: bool,
     pub profiler: ProfilerConfig,
 }
 
@@ -262,6 +279,9 @@ impl GraphConfig {
         if self.scheduler_fifo {
             out.push_str("scheduler_fifo: true\n");
         }
+        if self.executor_fifo_drains {
+            out.push_str("executor_fifo_drains: true\n");
+        }
         if self.profiler.enabled {
             out.push_str("profiler {\n  enabled: true\n");
             out.push_str(&format!("  buffer_size: {}\n", self.profiler.buffer_size));
@@ -277,6 +297,9 @@ impl GraphConfig {
             ));
             if e.kind != ExecutorKind::default() {
                 out.push_str(&format!("  type: \"{}\"\n", e.kind.as_str()));
+            }
+            if let Some(p) = &e.pool {
+                out.push_str(&format!("  pool: \"{p}\"\n"));
             }
             out.push_str("}\n");
         }
@@ -755,6 +778,9 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
             "num_threads" => c.num_threads = Some(as_usize(v, k)?),
             "default_executor" => c.default_executor = Some(as_str(v, k)?),
             "scheduler_fifo" => c.scheduler_fifo = matches!(v, PbValue::Bool(true)),
+            "executor_fifo_drains" => {
+                c.executor_fifo_drains = matches!(v, PbValue::Bool(true))
+            }
             "node" => match v {
                 PbValue::Msg(m) => c.nodes.push(node_from_message(m)?),
                 _ => {
@@ -769,11 +795,13 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                     let mut name = String::new();
                     let mut num_threads = 0usize;
                     let mut kind = ExecutorKind::default();
+                    let mut pool = None;
                     for (ek, ev) in m {
                         match ek.as_str() {
                             "name" => name = as_str(ev, ek)?,
                             "num_threads" => num_threads = as_usize(ev, ek)?,
                             "type" => kind = ExecutorKind::parse(&as_str(ev, ek)?)?,
+                            "pool" => pool = Some(as_str(ev, ek)?),
                             other => {
                                 return Err(MpError::Parse {
                                     line: 0,
@@ -786,6 +814,7 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                         name,
                         num_threads,
                         kind,
+                        pool,
                     });
                 }
                 _ => {
@@ -992,6 +1021,33 @@ node { calculator: "X" }
         assert_eq!(c, c2);
         // unknown kind rejected
         assert!(GraphConfig::parse("executor { name: \"x\" type: \"bogus\" }").is_err());
+    }
+
+    #[test]
+    fn named_pool_parses_and_roundtrips() {
+        let text = r#"
+executor { name: "infer" type: "shared" pool: "gpu" }
+executor { name: "decode" type: "shared" pool: "video" }
+node { calculator: "X" executor: "infer" }
+"#;
+        let c = GraphConfig::parse(text).unwrap();
+        assert_eq!(c.executors[0].kind, ExecutorKind::Shared);
+        assert_eq!(c.executors[0].pool.as_deref(), Some("gpu"));
+        assert_eq!(c.executors[1].pool.as_deref(), Some("video"));
+        let c2 = GraphConfig::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn executor_fifo_drains_roundtrips() {
+        let c = GraphConfig::parse("executor_fifo_drains: true\nnode { calculator: \"X\" }")
+            .unwrap();
+        assert!(c.executor_fifo_drains);
+        let c2 = GraphConfig::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+        assert!(!GraphConfig::parse("node { calculator: \"X\" }")
+            .unwrap()
+            .executor_fifo_drains);
     }
 
     #[test]

@@ -220,7 +220,13 @@ impl GraphCore {
             st.scheduled = true;
             self.activity.fetch_add(1, Ordering::AcqRel);
             drop(st);
-            self.queues[meta.queue].push(id, meta.priority);
+            if !self.queues[meta.queue].push(id, meta.priority) {
+                // The queue already shut down (teardown raced this
+                // schedule): the task was rejected, undo the
+                // bookkeeping so nothing waits on it.
+                self.states[id].lock().unwrap().scheduled = false;
+                self.activity.fetch_sub(1, Ordering::AcqRel);
+            }
         }
     }
 
@@ -1117,9 +1123,11 @@ impl Graph {
         // Scheduler queues. Each queue resolves to an executor: an
         // override shares one executor across every queue (and, when the
         // caller reuses it, across graphs); otherwise the config decides
-        // per queue. Queues no node is assigned to get a thread-free
-        // inline executor so idle `executor {}` declarations cost
-        // nothing.
+        // per queue — `type: "shared"` binds to the anonymous process
+        // pool or, with `pool: "<name>"`, to a registered named pool
+        // shared across graphs (§4.1.1 GPU/TPU executor split). Queues
+        // no node is assigned to get a thread-free inline executor so
+        // idle `executor {}` declarations cost nothing.
         let mut queue_used = vec![false; plan.queue_names.len()];
         for pn in &plan.nodes {
             queue_used[pn.queue] = true;
@@ -1127,32 +1135,48 @@ impl Graph {
         // One inline executor per graph, shared by its inline queues, so
         // recursive cross-queue scheduling trampolines in one place.
         let mut graph_inline: Option<Arc<InlineExecutor>> = None;
-        let queues: Vec<Arc<SchedulerQueue>> = plan
-            .queue_names
-            .iter()
-            .enumerate()
-            .map(|(qi, name)| {
-                let display = if name.is_empty() {
-                    "default"
-                } else {
-                    name.as_str()
-                };
-                let exec: Arc<dyn Executor> = match &executor_override {
-                    Some(e) => Arc::clone(e),
-                    None if !queue_used[qi] || plan.queue_kinds[qi] == ExecutorKind::Inline => {
-                        let inline = graph_inline
-                            .get_or_insert_with(|| Arc::new(InlineExecutor::new()));
-                        Arc::clone(inline) as Arc<dyn Executor>
-                    }
-                    None => match plan.queue_kinds[qi] {
-                        ExecutorKind::Shared => process_pool() as Arc<dyn Executor>,
-                        _ => Arc::new(ThreadPoolExecutor::new(display, plan.queue_threads[qi]))
-                            as Arc<dyn Executor>,
+        let mut queues: Vec<Arc<SchedulerQueue>> = Vec::with_capacity(plan.queue_names.len());
+        for (qi, name) in plan.queue_names.iter().enumerate() {
+            let display = if name.is_empty() {
+                "default"
+            } else {
+                name.as_str()
+            };
+            let exec: Arc<dyn Executor> = match &executor_override {
+                Some(e) => Arc::clone(e),
+                None if !queue_used[qi] || plan.queue_kinds[qi] == ExecutorKind::Inline => {
+                    let inline =
+                        graph_inline.get_or_insert_with(|| Arc::new(InlineExecutor::new()));
+                    Arc::clone(inline) as Arc<dyn Executor>
+                }
+                None => match plan.queue_kinds[qi] {
+                    ExecutorKind::Shared => match &plan.queue_pools[qi] {
+                        Some(pool_name) => match crate::executor::named_pool(pool_name) {
+                            Some(p) => p as Arc<dyn Executor>,
+                            // Validation checked this; it can only fail
+                            // when a plan is built against one registry
+                            // state and instantiated against another.
+                            None => {
+                                return Err(MpError::Validation(format!(
+                                    "queue '{display}': shared pool '{pool_name}' is not \
+                                     registered"
+                                )))
+                            }
+                        },
+                        None => process_pool() as Arc<dyn Executor>,
                     },
-                };
+                    _ => Arc::new(ThreadPoolExecutor::new(display, plan.queue_threads[qi]))
+                        as Arc<dyn Executor>,
+                },
+            };
+            // Work stealing is the default; the ablation flag forces the
+            // pre-stealing FIFO drain submissions for comparison.
+            queues.push(if plan.fifo_drains {
+                SchedulerQueue::with_executor_fifo_drains(name, exec)
+            } else {
                 SchedulerQueue::with_executor(name, exec)
-            })
-            .collect();
+            });
+        }
 
         let core = Arc::new(GraphCore {
             metas,

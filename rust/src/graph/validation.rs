@@ -91,6 +91,12 @@ pub struct Plan {
     /// Executor implementation per queue (§4.1.1: configurable,
     /// shareable executors).
     pub queue_kinds: Vec<ExecutorKind>,
+    /// Named shared pool per queue (`executor { type: "shared" pool:
+    /// "gpu" }`); None = anonymous process pool / not shared. Only
+    /// meaningful where `queue_kinds` is [`ExecutorKind::Shared`].
+    pub queue_pools: Vec<Option<String>>,
+    /// ABLATION: force FIFO drain submissions instead of work stealing.
+    pub fifo_drains: bool,
     /// Per-input-stream queue limit before back-pressure (None = off).
     pub max_queue_size: Option<usize>,
     /// Names of app-supplied side packets.
@@ -402,6 +408,7 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
     let mut queue_names = vec!["".to_string()];
     let mut queue_threads = vec![config.num_threads.unwrap_or(0)];
     let mut queue_kinds = vec![ExecutorKind::default()];
+    let mut queue_pools: Vec<Option<String>> = vec![None];
     for e in &config.executors {
         if e.name.is_empty() || queue_names.contains(&e.name) {
             return Err(MpError::Validation(format!(
@@ -409,9 +416,37 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
                 e.name
             )));
         }
+        // Named shared pools: only meaningful for `type: "shared"`, and
+        // the pool must exist in the process-wide registry before the
+        // graph is built — a typo'd name would otherwise silently create
+        // a pool with default sizing.
+        if let Some(pool) = &e.pool {
+            if e.kind != ExecutorKind::Shared {
+                return Err(MpError::Validation(format!(
+                    "executor '{}': pool: \"{pool}\" is only valid with type: \"shared\"",
+                    e.name
+                )));
+            }
+            if pool.is_empty() {
+                return Err(MpError::Validation(format!(
+                    "executor '{}': pool name must not be empty",
+                    e.name
+                )));
+            }
+            if crate::executor::named_pool(pool).is_none() {
+                return Err(MpError::Validation(format!(
+                    "executor '{}': shared pool '{pool}' is not registered; create it with \
+                     mediapipe::executor::ensure_named_pool(\"{pool}\", threads) before \
+                     building the graph (registered pools: {:?})",
+                    e.name,
+                    crate::executor::named_pool_names()
+                )));
+            }
+        }
         queue_names.push(e.name.clone());
         queue_threads.push(e.num_threads);
         queue_kinds.push(e.kind);
+        queue_pools.push(e.pool.clone());
     }
     let default_queue = match &config.default_executor {
         None => 0usize,
@@ -469,6 +504,8 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
         queue_names,
         queue_threads,
         queue_kinds,
+        queue_pools,
+        fifo_drains: config.executor_fifo_drains,
         max_queue_size: config.max_queue_size,
         input_side_packets: app_side,
     })
@@ -681,6 +718,60 @@ node { calculator: "SinkI32" input_stream: "x" executor: "solo" }
         assert_eq!(p.nodes[1].queue, 2, "explicit assignment wins");
         assert_eq!(p.queue_kinds[1], ExecutorKind::Shared);
         assert_eq!(p.queue_kinds[2], ExecutorKind::ThreadPool);
+    }
+
+    #[test]
+    fn registered_named_pool_is_accepted_and_planned() {
+        crate::executor::ensure_named_pool("plan-test-pool", 1);
+        let p = parse_plan(
+            r#"
+executor { name: "infer" type: "shared" pool: "plan-test-pool" }
+node { calculator: "Src" output_stream: "x" executor: "infer" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.queue_pools[1].as_deref(), Some("plan-test-pool"));
+        assert_eq!(p.queue_kinds[1], ExecutorKind::Shared);
+        assert_eq!(p.queue_pools[0], None, "default queue has no named pool");
+    }
+
+    #[test]
+    fn unknown_named_pool_rejected_with_clear_error() {
+        let err = parse_plan(
+            r#"
+executor { name: "infer" type: "shared" pool: "no-such-pool-xyzzy" }
+node { calculator: "Src" output_stream: "x" executor: "infer" }
+"#,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no-such-pool-xyzzy"), "{msg}");
+        assert!(msg.contains("not registered"), "{msg}");
+        assert!(msg.contains("ensure_named_pool"), "{msg}");
+    }
+
+    #[test]
+    fn pool_on_non_shared_executor_rejected() {
+        let err = parse_plan(
+            r#"
+executor { name: "infer" num_threads: 1 pool: "gpu" }
+node { calculator: "Src" output_stream: "x" executor: "infer" }
+"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("only valid with type"), "{err}");
+    }
+
+    #[test]
+    fn fifo_drains_ablation_flows_into_plan() {
+        let p = parse_plan(
+            r#"
+executor_fifo_drains: true
+node { calculator: "Src" output_stream: "x" }
+"#,
+        )
+        .unwrap();
+        assert!(p.fifo_drains);
     }
 
     #[test]

@@ -7,19 +7,40 @@
 //! layout, nodes closer to the output side run first and sources last,
 //! which bounds in-flight work and favours draining the pipeline.
 //!
-//! The queue does not own threads. For every pushed task it submits one
-//! *drain* to its [`Executor`]; the drain pops the currently
-//! highest-priority task and runs it. Because the executor is just an
-//! `Arc`, the same pool can serve many queues across many graphs (§4.1.1:
-//! the executor "can be shared between queues") — see
-//! [`crate::executor`] for the available executors.
+//! The queue does not own threads. It hands work to its
+//! [`Executor`] in one of two modes, chosen at construction:
+//!
+//! * **Stealing** (default on executors that support it, i.e.
+//!   [`ThreadPoolExecutor`]): the queue registers its core as a
+//!   [`TaskSource`]; a push just notifies the pool, and an idle worker
+//!   pops the globally highest-priority task across *every* queue
+//!   registered with that pool. Priorities therefore order work across
+//!   graphs sharing a pool, not just within one queue — a bursting
+//!   graph cannot starve another graph's high-priority task.
+//! * **FIFO drains** (executors without stealing support, such as
+//!   [`crate::executor::InlineExecutor`], or explicitly via
+//!   [`SchedulerQueue::with_executor_fifo_drains`] for ablation): every
+//!   push submits one *drain* closure; the drain pops this queue's
+//!   current top task. The pool runs drains in arrival order, so
+//!   priority only orders tasks within the queue.
+//!
+//! ### Push/shutdown ordering invariant
+//!
+//! `in_flight` counts pushed-but-not-finished tasks. A push increments
+//! `in_flight` **before** making the task visible, and both happen under
+//! the heap lock; [`SchedulerQueue::shutdown`] flips the `closed` flag
+//! under the same lock only after observing `in_flight == 0`. Hence a
+//! push that returns `true` strictly precedes closure and its task runs
+//! before `shutdown` returns — shutdown can never observe a transient
+//! `in_flight == 0` and drop a task that was already in the heap (the
+//! pre-fix race). A push that finds the queue closed returns `false`
+//! and the task is rejected, never silently half-accepted.
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
 
-use crate::executor::{Executor, ThreadPoolExecutor};
+use crate::executor::{Executor, SourceId, TaskSource, ThreadPoolExecutor};
 
 /// One schedulable unit: "run node `node_id` once".
 #[derive(Debug, Eq, PartialEq)]
@@ -48,37 +69,47 @@ impl PartialOrd for Task {
 
 type RunFn = Arc<dyn Fn(usize) + Send + Sync>;
 
+struct HeapState {
+    heap: BinaryHeap<Task>,
+    /// Set by `shutdown` once the queue has drained; later pushes are
+    /// rejected. See the module-level ordering invariant.
+    closed: bool,
+}
+
 struct QueueCore {
-    heap: Mutex<BinaryHeap<Task>>,
+    heap: Mutex<HeapState>,
     /// The graph's node-execution entry point, installed by `start`.
     run: Mutex<Option<RunFn>>,
-    /// Drains submitted to the executor but not yet finished.
+    /// Tasks pushed but not yet finished running.
     in_flight: AtomicUsize,
     idle_mx: Mutex<()>,
     idle_cv: Condvar,
     seq: AtomicU64,
 }
 
-impl QueueCore {
-    /// Pop and run the highest-priority task. Executed on the executor.
-    /// The in-flight decrement lives in a drop guard so a panicking node
-    /// callback cannot leave `shutdown()` waiting forever.
-    fn drain_one(&self) {
-        struct InFlightGuard<'a>(&'a QueueCore);
-        impl Drop for InFlightGuard<'_> {
-            fn drop(&mut self) {
-                if self.0.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
-                    let _g = self
-                        .0
-                        .idle_mx
-                        .lock()
-                        .unwrap_or_else(|e| e.into_inner());
-                    self.0.idle_cv.notify_all();
-                }
-            }
+/// Decrements `in_flight` on drop (so a panicking node callback cannot
+/// leave `shutdown()` waiting forever) and wakes `shutdown` on the
+/// transition to zero. The notify happens under `idle_mx`, which makes
+/// the plain (timeout-free) wait in `shutdown` lossless.
+struct InFlightGuard<'a>(&'a QueueCore);
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if self.0.in_flight.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.0.idle_mx.lock().unwrap_or_else(|e| e.into_inner());
+            self.0.idle_cv.notify_all();
         }
+    }
+}
+
+impl QueueCore {
+    /// FIFO-drain entry point: executed on the executor, once per push.
+    /// Decrements `in_flight` exactly once whether or not a task popped
+    /// (in drain mode, drains and pushes are 1:1, so every drain finds a
+    /// task in the absence of bugs).
+    fn drain_one(&self) {
         let _guard = InFlightGuard(self);
-        let task = self.heap.lock().unwrap().pop();
+        let task = self.heap.lock().unwrap().heap.pop();
         if let Some(t) = task {
             let run = self.run.lock().unwrap().clone();
             if let Some(run) = run {
@@ -88,42 +119,165 @@ impl QueueCore {
     }
 }
 
+impl TaskSource for QueueCore {
+    fn top_priority(&self) -> Option<u32> {
+        self.heap.lock().unwrap().heap.peek().map(|t| t.priority)
+    }
+
+    /// Steal-mode entry point: pop-and-run the top task. Decrements
+    /// `in_flight` only when a task actually popped — in steal mode the
+    /// number of `run_one` attempts is not 1:1 with pushes (workers may
+    /// race for the same task), so the count must follow pops.
+    fn run_one(&self) -> bool {
+        let task = self.heap.lock().unwrap().heap.pop();
+        let Some(t) = task else {
+            return false;
+        };
+        let _guard = InFlightGuard(self);
+        let run = self.run.lock().unwrap().clone();
+        if let Some(run) = run {
+            run(t.node_id);
+        }
+        true
+    }
+}
+
+thread_local! {
+    /// Trampoline state for the steal-mode dead-pool fallback: queues
+    /// whose tasks this thread still has to drain, plus whether an
+    /// outer `degraded_inline_drain` frame is already active.
+    static DEGRADED_DRAIN: std::cell::RefCell<DegradedDrain> = const {
+        std::cell::RefCell::new(DegradedDrain {
+            active: false,
+            pending: Vec::new(),
+        })
+    };
+}
+
+struct DegradedDrain {
+    active: bool,
+    pending: Vec<Arc<QueueCore>>,
+}
+
+/// Run steal-mode tasks on the current thread because their pool has
+/// shut down. Re-entrant pushes (a degraded task scheduling follow-up
+/// work, possibly on *another* dead-pool queue) only enqueue their core;
+/// the outermost frame loops until every noted queue is empty — constant
+/// stack depth for arbitrarily long pipelines, like
+/// [`crate::executor::InlineExecutor`]'s trampoline.
+fn degraded_inline_drain(core: &Arc<QueueCore>) {
+    let is_outermost = DEGRADED_DRAIN.with(|st| {
+        let mut st = st.borrow_mut();
+        st.pending.push(Arc::clone(core));
+        if st.active {
+            return false;
+        }
+        st.active = true;
+        true
+    });
+    if !is_outermost {
+        return;
+    }
+    // Clear `active` even if a task panics, so later degraded pushes on
+    // this thread drain again instead of queueing forever.
+    struct ActiveGuard;
+    impl Drop for ActiveGuard {
+        fn drop(&mut self) {
+            DEGRADED_DRAIN.with(|st| st.borrow_mut().active = false);
+        }
+    }
+    let _guard = ActiveGuard;
+    loop {
+        let next = DEGRADED_DRAIN.with(|st| st.borrow_mut().pending.pop());
+        let Some(core) = next else { return };
+        // Duplicate entries are harmless: an emptied queue's `run_one`
+        // returns false immediately.
+        while core.run_one() {}
+    }
+}
+
+/// How pushed tasks reach the executor.
+enum Submission {
+    /// One [`Executor::execute`] drain per push (arrival-order service).
+    Drain,
+    /// Registered as a [`TaskSource`]; pushes notify, workers steal by
+    /// priority across all sources on the pool.
+    Steal(SourceId),
+}
+
 /// A scheduler queue: a priority heap of ready-node tasks plus a handle
 /// to the executor that runs them (§4.1.1).
 pub struct SchedulerQueue {
     pub name: String,
     executor: Arc<dyn Executor>,
     core: Arc<QueueCore>,
+    submission: Submission,
 }
 
 impl SchedulerQueue {
-    /// Create a queue with a *private* thread pool — the pre-refactor
-    /// behaviour, kept for standalone uses. `num_threads == 0` means
-    /// "based on the system's capabilities".
+    /// Create a queue with a *private* thread pool — kept for standalone
+    /// uses. `num_threads == 0` means "based on the system's
+    /// capabilities".
     pub fn new(name: &str, num_threads: usize) -> Arc<SchedulerQueue> {
         SchedulerQueue::with_executor(name, Arc::new(ThreadPoolExecutor::new(name, num_threads)))
     }
 
-    /// Create a queue that submits its tasks to `executor` (possibly
-    /// shared with other queues and other graphs).
+    /// Create a queue that hands its tasks to `executor` (possibly
+    /// shared with other queues and other graphs). If the executor
+    /// supports work stealing the queue registers as a task source;
+    /// otherwise it falls back to FIFO drains.
     pub fn with_executor(name: &str, executor: Arc<dyn Executor>) -> Arc<SchedulerQueue> {
+        SchedulerQueue::build(name, executor, true)
+    }
+
+    /// Create a queue that always submits FIFO drains, even on a
+    /// stealing-capable executor. Ablation/benchmark mode: this is the
+    /// pre-stealing behaviour, where a pool serves its queues in task
+    /// arrival order.
+    pub fn with_executor_fifo_drains(
+        name: &str,
+        executor: Arc<dyn Executor>,
+    ) -> Arc<SchedulerQueue> {
+        SchedulerQueue::build(name, executor, false)
+    }
+
+    fn build(name: &str, executor: Arc<dyn Executor>, steal: bool) -> Arc<SchedulerQueue> {
+        let core = Arc::new(QueueCore {
+            heap: Mutex::new(HeapState {
+                heap: BinaryHeap::new(),
+                closed: false,
+            }),
+            run: Mutex::new(None),
+            in_flight: AtomicUsize::new(0),
+            idle_mx: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+        });
+        let submission = if steal {
+            match executor.register_source(Arc::clone(&core) as Arc<dyn TaskSource>) {
+                Some(id) => Submission::Steal(id),
+                None => Submission::Drain,
+            }
+        } else {
+            Submission::Drain
+        };
         Arc::new(SchedulerQueue {
             name: name.to_string(),
             executor,
-            core: Arc::new(QueueCore {
-                heap: Mutex::new(BinaryHeap::new()),
-                run: Mutex::new(None),
-                in_flight: AtomicUsize::new(0),
-                idle_mx: Mutex::new(()),
-                idle_cv: Condvar::new(),
-                seq: AtomicU64::new(0),
-            }),
+            core,
+            submission,
         })
     }
 
-    /// The executor this queue submits to.
+    /// The executor this queue hands tasks to.
     pub fn executor(&self) -> &Arc<dyn Executor> {
         &self.executor
+    }
+
+    /// Is this queue registered for priority work stealing (vs FIFO
+    /// drain submissions)?
+    pub fn is_stealing(&self) -> bool {
+        matches!(self.submission, Submission::Steal(_))
     }
 
     /// Worker parallelism of the underlying executor.
@@ -139,46 +293,87 @@ impl SchedulerQueue {
         *slot = Some(run);
     }
 
-    /// Enqueue a node run and submit a drain to the executor.
-    pub fn push(&self, node_id: usize, priority: u32) {
+    /// Enqueue a node run. Returns `true` when the task was accepted —
+    /// an accepted task is guaranteed to be executed before `shutdown`
+    /// returns. Returns `false` when the queue has already shut down
+    /// (the task is rejected and will never run).
+    pub fn push(&self, node_id: usize, priority: u32) -> bool {
         let seq = self.core.seq.fetch_add(1, Ordering::Relaxed);
         {
-            let mut heap = self.core.heap.lock().unwrap();
-            heap.push(Task {
+            let mut hs = self.core.heap.lock().unwrap();
+            if hs.closed {
+                return false;
+            }
+            // Ordering invariant (see module docs): count first, then
+            // publish the task, all under the heap lock, so `shutdown`
+            // can never see in_flight == 0 while an accepted task sits
+            // in the heap.
+            self.core.in_flight.fetch_add(1, Ordering::AcqRel);
+            hs.heap.push(Task {
                 priority,
                 seq,
                 node_id,
             });
         }
-        self.core.in_flight.fetch_add(1, Ordering::AcqRel);
-        let core = Arc::clone(&self.core);
-        self.executor.execute(Box::new(move || core.drain_one()));
+        match self.submission {
+            Submission::Drain => {
+                let core = Arc::clone(&self.core);
+                self.executor.execute(Box::new(move || core.drain_one()));
+            }
+            Submission::Steal(_) => {
+                if !self.executor.notify_source() {
+                    // The pool shut down and no worker will come: run
+                    // the work on the pushing thread so nothing accepted
+                    // is ever stranded (mirrors `execute`'s inline
+                    // degrade). Trampolined: a push made from inside a
+                    // degraded task only enqueues; the outermost frame
+                    // drains, so deep pipelines don't recurse one stack
+                    // frame per task.
+                    degraded_inline_drain(&self.core);
+                }
+            }
+        }
+        true
     }
 
     /// Number of queued (not yet running) tasks.
     pub fn len(&self) -> usize {
-        self.core.heap.lock().unwrap().len()
+        self.core.heap.lock().unwrap().heap.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Wait until every submitted task has run, then detach from the
-    /// graph (drops the run callback, breaking the queue→graph reference
-    /// cycle). The executor itself keeps running — it may be shared.
-    /// Idempotent.
+    /// Wait until every accepted task has run, close the queue against
+    /// further pushes, then detach from the graph (drops the run
+    /// callback, breaking the queue→graph reference cycle) and
+    /// unregister from the executor's steal set. The executor itself
+    /// keeps running — it may be shared. Idempotent.
     pub fn shutdown(&self) {
-        {
-            let mut g = self.core.idle_mx.lock().unwrap();
-            while self.core.in_flight.load(Ordering::Acquire) != 0 {
-                let (guard, _) = self
-                    .core
-                    .idle_cv
-                    .wait_timeout(g, Duration::from_millis(10))
-                    .unwrap();
-                g = guard;
+        loop {
+            // Plain wait — no timeout: the in-flight drop guard always
+            // notifies `idle_cv` under `idle_mx` on the transition to
+            // zero, so a wakeup cannot be lost and shutdown latency is
+            // not quantized to a poll interval.
+            {
+                let mut g = self.core.idle_mx.lock().unwrap();
+                while self.core.in_flight.load(Ordering::Acquire) != 0 {
+                    g = self.core.idle_cv.wait(g).unwrap();
+                }
             }
+            // Re-check under the heap lock: a push may have been
+            // accepted between the idle wait and here. Closing is only
+            // legal at a moment where no accepted task is pending
+            // (module-level invariant).
+            let mut hs = self.core.heap.lock().unwrap();
+            if self.core.in_flight.load(Ordering::Acquire) == 0 {
+                hs.closed = true;
+                break;
+            }
+        }
+        if let Submission::Steal(id) = self.submission {
+            self.executor.unregister_source(id);
         }
         *self.core.run.lock().unwrap() = None;
     }
@@ -242,6 +437,7 @@ mod tests {
     use crate::executor::InlineExecutor;
     use std::sync::atomic::AtomicUsize;
     use std::sync::mpsc;
+    use std::time::Duration;
 
     #[test]
     fn task_ordering_priority_then_fifo() {
@@ -269,6 +465,7 @@ mod tests {
     #[test]
     fn queue_runs_tasks() {
         let q = SchedulerQueue::new("t", 2);
+        assert!(q.is_stealing(), "thread pools default to stealing");
         let count = Arc::new(AtomicUsize::new(0));
         let (done_tx, done_rx) = mpsc::channel();
         let c2 = Arc::clone(&count);
@@ -285,6 +482,25 @@ mod tests {
             .expect("tasks did not complete");
         q.shutdown();
         assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn fifo_drain_mode_still_runs_tasks() {
+        let q = SchedulerQueue::with_executor_fifo_drains(
+            "t",
+            Arc::new(ThreadPoolExecutor::new("t-drain", 2)),
+        );
+        assert!(!q.is_stealing());
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        q.start(Arc::new(move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        for i in 0..200 {
+            q.push(i, (i % 7) as u32);
+        }
+        q.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 200);
     }
 
     #[test]
@@ -307,9 +523,9 @@ mod tests {
 
     #[test]
     fn shutdown_waits_for_all_submitted_tasks() {
-        // After shutdown returns, every pushed task must have run — the
-        // old implementation guaranteed this by joining its workers; the
-        // submission-based queue must guarantee it by waiting.
+        // After shutdown returns, every accepted task must have run —
+        // the old implementation guaranteed this by joining its workers;
+        // the submission-based queue must guarantee it by waiting.
         let q = SchedulerQueue::new("t", 2);
         let count = Arc::new(AtomicUsize::new(0));
         let c2 = Arc::clone(&count);
@@ -317,11 +533,89 @@ mod tests {
             c2.fetch_add(1, Ordering::SeqCst);
         }));
         for i in 0..500 {
-            q.push(i, (i % 5) as u32);
+            assert!(q.push(i, (i % 5) as u32));
         }
         q.shutdown();
         assert_eq!(count.load(Ordering::SeqCst), 500);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_after_shutdown_is_rejected() {
+        let q = SchedulerQueue::new("t", 1);
+        q.start(Arc::new(|_| {}));
+        assert!(q.push(0, 0));
+        q.shutdown();
+        assert!(!q.push(1, 0), "closed queue must reject pushes");
+    }
+
+    #[test]
+    fn push_shutdown_race_never_drops_accepted_tasks() {
+        // Satellite regression: the pre-fix `push` made the task visible
+        // before counting it, so a concurrent `shutdown` could observe
+        // in_flight == 0, detach the run callback, and silently drop a
+        // task whose push had already returned. Hammer that window: any
+        // push that returns true must be executed, exactly once, before
+        // shutdown completes.
+        for _round in 0..30 {
+            let q = SchedulerQueue::new("race", 2);
+            let ran = Arc::new(AtomicUsize::new(0));
+            let r2 = Arc::clone(&ran);
+            q.start(Arc::new(move |_| {
+                r2.fetch_add(1, Ordering::SeqCst);
+            }));
+            let accepted = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    let q = Arc::clone(&q);
+                    let accepted = Arc::clone(&accepted);
+                    s.spawn(move || {
+                        for i in 0..25usize {
+                            if q.push(t * 100 + i, (i % 3) as u32) {
+                                accepted.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    });
+                }
+                let q2 = Arc::clone(&q);
+                s.spawn(move || q2.shutdown());
+            });
+            // Late pushes may have been rejected; every accepted one ran.
+            q.shutdown();
+            assert_eq!(
+                ran.load(Ordering::SeqCst),
+                accepted.load(Ordering::SeqCst),
+                "accepted tasks must run exactly once, never be dropped"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_pool_fallback_trampolines_instead_of_recursing() {
+        // After the pool shuts down, pushes run inline on the pushing
+        // thread. Each task here schedules the next — naive recursion
+        // would need 100k stack frames; the trampoline must make it a
+        // loop (cf. InlineExecutor).
+        let pool = Arc::new(ThreadPoolExecutor::new("dead", 1));
+        let q = SchedulerQueue::with_executor("t", Arc::clone(&pool) as Arc<dyn Executor>);
+        assert!(q.is_stealing());
+        pool.shutdown();
+        let count = Arc::new(AtomicUsize::new(0));
+        let slot: Arc<Mutex<Option<Arc<SchedulerQueue>>>> = Arc::new(Mutex::new(None));
+        let c2 = Arc::clone(&count);
+        let s2 = Arc::clone(&slot);
+        q.start(Arc::new(move |id| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            if id > 0 {
+                let q = s2.lock().unwrap().clone().expect("slot filled");
+                q.push(id - 1, 1);
+            }
+        }));
+        *slot.lock().unwrap() = Some(Arc::clone(&q));
+        q.push(100_000, 1);
+        assert_eq!(count.load(Ordering::SeqCst), 100_001);
+        *slot.lock().unwrap() = None; // break the run-fn cycle
+        q.shutdown();
     }
 
     #[test]
@@ -334,9 +628,11 @@ mod tests {
     fn inline_executor_is_deterministic() {
         // With the inline executor each push drains synchronously on the
         // pushing thread, so execution order equals push order — the
-        // deterministic mode tests rely on.
+        // deterministic mode tests rely on. (Inline executors have no
+        // stealing support; the queue falls back to FIFO drains.)
         let ex = Arc::new(InlineExecutor::new());
         let q = SchedulerQueue::with_executor("t", ex);
+        assert!(!q.is_stealing());
         let order = Arc::new(Mutex::new(Vec::new()));
         let o2 = Arc::clone(&order);
         q.start(Arc::new(move |id| {
@@ -370,6 +666,43 @@ mod tests {
         qa.shutdown();
         qb.shutdown();
         assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn high_priority_task_is_stolen_across_queues() {
+        // Two queues on one single-worker pool. Park the worker, fill
+        // queue A with low-priority tasks and queue B with one
+        // high-priority task, then release: the worker must run B's
+        // task first even though A's were pushed earlier — priorities
+        // order work across all queues sharing the pool, not just
+        // within one.
+        let pool = Arc::new(ThreadPoolExecutor::new("steal-q", 1));
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        pool.execute(Box::new(move || {
+            entered_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+        }));
+        entered_rx.recv().unwrap(); // worker parked
+        let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool) as Arc<dyn Executor>);
+        let qb = SchedulerQueue::with_executor("b", Arc::clone(&pool) as Arc<dyn Executor>);
+        let order: Arc<Mutex<Vec<(char, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        for (tag, q) in [('a', &qa), ('b', &qb)] {
+            let o2 = Arc::clone(&order);
+            q.start(Arc::new(move |id| {
+                o2.lock().unwrap().push((tag, id));
+            }));
+        }
+        for i in 0..10 {
+            qa.push(i, 1); // the burst backlog
+        }
+        qb.push(99, 8); // late, but outranks everything queued
+        gate_tx.send(()).unwrap();
+        qa.shutdown();
+        qb.shutdown();
+        let got = order.lock().unwrap();
+        assert_eq!(got.len(), 11);
+        assert_eq!(got[0], ('b', 99), "high-priority task stolen first: {got:?}");
     }
 
     #[test]

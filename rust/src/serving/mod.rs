@@ -51,6 +51,13 @@ pub struct ServerConfig {
     /// Workers in the shared executor all pooled graphs submit to
     /// (0 = based on the system's capabilities).
     pub executor_threads: usize,
+    /// Bind the serving graphs to this process-wide **named pool**
+    /// (created via [`crate::executor::ensure_named_pool`] on first use
+    /// with `executor_threads` workers) instead of a private pool.
+    /// Multiple servers — and any graphs whose configs say
+    /// `executor { type: "shared" pool: "<name>" }` — naming the same
+    /// pool share one set of workers.
+    pub executor_pool: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -64,6 +71,7 @@ impl Default for ServerConfig {
             input_size: 32,
             pool_capacity: 2,
             executor_threads: 0,
+            executor_pool: None,
         }
     }
 }
@@ -191,7 +199,13 @@ impl PipelineServer {
         let largest = *variants.last().expect("non-empty");
         cfg.max_batch = cfg.max_batch.clamp(1, largest);
 
-        let executor = Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads));
+        // The executor all pooled serving graphs submit to: a named
+        // process-wide pool when configured (so several servers / other
+        // graphs can share workers), a private pool otherwise.
+        let executor = match &cfg.executor_pool {
+            Some(name) => crate::executor::ensure_named_pool(name, cfg.executor_threads),
+            None => Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads)),
+        };
         let graph_config =
             pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?;
         let pool = GraphPool::with_executor(

@@ -18,17 +18,30 @@
 //! queued packets or tracer events from a previous request, because it
 //! never receives an object that has run before. The executor is shared
 //! (injected at pool construction), so pooled graphs add no threads of
-//! their own.
+//! their own; with [`GraphPool::set_async_refill`] the replacement
+//! builds run on one long-lived refill worker fed by a coalescing
+//! signal, so check-ins cost a channel send — never a thread — per
+//! request.
 
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, Weak};
 
 use crate::error::MpResult;
 use crate::executor::Executor;
 use crate::graph::config::GraphConfig;
 use crate::graph::Graph;
+
+/// Total long-lived refill workers ever spawned by [`GraphPool`]s in
+/// this process. Tests use this to prove that checking in used graphs
+/// does not spawn a thread per request — each pool runs at most one.
+static REFILL_WORKERS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// How many pool refill workers have been spawned process-wide.
+pub fn refill_workers_spawned() -> usize {
+    REFILL_WORKERS_SPAWNED.load(Ordering::Acquire)
+}
 
 struct PoolShared {
     config: GraphConfig,
@@ -37,9 +50,15 @@ struct PoolShared {
     capacity: usize,
     /// Total graph instances ever built (stats / tests).
     built: AtomicUsize,
-    /// Refill used slots on a background thread instead of the dropping
-    /// (request-path) thread.
+    /// Refill used slots on the long-lived refill worker instead of the
+    /// dropping (request-path) thread.
     async_refill: AtomicBool,
+    /// Coalescing "refill needed" signal to the single long-lived refill
+    /// worker; `Some` once the worker is running. Signals sent while the
+    /// worker is busy collapse into one pass (the worker rebuilds to
+    /// capacity, then drains the channel), so N check-ins cost one
+    /// wakeup, not N threads.
+    refill_tx: Mutex<Option<mpsc::Sender<()>>>,
 }
 
 impl PoolShared {
@@ -60,15 +79,65 @@ impl PoolShared {
             // A concurrent refill won the race: drop the extra.
         }
     }
-}
 
-impl PoolShared {
+    /// Rebuild until the pool is back at capacity (refill-worker body).
+    fn refill_to_capacity(&self) {
+        loop {
+            if self.ready.lock().unwrap().len() >= self.capacity {
+                return;
+            }
+            match self.build_graph() {
+                Ok(fresh) => {
+                    let mut ready = self.ready.lock().unwrap();
+                    if ready.len() < self.capacity {
+                        ready.push_back(fresh);
+                    } else {
+                        return;
+                    }
+                }
+                // Build failures are not retried here; the next checkout
+                // surfaces them synchronously.
+                Err(_) => return,
+            }
+        }
+    }
+
     fn build_graph(&self) -> MpResult<Graph> {
         self.built.fetch_add(1, Ordering::AcqRel);
         match &self.executor {
             Some(e) => Graph::with_executor(&self.config, Arc::clone(e)),
             None => Graph::new(&self.config),
         }
+    }
+
+    /// Spawn the single long-lived refill worker (idempotent). The
+    /// worker holds only a `Weak` reference and exits when the last pool
+    /// handle drops (the channel disconnects), so it never keeps a dead
+    /// pool alive.
+    fn ensure_refill_worker(shared: &Arc<PoolShared>) {
+        let mut tx = shared.refill_tx.lock().unwrap();
+        if tx.is_some() {
+            return;
+        }
+        let (sender, receiver) = mpsc::channel::<()>();
+        let weak: Weak<PoolShared> = Arc::downgrade(shared);
+        let spawned = std::thread::Builder::new()
+            .name("mp-pool-refill".into())
+            .spawn(move || {
+                while receiver.recv().is_ok() {
+                    // Coalesce: one rebuild pass serves every signal
+                    // queued so far.
+                    while receiver.try_recv().is_ok() {}
+                    let Some(shared) = weak.upgrade() else { return };
+                    shared.refill_to_capacity();
+                }
+            });
+        if spawned.is_ok() {
+            REFILL_WORKERS_SPAWNED.fetch_add(1, Ordering::AcqRel);
+            *tx = Some(sender);
+        }
+        // Spawn failure (resource exhaustion): leave no sender; drops
+        // fall back to the synchronous refill path.
     }
 }
 
@@ -106,6 +175,7 @@ impl GraphPool {
             capacity: capacity.max(1),
             built: AtomicUsize::new(0),
             async_refill: AtomicBool::new(false),
+            refill_tx: Mutex::new(None),
         });
         {
             let mut ready = shared.ready.lock().unwrap();
@@ -146,11 +216,17 @@ impl GraphPool {
         self.shared.built.load(Ordering::Acquire)
     }
 
-    /// Refill used slots on a detached background thread so the graph
-    /// build never sits on the request path (serving uses this; the
-    /// default synchronous refill keeps tests deterministic).
+    /// Refill used slots on the pool's **single long-lived refill
+    /// worker** so the graph build never sits on the request path
+    /// (serving uses this; the default synchronous refill keeps tests
+    /// deterministic). Check-ins send a coalescing signal to the worker
+    /// — N concurrent check-ins wake it once, they do not spawn N
+    /// threads.
     pub fn set_async_refill(&self, on: bool) {
         self.shared.async_refill.store(on, Ordering::Release);
+        if on {
+            PoolShared::ensure_refill_worker(&self.shared);
+        }
     }
 }
 
@@ -190,18 +266,19 @@ impl Drop for PooledGraph {
         }
         // Used instance: finish/teardown (Graph::drop cancels a run
         // still in flight), then refill the slot with a fresh build —
-        // on a background thread when the pool serves a request path.
+        // via the long-lived refill worker when the pool serves a
+        // request path. The signal coalesces: at serving rates this is
+        // one channel send per check-in, never a thread per request.
         drop(graph);
         if self.shared.async_refill.load(Ordering::Acquire) {
-            let shared = Arc::clone(&self.shared);
-            let spawned = std::thread::Builder::new()
-                .name("mp-pool-refill".into())
-                .spawn(move || shared.refill_one());
-            if spawned.is_ok() {
-                return;
+            let tx = self.shared.refill_tx.lock().unwrap();
+            if let Some(tx) = tx.as_ref() {
+                if tx.send(()).is_ok() {
+                    return;
+                }
             }
-            // Spawn failed (resource exhaustion): fall through to the
-            // synchronous path rather than leak the slot.
+            // No worker (spawn failed at enable time): fall through to
+            // the synchronous path rather than leak the slot.
         }
         self.shared.refill_one();
     }
@@ -287,6 +364,38 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         drop(a);
         drop(b); // pool already full: extra unused instance is dropped
         assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn async_refill_uses_one_long_lived_worker() {
+        // Satellite regression: the old async refill spawned one
+        // detached OS thread per used-graph check-in — a thread per
+        // request at serving rates. Now N check-ins share one worker.
+        let before = refill_workers_spawned();
+        let pool = GraphPool::new(&chain_config(), 1).unwrap();
+        pool.set_async_refill(true);
+        pool.set_async_refill(true); // idempotent: still one worker
+        for i in 0..8i64 {
+            let out = run_once(pool.checkout().unwrap(), &[i + 1]);
+            assert_eq!(out, vec![i + 1]);
+        }
+        // The worker refills asynchronously; wait for it to catch up.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        while pool.available() < pool.capacity() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "refill worker never restored capacity"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            refill_workers_spawned() <= before + 1,
+            "8 used check-ins must share at most one refill worker \
+             (spawned {} new)",
+            refill_workers_spawned() - before
+        );
+        // 1 prebuild + >=1 replacement happened through the worker.
+        assert!(pool.graphs_built() >= 2);
     }
 
     #[test]

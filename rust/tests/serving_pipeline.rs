@@ -12,6 +12,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
+use mediapipe::executor::Executor;
 use mediapipe::perception::SyntheticWorld;
 use mediapipe::serving::{PipelineServer, ServerConfig};
 
@@ -54,6 +55,7 @@ fn test_server(max_batch: usize) -> PipelineServer {
         input_size: 8,
         pool_capacity: 2,
         executor_threads: 2,
+        executor_pool: None,
     })
     .unwrap()
 }
@@ -130,6 +132,43 @@ fn dynamic_batcher_still_coalesces_in_front_of_the_graph() {
     // Batched runs use the padded detector_b4 variant through the same
     // graph path.
     assert_eq!(m.graph_runs.get(), m.batches.get());
+}
+
+#[test]
+fn two_servers_naming_one_pool_share_its_workers() {
+    // `executor_pool` binds all of a server's pooled graphs to a named
+    // process-wide pool; a second server naming the same pool must share
+    // the same executor instance (same workers) instead of spawning its
+    // own.
+    let mk = || {
+        PipelineServer::start(ServerConfig {
+            artifact_dir: stub_artifact_dir(),
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            min_score: 0.0,
+            iou_threshold: 0.4,
+            input_size: 8,
+            pool_capacity: 1,
+            executor_threads: 2,
+            executor_pool: Some("serving-shared-test".into()),
+        })
+        .unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert!(
+        std::sync::Arc::ptr_eq(a.executor(), b.executor()),
+        "both servers must bind to the same named pool"
+    );
+    assert_eq!(a.executor().name(), "serving-shared-test");
+    // Both servers actually serve through the shared pool.
+    for server in [&a, &b] {
+        let h = server.handle();
+        let mut world = SyntheticWorld::new(8, 8, 1, 5);
+        world.step();
+        let dets = h.detect(&world.render()).expect("request succeeds");
+        assert!(!dets.is_empty());
+    }
 }
 
 #[test]

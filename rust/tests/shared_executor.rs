@@ -1,18 +1,20 @@
 //! Integration proof for the shared executor runtime (§4.1.1): many
 //! concurrent graph runs can share one thread pool without spawning
-//! per-graph workers, configs can bind queues to the process-wide pool
-//! or an inline executor, and results stay correct either way.
+//! per-graph workers, configs can bind queues to the process-wide pool,
+//! a **named pool**, or an inline executor, results stay correct either
+//! way, and priority work stealing orders tasks across the graphs
+//! sharing a pool.
 //!
 //! These tests assert *exact* global worker-spawn counts, so every
-//! counting test takes `COUNTER_LOCK` for its whole body and no test in
-//! this binary may build a graph that owns a private pool outside the
-//! lock.
+//! counting test (and every test that creates a pool) takes
+//! `COUNTER_LOCK` for its whole body and no test in this binary may
+//! build a graph that owns a private pool outside the lock.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use mediapipe::executor::{
-    process_pool, worker_threads_spawned, Executor, ThreadPoolExecutor,
+    ensure_named_pool, process_pool, worker_threads_spawned, Executor, ThreadPoolExecutor,
 };
 use mediapipe::prelude::*;
 
@@ -99,6 +101,191 @@ node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "ou
         worker_threads_spawned(),
         before,
         "graphs bound to the process pool via config must not spawn workers"
+    );
+}
+
+#[test]
+fn two_graphs_naming_one_pool_share_workers_without_private_spawns() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = process_pool();
+    // Register the named pool first (its 2 workers spawn here, before
+    // the counting window opens); configs then bind to it by name.
+    let gpu = ensure_named_pool("gpu-test", 2);
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "gpu-test" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "a" }
+node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let before = worker_threads_spawned();
+    std::thread::scope(|s| {
+        for t in 0..2i64 {
+            let cfg = &cfg;
+            s.spawn(move || {
+                let values: Vec<i64> = (0..40).map(|i| t * 1000 + i).collect();
+                let g = Graph::new(cfg).unwrap();
+                assert_eq!(drive(g, &values), values);
+            });
+        }
+    });
+    assert_eq!(
+        worker_threads_spawned(),
+        before,
+        "graphs naming one shared pool must ride its workers, not spawn their own"
+    );
+    assert_eq!(gpu.num_threads(), 2);
+}
+
+#[test]
+fn unknown_named_pool_is_rejected_at_build() {
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "never-registered-pool" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let err = Graph::new(&cfg).unwrap_err().to_string();
+    assert!(err.contains("never-registered-pool"), "{err}");
+    assert!(err.contains("not registered"), "{err}");
+}
+
+#[test]
+fn high_priority_graph_task_is_stolen_ahead_of_a_bursting_graph() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // One single-worker named pool shared by two graphs.
+    let pool = ensure_named_pool("steal-test", 1);
+    // Park the worker so both graphs queue work before anything runs.
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    pool.execute(Box::new(move || {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+    }));
+    entered_rx.recv().unwrap(); // worker is inside the gate
+
+    let order: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // Burst graph: a source about to emit 100 packets. Source tasks get
+    // layout priority 0 (§4.1.1: sources lowest).
+    let burst_cfg = GraphConfig::parse(
+        r#"
+output_stream: "out"
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "steal-test" }
+node { calculator: "CounterSourceCalculator" output_stream: "out" options { count: 100 } }
+"#,
+    )
+    .unwrap();
+    let mut burst = Graph::new(&burst_cfg).unwrap();
+    let o = Arc::clone(&order);
+    burst.observe_output("out", move |_| o.lock().unwrap().push('A')).unwrap();
+    burst.start_run(SidePackets::new()).unwrap();
+    // The source task now sits in the burst graph's queue (priority 0).
+
+    // Latency graph on the same pool: one non-source node (priority 1).
+    let lat_cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "steal-test" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let mut lat = Graph::new(&lat_cfg).unwrap();
+    let o = Arc::clone(&order);
+    lat.observe_output("out", move |_| o.lock().unwrap().push('B')).unwrap();
+    lat.start_run(SidePackets::new()).unwrap();
+    lat.add_packet("in", Packet::new(1i64, Timestamp::new(0))).unwrap();
+    // Its task (priority 1) now sits in the latency graph's queue,
+    // pushed *after* the burst graph's.
+
+    gate_tx.send(()).unwrap(); // release the worker
+    burst.wait_until_done().unwrap();
+    lat.close_all_inputs().unwrap();
+    lat.wait_until_done().unwrap();
+
+    let got = order.lock().unwrap();
+    assert_eq!(got.len(), 101, "100 burst packets + 1 high-priority packet");
+    assert_eq!(
+        got[0], 'B',
+        "the idle worker must steal the globally highest-priority task \
+         (latency graph, priority 1) ahead of the earlier-pushed burst \
+         source (priority 0): {got:?}"
+    );
+    assert!(got[1..].iter().all(|&c| c == 'A'));
+}
+
+#[test]
+fn fifo_drain_ablation_serves_arrival_order() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Same setup as the stealing test but with the ablation flag: the
+    // pool serves drains in submission order, so the burst source —
+    // pushed first — runs before the later high-priority task. This
+    // pins down exactly what the tentpole changed.
+    let pool = ensure_named_pool("fifo-ablate-test", 1);
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    pool.execute(Box::new(move || {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+    }));
+    entered_rx.recv().unwrap();
+
+    let order: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
+    let burst_cfg = GraphConfig::parse(
+        r#"
+output_stream: "out"
+executor_fifo_drains: true
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "fifo-ablate-test" }
+node { calculator: "CounterSourceCalculator" output_stream: "out" options { count: 5 } }
+"#,
+    )
+    .unwrap();
+    let mut burst = Graph::new(&burst_cfg).unwrap();
+    let o = Arc::clone(&order);
+    burst.observe_output("out", move |_| o.lock().unwrap().push('A')).unwrap();
+    burst.start_run(SidePackets::new()).unwrap();
+
+    let lat_cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+executor_fifo_drains: true
+default_executor: "q"
+executor { name: "q" type: "shared" pool: "fifo-ablate-test" }
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "out" }
+"#,
+    )
+    .unwrap();
+    let mut lat = Graph::new(&lat_cfg).unwrap();
+    let o = Arc::clone(&order);
+    lat.observe_output("out", move |_| o.lock().unwrap().push('B')).unwrap();
+    lat.start_run(SidePackets::new()).unwrap();
+    lat.add_packet("in", Packet::new(1i64, Timestamp::new(0))).unwrap();
+
+    gate_tx.send(()).unwrap();
+    burst.wait_until_done().unwrap();
+    lat.close_all_inputs().unwrap();
+    lat.wait_until_done().unwrap();
+
+    let got = order.lock().unwrap();
+    assert_eq!(got.len(), 6);
+    assert_eq!(
+        got[0], 'A',
+        "FIFO drains run in arrival order — the burst source was pushed \
+         first, so the high-priority task waits: {got:?}"
     );
 }
 
