@@ -1,0 +1,169 @@
+//! Streaming vs pooled serving (ROADMAP "long-lived serving graphs"):
+//! what does feeding successive batches as successive **timestamps**
+//! into one long-lived graph buy over checking a fresh pooled graph out
+//! per batch?
+//!
+//! Setup: two identical single-request-per-batch detection servers on
+//! the reference backend, one in `ServingMode::Pooled`, one in
+//! `ServingMode::Streaming` (sessions never recycled, so the streaming
+//! number is the pure long-lived-graph cost). Reported per mode:
+//!
+//! * **per-batch latency** (mean/p50/p95 of synchronous `detect` calls)
+//!   — the pooled mode pays `start_run` (Open on every node) plus full
+//!   graph teardown per batch, the streaming mode only a push, a graph
+//!   traversal, and a timestamp demux;
+//! * **graph lifecycles** — pooled: one per batch; streaming: one per
+//!   session;
+//! * **executor idle wake-ups** during the workload and over an idle
+//!   window — the push-driven input path wakes workers only when work
+//!   arrives, so an idle streaming server must not spin.
+//!
+//! `--smoke` (used by CI) shrinks everything so the bench just proves it
+//! still runs end to end.
+
+use std::time::{Duration, Instant};
+
+use mediapipe::benchutil::{section, stub_detector_artifacts, table, Samples};
+use mediapipe::perception::SyntheticWorld;
+use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
+
+struct Scale {
+    warmup: usize,
+    requests: usize,
+    idle_window: Duration,
+}
+
+struct ModeReport {
+    label: &'static str,
+    samples: Samples,
+    /// Completed graph lifecycles (pooled: per batch; streaming: 0
+    /// until the session retires — the session count tells the story).
+    graph_runs: u64,
+    sessions: u64,
+    batches: u64,
+    busy_wakeups: u64,
+    idle_wakeups: u64,
+}
+
+fn run_mode(mode: ServingMode, label: &'static str, sc: &Scale) -> ModeReport {
+    let server = PipelineServer::start(ServerConfig {
+        artifact_dir: stub_detector_artifacts("mp-serving-bench"),
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        min_score: 0.0,
+        iou_threshold: 0.4,
+        input_size: 8,
+        pool_capacity: 2,
+        executor_threads: 2,
+        executor_pool: None,
+        mode,
+        session_max_timestamps: 0, // never recycle: pure long-lived cost
+        session_input_queue: 4,
+    })
+    .unwrap();
+    let h = server.handle();
+    let mut world = SyntheticWorld::new(8, 8, 1, 42);
+    for _ in 0..sc.warmup {
+        world.step();
+        h.detect(&world.render()).unwrap();
+    }
+    let wake0 = server.executor().idle_wakeups();
+    let mut samples = Samples::new(label);
+    for _ in 0..sc.requests {
+        world.step();
+        let frame = world.render();
+        let t0 = Instant::now();
+        h.detect(&frame).unwrap();
+        samples.add(t0.elapsed());
+    }
+    let busy_wakeups = server.executor().idle_wakeups() - wake0;
+    // Idle window: a quiet push-driven server should wake ~nobody.
+    let idle0 = server.executor().idle_wakeups();
+    std::thread::sleep(sc.idle_window);
+    let idle_wakeups = server.executor().idle_wakeups() - idle0;
+    let m = server.metrics();
+    ModeReport {
+        label,
+        samples,
+        graph_runs: m.graph_runs.get(),
+        sessions: m.sessions_started.get(),
+        batches: m.batches.get(),
+        busy_wakeups,
+        idle_wakeups,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sc = if smoke {
+        Scale {
+            warmup: 2,
+            requests: 8,
+            idle_window: Duration::from_millis(50),
+        }
+    } else {
+        Scale {
+            warmup: 25,
+            requests: 300,
+            idle_window: Duration::from_millis(500),
+        }
+    };
+    section(&format!(
+        "streaming sessions vs pooled-per-batch: {} single-request batches{}",
+        sc.requests,
+        if smoke { " [smoke]" } else { "" }
+    ));
+
+    let pooled = run_mode(ServingMode::Pooled, "pooled (graph per batch)", &sc);
+    let streaming = run_mode(ServingMode::Streaming, "streaming (one session)", &sc);
+
+    let row = |r: &ModeReport| {
+        vec![
+            r.label.to_string(),
+            format!("{}", r.batches),
+            format!("{}", r.graph_runs),
+            format!("{}", r.sessions),
+            format!("{:.2?}", r.samples.mean()),
+            format!("{:.2?}", r.samples.quantile(0.5)),
+            format!("{:.2?}", r.samples.quantile(0.95)),
+            format!("{}", r.busy_wakeups),
+            format!("{}", r.idle_wakeups),
+        ]
+    };
+    table(
+        &[
+            "mode",
+            "batches",
+            "graph runs",
+            "sessions",
+            "mean/batch",
+            "p50",
+            "p95",
+            "wakeups busy",
+            "wakeups idle",
+        ],
+        &[row(&pooled), row(&streaming)],
+    );
+
+    let pm = pooled.samples.mean();
+    let sm = streaming.samples.mean();
+    let overhead = pm.saturating_sub(sm);
+    println!(
+        "\nper-batch overhead of pooled-per-batch replacement over a streaming\n\
+         session: {overhead:.2?} (pooled mean {pm:.2?} vs streaming mean {sm:.2?}).\n\
+         pooled runs one full graph lifecycle per batch ({} runs for {} batches);\n\
+         the streaming server fed every batch into {} long-lived session(s).\n\
+         the trade: pooled isolates per batch, streaming isolates per session\n\
+         (bounded by session_max_timestamps — see rust/src/serving docs).",
+        pooled.graph_runs, pooled.batches, streaming.sessions
+    );
+    if sm >= pm && !smoke {
+        println!(
+            "WARNING: streaming was not faster on this run — expect noise on a \
+             loaded machine; rerun with a larger request count."
+        );
+    }
+    if smoke {
+        println!("smoke mode: completed OK");
+    }
+}

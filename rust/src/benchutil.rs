@@ -1,8 +1,41 @@
 //! Minimal benchmarking support for the `cargo bench` harnesses (the
 //! vendored offline environment has no criterion; these benches print
-//! the same kind of table the paper's evaluation would).
+//! the same kind of table the paper's evaluation would), plus the stub
+//! artifact dir serving benches and integration tests share.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
+
+/// Write a stub detector manifest (batch variants 1 and 4, 8x8 input)
+/// into a unique temp dir and return its path. The runtime's reference
+/// backend needs only this manifest — no compiled HLO files — so the
+/// serving benches and integration tests can run fully offline.
+/// `prefix` keeps concurrent users (test binaries, benches) apart.
+pub fn stub_detector_artifacts(prefix: &str) -> String {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "{prefix}-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("create stub artifact dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "# mp-artifacts v1\n\
+         model detector detector.hlo.txt\n\
+         input image f32 1,8,8,1\n\
+         output boxes f32 16,4\n\
+         output scores f32 16\n\
+         endmodel\n\
+         model detector_b4 detector_b4.hlo.txt\n\
+         input image f32 4,8,8,1\n\
+         output boxes f32 64,4\n\
+         output scores f32 64\n\
+         endmodel\n",
+    )
+    .expect("write stub manifest");
+    dir.to_string_lossy().into_owned()
+}
 
 /// Timed samples with summary statistics.
 pub struct Samples {

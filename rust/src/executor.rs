@@ -46,7 +46,7 @@
 //! heaps and graphs own their nodes; the executor only supplies threads.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -126,12 +126,22 @@ struct PoolState {
     /// Registered work-stealing sources (scheduler queues).
     sources: Vec<SourceEntry>,
     next_source: SourceId,
+    /// Steal-fairness rotation: the source index the next steal scan
+    /// starts from. Advanced once per steal dispatch, so sustained
+    /// equal-priority load is served round-robin across sources instead
+    /// of always favouring the earliest-registered queue.
+    scan_start: usize,
 }
 
 struct PoolInner {
     state: Mutex<PoolState>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// Times a worker woke from the condvar and found nothing to run
+    /// (spurious or raced wakeups). Serving benches use this to compare
+    /// the idle-churn of push-driven streaming vs per-batch graph
+    /// replacement.
+    idle_wakeups: AtomicU64,
 }
 
 /// What a worker decided to do after scanning the pool state.
@@ -151,6 +161,7 @@ impl PoolInner {
     /// `notify_source`.
     fn next_work(&self) -> Work {
         let mut st = self.state.lock().unwrap();
+        let mut woke = false;
         loop {
             // Direct submissions first: they carry no priority and keep
             // the pre-stealing `execute` contract (arrival order).
@@ -158,11 +169,16 @@ impl PoolInner {
                 return Work::Plain(t);
             }
             // Steal the globally highest-priority task across all
-            // registered queues. Ties go to the earliest-registered
-            // source.
+            // registered queues. Ties go to the first source in rotated
+            // scan order: the scan starts at `scan_start`, which advances
+            // once per steal dispatch, so sources with sustained
+            // equal-priority load are served round-robin instead of by
+            // registration order (steal fairness).
+            let n = st.sources.len();
             let mut best: Option<(u32, usize)> = None;
-            for (i, e) in st.sources.iter().enumerate() {
-                if let Some(p) = e.source.top_priority() {
+            for k in 0..n {
+                let i = (st.scan_start + k) % n;
+                if let Some(p) = st.sources[i].source.top_priority() {
                     let better = match best {
                         None => true,
                         Some((bp, _)) => p > bp,
@@ -173,12 +189,19 @@ impl PoolInner {
                 }
             }
             if let Some((_, i)) = best {
+                st.scan_start = st.scan_start.wrapping_add(1);
                 return Work::Steal(Arc::clone(&st.sources[i].source));
             }
             if self.shutdown.load(Ordering::Acquire) {
                 return Work::Exit;
             }
+            if woke {
+                // Woke up and found nothing: the notification raced
+                // another worker (or was spurious).
+                self.idle_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
             st = self.cv.wait(st).unwrap();
+            woke = true;
         }
     }
 }
@@ -212,9 +235,11 @@ impl ThreadPoolExecutor {
                 tasks: VecDeque::new(),
                 sources: Vec::new(),
                 next_source: 0,
+                scan_start: 0,
             }),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            idle_wakeups: AtomicU64::new(0),
         });
         let mut workers = Vec::with_capacity(n);
         for wi in 0..n {
@@ -269,6 +294,13 @@ impl ThreadPoolExecutor {
     /// Registered work-stealing sources (diagnostics).
     pub fn num_sources(&self) -> usize {
         self.inner.state.lock().unwrap().sources.len()
+    }
+
+    /// How many times a worker woke up and found no work to run.
+    /// Monotonic; benches read a before/after delta to quantify the
+    /// idle churn a workload induces on the pool.
+    pub fn idle_wakeups(&self) -> u64 {
+        self.inner.idle_wakeups.load(Ordering::Relaxed)
     }
 
     /// Stop the workers once all pending work drains — both the FIFO of

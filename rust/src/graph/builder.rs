@@ -46,6 +46,14 @@ impl GraphBuilder {
         self
     }
 
+    /// Admission bound for graph-input streams (overrides
+    /// `max_queue_size` at the graph boundary; see
+    /// [`crate::graph::InputHandle`]).
+    pub fn input_queue_size(mut self, n: usize) -> Self {
+        self.config.input_queue_size = Some(n);
+        self
+    }
+
     /// Default executor thread count.
     pub fn num_threads(mut self, n: usize) -> Self {
         self.config.num_threads = Some(n);

@@ -221,6 +221,14 @@ pub struct GraphConfig {
     /// Default max queue size per input stream before back-pressure
     /// engages (§4.1.4); None = unbounded.
     pub max_queue_size: Option<usize>,
+    /// Admission bound for **graph-input** streams specifically: the
+    /// queue limit applied to consumer ports fed directly by a graph
+    /// input, overriding `max_queue_size` for those ports. Push-driven
+    /// producers ([`crate::graph::InputHandle`]) block once this many
+    /// packets are buffered at the first hop, so a long-lived streaming
+    /// graph can bound in-flight work at its boundary while keeping
+    /// internal queues deep. None = graph inputs use `max_queue_size`.
+    pub input_queue_size: Option<usize>,
     /// Default executor thread count (0/None = system capabilities).
     pub num_threads: Option<usize>,
     /// ABLATION ONLY: disable layout priorities (§4.1.1) — every node
@@ -269,6 +277,9 @@ impl GraphConfig {
         }
         if let Some(m) = self.max_queue_size {
             out.push_str(&format!("max_queue_size: {m}\n"));
+        }
+        if let Some(m) = self.input_queue_size {
+            out.push_str(&format!("input_queue_size: {m}\n"));
         }
         if let Some(n) = self.num_threads {
             out.push_str(&format!("num_threads: {n}\n"));
@@ -775,6 +786,7 @@ fn config_from_message(msg: &PbMessage) -> MpResult<GraphConfig> {
                 .input_side_packets
                 .push(StreamBinding::parse(&as_str(v, k)?)),
             "max_queue_size" => c.max_queue_size = Some(as_usize(v, k)?),
+            "input_queue_size" => c.input_queue_size = Some(as_usize(v, k)?),
             "num_threads" => c.num_threads = Some(as_usize(v, k)?),
             "default_executor" => c.default_executor = Some(as_str(v, k)?),
             "scheduler_fifo" => c.scheduler_fifo = matches!(v, PbValue::Bool(true)),
@@ -1048,6 +1060,28 @@ node { calculator: "X" executor: "infer" }
         assert!(!GraphConfig::parse("node { calculator: \"X\" }")
             .unwrap()
             .executor_fifo_drains);
+    }
+
+    #[test]
+    fn input_queue_size_parses_and_roundtrips() {
+        let text = r#"
+input_stream: "in"
+max_queue_size: 64
+input_queue_size: 4
+node { calculator: "X" input_stream: "in" }
+"#;
+        let c = GraphConfig::parse(text).unwrap();
+        assert_eq!(c.max_queue_size, Some(64));
+        assert_eq!(c.input_queue_size, Some(4));
+        let c2 = GraphConfig::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+        // Absent by default.
+        assert_eq!(
+            GraphConfig::parse("node { calculator: \"X\" }")
+                .unwrap()
+                .input_queue_size,
+            None
+        );
     }
 
     #[test]

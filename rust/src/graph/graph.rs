@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -144,9 +144,15 @@ struct GraphCore {
     /// Scheduled-but-not-finished task count (deadlock detection).
     activity: AtomicUsize,
     /// Signalled whenever an input queue drains below its limit
-    /// (blocking graph-input backpressure).
+    /// (blocking graph-input backpressure). Every notifier takes
+    /// `space_mx` around the notify and every waiter re-checks its
+    /// condition under `space_mx`, so the plain (timeout-free) waits in
+    /// [`GraphCore::wait_for_input_space`] are lossless.
     space_mx: Mutex<()>,
     space_cv: Condvar,
+    /// Times a graph-input push blocked on back-pressure (evidence for
+    /// flow-control tests and serving metrics).
+    input_blocks: AtomicU64,
 }
 
 enum Action {
@@ -293,6 +299,10 @@ impl GraphCore {
                                 if let Some(prod) = meta.in_producers[port] {
                                     to_schedule.push(prod);
                                 }
+                                // Notify under space_mx so a concurrent
+                                // graph-input push cannot miss the wakeup
+                                // between its fullness check and its wait.
+                                let _g = self.space_mx.lock().unwrap();
                                 self.space_cv.notify_all();
                             }
                         }
@@ -732,7 +742,10 @@ impl GraphCore {
         for prod in meta.in_producers.iter().flatten() {
             to_schedule.push(*prod);
         }
-        self.space_cv.notify_all();
+        {
+            let _g = self.space_mx.lock().unwrap();
+            self.space_cv.notify_all();
+        }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             let _g = self.done_mx.lock().unwrap();
             self.done_cv.notify_all();
@@ -749,13 +762,175 @@ impl GraphCore {
             }
         }
         self.cancelled.store(true, Ordering::Release);
-        let _g = self.done_mx.lock().unwrap();
-        self.done_cv.notify_all();
-        self.space_cv.notify_all();
+        {
+            let _g = self.done_mx.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+        {
+            // Under space_mx: blocked graph-input pushers must observe
+            // the cancellation (their wait is timeout-free).
+            let _g = self.space_mx.lock().unwrap();
+            self.space_cv.notify_all();
+        }
         // Wake pollers so they observe the failure.
         for obs in &self.observers {
             obs.cv.notify_all();
         }
+    }
+
+    fn current_error(&self) -> MpError {
+        self.error
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| MpError::InvalidState("graph cancelled".into()))
+    }
+
+    // ------------------------------------------------------------------
+    // graph-input path (shared by Graph and InputHandle)
+    // ------------------------------------------------------------------
+
+    /// Is any consumer queue of this graph input at its limit?
+    fn input_full(&self, gi: &GraphInput) -> bool {
+        gi.consumers.iter().any(|&(c, port)| {
+            let cm = &self.metas[c];
+            cm.in_queue_lens[port].load(Ordering::Relaxed)
+                >= cm.in_limits[port].load(Ordering::Relaxed)
+        })
+    }
+
+    /// Block until every consumer queue of `gi` has room, via a plain
+    /// condvar wait — no polling. Lossless because the fullness check
+    /// runs under `space_mx` and every space-freeing (or cancelling)
+    /// path notifies `space_cv` while holding `space_mx`.
+    fn wait_for_input_space(&self, gi: &GraphInput, ts: Timestamp) -> MpResult<()> {
+        if !self.input_full(gi) {
+            return Ok(());
+        }
+        // Flow-control evidence: one Throttled event and one counted
+        // block per blocking episode.
+        self.input_blocks.fetch_add(1, Ordering::Relaxed);
+        self.tracer
+            .record(EventType::Throttled, TraceEvent::NO_NODE, gi.stream_id, ts, 0);
+        let mut g = self.space_mx.lock().unwrap();
+        loop {
+            if self.cancelled.load(Ordering::Acquire) {
+                return Err(self.current_error());
+            }
+            if !self.input_full(gi) {
+                return Ok(());
+            }
+            g = self.space_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Feed one packet into a graph input stream. With `block`, waits
+    /// for consumer-queue space (§4.1.4 back-pressure); without, returns
+    /// `Ok(false)` instead of waiting and leaves the stream untouched.
+    fn push_input(self: &Arc<Self>, stream: &str, packet: Packet, block: bool) -> MpResult<bool> {
+        let gi = self
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        if self.cancelled.load(Ordering::Acquire) {
+            return Err(self.current_error());
+        }
+        let ts = packet.timestamp();
+        if !block && self.input_full(gi) {
+            // Advisory check before the timestamp is consumed, so a
+            // refused push can be retried at the same timestamp.
+            return Ok(false);
+        }
+        // App-side monotonicity check.
+        {
+            let mut b = gi.bound.lock().unwrap();
+            if !ts.is_allowed_in_stream() || b.is_settled(ts) || b.is_done() {
+                return Err(MpError::TimestampViolation {
+                    stream: stream.to_string(),
+                    packet_ts: ts.raw(),
+                    bound: b.0.raw(),
+                });
+            }
+            b.advance_to(TimestampBound::after_packet(ts));
+        }
+        if block {
+            self.wait_for_input_space(gi, ts)?;
+        }
+        self.tracer.record(
+            EventType::GraphInput,
+            TraceEvent::NO_NODE,
+            gi.stream_id,
+            ts,
+            packet.data_id(),
+        );
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            let cm = &self.metas[c];
+            {
+                let mut cst = self.states[c].lock().unwrap();
+                if cst.status == NodeStatus::Closed {
+                    continue;
+                }
+                let seq = cst.arrivals;
+                cst.arrivals += 1;
+                cst.queues[port].push_seq(packet.clone(), seq)?;
+                cm.in_queue_lens[port].store(cst.queues[port].len(), Ordering::Release);
+            }
+            to_schedule.push(c);
+        }
+        for id in to_schedule {
+            self.maybe_schedule(id);
+        }
+        Ok(true)
+    }
+
+    /// Advance a graph input stream's bound without a packet.
+    fn settle_input(self: &Arc<Self>, stream: &str, bound: TimestampBound) -> MpResult<()> {
+        let gi = self
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        gi.bound.lock().unwrap().advance_to(bound);
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            let advanced = {
+                let mut cst = self.states[c].lock().unwrap();
+                cst.queues[port].advance_bound(bound)
+            };
+            if advanced {
+                to_schedule.push(c);
+            }
+        }
+        for id in to_schedule {
+            self.maybe_schedule(id);
+        }
+        Ok(())
+    }
+
+    /// Close one graph input stream.
+    fn close_input(self: &Arc<Self>, stream: &str) -> MpResult<()> {
+        let gi = self
+            .graph_inputs
+            .get(stream)
+            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
+        *gi.bound.lock().unwrap() = TimestampBound::DONE;
+        let mut to_schedule = Vec::new();
+        for &(c, port) in &gi.consumers {
+            {
+                let mut cst = self.states[c].lock().unwrap();
+                cst.queues[port].close();
+            }
+            to_schedule.push(c);
+        }
+        for id in to_schedule {
+            self.maybe_schedule(id);
+        }
+        // If no task got scheduled, run the quiet-graph check directly —
+        // cycle nodes may now be terminable (§3.5 stop condition 2).
+        if self.activity.load(Ordering::Acquire) == 0 {
+            self.relax_if_deadlocked();
+        }
+        Ok(())
     }
 
     /// §4.1.4 + §3.5: the quiet-graph check. Invoked whenever the graph
@@ -933,6 +1108,80 @@ impl OutputStreamPoller {
     }
 }
 
+/// A push-driven **async source** handle for one graph input stream
+/// (ROADMAP "async sources"): external producers — camera threads,
+/// sockets, serving front-ends — feed packets into a running graph
+/// without a source calculator spinning in a scheduler slot.
+///
+/// Compared to [`Graph::add_packet`], a handle:
+///
+/// * is **thread-independent**: it holds the graph core by `Arc`, so any
+///   number of producer threads can hold clones while the owner keeps
+///   `&mut Graph` for lifecycle calls;
+/// * offers **non-blocking admission** ([`InputHandle::try_push`]) next
+///   to the blocking, condvar-waited push — back-pressure comes from the
+///   consumer queue limits (`input_queue_size` / `max_queue_size`),
+///   and a blocked push sleeps on a condvar until space frees or the run
+///   is cancelled, never polling;
+/// * can mark a pushed timestamp as **final**
+///   ([`InputHandle::push_final`]), advancing the stream bound past it
+///   in the same call so downstream nodes with settled-timestamp
+///   policies run immediately instead of waiting for the next packet —
+///   the key to low-latency long-lived streaming
+///   ([`crate::serving::StreamingSession`]).
+///
+/// Timestamps must still be strictly monotonic per stream; concurrent
+/// producers on one stream must order their pushes themselves.
+#[derive(Clone)]
+pub struct InputHandle {
+    core: Arc<GraphCore>,
+    stream: String,
+}
+
+impl InputHandle {
+    /// The graph input stream this handle feeds.
+    pub fn stream(&self) -> &str {
+        &self.stream
+    }
+
+    /// Push one packet, blocking on back-pressure (condvar wait, no
+    /// polling). Errors on timestamp violations or a cancelled run.
+    pub fn push(&self, packet: Packet) -> MpResult<()> {
+        self.core.push_input(&self.stream, packet, true).map(|_| ())
+    }
+
+    /// Push without blocking: returns `Ok(false)` (packet not consumed,
+    /// timestamp not burned) when the consumer queues are full.
+    pub fn try_push(&self, packet: Packet) -> MpResult<bool> {
+        self.core.push_input(&self.stream, packet, false)
+    }
+
+    /// Push one packet and advance the stream bound past its timestamp
+    /// — "no more data at or below this timestamp" — so settled-input
+    /// policies downstream can fire without waiting for the next packet.
+    pub fn push_final(&self, packet: Packet) -> MpResult<()> {
+        let ts = packet.timestamp();
+        self.core.push_input(&self.stream, packet, true)?;
+        self.core
+            .settle_input(&self.stream, TimestampBound::after_packet(ts))
+    }
+
+    /// Advance the stream bound without a packet (footnote 6).
+    pub fn set_bound(&self, bound: TimestampBound) -> MpResult<()> {
+        self.core.settle_input(&self.stream, bound)
+    }
+
+    /// Close the stream: no more packets will ever be pushed.
+    pub fn close(&self) -> MpResult<()> {
+        self.core.close_input(&self.stream)
+    }
+
+    /// Has the underlying run been cancelled (error or explicit)?
+    pub fn is_cancelled(&self) -> bool {
+        self.core.cancelled.load(Ordering::Acquire)
+    }
+}
+
 impl Graph {
     /// Build a graph from a config against the global registries. Each
     /// queue gets the executor its config declares (a private thread
@@ -1026,6 +1275,7 @@ impl Graph {
 
         // Per-node metadata + state.
         let default_limit = plan.max_queue_size.unwrap_or(UNLIMITED);
+        let input_limit = plan.input_queue_size.unwrap_or(default_limit);
         let mut metas = Vec::with_capacity(n);
         let mut states = Vec::with_capacity(n);
         for (ni, pn) in plan.nodes.iter().enumerate() {
@@ -1056,10 +1306,16 @@ impl Graph {
                 .collect();
             // Back-edge input queues must never throttle their producer
             // (the Fig. 3 loopback would self-deadlock): unbounded.
+            // Ports fed directly by a graph input take the admission
+            // bound `input_queue_size` when configured, so push-driven
+            // producers get boundary back-pressure independent of the
+            // internal queue depth.
             let in_limits: Vec<Arc<AtomicUsize>> = (0..nin)
                 .map(|port| {
                     let lim = if pn.in_is_back_edge[port] {
                         UNLIMITED
+                    } else if in_producers[port].is_none() {
+                        input_limit
                     } else {
                         default_limit
                     };
@@ -1193,6 +1449,7 @@ impl Graph {
             activity: AtomicUsize::new(0),
             space_mx: Mutex::new(()),
             space_cv: Condvar::new(),
+            input_blocks: AtomicU64::new(0),
         });
 
         Ok(Graph {
@@ -1420,131 +1677,43 @@ impl Graph {
     }
 
     /// Feed a packet into a graph input stream (§3.5). Blocks while the
-    /// consumers' queues are at their configured limit (back-pressure).
+    /// consumers' queues are at their configured limit (back-pressure);
+    /// the wait is a plain condvar wait, not a poll. For a non-blocking
+    /// or thread-independent producer, see [`Graph::input_handle`].
     pub fn add_packet(&self, stream: &str, packet: Packet) -> MpResult<()> {
-        let core = &self.core;
-        let gi = core
-            .graph_inputs
-            .get(stream)
-            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
-        if core.cancelled.load(Ordering::Acquire) {
-            return Err(self.current_error());
-        }
-        // App-side monotonicity check.
-        {
-            let mut b = gi.bound.lock().unwrap();
-            let ts = packet.timestamp();
-            if !ts.is_allowed_in_stream() || b.is_settled(ts) || b.is_done() {
-                return Err(MpError::TimestampViolation {
-                    stream: stream.to_string(),
-                    packet_ts: ts.raw(),
-                    bound: b.0.raw(),
-                });
-            }
-            b.advance_to(TimestampBound::after_packet(ts));
-        }
-        // Back-pressure: wait for space on all consumer queues.
-        loop {
-            let mut full = false;
-            for &(c, port) in &gi.consumers {
-                let cm = &core.metas[c];
-                if cm.in_queue_lens[port].load(Ordering::Relaxed)
-                    >= cm.in_limits[port].load(Ordering::Relaxed)
-                {
-                    full = true;
-                    break;
-                }
-            }
-            if !full {
-                break;
-            }
-            if core.cancelled.load(Ordering::Acquire) {
-                return Err(self.current_error());
-            }
-            let g = core.space_mx.lock().unwrap();
-            let _ = core
-                .space_cv
-                .wait_timeout(g, Duration::from_millis(10))
-                .unwrap();
-        }
-        core.tracer.record(
-            EventType::GraphInput,
-            TraceEvent::NO_NODE,
-            gi.stream_id,
-            packet.timestamp(),
-            packet.data_id(),
-        );
-        let mut to_schedule = Vec::new();
-        for &(c, port) in &gi.consumers {
-            let cm = &core.metas[c];
-            {
-                let mut cst = core.states[c].lock().unwrap();
-                if cst.status == NodeStatus::Closed {
-                    continue;
-                }
-                let seq = cst.arrivals;
-                cst.arrivals += 1;
-                cst.queues[port].push_seq(packet.clone(), seq)?;
-                cm.in_queue_lens[port].store(cst.queues[port].len(), Ordering::Release);
-            }
-            to_schedule.push(c);
-        }
-        for id in to_schedule {
-            core.maybe_schedule(id);
-        }
-        Ok(())
+        self.core.push_input(stream, packet, true).map(|_| ())
     }
 
     /// Advance the bound of a graph input stream without a packet
     /// (footnote 6).
     pub fn set_input_bound(&self, stream: &str, bound: TimestampBound) -> MpResult<()> {
-        let core = &self.core;
-        let gi = core
-            .graph_inputs
-            .get(stream)
-            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
-        gi.bound.lock().unwrap().advance_to(bound);
-        let mut to_schedule = Vec::new();
-        for &(c, port) in &gi.consumers {
-            let advanced = {
-                let mut cst = core.states[c].lock().unwrap();
-                cst.queues[port].advance_bound(bound)
-            };
-            if advanced {
-                to_schedule.push(c);
-            }
-        }
-        for id in to_schedule {
-            core.maybe_schedule(id);
-        }
-        Ok(())
+        self.core.settle_input(stream, bound)
     }
 
     /// Close one graph input stream.
     pub fn close_input(&self, stream: &str) -> MpResult<()> {
-        let core = &self.core;
-        let gi = core
-            .graph_inputs
-            .get(stream)
-            .ok_or_else(|| MpError::InvalidState(format!("no graph input stream '{stream}'")))?;
-        *gi.bound.lock().unwrap() = TimestampBound::DONE;
-        let mut to_schedule = Vec::new();
-        for &(c, port) in &gi.consumers {
-            {
-                let mut cst = core.states[c].lock().unwrap();
-                cst.queues[port].close();
-            }
-            to_schedule.push(c);
+        self.core.close_input(stream)
+    }
+
+    /// A cloneable, thread-independent producer handle for one graph
+    /// input stream — the push-driven async source API. Must be called
+    /// after the stream name is known to exist (any time; pushes before
+    /// `start_run` deliver into the not-yet-started nodes' queues).
+    pub fn input_handle(&self, stream: &str) -> MpResult<InputHandle> {
+        if !self.core.graph_inputs.contains_key(stream) {
+            return Err(MpError::InvalidState(format!(
+                "no graph input stream '{stream}'"
+            )));
         }
-        for id in to_schedule {
-            core.maybe_schedule(id);
-        }
-        // If no task got scheduled, run the quiet-graph check directly —
-        // cycle nodes may now be terminable (§3.5 stop condition 2).
-        if core.activity.load(Ordering::Acquire) == 0 {
-            core.relax_if_deadlocked();
-        }
-        Ok(())
+        Ok(InputHandle {
+            core: Arc::clone(&self.core),
+            stream: stream.to_string(),
+        })
+    }
+
+    /// How many times a graph-input push has blocked on back-pressure.
+    pub fn input_backpressure_waits(&self) -> u64 {
+        self.core.input_blocks.load(Ordering::Relaxed)
     }
 
     /// Close every graph input stream.
@@ -1559,21 +1728,17 @@ impl Graph {
     /// Abort the run (error-free cancellation).
     pub fn cancel(&self) {
         self.core.cancelled.store(true, Ordering::Release);
-        let _g = self.core.done_mx.lock().unwrap();
-        self.core.done_cv.notify_all();
-        self.core.space_cv.notify_all();
+        {
+            let _g = self.core.done_mx.lock().unwrap();
+            self.core.done_cv.notify_all();
+        }
+        {
+            let _g = self.core.space_mx.lock().unwrap();
+            self.core.space_cv.notify_all();
+        }
         for obs in &self.core.observers {
             obs.cv.notify_all();
         }
-    }
-
-    fn current_error(&self) -> MpError {
-        self.core
-            .error
-            .lock()
-            .unwrap()
-            .clone()
-            .unwrap_or_else(|| MpError::InvalidState("graph cancelled".into()))
     }
 
     /// Wait for the run to finish (§3.5 stop conditions: all calculators

@@ -11,6 +11,6 @@ pub use builder::{GraphBuilder, NodeBuilder};
 pub use config::{
     ExecutorConfig, ExecutorKind, GraphConfig, NodeConfig, ProfilerConfig, StreamBinding,
 };
-pub use graph::{Graph, OutputStreamPoller, Poll, SidePackets};
+pub use graph::{Graph, InputHandle, OutputStreamPoller, Poll, SidePackets};
 pub use subgraph::{expand_subgraphs, SubgraphRegistry};
 pub use validation::{plan, Plan, PlannedNode, PlannedStream, Producer, SideSource};

@@ -99,6 +99,9 @@ pub struct Plan {
     pub fifo_drains: bool,
     /// Per-input-stream queue limit before back-pressure (None = off).
     pub max_queue_size: Option<usize>,
+    /// Admission bound for consumer ports fed directly by graph-input
+    /// streams (overrides `max_queue_size` there; None = no override).
+    pub input_queue_size: Option<usize>,
     /// Names of app-supplied side packets.
     pub input_side_packets: Vec<String>,
 }
@@ -106,6 +109,22 @@ pub struct Plan {
 /// Build and validate the plan. `config` must already have subgraphs
 /// expanded (see [`crate::graph::subgraph`]).
 pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Plan> {
+    // --- graph-level settings ----------------------------------------------
+    if let Some(sz) = config.input_queue_size {
+        if sz == 0 {
+            return Err(MpError::Validation(
+                "input_queue_size must be at least 1 (a zero-capacity input \
+                 queue would block every push forever)"
+                    .into(),
+            ));
+        }
+        if config.input_streams.is_empty() {
+            return Err(MpError::Validation(
+                "input_queue_size is set but the graph declares no input_stream".into(),
+            ));
+        }
+    }
+
     // --- resolve contracts -------------------------------------------------
     let mut contracts = Vec::with_capacity(config.nodes.len());
     for node in &config.nodes {
@@ -507,6 +526,7 @@ pub fn plan(config: &GraphConfig, registry: &CalculatorRegistry) -> MpResult<Pla
         queue_pools,
         fifo_drains: config.executor_fifo_drains,
         max_queue_size: config.max_queue_size,
+        input_queue_size: config.input_queue_size,
         input_side_packets: app_side,
     })
 }
@@ -760,6 +780,48 @@ node { calculator: "Src" output_stream: "x" executor: "infer" }
         )
         .unwrap_err();
         assert!(err.to_string().contains("only valid with type"), "{err}");
+    }
+
+    #[test]
+    fn input_queue_size_flows_into_plan() {
+        let p = parse_plan(
+            r#"
+input_stream: "in"
+max_queue_size: 32
+input_queue_size: 2
+node { calculator: "Pass" input_stream: "in" output_stream: "out" }
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.max_queue_size, Some(32));
+        assert_eq!(p.input_queue_size, Some(2));
+    }
+
+    #[test]
+    fn input_queue_size_zero_is_rejected() {
+        let err = parse_plan(
+            r#"
+input_stream: "in"
+input_queue_size: 0
+node { calculator: "Pass" input_stream: "in" output_stream: "out" }
+"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("input_queue_size"), "{err}");
+    }
+
+    #[test]
+    fn input_queue_size_without_inputs_is_rejected() {
+        let err = parse_plan(
+            r#"
+input_queue_size: 4
+node { calculator: "Src" output_stream: "out" }
+"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no input_stream"), "{err}");
     }
 
     #[test]

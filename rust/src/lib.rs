@@ -66,7 +66,8 @@ pub mod prelude {
     pub use crate::error::{MpError, MpResult};
     pub use crate::executor::{Executor, InlineExecutor, ThreadPoolExecutor};
     pub use crate::graph::{
-        Graph, GraphBuilder, GraphConfig, OutputStreamPoller, Poll, SidePackets, SubgraphRegistry,
+        Graph, GraphBuilder, GraphConfig, InputHandle, OutputStreamPoller, Poll, SidePackets,
+        SubgraphRegistry,
     };
     pub use crate::packet::{Packet, PacketType};
     pub use crate::registry::CalculatorRegistry;

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use mediapipe::prelude::*;
 use mediapipe::runtime::shared_engine;
-use mediapipe::serving::{PipelineServer, ServerConfig};
+use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
 use mediapipe::visualizer;
 
 fn main() {
@@ -220,11 +220,19 @@ fn cmd_serve(args: &[String]) -> i32 {
     let clients: usize = flag_value(args, "--clients")
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
+    // --streaming: long-lived sessions fed successive timestamps instead
+    // of one pooled graph per batch (see rust/src/serving docs).
+    let mode = if args.iter().any(|a| a == "--streaming") {
+        ServingMode::Streaming
+    } else {
+        ServingMode::Pooled
+    };
     let run = || -> MpResult<()> {
         let server = PipelineServer::start(ServerConfig {
             artifact_dir: std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             max_batch,
             max_wait: Duration::from_millis(2),
+            mode,
             ..Default::default()
         })?;
         let t0 = std::time::Instant::now();

@@ -24,6 +24,13 @@
 //!   current top task. The pool runs drains in arrival order, so
 //!   priority only orders tasks within the queue.
 //!
+//! Source calculators occupy a queue slot whenever they are
+//! unthrottled — a *polling* model that burns dispatches even when the
+//! source has nothing to emit. External producers should prefer the
+//! push-driven [`crate::graph::InputHandle`] async-source API: the
+//! graph only schedules work when a packet actually arrives, and idle
+//! streams cost the executor nothing.
+//!
 //! ### Push/shutdown ordering invariant
 //!
 //! `in_flight` counts pushed-but-not-finished tasks. A push increments

@@ -1,20 +1,51 @@
 //! The serving front-end: request intake, dynamic batching, and
-//! execution through **pooled perception graphs**.
+//! execution through real perception graphs — **pooled** (one graph per
+//! batch) or **streaming** (one long-lived graph per session).
 //!
 //! This is the "deploy it as a performant application" half of the
 //! paper's pitch, structured like a model-serving router: callers submit
 //! frames; a batcher thread coalesces requests up to
 //! `max_batch`/`max_wait`; each batch is then driven through a real
 //! MediaPipe graph (preprocess → inference → postprocess calculators,
-//! see [`pipeline`]) checked out of a [`GraphPool`]. All pooled graphs
-//! submit their node tasks to **one shared
-//! [`ThreadPoolExecutor`](crate::executor::ThreadPoolExecutor)**, so
-//! concurrent request processing never multiplies worker threads, and
+//! see [`pipeline`]). All serving graphs submit their node tasks to
+//! **one shared [`ThreadPoolExecutor`](crate::executor::ThreadPoolExecutor)**,
+//! so concurrent request processing never multiplies worker threads, and
 //! every request leaves tracer evidence of its graph run. Python never
 //! appears on this path.
+//!
+//! ## Pooled vs streaming: the isolation/throughput trade-off
+//!
+//! [`ServerConfig::mode`] picks how batches meet graphs:
+//!
+//! * [`ServingMode::Pooled`] — every batch is a complete run of a fresh
+//!   graph checked out of a [`GraphPool`]; used instances are replaced,
+//!   never reused. **Strongest isolation**: no second request can
+//!   observe calculator state, queued packets or tracer events from a
+//!   previous one, because it never touches an object that ran before.
+//!   The price is per-batch overhead: a graph build (off-path, on the
+//!   pool's refill worker) plus `start_run` (Open on every node) plus
+//!   full teardown on the request path.
+//! * [`ServingMode::Streaming`] — batches are fed into one long-lived
+//!   [`StreamingSession`] as successive **timestamps** of a single run,
+//!   through a push-driven [`crate::graph::InputHandle`]; per-timestamp
+//!   results are demultiplexed back to their requests. This is the
+//!   paper's own model (a long-running graph over a timestamped stream)
+//!   and removes the per-batch build/open/teardown entirely — but
+//!   calculator state now *persists across batches* within a session,
+//!   so isolation is per-session, not per-batch. The
+//!   [`ServerConfig::session_max_timestamps`] knob bounds that window:
+//!   the session is recycled (graph drained, pool replacement built)
+//!   after N batches, or immediately on any error — a failed session
+//!   never serves another request. `benches/serving_streaming.rs`
+//!   quantifies both sides of this trade.
+//!
+//! The serving calculators keep no cross-timestamp state, so in this
+//! pipeline the observable results are identical in both modes; the
+//! trade-off is overhead vs blast radius when something does go wrong.
 
 pub mod pipeline;
 pub mod pool;
+pub mod session;
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -32,6 +63,19 @@ use crate::timestamp::Timestamp;
 
 pub use pipeline::{BatchFrames, BatchInfo};
 pub use pool::{GraphPool, PooledGraph};
+pub use session::{SessionStats, SessionTicket, StreamingSession};
+
+/// How batches meet graphs (module docs: isolation/throughput trade).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServingMode {
+    /// One fresh pooled graph per batch; used instances replaced.
+    #[default]
+    Pooled,
+    /// One long-lived graph per [`StreamingSession`]; batches are
+    /// successive timestamps, sessions recycle after
+    /// [`ServerConfig::session_max_timestamps`] batches or on error.
+    Streaming,
+}
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -58,6 +102,15 @@ pub struct ServerConfig {
     /// `executor { type: "shared" pool: "<name>" }` — naming the same
     /// pool share one set of workers.
     pub executor_pool: Option<String>,
+    /// Pooled-per-batch or long-lived streaming sessions (module docs).
+    pub mode: ServingMode,
+    /// Streaming only: recycle a session after this many batches
+    /// (bounds the cross-batch isolation window; 0 = never recycle).
+    pub session_max_timestamps: u64,
+    /// Streaming only: admission bound on the session graph's input
+    /// stream — at most this many batches buffer inside the graph
+    /// before the feeder blocks (`input_queue_size`).
+    pub session_input_queue: usize,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +125,9 @@ impl Default for ServerConfig {
             pool_capacity: 2,
             executor_threads: 0,
             executor_pool: None,
+            mode: ServingMode::Pooled,
+            session_max_timestamps: 256,
+            session_input_queue: 4,
         }
     }
 }
@@ -90,11 +146,19 @@ pub struct ServerMetrics {
     /// Sum of batch sizes (for mean batch size).
     pub batched_requests: Counter,
     pub errors: Counter,
-    /// Completed graph runs (each batch = one run through the pipeline).
+    /// Completed graph runs (pooled: one per batch; streaming: one per
+    /// recycled session).
     pub graph_runs: Counter,
     /// Tracer events recorded across all serving graph runs — direct
     /// evidence requests execute through graphs, not raw engine calls.
     pub trace_events: Counter,
+    /// Streaming sessions started (streaming mode only).
+    pub sessions_started: Counter,
+    /// Sessions retired at their timestamp threshold (vs error).
+    pub session_recycles: Counter,
+    /// Sessions torn down because of an error (failed graph or timed-out
+    /// batch); the next batch gets a fresh session.
+    pub session_errors: Counter,
     pub e2e_latency: LatencyRecorder,
     pub queue_latency: LatencyRecorder,
     /// Time a batch spends inside its graph run (pipeline latency).
@@ -108,13 +172,16 @@ impl ServerMetrics {
         let inf = self.infer_latency.summary();
         let batches = self.batches.get().max(1);
         format!(
-            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
+            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
             self.requests.get(),
             self.batches.get(),
             self.batched_requests.get() as f64 / batches as f64,
             self.errors.get(),
             self.graph_runs.get(),
             self.trace_events.get(),
+            self.sessions_started.get(),
+            self.session_recycles.get(),
+            self.session_errors.get(),
             e2e,
             q,
             inf
@@ -206,8 +273,19 @@ impl PipelineServer {
             Some(name) => crate::executor::ensure_named_pool(name, cfg.executor_threads),
             None => Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads)),
         };
-        let graph_config =
-            pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?;
+        let graph_config = match cfg.mode {
+            ServingMode::Pooled => {
+                pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?
+            }
+            // Streaming sessions bound admission at the graph boundary
+            // so a slow model back-pressures the batcher.
+            ServingMode::Streaming => pipeline::streaming_pipeline_config(
+                cfg.input_size,
+                cfg.min_score,
+                cfg.iou_threshold,
+                cfg.session_input_queue.max(1),
+            )?,
+        };
         let pool = GraphPool::with_executor(
             &graph_config,
             cfg.pool_capacity.max(1),
@@ -312,6 +390,126 @@ fn run_batch(
     Ok(out)
 }
 
+/// Why a streaming session is being retired (metrics attribution).
+enum RetireReason {
+    /// Reached `session_max_timestamps`: planned recycle.
+    Threshold,
+    /// The session errored (graph failure / lost batch): emergency swap.
+    Error,
+    /// The server is shutting down.
+    Shutdown,
+}
+
+/// Drain a streaming session and record its evidence: each retired
+/// session is one completed graph run with tracer events, exactly like a
+/// pooled batch — just amortized over many timestamps. Error retirement
+/// cancels the run first: an erroring session may be *stuck* (that is
+/// how batches time out), and `finish` alone would wait forever for a
+/// graph that never drains.
+fn retire_session(session: StreamingSession, metrics: &ServerMetrics, reason: RetireReason) {
+    if matches!(reason, RetireReason::Error) {
+        session.cancel();
+    }
+    let (_result, stats) = session.finish();
+    metrics.graph_runs.inc();
+    metrics.trace_events.add(stats.trace_events as u64);
+    match reason {
+        RetireReason::Threshold => metrics.session_recycles.inc(),
+        RetireReason::Error => metrics.session_errors.inc(),
+        RetireReason::Shutdown => {}
+    }
+}
+
+/// Make sure `slot` holds a usable session, recycling one that hit its
+/// timestamp threshold (or died) and starting a fresh one on a pooled
+/// graph if needed.
+fn ensure_session(
+    cfg: &ServerConfig,
+    engine: &InferenceEngine,
+    variants: &[usize],
+    pool: &GraphPool,
+    slot: &mut Option<StreamingSession>,
+    metrics: &ServerMetrics,
+) -> MpResult<()> {
+    if slot.as_ref().is_some_and(|s| s.needs_recycle()) {
+        let session = slot.take().expect("checked above");
+        let reason = if session.max_timestamps() > 0
+            && session.timestamps_submitted() >= session.max_timestamps()
+        {
+            RetireReason::Threshold
+        } else {
+            RetireReason::Error // graph died underneath the session
+        };
+        retire_session(session, metrics, reason);
+    }
+    if slot.is_none() {
+        let graph = pool.checkout()?;
+        let mut side = SidePackets::new();
+        side.insert(
+            "engine".into(),
+            Packet::new(engine.clone(), Timestamp::UNSET),
+        );
+        side.insert(
+            "variants".into(),
+            Packet::new(variants.to_vec(), Timestamp::UNSET),
+        );
+        let session = StreamingSession::start(
+            graph,
+            "frames",
+            "detections",
+            side,
+            cfg.session_max_timestamps,
+        )?;
+        metrics.sessions_started.inc();
+        *slot = Some(session);
+    }
+    Ok(())
+}
+
+/// Feed one batch into the live streaming session as its next timestamp
+/// and wait for that timestamp's demuxed result. Any failure tears the
+/// session down (pool replacement); the next batch gets a fresh one.
+fn stream_batch(
+    cfg: &ServerConfig,
+    engine: &InferenceEngine,
+    variants: &[usize],
+    pool: &GraphPool,
+    slot: &mut Option<StreamingSession>,
+    frames: BatchFrames,
+    metrics: &ServerMetrics,
+) -> MpResult<Vec<Detections>> {
+    let rows = frames.len();
+    ensure_session(cfg, engine, variants, pool, slot, metrics)?;
+    let session = slot.as_ref().expect("session ensured");
+    let ticket = match session.submit(Packet::new(frames, Timestamp::UNSET)) {
+        Ok(t) => t,
+        Err(e) => {
+            let session = slot.take().expect("session present");
+            retire_session(session, metrics, RetireReason::Error);
+            return Err(e);
+        }
+    };
+    let result = match ticket.wait(Duration::from_secs(60)) {
+        Ok(pkt) => match pkt.get::<Vec<Detections>>() {
+            Ok(out) if out.len() == rows => Ok(out.clone()),
+            Ok(out) => Err(MpError::Internal(format!(
+                "pipeline returned {} rows for {} requests",
+                out.len(),
+                rows
+            ))),
+            Err(e) => Err(e),
+        },
+        Err(e) => Err(e),
+    };
+    if result.is_err() {
+        // Timed out, died mid-batch, or produced malformed results: a
+        // failed session never serves another request.
+        let session = slot.take().expect("session present");
+        retire_session(session, metrics, RetireReason::Error);
+    }
+    result
+}
+
 fn batcher_main(
     cfg: ServerConfig,
     engine: InferenceEngine,
@@ -320,11 +518,12 @@ fn batcher_main(
     rx: mpsc::Receiver<Job>,
     metrics: Arc<ServerMetrics>,
 ) {
+    let mut session_slot: Option<StreamingSession> = None;
     loop {
         // Block for the first job of a batch.
         let first = match rx.recv() {
             Ok(j) => j,
-            Err(_) => return, // all senders gone
+            Err(_) => break, // all senders gone
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
@@ -350,7 +549,18 @@ fn batcher_main(
             .map(|j| std::mem::take(&mut j.tensor))
             .collect();
         let t0 = Instant::now();
-        let result = run_batch(&pool, &engine, &variants, frames, &metrics);
+        let result = match cfg.mode {
+            ServingMode::Pooled => run_batch(&pool, &engine, &variants, frames, &metrics),
+            ServingMode::Streaming => stream_batch(
+                &cfg,
+                &engine,
+                &variants,
+                &pool,
+                &mut session_slot,
+                frames,
+                &metrics,
+            ),
+        };
         metrics.infer_latency.record(t0.elapsed());
 
         match result {
@@ -368,5 +578,10 @@ fn batcher_main(
                 }
             }
         }
+    }
+    // Server shutdown with a live session: drain it so in-flight work
+    // finishes (or fails cleanly) and its evidence is recorded.
+    if let Some(session) = session_slot.take() {
+        retire_session(session, &metrics, RetireReason::Shutdown);
     }
 }

@@ -266,13 +266,40 @@ pub fn ensure_registered() {
 /// The serving graph: preprocess → inference → postprocess, tracing
 /// enabled so every request leaves tracer evidence of its graph run.
 pub fn pipeline_config(input_size: usize, min_score: f32, iou_threshold: f32) -> MpResult<GraphConfig> {
+    pipeline_config_impl(input_size, min_score, iou_threshold, None)
+}
+
+/// The same pipeline with an **admission bound** on the `frames` input
+/// (`input_queue_size`), for long-lived [`crate::serving::StreamingSession`]s:
+/// at most `input_queue` batches buffer inside the graph before the
+/// feeder's push blocks, so a slow model back-pressures the batcher
+/// instead of queueing unboundedly.
+pub fn streaming_pipeline_config(
+    input_size: usize,
+    min_score: f32,
+    iou_threshold: f32,
+    input_queue: usize,
+) -> MpResult<GraphConfig> {
+    pipeline_config_impl(input_size, min_score, iou_threshold, Some(input_queue))
+}
+
+fn pipeline_config_impl(
+    input_size: usize,
+    min_score: f32,
+    iou_threshold: f32,
+    input_queue: Option<usize>,
+) -> MpResult<GraphConfig> {
+    let input_bound = match input_queue {
+        Some(n) => format!("input_queue_size: {n}\n"),
+        None => String::new(),
+    };
     let text = format!(
         r#"
 input_stream: "frames"
 output_stream: "detections"
 input_side_packet: "engine"
 input_side_packet: "variants"
-profiler {{ enabled: true buffer_size: 8192 }}
+{input_bound}profiler {{ enabled: true buffer_size: 8192 }}
 node {{
   calculator: "ServingPreprocessCalculator"
   input_stream: "FRAMES:frames"
@@ -312,6 +339,17 @@ mod tests {
         // plans cleanly against the global registry
         let g = crate::graph::Graph::new(&cfg).unwrap();
         assert_eq!(g.node_names().len(), 3);
+    }
+
+    #[test]
+    fn streaming_config_bounds_the_input_stream() {
+        ensure_registered();
+        let cfg = streaming_pipeline_config(8, 0.5, 0.4, 3).unwrap();
+        assert_eq!(cfg.input_queue_size, Some(3));
+        let g = crate::graph::Graph::new(&cfg).unwrap();
+        assert_eq!(g.node_names().len(), 3);
+        // The unbounded config stays unbounded.
+        assert_eq!(pipeline_config(8, 0.5, 0.4).unwrap().input_queue_size, None);
     }
 
     #[test]

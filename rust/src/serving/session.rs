@@ -1,0 +1,279 @@
+//! Long-lived **streaming sessions**: one graph instance serving many
+//! successive requests as successive timestamps.
+//!
+//! The pooled serving path ([`crate::serving::GraphPool`]) checks out a
+//! fresh graph per batch — strongest isolation, but every batch pays
+//! graph build, `start_run` (Open on every node) and teardown. The
+//! paper's own model is the opposite: a *long-running* graph consuming a
+//! *stream* of timestamped packets. A [`StreamingSession`] serves that
+//! model:
+//!
+//! * it owns one started [`PooledGraph`] for its whole life;
+//! * each submitted request becomes the next **timestamp** on the
+//!   graph's input stream, pushed through an [`InputHandle`]
+//!   ([`InputHandle::push_final`], so the timestamp settles immediately
+//!   and downstream nodes fire without waiting for the next request);
+//! * results are **demultiplexed by timestamp**: an output-stream
+//!   callback routes each result packet to the [`SessionTicket`] whose
+//!   timestamp it carries, so any number of producer threads can have
+//!   requests in flight concurrently with no cross-request mixing;
+//! * after [`StreamingSession::max_timestamps`] submissions (or on
+//!   error) the owner recycles the session: [`StreamingSession::finish`]
+//!   closes the stream, drains the graph and checks the used instance
+//!   back into its pool, which replaces it with a fresh build — the
+//!   isolation story degrades from per-batch to per-session, bounded by
+//!   the recycle interval.
+//!
+//! Timestamps are allocated (or validated) under one session lock, so
+//! pushes enter the graph strictly monotonically; a stale or duplicate
+//! explicit timestamp is rejected with a clean
+//! [`MpError::TimestampViolation`] before it can poison the stream.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{MpError, MpResult};
+use crate::graph::{InputHandle, SidePackets};
+use crate::packet::Packet;
+use crate::serving::pool::PooledGraph;
+use crate::timestamp::Timestamp;
+
+/// Per-timestamp reply routing: timestamp → the submitter's channel.
+type PendingMap = Mutex<HashMap<i64, mpsc::Sender<MpResult<Packet>>>>;
+
+/// What a finished session did (metrics evidence).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Requests (timestamps) submitted over the session's life.
+    pub timestamps: u64,
+    /// Tracer events the session's graph recorded.
+    pub trace_events: usize,
+}
+
+/// The receipt for one submitted timestamp: wait on it to get exactly
+/// that timestamp's result packet.
+pub struct SessionTicket {
+    ts: Timestamp,
+    rx: mpsc::Receiver<MpResult<Packet>>,
+}
+
+impl SessionTicket {
+    /// The timestamp this request was scheduled at.
+    pub fn timestamp(&self) -> Timestamp {
+        self.ts
+    }
+
+    /// Block until this timestamp's result arrives (or the session
+    /// dies / the timeout elapses). Channel-waited: no polling.
+    pub fn wait(&self, timeout: Duration) -> MpResult<Packet> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(MpError::Runtime(format!(
+                "streaming session: no result for timestamp {} within {timeout:?}",
+                self.ts.raw()
+            ))),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(MpError::Runtime(
+                "streaming session closed before delivering this timestamp's result".into(),
+            )),
+        }
+    }
+}
+
+/// A long-lived graph instance serving successive requests as
+/// successive timestamps (module docs). Shareable across producer
+/// threads (`&self` submission API; `Send + Sync`).
+pub struct StreamingSession {
+    graph: Option<PooledGraph>,
+    input: InputHandle,
+    pending: Arc<PendingMap>,
+    state: Mutex<SessionState>,
+    max_timestamps: u64,
+}
+
+struct SessionState {
+    /// The next auto-assigned timestamp; explicit timestamps below this
+    /// watermark are duplicates/regressions and rejected.
+    next_ts: i64,
+    submitted: u64,
+}
+
+impl StreamingSession {
+    /// Start a session on a pooled graph: register the per-timestamp
+    /// demux on `output_stream`, start the run with `side` packets, and
+    /// open an [`InputHandle`] on `input_stream`. `max_timestamps` is
+    /// the recycle threshold ([`StreamingSession::needs_recycle`]); 0
+    /// means never.
+    pub fn start(
+        mut graph: PooledGraph,
+        input_stream: &str,
+        output_stream: &str,
+        side: SidePackets,
+        max_timestamps: u64,
+    ) -> MpResult<StreamingSession> {
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
+        let demux = Arc::clone(&pending);
+        graph.observe_output(output_stream, move |pkt| {
+            // Route by timestamp; the entry is removed first, so each
+            // ticket resolves at most once even if a graph misbehaves
+            // and emits a timestamp twice.
+            let sender = demux.lock().unwrap().remove(&pkt.timestamp().raw());
+            if let Some(tx) = sender {
+                let _ = tx.send(Ok(pkt.clone()));
+            }
+        })?;
+        graph.start_run(side)?;
+        let input = graph.input_handle(input_stream)?;
+        Ok(StreamingSession {
+            graph: Some(graph),
+            input,
+            pending,
+            state: Mutex::new(SessionState {
+                next_ts: 0,
+                submitted: 0,
+            }),
+            max_timestamps,
+        })
+    }
+
+    /// Submit a request at the next free timestamp. The payload packet's
+    /// own timestamp is ignored; it is re-stamped with the assigned one.
+    pub fn submit(&self, payload: Packet) -> MpResult<SessionTicket> {
+        let mut st = self.state.lock().unwrap();
+        let ts = Timestamp::new(st.next_ts);
+        self.submit_locked(&mut st, ts, payload)
+    }
+
+    /// Submit a request at an explicit timestamp. The timestamp must be
+    /// strictly beyond every previously submitted one: duplicates and
+    /// out-of-order submissions are rejected with a clean
+    /// [`MpError::TimestampViolation`] (the session stays usable).
+    pub fn submit_at(&self, ts: Timestamp, payload: Packet) -> MpResult<SessionTicket> {
+        let mut st = self.state.lock().unwrap();
+        if !ts.is_normal() || ts.raw() < st.next_ts {
+            return Err(MpError::TimestampViolation {
+                stream: self.input.stream().to_string(),
+                packet_ts: ts.raw(),
+                bound: st.next_ts,
+            });
+        }
+        self.submit_locked(&mut st, ts, payload)
+    }
+
+    fn submit_locked(
+        &self,
+        st: &mut SessionState,
+        ts: Timestamp,
+        payload: Packet,
+    ) -> MpResult<SessionTicket> {
+        if self.input.is_cancelled() {
+            return Err(MpError::Runtime(
+                "streaming session: graph run has stopped; recycle the session".into(),
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(ts.raw(), tx);
+        // Push-and-settle while holding the session lock: pushes enter
+        // the stream strictly monotonically even under concurrent
+        // submitters. The demux entry is registered first, so a result
+        // can never arrive before its ticket exists.
+        if let Err(e) = self.input.push_final(payload.at(ts)) {
+            self.pending.lock().unwrap().remove(&ts.raw());
+            return Err(e);
+        }
+        st.next_ts = ts.raw() + 1;
+        st.submitted += 1;
+        Ok(SessionTicket { ts, rx })
+    }
+
+    /// Requests submitted so far.
+    pub fn timestamps_submitted(&self) -> u64 {
+        self.state.lock().unwrap().submitted
+    }
+
+    /// The recycle threshold this session was started with.
+    pub fn max_timestamps(&self) -> u64 {
+        self.max_timestamps
+    }
+
+    /// Should the owner recycle this session (threshold reached or the
+    /// graph run stopped underneath it)?
+    pub fn needs_recycle(&self) -> bool {
+        self.input.is_cancelled()
+            || (self.max_timestamps > 0
+                && self.state.lock().unwrap().submitted >= self.max_timestamps)
+    }
+
+    /// Abort the session's graph run. Pending work is abandoned (their
+    /// tickets fail when the session is finished or dropped). Owners
+    /// retiring a session because it *misbehaved* — timed out, returned
+    /// malformed results — should cancel before [`StreamingSession::finish`]:
+    /// finish alone waits for the run to drain, which a stuck graph
+    /// never does.
+    pub fn cancel(&self) {
+        if let Some(graph) = self.graph.as_ref() {
+            graph.cancel();
+        }
+    }
+
+    /// Gracefully end the session: close the input stream, wait for the
+    /// graph to drain, flush any still-pending tickets with an error,
+    /// and check the used graph back into its pool (replacement build).
+    /// Returns the graph run's result plus session stats (the stats are
+    /// valid either way — a failed run still leaves tracer evidence).
+    pub fn finish(mut self) -> (MpResult<()>, SessionStats) {
+        let mut graph = self.graph.take().expect("graph present until finish/drop");
+        let _ = self.input.close();
+        let result = graph.wait_until_done();
+        let stats = SessionStats {
+            timestamps: self.state.lock().unwrap().submitted,
+            trace_events: graph.tracer().snapshot().len(),
+        };
+        // Flush after the run fully stopped: no demux callback can race
+        // this drain, so every ticket resolves exactly once.
+        Self::flush_pending(&self.pending, &result);
+        drop(graph);
+        (result, stats)
+    }
+
+    fn flush_pending(pending: &PendingMap, result: &MpResult<()>) {
+        let err = match result {
+            Ok(()) => MpError::Runtime(
+                "streaming session ended before delivering this timestamp's result".into(),
+            ),
+            Err(e) => e.clone(),
+        };
+        for (_, tx) in pending.lock().unwrap().drain() {
+            let _ = tx.send(Err(err.clone()));
+        }
+    }
+}
+
+impl Drop for StreamingSession {
+    fn drop(&mut self) {
+        // A session dropped mid-batch (owner error path, test teardown,
+        // server shutdown) must neither hang nor strand waiters: cancel
+        // the run, join it (queue shutdown waits only for in-flight
+        // tasks), then fail every pending ticket.
+        let Some(mut graph) = self.graph.take() else {
+            return;
+        };
+        graph.cancel();
+        let result = graph.wait_until_done();
+        Self::flush_pending(&self.pending, &result);
+        drop(graph); // used check-in: the pool replaces it
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<StreamingSession>();
+        fn assert_send<T: Send>() {}
+        assert_send::<SessionTicket>();
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared scaffolding for the integration tests: graph-config builders,
+//! spin-free drive/wait helpers, and the serving artifact stub. Each
+//! test binary compiles this module independently (`mod common;`), so
+//! unused helpers in any one binary are expected — hence the allow.
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+use mediapipe::prelude::*;
+
+/// A linear chain of `n` PassThrough nodes: `in -> c0 -> ... -> out`.
+pub fn passthrough_chain(n: usize) -> GraphConfig {
+    assert!(n >= 1);
+    let mut text = String::from("input_stream: \"in\"\noutput_stream: \"out\"\n");
+    for i in 0..n {
+        let src = if i == 0 {
+            "in".to_string()
+        } else {
+            format!("c{}", i - 1)
+        };
+        let dst = if i == n - 1 {
+            "out".to_string()
+        } else {
+            format!("c{i}")
+        };
+        text.push_str(&format!(
+            "node {{ calculator: \"PassThroughCalculator\" input_stream: \"{src}\" output_stream: \"{dst}\" }}\n"
+        ));
+    }
+    GraphConfig::parse(&text).unwrap()
+}
+
+/// Feed `values` through a built graph (timestamps 0..n) and return
+/// what comes out of `out`. Channel/condvar-waited throughout — no
+/// sleeps, no spinning.
+pub fn drive(mut g: Graph, values: &[i64]) -> Vec<i64> {
+    let poller = g.poller("out").unwrap();
+    g.start_run(SidePackets::new()).unwrap();
+    for (i, &v) in values.iter().enumerate() {
+        g.add_packet("in", Packet::new(v, Timestamp::new(i as i64)))
+            .unwrap();
+    }
+    g.close_all_inputs().unwrap();
+    let got = drain_poller_i64(&poller);
+    g.wait_until_done().unwrap();
+    got
+}
+
+/// Poll `out` until Done, collecting i64 payloads. Panics on timeout so
+/// a wedged graph fails the test instead of hanging it.
+pub fn drain_poller_i64(poller: &OutputStreamPoller) -> Vec<i64> {
+    let mut got = Vec::new();
+    loop {
+        match poller.poll(Duration::from_secs(10)) {
+            Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
+            Poll::Done => return got,
+            Poll::TimedOut => panic!("poller timed out"),
+        }
+    }
+}
+
+/// Receive from a channel within `timeout`, panicking with `what` on
+/// timeout/disconnect — the bounded-time join primitive for shutdown
+/// tests (no sleeps).
+pub fn recv_within<T>(rx: &std::sync::mpsc::Receiver<T>, timeout: Duration, what: &str) -> T {
+    rx.recv_timeout(timeout)
+        .unwrap_or_else(|e| panic!("{what}: no signal within {timeout:?} ({e:?})"))
+}
+
+/// A unique stub artifact dir (detector manifest only; the reference
+/// backend needs no HLO files). Shared with the serving benches via
+/// [`mediapipe::benchutil::stub_detector_artifacts`].
+pub fn stub_artifact_dir() -> String {
+    mediapipe::benchutil::stub_detector_artifacts("mp-serving-test")
+}
+
+/// A `ServerConfig` against the stub artifacts: 8x8 input, min_score 0
+/// (every anchor kept, so each request provably yields detections).
+pub fn test_server_config(max_batch: usize) -> mediapipe::serving::ServerConfig {
+    mediapipe::serving::ServerConfig {
+        artifact_dir: stub_artifact_dir(),
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        min_score: 0.0,
+        iou_threshold: 0.4,
+        input_size: 8,
+        pool_capacity: 2,
+        executor_threads: 2,
+        executor_pool: None,
+        ..Default::default()
+    }
+}

@@ -9,55 +9,17 @@
 //! changes, so these tests are reference-backend-only.
 #![cfg(not(feature = "xla"))]
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+mod common;
+
 use std::time::Duration;
 
+use common::{stub_artifact_dir, test_server_config};
 use mediapipe::executor::Executor;
 use mediapipe::perception::SyntheticWorld;
 use mediapipe::serving::{PipelineServer, ServerConfig};
 
-/// Write a detector manifest (batch variants 1 and 4, 8x8 input) into a
-/// unique temp dir; the reference backend needs no HLO files.
-fn stub_artifact_dir() -> String {
-    static NEXT: AtomicUsize = AtomicUsize::new(0);
-    let dir = std::env::temp_dir().join(format!(
-        "mp-serving-test-{}-{}",
-        std::process::id(),
-        NEXT.fetch_add(1, Ordering::Relaxed)
-    ));
-    std::fs::create_dir_all(&dir).unwrap();
-    std::fs::write(
-        dir.join("manifest.txt"),
-        "# mp-artifacts v1\n\
-         model detector detector.hlo.txt\n\
-         input image f32 1,8,8,1\n\
-         output boxes f32 16,4\n\
-         output scores f32 16\n\
-         endmodel\n\
-         model detector_b4 detector_b4.hlo.txt\n\
-         input image f32 4,8,8,1\n\
-         output boxes f32 64,4\n\
-         output scores f32 64\n\
-         endmodel\n",
-    )
-    .unwrap();
-    dir.to_string_lossy().into_owned()
-}
-
 fn test_server(max_batch: usize) -> PipelineServer {
-    PipelineServer::start(ServerConfig {
-        artifact_dir: stub_artifact_dir(),
-        max_batch,
-        max_wait: Duration::from_millis(2),
-        // Keep every anchor so each request provably yields detections.
-        min_score: 0.0,
-        iou_threshold: 0.4,
-        input_size: 8,
-        pool_capacity: 2,
-        executor_threads: 2,
-        executor_pool: None,
-    })
-    .unwrap()
+    PipelineServer::start(test_server_config(max_batch)).unwrap()
 }
 
 #[test]
@@ -143,14 +105,9 @@ fn two_servers_naming_one_pool_share_its_workers() {
     let mk = || {
         PipelineServer::start(ServerConfig {
             artifact_dir: stub_artifact_dir(),
-            max_batch: 4,
-            max_wait: Duration::from_millis(2),
-            min_score: 0.0,
-            iou_threshold: 0.4,
-            input_size: 8,
             pool_capacity: 1,
-            executor_threads: 2,
             executor_pool: Some("serving-shared-test".into()),
+            ..test_server_config(4)
         })
         .unwrap()
     };

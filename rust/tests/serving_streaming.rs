@@ -1,0 +1,336 @@
+//! Streaming-session integration: long-lived graphs serving successive
+//! requests as successive timestamps ([`mediapipe::serving::StreamingSession`],
+//! `ServingMode::Streaming`).
+//!
+//! Covers the tentpole's correctness obligations:
+//! * per-timestamp demux under many concurrent producers — every
+//!   request gets exactly its own timestamp's result, never another's;
+//! * clean `TimestampViolation` errors for duplicate/out-of-order
+//!   explicit timestamps, with the session staying usable;
+//! * bounded-time shutdown: a session dropped mid-batch and a server
+//!   dropped with in-flight streaming requests resolve every waiter
+//!   (channel waits only — no sleeps);
+//! * the server-level streaming mode: session reuse across batches,
+//!   recycling at `session_max_timestamps`, metrics/tracer evidence,
+//!   and result parity with the pooled mode.
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use common::{passthrough_chain, recv_within, test_server_config};
+use mediapipe::perception::SyntheticWorld;
+use mediapipe::prelude::*;
+use mediapipe::serving::{GraphPool, PipelineServer, ServerConfig, ServingMode, StreamingSession};
+
+fn passthrough_session(max_timestamps: u64) -> (GraphPool, StreamingSession) {
+    let pool = GraphPool::new(&passthrough_chain(2), 1).unwrap();
+    let session = StreamingSession::start(
+        pool.checkout().unwrap(),
+        "in",
+        "out",
+        SidePackets::new(),
+        max_timestamps,
+    )
+    .unwrap();
+    (pool, session)
+}
+
+#[test]
+fn concurrent_producers_each_get_exactly_their_own_result() {
+    let (_pool, session) = passthrough_session(0);
+    let threads = 8usize;
+    let per = 50usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let session = &session;
+            s.spawn(move || {
+                for i in 0..per {
+                    let payload = (t * 1000 + i) as i64;
+                    let ticket = session
+                        .submit(Packet::new(payload, Timestamp::UNSET))
+                        .unwrap();
+                    let pkt = ticket.wait(Duration::from_secs(30)).unwrap();
+                    assert_eq!(
+                        *pkt.get::<i64>().unwrap(),
+                        payload,
+                        "cross-request leakage: another timestamp's result"
+                    );
+                    assert_eq!(pkt.timestamp(), ticket.timestamp());
+                }
+            });
+        }
+    });
+    assert_eq!(session.timestamps_submitted(), (threads * per) as u64);
+    let (result, stats) = session.finish();
+    result.unwrap();
+    assert_eq!(stats.timestamps, (threads * per) as u64);
+}
+
+#[test]
+fn duplicate_and_stale_timestamps_are_rejected_cleanly() {
+    let (_pool, session) = passthrough_session(0);
+    let t5 = session
+        .submit_at(Timestamp::new(5), Packet::new(55i64, Timestamp::UNSET))
+        .unwrap();
+    assert_eq!(*t5.wait(Duration::from_secs(10)).unwrap().get::<i64>().unwrap(), 55);
+    // Exact duplicate of a used timestamp: clean violation, not a
+    // poisoned graph.
+    let err = session
+        .submit_at(Timestamp::new(5), Packet::new(99i64, Timestamp::UNSET))
+        .unwrap_err();
+    match err {
+        MpError::TimestampViolation { packet_ts, .. } => assert_eq!(packet_ts, 5),
+        other => panic!("expected TimestampViolation, got {other:?}"),
+    }
+    // Out-of-order (below the watermark): same clean rejection.
+    assert!(matches!(
+        session.submit_at(Timestamp::new(3), Packet::new(33i64, Timestamp::UNSET)),
+        Err(MpError::TimestampViolation { .. })
+    ));
+    // The session remains fully usable afterwards.
+    let t6 = session.submit(Packet::new(66i64, Timestamp::UNSET)).unwrap();
+    assert_eq!(t6.timestamp(), Timestamp::new(6));
+    assert_eq!(*t6.wait(Duration::from_secs(10)).unwrap().get::<i64>().unwrap(), 66);
+    session.finish().0.unwrap();
+}
+
+#[test]
+fn interleaved_explicit_timestamps_from_many_threads_never_leak() {
+    // Six producers race explicit timestamps drawn from interleaved
+    // ranges (thread t takes 6i + t). Losing the watermark race yields a
+    // clean TimestampViolation; every accepted submission must resolve
+    // to exactly its own payload at exactly its own timestamp.
+    let (_pool, session) = passthrough_session(0);
+    let accepted = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let threads = 6usize;
+    let per = 40usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let (session, accepted, rejected) = (&session, &accepted, &rejected);
+            s.spawn(move || {
+                for i in 0..per {
+                    let ts = (i * threads + t) as i64;
+                    let payload = (t * 10_000 + i) as i64;
+                    match session.submit_at(Timestamp::new(ts), Packet::new(payload, Timestamp::UNSET)) {
+                        Ok(ticket) => {
+                            assert_eq!(ticket.timestamp().raw(), ts);
+                            let pkt = ticket.wait(Duration::from_secs(30)).unwrap();
+                            assert_eq!(*pkt.get::<i64>().unwrap(), payload, "leakage at ts {ts}");
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(MpError::TimestampViolation { .. }) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(other) => panic!("unexpected error: {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let (a, r) = (accepted.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    assert_eq!(a + r, threads * per, "every submission resolves one way");
+    assert!(a >= 1, "the globally latest timestamp is always accepted");
+    assert_eq!(session.timestamps_submitted(), a as u64);
+    session.finish().0.unwrap();
+}
+
+#[test]
+fn session_dropped_mid_batch_fails_pending_tickets_in_bounded_time() {
+    // A slow pipeline with work in flight: dropping the session must
+    // cancel the run, join it, and fail every pending ticket — quickly,
+    // and provably via channel waits (no sleeps anywhere).
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "BusyWorkCalculator" input_stream: "in" output_stream: "out" options { work_us: 10000 } }
+"#,
+    )
+    .unwrap();
+    let pool = GraphPool::new(&cfg, 1).unwrap();
+    let session = StreamingSession::start(
+        pool.checkout().unwrap(),
+        "in",
+        "out",
+        SidePackets::new(),
+        0,
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..16i64)
+        .map(|i| session.submit(Packet::new(i, Timestamp::UNSET)).unwrap())
+        .collect();
+    // Drop from another thread and demand a bounded-time join.
+    let (tx, rx) = mpsc::channel();
+    let dropper = std::thread::spawn(move || {
+        drop(session);
+        tx.send(()).unwrap();
+    });
+    recv_within(&rx, Duration::from_secs(20), "session drop must not hang");
+    dropper.join().unwrap();
+    // The drop flushed pending tickets, so every wait resolves
+    // immediately — Ok for timestamps that finished before the cancel,
+    // Err for the flushed remainder.
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for ticket in tickets {
+        match ticket.wait(Duration::from_secs(5)) {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(completed + failed, 16);
+    assert!(
+        failed > 0,
+        "16 x 10ms of queued work cannot all have finished before the drop"
+    );
+}
+
+#[test]
+fn server_shutdown_with_inflight_streaming_requests_resolves_every_waiter() {
+    let server = PipelineServer::start(ServerConfig {
+        mode: ServingMode::Streaming,
+        session_max_timestamps: 100,
+        ..test_server_config(4)
+    })
+    .unwrap();
+    let h = server.handle();
+    let mut world = SyntheticWorld::new(8, 8, 1, 11);
+    let receivers: Vec<_> = (0..12)
+        .map(|_| {
+            world.step();
+            h.submit(&world.render())
+        })
+        .collect();
+    drop(h);
+    // Bounded-time shutdown while requests are in flight.
+    let (tx, rx) = mpsc::channel();
+    let joiner = std::thread::spawn(move || {
+        drop(server);
+        tx.send(()).unwrap();
+    });
+    recv_within(&rx, Duration::from_secs(60), "server drop must not hang");
+    joiner.join().unwrap();
+    // No request is left hanging: each receiver yields a reply (Ok or a
+    // clean error) or a disconnect — never a timeout.
+    for rx in receivers {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(_reply) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                panic!("request left hanging after server shutdown")
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_server_reuses_sessions_and_recycles_at_threshold() {
+    let server = PipelineServer::start(ServerConfig {
+        mode: ServingMode::Streaming,
+        session_max_timestamps: 3,
+        ..test_server_config(1)
+    })
+    .unwrap();
+    let h = server.handle();
+    let mut world = SyntheticWorld::new(8, 8, 1, 42);
+    for _ in 0..10 {
+        world.step();
+        let dets = h.detect(&world.render()).expect("request must succeed");
+        assert!(!dets.is_empty(), "min_score 0 keeps detections");
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests.get(), 10);
+    assert_eq!(m.errors.get(), 0);
+    assert_eq!(m.batches.get(), 10, "sequential detects: one batch each");
+    // Threshold 3 over 10 sequential batches: sessions serve batches
+    // {1-3}{4-6}{7-9}{10}, so 4 sessions, 3 of them recycled so far.
+    assert_eq!(m.sessions_started.get(), 4, "sessions amortize across batches");
+    assert_eq!(m.session_recycles.get(), 3);
+    assert_eq!(m.session_errors.get(), 0);
+    assert_eq!(
+        m.graph_runs.get(),
+        3,
+        "each retired session counts as one completed graph run"
+    );
+    assert!(
+        m.trace_events.get() > 0,
+        "retired sessions leave tracer evidence of their graph runs"
+    );
+}
+
+#[test]
+fn streaming_results_match_pooled_results_for_identical_frames() {
+    // The reference backend is deterministic, so identical frames must
+    // yield identical detections in both modes — including *repeated*
+    // frames within one streaming session, proving no calculator state
+    // bleeds across timestamps in this pipeline.
+    let pooled = PipelineServer::start(test_server_config(1)).unwrap();
+    let streaming = PipelineServer::start(ServerConfig {
+        mode: ServingMode::Streaming,
+        session_max_timestamps: 100,
+        ..test_server_config(1)
+    })
+    .unwrap();
+    let mut world = SyntheticWorld::new(8, 8, 1, 99);
+    world.step();
+    let frame = world.render();
+    let reference = pooled.handle().detect(&frame).unwrap();
+    let h = streaming.handle();
+    for round in 0..5 {
+        let got = h.detect(&frame).unwrap();
+        assert_eq!(reference.len(), got.len(), "round {round}");
+        for (a, b) in reference.iter().zip(&got) {
+            assert!((a.score - b.score).abs() < 1e-6);
+            assert!((a.bbox.x - b.bbox.x).abs() < 1e-6);
+            assert!((a.bbox.y - b.bbox.y).abs() < 1e-6);
+        }
+    }
+    let m = streaming.metrics();
+    assert_eq!(m.requests.get(), 5);
+    assert_eq!(m.errors.get(), 0);
+    assert_eq!(
+        m.sessions_started.get(),
+        1,
+        "5 requests under threshold 100 share one session"
+    );
+}
+
+#[test]
+fn concurrent_clients_on_a_streaming_server() {
+    let server = PipelineServer::start(ServerConfig {
+        mode: ServingMode::Streaming,
+        session_max_timestamps: 5,
+        ..test_server_config(4)
+    })
+    .unwrap();
+    let clients = 4usize;
+    let per_client = 8usize;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let h = server.handle();
+            s.spawn(move || {
+                let mut world = SyntheticWorld::new(8, 8, 1, 7 + c as u64);
+                for _ in 0..per_client {
+                    world.step();
+                    let dets = h.detect(&world.render()).expect("request must succeed");
+                    assert!(!dets.is_empty());
+                }
+            });
+        }
+    });
+    let m = server.metrics();
+    assert_eq!(m.requests.get(), (clients * per_client) as u64);
+    assert_eq!(m.errors.get(), 0);
+    assert!(m.sessions_started.get() >= 1);
+    assert!(
+        m.sessions_started.get() < m.batches.get().max(2),
+        "streaming must not build a graph per batch (sessions {} vs batches {})",
+        m.sessions_started.get(),
+        m.batches.get()
+    );
+}

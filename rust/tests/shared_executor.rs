@@ -10,48 +10,21 @@
 //! `COUNTER_LOCK` for its whole body and no test in this binary may
 //! build a graph that owns a private pool outside the lock.
 
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+mod common;
 
+use std::sync::{mpsc, Arc, Mutex};
+
+use common::{drive, passthrough_chain};
 use mediapipe::executor::{
-    ensure_named_pool, process_pool, worker_threads_spawned, Executor, ThreadPoolExecutor,
+    ensure_named_pool, process_pool, worker_threads_spawned, Executor, TaskSource,
+    ThreadPoolExecutor,
 };
 use mediapipe::prelude::*;
 
 static COUNTER_LOCK: Mutex<()> = Mutex::new(());
 
 fn chain_config() -> GraphConfig {
-    GraphConfig::parse(
-        r#"
-input_stream: "in"
-output_stream: "out"
-node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "a" }
-node { calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }
-node { calculator: "PassThroughCalculator" input_stream: "b" output_stream: "out" }
-"#,
-    )
-    .unwrap()
-}
-
-/// Feed `values` through a built graph and return what comes out.
-fn drive(mut g: Graph, values: &[i64]) -> Vec<i64> {
-    let poller = g.poller("out").unwrap();
-    g.start_run(SidePackets::new()).unwrap();
-    for (i, &v) in values.iter().enumerate() {
-        g.add_packet("in", Packet::new(v, Timestamp::new(i as i64)))
-            .unwrap();
-    }
-    g.close_all_inputs().unwrap();
-    let mut got = Vec::new();
-    loop {
-        match poller.poll(Duration::from_secs(10)) {
-            Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
-            Poll::Done => break,
-            Poll::TimedOut => panic!("poller timed out"),
-        }
-    }
-    g.wait_until_done().unwrap();
-    got
+    passthrough_chain(3)
 }
 
 #[test]
@@ -224,6 +197,66 @@ node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "ou
          source (priority 0): {got:?}"
     );
     assert!(got[1..].iter().all(|&c| c == 'A'));
+}
+
+#[test]
+fn equal_priority_sources_are_served_round_robin() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Satellite regression (ROADMAP "steal fairness"): the steal scan
+    // used to break priority ties by registration order, so under
+    // sustained equal-priority load the earliest-registered queue
+    // starved the rest. The scan start index now rotates once per steal
+    // dispatch — with a single worker the service order is exactly
+    // round-robin, deterministically.
+    struct TaggedSource {
+        tag: usize,
+        pending: Mutex<usize>,
+        log: Arc<Mutex<Vec<usize>>>,
+    }
+    impl TaskSource for TaggedSource {
+        fn top_priority(&self) -> Option<u32> {
+            (*self.pending.lock().unwrap() > 0).then_some(5) // all equal
+        }
+        fn run_one(&self) -> bool {
+            {
+                let mut p = self.pending.lock().unwrap();
+                if *p == 0 {
+                    return false;
+                }
+                *p -= 1;
+            }
+            self.log.lock().unwrap().push(self.tag);
+            true
+        }
+    }
+    let pool = ThreadPoolExecutor::new("rr", 1);
+    // Park the single worker so every source fills before any steal.
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    pool.execute(Box::new(move || {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+    }));
+    entered_rx.recv().unwrap();
+    let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    for tag in 0..3usize {
+        pool.register_source(Arc::new(TaggedSource {
+            tag,
+            pending: Mutex::new(3),
+            log: Arc::clone(&log),
+        }) as Arc<dyn TaskSource>)
+            .unwrap();
+    }
+    assert_eq!(pool.num_sources(), 3);
+    gate_tx.send(()).unwrap();
+    pool.shutdown(); // drains every source before the worker exits
+    let got = log.lock().unwrap().clone();
+    assert_eq!(
+        got,
+        vec![0, 1, 2, 0, 1, 2, 0, 1, 2],
+        "equal-priority sources must be served round-robin, not by \
+         registration order"
+    );
 }
 
 #[test]
