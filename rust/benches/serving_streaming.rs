@@ -59,6 +59,9 @@ fn run_mode(mode: ServingMode, label: &'static str, sc: &Scale) -> ModeReport {
         mode,
         session_max_timestamps: 0, // never recycle: pure long-lived cost
         session_input_queue: 4,
+        pipeline_depth: 1, // submit-then-wait: the pre-pipelining baseline
+        batch_timeout: Duration::from_secs(60),
+        graph_override: None,
     })
     .unwrap();
     let h = server.handle();

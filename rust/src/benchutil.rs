@@ -37,6 +37,32 @@ pub fn stub_detector_artifacts(prefix: &str) -> String {
     dir.to_string_lossy().into_owned()
 }
 
+/// Fire `n` synthetic frames at a serving handle **without waiting
+/// between submissions** (the async wave that lets a pipelined batcher
+/// keep its window full), then wait for every reply. Returns the wall
+/// time from first submission to last reply plus the number of error /
+/// missing replies. Shared by the serving benches and pipelining tests.
+pub fn detect_wave(
+    handle: &crate::serving::ServerHandle,
+    world: &mut crate::perception::SyntheticWorld,
+    n: usize,
+) -> (Duration, usize) {
+    let t0 = Instant::now();
+    let mut replies = Vec::with_capacity(n);
+    for _ in 0..n {
+        world.step();
+        replies.push(handle.submit(&world.render()));
+    }
+    let mut errors = 0usize;
+    for rx in replies {
+        match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(_dets)) => {}
+            _ => errors += 1,
+        }
+    }
+    (t0.elapsed(), errors)
+}
+
 /// Timed samples with summary statistics.
 pub struct Samples {
     pub name: String,

@@ -153,6 +153,12 @@ struct GraphCore {
     /// Times a graph-input push blocked on back-pressure (evidence for
     /// flow-control tests and serving metrics).
     input_blocks: AtomicU64,
+    /// Optional callback invoked with the run's error whenever a
+    /// failure is recorded ([`Graph::set_fail_notifier`]): long-lived
+    /// owners fail their in-flight work immediately instead of waiting
+    /// out their own timeouts. May fire more than once under
+    /// concurrent failing tasks — callbacks must be idempotent.
+    on_fail: Mutex<Option<Box<dyn Fn(&MpError) + Send + Sync>>>,
 }
 
 enum Action {
@@ -775,6 +781,12 @@ impl GraphCore {
         // Wake pollers so they observe the failure.
         for obs in &self.observers {
             obs.cv.notify_all();
+        }
+        // Push-notify the owner last, with the winning error: waiters it
+        // resolves must observe the cancelled/error state set above.
+        let hook = self.on_fail.lock().unwrap();
+        if let Some(f) = hook.as_ref() {
+            f(&self.current_error());
         }
     }
 
@@ -1450,6 +1462,7 @@ impl Graph {
             space_mx: Mutex::new(()),
             space_cv: Condvar::new(),
             input_blocks: AtomicU64::new(0),
+            on_fail: Mutex::new(None),
         });
 
         Ok(Graph {
@@ -1492,6 +1505,18 @@ impl Graph {
         Err(MpError::InvalidState(format!(
             "'{stream}' is not a graph output stream"
         )))
+    }
+
+    /// Register a callback invoked with the run's error whenever a
+    /// failure is recorded (on the thread that recorded it, after the
+    /// run is marked cancelled). Long-lived owners — streaming sessions
+    /// keeping many requests in flight — use this to fail in-flight
+    /// work the moment the run dies instead of waiting out their own
+    /// timeouts. Concurrent failing tasks may fire it more than once:
+    /// callbacks must be idempotent, and they must not block. Replaces
+    /// any previously registered callback.
+    pub fn set_fail_notifier(&self, f: impl Fn(&MpError) + Send + Sync + 'static) {
+        *self.core.on_fail.lock().unwrap() = Some(Box::new(f));
     }
 
     /// A blocking poller for a graph output stream.

@@ -6,7 +6,7 @@
 //! mediapipe validate graphs/face_landmark.pbtxt
 //! mediapipe trace /tmp/t.tsv
 //! mediapipe visualize /tmp/t.tsv -o /tmp/t.html
-//! mediapipe serve --requests 1000 --max-batch 8
+//! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4
 //! mediapipe list-calculators
 //! ```
 
@@ -227,12 +227,18 @@ fn cmd_serve(args: &[String]) -> i32 {
     } else {
         ServingMode::Pooled
     };
+    // --pipeline-depth K: streaming batches kept in flight per session
+    // before the batcher waits for the oldest (1 = submit-then-wait).
+    let pipeline_depth: usize = flag_value(args, "--pipeline-depth")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
     let run = || -> MpResult<()> {
         let server = PipelineServer::start(ServerConfig {
             artifact_dir: std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             max_batch,
             max_wait: Duration::from_millis(2),
             mode,
+            pipeline_depth,
             ..Default::default()
         })?;
         let t0 = std::time::Instant::now();

@@ -42,18 +42,64 @@
 //! The serving calculators keep no cross-timestamp state, so in this
 //! pipeline the observable results are identical in both modes; the
 //! trade-off is overhead vs blast radius when something does go wrong.
+//!
+//! ## Pipelined streaming: K timestamps in flight
+//!
+//! The paper's throughput model is that a graph **pipelines**: while one
+//! node processes timestamp `t`, upstream nodes already work on `t+1`,
+//! so steady-state rate is set by the *slowest stage*, not the sum of
+//! stages. A batcher that submits one timestamp and waits for its result
+//! before submitting the next defeats that — preprocess of batch `t+1`
+//! never overlaps inference of batch `t`.
+//! [`ServerConfig::pipeline_depth`] = K restores the overlap:
+//!
+//! * the batcher keeps up to **K submitted-but-unresolved batches** in a
+//!   pending window (a deque of `(jobs, ticket)` pairs); only when the
+//!   window is full does it wait — and then always for the *oldest*
+//!   batch, so completions are **resolved in submission order** and each
+//!   job's reply channel receives exactly its own rows (the session
+//!   demux routes results by timestamp regardless of completion order);
+//! * `session_max_timestamps` counts **submitted** timestamps — once a
+//!   session reaches its threshold the batcher stops feeding it, drains
+//!   the window (every pending ticket resolves), and only then retires
+//!   it, so a planned recycle never abandons in-flight work;
+//! * on an **error**, the failing batch's jobs get that error, the
+//!   session is cancelled and retired, and every *remaining* pending
+//!   batch is failed from the session's flushed tickets. A graph-run
+//!   *failure* fails the whole window **immediately** — the run's fail
+//!   notifier ([`crate::graph::Graph::set_fail_notifier`]) flushes the
+//!   pending tickets with the run's own error the moment it is
+//!   recorded; a *silently stuck* graph (no error, no output) is
+//!   bounded by [`ServerConfig::batch_timeout`] on the window's oldest
+//!   batch. Either way: bounded time, no waiter left hanging;
+//! * K = 1 (the default) degenerates to submit-then-wait: one batch in
+//!   flight, identical results and resolution order to the
+//!   pre-pipelining batcher (the only difference is that the next
+//!   batch may now be *collected* while the in-flight one executes, so
+//!   coalescing under bursty load can differ slightly).
+//!
+//! To also hide `start_run` (Open on every node) at recycle time, the
+//! streaming server keeps one **pre-warmed standby session**: the
+//! [`GraphPool`]'s refill worker pre-opens a replacement session after
+//! every refill pass ([`GraphPool::set_refill_followup`]), so a
+//! threshold recycle swaps sessions in O(1) on the batcher thread
+//! instead of paying checkout + Open inline. `sessions_prewarmed` /
+//! `prewarm_hits` in [`ServerMetrics`] record both sides of that cache.
+//! `benches/serving_pipelined.rs` sweeps K over a deliberately
+//! stage-imbalanced pipeline to show throughput approaching the
+//! slowest-stage bound.
 
 pub mod pipeline;
 pub mod pool;
 pub mod session;
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{MpError, MpResult};
 use crate::executor::{Executor, ThreadPoolExecutor};
-use crate::graph::{Poll, SidePackets};
+use crate::graph::{GraphConfig, Poll, SidePackets};
 use crate::metrics::{Counter, LatencyRecorder, LatencySummary};
 use crate::packet::Packet;
 use crate::perception::types::Detections;
@@ -111,6 +157,26 @@ pub struct ServerConfig {
     /// stream — at most this many batches buffer inside the graph
     /// before the feeder blocks (`input_queue_size`).
     pub session_input_queue: usize,
+    /// Streaming only: batches kept in flight per session before the
+    /// batcher waits for the oldest one (module docs, "Pipelined
+    /// streaming"). 1 = submit-then-wait; values are clamped to ≥ 1.
+    pub pipeline_depth: usize,
+    /// Upper bound on one batch's time inside its graph. A streaming
+    /// batch unresolved this long after submission fails (and retires
+    /// its session); a pooled run's output poll gives up after it.
+    /// Must be > 0 (validated by [`PipelineServer::start`]).
+    pub batch_timeout: Duration,
+    /// Replace the built-in detector pipeline with this graph (tests and
+    /// benches: gated or deliberately stage-imbalanced pipelines). The
+    /// graph must read one batch ([`BatchFrames`]) per timestamp from a
+    /// graph input stream `"frames"` and emit one `Vec<Detections>` row
+    /// set per timestamp on an output stream `"detections"`; the
+    /// `engine` / `variants` side packets are provided only if the
+    /// config declares them. If the override bounds its input queue
+    /// (`input_queue_size`), keep the bound ≥ `pipeline_depth` — a
+    /// smaller bound lets a wedged graph block the batcher inside a
+    /// timeout-free push, defeating `batch_timeout`.
+    pub graph_override: Option<GraphConfig>,
 }
 
 impl Default for ServerConfig {
@@ -128,6 +194,9 @@ impl Default for ServerConfig {
             mode: ServingMode::Pooled,
             session_max_timestamps: 256,
             session_input_queue: 4,
+            pipeline_depth: 1,
+            batch_timeout: Duration::from_secs(60),
+            graph_override: None,
         }
     }
 }
@@ -136,6 +205,98 @@ struct Job {
     tensor: Vec<f32>,
     reply: mpsc::Sender<MpResult<Detections>>,
     enqueued: Instant,
+}
+
+/// What wakes the batcher: client requests and, in streaming mode,
+/// completion pings from the live session's demux (so results are
+/// delivered while the batcher would otherwise sleep waiting for more
+/// requests).
+enum BatcherEvent {
+    Job(Job),
+    /// Some pending timestamp's result landed in its ticket channel.
+    Completed,
+}
+
+/// The batcher's single condvar-waited event intake. Jobs and
+/// completion pings share one queue so the batcher sleeps on one
+/// primitive — no polling, no second channel to select over. Closing
+/// the queue (server drop) stops intake; events already queued still
+/// drain, and events sent after close are discarded (their reply
+/// senders drop, surfacing "server stopped" to the caller).
+struct EventQueue {
+    state: Mutex<EventQueueState>,
+    cv: Condvar,
+}
+
+struct EventQueueState {
+    queue: VecDeque<BatcherEvent>,
+    closed: bool,
+}
+
+/// Outcome of a deadline-bounded receive on the [`EventQueue`].
+enum Recv {
+    Event(BatcherEvent),
+    TimedOut,
+    Closed,
+}
+
+impl EventQueue {
+    fn new() -> Arc<EventQueue> {
+        Arc::new(EventQueue {
+            state: Mutex::new(EventQueueState {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn send(&self, ev: BatcherEvent) {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return;
+        }
+        st.queue.push_back(ev);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Next event; `None` once the queue is closed and drained.
+    fn recv(&self) -> Option<BatcherEvent> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(e) = st.queue.pop_front() {
+                return Some(e);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Next event, waiting at most until `deadline`.
+    fn recv_deadline(&self, deadline: Instant) -> Recv {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(e) = st.queue.pop_front() {
+                return Recv::Event(e);
+            }
+            if st.closed {
+                return Recv::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Recv::TimedOut;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
 }
 
 /// Aggregated server statistics.
@@ -152,16 +313,22 @@ pub struct ServerMetrics {
     /// Tracer events recorded across all serving graph runs — direct
     /// evidence requests execute through graphs, not raw engine calls.
     pub trace_events: Counter,
-    /// Streaming sessions started (streaming mode only).
+    /// Streaming sessions activated (streaming mode only).
     pub sessions_started: Counter,
     /// Sessions retired at their timestamp threshold (vs error).
     pub session_recycles: Counter,
     /// Sessions torn down because of an error (failed graph or timed-out
     /// batch); the next batch gets a fresh session.
     pub session_errors: Counter,
+    /// Standby sessions pre-opened on the pool's refill worker.
+    pub sessions_prewarmed: Counter,
+    /// Session activations served from the pre-warmed standby slot
+    /// (O(1) swap) instead of paying checkout + Open on the batcher.
+    pub prewarm_hits: Counter,
     pub e2e_latency: LatencyRecorder,
     pub queue_latency: LatencyRecorder,
-    /// Time a batch spends inside its graph run (pipeline latency).
+    /// Time a batch spends inside its graph run (pipeline latency; in
+    /// streaming mode, from submission into the session to resolution).
     pub infer_latency: LatencyRecorder,
 }
 
@@ -172,7 +339,7 @@ impl ServerMetrics {
         let inf = self.infer_latency.summary();
         let batches = self.batches.get().max(1);
         format!(
-            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
+            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={} prewarmed={} prewarm_hits={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
             self.requests.get(),
             self.batches.get(),
             self.batched_requests.get() as f64 / batches as f64,
@@ -182,6 +349,8 @@ impl ServerMetrics {
             self.sessions_started.get(),
             self.session_recycles.get(),
             self.session_errors.get(),
+            self.sessions_prewarmed.get(),
+            self.prewarm_hits.get(),
             e2e,
             q,
             inf
@@ -195,7 +364,7 @@ impl ServerMetrics {
 
 /// A running detection server. Cheap to clone handles via [`PipelineServer::handle`].
 pub struct PipelineServer {
-    tx: mpsc::Sender<Job>,
+    events: Arc<EventQueue>,
     metrics: Arc<ServerMetrics>,
     cfg: ServerConfig,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -208,7 +377,7 @@ pub struct PipelineServer {
 /// Cloneable submission handle.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: mpsc::Sender<Job>,
+    events: Arc<EventQueue>,
     input_size: usize,
 }
 
@@ -226,7 +395,9 @@ impl ServerHandle {
             reply,
             enqueued: Instant::now(),
         };
-        let _ = self.tx.send(job); // a dropped server yields RecvError below
+        // A closed (dropped) server discards the job; the reply sender
+        // drops with it and the receiver yields RecvError below.
+        self.events.send(BatcherEvent::Job(job));
         rx
     }
 
@@ -238,11 +409,42 @@ impl ServerHandle {
     }
 }
 
+/// The side packets a serving graph declares, resolved from the shared
+/// engine and compiled batch variants. Only declared names are provided,
+/// so override graphs without an inference stage need none.
+fn serving_side_packets(
+    config: &GraphConfig,
+    engine: &InferenceEngine,
+    variants: &[usize],
+) -> SidePackets {
+    let mut side = SidePackets::new();
+    for sp in &config.input_side_packets {
+        if sp.name == "engine" {
+            side.insert(
+                "engine".into(),
+                Packet::new(engine.clone(), Timestamp::UNSET),
+            );
+        } else if sp.name == "variants" {
+            side.insert(
+                "variants".into(),
+                Packet::new(variants.to_vec(), Timestamp::UNSET),
+            );
+        }
+    }
+    side
+}
+
 impl PipelineServer {
     /// Start the server: load artifacts (shared engine), pre-build the
     /// graph pool on one shared executor, and spawn the batcher thread.
     pub fn start(mut cfg: ServerConfig) -> MpResult<PipelineServer> {
         pipeline::ensure_registered();
+        if cfg.batch_timeout.is_zero() {
+            return Err(MpError::Validation(
+                "ServerConfig::batch_timeout must be > 0".into(),
+            ));
+        }
+        cfg.pipeline_depth = cfg.pipeline_depth.max(1);
         let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
         // Supported batch variants, ascending.
         let mut variants: Vec<usize> = Vec::new();
@@ -273,17 +475,22 @@ impl PipelineServer {
             Some(name) => crate::executor::ensure_named_pool(name, cfg.executor_threads),
             None => Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads)),
         };
-        let graph_config = match cfg.mode {
-            ServingMode::Pooled => {
+        let graph_config = match (&cfg.graph_override, cfg.mode) {
+            (Some(c), _) => c.clone(),
+            (None, ServingMode::Pooled) => {
                 pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?
             }
             // Streaming sessions bound admission at the graph boundary
-            // so a slow model back-pressures the batcher.
-            ServingMode::Streaming => pipeline::streaming_pipeline_config(
+            // so a slow model back-pressures the batcher. The bound is
+            // clamped to at least pipeline_depth: the K-deep window must
+            // always be admittable, otherwise a wedged graph would block
+            // the batcher inside push (a timeout-free condvar wait) and
+            // batch_timeout could never fire.
+            (None, ServingMode::Streaming) => pipeline::streaming_pipeline_config(
                 cfg.input_size,
                 cfg.min_score,
                 cfg.iou_threshold,
-                cfg.session_input_queue.max(1),
+                cfg.session_input_queue.max(cfg.pipeline_depth),
             )?,
         };
         let pool = GraphPool::with_executor(
@@ -295,15 +502,53 @@ impl PipelineServer {
         pool.set_async_refill(true);
 
         let metrics = Arc::new(ServerMetrics::default());
-        let (tx, rx) = mpsc::channel::<Job>();
+        let events = EventQueue::new();
+        // The pre-warmed standby slot: filled by the pool's refill
+        // worker, drained by the batcher on session activation. The
+        // refill hook holds only a Weak reference — a standby session
+        // owns a checked-out graph (which owns the pool internals), so a
+        // strong reference here would be a leak cycle.
+        let standby: StandbySlot = Arc::new(Mutex::new(None));
+        if cfg.mode == ServingMode::Streaming {
+            let slot = Arc::downgrade(&standby);
+            let hook_config = graph_config.clone();
+            let hook_engine = engine.clone();
+            let hook_variants = variants.clone();
+            let hook_metrics = Arc::clone(&metrics);
+            let max_timestamps = cfg.session_max_timestamps;
+            pool.set_refill_followup(move |pool| {
+                let Some(slot) = slot.upgrade() else { return };
+                if slot.lock().unwrap().is_some() {
+                    return;
+                }
+                let Ok(graph) = pool.checkout() else { return };
+                let side = serving_side_packets(&hook_config, &hook_engine, &hook_variants);
+                // Open failures are not retried here; the next inline
+                // activation surfaces them to the failing batch.
+                if let Ok(session) =
+                    StreamingSession::start(graph, "frames", "detections", side, max_timestamps)
+                {
+                    let mut slot = slot.lock().unwrap();
+                    if slot.is_none() {
+                        hook_metrics.sessions_prewarmed.inc();
+                        *slot = Some(session);
+                    }
+                }
+            });
+        }
+
         let m2 = Arc::clone(&metrics);
+        let ev2 = Arc::clone(&events);
+        let standby2 = Arc::clone(&standby);
         let cfg2 = cfg.clone();
         let worker = std::thread::Builder::new()
             .name("mp-serving-batcher".into())
-            .spawn(move || batcher_main(cfg2, engine, variants, pool, rx, m2))
+            .spawn(move || {
+                batcher_main(cfg2, engine, variants, pool, graph_config, ev2, standby2, m2)
+            })
             .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
         Ok(PipelineServer {
-            tx,
+            events,
             metrics,
             cfg,
             worker: Some(worker),
@@ -313,7 +558,7 @@ impl PipelineServer {
 
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
-            tx: self.tx.clone(),
+            events: Arc::clone(&self.events),
             input_size: self.cfg.input_size,
         }
     }
@@ -330,12 +575,21 @@ impl PipelineServer {
 
 impl Drop for PipelineServer {
     fn drop(&mut self) {
-        // Closing the channel stops the batcher after it drains.
-        let (dead_tx, _) = mpsc::channel();
-        self.tx = dead_tx;
+        // Closing the intake stops the batcher after it drains queued
+        // jobs and the in-flight window.
+        self.events.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+/// Reply an error to every job of a batch (counting each as a server
+/// error).
+fn reply_error(jobs: &[Job], e: &MpError, metrics: &ServerMetrics) {
+    for job in jobs {
+        metrics.errors.inc();
+        let _ = job.reply.send(Err(e.clone()));
     }
 }
 
@@ -343,27 +597,21 @@ impl Drop for PipelineServer {
 /// list per request row.
 fn run_batch(
     pool: &GraphPool,
+    graph_config: &GraphConfig,
     engine: &InferenceEngine,
     variants: &[usize],
     frames: BatchFrames,
+    batch_timeout: Duration,
     metrics: &ServerMetrics,
 ) -> MpResult<Vec<Detections>> {
     let rows = frames.len();
     let mut g = pool.checkout()?;
     let poller = g.poller("detections")?;
-    let mut side = SidePackets::new();
-    side.insert(
-        "engine".into(),
-        Packet::new(engine.clone(), Timestamp::UNSET),
-    );
-    side.insert(
-        "variants".into(),
-        Packet::new(variants.to_vec(), Timestamp::UNSET),
-    );
+    let side = serving_side_packets(graph_config, engine, variants);
     g.start_run(side)?;
     g.add_packet("frames", Packet::new(frames, Timestamp::new(0)))?;
     g.close_all_inputs()?;
-    let out = match poller.poll(Duration::from_secs(60)) {
+    let out = match poller.poll(batch_timeout) {
         Poll::Packet(p) => p.get::<Vec<Detections>>()?.clone(),
         Poll::Done => {
             // The run terminated without producing output: surface the
@@ -420,122 +668,314 @@ fn retire_session(session: StreamingSession, metrics: &ServerMetrics, reason: Re
     }
 }
 
-/// Make sure `slot` holds a usable session, recycling one that hit its
-/// timestamp threshold (or died) and starting a fresh one on a pooled
-/// graph if needed.
-fn ensure_session(
-    cfg: &ServerConfig,
-    engine: &InferenceEngine,
-    variants: &[usize],
-    pool: &GraphPool,
-    slot: &mut Option<StreamingSession>,
-    metrics: &ServerMetrics,
-) -> MpResult<()> {
-    if slot.as_ref().is_some_and(|s| s.needs_recycle()) {
-        let session = slot.take().expect("checked above");
-        let reason = if session.max_timestamps() > 0
-            && session.timestamps_submitted() >= session.max_timestamps()
-        {
-            RetireReason::Threshold
-        } else {
-            RetireReason::Error // graph died underneath the session
-        };
-        retire_session(session, metrics, reason);
-    }
-    if slot.is_none() {
-        let graph = pool.checkout()?;
-        let mut side = SidePackets::new();
-        side.insert(
-            "engine".into(),
-            Packet::new(engine.clone(), Timestamp::UNSET),
-        );
-        side.insert(
-            "variants".into(),
-            Packet::new(variants.to_vec(), Timestamp::UNSET),
-        );
-        let session = StreamingSession::start(
-            graph,
-            "frames",
-            "detections",
-            side,
-            cfg.session_max_timestamps,
-        )?;
-        metrics.sessions_started.inc();
-        *slot = Some(session);
-    }
-    Ok(())
+/// The pre-warmed standby slot: filled by the pool's refill worker,
+/// drained by the batcher on session activation.
+type StandbySlot = Arc<Mutex<Option<StreamingSession>>>;
+
+/// One submitted-but-unresolved batch in the streaming window (one
+/// job per row of the submitted frame batch).
+struct PendingBatch {
+    jobs: Vec<Job>,
+    ticket: SessionTicket,
+    submitted_at: Instant,
 }
 
-/// Feed one batch into the live streaming session as its next timestamp
-/// and wait for that timestamp's demuxed result. Any failure tears the
-/// session down (pool replacement); the next batch gets a fresh one.
-fn stream_batch(
-    cfg: &ServerConfig,
-    engine: &InferenceEngine,
-    variants: &[usize],
-    pool: &GraphPool,
-    slot: &mut Option<StreamingSession>,
-    frames: BatchFrames,
-    metrics: &ServerMetrics,
-) -> MpResult<Vec<Detections>> {
-    let rows = frames.len();
-    ensure_session(cfg, engine, variants, pool, slot, metrics)?;
-    let session = slot.as_ref().expect("session ensured");
-    let ticket = match session.submit(Packet::new(frames, Timestamp::UNSET)) {
-        Ok(t) => t,
-        Err(e) => {
-            let session = slot.take().expect("session present");
-            retire_session(session, metrics, RetireReason::Error);
-            return Err(e);
+/// Streaming-mode batcher state: the live session, the K-deep pending
+/// window, and the pre-warmed standby slot (module docs, "Pipelined
+/// streaming").
+struct Streaming<'a> {
+    cfg: &'a ServerConfig,
+    engine: &'a InferenceEngine,
+    variants: &'a [usize],
+    pool: &'a GraphPool,
+    graph_config: &'a GraphConfig,
+    metrics: &'a ServerMetrics,
+    events: &'a Arc<EventQueue>,
+    session: Option<StreamingSession>,
+    pending: VecDeque<PendingBatch>,
+    standby: StandbySlot,
+}
+
+impl Streaming<'_> {
+    /// When the window's oldest batch must have resolved by.
+    fn front_deadline(&self) -> Option<Instant> {
+        self.pending
+            .front()
+            .map(|p| p.submitted_at + self.cfg.batch_timeout)
+    }
+
+    /// Route one resolved batch's rows (or error) to its jobs. `Err`
+    /// means the session must die (timeout, graph error, malformed
+    /// rows); the caller decides how.
+    fn deliver(&self, batch: PendingBatch, result: MpResult<Packet>) -> MpResult<()> {
+        self.metrics
+            .infer_latency
+            .record(batch.submitted_at.elapsed());
+        let rows = batch.jobs.len();
+        let outcome = result.and_then(|pkt| {
+            let out = pkt.get::<Vec<Detections>>()?;
+            if out.len() == rows {
+                Ok(out.clone())
+            } else {
+                Err(MpError::Internal(format!(
+                    "pipeline returned {} rows for {} requests",
+                    out.len(),
+                    rows
+                )))
+            }
+        });
+        match outcome {
+            Ok(rows) => {
+                for (dets, job) in rows.into_iter().zip(&batch.jobs) {
+                    self.metrics.requests.inc();
+                    self.metrics.e2e_latency.record(job.enqueued.elapsed());
+                    let _ = job.reply.send(Ok(dets));
+                }
+                Ok(())
+            }
+            Err(e) => {
+                reply_error(&batch.jobs, &e, self.metrics);
+                Err(e)
+            }
         }
-    };
-    let result = match ticket.wait(Duration::from_secs(60)) {
-        Ok(pkt) => match pkt.get::<Vec<Detections>>() {
-            Ok(out) if out.len() == rows => Ok(out.clone()),
-            Ok(out) => Err(MpError::Internal(format!(
-                "pipeline returned {} rows for {} requests",
-                out.len(),
-                rows
-            ))),
-            Err(e) => Err(e),
-        },
-        Err(e) => Err(e),
-    };
-    if result.is_err() {
-        // Timed out, died mid-batch, or produced malformed results: a
-        // failed session never serves another request.
-        let session = slot.take().expect("session present");
-        retire_session(session, metrics, RetireReason::Error);
     }
-    result
+
+    /// Pop and deliver the window's oldest batch; an error result
+    /// retires the session and fails the remaining window.
+    fn resolve_front_with(&mut self, result: MpResult<Packet>) {
+        let batch = self.pending.pop_front().expect("front present");
+        if self.deliver(batch, result).is_err() {
+            self.fail_session();
+        }
+    }
+
+    /// Resolve fronts whose results already arrived (completion ping).
+    /// Strictly in submission order: a ready result behind an unready
+    /// front stays buffered in its ticket until the front resolves.
+    fn resolve_ready(&mut self) {
+        loop {
+            let result = match self.pending.front() {
+                Some(front) => match front.ticket.try_wait() {
+                    Some(r) => r,
+                    None => return,
+                },
+                None => return,
+            };
+            self.resolve_front_with(result);
+        }
+    }
+
+    /// Block until the window's oldest batch resolves — or fail it (and
+    /// the session) once `batch_timeout` after its submission elapses.
+    fn resolve_front_blocking(&mut self) {
+        let result = match self.pending.front() {
+            Some(front) => {
+                let deadline = front.submitted_at + self.cfg.batch_timeout;
+                front
+                    .ticket
+                    .wait(deadline.saturating_duration_since(Instant::now()))
+            }
+            None => return,
+        };
+        self.resolve_front_with(result);
+    }
+
+    /// The session misbehaved: retire it (cancel + drain + pool
+    /// replacement), then fail the whole remaining window. Retirement
+    /// flushes unresolved tickets first, so every pending wait below
+    /// resolves immediately — Ok for results that landed before the
+    /// failure, the session's flushed error otherwise.
+    fn fail_session(&mut self) {
+        if let Some(session) = self.session.take() {
+            retire_session(session, self.metrics, RetireReason::Error);
+        }
+        while let Some(batch) = self.pending.pop_front() {
+            let result = batch.ticket.wait(self.cfg.batch_timeout);
+            let _ = self.deliver(batch, result);
+        }
+    }
+
+    /// Drain the whole window in submission order, then retire the live
+    /// session (threshold recycles, server shutdown). A front erroring
+    /// mid-drain switches to the error path: the session retires as
+    /// [`RetireReason::Error`] and the rest of the window is failed.
+    fn drain_and_retire(&mut self, reason: RetireReason) {
+        while !self.pending.is_empty() {
+            self.resolve_front_blocking();
+        }
+        if let Some(session) = self.session.take() {
+            retire_session(session, self.metrics, reason);
+        }
+    }
+
+    /// Make sure a live session exists: swap in the pre-warmed standby
+    /// when available (O(1), `prewarm_hits`), otherwise pay checkout +
+    /// Open inline. A session that died underneath us is retired first.
+    fn ensure_session(&mut self) -> MpResult<()> {
+        if self.session.as_ref().is_some_and(|s| s.needs_recycle()) {
+            let threshold = self
+                .session
+                .as_ref()
+                .is_some_and(|s| s.at_submission_threshold());
+            if threshold {
+                // Normally recycled eagerly right after the threshold
+                // submission; kept for robustness.
+                self.drain_and_retire(RetireReason::Threshold);
+            } else {
+                // The graph run stopped underneath the session.
+                self.fail_session();
+            }
+        }
+        if self.session.is_none() {
+            let standby = self.standby.lock().unwrap().take();
+            let session = match standby {
+                Some(s) => {
+                    self.metrics.prewarm_hits.inc();
+                    // Re-arm the standby slot for the next recycle.
+                    self.pool.kick_refill();
+                    s
+                }
+                None => {
+                    let graph = self.pool.checkout()?;
+                    let side =
+                        serving_side_packets(self.graph_config, self.engine, self.variants);
+                    StreamingSession::start(
+                        graph,
+                        "frames",
+                        "detections",
+                        side,
+                        self.cfg.session_max_timestamps,
+                    )?
+                }
+            };
+            let events = Arc::clone(self.events);
+            session.set_result_notifier(move || events.send(BatcherEvent::Completed));
+            self.metrics.sessions_started.inc();
+            self.session = Some(session);
+        }
+        Ok(())
+    }
+
+    /// Feed one formed batch into the window as the live session's next
+    /// timestamp. When the window already holds `pipeline_depth`
+    /// batches, the oldest resolves first (submission order); when the
+    /// session reaches its timestamp threshold, the window drains and
+    /// the session retires eagerly, so the swap happens off the next
+    /// batch's critical path.
+    fn submit(&mut self, mut jobs: Vec<Job>) {
+        let frames: BatchFrames = jobs
+            .iter_mut()
+            .map(|j| std::mem::take(&mut j.tensor))
+            .collect();
+        // Make room first: an erroring front retires the old session
+        // before this batch binds to any session.
+        while self.pending.len() >= self.cfg.pipeline_depth {
+            self.resolve_front_blocking();
+        }
+        if let Err(e) = self.ensure_session() {
+            reply_error(&jobs, &e, self.metrics);
+            return;
+        }
+        let session = self.session.as_ref().expect("session ensured");
+        match session.submit(Packet::new(frames, Timestamp::UNSET)) {
+            Ok(ticket) => self.pending.push_back(PendingBatch {
+                jobs,
+                ticket,
+                submitted_at: Instant::now(),
+            }),
+            Err(e) => {
+                // The run stopped between activation and push: fail this
+                // batch and the window; the next batch gets a fresh
+                // session.
+                reply_error(&jobs, &e, self.metrics);
+                self.fail_session();
+                return;
+            }
+        }
+        // Eager threshold recycle only — a session that merely died
+        // underneath us is handled by the error path with the right
+        // metrics attribution when its front fails.
+        let at_threshold = self
+            .session
+            .as_ref()
+            .is_some_and(|s| s.at_submission_threshold());
+        if at_threshold {
+            self.drain_and_retire(RetireReason::Threshold);
+        }
+    }
+
+    /// Server shutdown: drain the window so every in-flight request
+    /// resolves, retire the live session, and drop the standby (it never
+    /// served traffic — no run evidence to record).
+    fn shutdown(&mut self) {
+        self.drain_and_retire(RetireReason::Shutdown);
+        self.standby.lock().unwrap().take();
+    }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batcher_main(
     cfg: ServerConfig,
     engine: InferenceEngine,
     variants: Vec<usize>,
     pool: GraphPool,
-    rx: mpsc::Receiver<Job>,
+    graph_config: GraphConfig,
+    events: Arc<EventQueue>,
+    standby: StandbySlot,
     metrics: Arc<ServerMetrics>,
 ) {
-    let mut session_slot: Option<StreamingSession> = None;
+    let mut streaming = Streaming {
+        cfg: &cfg,
+        engine: &engine,
+        variants: &variants,
+        pool: &pool,
+        graph_config: &graph_config,
+        metrics: &metrics,
+        events: &events,
+        session: None,
+        pending: VecDeque::new(),
+        standby,
+    };
     loop {
-        // Block for the first job of a batch.
-        let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => break, // all senders gone
+        // First job of the next batch: sleep on the event intake,
+        // resolving streaming completions as they land and failing the
+        // window's oldest batch if it outlives batch_timeout.
+        let first = 'next_job: loop {
+            let ev = match streaming.front_deadline() {
+                None => match events.recv() {
+                    Some(e) => e,
+                    None => {
+                        streaming.shutdown();
+                        return;
+                    }
+                },
+                Some(deadline) => match events.recv_deadline(deadline) {
+                    Recv::Event(e) => e,
+                    Recv::TimedOut => {
+                        // The front is overdue: its ticket.wait(0) below
+                        // yields either a just-landed result or the
+                        // timeout error that retires the session.
+                        streaming.resolve_front_blocking();
+                        continue 'next_job;
+                    }
+                    Recv::Closed => {
+                        streaming.shutdown();
+                        return;
+                    }
+                },
+            };
+            match ev {
+                BatcherEvent::Job(j) => break 'next_job j,
+                BatcherEvent::Completed => streaming.resolve_ready(),
+            }
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => batch.push(j),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            match events.recv_deadline(deadline) {
+                Recv::Event(BatcherEvent::Job(j)) => batch.push(j),
+                Recv::Event(BatcherEvent::Completed) => streaming.resolve_ready(),
+                Recv::TimedOut | Recv::Closed => break,
             }
         }
         metrics.batches.inc();
@@ -544,44 +984,35 @@ fn batcher_main(
             metrics.queue_latency.record(j.enqueued.elapsed());
         }
 
-        let frames: BatchFrames = batch
-            .iter_mut()
-            .map(|j| std::mem::take(&mut j.tensor))
-            .collect();
-        let t0 = Instant::now();
-        let result = match cfg.mode {
-            ServingMode::Pooled => run_batch(&pool, &engine, &variants, frames, &metrics),
-            ServingMode::Streaming => stream_batch(
-                &cfg,
-                &engine,
-                &variants,
-                &pool,
-                &mut session_slot,
-                frames,
-                &metrics,
-            ),
-        };
-        metrics.infer_latency.record(t0.elapsed());
-
-        match result {
-            Ok(per_request) => {
-                for (dets, job) in per_request.into_iter().zip(&batch) {
-                    metrics.requests.inc();
-                    metrics.e2e_latency.record(job.enqueued.elapsed());
-                    let _ = job.reply.send(Ok(dets));
+        match cfg.mode {
+            ServingMode::Pooled => {
+                let frames: BatchFrames = batch
+                    .iter_mut()
+                    .map(|j| std::mem::take(&mut j.tensor))
+                    .collect();
+                let t0 = Instant::now();
+                let result = run_batch(
+                    &pool,
+                    &graph_config,
+                    &engine,
+                    &variants,
+                    frames,
+                    cfg.batch_timeout,
+                    &metrics,
+                );
+                metrics.infer_latency.record(t0.elapsed());
+                match result {
+                    Ok(per_request) => {
+                        for (dets, job) in per_request.into_iter().zip(&batch) {
+                            metrics.requests.inc();
+                            metrics.e2e_latency.record(job.enqueued.elapsed());
+                            let _ = job.reply.send(Ok(dets));
+                        }
+                    }
+                    Err(e) => reply_error(&batch, &e, &metrics),
                 }
             }
-            Err(e) => {
-                for job in &batch {
-                    metrics.errors.inc();
-                    let _ = job.reply.send(Err(e.clone()));
-                }
-            }
+            ServingMode::Streaming => streaming.submit(batch),
         }
-    }
-    // Server shutdown with a live session: drain it so in-flight work
-    // finishes (or fails cleanly) and its evidence is recorded.
-    if let Some(session) = session_slot.take() {
-        retire_session(session, &metrics, RetireReason::Shutdown);
     }
 }

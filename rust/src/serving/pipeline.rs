@@ -207,6 +207,73 @@ impl Calculator for ServingPostprocess {
     }
 }
 
+/// Turns a [`BatchFrames`] batch directly into one [`Detections`] row
+/// per request, no model involved: each row yields a single detection
+/// whose **score is the row's leading element**, so payloads round-trip
+/// exactly and cross-request mixing is detectable. A **negative**
+/// leading element fails the calculator — the deterministic poison hook
+/// for error-path tests. Used by `benches/serving_pipelined.rs` and the
+/// pipelining integration tests via
+/// [`crate::serving::ServerConfig::graph_override`]; never part of the
+/// real detector pipeline.
+pub struct ServingEcho;
+
+impl Calculator for ServingEcho {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let frames = p.get::<BatchFrames>()?;
+        let mut per_row: Vec<Detections> = Vec::with_capacity(frames.len());
+        for (i, f) in frames.iter().enumerate() {
+            let lead = f.first().copied().unwrap_or(0.0);
+            if lead < 0.0 {
+                return Err(MpError::Runtime(format!(
+                    "poisoned frame in row {i} (leading element {lead})"
+                )));
+            }
+            per_row.push(vec![Detection::new(
+                Rect::new(0.25, 0.25, 0.5, 0.5),
+                lead,
+                0,
+            )]);
+        }
+        ctx.output_now(0, per_row);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// A deliberately **stage-imbalanced** serving graph for pipelining
+/// benches/tests: `frames` flows through one `BusyWorkCalculator` per
+/// entry of `stage_work_us` (each burning that much CPU per batch), then
+/// [`ServingEcho`] decodes rows. With K timestamps in flight the graph
+/// pipelines — stage `i` works on batch `t+1` while stage `i+1` works on
+/// `t` — so steady-state throughput approaches the *slowest* stage's
+/// rate instead of the sum of stages. No side packets, no model.
+pub fn staged_pipeline_config(
+    stage_work_us: &[u64],
+    input_queue: Option<usize>,
+) -> MpResult<GraphConfig> {
+    let mut text = String::from("input_stream: \"frames\"\noutput_stream: \"detections\"\n");
+    if let Some(n) = input_queue {
+        text.push_str(&format!("input_queue_size: {n}\n"));
+    }
+    text.push_str("profiler { enabled: true buffer_size: 8192 }\n");
+    let mut src = "frames".to_string();
+    for (i, us) in stage_work_us.iter().enumerate() {
+        let dst = format!("stage{i}");
+        text.push_str(&format!(
+            "node {{ calculator: \"BusyWorkCalculator\" input_stream: \"{src}\" output_stream: \"{dst}\" options {{ work_us: {us} }} }}\n"
+        ));
+        src = dst;
+    }
+    text.push_str(&format!(
+        "node {{ calculator: \"ServingEchoCalculator\" input_stream: \"FRAMES:{src}\" output_stream: \"DETS:detections\" }}\n"
+    ));
+    GraphConfig::parse(&text)
+}
+
 /// Register the serving calculators in `r`.
 pub fn register(r: &CalculatorRegistry) {
     r.register_fn(
@@ -236,6 +303,16 @@ pub fn register(r: &CalculatorRegistry) {
                 .with_timestamp_offset(0))
         },
         |_| Ok(Box::new(ServingInference { engine: None })),
+    );
+    r.register_fn(
+        "ServingEchoCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAMES", PacketType::of::<BatchFrames>())
+                .output("DETS", PacketType::of::<Vec<Detections>>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(ServingEcho)),
     );
     r.register_fn(
         "ServingPostprocessCalculator",
@@ -350,6 +427,55 @@ mod tests {
         assert_eq!(g.node_names().len(), 3);
         // The unbounded config stays unbounded.
         assert_eq!(pipeline_config(8, 0.5, 0.4).unwrap().input_queue_size, None);
+    }
+
+    #[test]
+    fn staged_config_parses_and_plans() {
+        ensure_registered();
+        let cfg = staged_pipeline_config(&[50, 200, 50], Some(8)).unwrap();
+        assert_eq!(cfg.nodes.len(), 4, "three busy stages + echo");
+        assert_eq!(cfg.input_queue_size, Some(8));
+        let g = crate::graph::Graph::new(&cfg).unwrap();
+        assert_eq!(g.node_names().len(), 4);
+        // No stages degenerates to the echo alone, unbounded.
+        let bare = staged_pipeline_config(&[], None).unwrap();
+        assert_eq!(bare.nodes.len(), 1);
+        assert_eq!(bare.input_queue_size, None);
+    }
+
+    #[test]
+    fn echo_round_trips_payloads_and_rejects_poison() {
+        ensure_registered();
+        let cfg = staged_pipeline_config(&[], None).unwrap();
+        let mut g = crate::graph::Graph::new(&cfg).unwrap();
+        let poller = g.poller("detections").unwrap();
+        g.start_run(crate::graph::SidePackets::new()).unwrap();
+        let frames: BatchFrames = vec![vec![0.25; 4], vec![0.75; 4]];
+        g.add_packet(
+            "frames",
+            crate::packet::Packet::new(frames, crate::timestamp::Timestamp::new(0)),
+        )
+        .unwrap();
+        g.close_all_inputs().unwrap();
+        let out = match poller.poll(std::time::Duration::from_secs(10)) {
+            crate::graph::Poll::Packet(p) => p.get::<Vec<Detections>>().unwrap().clone(),
+            other => panic!("expected echo output, got {other:?}"),
+        };
+        g.wait_until_done().unwrap();
+        assert_eq!(out.len(), 2, "one detections row per request");
+        assert!((out[0][0].score - 0.25).abs() < 1e-6);
+        assert!((out[1][0].score - 0.75).abs() < 1e-6);
+        // A negative leading element is the poison hook: the run fails.
+        let mut g = crate::graph::Graph::new(&cfg).unwrap();
+        g.start_run(crate::graph::SidePackets::new()).unwrap();
+        let poisoned: BatchFrames = vec![vec![-1.0; 4]];
+        g.add_packet(
+            "frames",
+            crate::packet::Packet::new(poisoned, crate::timestamp::Timestamp::new(0)),
+        )
+        .unwrap();
+        g.close_all_inputs().unwrap();
+        assert!(g.wait_until_done().is_err(), "poisoned batch fails the run");
     }
 
     #[test]

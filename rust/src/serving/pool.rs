@@ -43,6 +43,9 @@ pub fn refill_workers_spawned() -> usize {
     REFILL_WORKERS_SPAWNED.load(Ordering::Acquire)
 }
 
+/// Post-refill hook run on the refill worker ([`GraphPool::set_refill_followup`]).
+type RefillFollowup = Arc<dyn Fn(&GraphPool) + Send + Sync>;
+
 struct PoolShared {
     config: GraphConfig,
     executor: Option<Arc<dyn Executor>>,
@@ -59,6 +62,11 @@ struct PoolShared {
     /// capacity, then drains the channel), so N check-ins cost one
     /// wakeup, not N threads.
     refill_tx: Mutex<Option<mpsc::Sender<()>>>,
+    /// Hook the refill worker runs after each rebuild pass — the serving
+    /// layer pre-opens standby streaming sessions here, so `start_run`
+    /// (Open on every node) never sits on the batcher thread. Must hold
+    /// no strong reference back to anything owning this pool (cycle).
+    followup: Mutex<Option<RefillFollowup>>,
 }
 
 impl PoolShared {
@@ -130,6 +138,14 @@ impl PoolShared {
                     while receiver.try_recv().is_ok() {}
                     let Some(shared) = weak.upgrade() else { return };
                     shared.refill_to_capacity();
+                    // Clone the hook out so it runs without the
+                    // registration lock (it may check graphs out).
+                    let hook = shared.followup.lock().unwrap().clone();
+                    if let Some(hook) = hook {
+                        hook(&GraphPool {
+                            shared: Arc::clone(&shared),
+                        });
+                    }
                 }
             });
         if spawned.is_ok() {
@@ -176,6 +192,7 @@ impl GraphPool {
             built: AtomicUsize::new(0),
             async_refill: AtomicBool::new(false),
             refill_tx: Mutex::new(None),
+            followup: Mutex::new(None),
         });
         {
             let mut ready = shared.ready.lock().unwrap();
@@ -226,6 +243,31 @@ impl GraphPool {
         self.shared.async_refill.store(on, Ordering::Release);
         if on {
             PoolShared::ensure_refill_worker(&self.shared);
+        }
+    }
+
+    /// Run `hook` on the **refill worker** after every rebuild pass (and
+    /// once right away): the serving layer uses this to keep a fully
+    /// opened standby streaming session warm off the request path. The
+    /// hook receives a pool handle so it can check instances out; it
+    /// must not capture anything that (transitively) owns this pool —
+    /// checked-out [`PooledGraph`]s it stores elsewhere are fine, a
+    /// strong reference to that storage inside the hook would leak the
+    /// pool. Registering replaces any previous hook and spawns the
+    /// worker if needed; if the worker cannot be spawned (resource
+    /// exhaustion) the hook simply never runs.
+    pub fn set_refill_followup(&self, hook: impl Fn(&GraphPool) + Send + Sync + 'static) {
+        *self.shared.followup.lock().unwrap() = Some(Arc::new(hook));
+        PoolShared::ensure_refill_worker(&self.shared);
+        self.kick_refill();
+    }
+
+    /// Wake the refill worker for one pass (rebuild to capacity + run
+    /// the follow-up hook). No-op when no worker is running.
+    pub fn kick_refill(&self) {
+        let tx = self.shared.refill_tx.lock().unwrap();
+        if let Some(tx) = tx.as_ref() {
+            let _ = tx.send(());
         }
     }
 }
@@ -396,6 +438,39 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         );
         // 1 prebuild + >=1 replacement happened through the worker.
         assert!(pool.graphs_built() >= 2);
+    }
+
+    #[test]
+    fn refill_followup_runs_on_the_worker() {
+        let pool = GraphPool::new(&chain_config(), 1).unwrap();
+        pool.set_async_refill(true);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hits);
+        pool.set_refill_followup(move |p| {
+            assert!(p.capacity() >= 1);
+            h2.fetch_add(1, Ordering::SeqCst);
+        });
+        // Registration kicks one pass immediately.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while hits.load(Ordering::SeqCst) == 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "followup never ran after registration"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // A used check-in triggers another pass (refill, then followup).
+        let before = hits.load(Ordering::SeqCst);
+        let out = run_once(pool.checkout().unwrap(), &[5]);
+        assert_eq!(out, vec![5]);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while hits.load(Ordering::SeqCst) <= before {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "followup did not rerun after a used check-in"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     #[test]

@@ -28,8 +28,18 @@
 //! pushes enter the graph strictly monotonically; a stale or duplicate
 //! explicit timestamp is rejected with a clean
 //! [`MpError::TimestampViolation`] before it can poison the stream.
+//!
+//! Sessions are built for **pipelined** owners keeping many tickets in
+//! flight: [`StreamingSession::set_result_notifier`] wakes the owner
+//! when *any* ticket becomes resolvable, [`SessionTicket::try_wait`]
+//! resolves ready tickets without blocking, and the
+//! submitted-vs-resolved counters ([`StreamingSession::timestamps_submitted`]
+//! / [`StreamingSession::timestamps_resolved`]) let the owner drain the
+//! whole window before a planned recycle — see the K-deep window in
+//! [`crate::serving`]'s module docs.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
@@ -39,14 +49,79 @@ use crate::packet::Packet;
 use crate::serving::pool::PooledGraph;
 use crate::timestamp::Timestamp;
 
-/// Per-timestamp reply routing: timestamp → the submitter's channel.
-type PendingMap = Mutex<HashMap<i64, mpsc::Sender<MpResult<Packet>>>>;
+/// Called (outside any session lock on the waiter's side) every time a
+/// ticket becomes resolvable — an owner driving many tickets can sleep
+/// on one primitive instead of polling each ticket.
+type ResultNotifier = Box<dyn Fn() + Send + Sync>;
+
+/// The demultiplexer shared between a session and its graph's
+/// output-stream callback: per-timestamp reply routing plus the
+/// submitted-vs-resolved evidence counters.
+struct Demux {
+    /// timestamp → the submitter's channel.
+    pending: Mutex<HashMap<i64, mpsc::Sender<MpResult<Packet>>>>,
+    /// Tickets resolved so far (Ok results and flushed errors alike).
+    resolved: AtomicU64,
+    /// Optional wake-up hook ([`StreamingSession::set_result_notifier`]).
+    notify: Mutex<Option<ResultNotifier>>,
+}
+
+impl Demux {
+    /// Resolve the ticket registered at `ts` (at most once — the entry
+    /// is removed first, so a misbehaving graph emitting a timestamp
+    /// twice cannot double-answer), then ping the notifier.
+    fn deliver(&self, ts: i64, result: MpResult<Packet>) {
+        let sender = {
+            let mut pending = self.pending.lock().unwrap();
+            let sender = pending.remove(&ts);
+            if sender.is_some() {
+                // Count under the map lock (and before the send): a
+                // removed ticket is *always* already counted, so an
+                // empty map implies resolved == submitted, and a waiter
+                // holding its result never reads a stale counter.
+                self.resolved.fetch_add(1, Ordering::AcqRel);
+            }
+            sender
+        };
+        if let Some(tx) = sender {
+            let _ = tx.send(result);
+            self.ping();
+        }
+    }
+
+    /// Fail every still-pending ticket with `err`, then ping once.
+    fn fail_all(&self, err: &MpError) {
+        let drained: Vec<_> = {
+            let mut pending = self.pending.lock().unwrap();
+            let drained: Vec<_> = pending.drain().collect();
+            self.resolved
+                .fetch_add(drained.len() as u64, Ordering::AcqRel);
+            drained
+        };
+        if drained.is_empty() {
+            return;
+        }
+        for (_, tx) in drained {
+            let _ = tx.send(Err(err.clone()));
+        }
+        self.ping();
+    }
+
+    fn ping(&self) {
+        if let Some(n) = self.notify.lock().unwrap().as_ref() {
+            n();
+        }
+    }
+}
 
 /// What a finished session did (metrics evidence).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SessionStats {
     /// Requests (timestamps) submitted over the session's life.
     pub timestamps: u64,
+    /// Tickets resolved over the session's life (equals `timestamps`
+    /// after a finish/drop: unresolved tickets are flushed with errors).
+    pub resolved: u64,
     /// Tracer events the session's graph recorded.
     pub trace_events: usize,
 }
@@ -62,6 +137,21 @@ impl SessionTicket {
     /// The timestamp this request was scheduled at.
     pub fn timestamp(&self) -> Timestamp {
         self.ts
+    }
+
+    /// Non-blocking check: `Some` if this timestamp's result (or the
+    /// session's flushed error) is already buffered, `None` otherwise.
+    /// Owners pipelining many tickets use this with
+    /// [`StreamingSession::set_result_notifier`] to resolve ready
+    /// tickets without blocking on any single one.
+    pub fn try_wait(&self) -> Option<MpResult<Packet>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(MpError::Runtime(
+                "streaming session closed before delivering this timestamp's result".into(),
+            ))),
+        }
     }
 
     /// Block until this timestamp's result arrives (or the session
@@ -86,7 +176,7 @@ impl SessionTicket {
 pub struct StreamingSession {
     graph: Option<PooledGraph>,
     input: InputHandle,
-    pending: Arc<PendingMap>,
+    demux: Arc<Demux>,
     state: Mutex<SessionState>,
     max_timestamps: u64,
 }
@@ -111,29 +201,52 @@ impl StreamingSession {
         side: SidePackets,
         max_timestamps: u64,
     ) -> MpResult<StreamingSession> {
-        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
-        let demux = Arc::clone(&pending);
+        let demux = Arc::new(Demux {
+            pending: Mutex::new(HashMap::new()),
+            resolved: AtomicU64::new(0),
+            notify: Mutex::new(None),
+        });
+        let router = Arc::clone(&demux);
         graph.observe_output(output_stream, move |pkt| {
-            // Route by timestamp; the entry is removed first, so each
-            // ticket resolves at most once even if a graph misbehaves
-            // and emits a timestamp twice.
-            let sender = demux.lock().unwrap().remove(&pkt.timestamp().raw());
-            if let Some(tx) = sender {
-                let _ = tx.send(Ok(pkt.clone()));
-            }
+            router.deliver(pkt.timestamp().raw(), Ok(pkt.clone()));
         })?;
+        // A dying run fails every in-flight ticket *immediately* with
+        // the run's own error — pipelined owners must not have to wait
+        // out a timeout to learn their window is dead. (fail_all is
+        // idempotent, as the notifier contract requires.)
+        let death = Arc::clone(&demux);
+        graph.set_fail_notifier(move |e| death.fail_all(e));
         graph.start_run(side)?;
         let input = graph.input_handle(input_stream)?;
         Ok(StreamingSession {
             graph: Some(graph),
             input,
-            pending,
+            demux,
             state: Mutex::new(SessionState {
                 next_ts: 0,
                 submitted: 0,
             }),
             max_timestamps,
         })
+    }
+
+    /// Register a wake-up hook called every time a ticket becomes
+    /// resolvable (a result was routed, or pending tickets were flushed
+    /// with errors). An owner pipelining K tickets sleeps on whatever
+    /// primitive the hook pokes instead of polling K channels. The hook
+    /// runs on graph executor threads: it must not block.
+    pub fn set_result_notifier(&self, f: impl Fn() + Send + Sync + 'static) {
+        *self.demux.notify.lock().unwrap() = Some(Box::new(f));
+    }
+
+    /// A producer handle for *another* graph input stream (beyond the
+    /// session's own), for multi-input graphs — e.g. a control stream
+    /// gating the session's data stream in tests.
+    pub fn input_handle(&self, stream: &str) -> MpResult<InputHandle> {
+        self.graph
+            .as_ref()
+            .expect("graph present until finish/drop")
+            .input_handle(stream)
     }
 
     /// Submit a request at the next free timestamp. The payload packet's
@@ -172,13 +285,20 @@ impl StreamingSession {
             ));
         }
         let (tx, rx) = mpsc::channel();
-        self.pending.lock().unwrap().insert(ts.raw(), tx);
+        self.demux.pending.lock().unwrap().insert(ts.raw(), tx);
         // Push-and-settle while holding the session lock: pushes enter
         // the stream strictly monotonically even under concurrent
         // submitters. The demux entry is registered first, so a result
         // can never arrive before its ticket exists.
         if let Err(e) = self.input.push_final(payload.at(ts)) {
-            self.pending.lock().unwrap().remove(&ts.raw());
+            let removed = self.demux.pending.lock().unwrap().remove(&ts.raw()).is_some();
+            if !removed {
+                // A concurrent run-death flush already failed (and
+                // counted) this ticket, but the submission itself is
+                // being rejected: take the phantom resolution back so
+                // resolved never exceeds submitted.
+                self.demux.resolved.fetch_sub(1, Ordering::AcqRel);
+            }
             return Err(e);
         }
         st.next_ts = ts.raw() + 1;
@@ -191,17 +311,44 @@ impl StreamingSession {
         self.state.lock().unwrap().submitted
     }
 
+    /// Tickets resolved so far (results routed plus errors flushed).
+    /// The recycle *trigger* is submission-based ([`StreamingSession::needs_recycle`]);
+    /// owners drain until `timestamps_resolved == timestamps_submitted`
+    /// before actually retiring, so no ticket is abandoned by a planned
+    /// recycle.
+    pub fn timestamps_resolved(&self) -> u64 {
+        self.demux.resolved.load(Ordering::Acquire)
+    }
+
+    /// Tickets still waiting for their timestamp's result.
+    pub fn pending_count(&self) -> usize {
+        self.demux.pending.lock().unwrap().len()
+    }
+
+    /// Fail every still-pending ticket with `err` without ending the
+    /// session. Owners use this when they must answer waiters *now*
+    /// (shutdown deadlines) while the graph drains separately; tickets
+    /// submitted afterwards are unaffected.
+    pub fn fail_pending(&self, err: &MpError) {
+        self.demux.fail_all(err);
+    }
+
     /// The recycle threshold this session was started with.
     pub fn max_timestamps(&self) -> u64 {
         self.max_timestamps
     }
 
+    /// Has the session *submitted* its recycle threshold's worth of
+    /// timestamps? The owner should stop feeding it and, once the
+    /// in-flight tickets resolve, retire it as a planned recycle.
+    pub fn at_submission_threshold(&self) -> bool {
+        self.max_timestamps > 0 && self.state.lock().unwrap().submitted >= self.max_timestamps
+    }
+
     /// Should the owner recycle this session (threshold reached or the
     /// graph run stopped underneath it)?
     pub fn needs_recycle(&self) -> bool {
-        self.input.is_cancelled()
-            || (self.max_timestamps > 0
-                && self.state.lock().unwrap().submitted >= self.max_timestamps)
+        self.input.is_cancelled() || self.at_submission_threshold()
     }
 
     /// Abort the session's graph run. Pending work is abandoned (their
@@ -224,28 +371,30 @@ impl StreamingSession {
     pub fn finish(mut self) -> (MpResult<()>, SessionStats) {
         let mut graph = self.graph.take().expect("graph present until finish/drop");
         let _ = self.input.close();
+        // Multi-input graphs (control/gate streams) would otherwise
+        // never drain; closing an already-closed input is a no-op.
+        let _ = graph.close_all_inputs();
         let result = graph.wait_until_done();
-        let stats = SessionStats {
-            timestamps: self.state.lock().unwrap().submitted,
-            trace_events: graph.tracer().snapshot().len(),
-        };
         // Flush after the run fully stopped: no demux callback can race
         // this drain, so every ticket resolves exactly once.
-        Self::flush_pending(&self.pending, &result);
+        Self::flush_pending(&self.demux, &result);
+        let stats = SessionStats {
+            timestamps: self.state.lock().unwrap().submitted,
+            resolved: self.demux.resolved.load(Ordering::Acquire),
+            trace_events: graph.tracer().snapshot().len(),
+        };
         drop(graph);
         (result, stats)
     }
 
-    fn flush_pending(pending: &PendingMap, result: &MpResult<()>) {
+    fn flush_pending(demux: &Demux, result: &MpResult<()>) {
         let err = match result {
             Ok(()) => MpError::Runtime(
                 "streaming session ended before delivering this timestamp's result".into(),
             ),
             Err(e) => e.clone(),
         };
-        for (_, tx) in pending.lock().unwrap().drain() {
-            let _ = tx.send(Err(err.clone()));
-        }
+        demux.fail_all(&err);
     }
 }
 
@@ -260,7 +409,7 @@ impl Drop for StreamingSession {
         };
         graph.cancel();
         let result = graph.wait_until_done();
-        Self::flush_pending(&self.pending, &result);
+        Self::flush_pending(&self.demux, &result);
         drop(graph); // used check-in: the pool replaces it
     }
 }

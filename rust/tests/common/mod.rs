@@ -90,3 +90,27 @@ pub fn test_server_config(max_batch: usize) -> mediapipe::serving::ServerConfig 
         ..Default::default()
     }
 }
+
+/// A streaming-mode [`test_server_config`] with per-request batches
+/// (`max_batch` 1, so every request is its own timestamp), a K-deep
+/// in-flight window and the given recycle threshold.
+pub fn streaming_test_config(
+    pipeline_depth: usize,
+    session_max_timestamps: u64,
+) -> mediapipe::serving::ServerConfig {
+    mediapipe::serving::ServerConfig {
+        mode: mediapipe::serving::ServingMode::Streaming,
+        pipeline_depth,
+        session_max_timestamps,
+        ..test_server_config(1)
+    }
+}
+
+/// A constant-valued 8x8 grayscale frame carrying `value` in every
+/// pixel. The echo pipelines (`ServingEchoCalculator`) reflect the
+/// leading pixel back as the detection score, so request/response
+/// pairing is assertable end to end; a **negative** value is the
+/// deterministic poison (the echo calculator fails its graph run).
+pub fn payload_frame(value: f32) -> mediapipe::perception::ImageFrame {
+    mediapipe::perception::ImageFrame::new(8, 8, 1, vec![value; 64])
+}

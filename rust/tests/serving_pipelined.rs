@@ -1,0 +1,450 @@
+//! Pipelined streaming serving: K timestamps in flight per session
+//! (`ServerConfig::pipeline_depth`), pre-warmed standby sessions, and
+//! the ordering/recycle/error edge cases the window exposes.
+//!
+//! Covers the tentpole's correctness obligations:
+//! * **window discipline** — a gated pipeline proves the batcher keeps
+//!   exactly K timestamps in flight (stage work for `t+1` completes
+//!   while `t` is still unresolved), and every job still receives
+//!   exactly its own rows, in submission order, for K ∈ {1, 2, 4};
+//! * **recycle boundary** — `session_max_timestamps = 4` under
+//!   `pipeline_depth = 3`: the whole window resolves before the session
+//!   retires, nothing is dropped or double-answered, and the swap comes
+//!   from the pre-warmed standby slot;
+//! * **mid-window error** — a poisoned timestamp fails every pending
+//!   job within `batch_timeout` (milliseconds here, not the old
+//!   hard-coded 60 s), retires the session once, and the next batch
+//!   gets a fresh session;
+//! * **parity** — for every K the streaming results match the pooled
+//!   reference bit-for-bit, and shutdown with a full window resolves
+//!   every waiter.
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use common::{payload_frame, recv_within, streaming_test_config, test_server_config};
+use mediapipe::perception::SyntheticWorld;
+use mediapipe::prelude::*;
+use mediapipe::serving::pipeline::staged_pipeline_config;
+use mediapipe::serving::{PipelineServer, ServerConfig};
+
+// ---------------------------------------------------------------------
+// Gated pipeline: deterministic control over completion timing.
+//
+// `TestHoldGateCalculator` holds each timestamp until the test releases
+// it, so upstream stages provably complete timestamp t+1 while t is
+// still unresolved; `TestStageProbeCalculator` (upstream of the gate)
+// counts how many timestamps have finished their stage work — the
+// direct observable for "K in flight". Only one test may use these
+// statics (tests in a binary run concurrently).
+// ---------------------------------------------------------------------
+
+static GATE: OnceLock<(Mutex<i64>, Condvar)> = OnceLock::new();
+static STAGED: AtomicUsize = AtomicUsize::new(0);
+
+fn gate() -> &'static (Mutex<i64>, Condvar) {
+    GATE.get_or_init(|| (Mutex::new(0), Condvar::new()))
+}
+
+fn reset_gate() {
+    *gate().0.lock().unwrap() = 0;
+    STAGED.store(0, Ordering::SeqCst);
+}
+
+/// Allow timestamps `< n` through the hold gate.
+fn release_up_to(n: i64) {
+    let (mx, cv) = gate();
+    let mut released = mx.lock().unwrap();
+    if n > *released {
+        *released = n;
+    }
+    cv.notify_all();
+}
+
+fn wait_staged_at_least(n: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while STAGED.load(Ordering::SeqCst) < n {
+        assert!(
+            Instant::now() < deadline,
+            "gated pipeline never reached {n} in-flight timestamps (got {})",
+            STAGED.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+struct Probe;
+
+impl Calculator for Probe {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if !p.is_empty() {
+            let p = p.clone();
+            STAGED.fetch_add(1, Ordering::SeqCst);
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+struct HoldGate;
+
+impl Calculator for HoldGate {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let ts = p.timestamp().raw();
+        let p = p.clone();
+        let (mx, cv) = gate();
+        let mut released = mx.lock().unwrap();
+        // Fail-safe bound: a buggy test must time out its assertions,
+        // not wedge the shared executor forever.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while *released <= ts {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = cv.wait_timeout(released, deadline - now).unwrap();
+            released = guard;
+        }
+        drop(released);
+        ctx.output(0, p);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+fn ensure_test_calculators() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let r = CalculatorRegistry::global();
+        r.register_fn(
+            "TestStageProbeCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(Probe)),
+        );
+        r.register_fn(
+            "TestHoldGateCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(HoldGate)),
+        );
+    });
+}
+
+/// frames → echo (payload → score) → probe (stage-completion counter)
+/// → hold gate → detections.
+fn gated_pipeline() -> GraphConfig {
+    ensure_test_calculators();
+    GraphConfig::parse(
+        r#"
+input_stream: "frames"
+output_stream: "detections"
+node { calculator: "ServingEchoCalculator" input_stream: "FRAMES:frames" output_stream: "DETS:echoed" }
+node { calculator: "TestStageProbeCalculator" input_stream: "echoed" output_stream: "staged" }
+node { calculator: "TestHoldGateCalculator" input_stream: "staged" output_stream: "detections" }
+"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn gated_completion_preserves_ownership_and_order_for_every_depth() {
+    for &k in &[1usize, 2, 4] {
+        reset_gate();
+        let server = PipelineServer::start(ServerConfig {
+            graph_override: Some(gated_pipeline()),
+            batch_timeout: Duration::from_secs(30),
+            ..streaming_test_config(k, 0)
+        })
+        .unwrap();
+        let h = server.handle();
+        // Six requests fired without waiting from one thread: submission
+        // order fixes the timestamp order (max_batch 1 keeps every
+        // request its own timestamp).
+        let total = 6usize;
+        let payloads: Vec<f32> = (0..total).map(|i| 0.05 + 0.1 * i as f32).collect();
+        let replies: Vec<_> = payloads
+            .iter()
+            .map(|&v| h.submit(&payload_frame(v)))
+            .collect();
+        // With the gate fully closed the window fills to exactly K:
+        // stage work for timestamps 1..K completed while timestamp 0 is
+        // still unresolved (out-of-order completion), and the batcher
+        // submits nothing beyond K.
+        wait_staged_at_least(k, Duration::from_secs(10));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(
+            STAGED.load(Ordering::SeqCst),
+            k,
+            "window must cap in-flight timestamps at K={k}"
+        );
+        // Release one timestamp at a time: each release resolves exactly
+        // the oldest outstanding request, with exactly its own payload.
+        for (i, rx) in replies.into_iter().enumerate() {
+            release_up_to(i as i64 + 1);
+            let dets = recv_within(&rx, Duration::from_secs(10), "gated reply")
+                .unwrap_or_else(|e| panic!("request {i} failed (K={k}): {e}"));
+            assert_eq!(dets.len(), 1);
+            assert!(
+                (dets[0].score - payloads[i]).abs() < 1e-6,
+                "cross-request leakage at ts {i} (K={k}): got {}",
+                dets[0].score
+            );
+        }
+        release_up_to(i64::MAX);
+        let m = server.metrics();
+        assert_eq!(m.errors.get(), 0);
+        assert_eq!(m.requests.get(), total as u64);
+        assert_eq!(m.sessions_started.get(), 1, "threshold 0 never recycles");
+        drop(server);
+    }
+}
+
+#[test]
+fn recycle_boundary_under_pipelining_drains_window_and_swaps_prewarmed() {
+    // session_max_timestamps = 4 under pipeline_depth = 3: after the
+    // 4th submission the whole window resolves before the session
+    // retires, and the replacement comes from the pre-warmed standby.
+    let server = PipelineServer::start(streaming_test_config(3, 4)).unwrap();
+    let h = server.handle();
+    let prewarmed_at_least = |n: u64, what: &str| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while server.metrics().sessions_prewarmed.get() < n {
+            assert!(Instant::now() < deadline, "{what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+    // Let the refill worker pre-open the first standby so activation 1
+    // is deterministically a prewarm hit.
+    prewarmed_at_least(1, "standby session never pre-warmed");
+    let mut world = SyntheticWorld::new(8, 8, 1, 21);
+    let replies: Vec<_> = (0..4)
+        .map(|_| {
+            world.step();
+            h.submit(&world.render())
+        })
+        .collect();
+    for (i, rx) in replies.into_iter().enumerate() {
+        let reply = recv_within(&rx, Duration::from_secs(30), "pipelined reply");
+        let dets = reply
+            .unwrap_or_else(|e| panic!("request {i} failed across the recycle boundary: {e}"));
+        assert!(!dets.is_empty(), "min_score 0 keeps detections");
+        // Exactly one answer per request: after the reply the batcher
+        // dropped its sender, so a second read sees a disconnect, never
+        // a duplicate row set.
+        assert!(
+            matches!(
+                rx.try_recv(),
+                Err(std::sync::mpsc::TryRecvError::Disconnected)
+            ),
+            "request {i} double-answered across the swap"
+        );
+    }
+    // The batcher sends the last drained reply *before* finishing the
+    // retirement (graph drain + check-in), so wait for the recycle
+    // counter rather than racing it.
+    {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics().session_recycles.get() == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "session never recycled after its 4th timestamp"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let m = server.metrics();
+        assert_eq!(m.requests.get(), 4);
+        assert_eq!(m.errors.get(), 0, "planned recycle must not fail in-flight work");
+        assert_eq!(m.session_recycles.get(), 1, "timestamps 0-3 fill session 1 exactly");
+        assert_eq!(m.session_errors.get(), 0);
+        assert_eq!(m.sessions_started.get(), 1, "session 2 not activated yet");
+        assert_eq!(m.graph_runs.get(), 1, "one retired session = one completed run");
+        assert_eq!(m.prewarm_hits.get(), 1, "activation 1 came from the standby");
+        assert!(m.trace_events.get() > 0, "retired session leaves tracer evidence");
+    }
+    // The standby was consumed by activation 1 and re-armed off-thread;
+    // once it is back, the post-recycle activation is an O(1) swap too.
+    prewarmed_at_least(2, "standby never re-armed after the prewarm hit");
+    world.step();
+    let dets = h.detect(&world.render()).expect("post-recycle request");
+    assert!(!dets.is_empty());
+    let m = server.metrics();
+    assert_eq!(m.requests.get(), 5);
+    assert_eq!(m.errors.get(), 0);
+    assert_eq!(m.sessions_started.get(), 2);
+    assert_eq!(m.prewarm_hits.get(), 2, "the recycle swap came from the standby");
+}
+
+#[test]
+fn mid_window_poison_fails_every_pending_job_quickly_and_swaps_sessions() {
+    // One 50 ms busy stage ahead of the echo: the poison at timestamp 0
+    // only detonates after timestamps 1 and 2 joined the window.
+    let staged = staged_pipeline_config(&[50_000], None).unwrap();
+    let server = PipelineServer::start(ServerConfig {
+        graph_override: Some(staged),
+        batch_timeout: Duration::from_millis(400),
+        ..streaming_test_config(3, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    let t0 = Instant::now();
+    let poisoned = h.submit(&payload_frame(-1.0));
+    let pending1 = h.submit(&payload_frame(0.3));
+    let pending2 = h.submit(&payload_frame(0.6));
+    for (name, rx) in [
+        ("poisoned", poisoned),
+        ("pending1", pending1),
+        ("pending2", pending2),
+    ] {
+        let reply = recv_within(&rx, Duration::from_secs(5), name);
+        assert!(
+            reply.is_err(),
+            "{name} must fail when timestamp 0 poisons the session"
+        );
+    }
+    // Channel-waited bound: the whole window failed in ~batch_timeout,
+    // nowhere near the old hard-coded 60 s wait.
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "mid-window error took {:?}",
+        t0.elapsed()
+    );
+    {
+        let m = server.metrics();
+        assert_eq!(m.errors.get(), 3, "every pending job got an error response");
+        assert_eq!(m.session_errors.get(), 1, "one emergency retirement for the window");
+        assert_eq!(m.session_recycles.get(), 0);
+    }
+    // The next batch gets a fresh session and succeeds.
+    let dets = h.detect(&payload_frame(0.9)).expect("post-error request");
+    assert!((dets[0].score - 0.9).abs() < 1e-6);
+    let m = server.metrics();
+    assert_eq!(m.sessions_started.get(), 2, "a fresh session after the error");
+    assert_eq!(m.errors.get(), 3, "recovery adds no errors");
+    assert_eq!(m.requests.get(), 1);
+}
+
+#[test]
+fn stuck_graph_without_error_is_bounded_by_batch_timeout() {
+    // A graph-run *failure* flushes the window immediately (see the
+    // poison test); a graph that is merely too slow never errors, so
+    // the only failure signal is the window's front deadline. One
+    // 800 ms busy stage against a 200 ms batch_timeout: the batch must
+    // fail at ~batch_timeout, not hang, and the session retires.
+    let staged = staged_pipeline_config(&[800_000], None).unwrap();
+    let server = PipelineServer::start(ServerConfig {
+        graph_override: Some(staged),
+        batch_timeout: Duration::from_millis(200),
+        ..streaming_test_config(2, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    let t0 = Instant::now();
+    let rx = h.submit(&payload_frame(0.5));
+    let reply = recv_within(&rx, Duration::from_secs(10), "timed-out batch");
+    assert!(
+        reply.is_err(),
+        "an 800 ms batch cannot beat a 200 ms batch_timeout"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "timeout must fire at ~batch_timeout, got {:?}",
+        t0.elapsed()
+    );
+    // The error reply is sent before the retirement finishes draining
+    // the still-spinning graph; wait for the counter, bounded.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics().session_errors.get() == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "timed-out session never retired as an error"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let m = server.metrics();
+    assert_eq!(m.errors.get(), 1);
+    assert_eq!(m.session_errors.get(), 1, "a timed-out batch retires its session");
+}
+
+#[test]
+fn pipelined_streaming_matches_pooled_results_for_every_depth() {
+    // The reference backend is deterministic: identical frames must
+    // yield identical detections pooled vs streaming at any depth —
+    // depth 1 is the bit-for-bit pre-pipelining behaviour, deeper
+    // windows must not change results, only overlap.
+    let pooled = PipelineServer::start(test_server_config(1)).unwrap();
+    let mut world = SyntheticWorld::new(8, 8, 1, 99);
+    world.step();
+    let frame = world.render();
+    let reference = pooled.handle().detect(&frame).unwrap();
+    for &k in &[1usize, 2, 4] {
+        let streaming = PipelineServer::start(streaming_test_config(k, 100)).unwrap();
+        let h = streaming.handle();
+        // An async wave through the window, then a synchronous detect.
+        let replies: Vec<_> = (0..4).map(|_| h.submit(&frame)).collect();
+        for rx in replies {
+            let got = recv_within(&rx, Duration::from_secs(30), "parity reply").unwrap();
+            assert_eq!(reference.len(), got.len(), "K={k}");
+            for (a, b) in reference.iter().zip(&got) {
+                assert!((a.score - b.score).abs() < 1e-6, "K={k}");
+                assert!((a.bbox.x - b.bbox.x).abs() < 1e-6, "K={k}");
+                assert!((a.bbox.y - b.bbox.y).abs() < 1e-6, "K={k}");
+            }
+        }
+        let got = h.detect(&frame).unwrap();
+        assert_eq!(reference.len(), got.len());
+        assert_eq!(streaming.metrics().errors.get(), 0);
+        assert_eq!(streaming.metrics().requests.get(), 5);
+    }
+}
+
+#[test]
+fn server_drop_with_a_full_window_resolves_every_waiter() {
+    // 20 ms per batch keeps a depth-4 window genuinely full when the
+    // server is dropped; shutdown must drain it — every waiter resolves
+    // in bounded time, none hangs.
+    let staged = staged_pipeline_config(&[20_000], None).unwrap();
+    let server = PipelineServer::start(ServerConfig {
+        graph_override: Some(staged),
+        batch_timeout: Duration::from_secs(30),
+        ..streaming_test_config(4, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    let replies: Vec<_> = (0..8)
+        .map(|i| h.submit(&payload_frame(0.1 + 0.05 * i as f32)))
+        .collect();
+    drop(h);
+    let (tx, done) = std::sync::mpsc::channel();
+    let joiner = std::thread::spawn(move || {
+        drop(server);
+        tx.send(()).unwrap();
+    });
+    recv_within(&done, Duration::from_secs(30), "server drop must not hang");
+    joiner.join().unwrap();
+    for (i, rx) in replies.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(_reply) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                panic!("request {i} left hanging after shutdown with a full window")
+            }
+        }
+    }
+}

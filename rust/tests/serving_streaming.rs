@@ -65,9 +65,69 @@ fn concurrent_producers_each_get_exactly_their_own_result() {
         }
     });
     assert_eq!(session.timestamps_submitted(), (threads * per) as u64);
+    assert_eq!(
+        session.timestamps_resolved(),
+        (threads * per) as u64,
+        "every waited ticket counts as resolved"
+    );
+    assert_eq!(session.pending_count(), 0);
     let (result, stats) = session.finish();
     result.unwrap();
     assert_eq!(stats.timestamps, (threads * per) as u64);
+    assert_eq!(stats.resolved, stats.timestamps, "nothing left to flush");
+}
+
+#[test]
+fn fail_pending_answers_waiters_without_ending_the_session() {
+    // The owner can fail the in-flight window *now* (shutdown deadline)
+    // while the graph keeps draining: every outstanding ticket resolves
+    // immediately, later submissions still work.
+    let cfg = GraphConfig::parse(
+        r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "BusyWorkCalculator" input_stream: "in" output_stream: "out" options { work_us: 10000 } }
+"#,
+    )
+    .unwrap();
+    let pool = GraphPool::new(&cfg, 1).unwrap();
+    let session = StreamingSession::start(
+        pool.checkout().unwrap(),
+        "in",
+        "out",
+        SidePackets::new(),
+        0,
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..8i64)
+        .map(|i| session.submit(Packet::new(i, Timestamp::UNSET)).unwrap())
+        .collect();
+    session.fail_pending(&MpError::Runtime("shutdown deadline".into()));
+    // Deterministic post-conditions, checked *before* touching any
+    // ticket: every submitted timestamp is resolved right now —
+    // delivered before the flush or failed by it — regardless of how
+    // far the busy work got.
+    assert_eq!(session.pending_count(), 0, "flush drains the demux map");
+    assert_eq!(session.timestamps_resolved(), 8, "delivered + flushed covers every ticket");
+    // Each wait returns a buffered outcome (Ok if its result beat the
+    // flush, the injected error otherwise) — nobody waits out the
+    // remaining busy work.
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for t in tickets {
+        match t.wait(Duration::from_secs(5)) {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    assert_eq!(completed + failed, 8, "every ticket resolves exactly once");
+    // The session itself stays live: a fresh submission round-trips.
+    let late = session.submit(Packet::new(99i64, Timestamp::UNSET)).unwrap();
+    assert_eq!(
+        *late.wait(Duration::from_secs(10)).unwrap().get::<i64>().unwrap(),
+        99
+    );
+    session.finish().0.unwrap();
 }
 
 #[test]
