@@ -37,6 +37,25 @@ pub fn stub_detector_artifacts(prefix: &str) -> String {
     dir.to_string_lossy().into_owned()
 }
 
+/// Park one worker of `pool` behind a gate: submits a task that signals
+/// entry and then blocks until the returned sender fires (or drops, so
+/// a panicking test releases the worker instead of hanging the pool).
+/// Returns only once the worker is provably inside the gate — the
+/// deterministic scheduling-test scaffold: park the only worker, stage
+/// queues/sources, then release and observe the dispatch order. Shared
+/// by the executor/scheduler tests and the scan-scale bench.
+pub fn park_worker(pool: &crate::executor::ThreadPoolExecutor) -> std::sync::mpsc::Sender<()> {
+    use crate::executor::Executor;
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+    pool.execute(Box::new(move || {
+        entered_tx.send(()).unwrap();
+        let _ = gate_rx.recv();
+    }));
+    entered_rx.recv().unwrap();
+    gate_tx
+}
+
 /// Fire `n` synthetic frames at a serving handle **without waiting
 /// between submissions** (the async wave that lets a pipelined batcher
 /// keep its window full), then wait for every reply. Returns the wall

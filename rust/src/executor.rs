@@ -12,14 +12,66 @@
 //! * **Work stealing** (the default on [`ThreadPoolExecutor`]): the
 //!   queue registers itself as a [`TaskSource`] — an object exposing the
 //!   priority of its top task and a way to pop-and-run it. An idle
-//!   worker scans every registered source and runs the **globally
-//!   highest-priority task across all queues bound to the pool**, so a
-//!   high-priority task from one graph is stolen ahead of another
-//!   graph's backlog instead of queueing behind it in arrival order.
+//!   worker runs the **globally highest-priority task across all queues
+//!   bound to the pool**, so a high-priority task from one graph is
+//!   stolen ahead of another graph's backlog instead of queueing behind
+//!   it in arrival order.
 //! * **FIFO drains** (executors without source support, and the
 //!   explicit ablation mode): every push submits one closure via
 //!   [`Executor::execute`]; the pool runs submissions in arrival order,
 //!   so priority only orders tasks *within* a queue.
+//!
+//! ### The steal index and its notification protocol
+//!
+//! How a worker *finds* the globally highest-priority source is governed
+//! by [`DispatchMode`]:
+//!
+//! * [`DispatchMode::Indexed`] (the default) keeps a pool-level
+//!   **priority index**: an ordered map from `(top priority, rotation
+//!   stamp)` to `SourceId`. Each registered source caches its current
+//!   top priority in that index; a steal dispatch is one
+//!   `first_key_value` plus a re-stamp — **O(log n)** in the number of
+//!   registered sources, under one short pool lock, instead of the
+//!   linear scan's n heap-lock acquisitions.
+//!
+//!   The index is maintained by *notifications on change*, and every
+//!   index write happens under the pool-state lock from a **fresh**
+//!   `top_priority()` read (pool lock → source heap lock, the one
+//!   sanctioned lock order):
+//!
+//!   - [`Executor::notify_source`]`(id)` — called by the queue after a
+//!     push (become-nonempty or top-priority-raised): the pool
+//!     re-reads the source's top priority, updates its index entry,
+//!     and wakes a worker if the source is non-empty;
+//!   - **registration** indexes a source that is already non-empty;
+//!   - **repair** — after every indexed dispatch the worker re-reads
+//!     the source it just ran and re-indexes it (top lowered by the
+//!     pop, or became empty, or the steal race popped nothing).
+//!
+//!   Because every write is a fresh read serialized by the pool lock, a
+//!   source holding an accepted task always has an index entry once its
+//!   push's notify completes: entries can be **stale-high** between a
+//!   pop and that worker's repair, but never silently missing. A
+//!   dispatch through a stale-high entry runs the source's *current*
+//!   top task — possibly a lower-priority one than the key advertised
+//!   (a priority inversion bounded to the repair window), or nothing at
+//!   all if the source is now empty; either way the repair then re-keys
+//!   or removes the entry. Stale entries are lazily repaired, never
+//!   trusted for correctness — the cost of not re-reading every source
+//!   on every dispatch.
+//!
+//!   **Fairness**: the index key's second component is a monotone
+//!   rotation stamp, bumped each time a source is dispatched, so among
+//!   equal-priority sources the least-recently-served wins — sustained
+//!   equal-priority load is served exactly round-robin, preserving the
+//!   rotating-scan fairness guarantee of the linear path.
+//!
+//! * [`DispatchMode::LinearScan`] is the pre-index behaviour, kept as an
+//!   ablation ("executor_linear_scan"): every dispatch scans all
+//!   registered sources (one heap lock each, O(n)), starting from a
+//!   rotation cursor for the same round-robin fairness.
+//!   `benches/sched_scan_scale.rs` sweeps the source count to quantify
+//!   the indexed win.
 //!
 //! Three implementations:
 //!
@@ -45,7 +97,8 @@
 //! Sharing an executor never mixes graph *state* — queues own their
 //! heaps and graphs own their nodes; the executor only supplies threads.
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -96,13 +149,30 @@ pub trait Executor: Send + Sync {
     /// are ignored.
     fn unregister_source(&self, _id: SourceId) {}
 
-    /// Signal that some registered source gained a task. Returns `false`
-    /// when the executor has shut down and no worker will ever come —
-    /// the caller must then run the task itself (see
-    /// `SchedulerQueue::push`).
-    fn notify_source(&self) -> bool {
+    /// Signal that source `id` changed (gained a task or raised its top
+    /// priority): the executor refreshes its readiness index for that
+    /// source and wakes a worker. Returns `false` when the executor has
+    /// shut down and no worker will ever come — the caller must then run
+    /// the task itself (see `SchedulerQueue::push`). Unknown/stale ids
+    /// are a no-op (but still report liveness).
+    fn notify_source(&self, _id: SourceId) -> bool {
         false
     }
+}
+
+/// How a [`ThreadPoolExecutor`]'s workers pick the next steal dispatch
+/// (module docs, "The steal index and its notification protocol").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Pool-level priority index over the registered sources: O(log n)
+    /// per dispatch, maintained by change notifications + lazy repair.
+    #[default]
+    Indexed,
+    /// Ablation ("executor_linear_scan"): every dispatch scans all
+    /// registered sources, one heap lock each — O(n). This is the
+    /// pre-index behaviour; `benches/sched_scan_scale.rs` quantifies
+    /// the difference.
+    LinearScan,
 }
 
 /// Total worker threads ever spawned by [`ThreadPoolExecutor`]s in this
@@ -115,27 +185,140 @@ pub fn worker_threads_spawned() -> usize {
     WORKERS_SPAWNED.load(Ordering::Acquire)
 }
 
+/// Index key: highest priority first (`Reverse`), then the *oldest*
+/// rotation stamp — so `BTreeMap::first_key_value` is "highest priority,
+/// least recently served". Stamps are unique (monotone counter), making
+/// keys unique.
+type IndexKey = (Reverse<u32>, u64);
+
 struct SourceEntry {
-    id: SourceId,
     source: Arc<dyn TaskSource>,
+    /// This source's current position in the priority index (`None` =
+    /// believed empty, or linear-scan mode). Cached so updates can
+    /// remove the old key in O(log n).
+    key: Option<IndexKey>,
 }
 
 struct PoolState {
     /// Directly submitted tasks ([`Executor::execute`]), FIFO.
     tasks: VecDeque<ExecutorTask>,
-    /// Registered work-stealing sources (scheduler queues).
-    sources: Vec<SourceEntry>,
+    /// Registered work-stealing sources (scheduler queues) by id. Ids
+    /// are never reused, so a stale id held by an in-flight dispatch
+    /// can never alias a later registration.
+    sources: HashMap<SourceId, SourceEntry>,
+    /// Registration order — maintained only in LinearScan mode, where
+    /// the scan reads it (the Arc is duplicated here so the ablation's
+    /// per-dispatch cost matches the historical Vec scan exactly: one
+    /// heap lock per source, no map lookups). Always empty under
+    /// Indexed dispatch.
+    order: Vec<(SourceId, Arc<dyn TaskSource>)>,
     next_source: SourceId,
-    /// Steal-fairness rotation: the source index the next steal scan
-    /// starts from. Advanced once per steal dispatch, so sustained
-    /// equal-priority load is served round-robin across sources instead
-    /// of always favouring the earliest-registered queue.
+    /// The priority index (Indexed mode): one entry per believed
+    /// non-empty source, ordered by (priority desc, stamp asc).
+    index: BTreeMap<IndexKey, SourceId>,
+    /// Monotone rotation-stamp counter (fairness tiebreak).
+    next_stamp: u64,
+    /// Steal-fairness rotation for the linear-scan ablation: the source
+    /// index the next scan starts from, advanced once per dispatch.
     scan_start: usize,
+}
+
+impl PoolState {
+    /// Re-read source `id`'s top priority and update its index entry.
+    /// Returns `true` when the source is indexed (non-empty) afterwards.
+    ///
+    /// Every index write funnels through here **under the pool-state
+    /// lock** with a **fresh** `top_priority()` read, so the index
+    /// always reflects the source's heap at a lock-serialized moment: a
+    /// concurrent pop can leave an entry stale-high (repaired on the
+    /// next dispatch), but a source with an accepted task can never end
+    /// up missing from the index once its push's notify has run.
+    fn refresh_index(&mut self, id: SourceId) -> bool {
+        let (fresh, old) = match self.sources.get(&id) {
+            Some(e) => (e.source.top_priority(), e.key),
+            None => return false, // unregistered while a dispatch was in flight
+        };
+        let new_key = match (fresh, old) {
+            // Priority unchanged: keep the entry (and its fairness
+            // stamp) in place.
+            (Some(p), Some(key)) if key.0 == Reverse(p) => return true,
+            (Some(p), old) => {
+                if let Some(k) = old {
+                    self.index.remove(&k);
+                }
+                // Keep the stamp across priority changes so a source
+                // does not lose (or gain) its place in the rotation by
+                // changing priority; a fresh stamp is only minted on the
+                // empty→non-empty transition.
+                let stamp = match old {
+                    Some((_, s)) => s,
+                    None => {
+                        self.next_stamp += 1;
+                        self.next_stamp
+                    }
+                };
+                Some((Reverse(p), stamp))
+            }
+            (None, Some(k)) => {
+                self.index.remove(&k);
+                None
+            }
+            (None, None) => None,
+        };
+        if let Some(k) = new_key {
+            self.index.insert(k, id);
+        }
+        self.sources.get_mut(&id).expect("present above").key = new_key;
+        new_key.is_some()
+    }
+
+    /// Indexed dispatch: pick the highest-priority, least-recently-served
+    /// source and bump its rotation stamp (so equal-priority peers go
+    /// first next time). O(log n). The entry stays in the index while
+    /// the task runs — it is the dispatching worker's repair (a fresh
+    /// re-read after `run_one`) that removes or lowers it, so a source
+    /// with queued tasks is never invisible to other workers. Until that
+    /// repair lands, a concurrent dispatch through the not-yet-re-keyed
+    /// entry runs the source's current top, which may rank below the
+    /// advertised key (bounded priority inversion; see module docs).
+    fn pick_indexed(&mut self) -> Option<(SourceId, Arc<dyn TaskSource>)> {
+        let (&key, &id) = self.index.first_key_value()?;
+        let src = Arc::clone(&self.sources[&id].source);
+        self.index.remove(&key);
+        self.next_stamp += 1;
+        let rotated = (key.0, self.next_stamp);
+        self.index.insert(rotated, id);
+        self.sources.get_mut(&id).expect("indexed source registered").key = Some(rotated);
+        Some((id, src))
+    }
+
+    /// Linear-scan dispatch (ablation): scan every source from the
+    /// rotating start cursor, one heap lock each — O(n).
+    fn pick_linear(&mut self) -> Option<Arc<dyn TaskSource>> {
+        let n = self.order.len();
+        let mut best: Option<(u32, usize)> = None;
+        for k in 0..n {
+            let i = (self.scan_start + k) % n;
+            if let Some(p) = self.order[i].1.top_priority() {
+                let better = match best {
+                    None => true,
+                    Some((bp, _)) => p > bp,
+                };
+                if better {
+                    best = Some((p, i));
+                }
+            }
+        }
+        let (_, i) = best?;
+        self.scan_start = self.scan_start.wrapping_add(1);
+        Some(Arc::clone(&self.order[i].1))
+    }
 }
 
 struct PoolInner {
     state: Mutex<PoolState>,
     cv: Condvar,
+    mode: DispatchMode,
     shutdown: AtomicBool,
     /// Times a worker woke from the condvar and found nothing to run
     /// (spurious or raced wakeups). Serving benches use this to compare
@@ -144,18 +327,23 @@ struct PoolInner {
     idle_wakeups: AtomicU64,
 }
 
-/// What a worker decided to do after scanning the pool state.
+/// What a worker decided to do after consulting the pool state. A steal
+/// carries the source id in Indexed mode so the worker can repair the
+/// index after `run_one` (`None` in linear-scan mode: nothing cached,
+/// nothing to repair).
 enum Work {
     Plain(ExecutorTask),
-    Steal(Arc<dyn TaskSource>),
+    Steal(Option<SourceId>, Arc<dyn TaskSource>),
     Exit,
 }
 
 impl PoolInner {
-    /// Pick the next unit of work, or park until one appears.
+    /// Pick the next unit of work, or park until one appears. Indexed
+    /// mode parks purely on become-nonempty notifications — a wakeup
+    /// consults the index (O(log n)), it does not rescan the sources.
     ///
-    /// Lock discipline: this holds the pool-state lock while calling
-    /// `top_priority()` (which takes each source's heap lock), so a
+    /// Lock discipline: this may call `top_priority()` (which takes a
+    /// source's heap lock) while holding the pool-state lock, so a
     /// source must never call back into the pool while holding its heap
     /// lock — `SchedulerQueue::push` releases the heap lock before
     /// `notify_source`.
@@ -169,28 +357,19 @@ impl PoolInner {
                 return Work::Plain(t);
             }
             // Steal the globally highest-priority task across all
-            // registered queues. Ties go to the first source in rotated
-            // scan order: the scan starts at `scan_start`, which advances
-            // once per steal dispatch, so sources with sustained
-            // equal-priority load are served round-robin instead of by
-            // registration order (steal fairness).
-            let n = st.sources.len();
-            let mut best: Option<(u32, usize)> = None;
-            for k in 0..n {
-                let i = (st.scan_start + k) % n;
-                if let Some(p) = st.sources[i].source.top_priority() {
-                    let better = match best {
-                        None => true,
-                        Some((bp, _)) => p > bp,
-                    };
-                    if better {
-                        best = Some((p, i));
+            // registered queues; equal priorities are served round-robin
+            // in both modes (steal fairness).
+            match self.mode {
+                DispatchMode::Indexed => {
+                    if let Some((id, src)) = st.pick_indexed() {
+                        return Work::Steal(Some(id), src);
                     }
                 }
-            }
-            if let Some((_, i)) = best {
-                st.scan_start = st.scan_start.wrapping_add(1);
-                return Work::Steal(Arc::clone(&st.sources[i].source));
+                DispatchMode::LinearScan => {
+                    if let Some(src) = st.pick_linear() {
+                        return Work::Steal(None, src);
+                    }
+                }
             }
             if self.shutdown.load(Ordering::Acquire) {
                 return Work::Exit;
@@ -203,6 +382,17 @@ impl PoolInner {
             st = self.cv.wait(st).unwrap();
             woke = true;
         }
+    }
+
+    /// Post-dispatch index repair: re-read the source the worker just
+    /// ran and re-index it (its pop lowered the top, emptied it, or the
+    /// steal race popped nothing and the entry was stale). A stale id —
+    /// the source was unregistered while `run_one` was in flight — is a
+    /// no-op: ids are never reused, so a later registration can never be
+    /// resurrected or misrouted by this repair.
+    fn repair_source(&self, id: SourceId) {
+        let mut st = self.state.lock().unwrap();
+        st.refresh_index(id);
     }
 }
 
@@ -221,8 +411,21 @@ pub struct ThreadPoolExecutor {
 impl ThreadPoolExecutor {
     /// Create a pool; `num_threads == 0` means "based on the system's
     /// capabilities". Workers are spawned eagerly so thread counts are
-    /// observable before any task runs.
+    /// observable before any task runs. Steal dispatch uses the default
+    /// [`DispatchMode::Indexed`]; see [`ThreadPoolExecutor::with_dispatch_mode`]
+    /// for the linear-scan ablation.
     pub fn new(name: &str, num_threads: usize) -> ThreadPoolExecutor {
+        ThreadPoolExecutor::with_dispatch_mode(name, num_threads, DispatchMode::default())
+    }
+
+    /// [`ThreadPoolExecutor::new`] with an explicit steal-dispatch mode
+    /// (benches/tests: `DispatchMode::LinearScan` is the pre-index
+    /// "executor_linear_scan" ablation).
+    pub fn with_dispatch_mode(
+        name: &str,
+        num_threads: usize,
+        mode: DispatchMode,
+    ) -> ThreadPoolExecutor {
         let n = if num_threads == 0 {
             std::thread::available_parallelism()
                 .map(|v| v.get())
@@ -233,11 +436,15 @@ impl ThreadPoolExecutor {
         let inner = Arc::new(PoolInner {
             state: Mutex::new(PoolState {
                 tasks: VecDeque::new(),
-                sources: Vec::new(),
+                sources: HashMap::new(),
+                order: Vec::new(),
                 next_source: 0,
+                index: BTreeMap::new(),
+                next_stamp: 0,
                 scan_start: 0,
             }),
             cv: Condvar::new(),
+            mode,
             shutdown: AtomicBool::new(false),
             idle_wakeups: AtomicU64::new(0),
         });
@@ -263,12 +470,18 @@ impl ThreadPoolExecutor {
                                     std::panic::AssertUnwindSafe(t),
                                 );
                             }
-                            Work::Steal(src) => {
+                            Work::Steal(id, src) => {
                                 // `run_one` may pop nothing (steal
-                                // race); the next loop just rescans.
+                                // race); the repair below re-reads the
+                                // truth either way. Repair runs even if
+                                // the task panicked — a poisoned index
+                                // entry must not outlive the dispatch.
                                 let _ = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| src.run_one()),
                                 );
+                                if let Some(id) = id {
+                                    inner.repair_source(id);
+                                }
                             }
                             Work::Exit => return,
                         }
@@ -296,6 +509,19 @@ impl ThreadPoolExecutor {
         self.inner.state.lock().unwrap().sources.len()
     }
 
+    /// How this pool's workers pick steal dispatches.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.inner.mode
+    }
+
+    /// Sources currently present in the priority index (diagnostics;
+    /// always 0 in linear-scan mode). May transiently exceed the number
+    /// of non-empty sources — stale-high entries are repaired on their
+    /// next dispatch, not eagerly.
+    pub fn indexed_sources(&self) -> usize {
+        self.inner.state.lock().unwrap().index.len()
+    }
+
     /// How many times a worker woke up and found no work to run.
     /// Monotonic; benches read a before/after delta to quantify the
     /// idle churn a workload induces on the pool.
@@ -313,8 +539,19 @@ impl ThreadPoolExecutor {
     /// the queue runs the task itself — no task is ever stranded.
     pub fn shutdown(&self) {
         {
-            let _st = self.inner.state.lock().unwrap();
+            let mut st = self.inner.state.lock().unwrap();
             self.inner.shutdown.store(true, Ordering::Release);
+            // Re-index every source once so the drain-before-exit
+            // guarantee holds even for hand-rolled sources that gained
+            // tasks without a `notify_source` (scheduler queues always
+            // notify; this is belt-and-braces for direct TaskSource
+            // users).
+            if self.inner.mode == DispatchMode::Indexed {
+                let ids: Vec<SourceId> = st.sources.keys().copied().collect();
+                for id in ids {
+                    st.refresh_index(id);
+                }
+            }
         }
         self.inner.cv.notify_all();
         let mut workers = self.workers.lock().unwrap();
@@ -353,21 +590,59 @@ impl Executor for ThreadPoolExecutor {
         let mut st = self.inner.state.lock().unwrap();
         let id = st.next_source;
         st.next_source += 1;
-        st.sources.push(SourceEntry { id, source });
+        match self.inner.mode {
+            DispatchMode::Indexed => {
+                st.sources.insert(id, SourceEntry { source, key: None });
+                // A source registered already non-empty (tests and
+                // direct TaskSource users pre-fill before registering)
+                // must be indexed now — it will never send a
+                // become-nonempty notify.
+                if st.refresh_index(id) {
+                    self.inner.cv.notify_one();
+                }
+            }
+            // The scan order is only read by the ablation; the indexed
+            // path keeps no per-source Vec bookkeeping.
+            DispatchMode::LinearScan => {
+                st.order.push((id, Arc::clone(&source)));
+                st.sources.insert(id, SourceEntry { source, key: None });
+            }
+        }
         Some(id)
     }
 
     fn unregister_source(&self, id: SourceId) {
         let mut st = self.inner.state.lock().unwrap();
-        st.sources.retain(|e| e.id != id);
+        if let Some(e) = st.sources.remove(&id) {
+            if let Some(k) = e.key {
+                st.index.remove(&k);
+            }
+        }
+        if self.inner.mode == DispatchMode::LinearScan {
+            st.order.retain(|(eid, _)| *eid != id);
+        }
     }
 
-    fn notify_source(&self) -> bool {
-        let _st = self.inner.state.lock().unwrap();
+    fn notify_source(&self, id: SourceId) -> bool {
+        let mut st = self.inner.state.lock().unwrap();
         if self.inner.shutdown.load(Ordering::Acquire) {
             return false;
         }
-        self.inner.cv.notify_one();
+        match self.inner.mode {
+            DispatchMode::Indexed => {
+                // Fresh-read the source's top priority under the pool
+                // lock and update the index; wake a worker only when the
+                // source actually has something to run (become-nonempty
+                // or priority-raised; a notify that lost the race to a
+                // stealing worker finds the source empty and wakes
+                // nobody).
+                if st.refresh_index(id) {
+                    self.inner.cv.notify_one();
+                }
+            }
+            // Ablation: no index to maintain; wake a worker to rescan.
+            DispatchMode::LinearScan => self.inner.cv.notify_one(),
+        }
         true
     }
 }
@@ -606,13 +881,7 @@ mod tests {
         let pool = ThreadPoolExecutor::new("steal", 1);
         let log = Arc::new(Mutex::new(Vec::new()));
         // Park the single worker so both sources fill before any steal.
-        let (gate_tx, gate_rx) = mpsc::channel::<()>();
-        let (entered_tx, entered_rx) = mpsc::channel::<()>();
-        pool.execute(Box::new(move || {
-            entered_tx.send(()).unwrap();
-            gate_rx.recv().unwrap();
-        }));
-        entered_rx.recv().unwrap();
+        let gate_tx = crate::benchutil::park_worker(&pool);
         let lo = Arc::new(TestSource {
             priority: 1,
             pending: Mutex::new(3),
@@ -643,7 +912,7 @@ mod tests {
             log: Arc::clone(&log),
         });
         let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
-        pool.notify_source();
+        pool.notify_source(id);
         pool.shutdown();
         assert_eq!(log.lock().unwrap().len(), 10, "all source tasks ran before exit");
         pool.unregister_source(id);
@@ -654,9 +923,196 @@ mod tests {
     #[test]
     fn notify_source_reports_shutdown() {
         let pool = ThreadPoolExecutor::new("n", 1);
-        assert!(pool.notify_source());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Arc::new(TestSource {
+            priority: 1,
+            pending: Mutex::new(0),
+            log,
+        });
+        let id = pool.register_source(src as Arc<dyn TaskSource>).unwrap();
+        assert!(pool.notify_source(id));
+        assert!(pool.notify_source(id + 999), "unknown ids still report liveness");
         pool.shutdown();
-        assert!(!pool.notify_source(), "dead pool must tell the queue to run inline");
+        assert!(!pool.notify_source(id), "dead pool must tell the queue to run inline");
+    }
+
+    /// A source whose `run_one` parks on a gate after popping — for
+    /// mid-dispatch lifecycle tests (the worker is provably *inside* a
+    /// steal dispatch while the main thread mutates registrations).
+    struct GatedSource {
+        pending: Mutex<usize>,
+        // Mutex-wrapped so the source is Sync on all supported
+        // toolchains (mpsc endpoints are not Sync everywhere).
+        entered: Mutex<mpsc::Sender<()>>,
+        gate: Mutex<mpsc::Receiver<()>>,
+        ran: Arc<AtomicUsize>,
+    }
+
+    impl TaskSource for GatedSource {
+        fn top_priority(&self) -> Option<u32> {
+            (*self.pending.lock().unwrap() > 0).then_some(4)
+        }
+
+        fn run_one(&self) -> bool {
+            {
+                let mut p = self.pending.lock().unwrap();
+                if *p == 0 {
+                    return false;
+                }
+                *p -= 1;
+            }
+            self.entered.lock().unwrap().send(()).unwrap();
+            self.gate.lock().unwrap().recv().unwrap();
+            self.ran.fetch_add(1, Ordering::SeqCst);
+            true
+        }
+    }
+
+    #[test]
+    fn unregister_mid_dispatch_never_resurrects_and_reregister_gets_fresh_id() {
+        // Satellite regression (SourceId lifecycle): unregister while a
+        // worker's steal dispatch is mid-flight must not let the
+        // post-dispatch repair resurrect the stale index entry, and a
+        // re-registration (new id — ids are never reused) must route
+        // dispatches correctly from then on.
+        let pool = ThreadPoolExecutor::new("life", 1);
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let ran = Arc::new(AtomicUsize::new(0));
+        let src = Arc::new(GatedSource {
+            pending: Mutex::new(2),
+            entered: Mutex::new(entered_tx),
+            gate: Mutex::new(gate_rx),
+            ran: Arc::clone(&ran),
+        });
+        let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        // Registration indexed the pre-filled source; the worker is now
+        // inside run_one, parked on the gate.
+        entered_rx.recv().unwrap();
+        pool.unregister_source(id);
+        assert_eq!(pool.num_sources(), 0);
+        assert_eq!(pool.indexed_sources(), 0, "unregister drops the index entry");
+        // Re-register the same source while the old dispatch is still in
+        // flight: it must get a fresh id the stale repair cannot alias.
+        let id2 = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        assert_ne!(id, id2, "source ids are never reused");
+        // First task completes; the worker's repair of the STALE id must
+        // be a no-op (not re-insert it), and the next dispatch must come
+        // through the new registration.
+        gate_tx.send(()).unwrap();
+        entered_rx.recv().unwrap();
+        gate_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "both tasks ran exactly once");
+        assert_eq!(pool.num_sources(), 1);
+        assert_eq!(pool.indexed_sources(), 0, "drained source leaves no entry");
+    }
+
+    #[test]
+    fn stale_high_index_entry_is_repaired_not_trusted() {
+        // A stale-high entry (the indexed task was consumed out from
+        // under the index) must cost one empty run_one + repair, never
+        // block lower-priority sources or hang the worker.
+        let pool = ThreadPoolExecutor::new("stale", 1);
+        let gate_tx = crate::benchutil::park_worker(&pool); // worker parked
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let stale = Arc::new(TestSource {
+            priority: 9,
+            pending: Mutex::new(1),
+            log: Arc::clone(&log),
+        });
+        pool.register_source(Arc::clone(&stale) as Arc<dyn TaskSource>).unwrap();
+        let (ran_tx, ran_rx) = mpsc::channel::<()>();
+        struct SignalSource {
+            pending: Mutex<usize>,
+            ran: Mutex<mpsc::Sender<()>>,
+        }
+        impl TaskSource for SignalSource {
+            fn top_priority(&self) -> Option<u32> {
+                (*self.pending.lock().unwrap() > 0).then_some(1)
+            }
+            fn run_one(&self) -> bool {
+                {
+                    let mut p = self.pending.lock().unwrap();
+                    if *p == 0 {
+                        return false;
+                    }
+                    *p -= 1;
+                }
+                self.ran.lock().unwrap().send(()).unwrap();
+                true
+            }
+        }
+        pool.register_source(Arc::new(SignalSource {
+            pending: Mutex::new(1),
+            ran: Mutex::new(ran_tx),
+        }) as Arc<dyn TaskSource>)
+            .unwrap();
+        assert_eq!(pool.indexed_sources(), 2);
+        // The high-priority task vanishes (in a bigger pool: another
+        // worker's steal). Its index entry is now stale-high and sits
+        // *above* the signal source.
+        *stale.pending.lock().unwrap() = 0;
+        gate_tx.send(()).unwrap();
+        // The worker must dispatch the stale entry first (priority 9),
+        // pop nothing, repair it away, and still reach the live source.
+        ran_rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("live source starved behind a stale index entry");
+        pool.shutdown();
+        assert!(log.lock().unwrap().is_empty(), "the vanished task never ran");
+        assert_eq!(pool.indexed_sources(), 0, "stale entry repaired, not trusted");
+    }
+
+    #[test]
+    fn notify_fresh_reads_the_source_across_steal_races() {
+        // The notify-vs-steal race: a notify that lost its task to a
+        // concurrent steal must leave no ghost entry (fresh read under
+        // the pool lock), and a notify after new supply must index —
+        // and run — every accepted task.
+        let pool = ThreadPoolExecutor::new("race", 1);
+        let gate_tx = crate::benchutil::park_worker(&pool);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Arc::new(TestSource {
+            priority: 3,
+            pending: Mutex::new(0),
+            log: Arc::clone(&log),
+        });
+        let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        assert_eq!(pool.indexed_sources(), 0, "empty source is not indexed");
+        *src.pending.lock().unwrap() = 2;
+        assert!(pool.notify_source(id)); // become-nonempty
+        assert_eq!(pool.indexed_sources(), 1);
+        *src.pending.lock().unwrap() = 0; // stolen before the worker woke
+        assert!(pool.notify_source(id)); // notify fresh-reads: entry removed
+        assert_eq!(pool.indexed_sources(), 0, "won race leaves no ghost entry");
+        *src.pending.lock().unwrap() = 3;
+        assert!(pool.notify_source(id));
+        gate_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(*log.lock().unwrap(), vec![3, 3, 3], "no task lost across the races");
+    }
+
+    #[test]
+    fn linear_scan_ablation_still_steals_by_priority() {
+        // The executor_linear_scan ablation must keep the old scan
+        // semantics so benches compare like for like.
+        let pool = ThreadPoolExecutor::with_dispatch_mode("scan", 1, DispatchMode::LinearScan);
+        assert_eq!(pool.dispatch_mode(), DispatchMode::LinearScan);
+        let gate_tx = crate::benchutil::park_worker(&pool);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for (priority, pending) in [(1u32, 3usize), (7, 2)] {
+            pool.register_source(Arc::new(TestSource {
+                priority,
+                pending: Mutex::new(pending),
+                log: Arc::clone(&log),
+            }) as Arc<dyn TaskSource>)
+                .unwrap();
+        }
+        assert_eq!(pool.indexed_sources(), 0, "linear mode maintains no index");
+        gate_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(*log.lock().unwrap(), vec![7, 7, 1, 1, 1]);
     }
 
     #[test]
@@ -680,7 +1136,7 @@ mod tests {
             log,
         });
         assert!(ex.register_source(src as Arc<dyn TaskSource>).is_none());
-        assert!(!ex.notify_source());
+        assert!(!ex.notify_source(0));
     }
 
     #[test]

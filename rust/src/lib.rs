@@ -64,7 +64,7 @@ pub mod prelude {
         ProcessOutcome,
     };
     pub use crate::error::{MpError, MpResult};
-    pub use crate::executor::{Executor, InlineExecutor, ThreadPoolExecutor};
+    pub use crate::executor::{DispatchMode, Executor, InlineExecutor, ThreadPoolExecutor};
     pub use crate::graph::{
         Graph, GraphBuilder, GraphConfig, InputHandle, OutputStreamPoller, Poll, SidePackets,
         SubgraphRegistry,

@@ -12,11 +12,15 @@
 //!
 //! * **Stealing** (default on executors that support it, i.e.
 //!   [`ThreadPoolExecutor`]): the queue registers its core as a
-//!   [`TaskSource`]; a push just notifies the pool, and an idle worker
-//!   pops the globally highest-priority task across *every* queue
-//!   registered with that pool. Priorities therefore order work across
-//!   graphs sharing a pool, not just within one queue — a bursting
-//!   graph cannot starve another graph's high-priority task.
+//!   [`TaskSource`]; a push notifies the pool *that this source
+//!   changed* (`notify_source(id)` — the pool re-reads the queue's top
+//!   priority and updates its steal index), and an idle worker pops the
+//!   globally highest-priority task across *every* queue registered
+//!   with that pool. Priorities therefore order work across graphs
+//!   sharing a pool, not just within one queue — a bursting graph
+//!   cannot starve another graph's high-priority task. Pops need no
+//!   notification: the worker that dispatched this queue re-reads and
+//!   repairs the index entry after `run_one` returns.
 //! * **FIFO drains** (executors without stealing support, such as
 //!   [`crate::executor::InlineExecutor`], or explicitly via
 //!   [`SchedulerQueue::with_executor_fifo_drains`] for ablation): every
@@ -327,8 +331,13 @@ impl SchedulerQueue {
                 let core = Arc::clone(&self.core);
                 self.executor.execute(Box::new(move || core.drain_one()));
             }
-            Submission::Steal(_) => {
-                if !self.executor.notify_source() {
+            Submission::Steal(id) => {
+                // Change notification for the executor's priority index
+                // (become-nonempty or top-priority-raised): the executor
+                // fresh-reads this queue's top under its pool lock, so
+                // the heap lock must already be released here (pool →
+                // heap is the sanctioned lock order).
+                if !self.executor.notify_source(id) {
                     // The pool shut down and no worker will come: run
                     // the work on the pushing thread so nothing accepted
                     // is ever stranded (mirrors `execute`'s inline
@@ -684,13 +693,7 @@ mod tests {
         // order work across all queues sharing the pool, not just
         // within one.
         let pool = Arc::new(ThreadPoolExecutor::new("steal-q", 1));
-        let (gate_tx, gate_rx) = mpsc::channel::<()>();
-        let (entered_tx, entered_rx) = mpsc::channel::<()>();
-        pool.execute(Box::new(move || {
-            entered_tx.send(()).unwrap();
-            gate_rx.recv().unwrap();
-        }));
-        entered_rx.recv().unwrap(); // worker parked
+        let gate_tx = crate::benchutil::park_worker(&pool); // worker parked
         let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool) as Arc<dyn Executor>);
         let qb = SchedulerQueue::with_executor("b", Arc::clone(&pool) as Arc<dyn Executor>);
         let order: Arc<Mutex<Vec<(char, usize)>>> = Arc::new(Mutex::new(Vec::new()));
@@ -710,6 +713,38 @@ mod tests {
         let got = order.lock().unwrap();
         assert_eq!(got.len(), 11);
         assert_eq!(got[0], ('b', 99), "high-priority task stolen first: {got:?}");
+    }
+
+    #[test]
+    fn priority_raise_reindexes_a_queue_above_its_peers() {
+        // Two queues on one parked single-worker pool: pushing a
+        // higher-priority task into a queue that already holds a low one
+        // must re-key the queue's index entry (top-priority-raised
+        // notification), so dispatch follows the *current* top — not the
+        // priority the queue had when it first became non-empty.
+        let pool = Arc::new(ThreadPoolExecutor::new("raise", 1));
+        let gate_tx = crate::benchutil::park_worker(&pool); // worker parked
+        let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool) as Arc<dyn Executor>);
+        let qb = SchedulerQueue::with_executor("b", Arc::clone(&pool) as Arc<dyn Executor>);
+        let order: Arc<Mutex<Vec<(char, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        for (tag, q) in [('a', &qa), ('b', &qb)] {
+            let o2 = Arc::clone(&order);
+            q.start(Arc::new(move |id| {
+                o2.lock().unwrap().push((tag, id));
+            }));
+        }
+        qa.push(0, 1); // qa indexed at priority 1
+        qb.push(0, 5); // qb indexed at priority 5
+        qa.push(1, 9); // raise: qa must re-key above qb
+        gate_tx.send(()).unwrap();
+        qa.shutdown();
+        qb.shutdown();
+        let got = order.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![('a', 1), ('b', 0), ('a', 0)],
+            "dispatch must follow current tops: raised qa first, then qb, then qa's leftover"
+        );
     }
 
     #[test]

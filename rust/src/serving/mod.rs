@@ -11,7 +11,11 @@
 //! **one shared [`ThreadPoolExecutor`](crate::executor::ThreadPoolExecutor)**,
 //! so concurrent request processing never multiplies worker threads, and
 //! every request leaves tracer evidence of its graph run. Python never
-//! appears on this path.
+//! appears on this path. Serving pools are the heaviest users of that
+//! executor's steal dispatch — `pool_capacity` graphs × several queues
+//! each, all registered on one pool — so they are the main beneficiary
+//! of its indexed O(log n) source selection (see [`crate::executor`],
+//! "The steal index and its notification protocol").
 //!
 //! ## Pooled vs streaming: the isolation/throughput trade-off
 //!

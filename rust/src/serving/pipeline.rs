@@ -407,6 +407,13 @@ node {{
 mod tests {
     use super::*;
 
+    /// The single test-scoped bound on graph output, playing the role
+    /// `ServerConfig::batch_timeout` plays on the serving path (these
+    /// tests drive graphs directly — no server, so no live config to
+    /// read). Tighter than the 60 s production default: a wedged graph
+    /// fails the test in seconds.
+    const OUTPUT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(15);
+
     #[test]
     fn pipeline_config_parses_and_plans() {
         ensure_registered();
@@ -457,7 +464,7 @@ mod tests {
         )
         .unwrap();
         g.close_all_inputs().unwrap();
-        let out = match poller.poll(std::time::Duration::from_secs(10)) {
+        let out = match poller.poll(OUTPUT_TIMEOUT) {
             crate::graph::Poll::Packet(p) => p.get::<Vec<Detections>>().unwrap().clone(),
             other => panic!("expected echo output, got {other:?}"),
         };

@@ -347,7 +347,17 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         .unwrap()
     }
 
-    fn run_once(mut g: PooledGraph, values: &[i64]) -> Vec<i64> {
+    /// The single test-scoped bound on one batch's time inside a graph,
+    /// playing the role `ServerConfig::batch_timeout` plays on the
+    /// serving path (these unit tests drive graphs directly — no server,
+    /// so no live config to read). `run_once` takes it as a parameter
+    /// (the ISSUE's alternative to threading a config through), so there
+    /// is exactly one knob here, tighter than the 60 s production
+    /// default: a wedged graph fails the test in seconds, not a minute
+    /// per poll.
+    const OUTPUT_TIMEOUT: Duration = Duration::from_secs(15);
+
+    fn run_once(mut g: PooledGraph, values: &[i64], output_timeout: Duration) -> Vec<i64> {
         let poller = g.poller("out").unwrap();
         g.start_run(SidePackets::new()).unwrap();
         for &v in values {
@@ -356,7 +366,7 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         g.close_all_inputs().unwrap();
         let mut got = Vec::new();
         loop {
-            match poller.poll(Duration::from_secs(5)) {
+            match poller.poll(output_timeout) {
                 crate::graph::Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
                 crate::graph::Poll::Done => break,
                 crate::graph::Poll::TimedOut => panic!("timed out"),
@@ -387,13 +397,13 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
     #[test]
     fn used_instance_is_replaced_and_second_run_sees_no_state() {
         let pool = GraphPool::new(&chain_config(), 1).unwrap();
-        let out1 = run_once(pool.checkout().unwrap(), &[1, 2, 3]);
+        let out1 = run_once(pool.checkout().unwrap(), &[1, 2, 3], OUTPUT_TIMEOUT);
         assert_eq!(out1, vec![1, 2, 3]);
         assert_eq!(pool.available(), 1, "slot refilled after use");
         assert_eq!(pool.graphs_built(), 2, "used instance replaced by a fresh build");
         // The second run must not observe packets, bounds or tracer
         // state from the first.
-        let out2 = run_once(pool.checkout().unwrap(), &[10, 20]);
+        let out2 = run_once(pool.checkout().unwrap(), &[10, 20], OUTPUT_TIMEOUT);
         assert_eq!(out2, vec![10, 20]);
     }
 
@@ -417,18 +427,27 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         let pool = GraphPool::new(&chain_config(), 1).unwrap();
         pool.set_async_refill(true);
         pool.set_async_refill(true); // idempotent: still one worker
+        // The follow-up hook fires after every rebuild pass — a
+        // channel-waited signal that the worker caught up (replacing the
+        // old sleep-and-poll loop, which was flaky under load). The hook
+        // rides the same single worker, so the spawn-count claim below
+        // still holds.
+        let (pass_tx, pass_rx) = std::sync::mpsc::channel::<()>();
+        let pass_tx = Mutex::new(pass_tx); // the hook must be Sync
+        pool.set_refill_followup(move |_| {
+            let _ = pass_tx.lock().unwrap().send(());
+        });
         for i in 0..8i64 {
-            let out = run_once(pool.checkout().unwrap(), &[i + 1]);
+            let out = run_once(pool.checkout().unwrap(), &[i + 1], OUTPUT_TIMEOUT);
             assert_eq!(out, vec![i + 1]);
         }
-        // The worker refills asynchronously; wait for it to catch up.
-        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        // Wait for rebuild passes until capacity is restored; each pass
+        // sends exactly one signal, so this blocks on the worker, never
+        // spins.
         while pool.available() < pool.capacity() {
-            assert!(
-                std::time::Instant::now() < deadline,
-                "refill worker never restored capacity"
-            );
-            std::thread::sleep(Duration::from_millis(5));
+            pass_rx
+                .recv_timeout(Duration::from_secs(20))
+                .expect("refill worker never restored capacity");
         }
         assert!(
             refill_workers_spawned() <= before + 1,
@@ -444,33 +463,23 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
     fn refill_followup_runs_on_the_worker() {
         let pool = GraphPool::new(&chain_config(), 1).unwrap();
         pool.set_async_refill(true);
-        let hits = Arc::new(AtomicUsize::new(0));
-        let h2 = Arc::clone(&hits);
+        let (hit_tx, hit_rx) = std::sync::mpsc::channel::<()>();
+        let hit_tx = Mutex::new(hit_tx); // the hook must be Sync
         pool.set_refill_followup(move |p| {
             assert!(p.capacity() >= 1);
-            h2.fetch_add(1, Ordering::SeqCst);
+            let _ = hit_tx.lock().unwrap().send(());
         });
-        // Registration kicks one pass immediately.
-        let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        while hits.load(Ordering::SeqCst) == 0 {
-            assert!(
-                std::time::Instant::now() < deadline,
-                "followup never ran after registration"
-            );
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        // Registration kicks one pass immediately; wait on the hook's
+        // own signal (channel-waited, not sleep-polled).
+        hit_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("followup never ran after registration");
         // A used check-in triggers another pass (refill, then followup).
-        let before = hits.load(Ordering::SeqCst);
-        let out = run_once(pool.checkout().unwrap(), &[5]);
+        let out = run_once(pool.checkout().unwrap(), &[5], OUTPUT_TIMEOUT);
         assert_eq!(out, vec![5]);
-        let deadline = std::time::Instant::now() + Duration::from_secs(10);
-        while hits.load(Ordering::SeqCst) <= before {
-            assert!(
-                std::time::Instant::now() < deadline,
-                "followup did not rerun after a used check-in"
-            );
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        hit_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("followup did not rerun after a used check-in");
     }
 
     #[test]
@@ -480,9 +489,9 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         // test perturbs the global spawn counter.
         let pool_exec: Arc<dyn Executor> = Arc::new(ThreadPoolExecutor::new("pool-test", 2));
         let pool = GraphPool::with_executor(&chain_config(), 4, pool_exec).unwrap();
-        let out = run_once(pool.checkout().unwrap(), &[7, 8]);
+        let out = run_once(pool.checkout().unwrap(), &[7, 8], OUTPUT_TIMEOUT);
         assert_eq!(out, vec![7, 8]);
-        let out2 = run_once(pool.checkout().unwrap(), &[9]);
+        let out2 = run_once(pool.checkout().unwrap(), &[9], OUTPUT_TIMEOUT);
         assert_eq!(out2, vec![9]);
     }
 }

@@ -12,14 +12,15 @@
 
 mod common;
 
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 
 use common::{drive, passthrough_chain};
 use mediapipe::executor::{
-    ensure_named_pool, process_pool, worker_threads_spawned, Executor, TaskSource,
+    ensure_named_pool, process_pool, worker_threads_spawned, DispatchMode, Executor, TaskSource,
     ThreadPoolExecutor,
 };
 use mediapipe::prelude::*;
+use mediapipe::scheduler::SchedulerQueue;
 
 static COUNTER_LOCK: Mutex<()> = Mutex::new(());
 
@@ -137,13 +138,7 @@ fn high_priority_graph_task_is_stolen_ahead_of_a_bursting_graph() {
     // One single-worker named pool shared by two graphs.
     let pool = ensure_named_pool("steal-test", 1);
     // Park the worker so both graphs queue work before anything runs.
-    let (gate_tx, gate_rx) = mpsc::channel::<()>();
-    let (entered_tx, entered_rx) = mpsc::channel::<()>();
-    pool.execute(Box::new(move || {
-        entered_tx.send(()).unwrap();
-        gate_rx.recv().unwrap();
-    }));
-    entered_rx.recv().unwrap(); // worker is inside the gate
+    let gate_tx = mediapipe::benchutil::park_worker(&pool);
 
     let order: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
 
@@ -199,15 +194,14 @@ node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "ou
     assert!(got[1..].iter().all(|&c| c == 'A'));
 }
 
-#[test]
-fn equal_priority_sources_are_served_round_robin() {
-    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
-    // Satellite regression (ROADMAP "steal fairness"): the steal scan
-    // used to break priority ties by registration order, so under
-    // sustained equal-priority load the earliest-registered queue
-    // starved the rest. The scan start index now rotates once per steal
-    // dispatch — with a single worker the service order is exactly
-    // round-robin, deterministically.
+/// Steal-fairness proof (ROADMAP "steal fairness", re-proven for the
+/// PR 5 priority index): three equal-priority sources with sustained
+/// supply on a single-worker pool must be served exactly round-robin —
+/// never by registration order. Runs against one explicit
+/// [`DispatchMode`]; both the indexed path and the linear-scan ablation
+/// must satisfy the same guarantee (the index's rotation stamp replaces
+/// the scan-start cursor).
+fn round_robin_proof(mode: DispatchMode) {
     struct TaggedSource {
         tag: usize,
         pending: Mutex<usize>,
@@ -229,15 +223,10 @@ fn equal_priority_sources_are_served_round_robin() {
             true
         }
     }
-    let pool = ThreadPoolExecutor::new("rr", 1);
+    let pool = ThreadPoolExecutor::with_dispatch_mode("rr", 1, mode);
+    assert_eq!(pool.dispatch_mode(), mode);
     // Park the single worker so every source fills before any steal.
-    let (gate_tx, gate_rx) = mpsc::channel::<()>();
-    let (entered_tx, entered_rx) = mpsc::channel::<()>();
-    pool.execute(Box::new(move || {
-        entered_tx.send(()).unwrap();
-        gate_rx.recv().unwrap();
-    }));
-    entered_rx.recv().unwrap();
+    let gate_tx = mediapipe::benchutil::park_worker(&pool);
     let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
     for tag in 0..3usize {
         pool.register_source(Arc::new(TaggedSource {
@@ -254,9 +243,56 @@ fn equal_priority_sources_are_served_round_robin() {
     assert_eq!(
         got,
         vec![0, 1, 2, 0, 1, 2, 0, 1, 2],
-        "equal-priority sources must be served round-robin, not by \
-         registration order"
+        "equal-priority sources must be served round-robin under \
+         {mode:?}, not by registration order"
     );
+}
+
+#[test]
+fn equal_priority_sources_are_served_round_robin() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    round_robin_proof(DispatchMode::Indexed);
+}
+
+#[test]
+fn equal_priority_sources_are_served_round_robin_in_linear_scan_ablation() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    round_robin_proof(DispatchMode::LinearScan);
+}
+
+#[test]
+fn equal_priority_queues_with_sustained_supply_alternate_exactly() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // The same fairness guarantee through real SchedulerQueues and the
+    // real push→notify_source→index protocol (not hand-rolled sources):
+    // two queues with equal-priority supply on one parked single-worker
+    // pool must alternate exactly, in both dispatch modes.
+    for mode in [DispatchMode::Indexed, DispatchMode::LinearScan] {
+        let pool = Arc::new(ThreadPoolExecutor::with_dispatch_mode("alt", 1, mode));
+        let gate_tx = mediapipe::benchutil::park_worker(&pool); // worker parked
+        let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool) as Arc<dyn Executor>);
+        let qb = SchedulerQueue::with_executor("b", Arc::clone(&pool) as Arc<dyn Executor>);
+        let order: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
+        for (tag, q) in [('a', &qa), ('b', &qb)] {
+            let o2 = Arc::clone(&order);
+            q.start(Arc::new(move |_id| {
+                o2.lock().unwrap().push(tag);
+            }));
+        }
+        for i in 0..4usize {
+            assert!(qa.push(i, 5));
+            assert!(qb.push(i, 5));
+        }
+        gate_tx.send(()).unwrap();
+        qa.shutdown();
+        qb.shutdown();
+        let got = order.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec!['a', 'b', 'a', 'b', 'a', 'b', 'a', 'b'],
+            "equal-priority queues must alternate exactly under {mode:?}"
+        );
+    }
 }
 
 #[test]
@@ -267,13 +303,7 @@ fn fifo_drain_ablation_serves_arrival_order() {
     // pushed first — runs before the later high-priority task. This
     // pins down exactly what the tentpole changed.
     let pool = ensure_named_pool("fifo-ablate-test", 1);
-    let (gate_tx, gate_rx) = mpsc::channel::<()>();
-    let (entered_tx, entered_rx) = mpsc::channel::<()>();
-    pool.execute(Box::new(move || {
-        entered_tx.send(()).unwrap();
-        gate_rx.recv().unwrap();
-    }));
-    entered_rx.recv().unwrap();
+    let gate_tx = mediapipe::benchutil::park_worker(&pool);
 
     let order: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
     let burst_cfg = GraphConfig::parse(
