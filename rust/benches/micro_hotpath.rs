@@ -4,18 +4,24 @@
 //!   packet clone / typed access,
 //!   input-queue push+pop,
 //!   default-policy readiness + input-set extraction,
-//!   scheduler task dispatch,
-//!   end-to-end passthrough-chain throughput (the "framework tax").
+//!   scheduler task dispatch (per [`DispatchMode`]),
+//!   end-to-end serving dispatch through a [`PipelineServer`] — the
+//!   current request path (streaming sessions over a shared pool), so
+//!   per-packet dispatch cost is measured through the sharded executor
+//!   rather than the legacy direct-graph path.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
-use mediapipe::benchutil::{per_sec, section, Samples};
+use mediapipe::benchutil::{detect_wave, per_sec, section, stub_detector_artifacts, Samples};
+use mediapipe::executor::{DispatchMode, Executor, ThreadPoolExecutor};
 use mediapipe::packet::Packet;
+use mediapipe::perception::SyntheticWorld;
 use mediapipe::policies::{DefaultPolicy, InputPolicy, Readiness};
 use mediapipe::prelude::*;
 use mediapipe::scheduler::SchedulerQueue;
+use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
 use mediapipe::stream::InputStreamQueue;
 
 const N: usize = 1_000_000;
@@ -81,54 +87,73 @@ fn bench_policy() {
     );
 }
 
-fn bench_scheduler_dispatch() {
-    section("scheduler queue dispatch");
-    let q = SchedulerQueue::new("bench", 1);
-    let count = Arc::new(AtomicUsize::new(0));
-    let c2 = Arc::clone(&count);
-    q.start(Arc::new(move |_id| {
-        c2.fetch_add(1, Ordering::Relaxed);
-    }));
-    let s = Samples::run("push->execute 100k tasks", 1, 5, || {
-        let before = count.load(Ordering::Relaxed);
-        for i in 0..100_000 {
-            q.push(i % 16, (i % 7) as u32);
-        }
-        while count.load(Ordering::Relaxed) < before + 100_000 {
-            std::hint::spin_loop();
-        }
-    });
-    println!(
-        "{}  ({:.2}M tasks/s)",
-        s.row(),
-        100_000.0 / s.min().as_secs_f64() / 1e6
-    );
-    q.shutdown();
+fn dispatch_modes() -> [(DispatchMode, &'static str); 3] {
+    [
+        (DispatchMode::Sharded, "sharded"),
+        (DispatchMode::Indexed, "indexed"),
+        (DispatchMode::LinearScan, "linear-scan"),
+    ]
 }
 
-fn bench_graph_throughput() {
-    section("graph steady-state (source -> 3 passthroughs), the framework tax");
-    for batch in [1, 16, 64] {
-        let packets = 200_000u64;
-        let config = GraphConfig::parse(&format!(
-            r#"
-node {{ calculator: "CounterSourceCalculator" output_stream: "a" options {{ count: {packets} batch: {batch} }} }}
-node {{ calculator: "PassThroughCalculator" input_stream: "a" output_stream: "b" }}
-node {{ calculator: "PassThroughCalculator" input_stream: "b" output_stream: "c" }}
-node {{ calculator: "PassThroughCalculator" input_stream: "c" output_stream: "d" }}
-"#
-        ))
-        .unwrap();
-        let mut best = 0.0f64;
-        for _ in 0..3 {
-            let mut graph = Graph::new(&config).unwrap();
-            let t0 = Instant::now();
-            graph.run(SidePackets::new()).unwrap();
-            best = best.max(per_sec(packets as usize, t0.elapsed()));
-        }
+fn bench_scheduler_dispatch() {
+    section("scheduler queue dispatch (per dispatch mode, 1 worker)");
+    for (mode, label) in dispatch_modes() {
+        let pool = Arc::new(ThreadPoolExecutor::with_dispatch_mode("bench", 1, mode));
+        let q = SchedulerQueue::with_executor("bench", Arc::clone(&pool) as Arc<dyn Executor>);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        q.start(Arc::new(move |_id| {
+            c2.fetch_add(1, Ordering::Relaxed);
+        }));
+        let s = Samples::run(&format!("push->steal 100k tasks [{label}]"), 1, 5, || {
+            let before = count.load(Ordering::Relaxed);
+            for i in 0..100_000 {
+                q.push(i % 16, (i % 7) as u32);
+            }
+            while count.load(Ordering::Relaxed) < before + 100_000 {
+                std::hint::spin_loop();
+            }
+        });
         println!(
-            "source batch {batch:>3}: {best:>12.0} packets/s through 4 nodes ({:.0} node-hops/s)",
-            best * 4.0
+            "{}  ({:.2}M tasks/s)",
+            s.row(),
+            100_000.0 / s.min().as_secs_f64() / 1e6
+        );
+        q.shutdown();
+    }
+}
+
+fn bench_serving_dispatch() {
+    section("serving per-request dispatch: streaming PipelineServer, stub backend");
+    let requests = 2_000usize;
+    for (mode, label) in dispatch_modes() {
+        let server = PipelineServer::start(ServerConfig {
+            artifact_dir: stub_detector_artifacts("mp-hotpath"),
+            max_batch: 1, // one request per timestamp: dispatch cost dominates
+            max_wait: Duration::from_micros(200),
+            min_score: 0.0,
+            input_size: 8,
+            pool_capacity: 2,
+            executor_threads: 2,
+            mode: ServingMode::Streaming,
+            session_max_timestamps: 0, // never recycle: steady-state cost
+            pipeline_depth: 4,
+            dispatch_mode: mode,
+            ..Default::default()
+        })
+        .unwrap();
+        let h = server.handle();
+        let mut world = SyntheticWorld::new(8, 8, 1, 11);
+        let (_, warm_errors) = detect_wave(&h, &mut world, 200);
+        assert_eq!(warm_errors, 0, "warmup wave must succeed");
+        let idle0 = server.executor().idle_wakeups();
+        let (elapsed, errors) = detect_wave(&h, &mut world, requests);
+        assert_eq!(errors, 0, "bench wave must succeed");
+        println!(
+            "{label:>11}: {:>10.0} req/s  ({:.1} us/req, {} idle wakeups)",
+            per_sec(requests, elapsed),
+            elapsed.as_secs_f64() * 1e6 / requests as f64,
+            server.executor().idle_wakeups() - idle0
         );
     }
 }
@@ -138,5 +163,5 @@ fn main() {
     bench_queue_ops();
     bench_policy();
     bench_scheduler_dispatch();
-    bench_graph_throughput();
+    bench_serving_dispatch();
 }

@@ -1,44 +1,48 @@
-//! Steal-dispatch scaling bench (ROADMAP "scan cost at scale"): what the
-//! pool-level priority index buys over the linear source scan as the
-//! number of registered queues grows.
+//! Steal-dispatch scaling bench (ROADMAP "scan cost at scale", extended
+//! for the sharded executor): per-dispatch cost as **both** the number
+//! of registered queues and the number of pool workers grow, across all
+//! three [`DispatchMode`]s.
 //!
-//! Setup: one **single-worker** [`ThreadPoolExecutor`] (so dispatches
-//! are serialized and the per-dispatch cost is directly observable) with
-//! N real [`SchedulerQueue`]s registered as steal sources. The worker is
+//! Setup: a [`ThreadPoolExecutor`] with W workers and N real
+//! [`SchedulerQueue`]s registered as steal sources. Every worker is
 //! parked behind a gate task while every queue is pre-loaded with an
 //! equal share of T trivial tasks (each push exercising the real
-//! `notify_source` protocol), then released; the measured interval is
-//! gate-release → last task executed, i.e. T back-to-back steal
-//! dispatches.
+//! notify protocol), then all gates release at once; the measured
+//! interval is release → last task executed, i.e. T steal dispatches
+//! racing over the pool's dispatch state.
 //!
-//! * **linear scan** (`DispatchMode::LinearScan`, the pre-index
-//!   "executor_linear_scan" ablation): every dispatch peeks all N
-//!   sources, one heap lock each — per-dispatch cost grows **linearly**
-//!   with N even though only the task at the front matters.
-//! * **indexed** (`DispatchMode::Indexed`, the default): a dispatch is
-//!   one ordered-map lookup + re-stamp plus one post-run repair —
-//!   **O(log N)**, so per-dispatch cost should stay roughly flat as N
-//!   grows 4 → 512.
+//! * **linear scan** (`DispatchMode::LinearScan`): every dispatch peeks
+//!   all N sources, one heap lock each — cost grows linearly with N,
+//!   and every dispatch holds the one pool lock.
+//! * **indexed** (`DispatchMode::Indexed`): one ordered-map lookup +
+//!   re-stamp + one post-run repair — O(log N) in sources, but every
+//!   dispatch and every notify still serialize on the pool mutex, so
+//!   cost *grows with W* (lock convoy) even though it is flat in N.
+//! * **sharded** (`DispatchMode::Sharded`, the default): per-worker
+//!   shards with dirty-flag notifies and cross-shard stealing — no
+//!   global lock on the dispatch path, so cost should stay flat
+//!   (within noise) in W *and* N.
 //!
-//! Reported: ns/dispatch per mode per N, and the linear/indexed ratio.
-//! `--smoke` (used by CI) shrinks the sweep so the bench just proves it
-//! still runs end to end.
+//! Reported: a table of ns/task per mode for each (W, N) plus one JSON
+//! row per case (machine-diffable). `--smoke` (used by CI) shrinks the
+//! sweep so the bench just proves it still runs end to end.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use mediapipe::benchutil::{section, table};
+use mediapipe::benchutil::{park_all_workers, section, table};
 use mediapipe::executor::{DispatchMode, Executor, ThreadPoolExecutor};
 use mediapipe::scheduler::SchedulerQueue;
 
 /// Drain `total` equal-priority tasks spread over `n_sources` queues on
-/// a single-worker pool in `mode`; returns the release→drained wall
+/// a `workers`-thread pool in `mode`; returns the release→drained wall
 /// time.
-fn run_mode(mode: DispatchMode, n_sources: usize, total: usize) -> Duration {
-    let pool = Arc::new(ThreadPoolExecutor::with_dispatch_mode("scan-scale", 1, mode));
-    // Park the lone worker so every queue fills before any dispatch.
-    let gate_tx = mediapipe::benchutil::park_worker(&pool);
+fn run_case(mode: DispatchMode, workers: usize, n_sources: usize, total: usize) -> Duration {
+    let pool = Arc::new(ThreadPoolExecutor::with_dispatch_mode("scan-scale", workers, mode));
+    // Park every worker so all queues fill before any dispatch, then
+    // release the whole pool at once.
+    let gates = park_all_workers(&pool);
 
     let queues: Vec<Arc<SchedulerQueue>> = (0..n_sources)
         .map(|i| {
@@ -67,7 +71,9 @@ fn run_mode(mode: DispatchMode, n_sources: usize, total: usize) -> Duration {
     }
 
     let t0 = Instant::now();
-    gate_tx.send(()).unwrap();
+    for gate in gates {
+        gate.send(()).unwrap();
+    }
     done_rx
         .recv_timeout(Duration::from_secs(300))
         .expect("tasks never drained");
@@ -76,41 +82,70 @@ fn run_mode(mode: DispatchMode, n_sources: usize, total: usize) -> Duration {
     elapsed
 }
 
+fn mode_label(mode: DispatchMode) -> &'static str {
+    match mode {
+        DispatchMode::Sharded => "sharded",
+        DispatchMode::Indexed => "indexed",
+        DispatchMode::LinearScan => "linear",
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let (source_counts, total): (&[usize], usize) = if smoke {
-        (&[4, 32], 2_000)
+    let (worker_counts, source_counts, total): (&[usize], &[usize], usize) = if smoke {
+        (&[1, 4], &[4, 32], 2_000)
     } else {
-        (&[4, 32, 128, 512], 20_000)
+        (&[1, 2, 4, 8, 16], &[4, 32, 128, 512], 20_000)
     };
+    let modes = [
+        DispatchMode::LinearScan,
+        DispatchMode::Indexed,
+        DispatchMode::Sharded,
+    ];
     section(&format!(
-        "steal dispatch cost vs registered source count: {total} tasks on a \
-         1-worker pool, linear scan (executor_linear_scan ablation) vs \
-         priority index{}",
+        "steal dispatch cost vs workers x sources: {total} tasks, \
+         linear scan vs single index vs sharded{}",
         if smoke { " [smoke]" } else { "" }
     ));
 
     let mut rows = Vec::new();
-    for &n in source_counts {
-        let linear = run_mode(DispatchMode::LinearScan, n, total);
-        let indexed = run_mode(DispatchMode::Indexed, n, total);
-        let per = |d: Duration| d.as_nanos() as f64 / total as f64;
-        rows.push(vec![
-            format!("{n}"),
-            format!("{:.0} ns", per(linear)),
-            format!("{:.0} ns", per(indexed)),
-            format!("{:.2}x", per(linear) / per(indexed).max(1.0)),
-        ]);
+    for &w in worker_counts {
+        for &n in source_counts {
+            let mut cells = vec![format!("{w}"), format!("{n}")];
+            let mut per_mode = Vec::new();
+            for mode in modes {
+                let elapsed = run_case(mode, w, n, total);
+                let ns = elapsed.as_nanos() as f64 / total as f64;
+                per_mode.push(ns);
+                cells.push(format!("{ns:.0} ns"));
+                println!(
+                    "{{\"bench\":\"sched_scan_scale\",\"workers\":{w},\"sources\":{n},\
+                     \"mode\":\"{}\",\"tasks\":{total},\"ns_per_dispatch\":{ns:.1}}}",
+                    mode_label(mode)
+                );
+            }
+            // linear vs sharded: the headline ratio.
+            cells.push(format!("{:.2}x", per_mode[0] / per_mode[2].max(1.0)));
+            rows.push(cells);
+        }
     }
     table(
-        &["sources", "linear scan /dispatch", "indexed /dispatch", "linear/indexed"],
+        &[
+            "workers",
+            "sources",
+            "linear /task",
+            "indexed /task",
+            "sharded /task",
+            "linear/sharded",
+        ],
         &rows,
     );
     println!(
-        "\nthe linear scan peeks every registered source per dispatch (one\n\
-         heap lock each), so its per-dispatch cost grows with the source\n\
-         count; the index pays O(log n) + one repair read and should stay\n\
-         roughly flat from 4 to 512 sources."
+        "\nthe linear scan peeks every registered source per dispatch and the\n\
+         single index serializes every dispatch + notify on one pool mutex,\n\
+         so their cost grows with sources resp. workers; the sharded engine\n\
+         dispatches from per-worker shards (coalesced notifies, cross-shard\n\
+         steal) and should stay roughly flat in both axes."
     );
     if smoke {
         println!("smoke mode: completed OK");

@@ -50,6 +50,7 @@ fn run_depth(depth: usize, sc: &Scale) -> DepthReport {
         pool_capacity: 2,
         executor_threads: 4, // enough workers for the stages to overlap
         executor_pool: None,
+        dispatch_mode: Default::default(),
         mode: ServingMode::Streaming,
         session_max_timestamps: 0, // never recycle: pure pipelining effect
         session_input_queue: 16,

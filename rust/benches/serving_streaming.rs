@@ -56,6 +56,7 @@ fn run_mode(mode: ServingMode, label: &'static str, sc: &Scale) -> ModeReport {
         pool_capacity: 2,
         executor_threads: 2,
         executor_pool: None,
+        dispatch_mode: Default::default(),
         mode,
         session_max_timestamps: 0, // never recycle: pure long-lived cost
         session_input_queue: 4,

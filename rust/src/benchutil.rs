@@ -56,6 +56,29 @@ pub fn park_worker(pool: &crate::executor::ThreadPoolExecutor) -> std::sync::mps
     gate_tx
 }
 
+/// [`park_worker`] for every worker of the pool: returns one gate per
+/// worker, all provably entered. Deterministic — a gated worker cannot
+/// take the next gate task, so each submission lands on a distinct
+/// worker. The worker-sweep bench stages all queues behind this, then
+/// releases every gate at once to measure a full-pool dispatch race.
+pub fn park_all_workers(
+    pool: &crate::executor::ThreadPoolExecutor,
+) -> Vec<std::sync::mpsc::Sender<()>> {
+    use crate::executor::Executor;
+    (0..pool.num_threads()).map(|_| park_worker(pool)).collect()
+}
+
+/// Iteration count for race-hammering tests: the `STRESS_ITERS` env var
+/// (set by CI's release-mode stress step) overrides the in-tree
+/// default, so the same tests serve as quick regression checks locally
+/// and as a soak under load in CI.
+pub fn stress_iters(default: usize) -> usize {
+    std::env::var("STRESS_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Fire `n` synthetic frames at a serving handle **without waiting
 /// between submissions** (the async wave that lets a pipelined batcher
 /// keep its window full), then wait for every reply. Returns the wall

@@ -21,57 +21,88 @@
 //!   [`Executor::execute`]; the pool runs submissions in arrival order,
 //!   so priority only orders tasks *within* a queue.
 //!
-//! ### The steal index and its notification protocol
+//! ### Dispatch architecture: shards, dirty-flag notifies, steal arbitration
 //!
 //! How a worker *finds* the globally highest-priority source is governed
-//! by [`DispatchMode`]:
+//! by [`DispatchMode`]. Three modes — the sharded engine (the default)
+//! plus two ablations kept so `benches/sched_scan_scale.rs` can show all
+//! three cost curves over both source count and worker count:
 //!
-//! * [`DispatchMode::Indexed`] (the default) keeps a pool-level
-//!   **priority index**: an ordered map from `(top priority, rotation
-//!   stamp)` to `SourceId`. Each registered source caches its current
-//!   top priority in that index; a steal dispatch is one
-//!   `first_key_value` plus a re-stamp — **O(log n)** in the number of
-//!   registered sources, under one short pool lock, instead of the
-//!   linear scan's n heap-lock acquisitions.
+//! * [`DispatchMode::Sharded`] (the default) splits dispatch state into
+//!   per-worker **shards** (one per worker unless overridden via
+//!   [`ThreadPoolExecutor::with_sharding`]). Every registered source has
+//!   a fixed *home shard* (round-robin at registration); each shard owns
+//!   a local priority index (`BTreeMap<(priority, stamp), SourceId>`)
+//!   plus a **mailbox** of source ids whose index entry is pending a
+//!   refresh. A dispatch touches one shard lock in the common case —
+//!   no pool-global mutex exists on this path, so per-dispatch cost
+//!   stays flat as workers multiply.
 //!
-//!   The index is maintained by *notifications on change*, and every
-//!   index write happens under the pool-state lock from a **fresh**
-//!   `top_priority()` read (pool lock → source heap lock, the one
-//!   sanctioned lock order):
+//!   **Dirty-flag notify protocol.** `notify_source` no longer refreshes
+//!   any index. It bumps the source's per-entry *pending* counter, and
+//!   only the 0→1 transition enqueues the id in its home shard's mailbox
+//!   and wakes (at most) one parked worker; a burst of pushes to one
+//!   queue costs one mailbox insert and one wake-up, the rest are two
+//!   atomic ops each. Mailboxes are drained at the next dispatch that
+//!   looks at the shard: each drained id is re-read **fresh**
+//!   (`top_priority()` under the shard lock) and re-keyed. The pending
+//!   counter is read *before* the fresh read and compare-exchanged to
+//!   zero *after* it, so a push racing the refresh re-enqueues the id
+//!   instead of being silently absorbed: a source holding an accepted
+//!   task is always covered by an index entry, a mailbox entry, or the
+//!   shutdown re-index — never silently missing (the PR 5 invariant,
+//!   kept).
 //!
-//!   - [`Executor::notify_source`]`(id)` — called by the queue after a
-//!     push (become-nonempty or top-priority-raised): the pool
-//!     re-reads the source's top priority, updates its index entry,
-//!     and wakes a worker if the source is non-empty;
-//!   - **registration** indexes a source that is already non-empty;
-//!   - **repair** — after every indexed dispatch the worker re-reads
-//!     the source it just ran and re-indexes it (top lowered by the
-//!     pop, or became empty, or the steal race popped nothing).
+//!   **Local dispatch and steal arbitration.** A worker serves its own
+//!   shard first: drain the mailbox, pop the local top, re-stamp. When
+//!   its shard is dry it becomes a **stealer** and consults the
+//!   cross-shard arbiter: scan every shard (draining their mailboxes en
+//!   route) and dispatch the globally best `(priority, stamp)` entry.
+//!   Stamps come from one pool-wide monotone counter, so among
+//!   equal-priority sources the least-recently-served wins *across*
+//!   shards too — sustained equal-priority load is served exactly
+//!   round-robin within a shard and across steals. Locality beats
+//!   global priority while a worker's own shard has work; the two paths
+//!   that re-impose global order are the steal scan and:
 //!
-//!   Because every write is a fresh read serialized by the pool lock, a
-//!   source holding an accepted task always has an index entry once its
-//!   push's notify completes: entries can be **stale-high** between a
-//!   pop and that worker's repair, but never silently missing. A
-//!   dispatch through a stale-high entry runs the source's *current*
-//!   top task — possibly a lower-priority one than the key advertised
-//!   (a priority inversion bounded to the repair window), or nothing at
-//!   all if the source is now empty; either way the repair then re-keys
-//!   or removes the entry. Stale entries are lazily repaired, never
-//!   trusted for correctness — the cost of not re-reading every source
-//!   on every dispatch.
+//!   **Priority-raise preemption.** A notify that raises a source's top
+//!   *above its advertised (indexed) priority* sets a pool-wide
+//!   `preempt` flag (one atomic) besides its mailbox entry. Every
+//!   dispatch checks the flag with a single atomic swap; when set, that
+//!   dispatch routes through the full arbiter instead of the local
+//!   shard, so a raise preempts shard affinity within one dispatch.
 //!
-//!   **Fairness**: the index key's second component is a monotone
-//!   rotation stamp, bumped each time a source is dispatched, so among
-//!   equal-priority sources the least-recently-served wins — sustained
-//!   equal-priority load is served exactly round-robin, preserving the
-//!   rotating-scan fairness guarantee of the linear path.
+//!   **Stale entries, repair, wake coalescing.** As in the single-index
+//!   engine, a dispatched entry stays indexed while its task runs; the
+//!   dispatching worker re-reads and re-keys the source afterwards
+//!   (repair), so stale-high entries cost one empty `run_one`, never a
+//!   lost task. Wake-ups are coalesced — one unpark per newly-runnable
+//!   source — plus a *surplus cascade*: a worker that dispatches from a
+//!   shard still advertising more work, or repairs a source that still
+//!   has tasks, unparks one more peer, so bursts fan out to exactly the
+//!   workers that have work instead of waking the whole pool
+//!   ([`ThreadPoolExecutor::idle_wakeups`] /
+//!   [`ThreadPoolExecutor::wakeups_issued`] quantify this).
 //!
-//! * [`DispatchMode::LinearScan`] is the pre-index behaviour, kept as an
+//!   Unregistration takes the source-map write lock and purges the home
+//!   shard (index, keys, mailbox) under it; refresh paths hold the map
+//!   read lock across their shard-lock section, so a steal racing an
+//!   unregister can never resurrect a ghost entry, and `shutdown`
+//!   re-indexes every shard from fresh reads so drain-before-exit
+//!   covers sources mutated without a notify. Lock order everywhere:
+//!   source map → shard state → source heap.
+//!
+//! * [`DispatchMode::Indexed`] — the previous single-index engine, kept
+//!   as an ablation: one pool-level priority index under the pool-state
+//!   lock, refreshed synchronously by every notify with a fresh
+//!   `top_priority()` read under that lock. O(log n) per dispatch, but
+//!   every dispatch and every notify serialize on one mutex — the
+//!   ceiling this refactor removes.
+//!
+//! * [`DispatchMode::LinearScan`] — the pre-index behaviour, kept as an
 //!   ablation ("executor_linear_scan"): every dispatch scans all
 //!   registered sources (one heap lock each, O(n)), starting from a
 //!   rotation cursor for the same round-robin fairness.
-//!   `benches/sched_scan_scale.rs` sweeps the source count to quantify
-//!   the indexed win.
 //!
 //! Three implementations:
 //!
@@ -100,7 +131,7 @@
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 
 /// A unit of work submitted by a scheduler queue.
@@ -158,15 +189,31 @@ pub trait Executor: Send + Sync {
     fn notify_source(&self, _id: SourceId) -> bool {
         false
     }
+
+    /// [`Executor::notify_source`] with the pushed task's priority
+    /// supplied by the caller (queues know it at push time). Executors
+    /// that track an advertised priority per source (the sharded pool)
+    /// use the hint to detect priority raises without taking the
+    /// source's heap lock; the default just forwards to
+    /// [`Executor::notify_source`].
+    fn notify_source_hint(&self, id: SourceId, _top_hint: u32) -> bool {
+        self.notify_source(id)
+    }
 }
 
 /// How a [`ThreadPoolExecutor`]'s workers pick the next steal dispatch
-/// (module docs, "The steal index and its notification protocol").
+/// (module docs, "Dispatch architecture").
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DispatchMode {
-    /// Pool-level priority index over the registered sources: O(log n)
-    /// per dispatch, maintained by change notifications + lazy repair.
+    /// Per-worker shards with dirty-flag notifies, cross-shard steal
+    /// arbitration and coalesced wake-ups. Dispatch cost is flat in
+    /// both source count and worker count.
     #[default]
+    Sharded,
+    /// Ablation: one pool-level priority index over the registered
+    /// sources — O(log n) per dispatch, maintained by synchronous
+    /// change notifications + lazy repair, serialized on the pool
+    /// mutex.
     Indexed,
     /// Ablation ("executor_linear_scan"): every dispatch scans all
     /// registered sources, one heap lock each — O(n). This is the
@@ -315,10 +362,400 @@ impl PoolState {
     }
 }
 
+// ---------------------------------------------------------------------
+// Sharded dispatch engine (DispatchMode::Sharded; module docs,
+// "Dispatch architecture").
+// ---------------------------------------------------------------------
+
+/// Sentinel for `ShardedEntry::advertised`: the source has no index
+/// entry (believed empty). Priorities are `u32`, so this can never
+/// collide with a real advertised value.
+const ADVERTISED_NONE: u64 = u64::MAX;
+
+/// Per-source state in sharded mode. Lives in the pool-wide source map;
+/// the two atomics let `notify_source` run without any shard lock in
+/// the coalesced case.
+struct ShardedEntry {
+    source: Arc<dyn TaskSource>,
+    /// The shard whose index/mailbox covers this source. Fixed for the
+    /// source's lifetime (round-robin at registration).
+    home: usize,
+    /// Dirty-flag notify coalescing counter: notifies since the last
+    /// completed refresh. Only the 0→1 transition enqueues a mailbox
+    /// entry; the refresh compare-exchanges it back to 0 and
+    /// re-enqueues if more notifies raced in (see `refresh_entry`).
+    pending: AtomicU64,
+    /// The priority this source's home-index entry currently advertises
+    /// (`ADVERTISED_NONE` when unindexed). Read by notify to detect
+    /// priority raises without touching the shard lock.
+    advertised: AtomicU64,
+}
+
+/// One shard's lock-protected dispatch state.
+struct ShardState {
+    /// Local priority index: one entry per believed non-empty source
+    /// homed here, ordered by (priority desc, global stamp asc).
+    index: BTreeMap<IndexKey, SourceId>,
+    /// Reverse map of `index` (current key per indexed source), so
+    /// refreshes remove the old key in O(log n).
+    keys: HashMap<SourceId, IndexKey>,
+    /// Sources with a pending refresh (dirty flags raised since the
+    /// last drain). May contain duplicates or unregistered ids; the
+    /// drain re-checks the source map. Drained before every pick.
+    mailbox: Vec<SourceId>,
+    /// Workers currently parked on this shard's condvar.
+    parked: usize,
+    /// Outstanding wake permits: `wake_one` grants one and signals the
+    /// condvar; a waking (or about-to-park) worker consumes one. The
+    /// token pairing is what makes a wake cost exactly one unpark.
+    wake_tokens: usize,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+/// A completed sharded dispatch decision.
+struct ShardPick {
+    id: SourceId,
+    src: Arc<dyn TaskSource>,
+    /// Shard the entry came from — the surplus cascade prefers waking a
+    /// peer near the work.
+    from_shard: usize,
+    /// The shard still advertised other work after this pick; the
+    /// dispatching worker wakes one peer (after dropping all locks).
+    leftover: bool,
+}
+
+struct ShardedEngine {
+    shards: Vec<Shard>,
+    /// All registered sources. Readers (notify/dispatch/repair) hold
+    /// the read lock across their shard-lock section; unregister takes
+    /// the write lock and purges the home shard under it — that
+    /// exclusion is the no-ghost guarantee. Lock order: this map →
+    /// shard state → source heap.
+    sources: RwLock<HashMap<SourceId, Arc<ShardedEntry>>>,
+    next_source: AtomicU64,
+    /// Round-robin home-shard assignment cursor.
+    next_home: AtomicUsize,
+    /// Pool-wide rotation-stamp counter: global, so least-recently-
+    /// served fairness among equal-priority sources holds across
+    /// shards (steals), not just within one.
+    next_stamp: AtomicU64,
+    /// Bumped on every "new work may exist" event (mailbox insert,
+    /// registration, plain submit, shutdown). A worker records it
+    /// before scanning and re-checks under its shard lock before
+    /// parking, so a wake between scan and park is never lost.
+    epoch: AtomicU64,
+    /// Priority-raise preemption flag: stores raised-priority + 1
+    /// (0 = no raise pending). The next dispatch that swaps a non-zero
+    /// value routes through the cross-shard arbiter instead of its
+    /// local shard.
+    preempt: AtomicU64,
+    /// Advisory count of directly submitted (`execute`) tasks, kept in
+    /// sync under the pool-state lock; lets sharded dispatch skip the
+    /// global state mutex when no plain tasks exist.
+    plain_count: AtomicUsize,
+    /// Total workers currently parked across all shards (fast-path
+    /// gate for `wake_one`).
+    parked_count: AtomicUsize,
+    /// Total wake permits ever granted — the coalescing counter the
+    /// thundering-herd regression tests assert on.
+    wakeups_issued: AtomicU64,
+}
+
+impl ShardedEngine {
+    fn new(num_shards: usize) -> ShardedEngine {
+        ShardedEngine {
+            shards: (0..num_shards)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardState {
+                        index: BTreeMap::new(),
+                        keys: HashMap::new(),
+                        mailbox: Vec::new(),
+                        parked: 0,
+                        wake_tokens: 0,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            sources: RwLock::new(HashMap::new()),
+            next_source: AtomicU64::new(0),
+            next_home: AtomicUsize::new(0),
+            next_stamp: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            preempt: AtomicU64::new(0),
+            plain_count: AtomicUsize::new(0),
+            parked_count: AtomicUsize::new(0),
+            wakeups_issued: AtomicU64::new(0),
+        }
+    }
+
+    /// Re-read `id`'s top priority and update its home-shard index
+    /// entry. Caller holds the home shard's lock (and the source-map
+    /// read or write lock).
+    ///
+    /// The pending counter is loaded *before* the fresh `top_priority`
+    /// read and compare-exchanged to zero *after* it: a notify counted
+    /// in the load happened-before the fresh read (its push is
+    /// visible), and a notify that raced in later fails the CAS and
+    /// re-enqueues the id — so no accepted task's refresh obligation is
+    /// ever silently absorbed.
+    fn refresh_entry(&self, entry: &ShardedEntry, id: SourceId, st: &mut ShardState) {
+        let pending = entry.pending.load(Ordering::SeqCst);
+        let fresh = entry.source.top_priority();
+        let old = st.keys.get(&id).copied();
+        match (fresh, old) {
+            // Priority unchanged: keep the entry (and its fairness
+            // stamp) in place.
+            (Some(p), Some(key)) if key.0 == Reverse(p) => {
+                entry.advertised.store(u64::from(p), Ordering::SeqCst);
+            }
+            (Some(p), old) => {
+                if let Some(k) = old {
+                    st.index.remove(&k);
+                }
+                // Keep the stamp across priority changes (rotation
+                // place preserved); mint a fresh one only on the
+                // empty→non-empty transition.
+                let stamp = match old {
+                    Some((_, s)) => s,
+                    None => self.next_stamp.fetch_add(1, Ordering::SeqCst) + 1,
+                };
+                let key = (Reverse(p), stamp);
+                st.index.insert(key, id);
+                st.keys.insert(id, key);
+                entry.advertised.store(u64::from(p), Ordering::SeqCst);
+            }
+            (None, Some(k)) => {
+                st.index.remove(&k);
+                st.keys.remove(&id);
+                entry.advertised.store(ADVERTISED_NONE, Ordering::SeqCst);
+            }
+            (None, None) => {
+                entry.advertised.store(ADVERTISED_NONE, Ordering::SeqCst);
+            }
+        }
+        if pending != 0
+            && entry
+                .pending
+                .compare_exchange(pending, 0, Ordering::SeqCst, Ordering::SeqCst)
+                .is_err()
+        {
+            // More notifies raced in during the fresh read: their
+            // refresh obligation survives as a new mailbox entry
+            // (consumed by the next drain — duplicates are harmless).
+            st.mailbox.push(id);
+        }
+    }
+
+    /// Drain the shard's mailbox: refresh every flagged source from a
+    /// fresh read. Ids unregistered since their notify are skipped (the
+    /// map lookup misses — a mailbox ghost is inert).
+    fn drain_mailbox(&self, map: &HashMap<SourceId, Arc<ShardedEntry>>, st: &mut ShardState) {
+        if st.mailbox.is_empty() {
+            return;
+        }
+        for id in std::mem::take(&mut st.mailbox) {
+            if let Some(entry) = map.get(&id) {
+                self.refresh_entry(entry, id, st);
+            }
+        }
+    }
+
+    /// Pop the shard's best entry and re-stamp it with the global
+    /// rotation counter (least-recently-served fairness across shards).
+    /// As in the single-index engine the entry *stays* indexed while
+    /// its task runs; the dispatching worker's repair re-keys it.
+    fn pick_from(
+        &self,
+        map: &HashMap<SourceId, Arc<ShardedEntry>>,
+        from_shard: usize,
+        st: &mut ShardState,
+    ) -> Option<ShardPick> {
+        let (&key, &id) = st.index.first_key_value()?;
+        let Some(entry) = map.get(&id) else {
+            // Index/map mismatch should be impossible (unregister purges
+            // under the write lock); drop the orphan rather than
+            // dispatch a dangling id.
+            st.index.remove(&key);
+            st.keys.remove(&id);
+            return None;
+        };
+        st.index.remove(&key);
+        let rotated = (key.0, self.next_stamp.fetch_add(1, Ordering::SeqCst) + 1);
+        st.index.insert(rotated, id);
+        st.keys.insert(id, rotated);
+        Some(ShardPick {
+            id,
+            src: Arc::clone(&entry.source),
+            from_shard,
+            leftover: st.index.len() > 1,
+        })
+    }
+
+    /// Serve the worker's own shard: drain its mailbox, pop its top.
+    fn local_dispatch(&self, own: usize) -> Option<ShardPick> {
+        let map = self.sources.read().unwrap();
+        let mut st = self.shards[own].state.lock().unwrap();
+        self.drain_mailbox(&map, &mut st);
+        self.pick_from(&map, own, &mut st)
+    }
+
+    /// The cross-shard arbiter (steal path / raise preemption): drain
+    /// every shard's mailbox, then dispatch the globally best
+    /// `(priority, stamp)` entry. Shard locks are taken one at a time.
+    fn steal_dispatch(&self, start: usize) -> Option<ShardPick> {
+        let map = self.sources.read().unwrap();
+        let n = self.shards.len();
+        let mut best: Option<(IndexKey, usize)> = None;
+        for k in 0..n {
+            let j = (start + k) % n;
+            let mut st = self.shards[j].state.lock().unwrap();
+            self.drain_mailbox(&map, &mut st);
+            if let Some((&key, _)) = st.index.first_key_value() {
+                let better = match best {
+                    None => true,
+                    Some((bk, _)) => key < bk,
+                };
+                if better {
+                    best = Some((key, j));
+                }
+            }
+        }
+        let (_, j) = best?;
+        // Re-pick under the lock: a racing worker may have taken or
+        // re-keyed the peeked entry since the scan; whatever is best in
+        // that shard *now* wins (possibly nothing — the caller rescans).
+        let mut st = self.shards[j].state.lock().unwrap();
+        self.pick_from(&map, j, &mut st)
+    }
+
+    /// Post-dispatch repair: fresh-read the source just ran and re-key
+    /// its home entry. If it still has work, unpark one peer (the
+    /// surplus cascade: a hot queue fans out one worker per dispatch
+    /// instead of one per push). Stale ids (unregistered mid-dispatch)
+    /// miss the map and are a no-op.
+    fn repair(&self, id: SourceId) {
+        let map = self.sources.read().unwrap();
+        let Some(entry) = map.get(&id) else { return };
+        let still_has_work = {
+            let mut st = self.shards[entry.home].state.lock().unwrap();
+            self.refresh_entry(entry, id, &mut st);
+            st.keys.contains_key(&id)
+        };
+        let home = entry.home;
+        drop(map);
+        if still_has_work {
+            self.wake_one(home);
+        }
+    }
+
+    /// The coalesced notify (see module docs). `hint` is the pushed
+    /// task's priority when the caller knows it; `None` falls back to a
+    /// fresh `top_priority` read (heap lock) for raise detection.
+    fn notify(&self, id: SourceId, hint: Option<u32>, shutdown: &AtomicBool) -> bool {
+        if shutdown.load(Ordering::Acquire) {
+            return false;
+        }
+        let map = self.sources.read().unwrap();
+        let Some(entry) = map.get(&id) else {
+            return true; // unknown/stale id: no-op, but the pool is alive
+        };
+        let hint = match hint {
+            Some(h) => Some(h),
+            None => entry.source.top_priority(),
+        };
+        // 0→1 is the only transition that pays for a mailbox insert and
+        // a wake; every further notify before the next refresh is two
+        // atomic ops (the coalescing win).
+        let newly_flagged = entry.pending.fetch_add(1, Ordering::SeqCst) == 0;
+        if newly_flagged {
+            let mut st = self.shards[entry.home].state.lock().unwrap();
+            st.mailbox.push(id);
+        }
+        // Raise detection after the mailbox insert, so a preempting
+        // dispatch that swaps the flag is guaranteed to find the entry
+        // when it drains the mailboxes.
+        let mut raised = false;
+        if let Some(h) = hint {
+            let adv = entry.advertised.load(Ordering::SeqCst);
+            if adv != ADVERTISED_NONE && u64::from(h) > adv {
+                raised = true;
+                self.preempt.fetch_max(u64::from(h) + 1, Ordering::SeqCst);
+            }
+        }
+        if newly_flagged || raised {
+            let home = entry.home;
+            drop(map);
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            self.wake_one(home);
+        }
+        true
+    }
+
+    /// Unpark at most one parked worker, preferring shard `prefer`'s
+    /// condvar. No-op when nobody is parked (one atomic load) or when
+    /// every parked worker already holds an unconsumed wake token —
+    /// that token pairing is what bounds a burst to O(1) unparks.
+    fn wake_one(&self, prefer: usize) {
+        if self.parked_count.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let n = self.shards.len();
+        for k in 0..n {
+            let j = (prefer + k) % n;
+            let shard = &self.shards[j];
+            let mut st = shard.state.lock().unwrap();
+            if st.parked > st.wake_tokens {
+                st.wake_tokens += 1;
+                self.wakeups_issued.fetch_add(1, Ordering::SeqCst);
+                shard.cv.notify_one();
+                return;
+            }
+        }
+    }
+
+    /// Park on the worker's own shard until a wake token (or shutdown)
+    /// arrives. `epoch_seen` was read before the caller's last full
+    /// scan: if the epoch moved, work may have been inserted after the
+    /// scan looked — return immediately and rescan instead of sleeping
+    /// through it.
+    fn park(&self, own: usize, epoch_seen: u64, shutdown: &AtomicBool) {
+        let shard = &self.shards[own];
+        let mut st = shard.state.lock().unwrap();
+        if self.epoch.load(Ordering::SeqCst) != epoch_seen || shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if st.wake_tokens > 0 {
+            // A wake raced in between the scan and this lock: consume
+            // it and rescan rather than sleeping on it.
+            st.wake_tokens -= 1;
+            return;
+        }
+        st.parked += 1;
+        self.parked_count.fetch_add(1, Ordering::SeqCst);
+        while st.wake_tokens == 0 && !shutdown.load(Ordering::Acquire) {
+            st = shard.cv.wait(st).unwrap();
+        }
+        if st.wake_tokens > 0 {
+            st.wake_tokens -= 1;
+        }
+        st.parked -= 1;
+        self.parked_count.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 struct PoolInner {
     state: Mutex<PoolState>,
     cv: Condvar,
     mode: DispatchMode,
+    /// The sharded dispatch engine — `Some` iff `mode` is
+    /// [`DispatchMode::Sharded`]. Sharded pools still use `state` for
+    /// directly submitted (`execute`) tasks and the shutdown flag; all
+    /// steal dispatch bypasses it.
+    sharded: Option<ShardedEngine>,
     shutdown: AtomicBool,
     /// Times a worker woke from the condvar and found nothing to run
     /// (spurious or raced wakeups). Serving benches use this to compare
@@ -347,7 +784,10 @@ impl PoolInner {
     /// source must never call back into the pool while holding its heap
     /// lock — `SchedulerQueue::push` releases the heap lock before
     /// `notify_source`.
-    fn next_work(&self) -> Work {
+    fn next_work(&self, worker_index: usize) -> Work {
+        if let Some(engine) = &self.sharded {
+            return self.next_work_sharded(engine, worker_index);
+        }
         let mut st = self.state.lock().unwrap();
         let mut woke = false;
         loop {
@@ -384,6 +824,59 @@ impl PoolInner {
         }
     }
 
+    /// The sharded worker loop body: plain FIFO first (advisory atomic
+    /// gate, no global lock when empty), then a preempting arbiter pass
+    /// if a priority raise is pending, then the worker's own shard,
+    /// then the cross-shard steal. Parks on the worker's own shard when
+    /// everything is dry.
+    fn next_work_sharded(&self, engine: &ShardedEngine, worker_index: usize) -> Work {
+        let own = worker_index % engine.shards.len();
+        let mut woke = false;
+        loop {
+            let epoch_seen = engine.epoch.load(Ordering::SeqCst);
+            if engine.plain_count.load(Ordering::SeqCst) > 0 {
+                let mut st = self.state.lock().unwrap();
+                if let Some(t) = st.tasks.pop_front() {
+                    engine.plain_count.fetch_sub(1, Ordering::SeqCst);
+                    return Work::Plain(t);
+                }
+            }
+            // One atomic swap per dispatch: a pending priority raise
+            // routes this dispatch through the global arbiter even when
+            // local work exists, preempting shard affinity.
+            let pick = if engine.preempt.swap(0, Ordering::SeqCst) != 0 {
+                engine.steal_dispatch(own)
+            } else {
+                None
+            };
+            let pick = pick
+                .or_else(|| engine.local_dispatch(own))
+                .or_else(|| engine.steal_dispatch(own));
+            if let Some(p) = pick {
+                if p.leftover {
+                    // Surplus cascade: the shard still advertises other
+                    // work — fan out one parked peer (locks are dropped;
+                    // waking a worker of the same shard is safe here).
+                    engine.wake_one(p.from_shard);
+                }
+                return Work::Steal(Some(p.id), p.src);
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                if engine.plain_count.load(Ordering::SeqCst) == 0 {
+                    return Work::Exit;
+                }
+                continue;
+            }
+            if woke {
+                // Woke up and found nothing: the wake raced another
+                // worker to the work.
+                self.idle_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+            engine.park(own, epoch_seen, &self.shutdown);
+            woke = true;
+        }
+    }
+
     /// Post-dispatch index repair: re-read the source the worker just
     /// ran and re-index it (its pop lowered the top, emptied it, or the
     /// steal race popped nothing and the entry was stale). A stale id —
@@ -391,6 +884,10 @@ impl PoolInner {
     /// no-op: ids are never reused, so a later registration can never be
     /// resurrected or misrouted by this repair.
     fn repair_source(&self, id: SourceId) {
+        if let Some(engine) = &self.sharded {
+            engine.repair(id);
+            return;
+        }
         let mut st = self.state.lock().unwrap();
         st.refresh_index(id);
     }
@@ -412,19 +909,41 @@ impl ThreadPoolExecutor {
     /// Create a pool; `num_threads == 0` means "based on the system's
     /// capabilities". Workers are spawned eagerly so thread counts are
     /// observable before any task runs. Steal dispatch uses the default
-    /// [`DispatchMode::Indexed`]; see [`ThreadPoolExecutor::with_dispatch_mode`]
-    /// for the linear-scan ablation.
+    /// [`DispatchMode::Sharded`] (one shard per worker); see
+    /// [`ThreadPoolExecutor::with_dispatch_mode`] for the single-index
+    /// and linear-scan ablations and
+    /// [`ThreadPoolExecutor::with_sharding`] for an explicit shard
+    /// count.
     pub fn new(name: &str, num_threads: usize) -> ThreadPoolExecutor {
         ThreadPoolExecutor::with_dispatch_mode(name, num_threads, DispatchMode::default())
     }
 
     /// [`ThreadPoolExecutor::new`] with an explicit steal-dispatch mode
-    /// (benches/tests: `DispatchMode::LinearScan` is the pre-index
+    /// (benches/tests: `DispatchMode::Indexed` is the single-index
+    /// engine, `DispatchMode::LinearScan` the pre-index
     /// "executor_linear_scan" ablation).
     pub fn with_dispatch_mode(
         name: &str,
         num_threads: usize,
         mode: DispatchMode,
+    ) -> ThreadPoolExecutor {
+        ThreadPoolExecutor::build(name, num_threads, mode, None)
+    }
+
+    /// A [`DispatchMode::Sharded`] pool with an explicit shard count
+    /// (default: one shard per worker). Tests and benches use this to
+    /// exercise cross-shard stealing deterministically — e.g. one
+    /// worker over four shards makes every steal-arbitration decision
+    /// observable without thread races.
+    pub fn with_sharding(name: &str, num_threads: usize, num_shards: usize) -> ThreadPoolExecutor {
+        ThreadPoolExecutor::build(name, num_threads, DispatchMode::Sharded, Some(num_shards))
+    }
+
+    fn build(
+        name: &str,
+        num_threads: usize,
+        mode: DispatchMode,
+        num_shards: Option<usize>,
     ) -> ThreadPoolExecutor {
         let n = if num_threads == 0 {
             std::thread::available_parallelism()
@@ -432,6 +951,11 @@ impl ThreadPoolExecutor {
                 .unwrap_or(4)
         } else {
             num_threads
+        };
+        let sharded = if mode == DispatchMode::Sharded {
+            Some(ShardedEngine::new(num_shards.unwrap_or(n).max(1)))
+        } else {
+            None
         };
         let inner = Arc::new(PoolInner {
             state: Mutex::new(PoolState {
@@ -445,6 +969,7 @@ impl ThreadPoolExecutor {
             }),
             cv: Condvar::new(),
             mode,
+            sharded,
             shutdown: AtomicBool::new(false),
             idle_wakeups: AtomicU64::new(0),
         });
@@ -457,7 +982,7 @@ impl ThreadPoolExecutor {
                 std::thread::Builder::new()
                     .name(tname)
                     .spawn(move || loop {
-                        match inner.next_work() {
+                        match inner.next_work(wi) {
                             Work::Plain(t) => {
                                 // A panicking task must not kill the
                                 // worker: the pool may be shared by many
@@ -506,7 +1031,10 @@ impl ThreadPoolExecutor {
 
     /// Registered work-stealing sources (diagnostics).
     pub fn num_sources(&self) -> usize {
-        self.inner.state.lock().unwrap().sources.len()
+        match &self.inner.sharded {
+            Some(engine) => engine.sources.read().unwrap().len(),
+            None => self.inner.state.lock().unwrap().sources.len(),
+        }
     }
 
     /// How this pool's workers pick steal dispatches.
@@ -514,12 +1042,30 @@ impl ThreadPoolExecutor {
         self.inner.mode
     }
 
+    /// Shards in the sharded dispatch engine (1 in the ablation modes,
+    /// which keep one global index or none).
+    pub fn num_shards(&self) -> usize {
+        match &self.inner.sharded {
+            Some(engine) => engine.shards.len(),
+            None => 1,
+        }
+    }
+
     /// Sources currently present in the priority index (diagnostics;
-    /// always 0 in linear-scan mode). May transiently exceed the number
-    /// of non-empty sources — stale-high entries are repaired on their
-    /// next dispatch, not eagerly.
+    /// summed across shards in sharded mode, always 0 in linear-scan
+    /// mode). May transiently exceed the number of non-empty sources —
+    /// stale-high entries are repaired on their next dispatch, not
+    /// eagerly — and in sharded mode may transiently *undercount*
+    /// runnable sources whose dirty flag has not been drained yet.
     pub fn indexed_sources(&self) -> usize {
-        self.inner.state.lock().unwrap().index.len()
+        match &self.inner.sharded {
+            Some(engine) => engine
+                .shards
+                .iter()
+                .map(|s| s.state.lock().unwrap().index.len())
+                .sum(),
+            None => self.inner.state.lock().unwrap().index.len(),
+        }
     }
 
     /// How many times a worker woke up and found no work to run.
@@ -527,6 +1073,27 @@ impl ThreadPoolExecutor {
     /// idle churn a workload induces on the pool.
     pub fn idle_wakeups(&self) -> u64 {
         self.inner.idle_wakeups.load(Ordering::Relaxed)
+    }
+
+    /// Workers currently parked on shard condvars (0 in the ablation
+    /// modes, which park on the pool-wide condvar). Tests spin-wait on
+    /// this to know the pool is provably idle before measuring wake-up
+    /// deltas.
+    pub fn parked_workers(&self) -> usize {
+        match &self.inner.sharded {
+            Some(engine) => engine.parked_count.load(Ordering::SeqCst),
+            None => 0,
+        }
+    }
+
+    /// Wake permits ever granted by the sharded engine (0 in the
+    /// ablation modes). Monotonic; the thundering-herd regression test
+    /// asserts a 1-push burst moves this by exactly one.
+    pub fn wakeups_issued(&self) -> u64 {
+        match &self.inner.sharded {
+            Some(engine) => engine.wakeups_issued.load(Ordering::SeqCst),
+            None => 0,
+        }
     }
 
     /// Stop the workers once all pending work drains — both the FIFO of
@@ -553,6 +1120,29 @@ impl ThreadPoolExecutor {
                 }
             }
         }
+        if let Some(engine) = &self.inner.sharded {
+            // Same guarantee, per shard: drain every mailbox and
+            // fresh-read every source into its home index, then wake
+            // everyone (the park predicate re-checks the shutdown flag
+            // under the shard lock, so no worker can sleep through
+            // this).
+            let map = engine.sources.read().unwrap();
+            for (j, shard) in engine.shards.iter().enumerate() {
+                let mut st = shard.state.lock().unwrap();
+                engine.drain_mailbox(&map, &mut st);
+                for (&id, entry) in map.iter() {
+                    if entry.home == j {
+                        engine.refresh_entry(entry, id, &mut st);
+                    }
+                }
+            }
+            drop(map);
+            engine.epoch.fetch_add(1, Ordering::SeqCst);
+            for shard in &engine.shards {
+                let _st = shard.state.lock().unwrap();
+                shard.cv.notify_all();
+            }
+        }
         self.inner.cv.notify_all();
         let mut workers = self.workers.lock().unwrap();
         for w in workers.drain(..) {
@@ -569,12 +1159,23 @@ impl Executor for ThreadPoolExecutor {
                 Some(task)
             } else {
                 st.tasks.push_back(task);
+                if let Some(engine) = &self.inner.sharded {
+                    // Kept exact under the state lock; workers read it
+                    // as their lock-free "any plain tasks?" gate.
+                    engine.plain_count.fetch_add(1, Ordering::SeqCst);
+                }
                 None
             }
         };
         match run_inline {
             Some(t) => t(), // pool shut down: degrade to caller-inline
-            None => self.inner.cv.notify_one(),
+            None => match &self.inner.sharded {
+                Some(engine) => {
+                    engine.epoch.fetch_add(1, Ordering::SeqCst);
+                    engine.wake_one(0);
+                }
+                None => self.inner.cv.notify_one(),
+            },
         }
     }
 
@@ -587,10 +1188,41 @@ impl Executor for ThreadPoolExecutor {
     }
 
     fn register_source(&self, source: Arc<dyn TaskSource>) -> Option<SourceId> {
+        if let Some(engine) = &self.inner.sharded {
+            // The map write lock is held across the shard insert so a
+            // concurrent unregister/steal can never observe the source
+            // half-registered.
+            let mut map = engine.sources.write().unwrap();
+            let id = engine.next_source.fetch_add(1, Ordering::SeqCst);
+            let home = engine.next_home.fetch_add(1, Ordering::SeqCst) % engine.shards.len();
+            let entry = Arc::new(ShardedEntry {
+                source,
+                home,
+                pending: AtomicU64::new(0),
+                advertised: AtomicU64::new(ADVERTISED_NONE),
+            });
+            map.insert(id, Arc::clone(&entry));
+            // A source registered already non-empty (tests and direct
+            // TaskSource users pre-fill before registering) must be
+            // indexed now — it will never send a become-nonempty
+            // notify.
+            let nonempty = {
+                let mut st = engine.shards[home].state.lock().unwrap();
+                engine.refresh_entry(&entry, id, &mut st);
+                st.keys.contains_key(&id)
+            };
+            drop(map);
+            if nonempty {
+                engine.epoch.fetch_add(1, Ordering::SeqCst);
+                engine.wake_one(home);
+            }
+            return Some(id);
+        }
         let mut st = self.inner.state.lock().unwrap();
         let id = st.next_source;
         st.next_source += 1;
         match self.inner.mode {
+            DispatchMode::Sharded => unreachable!("sharded engine handled above"),
             DispatchMode::Indexed => {
                 st.sources.insert(id, SourceEntry { source, key: None });
                 // A source registered already non-empty (tests and
@@ -612,6 +1244,21 @@ impl Executor for ThreadPoolExecutor {
     }
 
     fn unregister_source(&self, id: SourceId) {
+        if let Some(engine) = &self.inner.sharded {
+            // The write lock excludes every refresh/steal (they hold
+            // the read lock across their shard section), so purging the
+            // home shard under it leaves no ghost entry anywhere.
+            let mut map = engine.sources.write().unwrap();
+            if let Some(entry) = map.remove(&id) {
+                let mut st = engine.shards[entry.home].state.lock().unwrap();
+                if let Some(k) = st.keys.remove(&id) {
+                    st.index.remove(&k);
+                }
+                st.mailbox.retain(|&m| m != id);
+                entry.advertised.store(ADVERTISED_NONE, Ordering::SeqCst);
+            }
+            return;
+        }
         let mut st = self.inner.state.lock().unwrap();
         if let Some(e) = st.sources.remove(&id) {
             if let Some(k) = e.key {
@@ -624,11 +1271,15 @@ impl Executor for ThreadPoolExecutor {
     }
 
     fn notify_source(&self, id: SourceId) -> bool {
+        if let Some(engine) = &self.inner.sharded {
+            return engine.notify(id, None, &self.inner.shutdown);
+        }
         let mut st = self.inner.state.lock().unwrap();
         if self.inner.shutdown.load(Ordering::Acquire) {
             return false;
         }
         match self.inner.mode {
+            DispatchMode::Sharded => unreachable!("sharded engine handled above"),
             DispatchMode::Indexed => {
                 // Fresh-read the source's top priority under the pool
                 // lock and update the index; wake a worker only when the
@@ -644,6 +1295,16 @@ impl Executor for ThreadPoolExecutor {
             DispatchMode::LinearScan => self.inner.cv.notify_one(),
         }
         true
+    }
+
+    fn notify_source_hint(&self, id: SourceId, top_hint: u32) -> bool {
+        match &self.inner.sharded {
+            // The hint spares the coalesced path the source's heap
+            // lock: raise detection compares against the advertised
+            // priority with one atomic load.
+            Some(engine) => engine.notify(id, Some(top_hint), &self.inner.shutdown),
+            None => self.notify_source(id),
+        }
     }
 }
 
@@ -968,14 +1629,13 @@ mod tests {
         }
     }
 
-    #[test]
-    fn unregister_mid_dispatch_never_resurrects_and_reregister_gets_fresh_id() {
+    fn unregister_mid_dispatch_proof(mode: DispatchMode) {
         // Satellite regression (SourceId lifecycle): unregister while a
         // worker's steal dispatch is mid-flight must not let the
         // post-dispatch repair resurrect the stale index entry, and a
         // re-registration (new id — ids are never reused) must route
         // dispatches correctly from then on.
-        let pool = ThreadPoolExecutor::new("life", 1);
+        let pool = ThreadPoolExecutor::with_dispatch_mode("life", 1, mode);
         let (entered_tx, entered_rx) = mpsc::channel();
         let (gate_tx, gate_rx) = mpsc::channel();
         let ran = Arc::new(AtomicUsize::new(0));
@@ -1009,11 +1669,20 @@ mod tests {
     }
 
     #[test]
-    fn stale_high_index_entry_is_repaired_not_trusted() {
+    fn unregister_mid_dispatch_never_resurrects_and_reregister_gets_fresh_id() {
+        unregister_mid_dispatch_proof(DispatchMode::Indexed);
+    }
+
+    #[test]
+    fn sharded_unregister_mid_dispatch_never_resurrects() {
+        unregister_mid_dispatch_proof(DispatchMode::Sharded);
+    }
+
+    fn stale_high_entry_proof(mode: DispatchMode) {
         // A stale-high entry (the indexed task was consumed out from
         // under the index) must cost one empty run_one + repair, never
         // block lower-priority sources or hang the worker.
-        let pool = ThreadPoolExecutor::new("stale", 1);
+        let pool = ThreadPoolExecutor::with_dispatch_mode("stale", 1, mode);
         let gate_tx = crate::benchutil::park_worker(&pool); // worker parked
         let log = Arc::new(Mutex::new(Vec::new()));
         let stale = Arc::new(TestSource {
@@ -1065,12 +1734,25 @@ mod tests {
     }
 
     #[test]
+    fn stale_high_index_entry_is_repaired_not_trusted() {
+        stale_high_entry_proof(DispatchMode::Indexed);
+    }
+
+    #[test]
+    fn sharded_stale_high_entry_is_repaired_not_trusted() {
+        stale_high_entry_proof(DispatchMode::Sharded);
+    }
+
+    #[test]
     fn notify_fresh_reads_the_source_across_steal_races() {
         // The notify-vs-steal race: a notify that lost its task to a
         // concurrent steal must leave no ghost entry (fresh read under
         // the pool lock), and a notify after new supply must index —
-        // and run — every accepted task.
-        let pool = ThreadPoolExecutor::new("race", 1);
+        // and run — every accepted task. Pinned to the single-index
+        // ablation: it asserts the *synchronous* index updates that
+        // mode guarantees (the sharded engine defers them to the
+        // dirty-flag mailbox by design — see the sharded tests below).
+        let pool = ThreadPoolExecutor::with_dispatch_mode("race", 1, DispatchMode::Indexed);
         let gate_tx = crate::benchutil::park_worker(&pool);
         let log = Arc::new(Mutex::new(Vec::new()));
         let src = Arc::new(TestSource {
@@ -1113,6 +1795,114 @@ mod tests {
         gate_tx.send(()).unwrap();
         pool.shutdown();
         assert_eq!(*log.lock().unwrap(), vec![7, 7, 1, 1, 1]);
+    }
+
+    #[test]
+    fn with_sharding_overrides_shard_count() {
+        let pool = ThreadPoolExecutor::with_sharding("shards", 1, 4);
+        assert_eq!(pool.dispatch_mode(), DispatchMode::Sharded);
+        assert_eq!(pool.num_threads(), 1);
+        assert_eq!(pool.num_shards(), 4);
+        let per_worker = ThreadPoolExecutor::new("shards-default", 3);
+        assert_eq!(per_worker.dispatch_mode(), DispatchMode::Sharded);
+        assert_eq!(per_worker.num_shards(), 3, "default is one shard per worker");
+        let ablation =
+            ThreadPoolExecutor::with_dispatch_mode("shards-abl", 2, DispatchMode::Indexed);
+        assert_eq!(ablation.num_shards(), 1);
+        assert_eq!(ablation.parked_workers(), 0);
+        assert_eq!(ablation.wakeups_issued(), 0);
+    }
+
+    #[test]
+    fn sharded_notify_coalesces_wakeups_and_defers_indexing() {
+        // The dirty-flag protocol: a burst of notifies to a busy pool
+        // sets the flag once, costs zero wake permits, and defers all
+        // index writes to the next dispatch — and a source mutated with
+        // no notify at all is still covered by the shutdown re-index.
+        let pool = ThreadPoolExecutor::new("coalesce", 1);
+        assert_eq!(pool.dispatch_mode(), DispatchMode::Sharded);
+        let gate_tx = crate::benchutil::park_worker(&pool); // worker busy, not parked
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Arc::new(TestSource {
+            priority: 3,
+            pending: Mutex::new(0),
+            log: Arc::clone(&log),
+        });
+        let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        assert_eq!(pool.indexed_sources(), 0, "empty source is not indexed");
+        let wakes_before = pool.wakeups_issued();
+        *src.pending.lock().unwrap() = 5;
+        for _ in 0..5 {
+            assert!(pool.notify_source(id));
+        }
+        assert_eq!(pool.indexed_sources(), 0, "refresh deferred to the mailbox drain");
+        assert_eq!(pool.wakeups_issued(), wakes_before, "nobody parked, nobody woken");
+        let silent = Arc::new(TestSource {
+            priority: 1,
+            pending: Mutex::new(0),
+            log: Arc::clone(&log),
+        });
+        pool.register_source(Arc::clone(&silent) as Arc<dyn TaskSource>).unwrap();
+        *silent.pending.lock().unwrap() = 2; // no notify: shutdown must cover it
+        gate_tx.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(*log.lock().unwrap(), vec![3, 3, 3, 3, 3, 1, 1]);
+        assert_eq!(pool.indexed_sources(), 0);
+    }
+
+    #[test]
+    fn sharded_notify_burst_unparks_at_most_two_workers() {
+        // The thundering-herd regression: a backlog announced by
+        // notifies must cost one unpark plus at most one surplus-
+        // cascade unpark — never one wake per push. Both workers start
+        // provably parked (condvar, not gated), so every wake permit is
+        // observable in `wakeups_issued`.
+        let pool = ThreadPoolExecutor::new("herd", 2);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while pool.parked_workers() < 2 {
+            assert!(std::time::Instant::now() < deadline, "workers never parked");
+            std::thread::yield_now();
+        }
+        let wakes_before = pool.wakeups_issued();
+        let (ran_tx, ran_rx) = mpsc::channel::<()>();
+        struct CountingSource {
+            pending: Mutex<usize>,
+            ran: Mutex<mpsc::Sender<()>>,
+        }
+        impl TaskSource for CountingSource {
+            fn top_priority(&self) -> Option<u32> {
+                (*self.pending.lock().unwrap() > 0).then_some(2)
+            }
+            fn run_one(&self) -> bool {
+                {
+                    let mut p = self.pending.lock().unwrap();
+                    if *p == 0 {
+                        return false;
+                    }
+                    *p -= 1;
+                }
+                self.ran.lock().unwrap().send(()).unwrap();
+                true
+            }
+        }
+        let src = Arc::new(CountingSource {
+            pending: Mutex::new(0),
+            ran: Mutex::new(ran_tx),
+        });
+        let id = pool.register_source(Arc::clone(&src) as Arc<dyn TaskSource>).unwrap();
+        *src.pending.lock().unwrap() = 3;
+        pool.notify_source(id); // one notify announces the whole backlog
+        for _ in 0..3 {
+            ran_rx
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .expect("backlog never drained");
+        }
+        let delta = pool.wakeups_issued() - wakes_before;
+        assert!(
+            (1..=2).contains(&delta),
+            "3-task burst, 1 notify: expected 1 unpark (+1 cascade at most), got {delta}"
+        );
+        pool.shutdown();
     }
 
     #[test]

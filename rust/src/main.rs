@@ -6,12 +6,14 @@
 //! mediapipe validate graphs/face_landmark.pbtxt
 //! mediapipe trace /tmp/t.tsv
 //! mediapipe visualize /tmp/t.tsv -o /tmp/t.html
-//! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4
+//! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4 \
+//!     --dispatch-mode sharded
 //! mediapipe list-calculators
 //! ```
 
 use std::time::Duration;
 
+use mediapipe::executor::DispatchMode;
 use mediapipe::prelude::*;
 use mediapipe::runtime::shared_engine;
 use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
@@ -232,6 +234,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     let pipeline_depth: usize = flag_value(args, "--pipeline-depth")
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
+    // --dispatch-mode: executor steal-dispatch engine for the server's
+    // private pool — the sharded default or one of the ablations.
+    let dispatch_mode = match flag_value(args, "--dispatch-mode") {
+        None | Some("sharded") => DispatchMode::Sharded,
+        Some("indexed") => DispatchMode::Indexed,
+        Some("linear") => DispatchMode::LinearScan,
+        Some(other) => {
+            eprintln!("--dispatch-mode must be sharded|indexed|linear, got '{other}'");
+            return 2;
+        }
+    };
     let run = || -> MpResult<()> {
         let server = PipelineServer::start(ServerConfig {
             artifact_dir: std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
@@ -239,6 +252,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             max_wait: Duration::from_millis(2),
             mode,
             pipeline_depth,
+            dispatch_mode,
             ..Default::default()
         })?;
         let t0 = std::time::Instant::now();

@@ -332,12 +332,15 @@ impl SchedulerQueue {
                 self.executor.execute(Box::new(move || core.drain_one()));
             }
             Submission::Steal(id) => {
-                // Change notification for the executor's priority index
-                // (become-nonempty or top-priority-raised): the executor
-                // fresh-reads this queue's top under its pool lock, so
-                // the heap lock must already be released here (pool →
-                // heap is the sanctioned lock order).
-                if !self.executor.notify_source(id) {
+                // Change notification for the executor's readiness
+                // tracking (become-nonempty or top-priority-raised).
+                // The pushed priority rides along as a hint: the
+                // sharded pool detects priority raises from it without
+                // re-reading this queue's heap, and the single-index
+                // ablation fresh-reads the top under its pool lock —
+                // either way the heap lock must already be released
+                // here (pool → heap is the sanctioned lock order).
+                if !self.executor.notify_source_hint(id, priority) {
                     // The pool shut down and no worker will come: run
                     // the work on the pushing thread so nothing accepted
                     // is ever stranded (mirrors `execute`'s inline
@@ -572,8 +575,9 @@ mod tests {
         // in_flight == 0, detach the run callback, and silently drop a
         // task whose push had already returned. Hammer that window: any
         // push that returns true must be executed, exactly once, before
-        // shutdown completes.
-        for _round in 0..30 {
+        // shutdown completes. CI's release stress step raises the round
+        // count via STRESS_ITERS.
+        for _round in 0..crate::benchutil::stress_iters(30) {
             let q = SchedulerQueue::new("race", 2);
             let ran = Arc::new(AtomicUsize::new(0));
             let r2 = Arc::clone(&ran);

@@ -92,6 +92,23 @@
 //! `benches/serving_pipelined.rs` sweeps K over a deliberately
 //! stage-imbalanced pipeline to show throughput approaching the
 //! slowest-stage bound.
+//!
+//! ## Scheduler scaling
+//!
+//! Every graph a server runs — the whole [`GraphPool`], all streaming
+//! sessions — submits through **one** executor, so the executor's
+//! dispatch path is on the critical path of every request. By default
+//! that is a private [`DispatchMode::Sharded`] pool: per-worker run
+//! queues, coalesced (dirty-flag) notifies and cross-shard stealing
+//! keep per-packet dispatch cost flat as `executor_threads` and the
+//! number of registered scheduler queues grow (pool_capacity × queues
+//! per graph of them in pooled mode). [`ServerConfig::dispatch_mode`]
+//! selects the single-index or linear-scan ablations for A/B runs —
+//! `benches/sched_scan_scale.rs` sweeps workers × sources over all
+//! three, and `benches/micro_hotpath.rs` measures the serving path
+//! end to end. Named pools ([`ServerConfig::executor_pool`]) are
+//! created once process-wide with the default mode; the knob only
+//! governs the private-pool branch.
 
 pub mod pipeline;
 pub mod pool;
@@ -102,7 +119,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{MpError, MpResult};
-use crate::executor::{Executor, ThreadPoolExecutor};
+use crate::executor::{DispatchMode, Executor, ThreadPoolExecutor};
 use crate::graph::{GraphConfig, Poll, SidePackets};
 use crate::metrics::{Counter, LatencyRecorder, LatencySummary};
 use crate::packet::Packet;
@@ -152,6 +169,12 @@ pub struct ServerConfig {
     /// `executor { type: "shared" pool: "<name>" }` — naming the same
     /// pool share one set of workers.
     pub executor_pool: Option<String>,
+    /// Steal-dispatch engine for the server's **private** pool (module
+    /// docs, "Scheduler scaling"): sharded by default, with the
+    /// single-index and linear-scan ablations selectable for A/B runs.
+    /// Ignored when `executor_pool` names a shared pool — named pools
+    /// are created once process-wide with the default mode.
+    pub dispatch_mode: DispatchMode,
     /// Pooled-per-batch or long-lived streaming sessions (module docs).
     pub mode: ServingMode,
     /// Streaming only: recycle a session after this many batches
@@ -195,6 +218,7 @@ impl Default for ServerConfig {
             pool_capacity: 2,
             executor_threads: 0,
             executor_pool: None,
+            dispatch_mode: DispatchMode::default(),
             mode: ServingMode::Pooled,
             session_max_timestamps: 256,
             session_input_queue: 4,
@@ -477,7 +501,11 @@ impl PipelineServer {
         // graphs can share workers), a private pool otherwise.
         let executor = match &cfg.executor_pool {
             Some(name) => crate::executor::ensure_named_pool(name, cfg.executor_threads),
-            None => Arc::new(ThreadPoolExecutor::new("serving", cfg.executor_threads)),
+            None => Arc::new(ThreadPoolExecutor::with_dispatch_mode(
+                "serving",
+                cfg.executor_threads,
+                cfg.dispatch_mode,
+            )),
         };
         let graph_config = match (&cfg.graph_override, cfg.mode) {
             (Some(c), _) => c.clone(),

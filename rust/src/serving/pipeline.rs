@@ -9,7 +9,10 @@
 //! [`InferenceEngine`], and the postprocess node decodes per-request
 //! [`Detections`]. Because the request path is a graph run, everything
 //! the framework provides — scheduler priorities, shared executors,
-//! tracing — applies to serving traffic too.
+//! tracing — applies to serving traffic too: each node run is a push
+//! into a scheduler queue registered with the server's (sharded, by
+//! default) executor, so `benches/micro_hotpath.rs` measures per-packet
+//! dispatch cost through exactly this path.
 
 use std::sync::OnceLock;
 

@@ -22,6 +22,14 @@
 //! builds run on one long-lived refill worker fed by a coalescing
 //! signal, so check-ins cost a channel send — never a thread — per
 //! request.
+//!
+//! The pool multiplies the executor's *source* population: every warm
+//! instance registers its scheduler queues with the shared pool when a
+//! run starts, so `capacity × queues-per-graph` sources can be live at
+//! once. The default sharded executor keeps that cheap — registration
+//! round-robins sources over per-worker shards and a queue's pushes
+//! cost coalesced dirty-flag notifies, not index refreshes — see the
+//! "scheduler scaling" section in [`crate::serving`] docs.
 
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};

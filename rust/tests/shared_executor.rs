@@ -3,7 +3,9 @@
 //! per-graph workers, configs can bind queues to the process-wide pool,
 //! a **named pool**, or an inline executor, results stay correct either
 //! way, and priority work stealing orders tasks across the graphs
-//! sharing a pool.
+//! sharing a pool. The sharded dispatch engine gets its own coverage:
+//! per-shard and cross-shard steal fairness, priority-raise preemption
+//! of shard affinity, and the steal-vs-unregister ghost hammer.
 //!
 //! These tests assert *exact* global worker-spawn counts, so every
 //! counting test (and every test that creates a pool) takes
@@ -12,6 +14,7 @@
 
 mod common;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use common::{drive, passthrough_chain};
@@ -194,35 +197,39 @@ node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "ou
     assert!(got[1..].iter().all(|&c| c == 'A'));
 }
 
-/// Steal-fairness proof (ROADMAP "steal fairness", re-proven for the
-/// PR 5 priority index): three equal-priority sources with sustained
-/// supply on a single-worker pool must be served exactly round-robin —
-/// never by registration order. Runs against one explicit
-/// [`DispatchMode`]; both the indexed path and the linear-scan ablation
-/// must satisfy the same guarantee (the index's rotation stamp replaces
-/// the scan-start cursor).
-fn round_robin_proof(mode: DispatchMode) {
-    struct TaggedSource {
-        tag: usize,
-        pending: Mutex<usize>,
-        log: Arc<Mutex<Vec<usize>>>,
+/// A hand-rolled equal-priority [`TaskSource`]: `pending` tasks, every
+/// run logs the source's tag. Shared by the fairness proofs below.
+struct TaggedSource {
+    tag: usize,
+    pending: Mutex<usize>,
+    log: Arc<Mutex<Vec<usize>>>,
+}
+impl TaskSource for TaggedSource {
+    fn top_priority(&self) -> Option<u32> {
+        (*self.pending.lock().unwrap() > 0).then_some(5) // all equal
     }
-    impl TaskSource for TaggedSource {
-        fn top_priority(&self) -> Option<u32> {
-            (*self.pending.lock().unwrap() > 0).then_some(5) // all equal
-        }
-        fn run_one(&self) -> bool {
-            {
-                let mut p = self.pending.lock().unwrap();
-                if *p == 0 {
-                    return false;
-                }
-                *p -= 1;
+    fn run_one(&self) -> bool {
+        {
+            let mut p = self.pending.lock().unwrap();
+            if *p == 0 {
+                return false;
             }
-            self.log.lock().unwrap().push(self.tag);
-            true
+            *p -= 1;
         }
+        self.log.lock().unwrap().push(self.tag);
+        true
     }
+}
+
+/// Steal-fairness proof (ROADMAP "steal fairness", re-proven for the
+/// PR 5 priority index and the sharded engine): three equal-priority
+/// sources with sustained supply on a single-worker pool must be served
+/// exactly round-robin — never by registration order. Runs against one
+/// explicit [`DispatchMode`]; the sharded default, the single-index
+/// path, and the linear-scan ablation must all satisfy the same
+/// guarantee (the index's rotation stamp replaces the scan-start
+/// cursor).
+fn round_robin_proof(mode: DispatchMode) {
     let pool = ThreadPoolExecutor::with_dispatch_mode("rr", 1, mode);
     assert_eq!(pool.dispatch_mode(), mode);
     // Park the single worker so every source fills before any steal.
@@ -261,13 +268,202 @@ fn equal_priority_sources_are_served_round_robin_in_linear_scan_ablation() {
 }
 
 #[test]
+fn sharded_equal_priority_sources_are_served_round_robin() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // One worker → one shard: proves per-shard rotation fairness (the
+    // cross-shard case is proven separately below).
+    round_robin_proof(DispatchMode::Sharded);
+}
+
+/// Cross-shard steal fairness: with one worker and four shards, the
+/// worker's own shard (0) holds only an idle placeholder, so every
+/// dispatch goes through the cross-shard arbiter. Equal-priority
+/// sources homed on three *different* foreign shards must still be
+/// served exactly round-robin, because rotation stamps are minted from
+/// one pool-global counter — least-recently-served order survives
+/// steals, it is not merely per shard.
+#[test]
+fn sharded_cross_shard_steals_are_served_round_robin() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = ThreadPoolExecutor::with_sharding("xshard", 1, 4);
+    assert_eq!(pool.num_shards(), 4);
+    assert_eq!(pool.dispatch_mode(), DispatchMode::Sharded);
+    let gate_tx = mediapipe::benchutil::park_worker(&pool);
+    let log: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    // Home shards are assigned round-robin in registration order: the
+    // workless placeholder takes shard 0 (the worker's own), pushing
+    // all three tagged sources onto foreign shards 1..3.
+    pool.register_source(Arc::new(TaggedSource {
+        tag: 99,
+        pending: Mutex::new(0),
+        log: Arc::clone(&log),
+    }) as Arc<dyn TaskSource>)
+        .unwrap();
+    for tag in 0..3usize {
+        pool.register_source(Arc::new(TaggedSource {
+            tag,
+            pending: Mutex::new(3),
+            log: Arc::clone(&log),
+        }) as Arc<dyn TaskSource>)
+            .unwrap();
+    }
+    assert_eq!(pool.num_sources(), 4);
+    assert_eq!(
+        pool.indexed_sources(),
+        3,
+        "pre-filled sources are indexed at registration; the empty placeholder is not"
+    );
+    gate_tx.send(()).unwrap();
+    pool.shutdown();
+    let got = log.lock().unwrap().clone();
+    assert_eq!(
+        got,
+        vec![0, 1, 2, 0, 1, 2, 0, 1, 2],
+        "equal-priority sources on distinct foreign shards must be \
+         stolen round-robin via the global rotation stamp"
+    );
+}
+
+/// Priority-raise preemption: a raise on a source homed on a *foreign*
+/// shard must beat the worker's own-shard backlog within one dispatch —
+/// shard affinity never delays the globally most urgent task.
+#[test]
+fn sharded_priority_raise_preempts_shard_affinity_within_one_dispatch() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct PrioSource {
+        tag: char,
+        tasks: Mutex<Vec<u32>>, // pending task priorities
+        log: Arc<Mutex<Vec<char>>>,
+    }
+    impl TaskSource for PrioSource {
+        fn top_priority(&self) -> Option<u32> {
+            self.tasks.lock().unwrap().iter().max().copied()
+        }
+        fn run_one(&self) -> bool {
+            {
+                let mut t = self.tasks.lock().unwrap();
+                let Some(i) = (0..t.len()).max_by_key(|&i| t[i]) else {
+                    return false;
+                };
+                t.remove(i);
+            }
+            self.log.lock().unwrap().push(self.tag);
+            true
+        }
+    }
+    // One worker, two shards: shard 0 (the worker's own) gets a prio-5
+    // backlog, shard 1 gets the raise victim.
+    let pool = ThreadPoolExecutor::with_sharding("preempt", 1, 2);
+    assert_eq!(pool.num_shards(), 2);
+    let gate_tx = mediapipe::benchutil::park_worker(&pool);
+    let log: Arc<Mutex<Vec<char>>> = Arc::new(Mutex::new(Vec::new()));
+    let a = Arc::new(PrioSource {
+        tag: 'a',
+        tasks: Mutex::new(vec![5, 5, 5]),
+        log: Arc::clone(&log),
+    });
+    let b = Arc::new(PrioSource {
+        tag: 'b',
+        tasks: Mutex::new(vec![1]),
+        log: Arc::clone(&log),
+    });
+    pool.register_source(Arc::clone(&a) as Arc<dyn TaskSource>).unwrap(); // home 0
+    let idb = pool
+        .register_source(Arc::clone(&b) as Arc<dyn TaskSource>)
+        .unwrap(); // home 1, registration advertised its top (1)
+    // Raise b's top above the backlog while the worker is parked: the
+    // notify compares the hint against b's advertised priority and arms
+    // the preemption flag, so the *first* dispatch after release routes
+    // through the cross-shard arbiter instead of the local shard.
+    b.tasks.lock().unwrap().push(9);
+    assert!(pool.notify_source_hint(idb, 9));
+    gate_tx.send(()).unwrap();
+    pool.shutdown();
+    let got = log.lock().unwrap().clone();
+    assert_eq!(
+        got,
+        vec!['b', 'a', 'a', 'a', 'b'],
+        "the raised prio-9 task must run first (preempting the own-shard \
+         prio-5 backlog); b's leftover prio-1 task must NOT keep \
+         preempting once the raise is consumed"
+    );
+}
+
+/// Steal-vs-unregister hammer: queues shut down (unregister) while the
+/// pool's workers are still actively stealing from them and their
+/// peers. Every accepted task must still run, and after all queues are
+/// gone no shard may retain a ghost entry. A fresh queue on the same
+/// pool then gets a brand-new SourceId and dispatches cleanly.
+/// `STRESS_ITERS` (CI's release-mode soak) scales the iteration count.
+#[test]
+fn sharded_steal_vs_unregister_leaves_no_ghosts_and_reregister_is_clean() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for _ in 0..mediapipe::benchutil::stress_iters(20) {
+        let pool = Arc::new(ThreadPoolExecutor::with_sharding("hammer", 2, 4));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let queues: Vec<_> = (0..4)
+            .map(|i| {
+                let ex = Arc::clone(&pool) as Arc<dyn Executor>;
+                let q = SchedulerQueue::with_executor(&format!("h{i}"), ex);
+                let ran = Arc::clone(&ran);
+                q.start(Arc::new(move |_id| {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                }));
+                q
+            })
+            .collect();
+        let accepted: usize = std::thread::scope(|s| {
+            let pushers: Vec<_> = queues
+                .iter()
+                .map(|q| {
+                    let q = Arc::clone(q);
+                    s.spawn(move || (0..50).filter(|&t| q.push(t, ((t % 5) + 1) as u32)).count())
+                })
+                .collect();
+            pushers.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        // 200 tasks on 2 workers: the first shutdowns run while workers
+        // are still draining the other queues — the unregister under
+        // test races live cross-shard steals.
+        for q in &queues {
+            q.shutdown(); // waits for this queue's accepted tasks
+        }
+        assert_eq!(ran.load(Ordering::Relaxed), accepted);
+        assert_eq!(pool.num_sources(), 0, "unregister left a source behind");
+        assert_eq!(pool.indexed_sources(), 0, "ghost entry survived in a shard index");
+        drop(queues);
+
+        // Re-register on the same pool: a fresh queue must get a fresh
+        // id (ids are never reused) and dispatch cleanly.
+        let ex = Arc::clone(&pool) as Arc<dyn Executor>;
+        let fresh = SchedulerQueue::with_executor("fresh", ex);
+        let ran2 = Arc::new(AtomicUsize::new(0));
+        let r2 = Arc::clone(&ran2);
+        fresh.start(Arc::new(move |_id| {
+            r2.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(pool.num_sources(), 1);
+        for t in 0..20 {
+            assert!(fresh.push(t, 1));
+        }
+        fresh.shutdown();
+        assert_eq!(ran2.load(Ordering::Relaxed), 20);
+        assert_eq!(pool.indexed_sources(), 0);
+    }
+}
+
+#[test]
 fn equal_priority_queues_with_sustained_supply_alternate_exactly() {
     let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     // The same fairness guarantee through real SchedulerQueues and the
-    // real push→notify_source→index protocol (not hand-rolled sources):
-    // two queues with equal-priority supply on one parked single-worker
-    // pool must alternate exactly, in both dispatch modes.
-    for mode in [DispatchMode::Indexed, DispatchMode::LinearScan] {
+    // real push→notify protocol (not hand-rolled sources): two queues
+    // with equal-priority supply on one parked single-worker pool must
+    // alternate exactly, in all three dispatch modes.
+    for mode in [
+        DispatchMode::Sharded,
+        DispatchMode::Indexed,
+        DispatchMode::LinearScan,
+    ] {
         let pool = Arc::new(ThreadPoolExecutor::with_dispatch_mode("alt", 1, mode));
         let gate_tx = mediapipe::benchutil::park_worker(&pool); // worker parked
         let qa = SchedulerQueue::with_executor("a", Arc::clone(&pool) as Arc<dyn Executor>);
