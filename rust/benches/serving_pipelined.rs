@@ -2,8 +2,8 @@
 //! batches"): does keeping K timestamps in flight push a
 //! stage-imbalanced serving pipeline toward its slowest-stage bound?
 //!
-//! Setup: a streaming detection server whose graph is replaced
-//! (`ServerConfig::graph_override`) with a deliberately imbalanced
+//! Setup: a streaming detection server whose graph is a registered
+//! entry (`ServerConfig::graph_name`) holding a deliberately imbalanced
 //! three-stage pipeline — fast → **slow** → fast `BusyWorkCalculator`
 //! stages plus an echo decode (`staged_pipeline_config`). With
 //! `pipeline_depth = 1` the batcher submits one timestamp and waits for
@@ -18,12 +18,13 @@
 //! `--smoke` (used by CI) shrinks everything so the bench just proves
 //! the sweep still runs end to end.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use mediapipe::benchutil::{detect_wave, per_sec, section, stub_detector_artifacts, table};
 use mediapipe::perception::SyntheticWorld;
 use mediapipe::serving::pipeline::staged_pipeline_config;
-use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
+use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig, ServingMode};
 
 struct Scale {
     stages_us: Vec<u64>,
@@ -39,7 +40,9 @@ struct DepthReport {
 }
 
 fn run_depth(depth: usize, sc: &Scale) -> DepthReport {
-    let override_cfg = staged_pipeline_config(&sc.stages_us, Some(16)).unwrap();
+    let staged_cfg = staged_pipeline_config(&sc.stages_us, Some(16)).unwrap();
+    let registry = Arc::new(GraphRegistry::new());
+    registry.register("staged", &staged_cfg).unwrap();
     let server = PipelineServer::start(ServerConfig {
         artifact_dir: stub_detector_artifacts("mp-serving-pipelined"),
         max_batch: 1, // one request per timestamp
@@ -56,7 +59,8 @@ fn run_depth(depth: usize, sc: &Scale) -> DepthReport {
         session_input_queue: 16,
         pipeline_depth: depth,
         batch_timeout: Duration::from_secs(60),
-        graph_override: Some(override_cfg),
+        graph_name: Some("staged".into()),
+        registry: Some(registry),
     })
     .unwrap();
     let h = server.handle();

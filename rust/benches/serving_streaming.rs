@@ -62,7 +62,8 @@ fn run_mode(mode: ServingMode, label: &'static str, sc: &Scale) -> ModeReport {
         session_input_queue: 4,
         pipeline_depth: 1, // submit-then-wait: the pre-pipelining baseline
         batch_timeout: Duration::from_secs(60),
-        graph_override: None,
+        graph_name: None,
+        registry: None,
     })
     .unwrap();
     let h = server.handle();

@@ -6,6 +6,7 @@ pub mod core;
 pub mod flow;
 pub mod inference;
 pub mod landmark;
+pub mod scenarios;
 pub mod tracking;
 pub mod video;
 
@@ -19,6 +20,7 @@ pub fn register_builtins(r: &CalculatorRegistry) {
     flow::register(r);
     inference::register(r);
     landmark::register(r);
+    scenarios::register(r);
     tracking::register(r);
     video::register(r);
 }

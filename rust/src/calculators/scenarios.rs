@@ -1,0 +1,400 @@
+//! Scenario calculators for the multi-model catalog (SNIPPETS.md
+//! Snippets 1 and 2): a deterministic 33-point pose "model", joint-angle
+//! decoding, hand and face landmarkers, the holistic merger that
+//! synchronizes all three model branches, and per-detection landmarks
+//! for the detection→tracking→landmark cascade.
+//!
+//! Like the reference inference backend, these models are deterministic
+//! functions of the image (brightness centroid + fixed canonical
+//! shapes): they prove the *pipeline* — multi-branch synchronization,
+//! subgraph expansion, swap semantics — not numerics, and they run
+//! offline with zero dependencies.
+
+use crate::calculator::{Calculator, CalculatorContext, Contract, ProcessOutcome};
+use crate::error::MpResult;
+use crate::packet::{Packet, PacketType};
+use crate::perception::types::{Detections, LandmarkList};
+use crate::perception::ImageFrame;
+use crate::registry::CalculatorRegistry;
+
+/// Named joint angles decoded from a pose skeleton (radians).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JointAngles {
+    pub angles: Vec<(&'static str, f32)>,
+}
+
+/// The synchronized output of the multi-model holistic graph: one pose,
+/// two hands and one face mesh, all at the same timestamp.
+#[derive(Clone, Debug)]
+pub struct HolisticResult {
+    pub pose: LandmarkList,
+    pub hands: Vec<LandmarkList>,
+    pub face: LandmarkList,
+}
+
+/// BlazePose-style landmark indices used by the joint-angle decoder.
+const L_SHOULDER: usize = 11;
+const R_SHOULDER: usize = 12;
+const L_ELBOW: usize = 13;
+const R_ELBOW: usize = 14;
+const L_WRIST: usize = 15;
+const R_WRIST: usize = 16;
+const L_HIP: usize = 23;
+const R_HIP: usize = 24;
+const L_KNEE: usize = 25;
+const R_KNEE: usize = 26;
+const L_ANKLE: usize = 27;
+const R_ANKLE: usize = 28;
+
+/// Canonical 33-point skeleton (normalized offsets from the body
+/// center), in the BlazePose point order: 0–10 head, 11–22 arms/hands,
+/// 23–32 legs/feet.
+const POSE_SKELETON: [(f32, f32); 33] = [
+    (0.00, -0.42),                                  // 0 nose
+    (-0.02, -0.45), (-0.04, -0.45), (-0.06, -0.45), // 1-3 left eye
+    (0.02, -0.45), (0.04, -0.45), (0.06, -0.45),    // 4-6 right eye
+    (-0.08, -0.43), (0.08, -0.43),                  // 7-8 ears
+    (-0.03, -0.38), (0.03, -0.38),                  // 9-10 mouth
+    (-0.15, -0.25), (0.15, -0.25),                  // 11-12 shoulders
+    (-0.22, -0.05), (0.22, -0.05),                  // 13-14 elbows
+    (-0.25, 0.12), (0.25, 0.12),                    // 15-16 wrists
+    (-0.27, 0.16), (0.27, 0.16),                    // 17-18 pinkies
+    (-0.28, 0.15), (0.28, 0.15),                    // 19-20 indexes
+    (-0.26, 0.14), (0.26, 0.14),                    // 21-22 thumbs
+    (-0.08, 0.10), (0.08, 0.10),                    // 23-24 hips
+    (-0.10, 0.28), (0.10, 0.28),                    // 25-26 knees
+    (-0.11, 0.44), (0.11, 0.44),                    // 27-28 ankles
+    (-0.12, 0.47), (0.12, 0.47),                    // 29-30 heels
+    (-0.15, 0.48), (0.15, 0.48),                    // 31-32 foot tips
+];
+
+/// The 21-point canonical hand (wrist + 5 fingers x 4 joints) as
+/// normalized offsets from the hand center.
+fn hand_points(cx: f32, cy: f32, mirror: f32) -> LandmarkList {
+    let mut pts = Vec::with_capacity(21);
+    pts.push((cx, cy + 0.04)); // wrist
+    for finger in 0..5usize {
+        let spread = (finger as f32 - 2.0) * 0.015 * mirror;
+        for joint in 1..=4usize {
+            let reach = joint as f32 * 0.012;
+            pts.push((cx + spread, cy + 0.02 - reach));
+        }
+    }
+    LandmarkList::new(pts)
+}
+
+/// Brightness-weighted centroid of a frame's first channel — the
+/// deterministic "where is the subject" primitive every scenario model
+/// shares. Falls back to the image center on an all-dark frame.
+fn brightness_centroid(f: &ImageFrame) -> (f32, f32) {
+    let (mut sx, mut sy, mut sw) = (0.0f64, 0.0f64, 0.0f64);
+    for y in 0..f.height {
+        for x in 0..f.width {
+            let v = f.data[(y * f.width + x) * f.channels] as f64;
+            sx += v * (x as f64 + 0.5);
+            sy += v * (y as f64 + 0.5);
+            sw += v;
+        }
+    }
+    if sw <= f64::EPSILON {
+        return (0.5, 0.5);
+    }
+    (
+        (sx / sw / f.width as f64) as f32,
+        (sy / sw / f.height as f64) as f32,
+    )
+}
+
+/// Angle (radians) at vertex `b` of the triangle a-b-c.
+fn joint_angle(a: (f32, f32), b: (f32, f32), c: (f32, f32)) -> f32 {
+    let (ux, uy) = (a.0 - b.0, a.1 - b.1);
+    let (vx, vy) = (c.0 - b.0, c.1 - b.1);
+    let nu = (ux * ux + uy * uy).sqrt();
+    let nv = (vx * vx + vy * vy).sqrt();
+    if nu <= f32::EPSILON || nv <= f32::EPSILON {
+        return 0.0;
+    }
+    ((ux * vx + uy * vy) / (nu * nv)).clamp(-1.0, 1.0).acos()
+}
+
+/// FRAME → POSE: the 33-point skeleton anchored at the frame's
+/// brightness centroid, scaled by the `scale` option (default 0.8).
+pub struct PoseDetector {
+    scale: f32,
+}
+
+impl Calculator for PoseDetector {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.scale = ctx.options().float_or("scale", 0.8) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let (cx, cy) = brightness_centroid(p.get::<ImageFrame>()?);
+        let points: Vec<(f32, f32)> = POSE_SKELETON
+            .iter()
+            .map(|&(dx, dy)| {
+                (
+                    (cx + dx * self.scale).clamp(0.0, 1.0),
+                    (cy + dy * self.scale).clamp(0.0, 1.0),
+                )
+            })
+            .collect();
+        ctx.output_now(0, LandmarkList::new(points));
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// POSE → ANGLES: elbow and knee angles decoded from the skeleton
+/// (Snippet 1's joint-angle post-processing stage).
+pub struct JointAngleDecoder;
+
+impl Calculator for JointAngleDecoder {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let pose = p.get::<LandmarkList>()?;
+        let pt = |i: usize| pose.points.get(i).copied().unwrap_or((0.0, 0.0));
+        let angles = vec![
+            (
+                "left_elbow",
+                joint_angle(pt(L_SHOULDER), pt(L_ELBOW), pt(L_WRIST)),
+            ),
+            (
+                "right_elbow",
+                joint_angle(pt(R_SHOULDER), pt(R_ELBOW), pt(R_WRIST)),
+            ),
+            ("left_knee", joint_angle(pt(L_HIP), pt(L_KNEE), pt(L_ANKLE))),
+            (
+                "right_knee",
+                joint_angle(pt(R_HIP), pt(R_KNEE), pt(R_ANKLE)),
+            ),
+        ];
+        ctx.output_now(0, JointAngles { angles });
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// FRAME → HANDS: two 21-point hands placed at the wrist positions the
+/// pose skeleton implies for the same centroid.
+pub struct HandLandmarker;
+
+impl Calculator for HandLandmarker {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let (cx, cy) = brightness_centroid(p.get::<ImageFrame>()?);
+        let (lw, rw) = (POSE_SKELETON[L_WRIST], POSE_SKELETON[R_WRIST]);
+        let hands = vec![
+            hand_points(cx + lw.0 * 0.8, cy + lw.1 * 0.8, -1.0),
+            hand_points(cx + rw.0 * 0.8, cy + rw.1 * 0.8, 1.0),
+        ];
+        ctx.output_now(0, hands);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// FRAME → FACE: a 468-point face mesh (concentric rings around the
+/// head position the pose skeleton implies).
+pub struct FaceLandmarker;
+
+impl Calculator for FaceLandmarker {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let (cx, cy) = brightness_centroid(p.get::<ImageFrame>()?);
+        let (hx, hy) = (cx, cy + POSE_SKELETON[0].1 * 0.8);
+        let mut pts = Vec::with_capacity(468);
+        for i in 0..468usize {
+            let ring = 1.0 + (i / 52) as f32; // 9 rings x 52 points
+            let theta = (i % 52) as f32 / 52.0 * std::f32::consts::TAU;
+            let r = 0.01 * ring;
+            pts.push((
+                (hx + r * theta.cos()).clamp(0.0, 1.0),
+                (hy + r * theta.sin()).clamp(0.0, 1.0),
+            ));
+        }
+        ctx.output_now(0, LandmarkList::new(pts));
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// POSE + HANDS + FACE → HOLISTIC: joins the three model branches. No
+/// sync sets: the default aligned-timestamp input policy *is* the
+/// synchronization claim — Process fires only when all three branches
+/// have delivered the same timestamp, so a holistic packet can never mix
+/// model outputs from different frames (the paper's §3.2 guarantee,
+/// Snippet 2's structure).
+pub struct HolisticMerger;
+
+impl Calculator for HolisticMerger {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let (pose_in, hands_in, face_in) = (ctx.input(0), ctx.input(1), ctx.input(2));
+        if pose_in.is_empty() || hands_in.is_empty() || face_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let result = HolisticResult {
+            pose: pose_in.get::<LandmarkList>()?.clone(),
+            hands: hands_in.get::<Vec<LandmarkList>>()?.clone(),
+            face: face_in.get::<LandmarkList>()?.clone(),
+        };
+        ctx.output(0, Packet::new(result, pose_in.timestamp()));
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// FRAME + DETECTIONS → LANDMARKS: per-detection landmarks (center +
+/// four corners of each tracked box) — the cascade's final stage.
+pub struct DetectionLandmarks;
+
+impl Calculator for DetectionLandmarks {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let (frame_in, dets_in) = (ctx.input(0), ctx.input(1));
+        if frame_in.is_empty() || dets_in.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let mut pts = Vec::new();
+        for d in dets_in.get::<Detections>()? {
+            let b = &d.bbox;
+            pts.push(b.center());
+            pts.push((b.x, b.y));
+            pts.push((b.x + b.w, b.y));
+            pts.push((b.x, b.y + b.h));
+            pts.push((b.x + b.w, b.y + b.h));
+        }
+        ctx.output(0, Packet::new(LandmarkList::new(pts), frame_in.timestamp()));
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+pub fn register(r: &CalculatorRegistry) {
+    r.register_fn(
+        "PoseDetectorCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .output("POSE", PacketType::of::<LandmarkList>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(PoseDetector { scale: 0.8 })),
+    );
+    r.register_fn(
+        "JointAngleCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("POSE", PacketType::of::<LandmarkList>())
+                .output("ANGLES", PacketType::of::<JointAngles>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(JointAngleDecoder)),
+    );
+    r.register_fn(
+        "HandLandmarkerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .output("HANDS", PacketType::of::<Vec<LandmarkList>>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(HandLandmarker)),
+    );
+    r.register_fn(
+        "FaceLandmarkerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .output("FACE", PacketType::of::<LandmarkList>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(FaceLandmarker)),
+    );
+    r.register_fn(
+        "HolisticMergerCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("POSE", PacketType::of::<LandmarkList>())
+                .input("HANDS", PacketType::of::<Vec<LandmarkList>>())
+                .input("FACE", PacketType::of::<LandmarkList>())
+                .output("HOLISTIC", PacketType::of::<HolisticResult>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(HolisticMerger)),
+    );
+    r.register_fn(
+        "DetectionLandmarksCalculator",
+        |_| {
+            Ok(Contract::new()
+                .input("FRAME", PacketType::of::<ImageFrame>())
+                .input("DETECTIONS", PacketType::of::<Detections>())
+                .output("LANDMARKS", PacketType::of::<LandmarkList>())
+                .with_timestamp_offset(0))
+        },
+        |_| Ok(Box::new(DetectionLandmarks)),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perception::types::Rect;
+
+    fn bright_frame(cx: f32, cy: f32) -> ImageFrame {
+        let mut b = ImageFrame::build(32, 32, 1);
+        b.fill(0.05)
+            .fill_rect(&Rect::new(cx - 0.1, cy - 0.1, 0.2, 0.2), &[1.0]);
+        b.finish()
+    }
+
+    #[test]
+    fn centroid_follows_the_bright_region() {
+        let (cx, cy) = brightness_centroid(&bright_frame(0.7, 0.3));
+        assert!(cx > 0.55, "cx={cx}");
+        assert!(cy < 0.45, "cy={cy}");
+        // All-dark frame falls back to the center.
+        let dark = ImageFrame::new(8, 8, 1, vec![0.0; 64]);
+        assert_eq!(brightness_centroid(&dark), (0.5, 0.5));
+    }
+
+    #[test]
+    fn skeleton_is_33_points_anchored_at_the_centroid() {
+        assert_eq!(POSE_SKELETON.len(), 33);
+        let skeleton = |f: &ImageFrame| {
+            let (cx, cy) = brightness_centroid(f);
+            LandmarkList::new(
+                POSE_SKELETON
+                    .iter()
+                    .map(|&(dx, dy)| (cx + dx * 0.5, cy + dy * 0.5))
+                    .collect(),
+            )
+        };
+        let left = skeleton(&bright_frame(0.3, 0.5));
+        let right = skeleton(&bright_frame(0.7, 0.5));
+        assert_eq!(left.points.len(), 33);
+        assert!(
+            right.centroid().0 > left.centroid().0,
+            "skeleton moves with the subject"
+        );
+    }
+
+    #[test]
+    fn joint_angle_degenerate_and_right_angle() {
+        assert_eq!(joint_angle((0.0, 0.0), (0.0, 0.0), (1.0, 0.0)), 0.0);
+        let right = joint_angle((1.0, 0.0), (0.0, 0.0), (0.0, 1.0));
+        assert!((right - std::f32::consts::FRAC_PI_2).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hand_has_21_points() {
+        assert_eq!(hand_points(0.5, 0.5, 1.0).points.len(), 21);
+    }
+}

@@ -414,6 +414,16 @@ struct ShardState {
 struct Shard {
     state: Mutex<ShardState>,
     cv: Condvar,
+    /// Advisory "this shard may hold work" flag, readable without the
+    /// shard lock. Set (under the lock) by every insert into the index
+    /// or mailbox; cleared by the steal scan only after verifying, under
+    /// the lock, that both are empty. Lets an idle worker's cross-shard
+    /// scan skip believed-empty shards — at hundreds of sources spread
+    /// over many shards, a miss costs a few atomic loads instead of one
+    /// lock acquisition per shard. The flag is conservative: it can be
+    /// stale-true (next scan clears it), never stale-false while work is
+    /// present.
+    work_hint: AtomicBool,
 }
 
 /// A completed sharded dispatch decision.
@@ -463,6 +473,15 @@ struct ShardedEngine {
     /// Total wake permits ever granted — the coalescing counter the
     /// thundering-herd regression tests assert on.
     wakeups_issued: AtomicU64,
+    /// Consecutive dispatch passes (across all workers) that found
+    /// nothing, reset on every successful pick. When the streak exceeds
+    /// the shard count, the pool is sitting idle and speculative wakes
+    /// keep losing the race to the work they advertise — so the
+    /// *surplus* wakes (leftover cascade, post-repair fan-out) are
+    /// suppressed until work is found again. Notify-driven wakes
+    /// (become-nonempty, priority raise) are never suppressed: new work
+    /// always gets exactly one worker.
+    miss_streak: AtomicU64,
 }
 
 impl ShardedEngine {
@@ -478,6 +497,7 @@ impl ShardedEngine {
                         wake_tokens: 0,
                     }),
                     cv: Condvar::new(),
+                    work_hint: AtomicBool::new(false),
                 })
                 .collect(),
             sources: RwLock::new(HashMap::new()),
@@ -489,6 +509,7 @@ impl ShardedEngine {
             plain_count: AtomicUsize::new(0),
             parked_count: AtomicUsize::new(0),
             wakeups_issued: AtomicU64::new(0),
+            miss_streak: AtomicU64::new(0),
         }
     }
 
@@ -527,6 +548,7 @@ impl ShardedEngine {
                 st.index.insert(key, id);
                 st.keys.insert(id, key);
                 entry.advertised.store(u64::from(p), Ordering::SeqCst);
+                self.shards[entry.home].work_hint.store(true, Ordering::Release);
             }
             (None, Some(k)) => {
                 st.index.remove(&k);
@@ -547,6 +569,7 @@ impl ShardedEngine {
             // refresh obligation survives as a new mailbox entry
             // (consumed by the next drain — duplicates are harmless).
             st.mailbox.push(id);
+            self.shards[entry.home].work_hint.store(true, Ordering::Release);
         }
     }
 
@@ -595,25 +618,62 @@ impl ShardedEngine {
         })
     }
 
-    /// Serve the worker's own shard: drain its mailbox, pop its top.
-    fn local_dispatch(&self, own: usize) -> Option<ShardPick> {
+    /// One dispatch attempt for a worker: local shard first, then the
+    /// cross-shard steal scan — all under a **single** source-map
+    /// read-lock hold. The old split (`local_dispatch` then
+    /// `steal_dispatch`, each re-acquiring `sources.read()`) paid the
+    /// read-lock twice per miss and let `register_source`'s write lock
+    /// interleave between the halves; batching the whole attempt under
+    /// one hold halves the lock traffic on the hot miss path.
+    ///
+    /// `preempting` routes a raise-preemption straight to the global
+    /// scan (the raised entry may live on any shard) before falling
+    /// back to the local-first order.
+    fn dispatch(&self, own: usize, preempting: bool) -> Option<ShardPick> {
         let map = self.sources.read().unwrap();
-        let mut st = self.shards[own].state.lock().unwrap();
-        self.drain_mailbox(&map, &mut st);
-        self.pick_from(&map, own, &mut st)
+        if preempting {
+            if let Some(p) = self.steal_locked(&map, own) {
+                return Some(p);
+            }
+        }
+        {
+            let mut st = self.shards[own].state.lock().unwrap();
+            self.drain_mailbox(&map, &mut st);
+            if let Some(p) = self.pick_from(&map, own, &mut st) {
+                return Some(p);
+            }
+        }
+        self.steal_locked(&map, own)
     }
 
     /// The cross-shard arbiter (steal path / raise preemption): drain
     /// every shard's mailbox, then dispatch the globally best
-    /// `(priority, stamp)` entry. Shard locks are taken one at a time.
-    fn steal_dispatch(&self, start: usize) -> Option<ShardPick> {
-        let map = self.sources.read().unwrap();
+    /// `(priority, stamp)` entry. Shard locks are taken one at a time;
+    /// the caller holds the source-map read lock.
+    ///
+    /// Adaptive backoff: shards whose `work_hint` is unset are skipped
+    /// without touching their lock — an idle fleet probing hundreds of
+    /// empty shards per miss would otherwise serialize on those locks.
+    /// The hint is cleared only here, under the shard lock, after
+    /// verifying both index *and* mailbox are empty (a drained mailbox
+    /// can re-fill via `refresh_entry`'s CAS-fail re-enqueue). The
+    /// worker's own shard is always probed so a hint lost to a stale
+    /// clear still gets rediscovered by its home worker's next scan.
+    fn steal_locked(
+        &self,
+        map: &HashMap<SourceId, Arc<ShardedEntry>>,
+        start: usize,
+    ) -> Option<ShardPick> {
         let n = self.shards.len();
         let mut best: Option<(IndexKey, usize)> = None;
         for k in 0..n {
             let j = (start + k) % n;
-            let mut st = self.shards[j].state.lock().unwrap();
-            self.drain_mailbox(&map, &mut st);
+            let shard = &self.shards[j];
+            if j != start && !shard.work_hint.load(Ordering::Acquire) {
+                continue;
+            }
+            let mut st = shard.state.lock().unwrap();
+            self.drain_mailbox(map, &mut st);
             if let Some((&key, _)) = st.index.first_key_value() {
                 let better = match best {
                     None => true,
@@ -622,6 +682,8 @@ impl ShardedEngine {
                 if better {
                     best = Some((key, j));
                 }
+            } else if st.mailbox.is_empty() {
+                shard.work_hint.store(false, Ordering::Release);
             }
         }
         let (_, j) = best?;
@@ -629,7 +691,7 @@ impl ShardedEngine {
         // re-keyed the peeked entry since the scan; whatever is best in
         // that shard *now* wins (possibly nothing — the caller rescans).
         let mut st = self.shards[j].state.lock().unwrap();
-        self.pick_from(&map, j, &mut st)
+        self.pick_from(map, j, &mut st)
     }
 
     /// Post-dispatch repair: fresh-read the source just ran and re-key
@@ -647,7 +709,14 @@ impl ShardedEngine {
         };
         let home = entry.home;
         drop(map);
-        if still_has_work {
+        // The fan-out wake is a surplus optimization: the repairing
+        // worker loops and rescans regardless, so under a sustained
+        // miss streak (idle fleet, nothing to steal) suppressing it
+        // cannot strand work — only notify-driven 0→1 wakes are
+        // load-bearing, and those are never gated.
+        if still_has_work
+            && self.miss_streak.load(Ordering::Relaxed) <= self.shards.len() as u64
+        {
             self.wake_one(home);
         }
     }
@@ -674,6 +743,11 @@ impl ShardedEngine {
         if newly_flagged {
             let mut st = self.shards[entry.home].state.lock().unwrap();
             st.mailbox.push(id);
+            // Raise the hint under the lock: a steal scan clearing it
+            // holds the same lock, so the flag can never be stale-false
+            // while this entry is queued.
+            self.shards[entry.home].work_hint.store(true, Ordering::Release);
+            drop(st);
         }
         // Raise detection after the mailbox insert, so a preempting
         // dispatch that swaps the flag is guaranteed to find the entry
@@ -843,20 +917,20 @@ impl PoolInner {
             }
             // One atomic swap per dispatch: a pending priority raise
             // routes this dispatch through the global arbiter even when
-            // local work exists, preempting shard affinity.
-            let pick = if engine.preempt.swap(0, Ordering::SeqCst) != 0 {
-                engine.steal_dispatch(own)
-            } else {
-                None
-            };
-            let pick = pick
-                .or_else(|| engine.local_dispatch(own))
-                .or_else(|| engine.steal_dispatch(own));
-            if let Some(p) = pick {
-                if p.leftover {
+            // local work exists, preempting shard affinity. The whole
+            // attempt (preempt scan, local shard, steal scan) runs
+            // under one source-map read-lock hold inside `dispatch`.
+            let preempting = engine.preempt.swap(0, Ordering::SeqCst) != 0;
+            if let Some(p) = engine.dispatch(own, preempting) {
+                let streak = engine.miss_streak.swap(0, Ordering::Relaxed);
+                if p.leftover && streak <= engine.shards.len() as u64 {
                     // Surplus cascade: the shard still advertises other
                     // work — fan out one parked peer (locks are dropped;
                     // waking a worker of the same shard is safe here).
+                    // Suppressed while the fleet is deep in a miss
+                    // streak: waking peers into a near-dry system only
+                    // manufactures idle wakeups, and this worker loops
+                    // back for the leftover itself anyway.
                     engine.wake_one(p.from_shard);
                 }
                 return Work::Steal(Some(p.id), p.src);
@@ -867,6 +941,7 @@ impl PoolInner {
                 }
                 continue;
             }
+            engine.miss_streak.fetch_add(1, Ordering::Relaxed);
             if woke {
                 // Woke up and found nothing: the wake raced another
                 // worker to the work.

@@ -1250,6 +1250,22 @@ impl Graph {
         Graph::from_plan(plan, registry, &expanded, executor)
     }
 
+    /// Build a graph from a **pre-validated** plan plus the expanded
+    /// config it was derived from, against the global calculator
+    /// registry. This is the serving registry's fast path
+    /// ([`crate::serving::GraphRegistry`]): expansion + planning happen
+    /// once when a config version is registered, and every pool refill /
+    /// checkout afterwards only instantiates calculators. `expanded`
+    /// must be the already-expanded config `plan` came from (it supplies
+    /// the profiler settings).
+    pub fn from_validated(
+        plan: Plan,
+        expanded: &GraphConfig,
+        executor: Option<Arc<dyn Executor>>,
+    ) -> MpResult<Graph> {
+        Graph::from_plan(plan, CalculatorRegistry::global(), expanded, executor)
+    }
+
     fn from_plan(
         plan: Plan,
         registry: &CalculatorRegistry,

@@ -8,15 +8,18 @@
 //! mediapipe visualize /tmp/t.tsv -o /tmp/t.html
 //! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4 \
 //!     --dispatch-mode sharded
+//! mediapipe serve --streaming --graph echo --swap-to echo_deep
 //! mediapipe list-calculators
 //! ```
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use mediapipe::executor::DispatchMode;
 use mediapipe::prelude::*;
 use mediapipe::runtime::shared_engine;
-use mediapipe::serving::{PipelineServer, ServerConfig, ServingMode};
+use mediapipe::serving::pipeline::staged_pipeline_config;
+use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig, ServingMode};
 use mediapipe::visualizer;
 
 fn main() {
@@ -245,7 +248,44 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // --graph: serve a named entry from the CLI's graph registry instead
+    // of the built-in detector pipeline. --swap-to: after half the
+    // requests, blue-green hot-swap the served graph to the named
+    // entry's config (see rust/src/serving "Graph registry & hot-swap").
+    let graph = flag_value(args, "--graph").map(str::to_string);
+    let swap_to = flag_value(args, "--swap-to").map(str::to_string);
     let run = || -> MpResult<()> {
+        // The CLI registry offers two staged echo pipelines (they speak
+        // the serving frames/detections interface without needing model
+        // artifacts) so registry serving and swaps can be exercised from
+        // the command line.
+        let registry = if graph.is_some() || swap_to.is_some() {
+            let reg = Arc::new(GraphRegistry::new());
+            reg.register("echo", &staged_pipeline_config(&[100, 200, 100], Some(16))?)?;
+            reg.register(
+                "echo_deep",
+                &staged_pipeline_config(&[100, 200, 400, 200, 100], Some(16))?,
+            )?;
+            if let Some(g) = &graph {
+                if !reg.contains(g) {
+                    return Err(MpError::Validation(format!(
+                        "--graph '{g}' is not registered (known: {:?})",
+                        reg.names()
+                    )));
+                }
+            }
+            if let Some(t) = &swap_to {
+                if !reg.contains(t) {
+                    return Err(MpError::Validation(format!(
+                        "--swap-to '{t}' is not registered (known: {:?})",
+                        reg.names()
+                    )));
+                }
+            }
+            Some(reg)
+        } else {
+            None
+        };
         let server = PipelineServer::start(ServerConfig {
             artifact_dir: std::env::var("MP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             max_batch,
@@ -253,26 +293,42 @@ fn cmd_serve(args: &[String]) -> i32 {
             mode,
             pipeline_depth,
             dispatch_mode,
+            graph_name: graph.clone(),
+            registry: registry.clone(),
             ..Default::default()
         })?;
+        let run_wave = |n: usize, seed: u64| {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let h = server.handle();
+                let per = n / clients.max(1);
+                handles.push(std::thread::spawn(move || {
+                    let mut world =
+                        mediapipe::perception::SyntheticWorld::new(32, 32, 2, seed + c as u64)
+                            .with_object_sizes(0.12, 0.2);
+                    for _ in 0..per {
+                        world.step();
+                        let frame = world.render();
+                        let _ = h.detect(&frame);
+                    }
+                }));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        };
         let t0 = std::time::Instant::now();
-        let mut handles = Vec::new();
-        for c in 0..clients {
-            let h = server.handle();
-            let per = requests / clients.max(1);
-            handles.push(std::thread::spawn(move || {
-                let mut world =
-                    mediapipe::perception::SyntheticWorld::new(32, 32, 2, 100 + c as u64)
-                        .with_object_sizes(0.12, 0.2);
-                for _ in 0..per {
-                    world.step();
-                    let frame = world.render();
-                    let _ = h.detect(&frame);
-                }
-            }));
-        }
-        for h in handles {
-            let _ = h.join();
+        if let Some(target) = &swap_to {
+            run_wave(requests / 2, 100);
+            let reg = registry.as_ref().expect("registry exists when --swap-to is set");
+            let version = server.swap_graph(reg.get(target)?.config())?;
+            println!(
+                "swapped '{}' to the '{target}' config (now version {version})",
+                server.graph_name()
+            );
+            run_wave(requests - requests / 2, 200);
+        } else {
+            run_wave(requests, 100);
         }
         let dt = t0.elapsed();
         println!("{}", server.metrics().report());

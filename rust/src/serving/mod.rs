@@ -93,6 +93,50 @@
 //! stage-imbalanced pipeline to show throughput approaching the
 //! slowest-stage bound.
 //!
+//! ## Graph registry & hot-swap
+//!
+//! The pipeline a server runs is no longer frozen at startup. Configs
+//! live in a [`GraphRegistry`] as named, **versioned**, pre-validated
+//! entries ([`GraphVersion`]): registering or swapping a config runs
+//! subgraph expansion + planning once, so an invalid config is rejected
+//! at [`GraphRegistry::swap`] time and can never reach a checkout or a
+//! request. [`ServerConfig::graph_name`] / [`ServerConfig::registry`]
+//! bind the server to an entry (default: a private registry holding the
+//! built-in detector pipeline under `"detector"`), and the
+//! [`GraphPool`] resolves that entry's *current* version per checkout.
+//!
+//! **Version lifecycle.** [`PipelineServer::swap_graph`] publishes the
+//! next version and the cutover proceeds blue-green with zero downtime
+//! and zero failed requests:
+//!
+//! 1. `swap` validates the new config and publishes it atomically
+//!    (`configs_swapped`); the pool's refill worker is kicked so the
+//!    warm set — and the pre-warmed standby session — turn over to the
+//!    new version without waiting for traffic.
+//! 2. New checkouts and prewarms build on the new version immediately;
+//!    warm instances of the old version are purged, never handed out
+//!    ([`GraphPool::stale_discarded`]), so no request observes a torn
+//!    or stale config.
+//! 3. Anything in flight **drains on the old version**: a pooled batch
+//!    finishes its run; a streaming session pins the version it was
+//!    opened on ([`StreamingSession::version`]) and, on the next batch
+//!    boundary, the batcher drains its K-deep window on the old
+//!    version and retires the session through the normal recycle
+//!    machinery (`sessions_drained_on_old`) — every pending result is
+//!    delivered before the replacement session (a prewarm hit on the
+//!    new config, in the steady state) takes over.
+//!
+//! **Metrics evidence.** `configs_swapped` counts publications,
+//! `sessions_drained_on_old` counts streaming sessions retired because
+//! a swap superseded their version, and `sessions_prewarmed` /
+//! `prewarm_hits` show the replacement sessions landing on the new
+//! config; `tests/serving_swap.rs` asserts a swap under sustained
+//! streaming load completes with all three moving and `errors == 0`.
+//!
+//! The registry also carries a **scenario catalog**
+//! ([`install_catalog`]; pose-landmark, holistic pose/hands/face,
+//! detection→tracking→landmark cascade) — see [`registry`] docs.
+//!
 //! ## Scheduler scaling
 //!
 //! Every graph a server runs — the whole [`GraphPool`], all streaming
@@ -112,6 +156,7 @@
 
 pub mod pipeline;
 pub mod pool;
+pub mod registry;
 pub mod session;
 
 use std::collections::VecDeque;
@@ -130,6 +175,10 @@ use crate::timestamp::Timestamp;
 
 pub use pipeline::{BatchFrames, BatchInfo};
 pub use pool::{GraphPool, PooledGraph};
+pub use registry::{
+    detection_cascade_config, holistic_config, install_catalog, pose_landmark_config,
+    GraphRegistry, GraphVersion, DETECTION_CASCADE, HOLISTIC, POSE_LANDMARK,
+};
 pub use session::{SessionStats, SessionTicket, StreamingSession};
 
 /// How batches meet graphs (module docs: isolation/throughput trade).
@@ -193,17 +242,26 @@ pub struct ServerConfig {
     /// its session); a pooled run's output poll gives up after it.
     /// Must be > 0 (validated by [`PipelineServer::start`]).
     pub batch_timeout: Duration,
-    /// Replace the built-in detector pipeline with this graph (tests and
-    /// benches: gated or deliberately stage-imbalanced pipelines). The
-    /// graph must read one batch ([`BatchFrames`]) per timestamp from a
-    /// graph input stream `"frames"` and emit one `Vec<Detections>` row
-    /// set per timestamp on an output stream `"detections"`; the
-    /// `engine` / `variants` side packets are provided only if the
-    /// config declares them. If the override bounds its input queue
-    /// (`input_queue_size`), keep the bound ≥ `pipeline_depth` — a
-    /// smaller bound lets a wedged graph block the batcher inside a
-    /// timeout-free push, defeating `batch_timeout`.
-    pub graph_override: Option<GraphConfig>,
+    /// Serve the named [`GraphRegistry`] entry instead of the built-in
+    /// detector pipeline (the **single** config-resolution seam — tests
+    /// and benches register gated or stage-imbalanced pipelines under a
+    /// name and point this at it). `None` serves `"detector"`, the
+    /// built-in pipeline, registered on demand. Whatever the name
+    /// resolves to must read one batch ([`BatchFrames`]) per timestamp
+    /// from a graph input stream `"frames"` and emit one
+    /// `Vec<Detections>` row set per timestamp on an output stream
+    /// `"detections"`; the `engine` / `variants` side packets are
+    /// provided only if the config declares them. If the config bounds
+    /// its input queue (`input_queue_size`), keep the bound ≥
+    /// `pipeline_depth` — a smaller bound lets a wedged graph block the
+    /// batcher inside a timeout-free push, defeating `batch_timeout`.
+    pub graph_name: Option<String>,
+    /// The registry `graph_name` resolves in — and the one
+    /// [`PipelineServer::swap_graph`] publishes new versions to. `None`
+    /// uses [`GraphRegistry::global`] when `graph_name` is set (the
+    /// scenario catalog and anything the process registered there), or
+    /// a private registry when serving the default detector.
+    pub registry: Option<Arc<GraphRegistry>>,
 }
 
 impl Default for ServerConfig {
@@ -224,7 +282,8 @@ impl Default for ServerConfig {
             session_input_queue: 4,
             pipeline_depth: 1,
             batch_timeout: Duration::from_secs(60),
-            graph_override: None,
+            graph_name: None,
+            registry: None,
         }
     }
 }
@@ -353,6 +412,12 @@ pub struct ServerMetrics {
     /// Session activations served from the pre-warmed standby slot
     /// (O(1) swap) instead of paying checkout + Open on the batcher.
     pub prewarm_hits: Counter,
+    /// New config versions published through [`PipelineServer::swap_graph`].
+    pub configs_swapped: Counter,
+    /// Streaming sessions retired because a swap superseded their
+    /// version: the blue-green drain path (window delivered in full on
+    /// the old version, replacement opened on the new one).
+    pub sessions_drained_on_old: Counter,
     pub e2e_latency: LatencyRecorder,
     pub queue_latency: LatencyRecorder,
     /// Time a batch spends inside its graph run (pipeline latency; in
@@ -367,7 +432,7 @@ impl ServerMetrics {
         let inf = self.infer_latency.summary();
         let batches = self.batches.get().max(1);
         format!(
-            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={} prewarmed={} prewarm_hits={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
+            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={} prewarmed={} prewarm_hits={} swapped={} drained_on_old={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
             self.requests.get(),
             self.batches.get(),
             self.batched_requests.get() as f64 / batches as f64,
@@ -379,6 +444,8 @@ impl ServerMetrics {
             self.session_errors.get(),
             self.sessions_prewarmed.get(),
             self.prewarm_hits.get(),
+            self.configs_swapped.get(),
+            self.sessions_drained_on_old.get(),
             e2e,
             q,
             inf
@@ -400,6 +467,13 @@ pub struct PipelineServer {
     /// callers can introspect it; workers stop when the last graph and
     /// this handle are gone.
     executor: Arc<ThreadPoolExecutor>,
+    /// Handle on the batcher's pool (shared state) for swap kicks and
+    /// stats.
+    pool: GraphPool,
+    /// Where [`PipelineServer::swap_graph`] publishes new versions.
+    registry: Arc<GraphRegistry>,
+    /// The registry entry this server serves.
+    graph_name: String,
 }
 
 /// Cloneable submission handle.
@@ -507,28 +581,45 @@ impl PipelineServer {
                 cfg.dispatch_mode,
             )),
         };
-        let graph_config = match (&cfg.graph_override, cfg.mode) {
-            (Some(c), _) => c.clone(),
-            (None, ServingMode::Pooled) => {
-                pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?
-            }
-            // Streaming sessions bound admission at the graph boundary
-            // so a slow model back-pressures the batcher. The bound is
-            // clamped to at least pipeline_depth: the K-deep window must
-            // always be admittable, otherwise a wedged graph would block
-            // the batcher inside push (a timeout-free condvar wait) and
-            // batch_timeout could never fire.
-            (None, ServingMode::Streaming) => pipeline::streaming_pipeline_config(
-                cfg.input_size,
-                cfg.min_score,
-                cfg.iou_threshold,
-                cfg.session_input_queue.max(cfg.pipeline_depth),
-            )?,
+        // The single config-resolution seam: every pipeline the server
+        // runs is a named registry entry. An explicit `graph_name`
+        // resolves in the caller's registry (or the process-global one);
+        // the default detector pipeline is registered on demand under
+        // "detector" so it flows through the exact same path — and is
+        // just as hot-swappable.
+        let registry = match (&cfg.registry, &cfg.graph_name) {
+            (Some(r), _) => Arc::clone(r),
+            (None, Some(_)) => GraphRegistry::global(),
+            (None, None) => Arc::new(GraphRegistry::new()),
         };
-        let pool = GraphPool::with_executor(
-            &graph_config,
+        let graph_name = cfg.graph_name.clone().unwrap_or_else(|| "detector".into());
+        if cfg.graph_name.is_none() && !registry.contains(&graph_name) {
+            let default_config = match cfg.mode {
+                ServingMode::Pooled => {
+                    pipeline::pipeline_config(cfg.input_size, cfg.min_score, cfg.iou_threshold)?
+                }
+                // Streaming sessions bound admission at the graph
+                // boundary so a slow model back-pressures the batcher.
+                // The bound is clamped to at least pipeline_depth: the
+                // K-deep window must always be admittable, otherwise a
+                // wedged graph would block the batcher inside push (a
+                // timeout-free condvar wait) and batch_timeout could
+                // never fire.
+                ServingMode::Streaming => pipeline::streaming_pipeline_config(
+                    cfg.input_size,
+                    cfg.min_score,
+                    cfg.iou_threshold,
+                    cfg.session_input_queue.max(cfg.pipeline_depth),
+                )?,
+            };
+            registry.register(&graph_name, &default_config)?;
+        }
+        // Surfaces an unknown `graph_name` here, at startup.
+        let pool = GraphPool::from_registry(
+            Arc::clone(&registry),
+            &graph_name,
             cfg.pool_capacity.max(1),
-            Arc::clone(&executor) as Arc<dyn Executor>,
+            Some(Arc::clone(&executor) as Arc<dyn Executor>),
         )?;
         // Keep graph rebuilds off the batcher thread.
         pool.set_async_refill(true);
@@ -543,18 +634,37 @@ impl PipelineServer {
         let standby: StandbySlot = Arc::new(Mutex::new(None));
         if cfg.mode == ServingMode::Streaming {
             let slot = Arc::downgrade(&standby);
-            let hook_config = graph_config.clone();
             let hook_engine = engine.clone();
             let hook_variants = variants.clone();
             let hook_metrics = Arc::clone(&metrics);
             let max_timestamps = cfg.session_max_timestamps;
             pool.set_refill_followup(move |pool| {
                 let Some(slot) = slot.upgrade() else { return };
+                // A standby opened before a swap is stale: evict it so
+                // the replacement below lands on the new version (drop
+                // outside the lock — retiring a session drains a graph).
+                let stale = {
+                    let mut slot = slot.lock().unwrap();
+                    let superseded = match (slot.as_ref(), pool.current_version()) {
+                        (Some(s), Ok(cur)) => !Arc::ptr_eq(&s.version(), &cur),
+                        _ => false,
+                    };
+                    if superseded {
+                        slot.take()
+                    } else {
+                        None
+                    }
+                };
+                drop(stale);
                 if slot.lock().unwrap().is_some() {
                     return;
                 }
                 let Ok(graph) = pool.checkout() else { return };
-                let side = serving_side_packets(&hook_config, &hook_engine, &hook_variants);
+                // Side packets come from the checked-out instance's own
+                // version, so a swap can never pair a new graph with old
+                // side packets (or vice versa).
+                let side =
+                    serving_side_packets(graph.version().config(), &hook_engine, &hook_variants);
                 // Open failures are not retried here; the next inline
                 // activation surfaces them to the failing batch.
                 if let Ok(session) =
@@ -573,11 +683,10 @@ impl PipelineServer {
         let ev2 = Arc::clone(&events);
         let standby2 = Arc::clone(&standby);
         let cfg2 = cfg.clone();
+        let pool2 = pool.clone();
         let worker = std::thread::Builder::new()
             .name("mp-serving-batcher".into())
-            .spawn(move || {
-                batcher_main(cfg2, engine, variants, pool, graph_config, ev2, standby2, m2)
-            })
+            .spawn(move || batcher_main(cfg2, engine, variants, pool2, ev2, standby2, m2))
             .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
         Ok(PipelineServer {
             events,
@@ -585,7 +694,42 @@ impl PipelineServer {
             cfg,
             worker: Some(worker),
             executor,
+            pool,
+            registry,
+            graph_name,
         })
+    }
+
+    /// Publish `config` as the next version of the graph this server
+    /// serves and kick the blue-green cutover (module docs, "Graph
+    /// registry & hot-swap"): validation happens here, new checkouts /
+    /// prewarms land on the new version, in-flight work drains on the
+    /// old one. The config must keep the serving graph interface
+    /// (`"frames"` in, `"detections"` out). Returns the published
+    /// version number; on validation failure nothing changes and
+    /// traffic continues on the current version.
+    pub fn swap_graph(&self, config: &GraphConfig) -> MpResult<u64> {
+        let version = self.registry.swap(&self.graph_name, config)?;
+        self.metrics.configs_swapped.inc();
+        // Turn the warm set + standby session over without waiting for
+        // traffic to discover the new version.
+        self.pool.kick_refill();
+        Ok(version.version())
+    }
+
+    /// The registry this server resolves its graph in.
+    pub fn registry(&self) -> &Arc<GraphRegistry> {
+        &self.registry
+    }
+
+    /// The registry entry this server serves.
+    pub fn graph_name(&self) -> &str {
+        &self.graph_name
+    }
+
+    /// The server's graph pool (stats: `stale_discarded`, ...).
+    pub fn pool(&self) -> &GraphPool {
+        &self.pool
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -629,7 +773,6 @@ fn reply_error(jobs: &[Job], e: &MpError, metrics: &ServerMetrics) {
 /// list per request row.
 fn run_batch(
     pool: &GraphPool,
-    graph_config: &GraphConfig,
     engine: &InferenceEngine,
     variants: &[usize],
     frames: BatchFrames,
@@ -639,7 +782,9 @@ fn run_batch(
     let rows = frames.len();
     let mut g = pool.checkout()?;
     let poller = g.poller("detections")?;
-    let side = serving_side_packets(graph_config, engine, variants);
+    // Side packets from the instance's own (possibly just-swapped)
+    // version: config and graph can never be torn apart.
+    let side = serving_side_packets(g.version().config(), engine, variants);
     g.start_run(side)?;
     g.add_packet("frames", Packet::new(frames, Timestamp::new(0)))?;
     g.close_all_inputs()?;
@@ -676,6 +821,9 @@ enum RetireReason {
     Threshold,
     /// The session errored (graph failure / lost batch): emergency swap.
     Error,
+    /// A config swap superseded the session's version: blue-green drain
+    /// (window delivered in full on the old version first).
+    Swapped,
     /// The server is shutting down.
     Shutdown,
 }
@@ -696,6 +844,7 @@ fn retire_session(session: StreamingSession, metrics: &ServerMetrics, reason: Re
     match reason {
         RetireReason::Threshold => metrics.session_recycles.inc(),
         RetireReason::Error => metrics.session_errors.inc(),
+        RetireReason::Swapped => metrics.sessions_drained_on_old.inc(),
         RetireReason::Shutdown => {}
     }
 }
@@ -720,7 +869,6 @@ struct Streaming<'a> {
     engine: &'a InferenceEngine,
     variants: &'a [usize],
     pool: &'a GraphPool,
-    graph_config: &'a GraphConfig,
     metrics: &'a ServerMetrics,
     events: &'a Arc<EventQueue>,
     session: Option<StreamingSession>,
@@ -840,10 +988,21 @@ impl Streaming<'_> {
         }
     }
 
-    /// Make sure a live session exists: swap in the pre-warmed standby
-    /// when available (O(1), `prewarm_hits`), otherwise pay checkout +
-    /// Open inline. A session that died underneath us is retired first.
+    /// Make sure a live session exists *on the current config version*:
+    /// swap in the pre-warmed standby when available (O(1),
+    /// `prewarm_hits`), otherwise pay checkout + Open inline. A session
+    /// that died underneath us is retired first; a session superseded
+    /// by a config swap drains blue-green — its whole pending window is
+    /// delivered on the old version before the replacement (on the new
+    /// version) takes over.
     fn ensure_session(&mut self) -> MpResult<()> {
+        let superseded = match (&self.session, self.pool.current_version()) {
+            (Some(s), Ok(cur)) => !Arc::ptr_eq(&s.version(), &cur),
+            _ => false,
+        };
+        if superseded {
+            self.drain_and_retire(RetireReason::Swapped);
+        }
         if self.session.as_ref().is_some_and(|s| s.needs_recycle()) {
             let threshold = self
                 .session
@@ -860,6 +1019,18 @@ impl Streaming<'_> {
         }
         if self.session.is_none() {
             let standby = self.standby.lock().unwrap().take();
+            // A standby pre-opened before a swap is on the old version:
+            // activating it would undo the cutover. Retire it and pay
+            // the inline path once; the kicked refill worker rebuilds
+            // the standby on the new version.
+            let standby = match (standby, self.pool.current_version()) {
+                (Some(s), Ok(cur)) if !Arc::ptr_eq(&s.version(), &cur) => {
+                    drop(s);
+                    self.pool.kick_refill();
+                    None
+                }
+                (s, _) => s,
+            };
             let session = match standby {
                 Some(s) => {
                     self.metrics.prewarm_hits.inc();
@@ -869,8 +1040,11 @@ impl Streaming<'_> {
                 }
                 None => {
                     let graph = self.pool.checkout()?;
-                    let side =
-                        serving_side_packets(self.graph_config, self.engine, self.variants);
+                    let side = serving_side_packets(
+                        graph.version().config(),
+                        self.engine,
+                        self.variants,
+                    );
                     StreamingSession::start(
                         graph,
                         "frames",
@@ -951,7 +1125,6 @@ fn batcher_main(
     engine: InferenceEngine,
     variants: Vec<usize>,
     pool: GraphPool,
-    graph_config: GraphConfig,
     events: Arc<EventQueue>,
     standby: StandbySlot,
     metrics: Arc<ServerMetrics>,
@@ -961,7 +1134,6 @@ fn batcher_main(
         engine: &engine,
         variants: &variants,
         pool: &pool,
-        graph_config: &graph_config,
         metrics: &metrics,
         events: &events,
         session: None,
@@ -1025,7 +1197,6 @@ fn batcher_main(
                 let t0 = Instant::now();
                 let result = run_batch(
                     &pool,
-                    &graph_config,
                     &engine,
                     &variants,
                     frames,

@@ -217,7 +217,7 @@ impl Calculator for ServingPostprocess {
 /// leading element fails the calculator — the deterministic poison hook
 /// for error-path tests. Used by `benches/serving_pipelined.rs` and the
 /// pipelining integration tests via
-/// [`crate::serving::ServerConfig::graph_override`]; never part of the
+/// [`crate::serving::ServerConfig::graph_name`]; never part of the
 /// real detector pipeline.
 pub struct ServingEcho;
 

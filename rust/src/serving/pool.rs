@@ -23,6 +23,31 @@
 //! signal, so check-ins cost a channel send — never a thread — per
 //! request.
 //!
+//! # Versioned configs and blue-green swap
+//!
+//! The pool no longer freezes one config at construction. Its config
+//! comes through a [`ConfigSource`]: either a fixed, pre-validated
+//! [`GraphVersion`] (the legacy [`GraphPool::new`] path) or a *named
+//! entry in a [`GraphRegistry`]* ([`GraphPool::from_registry`]). In
+//! registry mode every checkout and every refill pass resolves the
+//! registry's **current** version, so a [`GraphRegistry::swap`] takes
+//! effect blue-green:
+//!
+//! * new checkouts and the refill/prewarm worker build against the new
+//!   version immediately (a [`GraphPool::kick_refill`] after the swap
+//!   turns the warm set over without waiting for traffic);
+//! * instances already checked out keep the `Arc` of the version they
+//!   were built from ([`PooledGraph::version`]) and drain on it — the
+//!   old plan stays alive exactly as long as someone still runs it;
+//! * warm instances of a superseded version are discarded, never handed
+//!   out: checkout and the refill passes purge them (counted by
+//!   [`GraphPool::stale_discarded`]), and an unused check-in of a stale
+//!   instance is dropped rather than returned to the queue.
+//!
+//! A checkout therefore never observes a torn config — it gets one
+//! coherent `(version, graph)` pair, where the graph was built from
+//! that version's pre-validated plan.
+//!
 //! The pool multiplies the executor's *source* population: every warm
 //! instance registers its scheduler queues with the shared pool when a
 //! run starts, so `capacity × queues-per-graph` sources can be live at
@@ -40,6 +65,7 @@ use crate::error::MpResult;
 use crate::executor::Executor;
 use crate::graph::config::GraphConfig;
 use crate::graph::Graph;
+use crate::serving::registry::{GraphRegistry, GraphVersion};
 
 /// Total long-lived refill workers ever spawned by [`GraphPool`]s in
 /// this process. Tests use this to prove that checking in used graphs
@@ -54,13 +80,38 @@ pub fn refill_workers_spawned() -> usize {
 /// Post-refill hook run on the refill worker ([`GraphPool::set_refill_followup`]).
 type RefillFollowup = Arc<dyn Fn(&GraphPool) + Send + Sync>;
 
+/// Where the pool's config comes from: a frozen pre-validated version,
+/// or the current version of a named registry entry (resolved per
+/// checkout / refill pass — the blue-green seam).
+enum ConfigSource {
+    Fixed(Arc<GraphVersion>),
+    Registry {
+        registry: Arc<GraphRegistry>,
+        name: String,
+    },
+}
+
+impl ConfigSource {
+    fn resolve(&self) -> MpResult<Arc<GraphVersion>> {
+        match self {
+            ConfigSource::Fixed(v) => Ok(Arc::clone(v)),
+            ConfigSource::Registry { registry, name } => registry.get(name),
+        }
+    }
+}
+
 struct PoolShared {
-    config: GraphConfig,
+    source: ConfigSource,
     executor: Option<Arc<dyn Executor>>,
-    ready: Mutex<VecDeque<Graph>>,
+    /// Warm instances, each tagged with the version it was built from
+    /// so a swap can never hand out a graph under the wrong config.
+    ready: Mutex<VecDeque<(Arc<GraphVersion>, Graph)>>,
     capacity: usize,
     /// Total graph instances ever built (stats / tests).
     built: AtomicUsize,
+    /// Warm instances discarded because their version was superseded by
+    /// a swap (stats / tests: proves the blue-green turnover happened).
+    stale_discarded: AtomicUsize,
     /// Refill used slots on the long-lived refill worker instead of the
     /// dropping (request-path) thread.
     async_refill: AtomicBool,
@@ -78,38 +129,77 @@ struct PoolShared {
 }
 
 impl PoolShared {
-    /// Build one fresh instance and park it in `ready` (unless the pool
-    /// already refilled, e.g. a racing unused check-in).
+    /// Drop every warm instance whose version is not `current`
+    /// (superseded by a swap). Call with the `ready` lock held; returns
+    /// how many were purged. The graphs are never-started, so dropping
+    /// them is free of teardown work.
+    fn purge_stale_locked(
+        &self,
+        ready: &mut VecDeque<(Arc<GraphVersion>, Graph)>,
+        current: &Arc<GraphVersion>,
+    ) -> usize {
+        let before = ready.len();
+        ready.retain(|(v, _)| Arc::ptr_eq(v, current));
+        let purged = before - ready.len();
+        if purged > 0 {
+            self.stale_discarded.fetch_add(purged, Ordering::AcqRel);
+        }
+        purged
+    }
+
+    /// Build one fresh instance on the current version and park it in
+    /// `ready` (unless the pool already refilled, e.g. a racing unused
+    /// check-in).
     fn refill_one(&self) {
-        let needs = self.ready.lock().unwrap().len() < self.capacity;
-        if !needs {
+        let Ok(current) = self.source.resolve() else {
             return;
+        };
+        {
+            let mut ready = self.ready.lock().unwrap();
+            self.purge_stale_locked(&mut ready, &current);
+            if ready.len() >= self.capacity {
+                return;
+            }
         }
         // Build outside the lock; ignore failures (the next checkout
         // surfaces them).
-        if let Ok(fresh) = self.build_graph() {
+        if let Ok(fresh) = self.build_graph(&current) {
             let mut ready = self.ready.lock().unwrap();
             if ready.len() < self.capacity {
-                ready.push_back(fresh);
+                ready.push_back((current, fresh));
             }
             // A concurrent refill won the race: drop the extra.
         }
     }
 
-    /// Rebuild until the pool is back at capacity (refill-worker body).
+    /// Rebuild until the pool holds `capacity` instances of the current
+    /// version (refill-worker body). After a swap this is the pass that
+    /// turns the whole warm set over to the new config.
     fn refill_to_capacity(&self) {
         loop {
-            if self.ready.lock().unwrap().len() >= self.capacity {
+            let Ok(current) = self.source.resolve() else {
                 return;
+            };
+            {
+                let mut ready = self.ready.lock().unwrap();
+                self.purge_stale_locked(&mut ready, &current);
+                if ready.len() >= self.capacity {
+                    return;
+                }
             }
-            match self.build_graph() {
+            match self.build_graph(&current) {
                 Ok(fresh) => {
                     let mut ready = self.ready.lock().unwrap();
-                    if ready.len() < self.capacity {
-                        ready.push_back(fresh);
-                    } else {
-                        return;
+                    // The version may have moved again while we built;
+                    // only park the instance if it is still current
+                    // (the next loop iteration re-resolves).
+                    if let Ok(now) = self.source.resolve() {
+                        if Arc::ptr_eq(&now, &current) && ready.len() < self.capacity {
+                            ready.push_back((current, fresh));
+                            continue;
+                        }
                     }
+                    self.stale_discarded.fetch_add(1, Ordering::AcqRel);
                 }
                 // Build failures are not retried here; the next checkout
                 // surfaces them synchronously.
@@ -118,12 +208,11 @@ impl PoolShared {
         }
     }
 
-    fn build_graph(&self) -> MpResult<Graph> {
+    /// Instantiate one graph from `version`'s pre-validated plan — no
+    /// re-expansion, no re-planning.
+    fn build_graph(&self, version: &Arc<GraphVersion>) -> MpResult<Graph> {
         self.built.fetch_add(1, Ordering::AcqRel);
-        match &self.executor {
-            Some(e) => Graph::with_executor(&self.config, Arc::clone(e)),
-            None => Graph::new(&self.config),
-        }
+        version.build_graph(self.executor.clone())
     }
 
     /// Spawn the single long-lived refill worker (idempotent). The
@@ -166,15 +255,25 @@ impl PoolShared {
 }
 
 /// A checkout/check-in pool of warm, never-started graph instances.
+/// Cloning shares the same pool (handles are cheap `Arc` clones).
 pub struct GraphPool {
     shared: Arc<PoolShared>,
 }
 
+impl Clone for GraphPool {
+    fn clone(&self) -> GraphPool {
+        GraphPool {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
 impl GraphPool {
-    /// Pre-build `capacity` instances of `config`. Each instance owns
-    /// its executors as the config dictates.
+    /// Pre-build `capacity` instances of `config` (validated once, then
+    /// frozen). Each instance owns its executors as the config dictates.
     pub fn new(config: &GraphConfig, capacity: usize) -> MpResult<GraphPool> {
-        GraphPool::build(config, capacity, None)
+        let version = GraphVersion::standalone("pool", config)?;
+        GraphPool::build(ConfigSource::Fixed(version), capacity, None)
     }
 
     /// Pre-build `capacity` instances that all submit their work to
@@ -184,45 +283,90 @@ impl GraphPool {
         capacity: usize,
         executor: Arc<dyn Executor>,
     ) -> MpResult<GraphPool> {
-        GraphPool::build(config, capacity, Some(executor))
+        let version = GraphVersion::standalone("pool", config)?;
+        GraphPool::build(ConfigSource::Fixed(version), capacity, Some(executor))
+    }
+
+    /// A pool whose config is the **current version** of `name` in
+    /// `registry`, re-resolved per checkout and refill pass. Fails if
+    /// the name is not registered (the registry already validated the
+    /// config itself). This is the hot-swap path: after a
+    /// [`GraphRegistry::swap`], new checkouts build against the new
+    /// version while checked-out instances drain on the old one.
+    pub fn from_registry(
+        registry: Arc<GraphRegistry>,
+        name: &str,
+        capacity: usize,
+        executor: Option<Arc<dyn Executor>>,
+    ) -> MpResult<GraphPool> {
+        registry.get(name)?; // surface a missing name at construction
+        GraphPool::build(
+            ConfigSource::Registry {
+                registry,
+                name: name.to_string(),
+            },
+            capacity,
+            executor,
+        )
     }
 
     fn build(
-        config: &GraphConfig,
+        source: ConfigSource,
         capacity: usize,
         executor: Option<Arc<dyn Executor>>,
     ) -> MpResult<GraphPool> {
         let shared = Arc::new(PoolShared {
-            config: config.clone(),
+            source,
             executor,
             ready: Mutex::new(VecDeque::new()),
             capacity: capacity.max(1),
             built: AtomicUsize::new(0),
+            stale_discarded: AtomicUsize::new(0),
             async_refill: AtomicBool::new(false),
             refill_tx: Mutex::new(None),
             followup: Mutex::new(None),
         });
         {
+            let current = shared.source.resolve()?;
             let mut ready = shared.ready.lock().unwrap();
             for _ in 0..shared.capacity {
-                ready.push_back(shared.build_graph()?);
+                ready.push_back((Arc::clone(&current), shared.build_graph(&current)?));
             }
         }
         Ok(GraphPool { shared })
     }
 
-    /// Take a warm instance; builds one synchronously if the pool is
-    /// empty (burst beyond `capacity`). Never blocks on other requests.
+    /// Take a warm instance of the **current** version; builds one
+    /// synchronously if none is warm (burst load, or right after a
+    /// swap). Warm instances of a superseded version encountered on the
+    /// way are discarded, so a checkout can never observe a torn or
+    /// stale config. Never blocks on other requests.
     pub fn checkout(&self) -> MpResult<PooledGraph> {
-        let existing = self.shared.ready.lock().unwrap().pop_front();
+        let current = self.shared.source.resolve()?;
+        let (purged, existing) = {
+            let mut ready = self.shared.ready.lock().unwrap();
+            let purged = self.shared.purge_stale_locked(&mut ready, &current);
+            (purged, ready.pop_front())
+        };
+        if purged > 0 {
+            // Stale instances vacated slots: let the refill worker
+            // rebuild them on the new version off the request path.
+            self.kick_refill();
+        }
         let graph = match existing {
-            Some(g) => g,
-            None => self.shared.build_graph()?,
+            Some((_, g)) => g,
+            None => self.shared.build_graph(&current)?,
         };
         Ok(PooledGraph {
             graph: Some(graph),
+            version: current,
             shared: Arc::clone(&self.shared),
         })
+    }
+
+    /// The version a checkout would currently be built from.
+    pub fn current_version(&self) -> MpResult<Arc<GraphVersion>> {
+        self.shared.source.resolve()
     }
 
     /// Warm instances currently available.
@@ -239,6 +383,11 @@ impl GraphPool {
     /// prebuilds + per-use replacements + burst builds).
     pub fn graphs_built(&self) -> usize {
         self.shared.built.load(Ordering::Acquire)
+    }
+
+    /// Warm instances discarded because a swap superseded their version.
+    pub fn stale_discarded(&self) -> usize {
+        self.shared.stale_discarded.load(Ordering::Acquire)
     }
 
     /// Refill used slots on the pool's **single long-lived refill
@@ -270,8 +419,10 @@ impl GraphPool {
         self.kick_refill();
     }
 
-    /// Wake the refill worker for one pass (rebuild to capacity + run
-    /// the follow-up hook). No-op when no worker is running.
+    /// Wake the refill worker for one pass (purge stale + rebuild to
+    /// capacity + run the follow-up hook). No-op when no worker is
+    /// running. The serving layer calls this right after a registry
+    /// swap so the warm set turns over without waiting for traffic.
     pub fn kick_refill(&self) {
         let tx = self.shared.refill_tx.lock().unwrap();
         if let Some(tx) = tx.as_ref() {
@@ -284,7 +435,18 @@ impl GraphPool {
 /// instance back in (used instances are replaced with fresh builds).
 pub struct PooledGraph {
     graph: Option<Graph>,
+    /// The version this instance was built from, pinned for the
+    /// handle's lifetime: a swap mid-flight cannot change the config
+    /// under a running graph.
+    version: Arc<GraphVersion>,
     shared: Arc<PoolShared>,
+}
+
+impl PooledGraph {
+    /// The config version this instance was built from.
+    pub fn version(&self) -> &Arc<GraphVersion> {
+        &self.version
+    }
 }
 
 impl Deref for PooledGraph {
@@ -308,17 +470,30 @@ impl Drop for PooledGraph {
         };
         let used = graph.was_started();
         if !used {
-            let mut ready = self.shared.ready.lock().unwrap();
-            if ready.len() < self.shared.capacity {
-                ready.push_back(graph);
+            // Return to the warm queue only while the version is still
+            // current — an unused instance of a superseded version is
+            // retired here, not recycled.
+            let still_current = match self.shared.source.resolve() {
+                Ok(cur) => Arc::ptr_eq(&cur, &self.version),
+                Err(_) => false,
+            };
+            if still_current {
+                let mut ready = self.shared.ready.lock().unwrap();
+                if ready.len() < self.shared.capacity {
+                    ready.push_back((Arc::clone(&self.version), graph));
+                }
+                return;
             }
-            return;
+            self.shared.stale_discarded.fetch_add(1, Ordering::AcqRel);
+            // Fall through to the used path: drop it and refill the
+            // slot on the current version.
         }
-        // Used instance: finish/teardown (Graph::drop cancels a run
-        // still in flight), then refill the slot with a fresh build —
-        // via the long-lived refill worker when the pool serves a
-        // request path. The signal coalesces: at serving rates this is
-        // one channel send per check-in, never a thread per request.
+        // Used (or stale-unused) instance: finish/teardown (Graph::drop
+        // cancels a run still in flight), then refill the slot with a
+        // fresh build — via the long-lived refill worker when the pool
+        // serves a request path. The signal coalesces: at serving rates
+        // this is one channel send per check-in, never a thread per
+        // request.
         drop(graph);
         if self.shared.async_refill.load(Ordering::Acquire) {
             let tx = self.shared.refill_tx.lock().unwrap();
@@ -350,6 +525,19 @@ input_stream: "in"
 output_stream: "out"
 node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "mid" }
 node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "out" }
+"#,
+        )
+        .unwrap()
+    }
+
+    fn chain3_config() -> GraphConfig {
+        GraphConfig::parse(
+            r#"
+input_stream: "in"
+output_stream: "out"
+node { calculator: "PassThroughCalculator" input_stream: "in" output_stream: "m1" }
+node { calculator: "PassThroughCalculator" input_stream: "m1" output_stream: "m2" }
+node { calculator: "PassThroughCalculator" input_stream: "m2" output_stream: "out" }
 "#,
         )
         .unwrap()
@@ -424,6 +612,56 @@ node { calculator: "PassThroughCalculator" input_stream: "mid" output_stream: "o
         drop(a);
         drop(b); // pool already full: extra unused instance is dropped
         assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn registry_pool_swaps_blue_green() {
+        let registry = Arc::new(GraphRegistry::new());
+        registry.register("chain", &chain_config()).unwrap();
+        let pool =
+            GraphPool::from_registry(Arc::clone(&registry), "chain", 2, None).unwrap();
+        // An instance checked out before the swap pins the old version.
+        let old = pool.checkout().unwrap();
+        assert_eq!(old.version().version(), 1);
+        assert_eq!(old.plan().nodes.len(), 2);
+
+        registry.swap("chain", &chain3_config()).unwrap();
+
+        // New checkouts resolve the new version; the warm v1 instance
+        // is purged, never handed out.
+        let new = pool.checkout().unwrap();
+        assert_eq!(new.version().version(), 2);
+        assert_eq!(new.plan().nodes.len(), 3);
+        assert!(pool.stale_discarded() >= 1, "warm v1 instance purged");
+        assert!(
+            !Arc::ptr_eq(old.version(), new.version()),
+            "in-flight handle still pins v1"
+        );
+        // The old instance drains normally on its pinned version.
+        drop(new);
+        let out = run_once(old, &[4, 5], OUTPUT_TIMEOUT);
+        assert_eq!(out, vec![4, 5]);
+    }
+
+    #[test]
+    fn stale_unused_checkin_is_retired_not_recycled() {
+        let registry = Arc::new(GraphRegistry::new());
+        registry.register("chain", &chain_config()).unwrap();
+        let pool =
+            GraphPool::from_registry(Arc::clone(&registry), "chain", 1, None).unwrap();
+        let g = pool.checkout().unwrap(); // v1, never started
+        registry.swap("chain", &chain3_config()).unwrap();
+        let discarded_before = pool.stale_discarded();
+        drop(g); // unused but stale: retired + slot refilled on v2
+        assert!(pool.stale_discarded() > discarded_before);
+        let fresh = pool.checkout().unwrap();
+        assert_eq!(fresh.version().version(), 2, "refill landed on the new version");
+    }
+
+    #[test]
+    fn from_registry_requires_the_name() {
+        let registry = Arc::new(GraphRegistry::new());
+        assert!(GraphPool::from_registry(registry, "ghost", 1, None).is_err());
     }
 
     #[test]

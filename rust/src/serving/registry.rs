@@ -1,0 +1,468 @@
+//! The live **graph registry**: named, versioned, pre-validated graph
+//! configs that serving resolves at checkout time — the paper's §2
+//! promise ("iterate on the pipeline by editing the config, not the
+//! code") made operational.
+//!
+//! A [`GraphRegistry`] maps names to the *current* [`GraphVersion`] of
+//! a config. Registering or swapping a config validates it **once**
+//! (subgraph expansion + planning); the resulting [`Plan`] travels with
+//! the version, so a bad config is rejected at [`GraphRegistry::swap`]
+//! time — never at checkout, never on the request path — and every
+//! later [`GraphVersion::build_graph`] skips straight to calculator
+//! instantiation.
+//!
+//! [`GraphRegistry::swap`] publishes a new version atomically: a
+//! [`crate::serving::GraphPool`] bound to the registry resolves the
+//! current version per checkout, so new checkouts (and the refill
+//! worker's prewarm pass) build against the new config while anything
+//! already checked out keeps running — and draining — on the `Arc` of
+//! the old version it pinned. That is the blue-green half the pool and
+//! server build on (see "Graph registry & hot-swap" in
+//! [`crate::serving`]'s module docs).
+//!
+//! The **scenario catalog** ([`install_catalog`]) ships three real
+//! multi-model pipelines on top of the registry: a pose-landmark graph
+//! (33-point skeleton + joint angles), a holistic pose/hands/face graph
+//! running three landmarkers as parallel subgraphs with synchronized
+//! output, and a detection→tracking→landmark cascade. The factory +
+//! metadata shape follows `rust/src/registry.rs` (the calculator
+//! registry): one `RwLock<HashMap>` keyed by name, values carrying
+//! everything needed to instantiate.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::error::{MpError, MpResult};
+use crate::executor::Executor;
+use crate::graph::{expand_subgraphs, plan, Graph, GraphConfig, Plan, SubgraphRegistry};
+use crate::registry::CalculatorRegistry;
+
+/// One validated, immutable version of a named graph config. Holders
+/// (pooled graphs, streaming sessions) pin the version they were built
+/// from via `Arc`; version identity is `Arc` pointer identity, so a
+/// re-registration of a byte-identical config is still a *new* version.
+pub struct GraphVersion {
+    name: String,
+    version: u64,
+    /// The **expanded** config (subgraphs inlined) the plan was derived
+    /// from; also the source of truth for declared side packets.
+    config: GraphConfig,
+    plan: Plan,
+}
+
+impl GraphVersion {
+    /// Validate `config` (expansion + planning against the global
+    /// registries) into a version. All registration paths funnel here:
+    /// a config that passes is buildable, one that does not never
+    /// enters a registry.
+    fn validate(name: &str, version: u64, config: &GraphConfig) -> MpResult<GraphVersion> {
+        crate::serving::pipeline::ensure_registered();
+        let expanded = expand_subgraphs(
+            config,
+            SubgraphRegistry::global(),
+            CalculatorRegistry::global(),
+        )?;
+        let plan = plan(&expanded, CalculatorRegistry::global())?;
+        Ok(GraphVersion {
+            name: name.to_string(),
+            version,
+            config: expanded,
+            plan,
+        })
+    }
+
+    /// Validate a config outside any registry (version 1). This is how
+    /// a fixed-config [`crate::serving::GraphPool`] wraps its config, so
+    /// the registry and legacy pool paths share one validation seam.
+    pub fn standalone(name: &str, config: &GraphConfig) -> MpResult<Arc<GraphVersion>> {
+        Ok(Arc::new(GraphVersion::validate(name, 1, config)?))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Monotone per-name version number (1 on first registration).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The expanded config this version validated as.
+    pub fn config(&self) -> &GraphConfig {
+        &self.config
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Instantiate a fresh graph of this version — no re-validation,
+    /// just calculator construction ([`Graph::from_validated`]).
+    pub fn build_graph(&self, executor: Option<Arc<dyn Executor>>) -> MpResult<Graph> {
+        Graph::from_validated(self.plan.clone(), &self.config, executor)
+    }
+}
+
+impl std::fmt::Debug for GraphVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphVersion")
+            .field("name", &self.name)
+            .field("version", &self.version)
+            .field("nodes", &self.plan.nodes.len())
+            .finish()
+    }
+}
+
+/// Name → current [`GraphVersion`]. `register` admits new names,
+/// `swap` publishes the next version of an existing (or new) name;
+/// both validate before anything becomes visible.
+#[derive(Default)]
+pub struct GraphRegistry {
+    map: RwLock<HashMap<String, Arc<GraphVersion>>>,
+    /// Successful `swap` publications (evidence counter).
+    swaps: AtomicU64,
+}
+
+impl GraphRegistry {
+    pub fn new() -> GraphRegistry {
+        GraphRegistry::default()
+    }
+
+    /// The process-global registry, pre-loaded with the scenario
+    /// catalog (mirrors [`CalculatorRegistry::global`], which pre-loads
+    /// the built-in calculators). Returned as an `Arc` so pools and
+    /// servers can hold it like any caller-provided registry.
+    pub fn global() -> Arc<GraphRegistry> {
+        static GLOBAL: OnceLock<Arc<GraphRegistry>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| {
+            let r = GraphRegistry::new();
+            // The built-in catalog must validate; a failure here is a
+            // programming error, not an input error.
+            install_catalog(&r).expect("built-in scenario catalog must validate");
+            Arc::new(r)
+        }))
+    }
+
+    /// Register a **new** name (version 1). Fails if the name is taken
+    /// (use [`GraphRegistry::swap`] to publish a successor version) or
+    /// if the config does not validate.
+    pub fn register(&self, name: &str, config: &GraphConfig) -> MpResult<Arc<GraphVersion>> {
+        let version = Arc::new(GraphVersion::validate(name, 1, config)?);
+        let mut map = self.map.write().unwrap();
+        if map.contains_key(name) {
+            return Err(MpError::Validation(format!(
+                "graph '{name}' is already registered; use swap to publish a new version"
+            )));
+        }
+        map.insert(name.to_string(), Arc::clone(&version));
+        Ok(version)
+    }
+
+    /// Validate `config` and publish it as the next version of `name`
+    /// (version N+1 for an existing name, 1 for a new one). On
+    /// validation failure the current version stays published untouched
+    /// — a bad config can never take a name down.
+    pub fn swap(&self, name: &str, config: &GraphConfig) -> MpResult<Arc<GraphVersion>> {
+        // Validate before taking the write lock: planning is the
+        // expensive part and needs no registry state.
+        let mut candidate = GraphVersion::validate(name, 1, config)?;
+        let mut map = self.map.write().unwrap();
+        if let Some(cur) = map.get(name) {
+            candidate.version = cur.version + 1;
+        }
+        let version = Arc::new(candidate);
+        map.insert(name.to_string(), Arc::clone(&version));
+        self.swaps.fetch_add(1, Ordering::AcqRel);
+        Ok(version)
+    }
+
+    /// The current version of `name`.
+    pub fn get(&self, name: &str) -> MpResult<Arc<GraphVersion>> {
+        self.map
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| MpError::Validation(format!("no graph named '{name}' is registered")))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.read().unwrap().contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.map.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Successful `swap` publications so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Acquire)
+    }
+}
+
+impl std::fmt::Debug for GraphRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphRegistry")
+            .field("names", &self.names())
+            .field("swaps", &self.swaps())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The scenario catalog
+// ---------------------------------------------------------------------
+
+/// Catalog name: pose detector → temporal smoother → joint angles
+/// (Snippet 1: 33-point skeleton + joint-angle decoding).
+pub const POSE_LANDMARK: &str = "pose_landmark";
+/// Catalog name: pose + hands + face landmarkers as parallel subgraphs,
+/// merged into one synchronized holistic result (Snippet 2).
+pub const HOLISTIC: &str = "holistic_multi_model";
+/// Catalog name: sparse detection → per-frame box tracking (loopback) →
+/// per-detection landmarks (§6.1's cascade shape).
+pub const DETECTION_CASCADE: &str = "detection_cascade";
+
+/// Register the landmarker subgraphs the holistic scenario instantiates
+/// (idempotent; `register_as` overwrites byte-identical definitions).
+fn ensure_scenario_subgraphs() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let subs = SubgraphRegistry::global();
+        subs.register_as(
+            "PoseLandmarkerSubgraph",
+            GraphConfig::parse(
+                r#"
+input_stream: "IN:sub_frame"
+output_stream: "OUT:sub_pose"
+node { calculator: "PoseDetectorCalculator" input_stream: "FRAME:sub_frame" output_stream: "POSE:raw_pose" }
+node { calculator: "LandmarkSmootherCalculator" input_stream: "raw_pose" output_stream: "sub_pose" options { alpha: 0.6 } }
+"#,
+            )
+            .expect("pose subgraph parses"),
+        );
+        subs.register_as(
+            "HandLandmarkerSubgraph",
+            GraphConfig::parse(
+                r#"
+input_stream: "IN:sub_frame"
+output_stream: "OUT:sub_hands"
+node { calculator: "HandLandmarkerCalculator" input_stream: "FRAME:sub_frame" output_stream: "HANDS:sub_hands" }
+"#,
+            )
+            .expect("hand subgraph parses"),
+        );
+        subs.register_as(
+            "FaceLandmarkerSubgraph",
+            GraphConfig::parse(
+                r#"
+input_stream: "IN:sub_frame"
+output_stream: "OUT:sub_face"
+node { calculator: "FaceLandmarkerCalculator" input_stream: "FRAME:sub_frame" output_stream: "FACE:sub_face" }
+"#,
+            )
+            .expect("face subgraph parses"),
+        );
+    });
+}
+
+/// Snippet 1: frame → 33-point pose → smoother → joint angles. Outputs:
+/// `pose` ([`crate::perception::LandmarkList`]) and `angles`
+/// ([`crate::calculators::scenarios::JointAngles`]) on every frame.
+pub fn pose_landmark_config() -> GraphConfig {
+    GraphConfig::parse(
+        r#"
+input_stream: "frame"
+output_stream: "pose"
+output_stream: "angles"
+node { calculator: "PoseDetectorCalculator" input_stream: "FRAME:frame" output_stream: "POSE:raw_pose" }
+node { calculator: "LandmarkSmootherCalculator" input_stream: "raw_pose" output_stream: "pose" options { alpha: 0.6 } }
+node { calculator: "JointAngleCalculator" input_stream: "POSE:pose" output_stream: "ANGLES:angles" }
+"#,
+    )
+    .expect("pose_landmark config parses")
+}
+
+/// Snippet 2: three landmarker **subgraphs** fan out from one frame
+/// stream and run in parallel; the merger's default aligned-timestamp
+/// policy re-synchronizes them, so each `holistic` packet carries the
+/// pose, hands and face of exactly one frame.
+pub fn holistic_config() -> GraphConfig {
+    ensure_scenario_subgraphs();
+    GraphConfig::parse(
+        r#"
+input_stream: "frame"
+output_stream: "holistic"
+node { calculator: "PoseLandmarkerSubgraph" name: "pose_branch" input_stream: "IN:frame" output_stream: "OUT:pose" }
+node { calculator: "HandLandmarkerSubgraph" name: "hand_branch" input_stream: "IN:frame" output_stream: "OUT:hands" }
+node { calculator: "FaceLandmarkerSubgraph" name: "face_branch" input_stream: "IN:frame" output_stream: "OUT:face" }
+node {
+  calculator: "HolisticMergerCalculator"
+  input_stream: "POSE:pose"
+  input_stream: "HANDS:hands"
+  input_stream: "FACE:face"
+  output_stream: "HOLISTIC:holistic"
+}
+"#,
+    )
+    .expect("holistic config parses")
+}
+
+/// §6.1's cascade: a sparse detector (every 3rd frame) feeds a
+/// per-frame box tracker through the merged-detections loopback; the
+/// tracked boxes drive per-detection landmarks on every frame. Outputs:
+/// `tracked` ([`crate::perception::Detections`]) and `landmarks`.
+pub fn detection_cascade_config() -> GraphConfig {
+    GraphConfig::parse(
+        r#"
+input_stream: "frame"
+output_stream: "tracked"
+output_stream: "landmarks"
+node {
+  calculator: "FrameSelectionCalculator"
+  input_stream: "FRAME:frame"
+  output_stream: "FRAME:selected"
+  options { mode: "period" period: 3 }
+}
+node {
+  calculator: "TemplateMatchDetectorCalculator"
+  input_stream: "FRAME:selected"
+  output_stream: "DETECTIONS:fresh"
+  options { grid: 8 min_score: 0.2 box_size: 0.2 }
+}
+node {
+  calculator: "TrackedDetectionMergerCalculator"
+  input_stream: "DETECTIONS:fresh"
+  input_stream: "TRACKED:tracked"
+  output_stream: "MERGED:merged"
+  options { iou_threshold: 0.1 }
+}
+node {
+  calculator: "BoxTrackerCalculator"
+  input_stream: "FRAME:frame"
+  back_edge_input_stream: "DETECTIONS:merged"
+  output_stream: "TRACKED:tracked"
+}
+node {
+  calculator: "DetectionLandmarksCalculator"
+  input_stream: "FRAME:frame"
+  input_stream: "DETECTIONS:tracked"
+  output_stream: "LANDMARKS:landmarks"
+}
+"#,
+    )
+    .expect("detection_cascade config parses")
+}
+
+/// Install the three catalog scenarios into `registry` (validating each
+/// — installation doubles as a proof the catalog plans). Idempotent:
+/// already-present names are left at their current version.
+pub fn install_catalog(registry: &GraphRegistry) -> MpResult<()> {
+    ensure_scenario_subgraphs();
+    for (name, config) in [
+        (POSE_LANDMARK, pose_landmark_config()),
+        (HOLISTIC, holistic_config()),
+        (DETECTION_CASCADE, detection_cascade_config()),
+    ] {
+        if !registry.contains(name) {
+            registry.register(name, &config)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> GraphConfig {
+        let mut text = String::from("input_stream: \"in\"\noutput_stream: \"out\"\n");
+        for i in 0..n {
+            let src = if i == 0 { "in".into() } else { format!("s{i}") };
+            let dst = if i + 1 == n {
+                "out".into()
+            } else {
+                format!("s{}", i + 1)
+            };
+            text.push_str(&format!(
+                "node {{ calculator: \"PassThroughCalculator\" input_stream: \"{src}\" output_stream: \"{dst}\" }}\n"
+            ));
+        }
+        GraphConfig::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn register_get_and_swap_version_lifecycle() {
+        let reg = GraphRegistry::new();
+        let v1 = reg.register("p", &chain(2)).unwrap();
+        assert_eq!((v1.name(), v1.version()), ("p", 1));
+        assert_eq!(v1.plan().nodes.len(), 2);
+        // Duplicate registration is rejected; swap publishes v2.
+        assert!(reg.register("p", &chain(2)).is_err());
+        let v2 = reg.swap("p", &chain(3)).unwrap();
+        assert_eq!(v2.version(), 2);
+        assert_eq!(reg.swaps(), 1);
+        let cur = reg.get("p").unwrap();
+        assert!(Arc::ptr_eq(&cur, &v2));
+        assert!(!Arc::ptr_eq(&cur, &v1));
+        // The old Arc stays fully usable (in-flight holders drain on it).
+        assert_eq!(v1.plan().nodes.len(), 2);
+        // Swap on a new name starts at version 1.
+        let q1 = reg.swap("q", &chain(1)).unwrap();
+        assert_eq!(q1.version(), 1);
+        assert_eq!(reg.names(), vec!["p".to_string(), "q".to_string()]);
+    }
+
+    #[test]
+    fn bad_config_is_rejected_at_registration_not_checkout() {
+        let reg = GraphRegistry::new();
+        let good = chain(2);
+        reg.register("p", &good).unwrap();
+        let bad =
+            GraphConfig::parse(r#"node { calculator: "NoSuchCalculator" input_stream: "x" }"#)
+                .unwrap();
+        assert!(reg.swap("p", &bad).is_err(), "invalid config must not publish");
+        // The previous version survived the failed swap.
+        let cur = reg.get("p").unwrap();
+        assert_eq!(cur.version(), 1);
+        assert!(cur.build_graph(None).is_ok());
+        assert_eq!(reg.swaps(), 0);
+    }
+
+    #[test]
+    fn version_builds_graphs_without_revalidation() {
+        let reg = GraphRegistry::new();
+        let v = reg.register("p", &chain(2)).unwrap();
+        let g = v.build_graph(None).unwrap();
+        assert_eq!(g.plan().nodes.len(), 2);
+    }
+
+    #[test]
+    fn missing_name_is_a_clean_error() {
+        let reg = GraphRegistry::new();
+        let err = reg.get("ghost").unwrap_err();
+        assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn catalog_installs_and_all_scenarios_validate() {
+        let reg = GraphRegistry::new();
+        install_catalog(&reg).unwrap();
+        install_catalog(&reg).unwrap(); // idempotent
+        for name in [POSE_LANDMARK, HOLISTIC, DETECTION_CASCADE] {
+            let v = reg.get(name).unwrap();
+            assert_eq!(v.version(), 1, "{name} not re-registered");
+            assert!(v.plan().nodes.len() >= 3, "{name} expanded to real nodes");
+        }
+        // The holistic graph's subgraphs inlined into parallel branches.
+        let h = reg.get(HOLISTIC).unwrap();
+        assert!(
+            h.plan().nodes.len() >= 5,
+            "three branches + merger after expansion: {}",
+            h.plan().nodes.len()
+        );
+    }
+}

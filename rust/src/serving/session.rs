@@ -239,6 +239,19 @@ impl StreamingSession {
         *self.demux.notify.lock().unwrap() = Some(Box::new(f));
     }
 
+    /// The config version the session's graph was built from, pinned
+    /// for the session's lifetime. The serving layer compares this with
+    /// the pool's current version to drain sessions blue-green after a
+    /// [`crate::serving::GraphRegistry::swap`].
+    pub fn version(&self) -> std::sync::Arc<crate::serving::GraphVersion> {
+        std::sync::Arc::clone(
+            self.graph
+                .as_ref()
+                .expect("graph present until finish/drop")
+                .version(),
+        )
+    }
+
     /// A producer handle for *another* graph input stream (beyond the
     /// session's own), for multi-input graphs — e.g. a control stream
     /// gating the session's data stream in tests.

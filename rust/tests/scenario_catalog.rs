@@ -1,0 +1,240 @@
+//! The multi-model scenario catalog (`serving::install_catalog`): every
+//! catalog entry validates at registration and produces synchronized
+//! output when driven end to end.
+//!
+//! * **pose_landmark** — 33-point skeleton that tracks the subject, plus
+//!   finite named joint angles, one of each per frame;
+//! * **holistic_multi_model** — pose/hands/face branches run as parallel
+//!   subgraphs and the merger's aligned-timestamp policy re-synchronizes
+//!   them: every holistic packet carries all three models' output for
+//!   exactly one frame (one packet per input timestamp, in order);
+//! * **detection_cascade** — sparse detection feeds per-frame tracking
+//!   through the loopback, and tracked boxes drive per-detection
+//!   landmarks on every frame.
+#![cfg(not(feature = "xla"))]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use mediapipe::calculators::scenarios::{HolisticResult, JointAngles};
+use mediapipe::perception::{Detections, ImageFrame, LandmarkList, Rect, SyntheticWorld};
+use mediapipe::prelude::*;
+use mediapipe::serving::{
+    install_catalog, GraphRegistry, DETECTION_CASCADE, HOLISTIC, POSE_LANDMARK,
+};
+
+/// A frame whose brightness centroid sits at roughly `(cx, cy)`.
+fn subject_frame(cx: f32, cy: f32) -> ImageFrame {
+    let mut b = ImageFrame::build(32, 32, 1);
+    b.fill(0.02)
+        .fill_rect(&Rect::new(cx - 0.1, cy - 0.1, 0.2, 0.2), &[1.0]);
+    b.finish()
+}
+
+fn catalog() -> Arc<GraphRegistry> {
+    let registry = Arc::new(GraphRegistry::new());
+    install_catalog(&registry).expect("all catalog scenarios validate");
+    registry
+}
+
+#[test]
+fn catalog_registers_all_three_scenarios() {
+    let registry = catalog();
+    assert_eq!(
+        registry.names(),
+        vec![
+            DETECTION_CASCADE.to_string(),
+            HOLISTIC.to_string(),
+            POSE_LANDMARK.to_string(),
+        ],
+        "sorted catalog names"
+    );
+    // Idempotent: a second install leaves the versions untouched.
+    let v1 = registry.get(POSE_LANDMARK).unwrap();
+    install_catalog(&registry).unwrap();
+    assert!(Arc::ptr_eq(&v1, &registry.get(POSE_LANDMARK).unwrap()));
+}
+
+#[test]
+fn pose_landmark_emits_tracking_skeleton_and_finite_angles() {
+    let registry = catalog();
+    let version = registry.get(POSE_LANDMARK).unwrap();
+    let mut graph = version.build_graph(None).unwrap();
+    let poses = Arc::new(Mutex::new(Vec::<LandmarkList>::new()));
+    let angles = Arc::new(Mutex::new(Vec::<JointAngles>::new()));
+    let (p2, a2) = (Arc::clone(&poses), Arc::clone(&angles));
+    graph
+        .observe_output("pose", move |p| {
+            p2.lock().unwrap().push(p.get::<LandmarkList>().unwrap().clone());
+        })
+        .unwrap();
+    graph
+        .observe_output("angles", move |p| {
+            a2.lock().unwrap().push(p.get::<JointAngles>().unwrap().clone());
+        })
+        .unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    // The subject walks left to right across ten frames.
+    let n = 10usize;
+    for i in 0..n {
+        let cx = 0.25 + 0.05 * i as f32;
+        graph
+            .add_packet(
+                "frame",
+                Packet::new(subject_frame(cx, 0.5), Timestamp::new(i as i64)),
+            )
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+
+    let poses = poses.lock().unwrap();
+    let angles = angles.lock().unwrap();
+    assert_eq!(poses.len(), n, "one pose per frame");
+    assert_eq!(angles.len(), n, "one angle set per frame");
+    for pose in poses.iter() {
+        assert_eq!(pose.points.len(), 33, "full BlazePose-style skeleton");
+    }
+    // The (smoothed) skeleton follows the subject's rightward walk.
+    assert!(
+        poses.last().unwrap().centroid().0 > poses.first().unwrap().centroid().0 + 0.1,
+        "skeleton must track the moving subject"
+    );
+    for set in angles.iter() {
+        assert_eq!(set.angles.len(), 4, "both elbows and both knees");
+        for (name, a) in &set.angles {
+            assert!(a.is_finite() && *a >= 0.0, "{name} angle out of range: {a}");
+        }
+    }
+}
+
+#[test]
+fn holistic_output_is_synchronized_across_all_three_branches() {
+    let registry = catalog();
+    let version = registry.get(HOLISTIC).unwrap();
+    // The subgraphs were inlined at registration: the expanded config
+    // holds the branch calculators, not subgraph nodes.
+    assert!(
+        version.config().nodes.len() > 4,
+        "subgraph expansion inlined the branches (got {} nodes)",
+        version.config().nodes.len()
+    );
+    let mut graph = version.build_graph(None).unwrap();
+    let results = Arc::new(Mutex::new(Vec::<(i64, HolisticResult)>::new()));
+    let r2 = Arc::clone(&results);
+    graph
+        .observe_output("holistic", move |p| {
+            r2.lock()
+                .unwrap()
+                .push((p.timestamp().raw(), p.get::<HolisticResult>().unwrap().clone()));
+        })
+        .unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    let n = 8usize;
+    for i in 0..n {
+        let cy = 0.35 + 0.04 * i as f32;
+        graph
+            .add_packet(
+                "frame",
+                Packet::new(subject_frame(0.5, cy), Timestamp::new(i as i64)),
+            )
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+
+    let results = results.lock().unwrap();
+    assert_eq!(
+        results.len(),
+        n,
+        "exactly one synchronized holistic packet per input frame"
+    );
+    for (i, (ts, r)) in results.iter().enumerate() {
+        assert_eq!(*ts, i as i64, "holistic packets arrive in timestamp order");
+        assert_eq!(r.pose.points.len(), 33, "pose branch at ts {ts}");
+        assert_eq!(r.hands.len(), 2, "two hands at ts {ts}");
+        for hand in &r.hands {
+            assert_eq!(hand.points.len(), 21, "21-point hand at ts {ts}");
+        }
+        assert_eq!(r.face.points.len(), 468, "face mesh at ts {ts}");
+        // All three branches saw the *same* frame: the models share the
+        // brightness centroid, so their outputs must agree on where the
+        // subject is (the pose skeleton and face mesh are both anchored
+        // relative to it).
+        let (_, pose_cy) = r.pose.centroid();
+        let (_, face_cy) = r.face.centroid();
+        assert!(
+            (pose_cy - face_cy).abs() < 0.5,
+            "branch outputs anchored to different frames at ts {ts}"
+        );
+    }
+    // Synchronization held while the subject moved: later packets see
+    // the later subject position in every branch.
+    let first = &results.first().unwrap().1;
+    let last = &results.last().unwrap().1;
+    assert!(last.pose.centroid().1 > first.pose.centroid().1);
+    assert!(last.face.centroid().1 > first.face.centroid().1);
+}
+
+#[test]
+fn detection_cascade_tracks_and_emits_landmarks_every_frame() {
+    let registry = catalog();
+    let version = registry.get(DETECTION_CASCADE).unwrap();
+    let mut graph = version.build_graph(None).unwrap();
+    let tracked_frames = Arc::new(AtomicU64::new(0));
+    let tracked_nonempty = Arc::new(AtomicU64::new(0));
+    let landmark_frames = Arc::new(AtomicU64::new(0));
+    let landmark_points = Arc::new(AtomicU64::new(0));
+    let (tf2, tn2) = (Arc::clone(&tracked_frames), Arc::clone(&tracked_nonempty));
+    let (lf2, lp2) = (Arc::clone(&landmark_frames), Arc::clone(&landmark_points));
+    graph
+        .observe_output("tracked", move |p| {
+            tf2.fetch_add(1, Ordering::Relaxed);
+            if !p.get::<Detections>().unwrap().is_empty() {
+                tn2.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+    graph
+        .observe_output("landmarks", move |p| {
+            lf2.fetch_add(1, Ordering::Relaxed);
+            lp2.fetch_add(
+                p.get::<LandmarkList>().unwrap().points.len() as u64,
+                Ordering::Relaxed,
+            );
+        })
+        .unwrap();
+    graph.start_run(SidePackets::new()).unwrap();
+    let mut world = SyntheticWorld::new(48, 48, 1, 3)
+        .with_object_sizes(0.15, 0.25)
+        .with_noise(0.0);
+    let n = 30usize;
+    for i in 0..n {
+        world.step();
+        graph
+            .add_packet("frame", Packet::new(world.render(), Timestamp::new(i as i64)))
+            .unwrap();
+    }
+    graph.close_all_inputs().unwrap();
+    graph.wait_until_done().unwrap();
+
+    assert_eq!(
+        tracked_frames.load(Ordering::Relaxed),
+        n as u64,
+        "tracking output on every frame, though detection ran on every 3rd"
+    );
+    let nonempty = tracked_nonempty.load(Ordering::Relaxed);
+    assert!(
+        nonempty >= (n as u64) / 2,
+        "the tracker holds the object between sparse detections ({nonempty}/{n} non-empty)"
+    );
+    assert_eq!(
+        landmark_frames.load(Ordering::Relaxed),
+        n as u64,
+        "per-detection landmarks on every frame"
+    );
+    assert!(
+        landmark_points.load(Ordering::Relaxed) >= nonempty * 5,
+        "5 landmark points per tracked box"
+    );
+}

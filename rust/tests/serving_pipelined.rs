@@ -23,14 +23,26 @@
 mod common;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use common::{payload_frame, recv_within, streaming_test_config, test_server_config};
 use mediapipe::perception::SyntheticWorld;
 use mediapipe::prelude::*;
 use mediapipe::serving::pipeline::staged_pipeline_config;
-use mediapipe::serving::{PipelineServer, ServerConfig};
+use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig};
+
+/// Register `config` under `name` in a fresh private registry and hand
+/// back the two `ServerConfig` fields that bind a server to it (the
+/// single config-resolution seam).
+fn register_test_graph(
+    name: &str,
+    config: GraphConfig,
+) -> (Option<String>, Option<Arc<GraphRegistry>>) {
+    let reg = Arc::new(GraphRegistry::new());
+    reg.register(name, &config).unwrap();
+    (Some(name.to_string()), Some(reg))
+}
 
 // ---------------------------------------------------------------------
 // Gated pipeline: deterministic control over completion timing.
@@ -167,8 +179,10 @@ node { calculator: "TestHoldGateCalculator" input_stream: "staged" output_stream
 fn gated_completion_preserves_ownership_and_order_for_every_depth() {
     for &k in &[1usize, 2, 4] {
         reset_gate();
+        let (graph_name, registry) = register_test_graph("gated", gated_pipeline());
         let server = PipelineServer::start(ServerConfig {
-            graph_override: Some(gated_pipeline()),
+            graph_name,
+            registry,
             batch_timeout: Duration::from_secs(30),
             ..streaming_test_config(k, 0)
         })
@@ -296,8 +310,10 @@ fn mid_window_poison_fails_every_pending_job_quickly_and_swaps_sessions() {
     // One 50 ms busy stage ahead of the echo: the poison at timestamp 0
     // only detonates after timestamps 1 and 2 joined the window.
     let staged = staged_pipeline_config(&[50_000], None).unwrap();
+    let (graph_name, registry) = register_test_graph("staged_poison", staged);
     let server = PipelineServer::start(ServerConfig {
-        graph_override: Some(staged),
+        graph_name,
+        registry,
         batch_timeout: Duration::from_millis(400),
         ..streaming_test_config(3, 0)
     })
@@ -348,8 +364,10 @@ fn stuck_graph_without_error_is_bounded_by_batch_timeout() {
     // 800 ms busy stage against a 200 ms batch_timeout: the batch must
     // fail at ~batch_timeout, not hang, and the session retires.
     let staged = staged_pipeline_config(&[800_000], None).unwrap();
+    let (graph_name, registry) = register_test_graph("staged_slow", staged);
     let server = PipelineServer::start(ServerConfig {
-        graph_override: Some(staged),
+        graph_name,
+        registry,
         batch_timeout: Duration::from_millis(200),
         ..streaming_test_config(2, 0)
     })
@@ -420,8 +438,10 @@ fn server_drop_with_a_full_window_resolves_every_waiter() {
     // server is dropped; shutdown must drain it — every waiter resolves
     // in bounded time, none hangs.
     let staged = staged_pipeline_config(&[20_000], None).unwrap();
+    let (graph_name, registry) = register_test_graph("staged_drop", staged);
     let server = PipelineServer::start(ServerConfig {
-        graph_override: Some(staged),
+        graph_name,
+        registry,
         batch_timeout: Duration::from_secs(30),
         ..streaming_test_config(4, 0)
     })

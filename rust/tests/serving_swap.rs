@@ -1,0 +1,391 @@
+//! Blue-green hot-swap (`GraphRegistry::swap` → `GraphPool` →
+//! `PipelineServer::swap_graph`): the tentpole's correctness
+//! obligations for config turnover under load.
+//!
+//! * **no torn configs** — checkouts racing a swapper always observe a
+//!   `(config, plan)` pair from one atomic version publication, and
+//!   every checked-out graph runs to completion on the version it
+//!   pinned;
+//! * **streaming drain** — a session holding a mid-resolution window
+//!   when the swap lands drains every pending job on the *old* version
+//!   (zero failed requests), retires as `sessions_drained_on_old`, and
+//!   the next request lands on a pre-warmed session built from the
+//!   *new* version — with the metrics evidence
+//!   (`configs_swapped`/`sessions_drained_on_old`/`prewarm_hits`) to
+//!   prove it.
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use common::{payload_frame, recv_within, streaming_test_config};
+use mediapipe::perception::Detections;
+use mediapipe::prelude::*;
+use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig};
+
+// ---------------------------------------------------------------------
+// Registry/pool layer: concurrent checkouts vs a live swapper.
+// ---------------------------------------------------------------------
+
+fn chain(n: usize) -> GraphConfig {
+    let mut text = String::from("input_stream: \"in\"\noutput_stream: \"out\"\n");
+    let mut src = "in".to_string();
+    for i in 0..n {
+        let dst = if i + 1 == n {
+            "out".to_string()
+        } else {
+            format!("mid{i}")
+        };
+        text.push_str(&format!(
+            "node {{ calculator: \"PassThroughCalculator\" input_stream: \"{src}\" output_stream: \"{dst}\" }}\n"
+        ));
+        src = dst;
+    }
+    GraphConfig::parse(&text).unwrap()
+}
+
+#[test]
+fn concurrent_checkouts_never_observe_a_torn_config() {
+    use mediapipe::serving::GraphPool;
+
+    let registry = Arc::new(GraphRegistry::new());
+    registry.register("chain", &chain(2)).unwrap();
+    let pool = Arc::new(GraphPool::from_registry(Arc::clone(&registry), "chain", 2, None).unwrap());
+
+    // The swapper alternates between a 2-node and a 3-node chain while
+    // checkout threads continuously pin versions and run them.
+    let swaps = 10usize;
+    let swapper = {
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            for i in 0..swaps {
+                let cfg = if i % 2 == 0 { chain(3) } else { chain(2) };
+                registry.swap("chain", &cfg).unwrap();
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        })
+    };
+
+    let mut workers = Vec::new();
+    for w in 0..4 {
+        let pool = Arc::clone(&pool);
+        workers.push(std::thread::spawn(move || {
+            for i in 0..30i64 {
+                let mut g = pool.checkout().unwrap();
+                // The pinned version is one atomic publication: its plan
+                // was derived from exactly its config, never a mix of
+                // two versions caught mid-swap.
+                let v = Arc::clone(g.version());
+                assert_eq!(
+                    v.plan().nodes.len(),
+                    v.config().nodes.len(),
+                    "torn version: plan and config disagree on node count"
+                );
+                let nodes = v.config().nodes.len();
+                assert!(
+                    nodes == 2 || nodes == 3,
+                    "config from outside the published set ({nodes} nodes)"
+                );
+                // The instance runs to completion on its pinned version
+                // even if the registry moved on mid-run.
+                let val = w * 1000 + i;
+                let poller = g.poller("out").unwrap();
+                g.start_run(SidePackets::new()).unwrap();
+                g.add_packet("in", Packet::new(val, Timestamp::new(val))).unwrap();
+                g.close_all_inputs().unwrap();
+                let mut got = Vec::new();
+                loop {
+                    match poller.poll(Duration::from_secs(15)) {
+                        Poll::Packet(p) => got.push(*p.get::<i64>().unwrap()),
+                        Poll::Done => break,
+                        Poll::TimedOut => panic!("checkout wedged during swap"),
+                    }
+                }
+                g.wait_until_done().unwrap();
+                assert_eq!(got, vec![val], "result corrupted across a swap");
+            }
+        }));
+    }
+    for h in workers {
+        h.join().unwrap();
+    }
+    swapper.join().unwrap();
+
+    let current = registry.get("chain").unwrap();
+    assert_eq!(
+        current.version(),
+        1 + swaps as u64,
+        "every swap published exactly one new version"
+    );
+    assert_eq!(registry.swaps(), swaps as u64);
+    // The pool's checkout path retired superseded warm instances along
+    // the way (exact count depends on interleaving).
+    let fresh = pool.checkout().unwrap();
+    assert!(Arc::ptr_eq(fresh.version(), &current), "post-swap checkout is current");
+}
+
+// ---------------------------------------------------------------------
+// Serving layer: a streaming session mid-window across a swap.
+//
+// Same gate idiom as tests/serving_pipelined.rs (one test per binary
+// may use these statics): a hold gate keeps the window unresolved
+// while the swap lands, and a per-version score bias makes "which
+// version answered this request" directly observable in the replies.
+// ---------------------------------------------------------------------
+
+static GATE: OnceLock<(Mutex<i64>, Condvar)> = OnceLock::new();
+static STAGED: AtomicUsize = AtomicUsize::new(0);
+
+fn gate() -> &'static (Mutex<i64>, Condvar) {
+    GATE.get_or_init(|| (Mutex::new(0), Condvar::new()))
+}
+
+/// Allow timestamps `< n` through the hold gate.
+fn release_up_to(n: i64) {
+    let (mx, cv) = gate();
+    let mut released = mx.lock().unwrap();
+    if n > *released {
+        *released = n;
+    }
+    cv.notify_all();
+}
+
+fn wait_staged_at_least(n: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while STAGED.load(Ordering::SeqCst) < n {
+        assert!(
+            Instant::now() < deadline,
+            "gated pipeline never staged {n} timestamps (got {})",
+            STAGED.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Adds a per-version score bias to every detection row — the reply
+/// itself tells the test which config version served it.
+struct SwapBias {
+    bias: f32,
+}
+
+impl Calculator for SwapBias {
+    fn open(&mut self, ctx: &mut CalculatorContext) -> MpResult<()> {
+        self.bias = ctx.options().float_or("bias", 0.0) as f32;
+        Ok(())
+    }
+
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let ts = p.timestamp();
+        let mut rows: Vec<Detections> = p.get::<Vec<Detections>>()?.clone();
+        for row in &mut rows {
+            for det in row {
+                det.score += self.bias;
+            }
+        }
+        ctx.output(0, Packet::new(rows, ts));
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+struct SwapProbe;
+
+impl Calculator for SwapProbe {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if !p.is_empty() {
+            let p = p.clone();
+            STAGED.fetch_add(1, Ordering::SeqCst);
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+struct SwapHoldGate;
+
+impl Calculator for SwapHoldGate {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let ts = p.timestamp().raw();
+        let p = p.clone();
+        let (mx, cv) = gate();
+        let mut released = mx.lock().unwrap();
+        // Fail-safe bound: a buggy test must time out its assertions,
+        // not wedge the shared executor forever.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while *released <= ts {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = cv.wait_timeout(released, deadline - now).unwrap();
+            released = guard;
+        }
+        drop(released);
+        ctx.output(0, p);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+fn ensure_swap_calculators() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let r = CalculatorRegistry::global();
+        r.register_fn(
+            "SwapBiasCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(SwapBias { bias: 0.0 })),
+        );
+        r.register_fn(
+            "SwapStageProbeCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(SwapProbe)),
+        );
+        r.register_fn(
+            "SwapHoldGateCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(SwapHoldGate)),
+        );
+    });
+}
+
+/// frames → echo (payload → score) → per-version bias → probe → hold
+/// gate → detections.
+fn gated_bias_pipeline(bias: f32) -> GraphConfig {
+    ensure_swap_calculators();
+    GraphConfig::parse(&format!(
+        r#"
+input_stream: "frames"
+output_stream: "detections"
+node {{ calculator: "ServingEchoCalculator" input_stream: "FRAMES:frames" output_stream: "DETS:echoed" }}
+node {{ calculator: "SwapBiasCalculator" input_stream: "echoed" output_stream: "biased" options {{ bias: {bias} }} }}
+node {{ calculator: "SwapStageProbeCalculator" input_stream: "biased" output_stream: "staged" }}
+node {{ calculator: "SwapHoldGateCalculator" input_stream: "staged" output_stream: "detections" }}
+"#
+    ))
+    .unwrap()
+}
+
+#[test]
+fn mid_window_swap_drains_old_version_and_prewarms_new() {
+    let registry = Arc::new(GraphRegistry::new());
+    registry.register("gated", &gated_bias_pipeline(0.0)).unwrap();
+    let server = PipelineServer::start(ServerConfig {
+        graph_name: Some("gated".into()),
+        registry: Some(Arc::clone(&registry)),
+        batch_timeout: Duration::from_secs(30),
+        ..streaming_test_config(4, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    let wait_for = |what: &str, cond: &dyn Fn() -> bool| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while !cond() {
+            assert!(Instant::now() < deadline, "{what}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+
+    // Deterministic prewarm-hit bookkeeping: the first activation must
+    // come from the standby, so wait for it before submitting.
+    wait_for("standby session never pre-warmed", &|| {
+        server.metrics().sessions_prewarmed.get() >= 1
+    });
+
+    // Request 0 passes the gate immediately (released below), proving
+    // the v1 session serves before the swap.
+    release_up_to(1);
+    let first = h.submit(&payload_frame(0.1));
+    let dets = recv_within(&first, Duration::from_secs(10), "pre-swap request").unwrap();
+    assert!((dets[0].score - 0.1).abs() < 1e-6, "v1 must add no bias");
+
+    // Three requests held mid-window (timestamps 1-3 stay behind the
+    // gate; pipeline_depth 4 admits them all into the graph).
+    let held: Vec<_> = [0.3f32, 0.5, 0.7]
+        .iter()
+        .map(|&v| h.submit(&payload_frame(v)))
+        .collect();
+    wait_staged_at_least(4, Duration::from_secs(10));
+
+    // The swap lands while the session holds an unresolved window.
+    let prewarmed_before = server.metrics().sessions_prewarmed.get();
+    let new_version = server.swap_graph(&gated_bias_pipeline(0.25)).unwrap();
+    assert_eq!(new_version, 2, "swap published version 2");
+    assert_eq!(server.metrics().configs_swapped.get(), 1);
+    assert_eq!(
+        registry.get("gated").unwrap().version(),
+        2,
+        "server and registry agree on the published version"
+    );
+
+    // The refill worker replaces the stale standby with one pre-opened
+    // on v2 — off the request path, while the old session still drains.
+    wait_for("standby never re-armed on the new version", &|| {
+        server.metrics().sessions_prewarmed.get() > prewarmed_before
+    });
+
+    // Every job pending at swap time resolves on the OLD version:
+    // unbiased scores, zero errors — nothing dropped by the turnover.
+    release_up_to(i64::MAX);
+    for (i, (rx, expect)) in held.into_iter().zip([0.3f32, 0.5, 0.7]).enumerate() {
+        let dets = recv_within(&rx, Duration::from_secs(10), "held reply")
+            .unwrap_or_else(|e| panic!("request {i} failed across the swap: {e}"));
+        assert!(
+            (dets[0].score - expect).abs() < 1e-6,
+            "request {i} answered by the wrong version: got {}",
+            dets[0].score
+        );
+    }
+
+    // The next submission finds the session superseded: it drains and
+    // retires on v1 (`sessions_drained_on_old`), and the replacement —
+    // the re-armed standby — answers with the v2 bias.
+    let dets = h.detect(&payload_frame(0.2)).expect("post-swap request");
+    assert!(
+        (dets[0].score - 0.45).abs() < 1e-6,
+        "post-swap request must see the v2 bias: got {}",
+        dets[0].score
+    );
+
+    let m = server.metrics();
+    assert_eq!(m.errors.get(), 0, "zero failed requests across the swap");
+    assert_eq!(m.requests.get(), 5);
+    assert_eq!(m.configs_swapped.get(), 1);
+    assert_eq!(
+        m.sessions_drained_on_old.get(),
+        1,
+        "the superseded session retired through the planned drain path"
+    );
+    assert_eq!(m.session_errors.get(), 0);
+    assert_eq!(m.sessions_started.get(), 2, "v1 session + v2 replacement");
+    assert_eq!(
+        m.prewarm_hits.get(),
+        2,
+        "both activations came from pre-warmed standbys"
+    );
+}
