@@ -59,6 +59,9 @@ fn run_depth(depth: usize, sc: &Scale) -> DepthReport {
         session_input_queue: 16,
         pipeline_depth: depth,
         batch_timeout: Duration::from_secs(60),
+        request_deadline: None,
+        max_queue_depth: 0,
+        pipeline_depth_max: 0,
         graph_name: Some("staged".into()),
         registry: Some(registry),
     })

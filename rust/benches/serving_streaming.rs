@@ -62,6 +62,9 @@ fn run_mode(mode: ServingMode, label: &'static str, sc: &Scale) -> ModeReport {
         session_input_queue: 4,
         pipeline_depth: 1, // submit-then-wait: the pre-pipelining baseline
         batch_timeout: Duration::from_secs(60),
+        request_deadline: None,
+        max_queue_depth: 0,
+        pipeline_depth_max: 0,
         graph_name: None,
         registry: None,
     })

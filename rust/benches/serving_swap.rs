@@ -77,6 +77,9 @@ fn main() {
         session_input_queue: 16,
         pipeline_depth: 4,
         batch_timeout: Duration::from_secs(60),
+        request_deadline: None,
+        max_queue_depth: 0,
+        pipeline_depth_max: 0,
         graph_name: Some("staged".into()),
         registry: Some(Arc::clone(&registry)),
     })

@@ -61,6 +61,26 @@ pub enum MpError {
     /// Graph input stream operations after the graph finished, etc.
     InvalidState(String),
 
+    /// The serving layer refused the request at admission: queue depth ×
+    /// observed batch latency implies the request's deadline (or the
+    /// configured queue bound) cannot be met, so the server sheds the
+    /// load instead of queueing it (flow control extended to the serving
+    /// boundary — the caller should back off or retry elsewhere).
+    Overloaded {
+        /// Jobs already queued ahead of the rejected request.
+        queued: usize,
+        /// Estimated wait (µs) the request would have faced; 0 when the
+        /// rejection came from the hard queue-depth cap.
+        estimated_wait_us: u64,
+    },
+
+    /// The request's deadline passed before the server could dispatch
+    /// it; the job was expired from the queue without touching a graph.
+    DeadlineExceeded {
+        /// How long the request sat in the server (µs) before expiry.
+        waited_us: u64,
+    },
+
     /// Runtime (model backend / artifact) failures.
     Runtime(String),
 
@@ -103,6 +123,18 @@ impl fmt::Display for MpError {
             }
             MpError::MissingSidePacket(n) => write!(f, "missing side packet '{n}'"),
             MpError::InvalidState(m) => write!(f, "invalid graph state: {m}"),
+            MpError::Overloaded {
+                queued,
+                estimated_wait_us,
+            } => write!(
+                f,
+                "server overloaded: request shed at admission ({queued} jobs queued, \
+                 estimated wait {estimated_wait_us}µs)"
+            ),
+            MpError::DeadlineExceeded { waited_us } => write!(
+                f,
+                "request deadline exceeded after {waited_us}µs in queue"
+            ),
             MpError::Runtime(m) => write!(f, "runtime error: {m}"),
             MpError::Io(m) => write!(f, "io error: {m}"),
             MpError::Internal(m) => write!(f, "{m}"),
@@ -153,6 +185,27 @@ mod tests {
         let e = MpError::Validation("dup stream".into());
         let e2 = e.clone();
         assert_eq!(e.to_string(), e2.to_string());
+    }
+
+    #[test]
+    fn overload_errors_are_typed_and_matchable() {
+        // Callers shed-aware retry logic matches on the variant, not on
+        // display strings — both variants must survive a clone round-trip.
+        let shed = MpError::Overloaded {
+            queued: 17,
+            estimated_wait_us: 42_000,
+        };
+        assert!(matches!(
+            shed.clone(),
+            MpError::Overloaded { queued: 17, .. }
+        ));
+        assert!(shed.to_string().contains("17"));
+        let late = MpError::DeadlineExceeded { waited_us: 9_000 };
+        assert!(matches!(
+            late.clone(),
+            MpError::DeadlineExceeded { waited_us: 9_000 }
+        ));
+        assert!(late.to_string().contains("9000"));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4 \
 //!     --dispatch-mode sharded
 //! mediapipe serve --streaming --graph echo --swap-to echo_deep
+//! mediapipe serve --deadline-ms 50 --max-queue 256 --streaming --adaptive-depth 8
 //! mediapipe list-calculators
 //! ```
 
@@ -237,6 +238,24 @@ fn cmd_serve(args: &[String]) -> i32 {
     let pipeline_depth: usize = flag_value(args, "--pipeline-depth")
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
+    // --deadline-ms D: stamp every request with a completion deadline;
+    // the server sheds work it estimates it cannot finish in time
+    // (typed Overloaded) and expires queued jobs whose deadline passed
+    // (typed DeadlineExceeded). Omit to disable deadline shedding.
+    let request_deadline = flag_value(args, "--deadline-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis);
+    // --max-queue N: hard cap on the server's intake queue (0 =
+    // unbounded); submissions beyond it are rejected immediately.
+    let max_queue_depth: usize = flag_value(args, "--max-queue")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    // --adaptive-depth MAX: let the streaming batcher grow/shrink the
+    // pipeline window between 1 and MAX from the observed queue-vs-
+    // residence imbalance instead of the fixed --pipeline-depth.
+    let pipeline_depth_max: usize = flag_value(args, "--adaptive-depth")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
     // --dispatch-mode: executor steal-dispatch engine for the server's
     // private pool — the sharded default or one of the ablations.
     let dispatch_mode = match flag_value(args, "--dispatch-mode") {
@@ -292,6 +311,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             max_wait: Duration::from_millis(2),
             mode,
             pipeline_depth,
+            request_deadline,
+            max_queue_depth,
+            pipeline_depth_max,
             dispatch_mode,
             graph_name: graph.clone(),
             registry: registry.clone(),

@@ -23,6 +23,21 @@ impl Counter {
     }
 }
 
+/// A settable instantaneous value (current pipeline depth, live queue
+/// length, ...) — unlike [`Counter`], it moves both ways.
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Latency sample store with percentile queries — **bounded memory**.
 ///
 /// Long serving runs record one sample per request forever, so the
@@ -172,6 +187,16 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(2);
+        assert_eq!(g.get(), 2);
     }
 
     #[test]

@@ -93,6 +93,63 @@
 //! stage-imbalanced pipeline to show throughput approaching the
 //! slowest-stage bound.
 //!
+//! ## Overload control: deadlines, shedding, adaptive pipelining
+//!
+//! The paper's flow-control story (bounded queues, back-pressure at
+//! graph inputs) stops at the graph boundary; production traffic is
+//! bursty, and a server that just queues lets every caller wait out the
+//! full [`ServerConfig::batch_timeout`] exactly when latency matters
+//! most. The serving layer extends flow control to the **serving
+//! boundary**:
+//!
+//! * **Deadlines.** [`ServerConfig::request_deadline`] stamps every
+//!   request with a completion deadline
+//!   ([`ServerHandle::submit_with_deadline`] overrides it per call).
+//!   A job whose deadline passes while it is still queued is **expired**
+//!   before dispatch with a typed [`MpError::DeadlineExceeded`] — it
+//!   never occupies a graph (`jobs_expired`).
+//! * **Admission-time shedding.** [`ServerHandle::submit`] estimates the
+//!   request's wait from live signals — queued jobs, in-flight batches,
+//!   and an EWMA of observed batch residence (`infer_latency`) — and
+//!   rejects with a typed [`MpError::Overloaded`] when the estimate
+//!   blows the deadline (`jobs_shed`). Rejection happens on the
+//!   *caller's* thread, before the job touches the intake queue, so an
+//!   overloaded server answers "no" in microseconds instead of "sorry"
+//!   after `batch_timeout`.
+//! * **Bounded intake.** [`ServerConfig::max_queue_depth`] caps the
+//!   intake queue itself: even deadline-less traffic is rejected with
+//!   [`MpError::Overloaded`] once the cap is hit, so a wedged graph can
+//!   no longer grow server memory without limit while the batcher is
+//!   stuck inside a run.
+//! * **Adaptive pipelining.** With [`ServerConfig::pipeline_depth_max`]
+//!   set, the streaming window size K is no longer the hand-tuned
+//!   [`ServerConfig::pipeline_depth`] constant: the batcher compares the
+//!   queue-wait EWMA against the batch-residence EWMA and grows K (up to
+//!   the max) while backlog dominates service time — the signature of a
+//!   stage-imbalanced graph with idle stages — then shrinks it back
+//!   toward 1 when the queue drains, trading window latency for
+//!   throughput only while throughput is actually short. The live value
+//!   is exported as `depth_current` (with `depth_raises` /
+//!   `depth_shrinks` movement counters). Threshold recycles interact
+//!   safely: `session_max_timestamps` counts submissions regardless of
+//!   K, and the drain-before-retire rule means a deeper window only
+//!   lengthens the drain, never abandons it.
+//! * **Out-of-order reply release, per-client FIFO.** Resolved batches
+//!   no longer wait behind an unresolved older batch they share no
+//!   clients with: each handle is a **client**, and a resolved batch is
+//!   released as soon as every one of its clients has no older
+//!   unresolved batch (a client→oldest-unresolved index). One slow
+//!   client's window never delays another client's resolved rows, while
+//!   each client still observes strict FIFO.
+//!
+//! The shed-vs-queue trade: shedding converts overload from unbounded
+//! queueing latency for *everyone* into fast typed rejections for the
+//! *excess* — admitted requests keep meeting their deadlines, so
+//! goodput (replies within deadline) stays near capacity instead of
+//! collapsing. `benches/serving_overload.rs` sweeps offered load from
+//! 1× to 10× capacity and shows exactly that against the pure-queueing
+//! ablation.
+//!
 //! ## Graph registry & hot-swap
 //!
 //! The pipeline a server runs is no longer frozen at startup. Configs
@@ -159,14 +216,15 @@ pub mod pool;
 pub mod registry;
 pub mod session;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{MpError, MpResult};
 use crate::executor::{DispatchMode, Executor, ThreadPoolExecutor};
 use crate::graph::{GraphConfig, Poll, SidePackets};
-use crate::metrics::{Counter, LatencyRecorder, LatencySummary};
+use crate::metrics::{Counter, Gauge, LatencyRecorder, LatencySummary};
 use crate::packet::Packet;
 use crate::perception::types::Detections;
 use crate::perception::ImageFrame;
@@ -242,6 +300,29 @@ pub struct ServerConfig {
     /// its session); a pooled run's output poll gives up after it.
     /// Must be > 0 (validated by [`PipelineServer::start`]).
     pub batch_timeout: Duration,
+    /// Default completion deadline stamped on every request (module
+    /// docs, "Overload control"): requests the server estimates it
+    /// cannot finish in time are shed at admission with a typed
+    /// [`MpError::Overloaded`], and queued requests whose deadline
+    /// passes before dispatch expire with [`MpError::DeadlineExceeded`].
+    /// `None` (the default) disables deadline-driven shedding;
+    /// [`ServerHandle::submit_with_deadline`] overrides per call.
+    pub request_deadline: Option<Duration>,
+    /// Hard cap on jobs queued in the server's intake (module docs,
+    /// "Overload control"): submissions beyond it are rejected with a
+    /// typed [`MpError::Overloaded`] instead of growing memory without
+    /// bound while the batcher is wedged. 0 = unbounded (the pre-cap
+    /// behaviour, kept for the queueing ablation).
+    pub max_queue_depth: usize,
+    /// Streaming only: enable **adaptive** pipeline depth (module docs,
+    /// "Overload control"). 0 (the default) keeps the fixed
+    /// `pipeline_depth`; a value ≥ 1 lets the batcher grow/shrink the
+    /// live window between 1 and this max from the observed
+    /// queue-vs-residence imbalance, starting at `pipeline_depth`
+    /// clamped into range. Keep any `input_queue_size` bound on the
+    /// served graph ≥ this max, for the same reason as
+    /// `pipeline_depth` (below).
+    pub pipeline_depth_max: usize,
     /// Serve the named [`GraphRegistry`] entry instead of the built-in
     /// detector pipeline (the **single** config-resolution seam — tests
     /// and benches register gated or stage-imbalanced pipelines under a
@@ -282,6 +363,9 @@ impl Default for ServerConfig {
             session_input_queue: 4,
             pipeline_depth: 1,
             batch_timeout: Duration::from_secs(60),
+            request_deadline: None,
+            max_queue_depth: 1024,
+            pipeline_depth_max: 0,
             graph_name: None,
             registry: None,
         }
@@ -292,6 +376,79 @@ struct Job {
     tensor: Vec<f32>,
     reply: mpsc::Sender<MpResult<Detections>>,
     enqueued: Instant,
+    /// Completion deadline (admission shedding / queue expiry); `None`
+    /// exempts the job from deadline-driven overload control.
+    deadline: Option<Instant>,
+    /// The submitting handle's client id: reply release is FIFO per
+    /// client, out-of-order across clients.
+    client: u64,
+}
+
+/// Live signals shared between the submitting handles (admission
+/// control) and the batcher (which produces them): EWMAs of batch
+/// residence and queue wait, the live pipeline depth, and the in-flight
+/// batch count. Single writer (the batcher); handles only read.
+struct Admission {
+    /// EWMA (µs) of batch residence — submission into the graph to
+    /// resolution (streaming) or the whole pooled run.
+    infer_ewma_us: AtomicU64,
+    /// EWMA (µs) of job queue wait — enqueue to dispatch.
+    queue_ewma_us: AtomicU64,
+    /// The live pipeline window size K (adaptive or fixed).
+    depth: AtomicU64,
+    /// Batches submitted but not yet resolved (streaming window
+    /// occupancy; 1 while a pooled run is on the batcher).
+    inflight: AtomicU64,
+}
+
+/// EWMA smoothing factor: new = old + (sample - old) / 8.
+const EWMA_SHIFT: u32 = 3;
+
+impl Admission {
+    fn new(depth: u64) -> Arc<Admission> {
+        Arc::new(Admission {
+            infer_ewma_us: AtomicU64::new(0),
+            queue_ewma_us: AtomicU64::new(0),
+            depth: AtomicU64::new(depth),
+            inflight: AtomicU64::new(0),
+        })
+    }
+
+    /// Fold `sample` into the EWMA cell. Single-writer (the batcher),
+    /// so a plain read-modify-write is race-free; readers tolerate any
+    /// torn interleaving because they only act on the magnitude.
+    fn ewma_update(cell: &AtomicU64, sample_us: u64) {
+        let sample = sample_us.max(1); // 0 is reserved for "no evidence"
+        let old = cell.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample
+        } else if sample >= old {
+            old + ((sample - old) >> EWMA_SHIFT)
+        } else {
+            // Decay by at least 1 so the average can settle all the way
+            // down after a spike instead of parking a few µs above.
+            old - (((old - sample) >> EWMA_SHIFT).max(1))
+        };
+        cell.store(new, Ordering::Relaxed);
+    }
+
+    /// Estimated wait (µs) a request admitted *now* would face before
+    /// its reply: batches ahead of it (queued jobs coalesced at
+    /// `max_batch` plus the in-flight window) served at the pipeline's
+    /// observed rate (residence / depth — a K-deep window completes ~K
+    /// batches per residence), plus its own residence. 0 until the
+    /// first batch resolves: with no evidence, every request is
+    /// admitted.
+    fn estimated_wait_us(&self, queued_jobs: usize, max_batch: usize) -> u64 {
+        let residence = self.infer_ewma_us.load(Ordering::Relaxed);
+        if residence == 0 {
+            return 0;
+        }
+        let depth = self.depth.load(Ordering::Relaxed).max(1);
+        let batches_ahead =
+            queued_jobs.div_ceil(max_batch.max(1)) as u64 + self.inflight.load(Ordering::Relaxed);
+        batches_ahead.saturating_mul(residence) / depth + residence
+    }
 }
 
 /// What wakes the batcher: client requests and, in streaming mode,
@@ -310,6 +467,17 @@ enum BatcherEvent {
 /// the queue (server drop) stops intake; events already queued still
 /// drain, and events sent after close are discarded (their reply
 /// senders drop, surfacing "server stopped" to the caller).
+///
+/// Two overload-control properties live here:
+/// * **Bounded intake** — [`EventQueue::send_job`] rejects jobs beyond
+///   `max_depth` instead of queueing without limit; only jobs count
+///   toward the bound (completion pings are control flow and must never
+///   be refused).
+/// * **Poison tolerance** — every lock/wait recovers the guard from a
+///   [`std::sync::PoisonError`]: the state is a plain `VecDeque` plus
+///   counters, consistent after any panic point, so a submitter thread
+///   panicking mid-send must not cascade the panic into the batcher and
+///   kill the server with every pending job unanswered.
 struct EventQueue {
     state: Mutex<EventQueueState>,
     cv: Condvar,
@@ -317,7 +485,20 @@ struct EventQueue {
 
 struct EventQueueState {
     queue: VecDeque<BatcherEvent>,
+    /// Jobs currently in `queue` (excludes completion pings): the
+    /// admission bound and the handles' backlog signal.
+    jobs: usize,
     closed: bool,
+}
+
+impl EventQueueState {
+    fn pop(&mut self) -> Option<BatcherEvent> {
+        let ev = self.queue.pop_front();
+        if matches!(ev, Some(BatcherEvent::Job(_))) {
+            self.jobs -= 1;
+        }
+        ev
+    }
 }
 
 /// Outcome of a deadline-bounded receive on the [`EventQueue`].
@@ -327,50 +508,99 @@ enum Recv {
     Closed,
 }
 
+/// Outcome of a bounded job submission ([`EventQueue::send_job`]).
+enum SendJob {
+    /// Queued (the batcher owns the job now) — or the queue is closed
+    /// and the job was discarded, surfacing "server stopped" through
+    /// the dropped reply sender exactly as before.
+    Accepted,
+    /// The intake is at `max_depth`: the job comes back so the caller
+    /// can answer it with a typed rejection.
+    Rejected(Job),
+}
+
 impl EventQueue {
     fn new() -> Arc<EventQueue> {
         Arc::new(EventQueue {
             state: Mutex::new(EventQueueState {
                 queue: VecDeque::new(),
+                jobs: 0,
                 closed: false,
             }),
             cv: Condvar::new(),
         })
     }
 
+    /// Lock the state, recovering from a poisoned mutex (see the type
+    /// docs — the state is always consistent, so the poison flag is
+    /// noise, not evidence).
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, EventQueueState> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Enqueue a completion ping (never bounded, never rejected).
     fn send(&self, ev: BatcherEvent) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         if st.closed {
             return;
+        }
+        if matches!(ev, BatcherEvent::Job(_)) {
+            st.jobs += 1;
         }
         st.queue.push_back(ev);
         self.cv.notify_one();
     }
 
+    /// Enqueue a job unless the intake already holds `max_depth` jobs
+    /// (0 = unbounded).
+    fn send_job(&self, job: Job, max_depth: usize) -> SendJob {
+        let mut st = self.lock_state();
+        if st.closed {
+            return SendJob::Accepted; // job dropped; reply sender drops with it
+        }
+        if max_depth > 0 && st.jobs >= max_depth {
+            return SendJob::Rejected(job);
+        }
+        st.jobs += 1;
+        st.queue.push_back(BatcherEvent::Job(job));
+        self.cv.notify_one();
+        SendJob::Accepted
+    }
+
+    /// Jobs currently queued (the handles' admission-estimate input).
+    fn queued_jobs(&self) -> usize {
+        self.lock_state().jobs
+    }
+
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.lock_state().closed = true;
         self.cv.notify_all();
     }
 
     /// Next event; `None` once the queue is closed and drained.
     fn recv(&self) -> Option<BatcherEvent> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
-            if let Some(e) = st.queue.pop_front() {
+            if let Some(e) = st.pop() {
                 return Some(e);
             }
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
     /// Next event, waiting at most until `deadline`.
     fn recv_deadline(&self, deadline: Instant) -> Recv {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
-            if let Some(e) = st.queue.pop_front() {
+            if let Some(e) = st.pop() {
                 return Recv::Event(e);
             }
             if st.closed {
@@ -380,7 +610,10 @@ impl EventQueue {
             if now >= deadline {
                 return Recv::TimedOut;
             }
-            let (guard, _timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             st = guard;
         }
     }
@@ -418,7 +651,27 @@ pub struct ServerMetrics {
     /// version: the blue-green drain path (window delivered in full on
     /// the old version, replacement opened on the new one).
     pub sessions_drained_on_old: Counter,
+    /// Requests rejected at admission with [`MpError::Overloaded`]
+    /// (estimated wait blew the deadline, or the intake hit
+    /// `max_queue_depth`) — the load-shedding evidence.
+    pub jobs_shed: Counter,
+    /// Queued jobs expired with [`MpError::DeadlineExceeded`] before
+    /// dispatch (their deadline passed while they waited).
+    pub jobs_expired: Counter,
+    /// The live pipeline window size K (fixed `pipeline_depth`, or the
+    /// adaptive controller's current choice).
+    pub depth_current: Gauge,
+    /// Adaptive-depth controller movements (module docs, "Overload
+    /// control"): grows toward `pipeline_depth_max` under backlog ...
+    pub depth_raises: Counter,
+    /// ... and shrinks back toward 1 when the queue drains.
+    pub depth_shrinks: Counter,
     pub e2e_latency: LatencyRecorder,
+    /// Terminal queue time for **every** job: dispatched jobs record
+    /// enqueue→dispatch, shed/expired/flushed jobs record
+    /// enqueue→rejection — so the percentiles stay honest exactly when
+    /// the server is overloaded (a dispatch-only recorder under-reports
+    /// precisely the jobs that waited longest).
     pub queue_latency: LatencyRecorder,
     /// Time a batch spends inside its graph run (pipeline latency; in
     /// streaming mode, from submission into the session to resolution).
@@ -432,7 +685,7 @@ impl ServerMetrics {
         let inf = self.infer_latency.summary();
         let batches = self.batches.get().max(1);
         format!(
-            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={} prewarmed={} prewarm_hits={} swapped={} drained_on_old={}\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
+            "requests={} batches={} mean_batch={:.2} errors={} graph_runs={} trace_events={} sessions={} recycles={} session_errors={} prewarmed={} prewarm_hits={} swapped={} drained_on_old={} shed={} expired={} depth={} (+{}/-{})\n  e2e:      {}\n  queue:    {}\n  pipeline: {}",
             self.requests.get(),
             self.batches.get(),
             self.batched_requests.get() as f64 / batches as f64,
@@ -446,6 +699,11 @@ impl ServerMetrics {
             self.prewarm_hits.get(),
             self.configs_swapped.get(),
             self.sessions_drained_on_old.get(),
+            self.jobs_shed.get(),
+            self.jobs_expired.get(),
+            self.depth_current.get(),
+            self.depth_raises.get(),
+            self.depth_shrinks.get(),
             e2e,
             q,
             inf
@@ -461,6 +719,11 @@ impl ServerMetrics {
 pub struct PipelineServer {
     events: Arc<EventQueue>,
     metrics: Arc<ServerMetrics>,
+    /// Live overload-control signals shared with every handle.
+    admission: Arc<Admission>,
+    /// Client ids for reply-release FIFO domains: each handle minted by
+    /// [`PipelineServer::handle`] gets the next id.
+    next_client: AtomicU64,
     cfg: ServerConfig,
     worker: Option<std::thread::JoinHandle<()>>,
     /// The shared executor all pooled serving graphs submit to. Held so
@@ -476,31 +739,98 @@ pub struct PipelineServer {
     graph_name: String,
 }
 
-/// Cloneable submission handle.
+/// Cloneable submission handle. Every handle minted by
+/// [`PipelineServer::handle`] is a distinct **client** for reply
+/// ordering (module docs, "Overload control"): replies to one client
+/// are strictly FIFO, replies across clients release out of order.
+/// Clones share their parent's client id (and therefore its FIFO
+/// stream).
 #[derive(Clone)]
 pub struct ServerHandle {
     events: Arc<EventQueue>,
+    admission: Arc<Admission>,
+    metrics: Arc<ServerMetrics>,
     input_size: usize,
+    max_batch: usize,
+    max_queue_depth: usize,
+    request_deadline: Option<Duration>,
+    client: u64,
 }
 
 impl ServerHandle {
-    /// Submit a frame; returns a receiver for the detections.
+    /// Submit a frame under the server's default `request_deadline`;
+    /// returns a receiver for the detections.
     pub fn submit(&self, frame: &ImageFrame) -> mpsc::Receiver<MpResult<Detections>> {
+        self.submit_with_deadline(frame, self.request_deadline)
+    }
+
+    /// Submit a frame with an explicit completion deadline (overriding
+    /// the server's `request_deadline`; `None` exempts this request
+    /// from deadline-driven shedding and expiry). The overload-control
+    /// admission gate runs here, on the caller's thread: a request the
+    /// server estimates it cannot finish in time — or that would push
+    /// the intake past `max_queue_depth` — is answered immediately with
+    /// a typed [`MpError::Overloaded`] instead of being queued.
+    pub fn submit_with_deadline(
+        &self,
+        frame: &ImageFrame,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<MpResult<Detections>> {
         let (reply, rx) = mpsc::channel();
         let tensor = if frame.width == self.input_size && frame.height == self.input_size {
             frame.to_tensor()
         } else {
             frame.resized(self.input_size, self.input_size).to_tensor()
         };
+        let enqueued = Instant::now();
         let job = Job {
             tensor,
             reply,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: deadline.map(|d| enqueued + d),
+            client: self.client,
         };
-        // A closed (dropped) server discards the job; the reply sender
-        // drops with it and the receiver yields RecvError below.
-        self.events.send(BatcherEvent::Job(job));
+        // Deadline-aware admission: estimate the wait from live signals
+        // (queued jobs, in-flight batches, observed residence) and shed
+        // instead of queueing a request that would only time out.
+        if let Some(dl) = job.deadline {
+            let queued = self.events.queued_jobs();
+            let est = self.admission.estimated_wait_us(queued, self.max_batch);
+            if enqueued + Duration::from_micros(est) > dl {
+                self.reject(
+                    job,
+                    MpError::Overloaded {
+                        queued,
+                        estimated_wait_us: est,
+                    },
+                );
+                return rx;
+            }
+        }
+        // Hard intake bound: even deadline-less traffic cannot grow the
+        // queue without limit while the batcher is wedged.
+        if let SendJob::Rejected(job) = self.events.send_job(job, self.max_queue_depth) {
+            let queued = self.events.queued_jobs();
+            self.reject(
+                job,
+                MpError::Overloaded {
+                    queued,
+                    estimated_wait_us: 0,
+                },
+            );
+        }
+        // An accepted job on a closed (dropped) server was discarded;
+        // the reply sender drops with it and the receiver yields
+        // RecvError ("server stopped") below.
         rx
+    }
+
+    /// Answer a shed job with its typed rejection, recording its
+    /// terminal queue latency so overload shows up in the percentiles.
+    fn reject(&self, job: Job, e: MpError) {
+        self.metrics.jobs_shed.inc();
+        self.metrics.queue_latency.record(job.enqueued.elapsed());
+        reply_error(std::slice::from_ref(&job), &e, &self.metrics);
     }
 
     /// Submit and wait.
@@ -547,6 +877,11 @@ impl PipelineServer {
             ));
         }
         cfg.pipeline_depth = cfg.pipeline_depth.max(1);
+        if cfg.pipeline_depth_max > 0 {
+            // Adaptive depth starts at the configured depth, clamped
+            // into the controller's [1, max] range.
+            cfg.pipeline_depth = cfg.pipeline_depth.min(cfg.pipeline_depth_max);
+        }
         let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
         // Supported batch variants, ascending.
         let mut variants: Vec<usize> = Vec::new();
@@ -609,7 +944,10 @@ impl PipelineServer {
                     cfg.input_size,
                     cfg.min_score,
                     cfg.iou_threshold,
-                    cfg.session_input_queue.max(cfg.pipeline_depth),
+                    // The adaptive controller may deepen the window to
+                    // pipeline_depth_max; the bound must admit it all.
+                    cfg.session_input_queue
+                        .max(cfg.pipeline_depth.max(cfg.pipeline_depth_max)),
                 )?,
             };
             registry.register(&graph_name, &default_config)?;
@@ -626,6 +964,8 @@ impl PipelineServer {
 
         let metrics = Arc::new(ServerMetrics::default());
         let events = EventQueue::new();
+        let admission = Admission::new(cfg.pipeline_depth as u64);
+        metrics.depth_current.set(cfg.pipeline_depth as u64);
         // The pre-warmed standby slot: filled by the pool's refill
         // worker, drained by the batcher on session activation. The
         // refill hook holds only a Weak reference — a standby session
@@ -682,15 +1022,18 @@ impl PipelineServer {
         let m2 = Arc::clone(&metrics);
         let ev2 = Arc::clone(&events);
         let standby2 = Arc::clone(&standby);
+        let adm2 = Arc::clone(&admission);
         let cfg2 = cfg.clone();
         let pool2 = pool.clone();
         let worker = std::thread::Builder::new()
             .name("mp-serving-batcher".into())
-            .spawn(move || batcher_main(cfg2, engine, variants, pool2, ev2, standby2, m2))
+            .spawn(move || batcher_main(cfg2, engine, variants, pool2, ev2, standby2, adm2, m2))
             .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
         Ok(PipelineServer {
             events,
             metrics,
+            admission,
+            next_client: AtomicU64::new(0),
             cfg,
             worker: Some(worker),
             executor,
@@ -732,10 +1075,19 @@ impl PipelineServer {
         &self.pool
     }
 
+    /// Mint a submission handle. Each call is a new **client** for
+    /// reply-release ordering; clone the handle to share one client's
+    /// FIFO stream across threads.
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
             events: Arc::clone(&self.events),
+            admission: Arc::clone(&self.admission),
+            metrics: Arc::clone(&self.metrics),
             input_size: self.cfg.input_size,
+            max_batch: self.cfg.max_batch,
+            max_queue_depth: self.cfg.max_queue_depth,
+            request_deadline: self.cfg.request_deadline,
+            client: self.next_client.fetch_add(1, Ordering::Relaxed),
         }
     }
 
@@ -859,7 +1211,22 @@ struct PendingBatch {
     jobs: Vec<Job>,
     ticket: SessionTicket,
     submitted_at: Instant,
+    /// Submission sequence number — the per-client FIFO release token.
+    seq: u64,
+    /// Clients with rows in this batch (deduplicated): the batch may
+    /// release out of order only once it is *every* one of their oldest
+    /// unresolved batch.
+    clients: Vec<u64>,
+    /// Result parked by an out-of-order readiness scan:
+    /// [`SessionTicket::try_wait`] consumes the ticket's channel, so a
+    /// ready-but-unreleasable result must be cached here until the
+    /// client FIFOs let the batch go.
+    result: Option<MpResult<Packet>>,
 }
+
+/// Adaptive-depth hysteresis: the controller re-evaluates K only every
+/// this many delivered batches, so one odd sample cannot thrash it.
+const ADAPT_INTERVAL: u32 = 4;
 
 /// Streaming-mode batcher state: the live session, the K-deep pending
 /// window, and the pre-warmed standby slot (module docs, "Pipelined
@@ -871,9 +1238,17 @@ struct Streaming<'a> {
     pool: &'a GraphPool,
     metrics: &'a ServerMetrics,
     events: &'a Arc<EventQueue>,
+    admission: &'a Admission,
     session: Option<StreamingSession>,
     pending: VecDeque<PendingBatch>,
     standby: StandbySlot,
+    /// Next batch submission sequence number.
+    next_seq: u64,
+    /// client → seqs of its pending batches, oldest first: the
+    /// per-client FIFO release index (module docs, "Overload control").
+    client_fifo: HashMap<u64, VecDeque<u64>>,
+    /// Batches delivered since the adaptive controller last ran.
+    delivered_since_adapt: u32,
 }
 
 impl Streaming<'_> {
@@ -884,13 +1259,69 @@ impl Streaming<'_> {
             .map(|p| p.submitted_at + self.cfg.batch_timeout)
     }
 
-    /// Route one resolved batch's rows (or error) to its jobs. `Err`
-    /// means the session must die (timeout, graph error, malformed
-    /// rows); the caller decides how.
-    fn deliver(&self, batch: PendingBatch, result: MpResult<Packet>) -> MpResult<()> {
-        self.metrics
-            .infer_latency
-            .record(batch.submitted_at.elapsed());
+    /// The live pipeline window size K — the adaptive controller's
+    /// current choice, or the fixed `pipeline_depth` when adaptation is
+    /// disabled.
+    fn live_depth(&self) -> usize {
+        self.admission.depth.load(Ordering::Relaxed).max(1) as usize
+    }
+
+    /// The adaptive pipeline-depth controller (module docs, "Overload
+    /// control"): every [`ADAPT_INTERVAL`] delivered batches, compare
+    /// the queue-wait EWMA against the batch-residence EWMA. Backlog
+    /// dominating service time is the signature of a stage-imbalanced
+    /// graph with idle stages — grow K toward `pipeline_depth_max`;
+    /// once the queue drains well below residence, shrink back toward
+    /// the K=1 latency floor. No-op unless `pipeline_depth_max` is set.
+    fn adapt_depth(&mut self) {
+        if self.cfg.pipeline_depth_max == 0 {
+            return;
+        }
+        self.delivered_since_adapt += 1;
+        if self.delivered_since_adapt < ADAPT_INTERVAL {
+            return;
+        }
+        self.delivered_since_adapt = 0;
+        let queue = self.admission.queue_ewma_us.load(Ordering::Relaxed);
+        let infer = self.admission.infer_ewma_us.load(Ordering::Relaxed);
+        if infer == 0 {
+            return; // no residence evidence yet
+        }
+        let depth = self.admission.depth.load(Ordering::Relaxed);
+        if queue > infer && (depth as usize) < self.cfg.pipeline_depth_max {
+            self.admission.depth.store(depth + 1, Ordering::Relaxed);
+            self.metrics.depth_raises.inc();
+            self.metrics.depth_current.set(depth + 1);
+        } else if queue.saturating_mul(4) < infer && depth > 1 {
+            self.admission.depth.store(depth - 1, Ordering::Relaxed);
+            self.metrics.depth_shrinks.inc();
+            self.metrics.depth_current.set(depth - 1);
+        }
+    }
+
+    /// Route one resolved batch's rows (or error) to its jobs, fold its
+    /// residence into the admission EWMA, and unwind the release index.
+    /// `Err` means the session must die (timeout, graph error,
+    /// malformed rows); the caller decides how.
+    fn deliver(&mut self, batch: PendingBatch, result: MpResult<Packet>) -> MpResult<()> {
+        let residence = batch.submitted_at.elapsed();
+        self.metrics.infer_latency.record(residence);
+        Admission::ewma_update(&self.admission.infer_ewma_us, residence.as_micros() as u64);
+        self.admission.inflight.fetch_sub(1, Ordering::Relaxed);
+        // This batch is no longer any client's oldest unresolved.
+        for c in &batch.clients {
+            let emptied = match self.client_fifo.get_mut(c) {
+                Some(fifo) => {
+                    fifo.retain(|&s| s != batch.seq);
+                    fifo.is_empty()
+                }
+                None => false,
+            };
+            if emptied {
+                self.client_fifo.remove(c);
+            }
+        }
+        self.adapt_depth();
         let rows = batch.jobs.len();
         let outcome = result.and_then(|pkt| {
             let out = pkt.get::<Vec<Detections>>()?;
@@ -929,32 +1360,51 @@ impl Streaming<'_> {
         }
     }
 
-    /// Resolve fronts whose results already arrived (completion ping).
-    /// Strictly in submission order: a ready result behind an unready
-    /// front stays buffered in its ticket until the front resolves.
+    /// Resolve batches whose results already arrived (completion ping),
+    /// releasing **out of order under the per-client FIFO rule**: a
+    /// resolved batch is released as soon as it is the *oldest
+    /// unresolved* batch of every client with rows in it, so one slow
+    /// client's open window never delays another client's resolved
+    /// rows — while each client still observes strict FIFO. Results
+    /// that are ready but not yet releasable are parked in their
+    /// [`PendingBatch::result`] cache.
     fn resolve_ready(&mut self) {
+        // Park newly-landed results first: try_wait consumes the
+        // ticket's channel, so this scan is the only chance to see them.
+        for p in self.pending.iter_mut() {
+            if p.result.is_none() {
+                p.result = p.ticket.try_wait();
+            }
+        }
+        // Release every parked batch whose clients all have it as their
+        // oldest unresolved; repeat until a pass makes no progress (one
+        // release can unblock the same client's next batch).
         loop {
-            let result = match self.pending.front() {
-                Some(front) => match front.ticket.try_wait() {
-                    Some(r) => r,
-                    None => return,
-                },
-                None => return,
-            };
-            self.resolve_front_with(result);
+            let idx = (0..self.pending.len()).find(|&i| {
+                let p = &self.pending[i];
+                p.result.is_some()
+                    && p.clients
+                        .iter()
+                        .all(|c| self.client_fifo.get(c).and_then(|f| f.front()) == Some(&p.seq))
+            });
+            let Some(idx) = idx else { return };
+            let mut batch = self.pending.remove(idx).expect("index in range");
+            let result = batch.result.take().expect("parked result");
+            if self.deliver(batch, result).is_err() {
+                self.fail_session();
+                return;
+            }
         }
     }
 
     /// Block until the window's oldest batch resolves — or fail it (and
     /// the session) once `batch_timeout` after its submission elapses.
     fn resolve_front_blocking(&mut self) {
-        let result = match self.pending.front() {
-            Some(front) => {
-                let deadline = front.submitted_at + self.cfg.batch_timeout;
-                front
-                    .ticket
-                    .wait(deadline.saturating_duration_since(Instant::now()))
-            }
+        let result = match self.pending.front_mut() {
+            Some(front) => match front.result.take() {
+                Some(r) => r,
+                None => front.ticket.wait_until(front.submitted_at + self.cfg.batch_timeout),
+            },
             None => return,
         };
         self.resolve_front_with(result);
@@ -969,8 +1419,11 @@ impl Streaming<'_> {
         if let Some(session) = self.session.take() {
             retire_session(session, self.metrics, RetireReason::Error);
         }
-        while let Some(batch) = self.pending.pop_front() {
-            let result = batch.ticket.wait(self.cfg.batch_timeout);
+        while let Some(mut batch) = self.pending.pop_front() {
+            let result = match batch.result.take() {
+                Some(r) => r,
+                None => batch.ticket.wait(self.cfg.batch_timeout),
+            };
             let _ = self.deliver(batch, result);
         }
     }
@@ -1063,7 +1516,7 @@ impl Streaming<'_> {
     }
 
     /// Feed one formed batch into the window as the live session's next
-    /// timestamp. When the window already holds `pipeline_depth`
+    /// timestamp. When the window already holds [`Streaming::live_depth`]
     /// batches, the oldest resolves first (submission order); when the
     /// session reaches its timestamp threshold, the window drains and
     /// the session retires eagerly, so the swap happens off the next
@@ -1075,7 +1528,7 @@ impl Streaming<'_> {
             .collect();
         // Make room first: an erroring front retires the old session
         // before this batch binds to any session.
-        while self.pending.len() >= self.cfg.pipeline_depth {
+        while self.pending.len() >= self.live_depth() {
             self.resolve_front_blocking();
         }
         if let Err(e) = self.ensure_session() {
@@ -1084,11 +1537,25 @@ impl Streaming<'_> {
         }
         let session = self.session.as_ref().expect("session ensured");
         match session.submit(Packet::new(frames, Timestamp::UNSET)) {
-            Ok(ticket) => self.pending.push_back(PendingBatch {
-                jobs,
-                ticket,
-                submitted_at: Instant::now(),
-            }),
+            Ok(ticket) => {
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                let mut clients: Vec<u64> = jobs.iter().map(|j| j.client).collect();
+                clients.sort_unstable();
+                clients.dedup();
+                for &c in &clients {
+                    self.client_fifo.entry(c).or_default().push_back(seq);
+                }
+                self.admission.inflight.fetch_add(1, Ordering::Relaxed);
+                self.pending.push_back(PendingBatch {
+                    jobs,
+                    ticket,
+                    submitted_at: Instant::now(),
+                    seq,
+                    clients,
+                    result: None,
+                });
+            }
             Err(e) => {
                 // The run stopped between activation and push: fail this
                 // batch and the window; the next batch gets a fresh
@@ -1127,6 +1594,7 @@ fn batcher_main(
     pool: GraphPool,
     events: Arc<EventQueue>,
     standby: StandbySlot,
+    admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
 ) {
     let mut streaming = Streaming {
@@ -1136,9 +1604,13 @@ fn batcher_main(
         pool: &pool,
         metrics: &metrics,
         events: &events,
+        admission: &admission,
         session: None,
         pending: VecDeque::new(),
         standby,
+        next_seq: 0,
+        client_fifo: HashMap::new(),
+        delivered_since_adapt: 0,
     };
     loop {
         // First job of the next batch: sleep on the event intake,
@@ -1182,10 +1654,39 @@ fn batcher_main(
                 Recv::TimedOut | Recv::Closed => break,
             }
         }
+        // Expire queued jobs whose deadline passed before dispatch:
+        // they get the typed error instead of occupying a graph they
+        // can no longer benefit from. Terminal queue latency is
+        // recorded for every job, expired or dispatched.
+        let now = Instant::now();
+        let mut kept = Vec::with_capacity(batch.len());
+        for job in batch {
+            match job.deadline {
+                Some(dl) if now >= dl => {
+                    let waited = job.enqueued.elapsed();
+                    metrics.jobs_expired.inc();
+                    metrics.queue_latency.record(waited);
+                    reply_error(
+                        std::slice::from_ref(&job),
+                        &MpError::DeadlineExceeded {
+                            waited_us: waited.as_micros() as u64,
+                        },
+                        &metrics,
+                    );
+                }
+                _ => kept.push(job),
+            }
+        }
+        let mut batch = kept;
+        if batch.is_empty() {
+            continue;
+        }
         metrics.batches.inc();
         metrics.batched_requests.add(batch.len() as u64);
         for j in &batch {
-            metrics.queue_latency.record(j.enqueued.elapsed());
+            let waited = j.enqueued.elapsed();
+            metrics.queue_latency.record(waited);
+            Admission::ewma_update(&admission.queue_ewma_us, waited.as_micros() as u64);
         }
 
         match cfg.mode {
@@ -1194,6 +1695,7 @@ fn batcher_main(
                     .iter_mut()
                     .map(|j| std::mem::take(&mut j.tensor))
                     .collect();
+                admission.inflight.fetch_add(1, Ordering::Relaxed);
                 let t0 = Instant::now();
                 let result = run_batch(
                     &pool,
@@ -1203,7 +1705,10 @@ fn batcher_main(
                     cfg.batch_timeout,
                     &metrics,
                 );
-                metrics.infer_latency.record(t0.elapsed());
+                let residence = t0.elapsed();
+                admission.inflight.fetch_sub(1, Ordering::Relaxed);
+                metrics.infer_latency.record(residence);
+                Admission::ewma_update(&admission.infer_ewma_us, residence.as_micros() as u64);
                 match result {
                     Ok(per_request) => {
                         for (dets, job) in per_request.into_iter().zip(&batch) {
@@ -1217,5 +1722,130 @@ fn batcher_main(
             }
             ServingMode::Streaming => streaming.submit(batch),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_job(
+        client: u64,
+        deadline: Option<Instant>,
+    ) -> (Job, mpsc::Receiver<MpResult<Detections>>) {
+        let (reply, rx) = mpsc::channel();
+        (
+            Job {
+                tensor: vec![0.0; 4],
+                reply,
+                enqueued: Instant::now(),
+                deadline,
+                client,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn event_queue_bounds_jobs_but_not_pings() {
+        let q = EventQueue::new();
+        let (a, _rxa) = test_job(0, None);
+        let (b, _rxb) = test_job(0, None);
+        let (c, _rxc) = test_job(0, None);
+        assert!(matches!(q.send_job(a, 2), SendJob::Accepted));
+        assert!(matches!(q.send_job(b, 2), SendJob::Accepted));
+        assert_eq!(q.queued_jobs(), 2);
+        // Third job bounces off the cap...
+        assert!(matches!(q.send_job(c, 2), SendJob::Rejected(_)));
+        // ...but completion pings are control flow and never count.
+        q.send(BatcherEvent::Completed);
+        q.send(BatcherEvent::Completed);
+        assert_eq!(q.queued_jobs(), 2);
+        // Draining a job frees a slot.
+        assert!(q.recv().is_some());
+        assert!(matches!(q.recv(), Some(BatcherEvent::Job(_))));
+        assert_eq!(q.queued_jobs(), 1);
+        let (d, _rxd) = test_job(0, None);
+        assert!(matches!(q.send_job(d, 2), SendJob::Accepted));
+    }
+
+    #[test]
+    fn event_queue_zero_depth_is_unbounded() {
+        let q = EventQueue::new();
+        for _ in 0..64 {
+            let (j, _rx) = test_job(0, None);
+            assert!(matches!(q.send_job(j, 0), SendJob::Accepted));
+        }
+        assert_eq!(q.queued_jobs(), 64);
+    }
+
+    #[test]
+    fn event_queue_survives_poisoned_mutex() {
+        let q = EventQueue::new();
+        let (j, _rx) = test_job(0, None);
+        q.send(BatcherEvent::Job(j));
+        // Poison the mutex: panic while holding the guard on another
+        // thread (the exact cascade the batcher must shrug off).
+        let q2 = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.state.lock().unwrap();
+            panic!("poison the serving intake");
+        })
+        .join();
+        assert!(q.state.lock().is_err(), "mutex must actually be poisoned");
+        // Every entry point still works through the recovered guard.
+        assert_eq!(q.queued_jobs(), 1);
+        assert!(matches!(q.recv(), Some(BatcherEvent::Job(_))));
+        let (j2, _rx2) = test_job(0, None);
+        assert!(matches!(q.send_job(j2, 8), SendJob::Accepted));
+        match q.recv_deadline(Instant::now() + Duration::from_millis(100)) {
+            Recv::Event(BatcherEvent::Job(_)) => {}
+            _ => panic!("recv_deadline must deliver through a poisoned mutex"),
+        }
+        q.close();
+        assert!(q.recv().is_none());
+    }
+
+    #[test]
+    fn ewma_tracks_up_and_settles_down() {
+        let cell = AtomicU64::new(0);
+        Admission::ewma_update(&cell, 1000);
+        assert_eq!(cell.load(Ordering::Relaxed), 1000, "first sample seeds");
+        for _ in 0..200 {
+            Admission::ewma_update(&cell, 8000);
+        }
+        let up = cell.load(Ordering::Relaxed);
+        assert!(up > 7000, "EWMA converges up (got {up})");
+        for _ in 0..2000 {
+            Admission::ewma_update(&cell, 1);
+        }
+        assert_eq!(
+            cell.load(Ordering::Relaxed),
+            1,
+            "decay-by-at-least-1 settles all the way down"
+        );
+    }
+
+    #[test]
+    fn admission_estimate_needs_evidence() {
+        let adm = Admission::new(1);
+        // No batch has ever resolved: every request is admitted.
+        assert_eq!(adm.estimated_wait_us(10_000, 8), 0);
+    }
+
+    #[test]
+    fn admission_estimate_scales_with_backlog_and_depth() {
+        let adm = Admission::new(1);
+        Admission::ewma_update(&adm.infer_ewma_us, 1000);
+        // Empty queue, nothing in flight: just own residence.
+        assert_eq!(adm.estimated_wait_us(0, 8), 1000);
+        // 16 queued jobs at max_batch 8 = 2 batches ahead + residence.
+        assert_eq!(adm.estimated_wait_us(16, 8), 3000);
+        // In-flight batches count as ahead too.
+        adm.inflight.store(2, Ordering::Relaxed);
+        assert_eq!(adm.estimated_wait_us(16, 8), 5000);
+        // A deeper pipeline serves the backlog K× faster.
+        adm.depth.store(4, Ordering::Relaxed);
+        assert_eq!(adm.estimated_wait_us(16, 8), 2000);
     }
 }

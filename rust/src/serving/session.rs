@@ -154,6 +154,15 @@ impl SessionTicket {
         }
     }
 
+    /// Deadline-form [`SessionTicket::wait`]: block until this
+    /// timestamp's result arrives or `deadline` passes. The serving
+    /// layer's overload control waits on absolute per-batch deadlines
+    /// (`submitted_at + batch_timeout`), so the bound never drifts as
+    /// the wait is retried.
+    pub fn wait_until(&self, deadline: std::time::Instant) -> MpResult<Packet> {
+        self.wait(deadline.saturating_duration_since(std::time::Instant::now()))
+    }
+
     /// Block until this timestamp's result arrives (or the session
     /// dies / the timeout elapses). Channel-waited: no polling.
     pub fn wait(&self, timeout: Duration) -> MpResult<Packet> {

@@ -1,0 +1,479 @@
+//! Overload control at the serving boundary (serving module docs,
+//! "Overload control"): deadline-aware admission, load shedding,
+//! queue expiry, adaptive pipeline depth, and out-of-order reply
+//! release.
+//!
+//! * **shed vs queue** — a wedged gate stage plus a burst beyond
+//!   `max_queue_depth`: the excess is rejected *immediately* with a
+//!   typed [`MpError::Overloaded`], and every admitted job still
+//!   succeeds with exactly its own payload once the gate opens;
+//! * **queue expiry** — jobs whose `request_deadline` passes while they
+//!   wait behind a wedged stage are expired with a typed
+//!   [`MpError::DeadlineExceeded`] before ever touching a graph, while
+//!   already-dispatched jobs run to completion;
+//! * **admission estimate** — once batch-residence evidence exists, a
+//!   flood against a slow stage is shed at submit time (the estimate
+//!   blows the deadline) instead of queueing to time out;
+//! * **adaptive depth** — flooding a stage-imbalanced graph makes the
+//!   queue-wait EWMA dominate residence, so K climbs to
+//!   `pipeline_depth_max`; unloaded sequential traffic brings it back
+//!   to 1;
+//! * **OOO release** — a fast client's resolved batches are released
+//!   while an older, still-unresolved batch of a *different* client
+//!   holds the window open (per-client FIFO, out-of-order across
+//!   clients).
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use common::{payload_frame, recv_within, streaming_test_config};
+use mediapipe::prelude::*;
+use mediapipe::serving::pipeline::staged_pipeline_config;
+use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig};
+
+/// Register `config` under `name` in a fresh private registry and hand
+/// back the two `ServerConfig` fields that bind a server to it.
+fn register_test_graph(
+    name: &str,
+    config: GraphConfig,
+) -> (Option<String>, Option<Arc<GraphRegistry>>) {
+    let reg = Arc::new(GraphRegistry::new());
+    reg.register(name, &config).unwrap();
+    (Some(name.to_string()), Some(reg))
+}
+
+// ---------------------------------------------------------------------
+// Wedge gate: holds every timestamp until the test releases it, with an
+// entry counter so tests can wait (bounded) for the batcher to be
+// provably wedged inside a graph run. The statics are shared, so the
+// tests using them serialize on GATE_TESTS (tests in a binary run
+// concurrently).
+// ---------------------------------------------------------------------
+
+static GATE_TESTS: Mutex<()> = Mutex::new(());
+static GATE: OnceLock<(Mutex<i64>, Condvar)> = OnceLock::new();
+static ENTERED: AtomicUsize = AtomicUsize::new(0);
+
+fn gate() -> &'static (Mutex<i64>, Condvar) {
+    GATE.get_or_init(|| (Mutex::new(0), Condvar::new()))
+}
+
+fn reset_gate() {
+    *gate().0.lock().unwrap() = 0;
+    ENTERED.store(0, Ordering::SeqCst);
+}
+
+/// Allow timestamps `< n` through the hold gate.
+fn release_up_to(n: i64) {
+    let (mx, cv) = gate();
+    let mut released = mx.lock().unwrap();
+    if n > *released {
+        *released = n;
+    }
+    cv.notify_all();
+}
+
+/// Wait (bounded) until `n` timestamps reached the gate — i.e. the
+/// batcher dispatched them into the graph and is wedged behind them.
+fn wait_entered_at_least(n: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while ENTERED.load(Ordering::SeqCst) < n {
+        assert!(
+            Instant::now() < deadline,
+            "gate never saw {n} timestamps (got {})",
+            ENTERED.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+struct WedgeGate;
+
+impl Calculator for WedgeGate {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let ts = p.timestamp().raw();
+        let p = p.clone();
+        ENTERED.fetch_add(1, Ordering::SeqCst);
+        let (mx, cv) = gate();
+        let mut released = mx.lock().unwrap();
+        // Fail-safe bound: a buggy test must time out its assertions,
+        // not wedge the shared executor forever.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while *released <= ts {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = cv.wait_timeout(released, deadline - now).unwrap();
+            released = guard;
+        }
+        drop(released);
+        ctx.output(0, p);
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+/// Swallows any `Vec<Detections>` batch whose first row's score is
+/// ≥ 0.9 — that timestamp simply never produces output, so its ticket
+/// stays unresolved while later timestamps resolve (the deterministic
+/// "one slow client" for the OOO-release test). No statics needed.
+struct SwallowMarker;
+
+impl Calculator for SwallowMarker {
+    fn process(&mut self, ctx: &mut CalculatorContext) -> MpResult<ProcessOutcome> {
+        let p = ctx.input(0);
+        if p.is_empty() {
+            return Ok(ProcessOutcome::Continue);
+        }
+        let marked = p
+            .get::<Vec<mediapipe::perception::types::Detections>>()?
+            .first()
+            .and_then(|row| row.first())
+            .is_some_and(|d| d.score >= 0.9);
+        if !marked {
+            let p = p.clone();
+            ctx.output(0, p);
+        }
+        Ok(ProcessOutcome::Continue)
+    }
+}
+
+fn ensure_test_calculators() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let r = CalculatorRegistry::global();
+        r.register_fn(
+            "OverloadWedgeGateCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(WedgeGate)),
+        );
+        r.register_fn(
+            "OverloadSwallowMarkerCalculator",
+            |_| {
+                Ok(Contract::new()
+                    .input("", PacketType::Any)
+                    .output("", PacketType::Any)
+                    .with_timestamp_offset(0))
+            },
+            |_| Ok(Box::new(SwallowMarker)),
+        );
+    });
+}
+
+/// frames → echo (payload → score) → wedge gate → detections.
+fn wedged_pipeline() -> GraphConfig {
+    ensure_test_calculators();
+    GraphConfig::parse(
+        r#"
+input_stream: "frames"
+output_stream: "detections"
+node { calculator: "ServingEchoCalculator" input_stream: "FRAMES:frames" output_stream: "DETS:echoed" }
+node { calculator: "OverloadWedgeGateCalculator" input_stream: "echoed" output_stream: "detections" }
+"#,
+    )
+    .unwrap()
+}
+
+/// frames → echo → swallow-marker → detections.
+fn swallow_pipeline() -> GraphConfig {
+    ensure_test_calculators();
+    GraphConfig::parse(
+        r#"
+input_stream: "frames"
+output_stream: "detections"
+node { calculator: "ServingEchoCalculator" input_stream: "FRAMES:frames" output_stream: "DETS:echoed" }
+node { calculator: "OverloadSwallowMarkerCalculator" input_stream: "echoed" output_stream: "detections" }
+"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn burst_beyond_queue_cap_sheds_typed_and_admitted_jobs_all_succeed() {
+    let _serial = GATE_TESTS.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    reset_gate();
+    let (graph_name, registry) = register_test_graph("ovl_wedged", wedged_pipeline());
+    let server = PipelineServer::start(ServerConfig {
+        graph_name,
+        registry,
+        batch_timeout: Duration::from_secs(30),
+        max_queue_depth: 3,
+        ..streaming_test_config(1, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    // Job 0 is dispatched into the graph and wedges at the gate.
+    let r0 = h.submit(&payload_frame(0.1));
+    wait_entered_at_least(1, Duration::from_secs(10));
+    // Job 1 is picked up by the batcher, which then blocks making room
+    // in the full depth-1 window — the intake queue is now untended.
+    let r1 = h.submit(&payload_frame(0.2));
+    std::thread::sleep(Duration::from_millis(300));
+    // Fill the untended intake exactly to its cap...
+    let admitted_queued: Vec<_> = [0.3f32, 0.4, 0.5]
+        .iter()
+        .map(|&v| h.submit(&payload_frame(v)))
+        .collect();
+    // ...and burst past it: the excess is answered immediately with the
+    // typed rejection, on the submitting thread's clock, not after
+    // batch_timeout.
+    let t0 = Instant::now();
+    for i in 0..2 {
+        let rx = h.submit(&payload_frame(0.9));
+        let reply = recv_within(&rx, Duration::from_secs(2), "shed reply");
+        match reply {
+            Err(MpError::Overloaded { queued, .. }) => {
+                assert!(queued >= 3, "cap-full rejection reports the backlog")
+            }
+            other => panic!("burst job {i} expected typed Overloaded, got {other:?}"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "shedding must answer in micro/milliseconds, not queue"
+    );
+    assert_eq!(server.metrics().jobs_shed.get(), 2);
+    assert_eq!(server.metrics().jobs_expired.get(), 0);
+    // Open the gate: every admitted job completes with exactly its own
+    // payload (zero admitted jobs lost or blown).
+    release_up_to(i64::MAX);
+    let expected = [0.1f32, 0.2, 0.3, 0.4, 0.5];
+    let replies = [r0, r1].into_iter().chain(admitted_queued);
+    for (i, rx) in replies.enumerate() {
+        let dets = recv_within(&rx, Duration::from_secs(20), "admitted reply")
+            .unwrap_or_else(|e| panic!("admitted job {i} failed: {e}"));
+        assert!(
+            (dets[0].score - expected[i]).abs() < 1e-6,
+            "admitted job {i} got payload {}",
+            dets[0].score
+        );
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests.get(), 5, "every admitted job succeeded");
+    assert_eq!(m.errors.get(), 2, "only the shed burst errored");
+}
+
+#[test]
+fn queued_jobs_expire_when_their_deadline_passes_before_dispatch() {
+    let _serial = GATE_TESTS.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    reset_gate();
+    let (graph_name, registry) = register_test_graph("ovl_expiry", wedged_pipeline());
+    let server = PipelineServer::start(ServerConfig {
+        graph_name,
+        registry,
+        batch_timeout: Duration::from_secs(30),
+        request_deadline: Some(Duration::from_millis(400)),
+        max_queue_depth: 0,
+        ..streaming_test_config(1, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    // A is dispatched (wedged at the gate); B is in the batcher's hands
+    // blocking on the full window. Both passed their pre-dispatch
+    // deadline checks while fresh — no admission evidence exists yet
+    // (no batch has resolved), so the estimate sheds nothing.
+    let ra = h.submit(&payload_frame(0.1));
+    wait_entered_at_least(1, Duration::from_secs(10));
+    let rb = h.submit(&payload_frame(0.2));
+    std::thread::sleep(Duration::from_millis(150));
+    // C, D, E wait in the intake while the gate holds the server wedged
+    // well past their 400 ms deadlines.
+    let queued: Vec<_> = [0.3f32, 0.4, 0.5]
+        .iter()
+        .map(|&v| h.submit(&payload_frame(v)))
+        .collect();
+    std::thread::sleep(Duration::from_millis(700));
+    release_up_to(i64::MAX);
+    // Dispatched-before-expiry jobs run to completion (late but whole) —
+    // expiry only ever fires on jobs still waiting in the queue.
+    let a = recv_within(&ra, Duration::from_secs(20), "job A").expect("A was dispatched");
+    assert!((a[0].score - 0.1).abs() < 1e-6);
+    let b = recv_within(&rb, Duration::from_secs(20), "job B").expect("B was dispatched");
+    assert!((b[0].score - 0.2).abs() < 1e-6);
+    for (i, rx) in queued.into_iter().enumerate() {
+        let reply = recv_within(&rx, Duration::from_secs(20), "expired reply");
+        match reply {
+            Err(MpError::DeadlineExceeded { waited_us }) => assert!(
+                waited_us >= 400_000,
+                "queued job {i} expired after only {waited_us}µs"
+            ),
+            other => panic!("queued job {i} expected typed DeadlineExceeded, got {other:?}"),
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.jobs_expired.get(), 3);
+    assert_eq!(m.jobs_shed.get(), 0);
+    assert_eq!(m.errors.get(), 3);
+    assert_eq!(m.requests.get(), 2);
+}
+
+#[test]
+fn admission_estimate_sheds_flood_against_slow_stage() {
+    // One 50 ms busy stage; depth 1. Warm-up with deadline-less traffic
+    // builds residence evidence, then a deadlined flood: the first
+    // request(s) fit the 120 ms budget, but as the backlog grows the
+    // estimated wait blows the deadline and submission sheds instead of
+    // queueing jobs that could only time out.
+    let staged = staged_pipeline_config(&[50_000], Some(16)).unwrap();
+    let (graph_name, registry) = register_test_graph("ovl_slow", staged);
+    let server = PipelineServer::start(ServerConfig {
+        graph_name,
+        registry,
+        batch_timeout: Duration::from_secs(30),
+        ..streaming_test_config(1, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    for _ in 0..3 {
+        let dets = h
+            .submit_with_deadline(&payload_frame(0.5), None)
+            .recv()
+            .expect("server alive")
+            .expect("warmup succeeds");
+        assert!((dets[0].score - 0.5).abs() < 1e-6);
+    }
+    let deadline = Some(Duration::from_millis(250));
+    let replies: Vec<_> = (0..20)
+        .map(|_| h.submit_with_deadline(&payload_frame(0.7), deadline))
+        .collect();
+    let (mut ok, mut shed, mut expired) = (0u32, 0u32, 0u32);
+    for rx in replies {
+        match recv_within(&rx, Duration::from_secs(20), "flood reply") {
+            Ok(dets) => {
+                assert!((dets[0].score - 0.7).abs() < 1e-6);
+                ok += 1;
+            }
+            Err(MpError::Overloaded {
+                estimated_wait_us, ..
+            }) => {
+                assert!(
+                    estimated_wait_us > 250_000,
+                    "shed with an estimate ({estimated_wait_us}µs) inside the deadline"
+                );
+                shed += 1;
+            }
+            // Timing noise (a loaded machine stretching the busy stage)
+            // can age an admitted job past its deadline in queue — a
+            // legitimate overload answer, just not this test's subject.
+            Err(MpError::DeadlineExceeded { .. }) => expired += 1,
+            Err(other) => panic!("flood reply neither Ok nor typed overload: {other}"),
+        }
+    }
+    assert_eq!(ok + shed + expired, 20, "every flood job got a terminal answer");
+    assert!(ok >= 1, "a ~50 ms residence fits a 250 ms deadline at the front");
+    assert!(shed >= 10, "the backlog estimate must shed the flood's tail (shed {shed})");
+    let m = server.metrics();
+    assert_eq!(m.jobs_shed.get() as u32, shed);
+    assert_eq!(m.jobs_expired.get() as u32, expired);
+}
+
+#[test]
+fn adaptive_depth_rises_under_backlog_and_falls_back_when_load_stops() {
+    // Three equal 300 µs stages: at K=1 the graph serves one timestamp
+    // at a time; a flood builds queue wait far beyond batch residence,
+    // which is exactly the controller's raise signal. When the flood
+    // stops, sequential traffic drags the queue-wait EWMA down and the
+    // controller walks K back to 1.
+    let staged = staged_pipeline_config(&[300, 300, 300], Some(16)).unwrap();
+    let (graph_name, registry) = register_test_graph("ovl_adaptive", staged);
+    let server = PipelineServer::start(ServerConfig {
+        graph_name,
+        registry,
+        batch_timeout: Duration::from_secs(30),
+        pipeline_depth_max: 4,
+        executor_threads: 4,
+        ..streaming_test_config(1, 0)
+    })
+    .unwrap();
+    let h = server.handle();
+    assert_eq!(server.metrics().depth_current.get(), 1, "starts at pipeline_depth");
+    let replies: Vec<_> = (0..200).map(|_| h.submit(&payload_frame(0.4))).collect();
+    for (i, rx) in replies.into_iter().enumerate() {
+        recv_within(&rx, Duration::from_secs(30), "flood reply")
+            .unwrap_or_else(|e| panic!("flood job {i} failed: {e}"));
+    }
+    let m = server.metrics();
+    assert!(
+        m.depth_raises.get() >= 3,
+        "backlog must raise K to the max (raises={})",
+        m.depth_raises.get()
+    );
+    assert_eq!(
+        m.depth_current.get(),
+        4,
+        "K pegged at pipeline_depth_max under sustained backlog"
+    );
+    // Imbalance removed: unloaded sequential traffic (zero queueing)
+    // must walk K back down to 1 in bounded time.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while server.metrics().depth_current.get() > 1 {
+        assert!(
+            Instant::now() < deadline,
+            "adaptive depth never shrank back (depth={}, shrinks={})",
+            server.metrics().depth_current.get(),
+            server.metrics().depth_shrinks.get()
+        );
+        h.detect(&payload_frame(0.4)).expect("sequential detect");
+    }
+    assert!(server.metrics().depth_shrinks.get() >= 3);
+    assert_eq!(server.metrics().errors.get(), 0, "adaptation never fails a job");
+}
+
+#[test]
+fn slow_client_batch_does_not_delay_other_clients_resolved_replies() {
+    // Client S's marker payload is swallowed inside the graph — its
+    // timestamp never resolves. Client F's later batches resolve
+    // normally. Out-of-order release must hand F its replies while S's
+    // older batch still holds the window; S fails alone at
+    // batch_timeout.
+    let (graph_name, registry) = register_test_graph("ovl_swallow", swallow_pipeline());
+    let server = PipelineServer::start(ServerConfig {
+        graph_name,
+        registry,
+        batch_timeout: Duration::from_secs(3),
+        ..streaming_test_config(3, 0)
+    })
+    .unwrap();
+    let slow = server.handle();
+    let fast = server.handle();
+    let t0 = Instant::now();
+    let rs = slow.submit(&payload_frame(0.95)); // swallowed: never resolves
+    let rf1 = fast.submit(&payload_frame(0.1));
+    let rf2 = fast.submit(&payload_frame(0.2));
+    // F's replies arrive long before S's batch_timeout: the resolved
+    // batches released around the unresolved older one.
+    for (name, rx, want) in [("fast#1", &rf1, 0.1f32), ("fast#2", &rf2, 0.2)] {
+        let dets = recv_within(rx, Duration::from_secs(2), name)
+            .unwrap_or_else(|e| panic!("{name} failed behind the slow client: {e}"));
+        assert!((dets[0].score - want).abs() < 1e-6, "{name} got {}", dets[0].score);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "fast client waited out the slow client's batch_timeout"
+    );
+    assert!(
+        matches!(rs.try_recv(), Err(std::sync::mpsc::TryRecvError::Empty)),
+        "slow batch released early — it has no result to release"
+    );
+    // S's batch fails alone at batch_timeout and retires the session;
+    // the fast replies above were already out.
+    let reply = recv_within(&rs, Duration::from_secs(20), "slow reply");
+    assert!(reply.is_err(), "a swallowed timestamp cannot resolve Ok");
+    let m = server.metrics();
+    assert_eq!(m.requests.get(), 2, "both fast jobs succeeded");
+    assert_eq!(m.errors.get(), 1, "only the slow job failed");
+    assert_eq!(m.session_errors.get(), 1, "the wedged front retired its session");
+}
