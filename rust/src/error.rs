@@ -81,6 +81,15 @@ pub enum MpError {
         waited_us: u64,
     },
 
+    /// The worker process serving this request's session died (or was
+    /// drained) with the request in flight. The session has been retired
+    /// and rerouted to a healthy worker; the caller should retry — the
+    /// retry lands on the new worker.
+    WorkerLost {
+        /// The lost worker's address (as configured at the router).
+        worker: String,
+    },
+
     /// Runtime (model backend / artifact) failures.
     Runtime(String),
 
@@ -134,6 +143,10 @@ impl fmt::Display for MpError {
             MpError::DeadlineExceeded { waited_us } => write!(
                 f,
                 "request deadline exceeded after {waited_us}µs in queue"
+            ),
+            MpError::WorkerLost { worker } => write!(
+                f,
+                "worker '{worker}' lost with this request in flight; session rerouted — retry"
             ),
             MpError::Runtime(m) => write!(f, "runtime error: {m}"),
             MpError::Io(m) => write!(f, "io error: {m}"),
@@ -206,6 +219,11 @@ mod tests {
             MpError::DeadlineExceeded { waited_us: 9_000 }
         ));
         assert!(late.to_string().contains("9000"));
+        let lost = MpError::WorkerLost {
+            worker: "127.0.0.1:9901".into(),
+        };
+        assert!(matches!(lost.clone(), MpError::WorkerLost { .. }));
+        assert!(lost.to_string().contains("127.0.0.1:9901"));
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod serving;
 pub mod stream;
+pub mod sync;
 pub mod timestamp;
 pub mod tracer;
 pub mod visualizer;

@@ -10,6 +10,8 @@
 //!     --dispatch-mode sharded
 //! mediapipe serve --streaming --graph echo --swap-to echo_deep
 //! mediapipe serve --deadline-ms 50 --max-queue 256 --streaming --adaptive-depth 8
+//! mediapipe serve --streaming --worker 127.0.0.1:7071
+//! mediapipe route --workers 127.0.0.1:7071,127.0.0.1:7072 --requests 1000
 //! mediapipe list-calculators
 //! ```
 
@@ -20,7 +22,9 @@ use mediapipe::executor::DispatchMode;
 use mediapipe::prelude::*;
 use mediapipe::runtime::shared_engine;
 use mediapipe::serving::pipeline::staged_pipeline_config;
-use mediapipe::serving::{GraphRegistry, PipelineServer, ServerConfig, ServingMode};
+use mediapipe::serving::{
+    GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig, ServingMode, WorkerServer,
+};
 use mediapipe::visualizer;
 
 fn main() {
@@ -31,10 +35,11 @@ fn main() {
         Some("trace") => cmd_trace(&args[1..]),
         Some("visualize") => cmd_visualize(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("route") => cmd_route(&args[1..]),
         Some("list-calculators") => cmd_list(),
         _ => {
             eprintln!(
-                "usage: mediapipe <run|validate|trace|visualize|serve|list-calculators> ..."
+                "usage: mediapipe <run|validate|trace|visualize|serve|route|list-calculators> ..."
             );
             2
         }
@@ -319,6 +324,17 @@ fn cmd_serve(args: &[String]) -> i32 {
             registry: registry.clone(),
             ..Default::default()
         })?;
+        // --worker ADDR: instead of self-driving synthetic load, expose
+        // this server over a socket for a front-end router (see
+        // rust/src/serving "Distributed serving") and serve until
+        // killed.
+        if let Some(addr) = flag_value(args, "--worker") {
+            let worker = WorkerServer::start(addr, server)?;
+            println!("worker serving on {}", worker.local_addr());
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
         let run_wave = |n: usize, seed: u64| {
             let mut handles = Vec::new();
             for c in 0..clients {
@@ -358,6 +374,75 @@ fn cmd_serve(args: &[String]) -> i32 {
             "throughput: {:.1} req/s over {dt:?}",
             server.metrics().requests.get() as f64 / dt.as_secs_f64()
         );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// `mediapipe route --workers a,b,c`: front a pool of `serve --worker`
+/// processes with the session-sharding router and drive synthetic
+/// streaming load through it (see rust/src/serving "Distributed
+/// serving").
+fn cmd_route(args: &[String]) -> i32 {
+    let Some(list) = flag_value(args, "--workers") else {
+        eprintln!(
+            "usage: mediapipe route --workers host:port[,host:port...] \
+             [--requests N] [--sessions S] [--deadline-ms D]"
+        );
+        return 2;
+    };
+    let workers: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let requests: usize = flag_value(args, "--requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    let sessions: u64 = flag_value(args, "--sessions")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1);
+    let request_deadline = flag_value(args, "--deadline-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis);
+    let run = || -> MpResult<()> {
+        let mut cfg = RouterConfig::new(workers);
+        cfg.request_deadline = request_deadline;
+        let router = Router::start(cfg)?;
+        let mut world = mediapipe::perception::SyntheticWorld::new(32, 32, 2, 7)
+            .with_object_sizes(0.12, 0.2);
+        let mut inflight = std::collections::VecDeque::new();
+        let (mut ok, mut failed) = (0u64, 0u64);
+        let mut settle = |rx: std::sync::mpsc::Receiver<MpResult<_>>| {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(_)) => ok += 1,
+                _ => failed += 1,
+            }
+        };
+        let t0 = std::time::Instant::now();
+        for i in 0..requests {
+            world.step();
+            let frame = world.render();
+            inflight.push_back(router.submit(i as u64 % sessions, &frame));
+            // Keep a bounded window in flight so a slow worker applies
+            // backpressure here instead of flooding its intake queue.
+            if inflight.len() >= 64 {
+                settle(inflight.pop_front().expect("non-empty window"));
+            }
+        }
+        for rx in inflight {
+            settle(rx);
+        }
+        let dt = t0.elapsed();
+        println!("{ok} ok / {failed} failed over {dt:?}");
+        println!("{}", router.report());
         Ok(())
     };
     match run() {

@@ -3,6 +3,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::sync::lock_recover;
 use std::time::Duration;
 
 /// Monotonic counter.
@@ -113,7 +115,10 @@ impl LatencyRecorder {
     }
 
     pub fn record_us(&self, us: u64) {
-        let mut r = self.inner.lock().unwrap();
+        // lock_recover: a panic mid-record (serving thread dying) must not
+        // poison every later record/summary — the reservoir is consistent
+        // at every panic point.
+        let mut r = lock_recover(&self.inner);
         r.seen += 1;
         r.sum_us = r.sum_us.saturating_add(us);
         r.max_us = r.max_us.max(us);
@@ -134,12 +139,12 @@ impl LatencyRecorder {
 
     /// Samples currently retained (== total seen until the cap engages).
     pub fn retained(&self) -> usize {
-        self.inner.lock().unwrap().samples_us.len()
+        lock_recover(&self.inner).samples_us.len()
     }
 
     pub fn summary(&self) -> LatencySummary {
         let (mut v, seen, sum, max) = {
-            let r = self.inner.lock().unwrap();
+            let r = lock_recover(&self.inner);
             (r.samples_us.clone(), r.seen, r.sum_us, r.max_us)
         };
         if v.is_empty() {
@@ -159,7 +164,7 @@ impl LatencyRecorder {
     }
 
     pub fn clear(&self) {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         r.samples_us.clear();
         r.seen = 0;
         r.sum_us = 0;

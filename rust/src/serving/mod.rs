@@ -210,11 +210,54 @@
 //! end to end. Named pools ([`ServerConfig::executor_pool`]) are
 //! created once process-wide with the default mode; the knob only
 //! governs the private-pool branch.
+//!
+//! ## Distributed serving
+//!
+//! Everything above scales one *process*; [`wire`], [`worker`] and
+//! [`router`] scale it *out*. The deployment shape is a front-end
+//! router fanning streaming sessions out over worker processes:
+//!
+//! * **[`wire`]** is the hop itself — a dependency-free,
+//!   length-prefixed binary framing (`mediapipe` stays zero-dep; no
+//!   serde, no protobuf). The four overload/failure errors a
+//!   distributed caller must be able to *match on* —
+//!   [`MpError::Overloaded`], [`MpError::DeadlineExceeded`],
+//!   [`MpError::TimestampViolation`], [`MpError::WorkerLost`] — cross
+//!   the wire field-for-field; requests carry **explicit timestamps**
+//!   so streaming-session watermark semantics survive the hop (a
+//!   stale timestamp gets the same typed violation a local submission
+//!   would), and deadlines cross as *remaining budget*, re-anchored at
+//!   the worker, because wall clocks don't span processes.
+//! * **[`WorkerServer`]** (`mediapipe serve --worker <addr>`) exposes
+//!   one [`PipelineServer`] — registry, hot-swap, overload control and
+//!   all — over a socket. The adapter is event-driven, not
+//!   thread-per-request: a reader thread demuxes request frames into
+//!   per-wire-session [`ServerHandle`]s (one handle per session, so
+//!   each session is its own reply-FIFO client) and submits through
+//!   the callback seam ([`ServerHandle::submit_callback`]); replies
+//!   flow back through one writer thread per connection.
+//! * **[`Router`]** (`mediapipe route --workers a,b,c`) shards
+//!   sessions across workers by stable session hash, health-checks
+//!   them, and on worker death or drain **retires the affected
+//!   sessions and reroutes them to a healthy worker**: every in-flight
+//!   request on the lost worker resolves immediately with a typed
+//!   [`MpError::WorkerLost`] (never hangs), rerouted sessions keep
+//!   their monotone timestamps, and a rejoining worker is re-admitted
+//!   only after consecutive health-check passes. `workers_lost`,
+//!   `sessions_rerouted`, `workers_readmitted` and per-worker goodput
+//!   in [`RouterMetrics`] are the evidence; `tests/serving_distributed.rs`
+//!   kills a worker mid-window and asserts no request is ever shed
+//!   silently, and `benches/serving_distributed.rs` measures the
+//!   loopback hop tax and reroute latency against the single-process
+//!   baseline.
 
 pub mod pipeline;
 pub mod pool;
 pub mod registry;
+pub mod router;
 pub mod session;
+pub mod wire;
+pub mod worker;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -229,6 +272,7 @@ use crate::packet::Packet;
 use crate::perception::types::Detections;
 use crate::perception::ImageFrame;
 use crate::runtime::InferenceEngine;
+use crate::sync::lock_recover;
 use crate::timestamp::Timestamp;
 
 pub use pipeline::{BatchFrames, BatchInfo};
@@ -237,7 +281,10 @@ pub use registry::{
     detection_cascade_config, holistic_config, install_catalog, pose_landmark_config,
     GraphRegistry, GraphVersion, DETECTION_CASCADE, HOLISTIC, POSE_LANDMARK,
 };
+pub use router::{Router, RouterConfig, RouterMetrics};
 pub use session::{SessionStats, SessionTicket, StreamingSession};
+pub use wire::{Frame, WireReply, WireRequest, WorkerStats, WIRE_VERSION};
+pub use worker::WorkerServer;
 
 /// How batches meet graphs (module docs: isolation/throughput trade).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -372,9 +419,34 @@ impl Default for ServerConfig {
     }
 }
 
+/// Where a job's result goes: a channel for local callers
+/// ([`ServerHandle::submit`]), a callback for event-driven adapters
+/// ([`ServerHandle::submit_callback`]) that must not park a thread per
+/// request — the distributed [`worker`] demuxes thousands of wire
+/// requests onto reply frames this way.
+enum ReplyTo {
+    Channel(mpsc::Sender<MpResult<Detections>>),
+    Callback(Arc<dyn Fn(MpResult<Detections>) + Send + Sync>),
+}
+
+impl ReplyTo {
+    /// Deliver the result. A dropped channel receiver is the caller's
+    /// business (same as the old direct `send`); callbacks run on the
+    /// delivering thread (the batcher, or the rejecting submitter) and
+    /// must be cheap and non-blocking.
+    fn send(&self, r: MpResult<Detections>) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplyTo::Callback(cb) => cb(r),
+        }
+    }
+}
+
 struct Job {
     tensor: Vec<f32>,
-    reply: mpsc::Sender<MpResult<Detections>>,
+    reply: ReplyTo,
     enqueued: Instant,
     /// Completion deadline (admission shedding / queue expiry); `None`
     /// exempts the job from deadline-driven overload control.
@@ -439,15 +511,69 @@ impl Admission {
     /// batches per residence), plus its own residence. 0 until the
     /// first batch resolves: with no evidence, every request is
     /// admitted.
+    ///
+    /// Every step **saturates**. The inputs are unsynchronized live
+    /// counters read while the batcher mutates them — during shutdown
+    /// or a failure storm the snapshot can be wildly inconsistent (an
+    /// EWMA mid-spike, an in-flight count from a window that already
+    /// drained) — and a wrapped intermediate would turn "absurdly
+    /// overloaded" into "0µs, admit everything": the exact inversion
+    /// of what admission control is for. Saturating to `u64::MAX`
+    /// keeps the failure mode "shed too eagerly", which the deadline
+    /// machinery already handles.
     fn estimated_wait_us(&self, queued_jobs: usize, max_batch: usize) -> u64 {
         let residence = self.infer_ewma_us.load(Ordering::Relaxed);
         if residence == 0 {
             return 0;
         }
         let depth = self.depth.load(Ordering::Relaxed).max(1);
-        let batches_ahead =
-            queued_jobs.div_ceil(max_batch.max(1)) as u64 + self.inflight.load(Ordering::Relaxed);
-        batches_ahead.saturating_mul(residence) / depth + residence
+        let batches_ahead = (queued_jobs.div_ceil(max_batch.max(1)) as u64)
+            .saturating_add(self.inflight.load(Ordering::Relaxed));
+        (batches_ahead.saturating_mul(residence) / depth).saturating_add(residence)
+    }
+
+    /// Decrement the in-flight window count, saturating at 0. The
+    /// counter is incremented at submission and decremented at
+    /// delivery, but a session teardown racing shutdown can deliver a
+    /// flushed batch whose increment was already unwound — a plain
+    /// `fetch_sub` would wrap to `u64::MAX` and the admission estimate
+    /// above would shed every request until the server restarts.
+    fn dec_inflight(&self) {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Upper bound on the serving layer's configurable time knobs
+/// (`batch_timeout`, `max_wait`, `request_deadline`): one day. Values
+/// beyond it are configuration mistakes (`--deadline-ms` fat-fingered
+/// into nanoseconds territory), and pathologically large durations used
+/// to panic outright in `Instant + Duration` arithmetic — see
+/// [`saturating_deadline`].
+const MAX_TIME_BOUND: Duration = Duration::from_secs(24 * 60 * 60);
+
+/// `now + d`, saturating instead of panicking when `d` overflows the
+/// `Instant` domain. `Instant::add` panics on overflow — a caller
+/// passing `Duration::MAX` as a "no deadline, practically" sentinel
+/// used to take down the batcher thread (and with it every queued
+/// request). Far-future is semantically identical for every deadline
+/// site: halve until the addition lands.
+fn saturating_deadline(now: Instant, mut d: Duration) -> Instant {
+    loop {
+        if let Some(dl) = now.checked_add(d) {
+            return dl;
+        }
+        d /= 2;
     }
 }
 
@@ -777,6 +903,32 @@ impl ServerHandle {
         deadline: Option<Duration>,
     ) -> mpsc::Receiver<MpResult<Detections>> {
         let (reply, rx) = mpsc::channel();
+        self.submit_reply(frame, deadline, ReplyTo::Channel(reply));
+        // An accepted job on a closed (dropped) server was discarded;
+        // the reply sender drops with it and the receiver yields
+        // RecvError ("server stopped") to the caller.
+        rx
+    }
+
+    /// Submit a frame whose result is delivered through `on_result`
+    /// instead of a channel — the event-driven adapter seam (the
+    /// distributed [`worker`] routes wire requests here, one callback
+    /// per request, no parked thread per request). The callback runs
+    /// exactly once, on the batcher thread for served results or on the
+    /// submitting thread for admission rejections; it must be cheap and
+    /// non-blocking. Admission control (shedding, intake bound, queue
+    /// expiry) applies exactly as in [`ServerHandle::submit_with_deadline`].
+    pub fn submit_callback(
+        &self,
+        frame: &ImageFrame,
+        deadline: Option<Duration>,
+        on_result: impl Fn(MpResult<Detections>) + Send + Sync + 'static,
+    ) {
+        self.submit_reply(frame, deadline, ReplyTo::Callback(Arc::new(on_result)));
+    }
+
+    /// The shared submission core behind both reply shapes.
+    fn submit_reply(&self, frame: &ImageFrame, deadline: Option<Duration>, reply: ReplyTo) {
         let tensor = if frame.width == self.input_size && frame.height == self.input_size {
             frame.to_tensor()
         } else {
@@ -787,7 +939,9 @@ impl ServerHandle {
             tensor,
             reply,
             enqueued,
-            deadline: deadline.map(|d| enqueued + d),
+            // Saturating: a huge per-call deadline means "far future",
+            // not a batcher panic (see `saturating_deadline`).
+            deadline: deadline.map(|d| saturating_deadline(enqueued, d)),
             client: self.client,
         };
         // Deadline-aware admission: estimate the wait from live signals
@@ -796,7 +950,14 @@ impl ServerHandle {
         if let Some(dl) = job.deadline {
             let queued = self.events.queued_jobs();
             let est = self.admission.estimated_wait_us(queued, self.max_batch);
-            if enqueued + Duration::from_micros(est) > dl {
+            // Overflow-proof form of `enqueued + est > dl`: compare the
+            // estimate against the remaining slack. `None` slack means
+            // the deadline already passed at submission.
+            let blown = match dl.checked_duration_since(enqueued) {
+                Some(slack) => Duration::from_micros(est) > slack,
+                None => true,
+            };
+            if blown {
                 self.reject(
                     job,
                     MpError::Overloaded {
@@ -804,7 +965,7 @@ impl ServerHandle {
                         estimated_wait_us: est,
                     },
                 );
-                return rx;
+                return;
             }
         }
         // Hard intake bound: even deadline-less traffic cannot grow the
@@ -819,10 +980,6 @@ impl ServerHandle {
                 },
             );
         }
-        // An accepted job on a closed (dropped) server was discarded;
-        // the reply sender drops with it and the receiver yields
-        // RecvError ("server stopped") below.
-        rx
     }
 
     /// Answer a shed job with its typed rejection, recording its
@@ -875,6 +1032,24 @@ impl PipelineServer {
             return Err(MpError::Validation(
                 "ServerConfig::batch_timeout must be > 0".into(),
             ));
+        }
+        // Absurd time bounds are config mistakes (a fat-fingered
+        // `--deadline-ms`), rejected here rather than carried into
+        // deadline arithmetic — the request path additionally saturates
+        // (`saturating_deadline`) for per-call deadlines, which bypass
+        // this validation.
+        for (name, value) in [
+            ("batch_timeout", Some(cfg.batch_timeout)),
+            ("max_wait", Some(cfg.max_wait)),
+            ("request_deadline", cfg.request_deadline),
+        ] {
+            if let Some(v) = value {
+                if v > MAX_TIME_BOUND {
+                    return Err(MpError::Validation(format!(
+                        "ServerConfig::{name} of {v:?} exceeds the {MAX_TIME_BOUND:?} bound"
+                    )));
+                }
+            }
         }
         cfg.pipeline_depth = cfg.pipeline_depth.max(1);
         if cfg.pipeline_depth_max > 0 {
@@ -984,7 +1159,12 @@ impl PipelineServer {
                 // the replacement below lands on the new version (drop
                 // outside the lock — retiring a session drains a graph).
                 let stale = {
-                    let mut slot = slot.lock().unwrap();
+                    // lock_recover throughout the standby slot: a panic
+                    // mid-prewarm (a poisoned Open) must not wedge every
+                    // later activation behind a poisoned mutex — the
+                    // slot is a plain Option, consistent at every panic
+                    // point.
+                    let mut slot = lock_recover(&slot);
                     let superseded = match (slot.as_ref(), pool.current_version()) {
                         (Some(s), Ok(cur)) => !Arc::ptr_eq(&s.version(), &cur),
                         _ => false,
@@ -996,7 +1176,7 @@ impl PipelineServer {
                     }
                 };
                 drop(stale);
-                if slot.lock().unwrap().is_some() {
+                if lock_recover(&slot).is_some() {
                     return;
                 }
                 let Ok(graph) = pool.checkout() else { return };
@@ -1010,7 +1190,7 @@ impl PipelineServer {
                 if let Ok(session) =
                     StreamingSession::start(graph, "frames", "detections", side, max_timestamps)
                 {
-                    let mut slot = slot.lock().unwrap();
+                    let mut slot = lock_recover(&slot);
                     if slot.is_none() {
                         hook_metrics.sessions_prewarmed.inc();
                         *slot = Some(session);
@@ -1256,7 +1436,7 @@ impl Streaming<'_> {
     fn front_deadline(&self) -> Option<Instant> {
         self.pending
             .front()
-            .map(|p| p.submitted_at + self.cfg.batch_timeout)
+            .map(|p| saturating_deadline(p.submitted_at, self.cfg.batch_timeout))
     }
 
     /// The live pipeline window size K — the adaptive controller's
@@ -1307,7 +1487,7 @@ impl Streaming<'_> {
         let residence = batch.submitted_at.elapsed();
         self.metrics.infer_latency.record(residence);
         Admission::ewma_update(&self.admission.infer_ewma_us, residence.as_micros() as u64);
-        self.admission.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.admission.dec_inflight();
         // This batch is no longer any client's oldest unresolved.
         for c in &batch.clients {
             let emptied = match self.client_fifo.get_mut(c) {
@@ -1403,7 +1583,9 @@ impl Streaming<'_> {
         let result = match self.pending.front_mut() {
             Some(front) => match front.result.take() {
                 Some(r) => r,
-                None => front.ticket.wait_until(front.submitted_at + self.cfg.batch_timeout),
+                None => front
+                    .ticket
+                    .wait_until(saturating_deadline(front.submitted_at, self.cfg.batch_timeout)),
             },
             None => return,
         };
@@ -1471,7 +1653,7 @@ impl Streaming<'_> {
             }
         }
         if self.session.is_none() {
-            let standby = self.standby.lock().unwrap().take();
+            let standby = lock_recover(&self.standby).take();
             // A standby pre-opened before a swap is on the old version:
             // activating it would undo the cutover. Retire it and pay
             // the inline path once; the kicked refill worker rebuilds
@@ -1582,7 +1764,7 @@ impl Streaming<'_> {
     /// served traffic — no run evidence to record).
     fn shutdown(&mut self) {
         self.drain_and_retire(RetireReason::Shutdown);
-        self.standby.lock().unwrap().take();
+        lock_recover(&self.standby).take();
     }
 }
 
@@ -1646,7 +1828,7 @@ fn batcher_main(
             }
         };
         let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        let deadline = saturating_deadline(Instant::now(), cfg.max_wait);
         while batch.len() < cfg.max_batch {
             match events.recv_deadline(deadline) {
                 Recv::Event(BatcherEvent::Job(j)) => batch.push(j),
@@ -1706,7 +1888,7 @@ fn batcher_main(
                     &metrics,
                 );
                 let residence = t0.elapsed();
-                admission.inflight.fetch_sub(1, Ordering::Relaxed);
+                admission.dec_inflight();
                 metrics.infer_latency.record(residence);
                 Admission::ewma_update(&admission.infer_ewma_us, residence.as_micros() as u64);
                 match result {
@@ -1737,7 +1919,7 @@ mod tests {
         (
             Job {
                 tensor: vec![0.0; 4],
-                reply,
+                reply: ReplyTo::Channel(reply),
                 enqueued: Instant::now(),
                 deadline,
                 client,
@@ -1847,5 +2029,81 @@ mod tests {
         // A deeper pipeline serves the backlog K× faster.
         adm.depth.store(4, Ordering::Relaxed);
         assert_eq!(adm.estimated_wait_us(16, 8), 2000);
+    }
+
+    #[test]
+    fn admission_estimate_saturates_instead_of_wrapping() {
+        // Pathological counter snapshots (a shutdown race, a failure
+        // storm) must estimate "forever", never wrap to a small number
+        // that admits everything.
+        let adm = Admission::new(1);
+        adm.infer_ewma_us.store(u64::MAX, Ordering::Relaxed);
+        adm.inflight.store(u64::MAX, Ordering::Relaxed);
+        assert_eq!(adm.estimated_wait_us(usize::MAX, 1), u64::MAX);
+        // The final `+ residence` step is the historical wrap site:
+        // 3 × 2^62 fits in u64 (no mul saturation), but adding the
+        // residence once more crosses u64::MAX.
+        let adm = Admission::new(1);
+        adm.infer_ewma_us.store(1u64 << 62, Ordering::Relaxed);
+        adm.inflight.store(3, Ordering::Relaxed);
+        assert_eq!(adm.estimated_wait_us(0, 8), u64::MAX);
+        // max_batch = 0 is clamped, not a divide-by-zero.
+        let adm = Admission::new(1);
+        Admission::ewma_update(&adm.infer_ewma_us, 1000);
+        assert_eq!(adm.estimated_wait_us(3, 0), 4000);
+    }
+
+    #[test]
+    fn inflight_decrement_saturates_at_zero() {
+        let adm = Admission::new(1);
+        adm.inflight.store(1, Ordering::Relaxed);
+        adm.dec_inflight();
+        assert_eq!(adm.inflight.load(Ordering::Relaxed), 0);
+        // The unpaired decrement (flushed batch racing shutdown): stays
+        // at 0 instead of wrapping to u64::MAX and shedding everything.
+        adm.dec_inflight();
+        assert_eq!(adm.inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn saturating_deadline_survives_absurd_durations() {
+        let now = Instant::now();
+        // `now + Duration::MAX` panics with plain `Add`; the saturating
+        // form lands on some far-future instant instead.
+        let far = saturating_deadline(now, Duration::MAX);
+        assert!(far > now);
+        // Sane durations are exact.
+        let d = Duration::from_millis(5);
+        assert_eq!(saturating_deadline(now, d), now + d);
+        assert_eq!(saturating_deadline(now, Duration::ZERO), now);
+    }
+
+    #[test]
+    fn absurd_time_bounds_are_rejected_at_validation() {
+        // Beyond-MAX_TIME_BOUND knobs never reach deadline arithmetic.
+        let cfg = ServerConfig {
+            batch_timeout: MAX_TIME_BOUND + Duration::from_secs(1),
+            ..ServerConfig::default()
+        };
+        assert!(matches!(
+            PipelineServer::start(cfg),
+            Err(MpError::Validation(_))
+        ));
+        let cfg = ServerConfig {
+            request_deadline: Some(Duration::MAX),
+            ..ServerConfig::default()
+        };
+        assert!(matches!(
+            PipelineServer::start(cfg),
+            Err(MpError::Validation(_))
+        ));
+        let cfg = ServerConfig {
+            max_wait: Duration::MAX,
+            ..ServerConfig::default()
+        };
+        assert!(matches!(
+            PipelineServer::start(cfg),
+            Err(MpError::Validation(_))
+        ));
     }
 }

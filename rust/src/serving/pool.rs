@@ -66,6 +66,7 @@ use crate::executor::Executor;
 use crate::graph::config::GraphConfig;
 use crate::graph::Graph;
 use crate::serving::registry::{GraphRegistry, GraphVersion};
+use crate::sync::lock_recover;
 
 /// Total long-lived refill workers ever spawned by [`GraphPool`]s in
 /// this process. Tests use this to prove that checking in used graphs
@@ -155,7 +156,7 @@ impl PoolShared {
             return;
         };
         {
-            let mut ready = self.ready.lock().unwrap();
+            let mut ready = lock_recover(&self.ready);
             self.purge_stale_locked(&mut ready, &current);
             if ready.len() >= self.capacity {
                 return;
@@ -164,7 +165,7 @@ impl PoolShared {
         // Build outside the lock; ignore failures (the next checkout
         // surfaces them).
         if let Ok(fresh) = self.build_graph(&current) {
-            let mut ready = self.ready.lock().unwrap();
+            let mut ready = lock_recover(&self.ready);
             if ready.len() < self.capacity {
                 ready.push_back((current, fresh));
             }
@@ -181,7 +182,7 @@ impl PoolShared {
                 return;
             };
             {
-                let mut ready = self.ready.lock().unwrap();
+                let mut ready = lock_recover(&self.ready);
                 self.purge_stale_locked(&mut ready, &current);
                 if ready.len() >= self.capacity {
                     return;
@@ -189,7 +190,7 @@ impl PoolShared {
             }
             match self.build_graph(&current) {
                 Ok(fresh) => {
-                    let mut ready = self.ready.lock().unwrap();
+                    let mut ready = lock_recover(&self.ready);
                     // The version may have moved again while we built;
                     // only park the instance if it is still current
                     // (the next loop iteration re-resolves).
@@ -220,7 +221,7 @@ impl PoolShared {
     /// handle drops (the channel disconnects), so it never keeps a dead
     /// pool alive.
     fn ensure_refill_worker(shared: &Arc<PoolShared>) {
-        let mut tx = shared.refill_tx.lock().unwrap();
+        let mut tx = lock_recover(&shared.refill_tx);
         if tx.is_some() {
             return;
         }
@@ -237,7 +238,7 @@ impl PoolShared {
                     shared.refill_to_capacity();
                     // Clone the hook out so it runs without the
                     // registration lock (it may check graphs out).
-                    let hook = shared.followup.lock().unwrap().clone();
+                    let hook = lock_recover(&shared.followup).clone();
                     if let Some(hook) = hook {
                         hook(&GraphPool {
                             shared: Arc::clone(&shared),
@@ -328,7 +329,7 @@ impl GraphPool {
         });
         {
             let current = shared.source.resolve()?;
-            let mut ready = shared.ready.lock().unwrap();
+            let mut ready = lock_recover(&shared.ready);
             for _ in 0..shared.capacity {
                 ready.push_back((Arc::clone(&current), shared.build_graph(&current)?));
             }
@@ -344,7 +345,7 @@ impl GraphPool {
     pub fn checkout(&self) -> MpResult<PooledGraph> {
         let current = self.shared.source.resolve()?;
         let (purged, existing) = {
-            let mut ready = self.shared.ready.lock().unwrap();
+            let mut ready = lock_recover(&self.shared.ready);
             let purged = self.shared.purge_stale_locked(&mut ready, &current);
             (purged, ready.pop_front())
         };
@@ -371,7 +372,7 @@ impl GraphPool {
 
     /// Warm instances currently available.
     pub fn available(&self) -> usize {
-        self.shared.ready.lock().unwrap().len()
+        lock_recover(&self.shared.ready).len()
     }
 
     /// Target number of warm instances.
@@ -414,7 +415,7 @@ impl GraphPool {
     /// worker if needed; if the worker cannot be spawned (resource
     /// exhaustion) the hook simply never runs.
     pub fn set_refill_followup(&self, hook: impl Fn(&GraphPool) + Send + Sync + 'static) {
-        *self.shared.followup.lock().unwrap() = Some(Arc::new(hook));
+        *lock_recover(&self.shared.followup) = Some(Arc::new(hook));
         PoolShared::ensure_refill_worker(&self.shared);
         self.kick_refill();
     }
@@ -424,7 +425,7 @@ impl GraphPool {
     /// running. The serving layer calls this right after a registry
     /// swap so the warm set turns over without waiting for traffic.
     pub fn kick_refill(&self) {
-        let tx = self.shared.refill_tx.lock().unwrap();
+        let tx = lock_recover(&self.shared.refill_tx);
         if let Some(tx) = tx.as_ref() {
             let _ = tx.send(());
         }
@@ -478,7 +479,7 @@ impl Drop for PooledGraph {
                 Err(_) => false,
             };
             if still_current {
-                let mut ready = self.shared.ready.lock().unwrap();
+                let mut ready = lock_recover(&self.shared.ready);
                 if ready.len() < self.shared.capacity {
                     ready.push_back((Arc::clone(&self.version), graph));
                 }
@@ -496,7 +497,7 @@ impl Drop for PooledGraph {
         // request.
         drop(graph);
         if self.shared.async_refill.load(Ordering::Acquire) {
-            let tx = self.shared.refill_tx.lock().unwrap();
+            let tx = lock_recover(&self.shared.refill_tx);
             if let Some(tx) = tx.as_ref() {
                 if tx.send(()).is_ok() {
                     return;
@@ -726,6 +727,37 @@ node { calculator: "PassThroughCalculator" input_stream: "m2" output_stream: "ou
         hit_rx
             .recv_timeout(Duration::from_secs(10))
             .expect("followup did not rerun after a used check-in");
+    }
+
+    #[test]
+    fn checkout_survives_a_poisoned_ready_lock() {
+        // Satellite regression: every pool lock used to be
+        // `lock().unwrap()`, so one thread panicking while holding the
+        // ready list poisoned it and every later checkout panicked too
+        // — a single bad request killed the whole serving pool. The
+        // guards now recover ([`lock_recover`]): the ready list is a
+        // plain VecDeque, consistent at every panic point.
+        let pool = GraphPool::new(&chain_config(), 2).unwrap();
+        let shared = Arc::clone(&pool.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.ready.lock().unwrap();
+            panic!("poison the pool ready list");
+        })
+        .join();
+        assert!(
+            pool.shared.ready.lock().is_err(),
+            "mutex must actually be poisoned"
+        );
+        // Checkout, a full run, the used check-in and its synchronous
+        // refill all pass through the recovered guard.
+        let out = run_once(pool.checkout().unwrap(), &[1, 2], OUTPUT_TIMEOUT);
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(pool.available(), 2, "refill worked despite the poison");
+        // And subsequent checkouts keep succeeding.
+        let g = pool.checkout().unwrap();
+        assert_eq!(pool.available(), 1);
+        drop(g);
+        assert_eq!(pool.available(), 2);
     }
 
     #[test]

@@ -1,0 +1,634 @@
+//! The distributed-serving **front-end router**: shards streaming
+//! sessions across a pool of [`WorkerServer`](super::worker::WorkerServer)
+//! processes and survives losing any of them (`mediapipe route
+//! --workers a,b,c` — serving module docs, "Distributed serving").
+//!
+//! Placement is a **stable session shard**: a session id hashes
+//! (splitmix64) to a preferred worker index, scanning forward to the
+//! first healthy one. The same session therefore always lands on the
+//! same worker while the pool is stable — which is what makes
+//! per-session timestamp monotonicity enforceable at the worker — and
+//! only moves when its worker dies.
+//!
+//! Failure handling, in order of detection:
+//!
+//! * the **reader thread** on each worker connection sees the socket
+//!   die (EOF, reset, or a severed [`kill`](super::worker::WorkerServer::kill))
+//!   and marks the worker down;
+//! * marking a worker down **fails every in-flight request** on that
+//!   connection with a typed [`MpError::WorkerLost`] — callers get an
+//!   answer, never a hang — and **reroutes every session** assigned to
+//!   the dead worker to a healthy one (`workers_lost` /
+//!   `sessions_rerouted` metrics are the test evidence);
+//! * a rerouted session keeps its timestamp watermark: worker-side
+//!   session state is per-connection, so the new worker accepts the
+//!   continuing timestamps fresh;
+//! * the **health thread** pings live workers every interval (a missed
+//!   pong is treated as death) and probes dead ones; a dead worker is
+//!   re-admitted only after [`RouterConfig::health_passes`] consecutive
+//!   successful probes, so a flapping worker cannot bounce sessions.
+//!
+//! Submissions never block on a dead worker: a write failure marks the
+//! worker down and retries once on the session's (now rerouted) worker;
+//! with no healthy worker at all the request resolves immediately with
+//! a typed error through its reply channel.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{MpError, MpResult};
+use crate::metrics::Counter;
+use crate::perception::{Detections, ImageFrame};
+use crate::serving::wire::{
+    handshake, read_frame, write_frame, Frame, WireRequest, NO_DEADLINE,
+};
+use crate::sync::lock_recover;
+
+/// Router configuration (see module docs).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Worker addresses (`host:port`). Order defines shard indices.
+    pub workers: Vec<String>,
+    /// How often live workers are pinged and dead ones probed.
+    pub health_interval: Duration,
+    /// Consecutive successful probes before a dead worker is
+    /// re-admitted (anti-flap hysteresis).
+    pub health_passes: u32,
+    /// Per-attempt TCP connect budget.
+    pub connect_timeout: Duration,
+    /// Deadline budget stamped on every forwarded request (`None` =
+    /// no deadline). Crosses the wire as remaining budget and is
+    /// re-anchored at the worker.
+    pub request_deadline: Option<Duration>,
+}
+
+impl RouterConfig {
+    pub fn new(workers: Vec<String>) -> Self {
+        RouterConfig {
+            workers,
+            health_interval: Duration::from_millis(50),
+            health_passes: 2,
+            connect_timeout: Duration::from_millis(500),
+            request_deadline: None,
+        }
+    }
+}
+
+/// Router-level counters; per-worker goodput lives on the slots and is
+/// folded into [`Router::report`].
+#[derive(Default, Debug)]
+pub struct RouterMetrics {
+    /// Requests successfully written to a worker.
+    pub requests: Counter,
+    /// Times a worker transitioned healthy → dead.
+    pub workers_lost: Counter,
+    /// Sessions reassigned off a dead worker.
+    pub sessions_rerouted: Counter,
+    /// Times a dead worker passed enough probes to rejoin.
+    pub workers_readmitted: Counter,
+}
+
+/// One in-flight request's reply slot.
+struct Pending {
+    tx: mpsc::Sender<MpResult<Detections>>,
+}
+
+/// A live connection to one worker: single writer, reader-owned
+/// pending map, ping/pong bookkeeping for the health thread.
+struct Conn {
+    writer: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    last_ping: AtomicU64,
+    last_pong: AtomicU64,
+}
+
+enum SlotState {
+    Up(Arc<Conn>),
+    Down { passes: u32 },
+}
+
+struct WorkerSlot {
+    addr: String,
+    state: Mutex<SlotState>,
+    /// Requests this worker answered successfully (per-worker goodput).
+    goodput: Counter,
+}
+
+struct SessionState {
+    worker: usize,
+    next_ts: i64,
+}
+
+struct RouterShared {
+    cfg: RouterConfig,
+    workers: Vec<WorkerSlot>,
+    sessions: Mutex<HashMap<u64, SessionState>>,
+    next_id: AtomicU64,
+    next_nonce: AtomicU64,
+    stop: AtomicBool,
+    metrics: RouterMetrics,
+}
+
+/// The session-sharding front end (module docs).
+pub struct Router {
+    shared: Arc<RouterShared>,
+    health: Option<std::thread::JoinHandle<()>>,
+}
+
+/// splitmix64 finalizer — a stable, well-mixed shard hash with no
+/// dependence on `std::hash` internals (which may vary per process).
+fn shard_hash(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl Router {
+    /// Connect to the configured workers and start the health thread.
+    /// Workers that are unreachable at start are marked dead and picked
+    /// up by the health checker once they appear.
+    pub fn start(cfg: RouterConfig) -> MpResult<Router> {
+        if cfg.workers.is_empty() {
+            return Err(MpError::Validation("router: no workers configured".into()));
+        }
+        if cfg.health_passes == 0 {
+            return Err(MpError::Validation(
+                "router: health_passes must be >= 1".into(),
+            ));
+        }
+        let workers = cfg
+            .workers
+            .iter()
+            .map(|addr| WorkerSlot {
+                addr: addr.clone(),
+                state: Mutex::new(SlotState::Down { passes: 0 }),
+                goodput: Counter::default(),
+            })
+            .collect();
+        let shared = Arc::new(RouterShared {
+            cfg,
+            workers,
+            sessions: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            next_nonce: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            metrics: RouterMetrics::default(),
+        });
+        for idx in 0..shared.workers.len() {
+            // Best effort: a worker that is down at start is just Down.
+            let _ = establish(&shared, idx);
+        }
+        let health_shared = Arc::clone(&shared);
+        let health = std::thread::Builder::new()
+            .name("mp-router-health".into())
+            .spawn(move || health_main(&health_shared))
+            .map_err(|e| MpError::Runtime(format!("spawn router health: {e}")))?;
+        Ok(Router {
+            shared,
+            health: Some(health),
+        })
+    }
+
+    /// Submit one frame on a streaming session. Always returns a
+    /// receiver that resolves — with detections, a typed error from the
+    /// worker ([`MpError::Overloaded`], [`MpError::DeadlineExceeded`],
+    /// [`MpError::TimestampViolation`]), a typed [`MpError::WorkerLost`]
+    /// if the session's worker dies with the request in flight, or a
+    /// routing error if no worker is healthy. Never hangs.
+    pub fn submit(
+        &self,
+        session: u64,
+        frame: &ImageFrame,
+    ) -> mpsc::Receiver<MpResult<Detections>> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.submit_inner(session, frame, tx);
+        rx
+    }
+
+    pub fn metrics(&self) -> &RouterMetrics {
+        &self.shared.metrics
+    }
+
+    /// Per-worker goodput, in config order: `(addr, answered_ok)`.
+    pub fn goodput(&self) -> Vec<(String, u64)> {
+        self.shared
+            .workers
+            .iter()
+            .map(|w| (w.addr.clone(), w.goodput.get()))
+            .collect()
+    }
+
+    /// Is worker `idx` currently considered healthy?
+    pub fn worker_is_up(&self, idx: usize) -> bool {
+        self.shared.is_up(idx)
+    }
+
+    /// Poll until worker `idx` is healthy or `timeout` elapses; returns
+    /// whether it came up. (Bounded-wait helper for tests and drains.)
+    pub fn wait_worker_up(&self, idx: usize, timeout: Duration) -> bool {
+        let start = Instant::now();
+        loop {
+            if self.shared.is_up(idx) {
+                return true;
+            }
+            if start.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Human-readable metrics text (mirrors `ServerMetrics::report`).
+    pub fn report(&self) -> String {
+        let m = &self.shared.metrics;
+        let mut out = String::new();
+        out.push_str("router metrics\n");
+        out.push_str(&format!("  requests            {}\n", m.requests.get()));
+        out.push_str(&format!("  workers_lost        {}\n", m.workers_lost.get()));
+        out.push_str(&format!(
+            "  sessions_rerouted   {}\n",
+            m.sessions_rerouted.get()
+        ));
+        out.push_str(&format!(
+            "  workers_readmitted  {}\n",
+            m.workers_readmitted.get()
+        ));
+        for (idx, w) in self.shared.workers.iter().enumerate() {
+            let up = if self.shared.is_up(idx) { "up" } else { "down" };
+            out.push_str(&format!(
+                "  worker[{idx}] {addr:<21} {up:<4} goodput {good}\n",
+                addr = w.addr,
+                good = w.goodput.get()
+            ));
+        }
+        out
+    }
+
+    /// Stop the health thread and close every worker connection. (Also
+    /// runs on drop.)
+    pub fn stop(&mut self) {
+        if self.shared.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        if let Some(t) = self.health.take() {
+            let _ = t.join();
+        }
+        for slot in &self.shared.workers {
+            let state = lock_recover(&slot.state);
+            if let SlotState::Up(conn) = &*state {
+                let _ = write_frame(
+                    &mut *lock_recover(&conn.writer),
+                    &Frame::Goodbye {
+                        reason: "router shutdown".into(),
+                    },
+                );
+                let _ = lock_recover(&conn.writer).shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl RouterShared {
+    fn is_up(&self, idx: usize) -> bool {
+        matches!(&*lock_recover(&self.workers[idx].state), SlotState::Up(_))
+    }
+
+    fn up_conn(&self, idx: usize) -> Option<Arc<Conn>> {
+        match &*lock_recover(&self.workers[idx].state) {
+            SlotState::Up(conn) => Some(Arc::clone(conn)),
+            SlotState::Down { .. } => None,
+        }
+    }
+
+    /// First healthy worker scanning forward from the session's
+    /// preferred shard; `None` when the whole pool is dead.
+    fn first_healthy(&self, session: u64) -> Option<usize> {
+        let n = self.workers.len();
+        let start = (shard_hash(session) % n as u64) as usize;
+        (0..n).map(|i| (start + i) % n).find(|&idx| self.is_up(idx))
+    }
+
+    /// Fail everything in flight on `conn` with `WorkerLost`, flip the
+    /// slot Down, and reroute the dead worker's sessions. Idempotent
+    /// per connection: only the caller holding the currently-installed
+    /// `conn` performs the transition.
+    fn mark_down(&self, idx: usize, conn: &Arc<Conn>) {
+        {
+            let mut state = lock_recover(&self.workers[idx].state);
+            match &*state {
+                SlotState::Up(cur) if Arc::ptr_eq(cur, conn) => {
+                    *state = SlotState::Down { passes: 0 };
+                }
+                // Someone else already transitioned this connection (or
+                // a newer one is installed): nothing to do.
+                _ => return,
+            }
+        }
+        self.metrics.workers_lost.inc();
+        let addr = self.workers[idx].addr.clone();
+        let pending: Vec<Pending> = {
+            let mut map = lock_recover(&conn.pending);
+            map.drain().map(|(_, p)| p).collect()
+        };
+        for p in pending {
+            let _ = p.tx.send(Err(MpError::WorkerLost {
+                worker: addr.clone(),
+            }));
+        }
+        // Reroute the dead worker's sessions to healthy peers. The
+        // watermark (next_ts) travels with the session: worker-side
+        // session state is per-connection, so the new worker accepts
+        // the continuing timestamps.
+        let mut sessions = lock_recover(&self.sessions);
+        for (sid, st) in sessions.iter_mut() {
+            if st.worker == idx {
+                if let Some(new_idx) = self.first_healthy(*sid) {
+                    st.worker = new_idx;
+                    self.metrics.sessions_rerouted.inc();
+                }
+            }
+        }
+    }
+
+    fn submit_inner(
+        &self,
+        session: u64,
+        frame: &ImageFrame,
+        tx: mpsc::Sender<MpResult<Detections>>,
+    ) {
+        let deadline_us = match self.cfg.request_deadline {
+            Some(d) => d.as_micros().min(u128::from(u64::MAX)) as u64,
+            None => NO_DEADLINE,
+        };
+        // One reroute retry: a write failure marks the worker down
+        // (rerouting the session), then the second attempt goes to the
+        // session's new worker.
+        for _attempt in 0..2 {
+            let (idx, ts) = {
+                let mut sessions = lock_recover(&self.sessions);
+                let entry = match sessions.get_mut(&session) {
+                    Some(e) => e,
+                    None => match self.first_healthy(session) {
+                        Some(idx) => {
+                            sessions.insert(
+                                session,
+                                SessionState {
+                                    worker: idx,
+                                    next_ts: 0,
+                                },
+                            );
+                            sessions.get_mut(&session).expect("just inserted")
+                        }
+                        None => {
+                            let _ = tx.send(Err(MpError::Runtime(
+                                "router: no healthy workers".into(),
+                            )));
+                            return;
+                        }
+                    },
+                };
+                if !self.is_up(entry.worker) {
+                    match self.first_healthy(session) {
+                        Some(idx) => {
+                            if idx != entry.worker {
+                                entry.worker = idx;
+                                self.metrics.sessions_rerouted.inc();
+                            }
+                        }
+                        None => {
+                            let _ = tx.send(Err(MpError::Runtime(
+                                "router: no healthy workers".into(),
+                            )));
+                            return;
+                        }
+                    }
+                }
+                let ts = entry.next_ts;
+                entry.next_ts += 1;
+                (entry.worker, ts)
+            };
+            let conn = match self.up_conn(idx) {
+                Some(c) => c,
+                None => continue, // raced with mark_down; re-resolve
+            };
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            lock_recover(&conn.pending).insert(id, Pending { tx: tx.clone() });
+            let req = WireRequest {
+                id,
+                session,
+                timestamp: ts,
+                deadline_us,
+                width: frame.width as u32,
+                height: frame.height as u32,
+                channels: frame.channels as u32,
+                pixels: frame.data.to_vec(),
+            };
+            let wrote = {
+                let mut w = lock_recover(&conn.writer);
+                write_frame(&mut *w, &Frame::Request(req))
+                    .and_then(|()| w.flush().map_err(MpError::from))
+            };
+            match wrote {
+                Ok(()) => {
+                    // A write into a dying socket can still "succeed"
+                    // (buffered) after mark_down drained `pending` —
+                    // which would orphan this request. If the
+                    // connection is no longer the installed one, any
+                    // entry still in the map missed the drain: pull it
+                    // back and retry. (If it's gone, the drain caught
+                    // it and the caller already has WorkerLost.)
+                    let still_installed = match &*lock_recover(&self.workers[idx].state) {
+                        SlotState::Up(cur) => Arc::ptr_eq(cur, &conn),
+                        SlotState::Down { .. } => false,
+                    };
+                    if !still_installed && lock_recover(&conn.pending).remove(&id).is_some() {
+                        continue;
+                    }
+                    self.metrics.requests.inc();
+                    return;
+                }
+                Err(_) => {
+                    lock_recover(&conn.pending).remove(&id);
+                    self.mark_down(idx, &conn);
+                    // fall through to the retry
+                }
+            }
+        }
+        let _ = tx.send(Err(MpError::Runtime("router: no healthy workers".into())));
+    }
+}
+
+/// Open a connection to worker `idx`, spawn its reader, and flip the
+/// slot Up. Returns the error if the worker is unreachable (the slot
+/// stays Down). Takes the owning `Arc` because the reader thread needs
+/// its own handle back into the router.
+fn establish(shared: &Arc<RouterShared>, idx: usize) -> MpResult<()> {
+    let addr = &shared.workers[idx].addr;
+    let mut stream = connect(addr, shared.cfg.connect_timeout)?;
+    handshake(&mut stream)?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream
+        .try_clone()
+        .map_err(|e| MpError::Io(format!("router: clone {addr}: {e}")))?;
+    let conn = Arc::new(Conn {
+        writer: Mutex::new(stream),
+        pending: Mutex::new(HashMap::new()),
+        last_ping: AtomicU64::new(0),
+        last_pong: AtomicU64::new(0),
+    });
+    // Install before spawning the reader: if the connection dies
+    // instantly, the reader's mark_down must find this conn installed
+    // (otherwise its transition would be a no-op and the slot would
+    // stay Up with nobody reading it until the next missed pong).
+    *lock_recover(&shared.workers[idx].state) = SlotState::Up(Arc::clone(&conn));
+    if let Err(e) = spawn_reader(Arc::clone(shared), idx, Arc::clone(&conn), read_half) {
+        *lock_recover(&shared.workers[idx].state) = SlotState::Down { passes: 0 };
+        return Err(e);
+    }
+    Ok(())
+}
+
+fn spawn_reader(
+    shared: Arc<RouterShared>,
+    idx: usize,
+    conn: Arc<Conn>,
+    mut read_half: TcpStream,
+) -> MpResult<()> {
+    std::thread::Builder::new()
+        .name("mp-router-read".into())
+        .spawn(move || {
+            loop {
+                let frame = match read_frame(&mut read_half) {
+                    Ok(f) => f,
+                    Err(_) => break,
+                };
+                match frame {
+                    Frame::Reply(reply) => {
+                        let pending = lock_recover(&conn.pending).remove(&reply.id);
+                        if let Some(p) = pending {
+                            if reply.result.is_ok() {
+                                shared.workers[idx].goodput.inc();
+                            }
+                            let _ = p.tx.send(reply.result);
+                        }
+                    }
+                    Frame::HealthPong { nonce, .. } => {
+                        conn.last_pong.store(nonce, Ordering::Release);
+                    }
+                    Frame::Goodbye { .. } => break,
+                    _ => {}
+                }
+            }
+            shared.mark_down(idx, &conn);
+        })
+        .map_err(|e| MpError::Runtime(format!("spawn router reader: {e}")))?;
+    Ok(())
+}
+
+fn connect(addr: &str, timeout: Duration) -> MpResult<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(|e| MpError::Io(format!("router: resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| MpError::Io(format!("router: resolve {addr}: no address")))?;
+    TcpStream::connect_timeout(&sa, timeout)
+        .map_err(|e| MpError::Io(format!("router: connect {addr}: {e}")))
+}
+
+fn health_main(shared: &Arc<RouterShared>) {
+    while !shared.stop.load(Ordering::Acquire) {
+        std::thread::sleep(shared.cfg.health_interval);
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        for idx in 0..shared.workers.len() {
+            let up = shared.up_conn(idx);
+            match up {
+                Some(conn) => {
+                    // A ping from the previous round that never got its
+                    // pong means the worker (or path) is gone even if
+                    // the socket hasn't errored yet.
+                    let sent = conn.last_ping.load(Ordering::Acquire);
+                    let got = conn.last_pong.load(Ordering::Acquire);
+                    if sent != 0 && got < sent {
+                        shared.mark_down(idx, &conn);
+                        continue;
+                    }
+                    let nonce = shared.next_nonce.fetch_add(1, Ordering::Relaxed);
+                    conn.last_ping.store(nonce, Ordering::Release);
+                    let wrote = {
+                        let mut w = lock_recover(&conn.writer);
+                        write_frame(&mut *w, &Frame::HealthPing { nonce })
+                            .and_then(|()| w.flush().map_err(MpError::from))
+                    };
+                    if wrote.is_err() {
+                        shared.mark_down(idx, &conn);
+                    }
+                }
+                None => {
+                    // Dead: probe with a throwaway connection. Only a
+                    // full connect + handshake + ping/pong counts as a
+                    // pass.
+                    let passed = probe(
+                        &shared.workers[idx].addr,
+                        shared.cfg.connect_timeout,
+                        shared.cfg.health_interval.max(Duration::from_millis(50)),
+                    );
+                    let mut state = lock_recover(&shared.workers[idx].state);
+                    if let SlotState::Down { passes } = &mut *state {
+                        if passed {
+                            *passes += 1;
+                            if *passes >= shared.cfg.health_passes {
+                                drop(state);
+                                if establish(shared, idx).is_ok() {
+                                    shared.metrics.workers_readmitted.inc();
+                                } else {
+                                    *lock_recover(&shared.workers[idx].state) =
+                                        SlotState::Down { passes: 0 };
+                                }
+                            }
+                        } else {
+                            *passes = 0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One synchronous liveness probe: connect, handshake, ping, pong.
+fn probe(addr: &str, connect_timeout: Duration, read_timeout: Duration) -> bool {
+    let mut stream = match connect(addr, connect_timeout) {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    if stream.set_read_timeout(Some(read_timeout)).is_err() {
+        return false;
+    }
+    if handshake(&mut stream).is_err() {
+        return false;
+    }
+    if write_frame(&mut stream, &Frame::HealthPing { nonce: u64::MAX }).is_err() {
+        return false;
+    }
+    let _ = stream.flush();
+    loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::HealthPong { nonce, .. }) if nonce == u64::MAX => return true,
+            Ok(_) => continue,
+            Err(_) => return false,
+        }
+    }
+}

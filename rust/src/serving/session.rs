@@ -47,6 +47,7 @@ use crate::error::{MpError, MpResult};
 use crate::graph::{InputHandle, SidePackets};
 use crate::packet::Packet;
 use crate::serving::pool::PooledGraph;
+use crate::sync::lock_recover;
 use crate::timestamp::Timestamp;
 
 /// Called (outside any session lock on the waiter's side) every time a
@@ -72,7 +73,7 @@ impl Demux {
     /// twice cannot double-answer), then ping the notifier.
     fn deliver(&self, ts: i64, result: MpResult<Packet>) {
         let sender = {
-            let mut pending = self.pending.lock().unwrap();
+            let mut pending = lock_recover(&self.pending);
             let sender = pending.remove(&ts);
             if sender.is_some() {
                 // Count under the map lock (and before the send): a
@@ -92,7 +93,7 @@ impl Demux {
     /// Fail every still-pending ticket with `err`, then ping once.
     fn fail_all(&self, err: &MpError) {
         let drained: Vec<_> = {
-            let mut pending = self.pending.lock().unwrap();
+            let mut pending = lock_recover(&self.pending);
             let drained: Vec<_> = pending.drain().collect();
             self.resolved
                 .fetch_add(drained.len() as u64, Ordering::AcqRel);
@@ -108,7 +109,7 @@ impl Demux {
     }
 
     fn ping(&self) {
-        if let Some(n) = self.notify.lock().unwrap().as_ref() {
+        if let Some(n) = lock_recover(&self.notify).as_ref() {
             n();
         }
     }
@@ -245,7 +246,7 @@ impl StreamingSession {
     /// primitive the hook pokes instead of polling K channels. The hook
     /// runs on graph executor threads: it must not block.
     pub fn set_result_notifier(&self, f: impl Fn() + Send + Sync + 'static) {
-        *self.demux.notify.lock().unwrap() = Some(Box::new(f));
+        *lock_recover(&self.demux.notify) = Some(Box::new(f));
     }
 
     /// The config version the session's graph was built from, pinned
@@ -274,7 +275,7 @@ impl StreamingSession {
     /// Submit a request at the next free timestamp. The payload packet's
     /// own timestamp is ignored; it is re-stamped with the assigned one.
     pub fn submit(&self, payload: Packet) -> MpResult<SessionTicket> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let ts = Timestamp::new(st.next_ts);
         self.submit_locked(&mut st, ts, payload)
     }
@@ -284,7 +285,7 @@ impl StreamingSession {
     /// out-of-order submissions are rejected with a clean
     /// [`MpError::TimestampViolation`] (the session stays usable).
     pub fn submit_at(&self, ts: Timestamp, payload: Packet) -> MpResult<SessionTicket> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if !ts.is_normal() || ts.raw() < st.next_ts {
             return Err(MpError::TimestampViolation {
                 stream: self.input.stream().to_string(),
@@ -307,13 +308,13 @@ impl StreamingSession {
             ));
         }
         let (tx, rx) = mpsc::channel();
-        self.demux.pending.lock().unwrap().insert(ts.raw(), tx);
+        lock_recover(&self.demux.pending).insert(ts.raw(), tx);
         // Push-and-settle while holding the session lock: pushes enter
         // the stream strictly monotonically even under concurrent
         // submitters. The demux entry is registered first, so a result
         // can never arrive before its ticket exists.
         if let Err(e) = self.input.push_final(payload.at(ts)) {
-            let removed = self.demux.pending.lock().unwrap().remove(&ts.raw()).is_some();
+            let removed = lock_recover(&self.demux.pending).remove(&ts.raw()).is_some();
             if !removed {
                 // A concurrent run-death flush already failed (and
                 // counted) this ticket, but the submission itself is
@@ -330,7 +331,7 @@ impl StreamingSession {
 
     /// Requests submitted so far.
     pub fn timestamps_submitted(&self) -> u64 {
-        self.state.lock().unwrap().submitted
+        lock_recover(&self.state).submitted
     }
 
     /// Tickets resolved so far (results routed plus errors flushed).
@@ -344,7 +345,7 @@ impl StreamingSession {
 
     /// Tickets still waiting for their timestamp's result.
     pub fn pending_count(&self) -> usize {
-        self.demux.pending.lock().unwrap().len()
+        lock_recover(&self.demux.pending).len()
     }
 
     /// Fail every still-pending ticket with `err` without ending the
@@ -364,7 +365,7 @@ impl StreamingSession {
     /// timestamps? The owner should stop feeding it and, once the
     /// in-flight tickets resolve, retire it as a planned recycle.
     pub fn at_submission_threshold(&self) -> bool {
-        self.max_timestamps > 0 && self.state.lock().unwrap().submitted >= self.max_timestamps
+        self.max_timestamps > 0 && lock_recover(&self.state).submitted >= self.max_timestamps
     }
 
     /// Should the owner recycle this session (threshold reached or the
@@ -401,7 +402,7 @@ impl StreamingSession {
         // this drain, so every ticket resolves exactly once.
         Self::flush_pending(&self.demux, &result);
         let stats = SessionStats {
-            timestamps: self.state.lock().unwrap().submitted,
+            timestamps: lock_recover(&self.state).submitted,
             resolved: self.demux.resolved.load(Ordering::Acquire),
             trace_events: graph.tracer().snapshot().len(),
         };

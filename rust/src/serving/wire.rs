@@ -1,0 +1,767 @@
+//! The distributed-serving **wire format**: a dependency-free,
+//! length-prefixed binary framing for requests, replies, typed errors,
+//! and health/metrics frames (serving module docs, "Distributed
+//! serving").
+//!
+//! Every frame on the socket is `u32 length (LE)` followed by `length`
+//! body bytes; the body is a one-byte tag plus tag-specific fields, all
+//! little-endian, strings and pixel payloads length-prefixed. There is
+//! deliberately no self-describing schema layer — the format is
+//! versioned as a whole through the [`Frame::Hello`] handshake
+//! ([`WIRE_VERSION`]), matching the crate's zero-dependency rule.
+//!
+//! Three properties the rest of the distributed layer leans on:
+//!
+//! * **Typed errors round-trip.** [`MpError::Overloaded`],
+//!   [`MpError::DeadlineExceeded`], [`MpError::TimestampViolation`] and
+//!   [`MpError::WorkerLost`] cross the hop field-for-field, so a router
+//!   client can match on the variant exactly as a local caller would;
+//!   every other variant degrades to its display string (decoded as
+//!   [`MpError::Runtime`]).
+//! * **Explicit timestamps.** A [`WireRequest`] carries the session's
+//!   timestamp and the reply echoes it, so streaming-session watermark
+//!   semantics survive the hop: the worker enforces per-session
+//!   monotonicity on the wire timestamp and answers a stale or
+//!   duplicate one with the same typed `TimestampViolation` a local
+//!   [`crate::serving::StreamingSession`] submission would raise.
+//! * **Relative deadlines.** A request's deadline crosses the wire as a
+//!   *remaining budget* in µs, not an absolute instant — wall clocks
+//!   do not cross process boundaries. The worker re-anchors the budget
+//!   at arrival, which is conservative by exactly the transit time.
+//!
+//! Bounded intake at the codec layer: a declared frame length beyond
+//! [`MAX_FRAME_LEN`] is rejected before any allocation, so a garbage
+//! (or hostile) peer cannot make a worker allocate unbounded memory
+//! from four bytes of input.
+
+use std::io::{Read, Write};
+
+use crate::error::{MpError, MpResult};
+use crate::perception::types::{Detection, Detections, Rect};
+use crate::perception::ImageFrame;
+
+/// Version negotiated by the [`Frame::Hello`] handshake. Bump on any
+/// encoding change; peers refuse mismatched versions.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on one frame's body length (64 MiB): frames declaring more
+/// are rejected before allocation.
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Sentinel for "no deadline" in [`WireRequest::deadline_us`].
+pub const NO_DEADLINE: u64 = u64::MAX;
+
+/// One inference request crossing the wire (router → worker).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    /// Correlation id: the reply echoes it; unique per connection.
+    pub id: u64,
+    /// The streaming session this request belongs to. The worker keeps
+    /// one reply-FIFO client and one timestamp watermark per session.
+    pub session: u64,
+    /// The session's explicit timestamp for this request (strictly
+    /// monotone per session — the watermark the worker enforces).
+    pub timestamp: i64,
+    /// Remaining deadline budget in µs ([`NO_DEADLINE`] = none),
+    /// re-anchored at the worker on arrival.
+    pub deadline_us: u64,
+    /// The frame, raw: the worker resizes/tensorizes exactly as a local
+    /// submission would.
+    pub width: u32,
+    pub height: u32,
+    pub channels: u32,
+    pub pixels: Vec<f32>,
+}
+
+impl WireRequest {
+    /// Reassemble the request's image (validated: pixel count must
+    /// match the declared dimensions).
+    pub fn to_frame(&self) -> MpResult<ImageFrame> {
+        let expect = self.width as usize * self.height as usize * self.channels as usize;
+        if expect == 0 || self.pixels.len() != expect {
+            return Err(wire_err(format!(
+                "request {}: {}x{}x{} declares {expect} pixels, got {}",
+                self.id,
+                self.width,
+                self.height,
+                self.channels,
+                self.pixels.len()
+            )));
+        }
+        Ok(ImageFrame::new(
+            self.width as usize,
+            self.height as usize,
+            self.channels as usize,
+            self.pixels.clone(),
+        ))
+    }
+}
+
+/// One reply crossing the wire (worker → router), demuxed by `id`.
+#[derive(Clone, Debug)]
+pub struct WireReply {
+    pub id: u64,
+    pub session: u64,
+    /// Echo of the request's timestamp (watermark evidence).
+    pub timestamp: i64,
+    pub result: MpResult<Detections>,
+}
+
+/// Worker-side load evidence carried on every health pong.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Requests answered Ok over the worker's life.
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Requests shed at admission ([`MpError::Overloaded`]).
+    pub shed: u64,
+    /// Requests expired in queue ([`MpError::DeadlineExceeded`]).
+    pub expired: u64,
+    /// Live wire sessions across the worker's connections.
+    pub sessions: u64,
+}
+
+/// Everything that can cross the socket.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Connection handshake: each side sends its version first; a peer
+    /// speaking another version is refused.
+    Hello { version: u16 },
+    Request(WireRequest),
+    Reply(WireReply),
+    /// Router → worker liveness probe.
+    HealthPing { nonce: u64 },
+    /// Worker → router: echo the nonce plus load evidence.
+    HealthPong { nonce: u64, stats: WorkerStats },
+    /// Router → worker: ask for the full metrics report.
+    MetricsRequest,
+    /// Worker → router: the server's metrics report, verbatim.
+    MetricsReport { text: String },
+    /// Planned shutdown: the sender stops accepting new work; the
+    /// receiver retires and reroutes the affected sessions.
+    Goodbye { reason: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_REQUEST: u8 = 2;
+const TAG_REPLY: u8 = 3;
+const TAG_PING: u8 = 4;
+const TAG_PONG: u8 = 5;
+const TAG_METRICS_REQUEST: u8 = 6;
+const TAG_METRICS_REPORT: u8 = 7;
+const TAG_GOODBYE: u8 = 8;
+
+/// Typed-error tags inside a [`WireReply`] (module docs: these four
+/// round-trip field-for-field; everything else is a display string).
+const ERR_OVERLOADED: u8 = 0;
+const ERR_DEADLINE: u8 = 1;
+const ERR_TS_VIOLATION: u8 = 2;
+const ERR_WORKER_LOST: u8 = 3;
+const ERR_OTHER: u8 = 4;
+
+fn wire_err(msg: impl Into<String>) -> MpError {
+    MpError::Io(format!("wire: {}", msg.into()))
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(b: &mut Vec<u8>, v: i64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_error(b: &mut Vec<u8>, e: &MpError) {
+    match e {
+        MpError::Overloaded {
+            queued,
+            estimated_wait_us,
+        } => {
+            put_u8(b, ERR_OVERLOADED);
+            put_u64(b, *queued as u64);
+            put_u64(b, *estimated_wait_us);
+        }
+        MpError::DeadlineExceeded { waited_us } => {
+            put_u8(b, ERR_DEADLINE);
+            put_u64(b, *waited_us);
+        }
+        MpError::TimestampViolation {
+            stream,
+            packet_ts,
+            bound,
+        } => {
+            put_u8(b, ERR_TS_VIOLATION);
+            put_str(b, stream);
+            put_i64(b, *packet_ts);
+            put_i64(b, *bound);
+        }
+        MpError::WorkerLost { worker } => {
+            put_u8(b, ERR_WORKER_LOST);
+            put_str(b, worker);
+        }
+        other => {
+            put_u8(b, ERR_OTHER);
+            put_str(b, &other.to_string());
+        }
+    }
+}
+
+fn put_detections(b: &mut Vec<u8>, dets: &Detections) {
+    put_u32(b, dets.len() as u32);
+    for d in dets {
+        put_f32(b, d.bbox.x);
+        put_f32(b, d.bbox.y);
+        put_f32(b, d.bbox.w);
+        put_f32(b, d.bbox.h);
+        put_f32(b, d.score);
+        put_u32(b, d.class_id);
+        match d.track_id {
+            Some(t) => {
+                put_u8(b, 1);
+                put_u64(b, t);
+            }
+            None => put_u8(b, 0),
+        }
+    }
+}
+
+/// Encode `frame` as one length-prefixed wire frame.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::new();
+    match frame {
+        Frame::Hello { version } => {
+            put_u8(&mut body, TAG_HELLO);
+            put_u16(&mut body, *version);
+        }
+        Frame::Request(r) => {
+            put_u8(&mut body, TAG_REQUEST);
+            put_u64(&mut body, r.id);
+            put_u64(&mut body, r.session);
+            put_i64(&mut body, r.timestamp);
+            put_u64(&mut body, r.deadline_us);
+            put_u32(&mut body, r.width);
+            put_u32(&mut body, r.height);
+            put_u32(&mut body, r.channels);
+            put_u32(&mut body, r.pixels.len() as u32);
+            for p in &r.pixels {
+                put_f32(&mut body, *p);
+            }
+        }
+        Frame::Reply(r) => {
+            put_u8(&mut body, TAG_REPLY);
+            put_u64(&mut body, r.id);
+            put_u64(&mut body, r.session);
+            put_i64(&mut body, r.timestamp);
+            match &r.result {
+                Ok(dets) => {
+                    put_u8(&mut body, 1);
+                    put_detections(&mut body, dets);
+                }
+                Err(e) => {
+                    put_u8(&mut body, 0);
+                    put_error(&mut body, e);
+                }
+            }
+        }
+        Frame::HealthPing { nonce } => {
+            put_u8(&mut body, TAG_PING);
+            put_u64(&mut body, *nonce);
+        }
+        Frame::HealthPong { nonce, stats } => {
+            put_u8(&mut body, TAG_PONG);
+            put_u64(&mut body, *nonce);
+            put_u64(&mut body, stats.requests);
+            put_u64(&mut body, stats.errors);
+            put_u64(&mut body, stats.shed);
+            put_u64(&mut body, stats.expired);
+            put_u64(&mut body, stats.sessions);
+        }
+        Frame::MetricsRequest => {
+            put_u8(&mut body, TAG_METRICS_REQUEST);
+        }
+        Frame::MetricsReport { text } => {
+            put_u8(&mut body, TAG_METRICS_REPORT);
+            put_str(&mut body, text);
+        }
+        Frame::Goodbye { reason } => {
+            put_u8(&mut body, TAG_GOODBYE);
+            put_str(&mut body, reason);
+        }
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame (single `write_all`, so a mutex-serialized writer
+/// never interleaves frames).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> MpResult<()> {
+    let bytes = encode_frame(frame);
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked cursor over one frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> MpResult<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(wire_err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> MpResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> MpResult<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> MpResult<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> MpResult<u64> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn i64(&mut self) -> MpResult<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn f32(&mut self) -> MpResult<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self) -> MpResult<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| wire_err("string field is not UTF-8"))
+    }
+}
+
+fn get_error(c: &mut Cur<'_>) -> MpResult<MpError> {
+    Ok(match c.u8()? {
+        ERR_OVERLOADED => MpError::Overloaded {
+            queued: c.u64()? as usize,
+            estimated_wait_us: c.u64()?,
+        },
+        ERR_DEADLINE => MpError::DeadlineExceeded {
+            waited_us: c.u64()?,
+        },
+        ERR_TS_VIOLATION => MpError::TimestampViolation {
+            stream: c.str()?,
+            packet_ts: c.i64()?,
+            bound: c.i64()?,
+        },
+        ERR_WORKER_LOST => MpError::WorkerLost { worker: c.str()? },
+        ERR_OTHER => MpError::Runtime(c.str()?),
+        t => return Err(wire_err(format!("unknown error tag {t}"))),
+    })
+}
+
+fn get_detections(c: &mut Cur<'_>) -> MpResult<Detections> {
+    let n = c.u32()? as usize;
+    let mut dets = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let x = c.f32()?;
+        let y = c.f32()?;
+        let w = c.f32()?;
+        let h = c.f32()?;
+        let score = c.f32()?;
+        let class_id = c.u32()?;
+        let track_id = if c.u8()? != 0 { Some(c.u64()?) } else { None };
+        dets.push(Detection {
+            bbox: Rect::new(x, y, w, h),
+            score,
+            class_id,
+            track_id,
+        });
+    }
+    Ok(dets)
+}
+
+/// Decode one frame body (the bytes after the length prefix).
+pub fn decode_body(body: &[u8]) -> MpResult<Frame> {
+    let mut c = Cur { buf: body, pos: 0 };
+    let frame = match c.u8()? {
+        TAG_HELLO => Frame::Hello { version: c.u16()? },
+        TAG_REQUEST => {
+            let id = c.u64()?;
+            let session = c.u64()?;
+            let timestamp = c.i64()?;
+            let deadline_us = c.u64()?;
+            let width = c.u32()?;
+            let height = c.u32()?;
+            let channels = c.u32()?;
+            let n = c.u32()? as usize;
+            let mut pixels = Vec::with_capacity(n.min(MAX_FRAME_LEN / 4));
+            for _ in 0..n {
+                pixels.push(c.f32()?);
+            }
+            Frame::Request(WireRequest {
+                id,
+                session,
+                timestamp,
+                deadline_us,
+                width,
+                height,
+                channels,
+                pixels,
+            })
+        }
+        TAG_REPLY => {
+            let id = c.u64()?;
+            let session = c.u64()?;
+            let timestamp = c.i64()?;
+            let result = if c.u8()? != 0 {
+                Ok(get_detections(&mut c)?)
+            } else {
+                Err(get_error(&mut c)?)
+            };
+            Frame::Reply(WireReply {
+                id,
+                session,
+                timestamp,
+                result,
+            })
+        }
+        TAG_PING => Frame::HealthPing { nonce: c.u64()? },
+        TAG_PONG => Frame::HealthPong {
+            nonce: c.u64()?,
+            stats: WorkerStats {
+                requests: c.u64()?,
+                errors: c.u64()?,
+                shed: c.u64()?,
+                expired: c.u64()?,
+                sessions: c.u64()?,
+            },
+        },
+        TAG_METRICS_REQUEST => Frame::MetricsRequest,
+        TAG_METRICS_REPORT => Frame::MetricsReport { text: c.str()? },
+        TAG_GOODBYE => Frame::Goodbye { reason: c.str()? },
+        t => return Err(wire_err(format!("unknown frame tag {t}"))),
+    };
+    if c.pos != body.len() {
+        return Err(wire_err(format!(
+            "frame has {} trailing bytes",
+            body.len() - c.pos
+        )));
+    }
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame. An `Err` means the connection is
+/// unusable (clean EOF included — the peer hung up).
+pub fn read_frame(r: &mut impl Read) -> MpResult<Frame> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(wire_err(format!(
+            "declared frame length {len} exceeds the {MAX_FRAME_LEN} cap"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_body(&body)
+}
+
+/// Exchange `Hello` frames on a fresh connection (each side calls this
+/// once, sending first): refuses a peer speaking another version.
+pub fn handshake(stream: &mut (impl Read + Write)) -> MpResult<()> {
+    write_frame(stream, &Frame::Hello {
+        version: WIRE_VERSION,
+    })?;
+    match read_frame(stream)? {
+        Frame::Hello { version } if version == WIRE_VERSION => Ok(()),
+        Frame::Hello { version } => Err(wire_err(format!(
+            "peer speaks wire version {version}, this build speaks {WIRE_VERSION}"
+        ))),
+        _ => Err(wire_err("peer did not open with Hello")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f);
+        let mut cursor = std::io::Cursor::new(bytes);
+        read_frame(&mut cursor).expect("round trip decodes")
+    }
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            id: 7,
+            session: 42,
+            timestamp: 1337,
+            deadline_us: 50_000,
+            width: 2,
+            height: 2,
+            channels: 1,
+            pixels: vec![0.0, 0.25, 0.5, 1.0],
+        }
+    }
+
+    #[test]
+    fn request_round_trips_with_timestamp_and_deadline() {
+        let req = sample_request();
+        match round_trip(&Frame::Request(req.clone())) {
+            Frame::Request(got) => assert_eq!(got, req),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_reassembles_its_image() {
+        let req = sample_request();
+        let img = req.to_frame().unwrap();
+        assert_eq!((img.width, img.height, img.channels), (2, 2, 1));
+        assert_eq!(img.data.as_slice(), &[0.0, 0.25, 0.5, 1.0]);
+        // Mismatched pixel counts are rejected, not asserted on.
+        let mut bad = sample_request();
+        bad.pixels.pop();
+        assert!(bad.to_frame().is_err());
+    }
+
+    #[test]
+    fn ok_reply_round_trips_detections() {
+        let dets = vec![
+            Detection {
+                bbox: Rect::new(0.1, 0.2, 0.3, 0.4),
+                score: 0.9,
+                class_id: 3,
+                track_id: Some(77),
+            },
+            Detection::new(Rect::new(0.5, 0.5, 0.1, 0.1), 0.6, 0),
+        ];
+        let reply = Frame::Reply(WireReply {
+            id: 9,
+            session: 42,
+            timestamp: 5,
+            result: Ok(dets.clone()),
+        });
+        match round_trip(&reply) {
+            Frame::Reply(got) => {
+                assert_eq!(got.id, 9);
+                assert_eq!(got.session, 42);
+                assert_eq!(got.timestamp, 5);
+                assert_eq!(got.result.unwrap(), dets);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_errors_round_trip_field_for_field() {
+        let cases = vec![
+            MpError::Overloaded {
+                queued: 17,
+                estimated_wait_us: 42_000,
+            },
+            MpError::DeadlineExceeded { waited_us: 9_000 },
+            MpError::TimestampViolation {
+                stream: "session-42".into(),
+                packet_ts: 6,
+                bound: 7,
+            },
+            MpError::WorkerLost {
+                worker: "127.0.0.1:9901".into(),
+            },
+        ];
+        for err in cases {
+            let reply = Frame::Reply(WireReply {
+                id: 1,
+                session: 2,
+                timestamp: 3,
+                result: Err(err.clone()),
+            });
+            let got = match round_trip(&reply) {
+                Frame::Reply(r) => r.result.unwrap_err(),
+                other => panic!("wrong frame: {other:?}"),
+            };
+            match (&err, &got) {
+                (
+                    MpError::Overloaded {
+                        queued: a,
+                        estimated_wait_us: b,
+                    },
+                    MpError::Overloaded {
+                        queued: c,
+                        estimated_wait_us: d,
+                    },
+                ) => assert_eq!((a, b), (c, d)),
+                (
+                    MpError::DeadlineExceeded { waited_us: a },
+                    MpError::DeadlineExceeded { waited_us: b },
+                ) => assert_eq!(a, b),
+                (
+                    MpError::TimestampViolation {
+                        stream: s1,
+                        packet_ts: t1,
+                        bound: b1,
+                    },
+                    MpError::TimestampViolation {
+                        stream: s2,
+                        packet_ts: t2,
+                        bound: b2,
+                    },
+                ) => assert_eq!((s1, t1, b1), (s2, t2, b2)),
+                (MpError::WorkerLost { worker: a }, MpError::WorkerLost { worker: b }) => {
+                    assert_eq!(a, b)
+                }
+                (want, got) => panic!("variant changed over the wire: {want:?} -> {got:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn untyped_errors_degrade_to_their_display_string() {
+        let reply = Frame::Reply(WireReply {
+            id: 1,
+            session: 2,
+            timestamp: 3,
+            result: Err(MpError::Validation("bad config".into())),
+        });
+        match round_trip(&reply) {
+            Frame::Reply(r) => match r.result.unwrap_err() {
+                MpError::Runtime(msg) => assert!(msg.contains("bad config")),
+                other => panic!("expected Runtime, got {other:?}"),
+            },
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn health_and_metrics_frames_round_trip() {
+        let stats = WorkerStats {
+            requests: 1,
+            errors: 2,
+            shed: 3,
+            expired: 4,
+            sessions: 5,
+        };
+        match round_trip(&Frame::HealthPong { nonce: 99, stats }) {
+            Frame::HealthPong { nonce, stats: got } => {
+                assert_eq!(nonce, 99);
+                assert_eq!(got, stats);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match round_trip(&Frame::HealthPing { nonce: 4 }) {
+            Frame::HealthPing { nonce: 4 } => {}
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match round_trip(&Frame::MetricsReport {
+            text: "requests=5".into(),
+        }) {
+            Frame::MetricsReport { text } => assert_eq!(text, "requests=5"),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert!(matches!(
+            round_trip(&Frame::MetricsRequest),
+            Frame::MetricsRequest
+        ));
+        match round_trip(&Frame::Goodbye {
+            reason: "drain".into(),
+        }) {
+            Frame::Goodbye { reason } => assert_eq!(reason, "drain"),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_garbage_frames_are_rejected() {
+        // Truncated body: declared length longer than the bytes present.
+        let mut bytes = encode_frame(&Frame::HealthPing { nonce: 1 });
+        bytes.truncate(bytes.len() - 2);
+        let mut cursor = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cursor).is_err());
+        // Unknown tag.
+        let body = vec![0xEEu8, 0, 0, 0];
+        assert!(decode_body(&body).is_err());
+        // Trailing bytes after a valid frame body.
+        let mut body = encode_frame(&Frame::MetricsRequest)[4..].to_vec();
+        body.push(0);
+        assert!(decode_body(&body).is_err());
+        // Oversized declared length is refused before allocation.
+        let mut huge = Vec::new();
+        put_u32(&mut huge, (MAX_FRAME_LEN + 1) as u32);
+        let mut cursor = std::io::Cursor::new(huge);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn handshake_agrees_on_version() {
+        // Two in-memory peers: a duplex pair built from two buffers.
+        // Cursor-based: write each side's Hello, then feed it to the
+        // other side's reader.
+        let hello = encode_frame(&Frame::Hello {
+            version: WIRE_VERSION,
+        });
+        let mut cursor = std::io::Cursor::new(hello);
+        match read_frame(&mut cursor).unwrap() {
+            Frame::Hello { version } => assert_eq!(version, WIRE_VERSION),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let stale = encode_frame(&Frame::Hello {
+            version: WIRE_VERSION + 1,
+        });
+        let mut cursor = std::io::Cursor::new(stale);
+        match read_frame(&mut cursor).unwrap() {
+            Frame::Hello { version } => assert_ne!(version, WIRE_VERSION),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! The distributed-serving **worker**: one [`PipelineServer`] exposed
+//! over a socket (`mediapipe serve --worker <addr>` — serving module
+//! docs, "Distributed serving").
+//!
+//! A [`WorkerServer`] wraps a fully-configured local server — graph
+//! registry, hot-swap, overload control, the lot — and speaks the
+//! [`super::wire`] protocol to any number of router connections. The
+//! adapter is **event-driven**, not thread-per-request:
+//!
+//! * one **reader thread per connection** demuxes request frames to
+//!   per-wire-session [`ServerHandle`]s (each session gets its own
+//!   handle, i.e. its own reply-FIFO client) and submits through
+//!   [`ServerHandle::submit_callback`] — no thread parks per request;
+//! * completions are delivered by the batcher into the callback, which
+//!   enqueues a reply frame onto the connection's single **writer
+//!   thread** (frames never interleave: one writer owns the socket's
+//!   write half);
+//! * **watermark semantics survive the hop**: the worker enforces
+//!   strict per-session timestamp monotonicity on the wire timestamp
+//!   and answers a stale or duplicate one with the same typed
+//!   [`MpError::TimestampViolation`] a local
+//!   [`StreamingSession::submit_at`](crate::serving::StreamingSession::submit_at)
+//!   would raise — before the request touches the server;
+//! * wire deadlines arrive as remaining budget and are re-anchored
+//!   here, flowing into the server's admission control unchanged: an
+//!   overloaded worker answers with the same typed
+//!   [`MpError::Overloaded`] / [`MpError::DeadlineExceeded`] a local
+//!   caller would see, and the router forwards them field-for-field.
+//!
+//! Health pings are answered from live [`ServerMetrics`] counters plus
+//! the worker's own session gauge, so the router's health checker gets
+//! load evidence for free with every liveness probe.
+//!
+//! [`WorkerServer::kill`] / [`WorkerServer::revive`] simulate process
+//! death without releasing the port (closing a bound listener parks the
+//! port in TIME_WAIT, which would make a same-address restart flaky in
+//! tests): kill severs every connection mid-flight and refuses new
+//! ones — observably identical to a crash from the router's side —
+//! and revive lets the health checker re-admit the worker.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{MpError, MpResult};
+use crate::serving::wire::{
+    handshake, read_frame, write_frame, Frame, WireReply, WorkerStats, NO_DEADLINE,
+};
+use crate::serving::{PipelineServer, ServerHandle};
+use crate::sync::lock_recover;
+
+/// Per-wire-session state on one connection: its own [`ServerHandle`]
+/// (a distinct reply-FIFO client) and the timestamp watermark.
+struct SessionEntry {
+    handle: ServerHandle,
+    /// Highest timestamp accepted so far (`i64::MIN` = none yet);
+    /// requests at or below it are rejected with a typed
+    /// [`MpError::TimestampViolation`].
+    last_ts: i64,
+}
+
+struct WorkerShared {
+    server: PipelineServer,
+    /// Accept thread should exit.
+    stop: AtomicBool,
+    /// New connections admitted? [`WorkerServer::kill`] clears this (and
+    /// severs live connections); [`WorkerServer::revive`] restores it.
+    accepting: AtomicBool,
+    /// Read-half clones of every live connection, for forced severing.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_conn: AtomicU64,
+    /// Live wire sessions across all connections (health-pong gauge).
+    sessions: AtomicU64,
+}
+
+impl WorkerShared {
+    fn stats(&self) -> WorkerStats {
+        let m = self.server.metrics();
+        WorkerStats {
+            requests: m.requests.get(),
+            errors: m.errors.get(),
+            shed: m.jobs_shed.get(),
+            expired: m.jobs_expired.get(),
+            sessions: self.sessions.load(Ordering::Relaxed),
+        }
+    }
+
+    fn drop_conn(&self, id: u64) {
+        lock_recover(&self.conns).retain(|(cid, _)| *cid != id);
+    }
+
+    /// Sever every live connection (readers and writers see the socket
+    /// die and exit; routers see EOF, exactly like a crash).
+    fn sever_all(&self) {
+        let conns: Vec<_> = lock_recover(&self.conns).drain(..).collect();
+        for (_, stream) in conns {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// A [`PipelineServer`] listening on a socket (module docs).
+pub struct WorkerServer {
+    shared: Arc<WorkerShared>,
+    addr: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `server` over it.
+    pub fn start(addr: &str, server: PipelineServer) -> MpResult<WorkerServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| MpError::Io(format!("worker: bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| MpError::Io(format!("worker: local_addr: {e}")))?;
+        let shared = Arc::new(WorkerShared {
+            server,
+            stop: AtomicBool::new(false),
+            accepting: AtomicBool::new(true),
+            conns: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            sessions: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("mp-worker-accept".into())
+            .spawn(move || accept_main(listener, accept_shared))
+            .map_err(|e| MpError::Runtime(format!("spawn worker accept: {e}")))?;
+        Ok(WorkerServer {
+            shared,
+            addr: local,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves `:0` binds to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The wrapped server's metrics (the same counters health pongs
+    /// report).
+    pub fn server(&self) -> &PipelineServer {
+        &self.shared.server
+    }
+
+    /// Live wire sessions across all connections.
+    pub fn live_sessions(&self) -> u64 {
+        self.shared.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Simulate process death (module docs): sever every connection
+    /// mid-flight and refuse new ones, keeping the port bound so
+    /// [`WorkerServer::revive`] can bring the same address back.
+    pub fn kill(&self) {
+        self.shared.accepting.store(false, Ordering::Release);
+        self.shared.sever_all();
+    }
+
+    /// Undo [`WorkerServer::kill`]: accept connections again. The
+    /// router's health checker re-admits the worker after its
+    /// configured number of consecutive passes.
+    pub fn revive(&self) {
+        self.shared.accepting.store(true, Ordering::Release);
+    }
+
+    /// Stop for good: refuse new connections, sever live ones, unblock
+    /// and join the accept thread. (Also runs on drop.)
+    pub fn stop(&mut self) {
+        if self.shared.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.shared.accepting.store(false, Ordering::Release);
+        self.shared.sever_all();
+        // Unblock the accept() call so the thread observes `stop`.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_main(listener: TcpListener, shared: Arc<WorkerShared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        if !shared.accepting.load(Ordering::Acquire) {
+            // Killed: refuse by closing immediately — the peer's
+            // handshake or probe fails exactly as against a dead
+            // process.
+            drop(stream);
+            continue;
+        }
+        let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            lock_recover(&shared.conns).push((id, clone));
+        }
+        let conn_shared = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("mp-worker-conn".into())
+            .spawn(move || {
+                serve_conn(stream, id, &conn_shared);
+                conn_shared.drop_conn(id);
+            });
+        if spawned.is_err() {
+            shared.drop_conn(id);
+        }
+    }
+}
+
+/// One connection's reader loop: handshake, then demux frames until the
+/// peer hangs up (or the worker is killed).
+fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
+    if handshake(&mut stream).is_err() {
+        return;
+    }
+    // The single writer: replies, pongs and metrics reports all funnel
+    // through one channel onto one thread, so frames never interleave.
+    let (out_tx, out_rx) = mpsc::channel::<Frame>();
+    let mut write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::thread::Builder::new()
+        .name("mp-worker-write".into())
+        .spawn(move || {
+            while let Ok(frame) = out_rx.recv() {
+                if write_frame(&mut write_half, &frame).is_err() {
+                    break;
+                }
+                let _ = write_half.flush();
+            }
+            let _ = write_half.shutdown(Shutdown::Both);
+        });
+    let mut sessions: HashMap<u64, SessionEntry> = HashMap::new();
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => break, // EOF / severed / garbage: connection over
+        };
+        match frame {
+            Frame::Request(req) => {
+                let entry = sessions.entry(req.session).or_insert_with(|| {
+                    shared.sessions.fetch_add(1, Ordering::Relaxed);
+                    SessionEntry {
+                        handle: shared.server.handle(),
+                        last_ts: i64::MIN,
+                    }
+                });
+                // Watermark enforcement at the wire boundary: a stale
+                // or duplicate timestamp never reaches the server.
+                if entry.last_ts != i64::MIN && req.timestamp <= entry.last_ts {
+                    let _ = out_tx.send(Frame::Reply(WireReply {
+                        id: req.id,
+                        session: req.session,
+                        timestamp: req.timestamp,
+                        result: Err(MpError::TimestampViolation {
+                            stream: format!("session-{}", req.session),
+                            packet_ts: req.timestamp,
+                            bound: entry.last_ts + 1,
+                        }),
+                    }));
+                    continue;
+                }
+                let image = match req.to_frame() {
+                    Ok(img) => img,
+                    Err(e) => {
+                        let _ = out_tx.send(Frame::Reply(WireReply {
+                            id: req.id,
+                            session: req.session,
+                            timestamp: req.timestamp,
+                            result: Err(e),
+                        }));
+                        continue;
+                    }
+                };
+                entry.last_ts = req.timestamp;
+                // Re-anchor the remaining deadline budget at arrival
+                // (conservative by exactly the transit time).
+                let deadline = if req.deadline_us == NO_DEADLINE {
+                    None
+                } else {
+                    Some(Duration::from_micros(req.deadline_us))
+                };
+                let reply_to = out_tx.clone();
+                let (id, session, timestamp) = (req.id, req.session, req.timestamp);
+                entry.handle.submit_callback(&image, deadline, move |result| {
+                    // A send after the connection died is dropped on the
+                    // floor — the router already failed the request with
+                    // WorkerLost when it saw the socket go.
+                    let _ = reply_to.send(Frame::Reply(WireReply {
+                        id,
+                        session,
+                        timestamp,
+                        result,
+                    }));
+                });
+            }
+            Frame::HealthPing { nonce } => {
+                let _ = out_tx.send(Frame::HealthPong {
+                    nonce,
+                    stats: shared.stats(),
+                });
+            }
+            Frame::MetricsRequest => {
+                let _ = out_tx.send(Frame::MetricsReport {
+                    text: shared.server.metrics().report(),
+                });
+            }
+            Frame::Goodbye { .. } => break,
+            // Anything else is protocol noise from a confused peer;
+            // ignore rather than kill the connection.
+            Frame::Hello { .. }
+            | Frame::Reply(_)
+            | Frame::HealthPong { .. }
+            | Frame::MetricsReport { .. } => {}
+        }
+    }
+    shared
+        .sessions
+        .fetch_sub(sessions.len() as u64, Ordering::Relaxed);
+    // Dropping out_tx lets the writer drain queued replies and exit.
+    drop(out_tx);
+    let _ = stream.shutdown(Shutdown::Both);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}

@@ -1,0 +1,44 @@
+//! Small synchronization helpers shared across the crate.
+//!
+//! The one that matters: [`lock_recover`]. A `Mutex` is *poisoned* when
+//! a thread panics while holding its guard; every later
+//! `lock().unwrap()` then panics too, cascading one thread's bug into
+//! every caller that touches the same state. That trade is right only
+//! when a panic can leave the protected state half-updated. The shared
+//! state guarded by the serving layer's locks — ready queues, standby
+//! slots, demux maps, metric reservoirs — consists of plain containers
+//! and counters that are consistent at every panic point (no
+//! multi-step invariants span a panic), so for them the poison flag is
+//! noise, not evidence: recover the guard and keep serving. PR 8
+//! established the pattern for the serving `EventQueue`; this helper
+//! extends it to the remaining `lock().unwrap()` sites so a single
+//! panicking checkout can no longer take down every later caller.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard from a poisoned mutex. Use only for
+/// state that is consistent at every panic point (see module docs).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7i32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

@@ -1,0 +1,285 @@
+//! Distributed serving end to end (serving module docs, "Distributed
+//! serving"): a session-sharding [`Router`] fronting in-process
+//! [`WorkerServer`]s over real loopback sockets.
+//!
+//! * **two-worker load** — streaming sessions shard across both workers
+//!   and every reply round-trips its payload (the staged echo pipeline
+//!   reflects the leading pixel as the detection score);
+//! * **worker death mid-window** — killing the busier worker under load
+//!   sheds *zero* requests silently: every submitted request resolves
+//!   with a success or a typed error, `workers_lost`/`sessions_rerouted`
+//!   record the failover, and every session then succeeds on the
+//!   survivor;
+//! * **in-flight loss is typed** — requests stranded inside a dying
+//!   worker fail with [`MpError::WorkerLost`] naming the worker (never
+//!   hang), the empty pool answers with a typed routing error, and a
+//!   revived worker is re-admitted only after the configured
+//!   consecutive health-check passes;
+//! * **watermarks survive the hop** — a raw socket sending a stale wire
+//!   timestamp gets the same typed [`MpError::TimestampViolation`] a
+//!   local streaming session would raise, and the session's watermark
+//!   stays intact for the next in-order timestamp.
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{payload_frame, recv_within, streaming_test_config};
+use mediapipe::prelude::*;
+use mediapipe::serving::pipeline::staged_pipeline_config;
+use mediapipe::serving::wire::{self, Frame, WireReply, WireRequest};
+use mediapipe::serving::{
+    GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig, WorkerServer,
+};
+
+const REPLY_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// A worker on an ephemeral loopback port serving the staged echo
+/// pipeline (stage times in µs) in streaming mode.
+fn start_worker(stage_us: &[u64]) -> WorkerServer {
+    let reg = Arc::new(GraphRegistry::new());
+    reg.register("echo", &staged_pipeline_config(stage_us, Some(16)).unwrap())
+        .unwrap();
+    let server = PipelineServer::start(ServerConfig {
+        graph_name: Some("echo".into()),
+        registry: Some(reg),
+        ..streaming_test_config(2, 0)
+    })
+    .unwrap();
+    WorkerServer::start("127.0.0.1:0", server).unwrap()
+}
+
+fn fast_router_config(workers: Vec<String>) -> RouterConfig {
+    let mut cfg = RouterConfig::new(workers);
+    cfg.health_interval = Duration::from_millis(20);
+    cfg.health_passes = 2;
+    cfg
+}
+
+#[test]
+fn two_workers_serve_streaming_load_end_to_end() {
+    let w0 = start_worker(&[200]);
+    let w1 = start_worker(&[200]);
+    let router = Router::start(fast_router_config(vec![
+        w0.local_addr().to_string(),
+        w1.local_addr().to_string(),
+    ]))
+    .unwrap();
+    const SESSIONS: u64 = 32;
+    const FRAMES: u64 = 3;
+    let mut pending = Vec::new();
+    for round in 0..FRAMES {
+        for s in 0..SESSIONS {
+            let value = (s * FRAMES + round) as f32 * 0.5;
+            pending.push((value, router.submit(s, &payload_frame(value))));
+        }
+    }
+    for (value, rx) in pending {
+        let dets = recv_within(&rx, REPLY_TIMEOUT, "distributed streaming reply").unwrap();
+        assert!(!dets.is_empty(), "echo reply should carry a detection");
+        assert!(
+            (dets[0].score - value).abs() < 1e-3,
+            "payload should round-trip the wire: sent {value}, got {}",
+            dets[0].score
+        );
+    }
+    let goodput = router.goodput();
+    let total: u64 = goodput.iter().map(|(_, g)| g).sum();
+    assert_eq!(total, SESSIONS * FRAMES, "every request should count as goodput");
+    assert!(
+        goodput[0].1 > 0 && goodput[1].1 > 0,
+        "32 sessions should shard across both workers: {goodput:?}"
+    );
+    assert_eq!(router.metrics().workers_lost.get(), 0);
+    assert_eq!(router.metrics().sessions_rerouted.get(), 0);
+}
+
+#[test]
+fn killing_a_worker_mid_window_reroutes_sessions_with_typed_failures() {
+    let w0 = start_worker(&[3_000]);
+    let w1 = start_worker(&[3_000]);
+    let workers = [&w0, &w1];
+    let router = Router::start(fast_router_config(vec![
+        w0.local_addr().to_string(),
+        w1.local_addr().to_string(),
+    ]))
+    .unwrap();
+    const SESSIONS: u64 = 32;
+    // Warm every session so both workers own live sessions (and both
+    // have goodput, proving both sides of the shard are in play).
+    let warm: Vec<_> = (0..SESSIONS)
+        .map(|s| router.submit(s, &payload_frame(1.0)))
+        .collect();
+    for rx in warm {
+        recv_within(&rx, REPLY_TIMEOUT, "warm-up reply").unwrap();
+    }
+    let goodput = router.goodput();
+    assert!(goodput[0].1 > 0 && goodput[1].1 > 0, "warm-up spread: {goodput:?}");
+    let victim = if goodput[0].1 >= goodput[1].1 { 0 } else { 1 };
+    // Put a full wave in flight against 3ms stages, kill the busier
+    // worker mid-window, then keep submitting into the failover.
+    let mut wave = Vec::new();
+    for s in 0..SESSIONS {
+        wave.push(router.submit(s, &payload_frame(2.0)));
+    }
+    workers[victim].kill();
+    for s in 0..SESSIONS {
+        wave.push(router.submit(s, &payload_frame(3.0)));
+    }
+    let (mut ok, mut lost, mut other) = (0u64, 0u64, 0u64);
+    for rx in wave {
+        // recv_within panics on timeout: a hung request fails the test.
+        match recv_within(&rx, REPLY_TIMEOUT, "mid-kill reply") {
+            Ok(dets) => {
+                assert!(!dets.is_empty());
+                ok += 1;
+            }
+            Err(MpError::WorkerLost { worker }) => {
+                assert_eq!(worker, router.goodput()[victim].0);
+                lost += 1;
+            }
+            Err(_) => other += 1,
+        }
+    }
+    assert_eq!(ok + lost + other, 2 * SESSIONS, "every request resolved");
+    assert!(ok > 0, "the survivor should keep serving through the kill");
+    assert!(router.metrics().workers_lost.get() >= 1);
+    assert!(
+        router.metrics().sessions_rerouted.get() > 0,
+        "the victim's sessions should reroute to the survivor"
+    );
+    // Once the death is detected, every session — including rerouted
+    // ones — must succeed on the survivor.
+    let start = Instant::now();
+    while router.worker_is_up(victim) {
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "router never noticed the killed worker"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let after: Vec<_> = (0..SESSIONS)
+        .map(|s| router.submit(s, &payload_frame(4.0)))
+        .collect();
+    for rx in after {
+        let dets = recv_within(&rx, REPLY_TIMEOUT, "post-failover reply").unwrap();
+        assert!((dets[0].score - 4.0).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn inflight_requests_fail_typed_and_killed_worker_rejoins_after_probation() {
+    let w = start_worker(&[5_000]);
+    let addr = w.local_addr().to_string();
+    let router = Router::start(fast_router_config(vec![addr.clone()])).unwrap();
+    // Prove liveness, then wedge a window of slow frames in flight on
+    // one session (5ms stages serialize them, so the kill lands with
+    // most of the window unresolved).
+    recv_within(&router.submit(0, &payload_frame(1.0)), REPLY_TIMEOUT, "warm-up")
+        .unwrap();
+    let inflight: Vec<_> = (0..8)
+        .map(|_| router.submit(0, &payload_frame(1.0)))
+        .collect();
+    w.kill();
+    let mut lost = 0u64;
+    for rx in inflight {
+        match recv_within(&rx, REPLY_TIMEOUT, "in-flight reply after kill") {
+            Ok(_) => {} // resolved before the sever reached it
+            Err(MpError::WorkerLost { worker }) => {
+                assert_eq!(worker, addr, "the typed error names the lost worker");
+                lost += 1;
+            }
+            Err(e) => panic!("in-flight requests must fail as WorkerLost, got: {e}"),
+        }
+    }
+    assert!(lost > 0, "killing the worker should strand in-flight requests");
+    // With the whole pool dead, submissions resolve immediately with a
+    // typed routing error — they never hang.
+    match recv_within(
+        &router.submit(99, &payload_frame(1.0)),
+        Duration::from_secs(5),
+        "reply with no healthy workers",
+    ) {
+        Err(MpError::Runtime(msg)) => assert!(msg.contains("no healthy workers")),
+        other => panic!("expected a typed routing error, got: {other:?}"),
+    }
+    assert_eq!(router.metrics().workers_readmitted.get(), 0);
+    // Revive: the health checker must re-admit only after consecutive
+    // passes, after which the same session serves again.
+    w.revive();
+    assert!(
+        router.wait_worker_up(0, Duration::from_secs(10)),
+        "revived worker was never re-admitted"
+    );
+    assert!(router.metrics().workers_readmitted.get() >= 1);
+    let dets = recv_within(
+        &router.submit(0, &payload_frame(2.0)),
+        REPLY_TIMEOUT,
+        "post-revive reply",
+    )
+    .unwrap();
+    assert!((dets[0].score - 2.0).abs() < 1e-3);
+}
+
+/// Read frames off a raw connection until the next reply.
+fn next_reply(stream: &mut TcpStream) -> WireReply {
+    loop {
+        match wire::read_frame(stream).unwrap() {
+            Frame::Reply(r) => return r,
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn stale_wire_timestamps_are_rejected_typed_without_touching_the_server() {
+    let w = start_worker(&[100]);
+    let mut stream = TcpStream::connect(w.local_addr()).unwrap();
+    stream
+        .set_read_timeout(Some(REPLY_TIMEOUT))
+        .unwrap();
+    wire::handshake(&mut stream).unwrap();
+    let request = |id: u64, ts: i64| {
+        Frame::Request(WireRequest {
+            id,
+            session: 7,
+            timestamp: ts,
+            deadline_us: wire::NO_DEADLINE,
+            width: 8,
+            height: 8,
+            channels: 1,
+            pixels: vec![1.0; 64],
+        })
+    };
+    // In-order timestamp: served.
+    wire::write_frame(&mut stream, &request(1, 5)).unwrap();
+    let r1 = next_reply(&mut stream);
+    assert_eq!(r1.id, 1);
+    assert!(r1.result.is_ok(), "in-order timestamp should serve: {r1:?}");
+    // Duplicate timestamp: the same typed violation a local streaming
+    // session raises, answered at the wire boundary.
+    wire::write_frame(&mut stream, &request(2, 5)).unwrap();
+    let r2 = next_reply(&mut stream);
+    assert_eq!(r2.id, 2);
+    match r2.result {
+        Err(MpError::TimestampViolation {
+            stream: ref name,
+            packet_ts,
+            bound,
+        }) => {
+            assert!(name.contains('7'), "violation names the session: {name}");
+            assert_eq!(packet_ts, 5);
+            assert_eq!(bound, 6);
+        }
+        other => panic!("expected a typed TimestampViolation, got: {other:?}"),
+    }
+    // The watermark survived the rejection: the next in-order
+    // timestamp still serves.
+    wire::write_frame(&mut stream, &request(3, 6)).unwrap();
+    let r3 = next_reply(&mut stream);
+    assert_eq!(r3.id, 3);
+    assert!(r3.result.is_ok(), "watermark should survive a rejected packet");
+}
