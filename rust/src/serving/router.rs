@@ -23,10 +23,14 @@
 //! * a rerouted session keeps its timestamp watermark: worker-side
 //!   session state is per-connection, so the new worker accepts the
 //!   continuing timestamps fresh;
-//! * the **health thread** pings live workers every interval (a missed
-//!   pong is treated as death) and probes dead ones; a dead worker is
-//!   re-admitted only after [`RouterConfig::health_passes`] consecutive
-//!   successful probes, so a flapping worker cannot bounce sessions.
+//! * the **health thread** pings live workers every interval and
+//!   probes dead ones. Worker pongs share the worker's single writer
+//!   channel with reply frames, so under load a pong can legitimately
+//!   queue behind large replies — only
+//!   [`RouterConfig::health_misses`] consecutive unanswered intervals
+//!   count as death. A dead worker is re-admitted only after
+//!   [`RouterConfig::health_passes`] consecutive successful probes, so
+//!   a flapping worker cannot bounce sessions.
 //!
 //! Submissions never block on a dead worker: a write failure marks the
 //! worker down and retries once on the session's (now rerouted) worker;
@@ -36,7 +40,7 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -44,7 +48,7 @@ use crate::error::{MpError, MpResult};
 use crate::metrics::Counter;
 use crate::perception::{Detections, ImageFrame};
 use crate::serving::wire::{
-    handshake, read_frame, write_frame, Frame, WireRequest, NO_DEADLINE,
+    handshake, read_frame, write_frame, Frame, WireRequest, MAX_REQUEST_PIXELS, NO_DEADLINE,
 };
 use crate::sync::lock_recover;
 
@@ -58,6 +62,12 @@ pub struct RouterConfig {
     /// Consecutive successful probes before a dead worker is
     /// re-admitted (anti-flap hysteresis).
     pub health_passes: u32,
+    /// Consecutive health intervals an outstanding ping may go
+    /// unanswered before the worker is declared dead. Pongs ride the
+    /// worker's single writer channel behind reply frames, so one slow
+    /// interval under load is expected; `1` restores mark-down on the
+    /// first miss.
+    pub health_misses: u32,
     /// Per-attempt TCP connect budget.
     pub connect_timeout: Duration,
     /// Deadline budget stamped on every forwarded request (`None` =
@@ -72,6 +82,7 @@ impl RouterConfig {
             workers,
             health_interval: Duration::from_millis(50),
             health_passes: 2,
+            health_misses: 3,
             connect_timeout: Duration::from_millis(500),
             request_deadline: None,
         }
@@ -104,6 +115,9 @@ struct Conn {
     pending: Mutex<HashMap<u64, Pending>>,
     last_ping: AtomicU64,
     last_pong: AtomicU64,
+    /// Consecutive health intervals the outstanding ping has gone
+    /// unanswered (health thread only; reset when the pong lands).
+    missed: AtomicU32,
 }
 
 enum SlotState {
@@ -120,7 +134,14 @@ struct WorkerSlot {
 
 struct SessionState {
     worker: usize,
-    next_ts: i64,
+    /// The session's next timestamp. The mutex is the session's wire
+    /// **ordering guard**: a submitter holds it from timestamp
+    /// assignment through the socket write, so two threads submitting
+    /// on one session hit the wire in timestamp order — otherwise the
+    /// worker's watermark rejects the straggler with a spurious
+    /// `TimestampViolation`. (The local path holds the session lock
+    /// across its push for the same reason.)
+    order: Arc<Mutex<i64>>,
 }
 
 struct RouterShared {
@@ -159,6 +180,11 @@ impl Router {
         if cfg.health_passes == 0 {
             return Err(MpError::Validation(
                 "router: health_passes must be >= 1".into(),
+            ));
+        }
+        if cfg.health_misses == 0 {
+            return Err(MpError::Validation(
+                "router: health_misses must be >= 1".into(),
             ));
         }
         let workers = cfg
@@ -347,7 +373,8 @@ impl RouterShared {
             }));
         }
         // Reroute the dead worker's sessions to healthy peers. The
-        // watermark (next_ts) travels with the session: worker-side
+        // watermark (the `order` counter) travels with the session:
+        // worker-side
         // session state is per-connection, so the new worker accepts
         // the continuing timestamps.
         let mut sessions = lock_recover(&self.sessions);
@@ -367,6 +394,23 @@ impl RouterShared {
         frame: &ImageFrame,
         tx: mpsc::Sender<MpResult<Detections>>,
     ) {
+        // A body beyond the wire cap would cross the socket only to
+        // have the worker's codec reject the declared length and sever
+        // the connection — failing every in-flight request on it and
+        // rerouting all its sessions for one bad submission. Resolve
+        // the oversized frame here, typed, without touching any worker.
+        if frame.data.len() > MAX_REQUEST_PIXELS {
+            let _ = tx.send(Err(MpError::Validation(format!(
+                "router: {}x{}x{} frame carries {} pixels; a request frame \
+                 can carry at most {MAX_REQUEST_PIXELS} — resize before \
+                 submitting",
+                frame.width,
+                frame.height,
+                frame.channels,
+                frame.data.len()
+            ))));
+            return;
+        }
         let deadline_us = match self.cfg.request_deadline {
             Some(d) => d.as_micros().min(u128::from(u64::MAX)) as u64,
             None => NO_DEADLINE,
@@ -375,7 +419,7 @@ impl RouterShared {
         // (rerouting the session), then the second attempt goes to the
         // session's new worker.
         for _attempt in 0..2 {
-            let (idx, ts) = {
+            let (idx, order) = {
                 let mut sessions = lock_recover(&self.sessions);
                 let entry = match sessions.get_mut(&session) {
                     Some(e) => e,
@@ -385,7 +429,7 @@ impl RouterShared {
                                 session,
                                 SessionState {
                                     worker: idx,
-                                    next_ts: 0,
+                                    order: Arc::new(Mutex::new(0)),
                                 },
                             );
                             sessions.get_mut(&session).expect("just inserted")
@@ -414,9 +458,7 @@ impl RouterShared {
                         }
                     }
                 }
-                let ts = entry.next_ts;
-                entry.next_ts += 1;
-                (entry.worker, ts)
+                (entry.worker, Arc::clone(&entry.order))
             };
             let conn = match self.up_conn(idx) {
                 Some(c) => c,
@@ -424,17 +466,24 @@ impl RouterShared {
             };
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             lock_recover(&conn.pending).insert(id, Pending { tx: tx.clone() });
-            let req = WireRequest {
+            let mut req = WireRequest {
                 id,
                 session,
-                timestamp: ts,
+                timestamp: 0, // assigned under the order guard below
                 deadline_us,
                 width: frame.width as u32,
                 height: frame.height as u32,
                 channels: frame.channels as u32,
                 pixels: frame.data.to_vec(),
             };
+            // The order guard spans timestamp assignment AND the write
+            // (see `SessionState::order`). A timestamp consumed by a
+            // failed write is simply skipped — the watermark only needs
+            // monotonicity, not density.
             let wrote = {
+                let mut next_ts = lock_recover(&order);
+                req.timestamp = *next_ts;
+                *next_ts += 1;
                 let mut w = lock_recover(&conn.writer);
                 write_frame(&mut *w, &Frame::Request(req))
                     .and_then(|()| w.flush().map_err(MpError::from))
@@ -486,6 +535,7 @@ fn establish(shared: &Arc<RouterShared>, idx: usize) -> MpResult<()> {
         pending: Mutex::new(HashMap::new()),
         last_ping: AtomicU64::new(0),
         last_pong: AtomicU64::new(0),
+        missed: AtomicU32::new(0),
     });
     // Install before spawning the reader: if the connection dies
     // instantly, the reader's mark_down must find this conn installed
@@ -556,15 +606,23 @@ fn health_main(shared: &Arc<RouterShared>) {
             let up = shared.up_conn(idx);
             match up {
                 Some(conn) => {
-                    // A ping from the previous round that never got its
-                    // pong means the worker (or path) is gone even if
-                    // the socket hasn't errored yet.
+                    // An outstanding ping without its pong could mean
+                    // the worker (or path) is gone — but pongs ride the
+                    // worker's single writer channel behind reply
+                    // frames, so a loaded worker's pong can lag a full
+                    // interval legitimately. Leave the ping outstanding
+                    // and only declare death after `health_misses`
+                    // consecutive silent intervals.
                     let sent = conn.last_ping.load(Ordering::Acquire);
                     let got = conn.last_pong.load(Ordering::Acquire);
                     if sent != 0 && got < sent {
-                        shared.mark_down(idx, &conn);
+                        let missed = conn.missed.fetch_add(1, Ordering::AcqRel) + 1;
+                        if missed >= shared.cfg.health_misses {
+                            shared.mark_down(idx, &conn);
+                        }
                         continue;
                     }
+                    conn.missed.store(0, Ordering::Release);
                     let nonce = shared.next_nonce.fetch_add(1, Ordering::Relaxed);
                     conn.last_ping.store(nonce, Ordering::Release);
                     let wrote = {

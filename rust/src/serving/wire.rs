@@ -45,8 +45,23 @@ use crate::perception::ImageFrame;
 pub const WIRE_VERSION: u16 = 1;
 
 /// Hard cap on one frame's body length (64 MiB): frames declaring more
-/// are rejected before allocation.
+/// are rejected before allocation. Enforced on **both** sides —
+/// [`read_frame`] refuses a declared length beyond it, and
+/// [`write_frame`] refuses to send a body beyond it (the peer would
+/// reject the length and sever the connection, taking every in-flight
+/// request on it down).
 pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Fixed bytes of a [`Frame::Request`] body before the pixel payload:
+/// tag, id, session, timestamp, deadline, width/height/channels, pixel
+/// count. Kept in sync with `encode_frame`.
+const REQUEST_BODY_OVERHEAD: usize = 1 + 8 + 8 + 8 + 8 + 4 + 4 + 4 + 4;
+
+/// Most pixels one request frame can carry without its body exceeding
+/// [`MAX_FRAME_LEN`]. A sender that checks against this bound (the
+/// router does, in `submit_inner`) never produces a request the peer's
+/// codec is guaranteed to reject.
+pub const MAX_REQUEST_PIXELS: usize = (MAX_FRAME_LEN - REQUEST_BODY_OVERHEAD) / 4;
 
 /// Sentinel for "no deadline" in [`WireRequest::deadline_us`].
 pub const NO_DEADLINE: u64 = u64::MAX;
@@ -321,9 +336,20 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
 }
 
 /// Write one frame (single `write_all`, so a mutex-serialized writer
-/// never interleaves frames).
+/// never interleaves frames). Refuses a body beyond [`MAX_FRAME_LEN`]
+/// *before* any bytes hit the socket: the peer's [`read_frame`] would
+/// reject the declared length and sever the connection, which costs
+/// every in-flight request on it — an error here keeps the connection
+/// usable.
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> MpResult<()> {
     let bytes = encode_frame(frame);
+    let body_len = bytes.len() - 4;
+    if body_len > MAX_FRAME_LEN {
+        return Err(wire_err(format!(
+            "refusing to send a {body_len} byte frame body (cap {MAX_FRAME_LEN}): \
+             the peer would reject it and sever the connection"
+        )));
+    }
     w.write_all(&bytes)?;
     Ok(())
 }
@@ -740,6 +766,23 @@ mod tests {
         put_u32(&mut huge, (MAX_FRAME_LEN + 1) as u32);
         let mut cursor = std::io::Cursor::new(huge);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_frames_are_refused_on_the_send_side() {
+        // One pixel past the bound tips the body over MAX_FRAME_LEN;
+        // write_frame must error with zero bytes written, keeping the
+        // connection usable.
+        let req = WireRequest {
+            pixels: vec![0.0; MAX_REQUEST_PIXELS + 1],
+            ..sample_request()
+        };
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &Frame::Request(req)).is_err());
+        assert!(sink.is_empty(), "no bytes may reach the socket");
+        // At the bound exactly, the frame is legal on both sides.
+        let body_len = REQUEST_BODY_OVERHEAD + 4 * MAX_REQUEST_PIXELS;
+        assert!(body_len <= MAX_FRAME_LEN);
     }
 
     #[test]

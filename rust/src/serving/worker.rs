@@ -199,6 +199,9 @@ fn accept_main(listener: TcpListener, shared: Arc<WorkerShared>) {
                 if shared.stop.load(Ordering::Acquire) {
                     return;
                 }
+                // A persistent accept error (EMFILE, say) must not spin
+                // this thread at 100% CPU; back off before retrying.
+                std::thread::sleep(Duration::from_millis(20));
                 continue;
             }
         };
@@ -242,7 +245,7 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
         Ok(s) => s,
         Err(_) => return,
     };
-    let writer = std::thread::Builder::new()
+    let writer = match std::thread::Builder::new()
         .name("mp-worker-write".into())
         .spawn(move || {
             while let Ok(frame) = out_rx.recv() {
@@ -252,7 +255,16 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
                 let _ = write_half.flush();
             }
             let _ = write_half.shutdown(Shutdown::Both);
-        });
+        }) {
+        Ok(w) => w,
+        // No writer thread means no reply can ever leave this
+        // connection: close it so the router fails fast with
+        // WorkerLost instead of waiting on silently-discarded replies.
+        Err(_) => {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    };
     let mut sessions: HashMap<u64, SessionEntry> = HashMap::new();
     loop {
         let frame = match read_frame(&mut stream) {
@@ -343,7 +355,5 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
     // Dropping out_tx lets the writer drain queued replies and exit.
     drop(out_tx);
     let _ = stream.shutdown(Shutdown::Both);
-    if let Ok(w) = writer {
-        let _ = w.join();
-    }
+    let _ = writer.join();
 }

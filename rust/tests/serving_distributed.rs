@@ -224,6 +224,78 @@ fn inflight_requests_fail_typed_and_killed_worker_rejoins_after_probation() {
     assert!((dets[0].score - 2.0).abs() < 1e-3);
 }
 
+#[test]
+fn oversized_frames_resolve_typed_without_flapping_the_worker() {
+    let w = start_worker(&[100]);
+    let router = Router::start(fast_router_config(vec![w.local_addr().to_string()])).unwrap();
+    recv_within(&router.submit(0, &payload_frame(1.0)), REPLY_TIMEOUT, "warm-up").unwrap();
+    // A frame whose encoding would blow the wire cap must resolve at
+    // the router with a typed validation error — never be written to
+    // the worker, whose codec would reject the length and sever the
+    // connection (failing unrelated in-flight requests).
+    let side = 4100; // 4100 * 4100 pixels > MAX_REQUEST_PIXELS
+    assert!(side * side > wire::MAX_REQUEST_PIXELS);
+    let huge = mediapipe::perception::ImageFrame::new(side, side, 1, vec![0.0; side * side]);
+    match recv_within(&router.submit(0, &huge), REPLY_TIMEOUT, "oversized reply") {
+        Err(MpError::Validation(msg)) => {
+            assert!(msg.contains("pixels"), "error names the bound: {msg}")
+        }
+        other => panic!("expected a typed validation error, got: {other:?}"),
+    }
+    assert!(router.worker_is_up(0), "an oversized submission must not flap the worker");
+    assert_eq!(router.metrics().workers_lost.get(), 0);
+    // The session's watermark is untouched: it keeps serving in order.
+    let dets = recv_within(
+        &router.submit(0, &payload_frame(2.0)),
+        REPLY_TIMEOUT,
+        "post-oversize reply",
+    )
+    .unwrap();
+    assert!((dets[0].score - 2.0).abs() < 1e-3);
+}
+
+#[test]
+fn concurrent_submits_on_one_session_keep_wire_order() {
+    // Four threads hammering the same session race timestamp
+    // assignment against the socket write; the router must put frames
+    // on the wire in timestamp order or the worker's watermark rejects
+    // stragglers with spurious TimestampViolations.
+    let w = start_worker(&[100]);
+    let router = Arc::new(
+        Router::start(fast_router_config(vec![w.local_addr().to_string()])).unwrap(),
+    );
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    recv_within(
+                        &router.submit(0, &payload_frame(1.0)),
+                        REPLY_TIMEOUT,
+                        "concurrent same-session reply",
+                    )
+                    .unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(router.metrics().workers_lost.get(), 0);
+}
+
+#[test]
+fn zero_health_misses_is_rejected_at_config_validation() {
+    let mut cfg = fast_router_config(vec!["127.0.0.1:1".into()]);
+    cfg.health_misses = 0;
+    match Router::start(cfg) {
+        Err(MpError::Validation(msg)) => assert!(msg.contains("health_misses")),
+        Err(e) => panic!("expected a validation error, got: {e}"),
+        Ok(_) => panic!("zero health_misses must be rejected at start"),
+    }
+}
+
 /// Read frames off a raw connection until the next reply.
 fn next_reply(stream: &mut TcpStream) -> WireReply {
     loop {
