@@ -17,10 +17,14 @@ use crate::perception::types::{Detections, LandmarkList};
 use crate::perception::ImageFrame;
 use crate::registry::CalculatorRegistry;
 
-/// Named joint angles decoded from a pose skeleton (radians).
+/// Named joint angles decoded from a pose skeleton (radians). Names are
+/// owned strings so a decoded set survives a serving round-trip — the
+/// typed data plane decomposes it into a named payload map
+/// ([`crate::serving::ServingPayload::from_angles`]) whose entries must
+/// reconstruct from the wire, where no `'static` name table exists.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JointAngles {
-    pub angles: Vec<(&'static str, f32)>,
+    pub angles: Vec<(String, f32)>,
 }
 
 /// The synchronized output of the multi-model holistic graph: one pose,
@@ -163,16 +167,19 @@ impl Calculator for JointAngleDecoder {
         let pt = |i: usize| pose.points.get(i).copied().unwrap_or((0.0, 0.0));
         let angles = vec![
             (
-                "left_elbow",
+                "left_elbow".to_string(),
                 joint_angle(pt(L_SHOULDER), pt(L_ELBOW), pt(L_WRIST)),
             ),
             (
-                "right_elbow",
+                "right_elbow".to_string(),
                 joint_angle(pt(R_SHOULDER), pt(R_ELBOW), pt(R_WRIST)),
             ),
-            ("left_knee", joint_angle(pt(L_HIP), pt(L_KNEE), pt(L_ANKLE))),
             (
-                "right_knee",
+                "left_knee".to_string(),
+                joint_angle(pt(L_HIP), pt(L_KNEE), pt(L_ANKLE)),
+            ),
+            (
+                "right_knee".to_string(),
                 joint_angle(pt(R_HIP), pt(R_KNEE), pt(R_ANKLE)),
             ),
         ];

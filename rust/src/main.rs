@@ -1,5 +1,6 @@
 //! The `mediapipe` CLI: run graphs from pbtxt configs, validate them,
-//! analyze and visualize traces, serve the detector, list calculators.
+//! analyze and visualize traces, serve any registered graph (the
+//! detector by default), list calculators.
 //!
 //! ```text
 //! mediapipe run graphs/object_detection.pbtxt --trace /tmp/t.tsv
@@ -9,11 +10,18 @@
 //! mediapipe serve --requests 1000 --max-batch 8 --streaming --pipeline-depth 4 \
 //!     --dispatch-mode sharded
 //! mediapipe serve --streaming --graph echo --swap-to echo_deep
+//! mediapipe serve --streaming --graph pose_landmark
 //! mediapipe serve --deadline-ms 50 --max-queue 256 --streaming --adaptive-depth 8
-//! mediapipe serve --streaming --worker 127.0.0.1:7071
+//! mediapipe serve --streaming --graph holistic_multi_model --worker 127.0.0.1:7071
 //! mediapipe route --workers 127.0.0.1:7071,127.0.0.1:7072 --requests 1000
 //! mediapipe list-calculators
 //! ```
+//!
+//! `serve --graph <name>` serves any entry of the CLI's graph registry —
+//! the staged echo pipelines plus the scenario catalog (`pose_landmark`,
+//! `holistic_multi_model`, `detection_cascade`) — returning each graph's
+//! typed payloads (landmarks, detections, named maps); `route` prints
+//! the payload kinds it received back.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,7 +31,8 @@ use mediapipe::prelude::*;
 use mediapipe::runtime::shared_engine;
 use mediapipe::serving::pipeline::staged_pipeline_config;
 use mediapipe::serving::{
-    GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig, ServingMode, WorkerServer,
+    install_catalog, GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig,
+    ServingMode, ServingPayload, WorkerServer,
 };
 use mediapipe::visualizer;
 
@@ -281,8 +290,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let run = || -> MpResult<()> {
         // The CLI registry offers two staged echo pipelines (they speak
         // the serving frames/detections interface without needing model
-        // artifacts) so registry serving and swaps can be exercised from
-        // the command line.
+        // artifacts) plus the scenario catalog (pose_landmark,
+        // holistic_multi_model, detection_cascade — per-frame typed
+        // payloads), so registry serving, typed payloads and swaps can
+        // all be exercised from the command line.
         let registry = if graph.is_some() || swap_to.is_some() {
             let reg = Arc::new(GraphRegistry::new());
             reg.register("echo", &staged_pipeline_config(&[100, 200, 100], Some(16))?)?;
@@ -290,6 +301,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                 "echo_deep",
                 &staged_pipeline_config(&[100, 200, 400, 200, 100], Some(16))?,
             )?;
+            install_catalog(&reg)?;
             if let Some(g) = &graph {
                 if !reg.contains(g) {
                     return Err(MpError::Validation(format!(
@@ -324,6 +336,21 @@ fn cmd_serve(args: &[String]) -> i32 {
             registry: registry.clone(),
             ..Default::default()
         })?;
+        {
+            let d = server.descriptor();
+            let outs: Vec<String> = d
+                .outputs
+                .iter()
+                .map(|(name, kind)| format!("{name}:{}", kind.name()))
+                .collect();
+            println!(
+                "serving '{}': {} ({}) -> {}",
+                server.graph_name(),
+                d.input_stream,
+                d.input_kind.name(),
+                outs.join(", ")
+            );
+        }
         // --worker ADDR: instead of self-driving synthetic load, expose
         // this server over a socket for a front-end router (see
         // rust/src/serving "Distributed serving") and serve until
@@ -335,6 +362,9 @@ fn cmd_serve(args: &[String]) -> i32 {
                 std::thread::sleep(Duration::from_secs(3600));
             }
         }
+        // Each wave submits rendered frames as typed payloads; the
+        // handle adapts a frame to the detector's tensor input, and
+        // catalog graphs consume it directly.
         let run_wave = |n: usize, seed: u64| {
             let mut handles = Vec::new();
             for c in 0..clients {
@@ -347,7 +377,8 @@ fn cmd_serve(args: &[String]) -> i32 {
                     for _ in 0..per {
                         world.step();
                         let frame = world.render();
-                        let _ = h.detect(&frame);
+                        let rx = h.submit_payload(ServingPayload::Frame(frame));
+                        let _ = rx.recv();
                     }
                 }));
             }
@@ -420,9 +451,17 @@ fn cmd_route(args: &[String]) -> i32 {
             .with_object_sizes(0.12, 0.2);
         let mut inflight = std::collections::VecDeque::new();
         let (mut ok, mut failed) = (0u64, 0u64);
-        let mut settle = |rx: std::sync::mpsc::Receiver<MpResult<_>>| {
+        // Tally the reply payload kinds so the run's output shows what
+        // the served graph actually returned (detections for the
+        // detector/echo pipelines, landmarks or maps for the catalog).
+        let mut kinds: std::collections::BTreeMap<&'static str, u64> =
+            std::collections::BTreeMap::new();
+        let mut settle = |rx: std::sync::mpsc::Receiver<MpResult<ServingPayload>>| {
             match rx.recv_timeout(Duration::from_secs(30)) {
-                Ok(Ok(_)) => ok += 1,
+                Ok(Ok(p)) => {
+                    ok += 1;
+                    *kinds.entry(p.kind().name()).or_insert(0) += 1;
+                }
                 _ => failed += 1,
             }
         };
@@ -430,7 +469,9 @@ fn cmd_route(args: &[String]) -> i32 {
         for i in 0..requests {
             world.step();
             let frame = world.render();
-            inflight.push_back(router.submit(i as u64 % sessions, &frame));
+            inflight.push_back(
+                router.submit_payload(i as u64 % sessions, ServingPayload::Frame(frame)),
+            );
             // Keep a bounded window in flight so a slow worker applies
             // backpressure here instead of flooding its intake queue.
             if inflight.len() >= 64 {
@@ -442,6 +483,9 @@ fn cmd_route(args: &[String]) -> i32 {
         }
         let dt = t0.elapsed();
         println!("{ok} ok / {failed} failed over {dt:?}");
+        for (kind, count) in &kinds {
+            println!("  payload {kind:<11} {count}");
+        }
         println!("{}", router.report());
         Ok(())
     };

@@ -4,7 +4,7 @@
 //!
 //! This is the "deploy it as a performant application" half of the
 //! paper's pitch, structured like a model-serving router: callers submit
-//! frames; a batcher thread coalesces requests up to
+//! typed payloads; a batcher thread coalesces requests up to
 //! `max_batch`/`max_wait`; each batch is then driven through a real
 //! MediaPipe graph (preprocess → inference → postprocess calculators,
 //! see [`pipeline`]). All serving graphs submit their node tasks to
@@ -16,6 +16,38 @@
 //! each, all registered on one pool — so they are the main beneficiary
 //! of its indexed O(log n) source selection (see [`crate::executor`],
 //! "The steal index and its notification protocol").
+//!
+//! ## The typed data plane
+//!
+//! The data plane is **generic over payloads**, not hard-wired to
+//! `ImageFrame` in / `Detections` out. One request carries one
+//! [`ServingPayload`] — an image frame, a flat f32 tensor, a detection
+//! list, a landmark list, or a named map of payloads — and resolves to
+//! one `ServingPayload` result. What a given graph accepts and returns
+//! is its [`IoDescriptor`]: declared input/output stream names and
+//! payload kinds, plus whether the graph speaks the *batched* detector
+//! shape (one input packet = a `Vec` of per-request tensor rows) or
+//! the *per-frame* shape (one packet per request timestamp). The
+//! descriptor is inferred and frozen **once**, at
+//! [`GraphRegistry::register`] / [`GraphRegistry::swap`] time, and
+//! checked by [`PipelineServer::start`] before any traffic flows
+//! ([`IoDescriptor::ensure_servable`]) — a graph whose streams the
+//! data plane cannot carry is refused with a typed validation error,
+//! never a runtime surprise. Multi-output graphs resolve each
+//! timestamp to a [`ServingPayload::Map`] keyed by output stream name
+//! (the session demux aggregates the streams per timestamp);
+//! single-output graphs resolve to that output's payload directly.
+//!
+//! Submission is payload-first — [`ServerHandle::submit_payload`] and
+//! friends — while the `Detections`-typed entry points
+//! ([`ServerHandle::submit`], [`ServerHandle::detect`], ...) remain as
+//! thin compat shims over the payload path: an `ImageFrame` submitted
+//! to a tensor-input (detector-shaped) graph is resized and tensorized
+//! exactly as the old client code did, and results funnel through
+//! [`ServingPayload::into_detections`]. The same seam crosses the
+//! process boundary: [`wire`] frames carry tagged payloads, so every
+//! catalog graph serves over a socket [`worker`] and through the
+//! [`router`] with the same types it serves in-process.
 //!
 //! ## Pooled vs streaming: the isolation/throughput trade-off
 //!
@@ -251,6 +283,7 @@
 //!   loopback hop tax and reroute latency against the single-process
 //!   baseline.
 
+pub mod payload;
 pub mod pipeline;
 pub mod pool;
 pub mod registry;
@@ -275,6 +308,7 @@ use crate::runtime::InferenceEngine;
 use crate::sync::lock_recover;
 use crate::timestamp::Timestamp;
 
+pub use payload::{IoDescriptor, PayloadKind, ServingPayload};
 pub use pipeline::{BatchFrames, BatchInfo};
 pub use pool::{GraphPool, PooledGraph};
 pub use registry::{
@@ -375,11 +409,12 @@ pub struct ServerConfig {
     /// and benches register gated or stage-imbalanced pipelines under a
     /// name and point this at it). `None` serves `"detector"`, the
     /// built-in pipeline, registered on demand. Whatever the name
-    /// resolves to must read one batch ([`BatchFrames`]) per timestamp
-    /// from a graph input stream `"frames"` and emit one
-    /// `Vec<Detections>` row set per timestamp on an output stream
-    /// `"detections"`; the `engine` / `variants` side packets are
-    /// provided only if the config declares them. If the config bounds
+    /// resolves to is served by its own [`IoDescriptor`] (module docs,
+    /// "The typed data plane"): any servable typed contract works —
+    /// per-frame catalog graphs and batched detector-shaped pipelines
+    /// alike — and `ensure_servable` is checked at start. The `engine`
+    /// / `variants` side packets are provided (and the artifact dir
+    /// loaded) only if the config declares them. If the config bounds
     /// its input queue (`input_queue_size`), keep the bound ≥
     /// `pipeline_depth` — a smaller bound lets a wedged graph block the
     /// batcher inside a timeout-free push, defeating `batch_timeout`.
@@ -420,13 +455,18 @@ impl Default for ServerConfig {
 }
 
 /// Where a job's result goes: a channel for local callers
-/// ([`ServerHandle::submit`]), a callback for event-driven adapters
-/// ([`ServerHandle::submit_callback`]) that must not park a thread per
-/// request — the distributed [`worker`] demuxes thousands of wire
-/// requests onto reply frames this way.
+/// ([`ServerHandle::submit_payload`]), a callback for event-driven
+/// adapters ([`ServerHandle::submit_payload_callback`]) that must not
+/// park a thread per request — the distributed [`worker`] demuxes
+/// thousands of wire requests onto reply frames this way. The
+/// `Det*` variants are the detector-era compat seam: they funnel the
+/// payload result through [`ServingPayload::into_detections`] so the
+/// `Detections`-typed entry points keep their exact signatures.
 enum ReplyTo {
-    Channel(mpsc::Sender<MpResult<Detections>>),
-    Callback(Arc<dyn Fn(MpResult<Detections>) + Send + Sync>),
+    Channel(mpsc::Sender<MpResult<ServingPayload>>),
+    Callback(Arc<dyn Fn(MpResult<ServingPayload>) + Send + Sync>),
+    DetChannel(mpsc::Sender<MpResult<Detections>>),
+    DetCallback(Arc<dyn Fn(MpResult<Detections>) + Send + Sync>),
 }
 
 impl ReplyTo {
@@ -434,18 +474,22 @@ impl ReplyTo {
     /// business (same as the old direct `send`); callbacks run on the
     /// delivering thread (the batcher, or the rejecting submitter) and
     /// must be cheap and non-blocking.
-    fn send(&self, r: MpResult<Detections>) {
+    fn send(&self, r: MpResult<ServingPayload>) {
         match self {
             ReplyTo::Channel(tx) => {
                 let _ = tx.send(r);
             }
             ReplyTo::Callback(cb) => cb(r),
+            ReplyTo::DetChannel(tx) => {
+                let _ = tx.send(r.and_then(ServingPayload::into_detections));
+            }
+            ReplyTo::DetCallback(cb) => cb(r.and_then(ServingPayload::into_detections)),
         }
     }
 }
 
 struct Job {
-    tensor: Vec<f32>,
+    payload: ServingPayload,
     reply: ReplyTo,
     enqueued: Instant,
     /// Completion deadline (admission shedding / queue expiry); `None`
@@ -851,6 +895,10 @@ pub struct PipelineServer {
     /// [`PipelineServer::handle`] gets the next id.
     next_client: AtomicU64,
     cfg: ServerConfig,
+    /// The served graph's typed I/O contract, resolved once at start
+    /// (swaps cannot change it — the registry refuses contract-changing
+    /// swaps).
+    descriptor: IoDescriptor,
     worker: Option<std::thread::JoinHandle<()>>,
     /// The shared executor all pooled serving graphs submit to. Held so
     /// callers can introspect it; workers stop when the last graph and
@@ -877,6 +925,10 @@ pub struct ServerHandle {
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
     input_size: usize,
+    /// The served graph's declared input payload kind (from its
+    /// [`IoDescriptor`]): submissions of any other kind are answered
+    /// with a typed mismatch on the caller's thread, before queueing.
+    input_kind: PayloadKind,
     max_batch: usize,
     max_queue_depth: usize,
     request_deadline: Option<Duration>,
@@ -884,59 +936,128 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a frame under the server's default `request_deadline`;
-    /// returns a receiver for the detections.
-    pub fn submit(&self, frame: &ImageFrame) -> mpsc::Receiver<MpResult<Detections>> {
-        self.submit_with_deadline(frame, self.request_deadline)
+    /// Submit a typed payload under the server's default
+    /// `request_deadline`; returns a receiver for the typed result (a
+    /// single output's payload, or a [`ServingPayload::Map`] for
+    /// multi-output graphs).
+    pub fn submit_payload(
+        &self,
+        payload: ServingPayload,
+    ) -> mpsc::Receiver<MpResult<ServingPayload>> {
+        self.submit_payload_with_deadline(payload, self.request_deadline)
     }
 
-    /// Submit a frame with an explicit completion deadline (overriding
-    /// the server's `request_deadline`; `None` exempts this request
-    /// from deadline-driven shedding and expiry). The overload-control
-    /// admission gate runs here, on the caller's thread: a request the
-    /// server estimates it cannot finish in time — or that would push
-    /// the intake past `max_queue_depth` — is answered immediately with
-    /// a typed [`MpError::Overloaded`] instead of being queued.
-    pub fn submit_with_deadline(
+    /// Submit a typed payload with an explicit completion deadline
+    /// (overriding the server's `request_deadline`; `None` exempts this
+    /// request from deadline-driven shedding and expiry). The
+    /// overload-control admission gate runs here, on the caller's
+    /// thread: a request the server estimates it cannot finish in time
+    /// — or that would push the intake past `max_queue_depth` — is
+    /// answered immediately with a typed [`MpError::Overloaded`]
+    /// instead of being queued.
+    pub fn submit_payload_with_deadline(
         &self,
-        frame: &ImageFrame,
+        payload: ServingPayload,
         deadline: Option<Duration>,
-    ) -> mpsc::Receiver<MpResult<Detections>> {
+    ) -> mpsc::Receiver<MpResult<ServingPayload>> {
         let (reply, rx) = mpsc::channel();
-        self.submit_reply(frame, deadline, ReplyTo::Channel(reply));
+        self.submit_reply(payload, deadline, ReplyTo::Channel(reply));
         // An accepted job on a closed (dropped) server was discarded;
         // the reply sender drops with it and the receiver yields
         // RecvError ("server stopped") to the caller.
         rx
     }
 
-    /// Submit a frame whose result is delivered through `on_result`
-    /// instead of a channel — the event-driven adapter seam (the
-    /// distributed [`worker`] routes wire requests here, one callback
-    /// per request, no parked thread per request). The callback runs
-    /// exactly once, on the batcher thread for served results or on the
-    /// submitting thread for admission rejections; it must be cheap and
-    /// non-blocking. Admission control (shedding, intake bound, queue
-    /// expiry) applies exactly as in [`ServerHandle::submit_with_deadline`].
+    /// Submit a typed payload whose result is delivered through
+    /// `on_result` instead of a channel — the event-driven adapter seam
+    /// (the distributed [`worker`] routes wire requests here, one
+    /// callback per request, no parked thread per request). The
+    /// callback runs exactly once, on the batcher thread for served
+    /// results or on the submitting thread for admission rejections; it
+    /// must be cheap and non-blocking. Admission control (shedding,
+    /// intake bound, queue expiry) applies exactly as in
+    /// [`ServerHandle::submit_payload_with_deadline`].
+    pub fn submit_payload_callback(
+        &self,
+        payload: ServingPayload,
+        deadline: Option<Duration>,
+        on_result: impl Fn(MpResult<ServingPayload>) + Send + Sync + 'static,
+    ) {
+        self.submit_reply(payload, deadline, ReplyTo::Callback(Arc::new(on_result)));
+    }
+
+    /// Submit a frame under the server's default `request_deadline`;
+    /// returns a receiver for the detections. Detector-era compat shim
+    /// over [`ServerHandle::submit_payload`].
+    pub fn submit(&self, frame: &ImageFrame) -> mpsc::Receiver<MpResult<Detections>> {
+        self.submit_with_deadline(frame, self.request_deadline)
+    }
+
+    /// Submit a frame with an explicit completion deadline — the
+    /// `Detections`-typed compat shim over
+    /// [`ServerHandle::submit_payload_with_deadline`]. Results of any
+    /// other payload kind surface as a typed
+    /// [`MpError::PacketTypeMismatch`].
+    pub fn submit_with_deadline(
+        &self,
+        frame: &ImageFrame,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<MpResult<Detections>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit_reply(
+            ServingPayload::Frame(frame.clone()),
+            deadline,
+            ReplyTo::DetChannel(reply),
+        );
+        rx
+    }
+
+    /// Callback-seam compat shim over
+    /// [`ServerHandle::submit_payload_callback`] (see there for the
+    /// delivery contract).
     pub fn submit_callback(
         &self,
         frame: &ImageFrame,
         deadline: Option<Duration>,
         on_result: impl Fn(MpResult<Detections>) + Send + Sync + 'static,
     ) {
-        self.submit_reply(frame, deadline, ReplyTo::Callback(Arc::new(on_result)));
+        self.submit_reply(
+            ServingPayload::Frame(frame.clone()),
+            deadline,
+            ReplyTo::DetCallback(Arc::new(on_result)),
+        );
     }
 
-    /// The shared submission core behind both reply shapes.
-    fn submit_reply(&self, frame: &ImageFrame, deadline: Option<Duration>, reply: ReplyTo) {
-        let tensor = if frame.width == self.input_size && frame.height == self.input_size {
-            frame.to_tensor()
-        } else {
-            frame.resized(self.input_size, self.input_size).to_tensor()
+    /// The shared submission core behind every reply shape. A frame
+    /// submitted to a tensor-input graph (the detector shape) is
+    /// resized to the server's input resolution and tensorized here, on
+    /// the caller's thread — exactly what detector clients did by hand
+    /// before the typed seam; any other kind mismatch is answered
+    /// immediately with a typed error.
+    fn submit_reply(&self, payload: ServingPayload, deadline: Option<Duration>, reply: ReplyTo) {
+        let payload = match payload {
+            ServingPayload::Frame(frame) if self.input_kind == PayloadKind::Tensor => {
+                let tensor = if frame.width == self.input_size && frame.height == self.input_size
+                {
+                    frame.to_tensor()
+                } else {
+                    frame.resized(self.input_size, self.input_size).to_tensor()
+                };
+                ServingPayload::Tensor(tensor)
+            }
+            p => p,
         };
+        if payload.kind() != self.input_kind {
+            self.metrics.errors.inc();
+            reply.send(Err(MpError::PacketTypeMismatch {
+                expected: self.input_kind.name(),
+                actual: payload.kind().name(),
+            }));
+            return;
+        }
         let enqueued = Instant::now();
         let job = Job {
-            tensor,
+            payload,
             reply,
             enqueued,
             // Saturating: a huge per-call deadline means "far future",
@@ -1000,19 +1121,24 @@ impl ServerHandle {
 
 /// The side packets a serving graph declares, resolved from the shared
 /// engine and compiled batch variants. Only declared names are provided,
-/// so override graphs without an inference stage need none.
+/// so override graphs without an inference stage need none — and the
+/// engine itself is only loaded when some declared name needs it
+/// (`engine` is `None` for engine-less graphs, e.g. the whole scenario
+/// catalog).
 fn serving_side_packets(
     config: &GraphConfig,
-    engine: &InferenceEngine,
+    engine: Option<&InferenceEngine>,
     variants: &[usize],
 ) -> SidePackets {
     let mut side = SidePackets::new();
     for sp in &config.input_side_packets {
         if sp.name == "engine" {
-            side.insert(
-                "engine".into(),
-                Packet::new(engine.clone(), Timestamp::UNSET),
-            );
+            if let Some(engine) = engine {
+                side.insert(
+                    "engine".into(),
+                    Packet::new(engine.clone(), Timestamp::UNSET),
+                );
+            }
         } else if sp.name == "variants" {
             side.insert(
                 "variants".into(),
@@ -1057,29 +1183,6 @@ impl PipelineServer {
             // into the controller's [1, max] range.
             cfg.pipeline_depth = cfg.pipeline_depth.min(cfg.pipeline_depth_max);
         }
-        let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
-        // Supported batch variants, ascending.
-        let mut variants: Vec<usize> = Vec::new();
-        for m in engine.models() {
-            if m == "detector" {
-                variants.push(1);
-            } else if let Some(n) = m.strip_prefix("detector_b") {
-                if let Ok(n) = n.parse::<usize>() {
-                    variants.push(n);
-                }
-            }
-        }
-        if variants.is_empty() {
-            return Err(MpError::Runtime(
-                "no detector models in the artifact manifest".into(),
-            ));
-        }
-        variants.sort_unstable();
-        // A batch can only be as large as the largest compiled variant —
-        // the preprocess node cannot pad *down*.
-        let largest = *variants.last().expect("non-empty");
-        cfg.max_batch = cfg.max_batch.clamp(1, largest);
-
         // The executor all pooled serving graphs submit to: a named
         // process-wide pool when configured (so several servers / other
         // graphs can share workers), a private pool otherwise.
@@ -1127,7 +1230,54 @@ impl PipelineServer {
             };
             registry.register(&graph_name, &default_config)?;
         }
-        // Surfaces an unknown `graph_name` here, at startup.
+        // The served graph's typed I/O contract, frozen at register /
+        // swap time — and the servability gate: a graph whose streams
+        // the data plane cannot carry is refused here, before any
+        // traffic. (Also surfaces an unknown `graph_name` at startup.)
+        let version = registry.get(&graph_name)?;
+        let descriptor = version.descriptor().clone();
+        descriptor.ensure_servable()?;
+        if !descriptor.batched {
+            // Per-frame graphs take one request per graph timestamp;
+            // coalescing above 1 would fuse unrelated requests.
+            cfg.max_batch = 1;
+        }
+        // Artifacts (the shared engine + its compiled batch variants)
+        // are loaded only when the served config actually declares the
+        // side packets that carry them — catalog graphs, echo pipelines
+        // and other engine-less configs serve without an artifact dir.
+        let needs_engine = version
+            .config()
+            .input_side_packets
+            .iter()
+            .any(|sp| sp.name == "engine" || sp.name == "variants");
+        let (engine, variants) = if needs_engine {
+            let engine = crate::runtime::shared_engine(&cfg.artifact_dir)?;
+            // Supported batch variants, ascending.
+            let mut variants: Vec<usize> = Vec::new();
+            for m in engine.models() {
+                if m == "detector" {
+                    variants.push(1);
+                } else if let Some(n) = m.strip_prefix("detector_b") {
+                    if let Ok(n) = n.parse::<usize>() {
+                        variants.push(n);
+                    }
+                }
+            }
+            if variants.is_empty() {
+                return Err(MpError::Runtime(
+                    "no detector models in the artifact manifest".into(),
+                ));
+            }
+            variants.sort_unstable();
+            // A batch can only be as large as the largest compiled
+            // variant — the preprocess node cannot pad *down*.
+            let largest = *variants.last().expect("non-empty");
+            cfg.max_batch = cfg.max_batch.clamp(1, largest);
+            (Some(engine), variants)
+        } else {
+            (None, Vec::new())
+        };
         let pool = GraphPool::from_registry(
             Arc::clone(&registry),
             &graph_name,
@@ -1152,6 +1302,8 @@ impl PipelineServer {
             let hook_engine = engine.clone();
             let hook_variants = variants.clone();
             let hook_metrics = Arc::clone(&metrics);
+            let hook_input = descriptor.input_stream.clone();
+            let hook_outputs = descriptor.output_streams();
             let max_timestamps = cfg.session_max_timestamps;
             pool.set_refill_followup(move |pool| {
                 let Some(slot) = slot.upgrade() else { return };
@@ -1183,13 +1335,20 @@ impl PipelineServer {
                 // Side packets come from the checked-out instance's own
                 // version, so a swap can never pair a new graph with old
                 // side packets (or vice versa).
-                let side =
-                    serving_side_packets(graph.version().config(), &hook_engine, &hook_variants);
+                let side = serving_side_packets(
+                    graph.version().config(),
+                    hook_engine.as_ref(),
+                    &hook_variants,
+                );
                 // Open failures are not retried here; the next inline
                 // activation surfaces them to the failing batch.
-                if let Ok(session) =
-                    StreamingSession::start(graph, "frames", "detections", side, max_timestamps)
-                {
+                if let Ok(session) = StreamingSession::start_multi(
+                    graph,
+                    &hook_input,
+                    &hook_outputs,
+                    side,
+                    max_timestamps,
+                ) {
                     let mut slot = lock_recover(&slot);
                     if slot.is_none() {
                         hook_metrics.sessions_prewarmed.inc();
@@ -1205,9 +1364,12 @@ impl PipelineServer {
         let adm2 = Arc::clone(&admission);
         let cfg2 = cfg.clone();
         let pool2 = pool.clone();
+        let desc2 = descriptor.clone();
         let worker = std::thread::Builder::new()
             .name("mp-serving-batcher".into())
-            .spawn(move || batcher_main(cfg2, engine, variants, pool2, ev2, standby2, adm2, m2))
+            .spawn(move || {
+                batcher_main(cfg2, engine, variants, desc2, pool2, ev2, standby2, adm2, m2)
+            })
             .map_err(|e| MpError::Runtime(format!("spawn batcher: {e}")))?;
         Ok(PipelineServer {
             events,
@@ -1215,6 +1377,7 @@ impl PipelineServer {
             admission,
             next_client: AtomicU64::new(0),
             cfg,
+            descriptor,
             worker: Some(worker),
             executor,
             pool,
@@ -1227,8 +1390,10 @@ impl PipelineServer {
     /// serves and kick the blue-green cutover (module docs, "Graph
     /// registry & hot-swap"): validation happens here, new checkouts /
     /// prewarms land on the new version, in-flight work drains on the
-    /// old one. The config must keep the serving graph interface
-    /// (`"frames"` in, `"detections"` out). Returns the published
+    /// old one. The config must keep the incumbent's typed I/O contract
+    /// ([`IoDescriptor`]) — the registry refuses contract-changing
+    /// swaps, so a published version can never invalidate the
+    /// descriptor this server resolved at start. Returns the published
     /// version number; on validation failure nothing changes and
     /// traffic continues on the current version.
     pub fn swap_graph(&self, config: &GraphConfig) -> MpResult<u64> {
@@ -1255,6 +1420,12 @@ impl PipelineServer {
         &self.pool
     }
 
+    /// The served graph's typed I/O contract (module docs, "The typed
+    /// data plane").
+    pub fn descriptor(&self) -> &IoDescriptor {
+        &self.descriptor
+    }
+
     /// Mint a submission handle. Each call is a new **client** for
     /// reply-release ordering; clone the handle to share one client's
     /// FIFO stream across threads.
@@ -1264,6 +1435,7 @@ impl PipelineServer {
             admission: Arc::clone(&self.admission),
             metrics: Arc::clone(&self.metrics),
             input_size: self.cfg.input_size,
+            input_kind: self.descriptor.input_kind,
             max_batch: self.cfg.max_batch,
             max_queue_depth: self.cfg.max_queue_depth,
             request_deadline: self.cfg.request_deadline,
@@ -1301,11 +1473,17 @@ fn reply_error(jobs: &[Job], e: &MpError, metrics: &ServerMetrics) {
     }
 }
 
+/// Take a job's payload for submission, leaving a cheap placeholder
+/// (the reply seam still owns the job for delivery bookkeeping).
+fn take_payload(job: &mut Job) -> ServingPayload {
+    std::mem::replace(&mut job.payload, ServingPayload::Tensor(Vec::new()))
+}
+
 /// Drive one batch through a pooled graph run; returns one detections
 /// list per request row.
 fn run_batch(
     pool: &GraphPool,
-    engine: &InferenceEngine,
+    engine: Option<&InferenceEngine>,
     variants: &[usize],
     frames: BatchFrames,
     batch_timeout: Duration,
@@ -1345,6 +1523,56 @@ fn run_batch(
         )));
     }
     Ok(out)
+}
+
+/// Drive one request through a pooled **per-frame** graph run: submit
+/// the payload on the descriptor's input stream, poll every declared
+/// output, and resolve to one typed result (a single output's payload,
+/// or a [`ServingPayload::Map`] keyed by stream name).
+fn run_frame(
+    pool: &GraphPool,
+    engine: Option<&InferenceEngine>,
+    variants: &[usize],
+    descriptor: &IoDescriptor,
+    payload: ServingPayload,
+    batch_timeout: Duration,
+    metrics: &ServerMetrics,
+) -> MpResult<ServingPayload> {
+    let mut g = pool.checkout()?;
+    let mut pollers = Vec::with_capacity(descriptor.outputs.len());
+    for (name, _) in &descriptor.outputs {
+        pollers.push((name.clone(), g.poller(name)?));
+    }
+    let side = serving_side_packets(g.version().config(), engine, variants);
+    g.start_run(side)?;
+    g.add_packet(&descriptor.input_stream, payload.into_packet(Timestamp::new(0)))?;
+    g.close_all_inputs()?;
+    let mut entries = Vec::with_capacity(pollers.len());
+    for (name, poller) in pollers {
+        match poller.poll(batch_timeout) {
+            Poll::Packet(p) => entries.push((name, ServingPayload::from_packet(&p)?)),
+            Poll::Done => {
+                // The run terminated without producing this output:
+                // surface the graph's error.
+                g.wait_until_done()?;
+                return Err(MpError::Runtime(format!(
+                    "serving pipeline closed without output on '{name}'"
+                )));
+            }
+            Poll::TimedOut => {
+                return Err(MpError::Runtime("serving pipeline timed out".into()))
+            }
+        }
+    }
+    g.wait_until_done()?;
+    metrics.graph_runs.inc();
+    metrics
+        .trace_events
+        .add(g.tracer().snapshot().len() as u64);
+    match entries.len() {
+        1 => Ok(entries.pop().expect("one entry").1),
+        _ => Ok(ServingPayload::Map(entries)),
+    }
 }
 
 /// Why a streaming session is being retired (metrics attribution).
@@ -1413,8 +1641,12 @@ const ADAPT_INTERVAL: u32 = 4;
 /// streaming").
 struct Streaming<'a> {
     cfg: &'a ServerConfig,
-    engine: &'a InferenceEngine,
+    engine: Option<&'a InferenceEngine>,
     variants: &'a [usize],
+    /// The served graph's typed I/O contract (and its precomputed
+    /// output-stream list, for session activation).
+    descriptor: &'a IoDescriptor,
+    outputs: Vec<String>,
     pool: &'a GraphPool,
     metrics: &'a ServerMetrics,
     events: &'a Arc<EventQueue>,
@@ -1503,24 +1735,42 @@ impl Streaming<'_> {
         }
         self.adapt_depth();
         let rows = batch.jobs.len();
-        let outcome = result.and_then(|pkt| {
-            let out = pkt.get::<Vec<Detections>>()?;
-            if out.len() == rows {
-                Ok(out.clone())
-            } else {
-                Err(MpError::Internal(format!(
-                    "pipeline returned {} rows for {} requests",
-                    out.len(),
-                    rows
-                )))
-            }
-        });
+        let outcome = if self.descriptor.batched {
+            // Detector shape: one packet carries every row's detections.
+            result.and_then(|pkt| {
+                let out = pkt.get::<Vec<Detections>>()?;
+                if out.len() == rows {
+                    Ok(out
+                        .clone()
+                        .into_iter()
+                        .map(ServingPayload::Detections)
+                        .collect::<Vec<_>>())
+                } else {
+                    Err(MpError::Internal(format!(
+                        "pipeline returned {} rows for {} requests",
+                        out.len(),
+                        rows
+                    )))
+                }
+            })
+        } else {
+            // Per-frame shape: one typed result for the batch's single
+            // job (`max_batch` is forced to 1 for per-frame graphs).
+            result.and_then(|pkt| {
+                if rows != 1 {
+                    return Err(MpError::Internal(format!(
+                        "per-frame batch carried {rows} jobs"
+                    )));
+                }
+                ServingPayload::from_packet(&pkt).map(|p| vec![p])
+            })
+        };
         match outcome {
-            Ok(rows) => {
-                for (dets, job) in rows.into_iter().zip(&batch.jobs) {
+            Ok(payloads) => {
+                for (p, job) in payloads.into_iter().zip(&batch.jobs) {
                     self.metrics.requests.inc();
                     self.metrics.e2e_latency.record(job.enqueued.elapsed());
-                    let _ = job.reply.send(Ok(dets));
+                    let _ = job.reply.send(Ok(p));
                 }
                 Ok(())
             }
@@ -1680,10 +1930,10 @@ impl Streaming<'_> {
                         self.engine,
                         self.variants,
                     );
-                    StreamingSession::start(
+                    StreamingSession::start_multi(
                         graph,
-                        "frames",
-                        "detections",
+                        &self.descriptor.input_stream,
+                        &self.outputs,
                         side,
                         self.cfg.session_max_timestamps,
                     )?
@@ -1704,10 +1954,22 @@ impl Streaming<'_> {
     /// the session retires eagerly, so the swap happens off the next
     /// batch's critical path.
     fn submit(&mut self, mut jobs: Vec<Job>) {
-        let frames: BatchFrames = jobs
-            .iter_mut()
-            .map(|j| std::mem::take(&mut j.tensor))
-            .collect();
+        let input = if self.descriptor.batched {
+            // Detector shape: fuse the rows into one BatchFrames packet
+            // (the admission gate guarantees every payload is a tensor).
+            let frames: BatchFrames = jobs
+                .iter_mut()
+                .map(|j| match take_payload(j) {
+                    ServingPayload::Tensor(t) => t,
+                    _ => Vec::new(),
+                })
+                .collect();
+            Packet::new(frames, Timestamp::UNSET)
+        } else {
+            // Per-frame shape: the batch is a single job (`max_batch`
+            // is forced to 1), submitted as its own timestamp.
+            take_payload(&mut jobs[0]).into_packet(Timestamp::UNSET)
+        };
         // Make room first: an erroring front retires the old session
         // before this batch binds to any session.
         while self.pending.len() >= self.live_depth() {
@@ -1718,7 +1980,7 @@ impl Streaming<'_> {
             return;
         }
         let session = self.session.as_ref().expect("session ensured");
-        match session.submit(Packet::new(frames, Timestamp::UNSET)) {
+        match session.submit(input) {
             Ok(ticket) => {
                 let seq = self.next_seq;
                 self.next_seq += 1;
@@ -1771,18 +2033,22 @@ impl Streaming<'_> {
 #[allow(clippy::too_many_arguments)]
 fn batcher_main(
     cfg: ServerConfig,
-    engine: InferenceEngine,
+    engine: Option<InferenceEngine>,
     variants: Vec<usize>,
+    descriptor: IoDescriptor,
     pool: GraphPool,
     events: Arc<EventQueue>,
     standby: StandbySlot,
     admission: Arc<Admission>,
     metrics: Arc<ServerMetrics>,
 ) {
+    let outputs = descriptor.output_streams();
     let mut streaming = Streaming {
         cfg: &cfg,
-        engine: &engine,
+        engine: engine.as_ref(),
         variants: &variants,
+        descriptor: &descriptor,
+        outputs,
         pool: &pool,
         metrics: &metrics,
         events: &events,
@@ -1873,30 +2139,54 @@ fn batcher_main(
 
         match cfg.mode {
             ServingMode::Pooled => {
-                let frames: BatchFrames = batch
-                    .iter_mut()
-                    .map(|j| std::mem::take(&mut j.tensor))
-                    .collect();
                 admission.inflight.fetch_add(1, Ordering::Relaxed);
                 let t0 = Instant::now();
-                let result = run_batch(
-                    &pool,
-                    &engine,
-                    &variants,
-                    frames,
-                    cfg.batch_timeout,
-                    &metrics,
-                );
+                let result = if descriptor.batched {
+                    // Detector shape: fuse the rows into one
+                    // BatchFrames run (the admission gate guarantees
+                    // every payload is a tensor).
+                    let frames: BatchFrames = batch
+                        .iter_mut()
+                        .map(|j| match take_payload(j) {
+                            ServingPayload::Tensor(t) => t,
+                            _ => Vec::new(),
+                        })
+                        .collect();
+                    run_batch(
+                        &pool,
+                        engine.as_ref(),
+                        &variants,
+                        frames,
+                        cfg.batch_timeout,
+                        &metrics,
+                    )
+                    .map(|rows| {
+                        rows.into_iter().map(ServingPayload::Detections).collect()
+                    })
+                } else {
+                    // Per-frame shape: one run per request (`max_batch`
+                    // is forced to 1 for per-frame graphs).
+                    run_frame(
+                        &pool,
+                        engine.as_ref(),
+                        &variants,
+                        &descriptor,
+                        take_payload(&mut batch[0]),
+                        cfg.batch_timeout,
+                        &metrics,
+                    )
+                    .map(|p| vec![p])
+                };
                 let residence = t0.elapsed();
                 admission.dec_inflight();
                 metrics.infer_latency.record(residence);
                 Admission::ewma_update(&admission.infer_ewma_us, residence.as_micros() as u64);
                 match result {
                     Ok(per_request) => {
-                        for (dets, job) in per_request.into_iter().zip(&batch) {
+                        for (p, job) in per_request.into_iter().zip(&batch) {
                             metrics.requests.inc();
                             metrics.e2e_latency.record(job.enqueued.elapsed());
-                            let _ = job.reply.send(Ok(dets));
+                            let _ = job.reply.send(Ok(p));
                         }
                     }
                     Err(e) => reply_error(&batch, &e, &metrics),
@@ -1914,11 +2204,11 @@ mod tests {
     fn test_job(
         client: u64,
         deadline: Option<Instant>,
-    ) -> (Job, mpsc::Receiver<MpResult<Detections>>) {
+    ) -> (Job, mpsc::Receiver<MpResult<ServingPayload>>) {
         let (reply, rx) = mpsc::channel();
         (
             Job {
-                tensor: vec![0.0; 4],
+                payload: ServingPayload::Tensor(vec![0.0; 4]),
                 reply: ReplyTo::Channel(reply),
                 enqueued: Instant::now(),
                 deadline,

@@ -1,0 +1,538 @@
+//! The typed serving **payload seam**: one value representation every
+//! serving layer routes — batcher, streaming sessions, wire format,
+//! socket worker, router and CLI — so the data plane is no longer
+//! hard-wired to `ImageFrame` in / `Detections` out.
+//!
+//! Two pieces:
+//!
+//! * [`ServingPayload`] — the closed set of values a request or reply
+//!   can carry: an image frame, a flat f32 tensor, a detection list, a
+//!   landmark list, or a named map of payloads (multi-output graphs,
+//!   and domain types such as joint angles that decompose into named
+//!   parts). Zero-dependency by construction: every variant is built
+//!   from crate-owned types.
+//! * [`IoDescriptor`] — the per-[`crate::serving::GraphVersion`] I/O
+//!   contract: which input stream a served graph consumes (and as what
+//!   payload kind), which output streams it produces (and as what
+//!   kinds), and whether it speaks the *batched* detector shape (one
+//!   packet = a `Vec` of per-request tensors, one output packet = a
+//!   `Vec` of per-request detection rows) or the *per-frame* shape (one
+//!   packet per request timestamp). Descriptors are **inferred from the
+//!   validated plan** — the declared [`crate::packet::PacketType`]s of
+//!   the graph's input consumers and output producers — so they are
+//!   computed exactly once, at `register`/`swap` time, never on the
+//!   request path.
+//!
+//! Stream types the data plane cannot convert infer as
+//! [`PayloadKind::Opaque`]. Registration tolerates them (the registry
+//! also hosts generic graphs that are never served), but
+//! [`IoDescriptor::ensure_servable`] — called by
+//! [`crate::serving::PipelineServer::start`] — rejects them with a
+//! typed validation error before any traffic flows.
+
+use crate::calculators::scenarios::{HolisticResult, JointAngles};
+use crate::error::{MpError, MpResult};
+use crate::graph::GraphConfig;
+use crate::packet::{Packet, PacketType};
+use crate::perception::types::{Detections, LandmarkList};
+use crate::perception::ImageFrame;
+use crate::serving::pipeline::BatchFrames;
+use crate::timestamp::Timestamp;
+
+/// One typed value crossing the serving data plane — submitted as a
+/// request or returned as a result, in-process or over the wire.
+#[derive(Clone, Debug)]
+pub enum ServingPayload {
+    /// An image frame (HWC f32, as [`ImageFrame`]).
+    Frame(ImageFrame),
+    /// A flat f32 vector (a preprocessed tensor row).
+    Tensor(Vec<f32>),
+    /// A detection list.
+    Detections(Detections),
+    /// A landmark list.
+    Landmarks(LandmarkList),
+    /// A named multi-output map: one entry per named part, in a stable
+    /// declared order. Multi-output graphs resolve to one `Map` per
+    /// timestamp (stream name → that stream's payload); domain types
+    /// such as [`JointAngles`] decompose into named entries.
+    Map(Vec<(String, ServingPayload)>),
+}
+
+impl PartialEq for ServingPayload {
+    fn eq(&self, other: &ServingPayload) -> bool {
+        match (self, other) {
+            (ServingPayload::Frame(a), ServingPayload::Frame(b)) => {
+                a.width == b.width
+                    && a.height == b.height
+                    && a.channels == b.channels
+                    && a.data.as_slice() == b.data.as_slice()
+            }
+            (ServingPayload::Tensor(a), ServingPayload::Tensor(b)) => a == b,
+            (ServingPayload::Detections(a), ServingPayload::Detections(b)) => a == b,
+            (ServingPayload::Landmarks(a), ServingPayload::Landmarks(b)) => {
+                a.points == b.points
+            }
+            (ServingPayload::Map(a), ServingPayload::Map(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl ServingPayload {
+    /// The kind tag of this value.
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            ServingPayload::Frame(_) => PayloadKind::Frame,
+            ServingPayload::Tensor(_) => PayloadKind::Tensor,
+            ServingPayload::Detections(_) => PayloadKind::Detections,
+            ServingPayload::Landmarks(_) => PayloadKind::Landmarks,
+            ServingPayload::Map(_) => PayloadKind::Map,
+        }
+    }
+
+    /// Short human-readable shape summary (CLI / error messages).
+    pub fn summary(&self) -> String {
+        match self {
+            ServingPayload::Frame(f) => {
+                format!("frame({}x{}x{})", f.width, f.height, f.channels)
+            }
+            ServingPayload::Tensor(t) => format!("tensor({})", t.len()),
+            ServingPayload::Detections(d) => format!("detections({})", d.len()),
+            ServingPayload::Landmarks(l) => format!("landmarks({} pts)", l.points.len()),
+            ServingPayload::Map(m) => {
+                let names: Vec<&str> = m.iter().map(|(n, _)| n.as_str()).collect();
+                format!("map({})", names.join(","))
+            }
+        }
+    }
+
+    /// Look up a named entry of a [`ServingPayload::Map`].
+    pub fn entry(&self, name: &str) -> Option<&ServingPayload> {
+        match self {
+            ServingPayload::Map(m) => m.iter().find(|(n, _)| n == name).map(|(_, p)| p),
+            _ => None,
+        }
+    }
+
+    /// Convert a graph result packet into a payload, by the packet's
+    /// concrete type. Every type the catalog's calculators emit (plus
+    /// an already-assembled `ServingPayload`, which multi-output
+    /// session aggregation produces) converts; anything else is a typed
+    /// mismatch naming the offending type.
+    pub fn from_packet(pkt: &Packet) -> MpResult<ServingPayload> {
+        if let Ok(p) = pkt.get::<ServingPayload>() {
+            return Ok(p.clone());
+        }
+        if let Ok(d) = pkt.get::<Detections>() {
+            return Ok(ServingPayload::Detections(d.clone()));
+        }
+        if let Ok(l) = pkt.get::<LandmarkList>() {
+            return Ok(ServingPayload::Landmarks(l.clone()));
+        }
+        if let Ok(a) = pkt.get::<JointAngles>() {
+            return Ok(ServingPayload::from_angles(a));
+        }
+        if let Ok(h) = pkt.get::<HolisticResult>() {
+            return Ok(ServingPayload::from_holistic(h));
+        }
+        if let Ok(t) = pkt.get::<Vec<f32>>() {
+            return Ok(ServingPayload::Tensor(t.clone()));
+        }
+        if let Ok(f) = pkt.get::<ImageFrame>() {
+            return Ok(ServingPayload::Frame(f.clone()));
+        }
+        Err(MpError::PacketTypeMismatch {
+            expected: "a serving payload type",
+            actual: pkt.type_name(),
+        })
+    }
+
+    /// Wrap this payload in an input packet at `ts`, as the concrete
+    /// type a graph's input port expects ([`ServingPayload::Map`] stays
+    /// wrapped — no calculator consumes it directly).
+    pub fn into_packet(self, ts: Timestamp) -> Packet {
+        match self {
+            ServingPayload::Frame(f) => Packet::new(f, ts),
+            ServingPayload::Tensor(t) => Packet::new(t, ts),
+            ServingPayload::Detections(d) => Packet::new(d, ts),
+            ServingPayload::Landmarks(l) => Packet::new(l, ts),
+            map @ ServingPayload::Map(_) => Packet::new(map, ts),
+        }
+    }
+
+    /// Unwrap into a detection list — the detector-era compat seam:
+    /// `Detections`-typed handles ([`crate::serving::ServerHandle::detect`]
+    /// and friends) funnel every result through here.
+    pub fn into_detections(self) -> MpResult<Detections> {
+        match self {
+            ServingPayload::Detections(d) => Ok(d),
+            other => Err(MpError::PacketTypeMismatch {
+                expected: "detections",
+                actual: other.kind().name(),
+            }),
+        }
+    }
+
+    /// Joint angles decompose into one named single-element tensor per
+    /// joint, preserving the calculator's declared order.
+    pub fn from_angles(a: &JointAngles) -> ServingPayload {
+        ServingPayload::Map(
+            a.angles
+                .iter()
+                .map(|(name, v)| (name.clone(), ServingPayload::Tensor(vec![*v])))
+                .collect(),
+        )
+    }
+
+    /// A holistic result decomposes into named landmark lists: `pose`,
+    /// `hand_0..`, `face`.
+    pub fn from_holistic(h: &HolisticResult) -> ServingPayload {
+        let mut entries = Vec::with_capacity(2 + h.hands.len());
+        entries.push((
+            "pose".to_string(),
+            ServingPayload::Landmarks(h.pose.clone()),
+        ));
+        for (i, hand) in h.hands.iter().enumerate() {
+            entries.push((
+                format!("hand_{i}"),
+                ServingPayload::Landmarks(hand.clone()),
+            ));
+        }
+        entries.push((
+            "face".to_string(),
+            ServingPayload::Landmarks(h.face.clone()),
+        ));
+        ServingPayload::Map(entries)
+    }
+}
+
+/// The kind of payload a declared stream carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// [`ImageFrame`].
+    Frame,
+    /// `Vec<f32>`.
+    Tensor,
+    /// [`Detections`].
+    Detections,
+    /// [`LandmarkList`].
+    Landmarks,
+    /// A named multi-part value ([`ServingPayload::Map`]).
+    Map,
+    /// A stream type the serving data plane cannot convert. Tolerated
+    /// at registration (generic registry entries), refused at serve
+    /// time ([`IoDescriptor::ensure_servable`]).
+    Opaque,
+}
+
+impl PayloadKind {
+    /// Stable lower-case name (errors, CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PayloadKind::Frame => "frame",
+            PayloadKind::Tensor => "tensor",
+            PayloadKind::Detections => "detections",
+            PayloadKind::Landmarks => "landmarks",
+            PayloadKind::Map => "map",
+            PayloadKind::Opaque => "opaque",
+        }
+    }
+}
+
+/// The serving I/O contract of one validated graph version: declared
+/// input/output stream names and payload kinds, plus whether the graph
+/// speaks the batched detector shape (module docs). Inferred by
+/// [`IoDescriptor::infer`] during [`crate::serving::GraphVersion`]
+/// validation and frozen on the version.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IoDescriptor {
+    /// The graph input stream serving submits on (first declared input;
+    /// empty for graphs with no input stream — never servable).
+    pub input_stream: String,
+    /// What one request submits on `input_stream`.
+    pub input_kind: PayloadKind,
+    /// Declared graph outputs in config order, each with the payload
+    /// kind its producer emits. One output ⇒ results are that payload;
+    /// several ⇒ results aggregate into a [`ServingPayload::Map`] keyed
+    /// by stream name.
+    pub outputs: Vec<(String, PayloadKind)>,
+    /// Detector shape: the input packet carries a `Vec` of per-request
+    /// tensors and the single output packet a `Vec` of per-request
+    /// detection rows, so one graph timestamp serves a whole batch.
+    /// Per-frame graphs (`false`) get one timestamp per request.
+    pub batched: bool,
+}
+
+impl IoDescriptor {
+    /// Derive the descriptor from an expanded config and the declared
+    /// packet types of its port contracts. Input kinds come from the
+    /// input stream's consumer contracts (graph-input streams carry no
+    /// producer type in the plan), walking through type-erased
+    /// pass-through stages to the first concretely typed port; output
+    /// kinds come from the producing port recorded in the plan.
+    pub fn infer(config: &GraphConfig, plan: &crate::graph::Plan) -> IoDescriptor {
+        let input_stream = config
+            .input_streams
+            .first()
+            .map(|b| b.name.clone())
+            .unwrap_or_default();
+        let input_type = plan
+            .graph_inputs
+            .get(&input_stream)
+            .map(|&si| consumer_type(plan, si))
+            .unwrap_or(PacketType::Any);
+        let (input_kind, batched) = input_kind_of(&input_type);
+        let outputs = plan
+            .graph_outputs
+            .iter()
+            .map(|(name, si)| {
+                (
+                    name.clone(),
+                    output_kind_of(&plan.streams[*si].packet_type, batched),
+                )
+            })
+            .collect();
+        IoDescriptor {
+            input_stream,
+            input_kind,
+            outputs,
+            batched,
+        }
+    }
+
+    /// The detector pipeline's shape, for reference and tests.
+    pub fn detector_default() -> IoDescriptor {
+        IoDescriptor {
+            input_stream: "frames".to_string(),
+            input_kind: PayloadKind::Tensor,
+            outputs: vec![("detections".to_string(), PayloadKind::Detections)],
+            batched: true,
+        }
+    }
+
+    /// The declared output stream names, in order.
+    pub fn output_streams(&self) -> Vec<String> {
+        self.outputs.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// The payload kind one resolved result carries: the single
+    /// output's kind, or [`PayloadKind::Map`] for multi-output graphs.
+    pub fn result_kind(&self) -> PayloadKind {
+        match self.outputs.as_slice() {
+            [(_, k)] => *k,
+            _ => PayloadKind::Map,
+        }
+    }
+
+    /// Can the serving data plane route this graph? Typed validation:
+    /// an input stream must exist and convert, no output may be opaque,
+    /// and the batched shape must be exactly the detector's.
+    pub fn ensure_servable(&self) -> MpResult<()> {
+        if self.input_stream.is_empty() {
+            return Err(MpError::Validation(
+                "serving: graph declares no input stream".into(),
+            ));
+        }
+        if self.input_kind == PayloadKind::Opaque {
+            return Err(MpError::Validation(format!(
+                "serving: input stream '{}' has a type the data plane cannot \
+                 carry (declare an image-frame or tensor input)",
+                self.input_stream
+            )));
+        }
+        if self.outputs.is_empty() {
+            return Err(MpError::Validation(
+                "serving: graph declares no output stream".into(),
+            ));
+        }
+        if let Some((name, _)) = self
+            .outputs
+            .iter()
+            .find(|(_, k)| *k == PayloadKind::Opaque)
+        {
+            return Err(MpError::Validation(format!(
+                "serving: output stream '{name}' has a type the data plane \
+                 cannot carry"
+            )));
+        }
+        if self.batched
+            && (self.outputs.len() != 1 || self.outputs[0].1 != PayloadKind::Detections)
+        {
+            return Err(MpError::Validation(
+                "serving: a batched (detector-shaped) graph must declare \
+                 exactly one per-row detections output"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The declared input type governing stream `si` (graph-input streams
+/// have no producer, so consumer contracts are the only source of type
+/// evidence). Type-erased pass-through stages — consumer ports declared
+/// [`PacketType::Any`], e.g. `BusyWorkCalculator` busy-work chains —
+/// are walked *through*: the search follows their output streams
+/// downstream until a concretely typed consumer port is found. Cycles
+/// (declared back edges) are bounded by the visited-stream set.
+fn consumer_type(plan: &crate::graph::Plan, si: usize) -> PacketType {
+    let mut seen = vec![false; plan.streams.len()];
+    let mut frontier = vec![si];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for si in frontier {
+            if std::mem::replace(&mut seen[si], true) {
+                continue;
+            }
+            for &(ni, port) in &plan.streams[si].consumers {
+                let node = &plan.nodes[ni];
+                let t = node
+                    .contract
+                    .inputs
+                    .get(port)
+                    .map(|p| p.packet_type)
+                    .unwrap_or(PacketType::Any);
+                if !matches!(t, PacketType::Any) {
+                    return t;
+                }
+                next.extend(
+                    node.out_streams.iter().copied().filter(|&o| o != usize::MAX),
+                );
+            }
+        }
+        frontier = next;
+    }
+    PacketType::Any
+}
+
+fn is<T: std::any::Any + Send + Sync>(t: &PacketType) -> bool {
+    matches!(t, PacketType::Of(id, _) if *id == std::any::TypeId::of::<T>())
+}
+
+/// Input-side kind mapping; `BatchFrames` marks the batched shape.
+fn input_kind_of(t: &PacketType) -> (PayloadKind, bool) {
+    if is::<BatchFrames>(t) {
+        (PayloadKind::Tensor, true)
+    } else if is::<ImageFrame>(t) {
+        (PayloadKind::Frame, false)
+    } else if is::<Vec<f32>>(t) {
+        (PayloadKind::Tensor, false)
+    } else {
+        (PayloadKind::Opaque, false)
+    }
+}
+
+/// Output-side kind mapping. The per-row `Vec<Detections>` shape is
+/// only meaningful on a batched graph.
+fn output_kind_of(t: &PacketType, batched: bool) -> PayloadKind {
+    if batched && is::<Vec<Detections>>(t) {
+        PayloadKind::Detections
+    } else if is::<Detections>(t) {
+        PayloadKind::Detections
+    } else if is::<LandmarkList>(t) {
+        PayloadKind::Landmarks
+    } else if is::<JointAngles>(t) || is::<HolisticResult>(t) {
+        PayloadKind::Map
+    } else if is::<Vec<f32>>(t) {
+        PayloadKind::Tensor
+    } else if is::<ImageFrame>(t) {
+        PayloadKind::Frame
+    } else {
+        PayloadKind::Opaque
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perception::types::{Detection, Rect};
+
+    #[test]
+    fn payload_kinds_and_summaries() {
+        let f = ServingPayload::Frame(ImageFrame::filled(2, 2, 1, 0.5));
+        assert_eq!(f.kind(), PayloadKind::Frame);
+        assert_eq!(f.summary(), "frame(2x2x1)");
+        let t = ServingPayload::Tensor(vec![1.0, 2.0]);
+        assert_eq!(t.kind(), PayloadKind::Tensor);
+        let d = ServingPayload::Detections(vec![Detection::new(
+            Rect::new(0.1, 0.1, 0.2, 0.2),
+            0.9,
+            0,
+        )]);
+        assert_eq!(d.kind(), PayloadKind::Detections);
+        assert_eq!(d.summary(), "detections(1)");
+        let m = ServingPayload::Map(vec![("a".into(), t.clone())]);
+        assert_eq!(m.kind(), PayloadKind::Map);
+        assert_eq!(m.entry("a"), Some(&t));
+        assert_eq!(m.entry("b"), None);
+    }
+
+    #[test]
+    fn packet_round_trip_by_concrete_type() {
+        let lm = LandmarkList::new(vec![(0.1, 0.2), (0.3, 0.4)]);
+        let pkt = Packet::new(lm.clone(), Timestamp::new(3));
+        match ServingPayload::from_packet(&pkt).unwrap() {
+            ServingPayload::Landmarks(got) => assert_eq!(got.points, lm.points),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // An unconvertible packet is a typed mismatch naming the type.
+        let pkt = Packet::new(7i64, Timestamp::new(0));
+        match ServingPayload::from_packet(&pkt) {
+            Err(MpError::PacketTypeMismatch { actual, .. }) => {
+                assert!(actual.contains("i64"))
+            }
+            other => panic!("expected typed mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn angles_and_holistic_decompose_into_named_maps() {
+        let a = JointAngles {
+            angles: vec![("left_elbow".into(), 1.5), ("right_knee".into(), 0.7)],
+        };
+        let m = ServingPayload::from_angles(&a);
+        assert_eq!(m.kind(), PayloadKind::Map);
+        match m.entry("right_knee") {
+            Some(ServingPayload::Tensor(v)) => assert_eq!(v.as_slice(), &[0.7]),
+            other => panic!("wrong entry: {other:?}"),
+        }
+        let h = HolisticResult {
+            pose: LandmarkList::new(vec![(0.5, 0.5)]),
+            hands: vec![LandmarkList::new(vec![(0.1, 0.1)])],
+            face: LandmarkList::new(vec![(0.9, 0.9)]),
+        };
+        let m = ServingPayload::from_holistic(&h);
+        assert!(m.entry("pose").is_some());
+        assert!(m.entry("hand_0").is_some());
+        assert!(m.entry("face").is_some());
+    }
+
+    #[test]
+    fn into_detections_is_the_compat_funnel() {
+        let d = vec![Detection::new(Rect::new(0.0, 0.0, 0.1, 0.1), 0.8, 1)];
+        assert_eq!(
+            ServingPayload::Detections(d.clone()).into_detections().unwrap(),
+            d
+        );
+        match ServingPayload::Tensor(vec![1.0]).into_detections() {
+            Err(MpError::PacketTypeMismatch { actual, .. }) => {
+                assert_eq!(actual, "tensor")
+            }
+            other => panic!("expected typed mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn servable_checks_are_typed() {
+        let mut io = IoDescriptor::detector_default();
+        io.ensure_servable().unwrap();
+        io.input_kind = PayloadKind::Opaque;
+        assert!(matches!(io.ensure_servable(), Err(MpError::Validation(_))));
+        let mut io = IoDescriptor::detector_default();
+        io.outputs.clear();
+        assert!(io.ensure_servable().is_err());
+        let mut io = IoDescriptor::detector_default();
+        io.outputs.push(("extra".into(), PayloadKind::Landmarks));
+        assert!(io.ensure_servable().is_err(), "batched graphs are single-output");
+    }
+}

@@ -37,6 +37,7 @@ use crate::error::{MpError, MpResult};
 use crate::executor::Executor;
 use crate::graph::{expand_subgraphs, plan, Graph, GraphConfig, Plan, SubgraphRegistry};
 use crate::registry::CalculatorRegistry;
+use crate::serving::payload::IoDescriptor;
 
 /// One validated, immutable version of a named graph config. Holders
 /// (pooled graphs, streaming sessions) pin the version they were built
@@ -49,6 +50,10 @@ pub struct GraphVersion {
     /// from; also the source of truth for declared side packets.
     config: GraphConfig,
     plan: Plan,
+    /// The serving I/O contract inferred from the plan's declared port
+    /// types — input/output stream names and payload kinds, computed
+    /// once here at validation time, never on the request path.
+    descriptor: IoDescriptor,
 }
 
 impl GraphVersion {
@@ -64,11 +69,13 @@ impl GraphVersion {
             CalculatorRegistry::global(),
         )?;
         let plan = plan(&expanded, CalculatorRegistry::global())?;
+        let descriptor = IoDescriptor::infer(&expanded, &plan);
         Ok(GraphVersion {
             name: name.to_string(),
             version,
             config: expanded,
             plan,
+            descriptor,
         })
     }
 
@@ -95,6 +102,12 @@ impl GraphVersion {
 
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// The serving I/O contract this version validated with: declared
+    /// input/output streams and payload kinds ([`IoDescriptor`]).
+    pub fn descriptor(&self) -> &IoDescriptor {
+        &self.descriptor
     }
 
     /// Instantiate a fresh graph of this version — no re-validation,
@@ -162,13 +175,23 @@ impl GraphRegistry {
     /// Validate `config` and publish it as the next version of `name`
     /// (version N+1 for an existing name, 1 for a new one). On
     /// validation failure the current version stays published untouched
-    /// — a bad config can never take a name down.
+    /// — a bad config can never take a name down. A successor must keep
+    /// the predecessor's [`IoDescriptor`]: a blue-green swap changes the
+    /// graph *behind* the serving contract, never the contract itself
+    /// (in-flight clients hold typed expectations about both versions).
     pub fn swap(&self, name: &str, config: &GraphConfig) -> MpResult<Arc<GraphVersion>> {
         // Validate before taking the write lock: planning is the
         // expensive part and needs no registry state.
         let mut candidate = GraphVersion::validate(name, 1, config)?;
         let mut map = self.map.write().unwrap();
         if let Some(cur) = map.get(name) {
+            if cur.descriptor != candidate.descriptor {
+                return Err(MpError::Validation(format!(
+                    "swap of '{name}' changes its serving I/O contract \
+                     ({:?} -> {:?}); register a new name instead",
+                    cur.descriptor, candidate.descriptor
+                )));
+            }
             candidate.version = cur.version + 1;
         }
         let version = Arc::new(candidate);
@@ -464,5 +487,57 @@ mod tests {
             "three branches + merger after expansion: {}",
             h.plan().nodes.len()
         );
+    }
+
+    #[test]
+    fn catalog_descriptors_declare_typed_io() {
+        use crate::serving::payload::PayloadKind;
+        let reg = GraphRegistry::new();
+        install_catalog(&reg).unwrap();
+        let pose = reg.get(POSE_LANDMARK).unwrap();
+        let d = pose.descriptor();
+        assert_eq!(d.input_stream, "frame");
+        assert_eq!(d.input_kind, PayloadKind::Frame);
+        assert!(!d.batched);
+        assert_eq!(
+            d.outputs,
+            vec![
+                ("pose".to_string(), PayloadKind::Landmarks),
+                ("angles".to_string(), PayloadKind::Map),
+            ]
+        );
+        d.ensure_servable().unwrap();
+        let holistic = reg.get(HOLISTIC).unwrap();
+        assert_eq!(
+            holistic.descriptor().outputs,
+            vec![("holistic".to_string(), PayloadKind::Map)]
+        );
+        holistic.descriptor().ensure_servable().unwrap();
+        let cascade = reg.get(DETECTION_CASCADE).unwrap();
+        assert_eq!(
+            cascade.descriptor().outputs,
+            vec![
+                ("tracked".to_string(), PayloadKind::Detections),
+                ("landmarks".to_string(), PayloadKind::Landmarks),
+            ]
+        );
+        cascade.descriptor().ensure_servable().unwrap();
+    }
+
+    #[test]
+    fn swap_rejects_an_io_contract_change() {
+        let reg = GraphRegistry::new();
+        install_catalog(&reg).unwrap();
+        // pose_landmark (frame → landmarks+angles) cannot be replaced by
+        // a passthrough chain (opaque in/out) under the same name.
+        let err = reg.swap(POSE_LANDMARK, &chain(2)).unwrap_err();
+        assert!(matches!(err, MpError::Validation(_)));
+        assert!(err.to_string().contains("I/O contract"));
+        // The incumbent version survived the refused swap.
+        assert_eq!(reg.get(POSE_LANDMARK).unwrap().version(), 1);
+        assert_eq!(reg.swaps(), 0);
+        // A same-shape successor still publishes.
+        let v2 = reg.swap(POSE_LANDMARK, &pose_landmark_config()).unwrap();
+        assert_eq!(v2.version(), 2);
     }
 }

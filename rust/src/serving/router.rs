@@ -15,11 +15,18 @@
 //! * the **reader thread** on each worker connection sees the socket
 //!   die (EOF, reset, or a severed [`kill`](super::worker::WorkerServer::kill))
 //!   and marks the worker down;
-//! * marking a worker down **fails every in-flight request** on that
-//!   connection with a typed [`MpError::WorkerLost`] — callers get an
-//!   answer, never a hang — and **reroutes every session** assigned to
-//!   the dead worker to a healthy one (`workers_lost` /
-//!   `sessions_rerouted` metrics are the test evidence);
+//! * marking a worker down **resolves every in-flight request** on that
+//!   connection — callers get an answer, never a hang — and **reroutes
+//!   every session** assigned to the dead worker to a healthy one
+//!   (`workers_lost` / `sessions_rerouted` metrics are the test
+//!   evidence). Within [`RouterConfig::retry_budget`], an in-flight
+//!   request is transparently **resubmitted** on its session's rerouted
+//!   worker instead of failing (`requests_retried` counts these);
+//!   resubmission is safe because the reply is *known-absent* — replies
+//!   ride the dead connection, and the worker drops a reply whose
+//!   connection died — so the caller can never see two answers. A
+//!   request whose budget is exhausted fails with a typed
+//!   [`MpError::WorkerLost`];
 //! * a rerouted session keeps its timestamp watermark: worker-side
 //!   session state is per-connection, so the new worker accepts the
 //!   continuing timestamps fresh;
@@ -47,8 +54,10 @@ use std::time::{Duration, Instant};
 use crate::error::{MpError, MpResult};
 use crate::metrics::Counter;
 use crate::perception::{Detections, ImageFrame};
+use crate::serving::payload::ServingPayload;
 use crate::serving::wire::{
-    handshake, read_frame, write_frame, Frame, WireRequest, MAX_REQUEST_PIXELS, NO_DEADLINE,
+    handshake, payload_encoded_len, read_frame, write_frame, Frame, WireRequest, MAX_FRAME_LEN,
+    NO_DEADLINE, REQUEST_OVERHEAD,
 };
 use crate::sync::lock_recover;
 
@@ -74,6 +83,13 @@ pub struct RouterConfig {
     /// no deadline). Crosses the wire as remaining budget and is
     /// re-anchored at the worker.
     pub request_deadline: Option<Duration>,
+    /// How many times an in-flight request lost to a dying worker is
+    /// transparently resubmitted on its session's rerouted worker
+    /// before failing with [`MpError::WorkerLost`] (module docs on why
+    /// resubmission never duplicates an answer). `0` restores
+    /// fail-fast; capped at 8 — each retry retains a payload copy, and
+    /// a budget beyond the worker pool's size buys nothing.
+    pub retry_budget: u32,
 }
 
 impl RouterConfig {
@@ -85,6 +101,7 @@ impl RouterConfig {
             health_misses: 3,
             connect_timeout: Duration::from_millis(500),
             request_deadline: None,
+            retry_budget: 1,
         }
     }
 }
@@ -101,11 +118,44 @@ pub struct RouterMetrics {
     pub sessions_rerouted: Counter,
     /// Times a dead worker passed enough probes to rejoin.
     pub workers_readmitted: Counter,
+    /// In-flight requests resubmitted on a rerouted session within
+    /// [`RouterConfig::retry_budget`] instead of failing.
+    pub requests_retried: Counter,
 }
 
-/// One in-flight request's reply slot.
+/// Where a reply lands: the typed-payload channel, or the detector-era
+/// compat channel ([`Router::submit`]), which narrows the payload to
+/// detections on delivery.
+enum ReplySink {
+    Payload(mpsc::Sender<MpResult<ServingPayload>>),
+    Dets(mpsc::Sender<MpResult<Detections>>),
+}
+
+impl ReplySink {
+    fn send(&self, result: MpResult<ServingPayload>) {
+        match self {
+            ReplySink::Payload(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Dets(tx) => {
+                let _ = tx.send(result.and_then(ServingPayload::into_detections));
+            }
+        }
+    }
+}
+
+/// One in-flight request's reply slot, plus what resubmission needs.
 struct Pending {
-    tx: mpsc::Sender<MpResult<Detections>>,
+    sink: ReplySink,
+    session: u64,
+    /// Wire timestamp of this attempt — the resubmission sort key that
+    /// keeps a session's retried requests in their original order.
+    timestamp: i64,
+    /// A retained copy of the payload while `retries_left > 0`
+    /// (`None` once the budget is spent — no point holding a possibly
+    /// large payload that can never be resubmitted).
+    payload: Option<ServingPayload>,
+    retries_left: u32,
 }
 
 /// A live connection to one worker: single writer, reader-owned
@@ -187,6 +237,12 @@ impl Router {
                 "router: health_misses must be >= 1".into(),
             ));
         }
+        if cfg.retry_budget > 8 {
+            return Err(MpError::Validation(format!(
+                "router: retry_budget {} exceeds the cap of 8",
+                cfg.retry_budget
+            )));
+        }
         let workers = cfg
             .workers
             .iter()
@@ -220,19 +276,44 @@ impl Router {
         })
     }
 
-    /// Submit one frame on a streaming session. Always returns a
-    /// receiver that resolves — with detections, a typed error from the
-    /// worker ([`MpError::Overloaded`], [`MpError::DeadlineExceeded`],
-    /// [`MpError::TimestampViolation`]), a typed [`MpError::WorkerLost`]
-    /// if the session's worker dies with the request in flight, or a
-    /// routing error if no worker is healthy. Never hangs.
+    /// Submit one typed payload on a streaming session. Always returns
+    /// a receiver that resolves — with the graph's typed payload, a
+    /// typed error from the worker ([`MpError::Overloaded`],
+    /// [`MpError::DeadlineExceeded`], [`MpError::TimestampViolation`],
+    /// [`MpError::PacketTypeMismatch`]), a typed [`MpError::WorkerLost`]
+    /// if the session's worker dies with the request in flight and the
+    /// retry budget is spent, or a routing error if no worker is
+    /// healthy. Never hangs.
+    pub fn submit_payload(
+        &self,
+        session: u64,
+        payload: ServingPayload,
+    ) -> mpsc::Receiver<MpResult<ServingPayload>> {
+        let (tx, rx) = mpsc::channel();
+        self.shared.submit_inner(
+            session,
+            payload,
+            ReplySink::Payload(tx),
+            self.shared.cfg.retry_budget,
+        );
+        rx
+    }
+
+    /// Detector-era compat shim over [`Router::submit_payload`]: submit
+    /// one frame, receive detections. A non-detection reply payload
+    /// resolves as a typed [`MpError::PacketTypeMismatch`].
     pub fn submit(
         &self,
         session: u64,
         frame: &ImageFrame,
     ) -> mpsc::Receiver<MpResult<Detections>> {
         let (tx, rx) = mpsc::channel();
-        self.shared.submit_inner(session, frame, tx);
+        self.shared.submit_inner(
+            session,
+            ServingPayload::Frame(frame.clone()),
+            ReplySink::Dets(tx),
+            self.shared.cfg.retry_budget,
+        );
         rx
     }
 
@@ -283,6 +364,10 @@ impl Router {
         out.push_str(&format!(
             "  workers_readmitted  {}\n",
             m.workers_readmitted.get()
+        ));
+        out.push_str(&format!(
+            "  requests_retried    {}\n",
+            m.requests_retried.get()
         ));
         for (idx, w) in self.shared.workers.iter().enumerate() {
             let up = if self.shared.is_up(idx) { "up" } else { "down" };
@@ -345,10 +430,11 @@ impl RouterShared {
         (0..n).map(|i| (start + i) % n).find(|&idx| self.is_up(idx))
     }
 
-    /// Fail everything in flight on `conn` with `WorkerLost`, flip the
-    /// slot Down, and reroute the dead worker's sessions. Idempotent
-    /// per connection: only the caller holding the currently-installed
-    /// `conn` performs the transition.
+    /// Resolve everything in flight on `conn` (resubmitting what the
+    /// retry budget allows, failing the rest with `WorkerLost`), flip
+    /// the slot Down, and reroute the dead worker's sessions.
+    /// Idempotent per connection: only the caller holding the
+    /// currently-installed `conn` performs the transition.
     fn mark_down(&self, idx: usize, conn: &Arc<Conn>) {
         {
             let mut state = lock_recover(&self.workers[idx].state);
@@ -363,27 +449,51 @@ impl RouterShared {
         }
         self.metrics.workers_lost.inc();
         let addr = self.workers[idx].addr.clone();
-        let pending: Vec<Pending> = {
+        let drained: Vec<Pending> = {
             let mut map = lock_recover(&conn.pending);
             map.drain().map(|(_, p)| p).collect()
         };
-        for p in pending {
-            let _ = p.tx.send(Err(MpError::WorkerLost {
-                worker: addr.clone(),
-            }));
+        // Partition the in-flight requests: a retained payload with
+        // budget left is resubmitted below (the reply is known-absent —
+        // it rode this dead connection — so the caller cannot see two
+        // answers); the rest fail typed.
+        let mut retry = Vec::new();
+        for p in drained {
+            if p.retries_left > 0 && p.payload.is_some() {
+                retry.push(p);
+            } else {
+                p.sink.send(Err(MpError::WorkerLost {
+                    worker: addr.clone(),
+                }));
+            }
         }
         // Reroute the dead worker's sessions to healthy peers. The
         // watermark (the `order` counter) travels with the session:
         // worker-side
         // session state is per-connection, so the new worker accepts
         // the continuing timestamps.
-        let mut sessions = lock_recover(&self.sessions);
-        for (sid, st) in sessions.iter_mut() {
-            if st.worker == idx {
-                if let Some(new_idx) = self.first_healthy(*sid) {
-                    st.worker = new_idx;
-                    self.metrics.sessions_rerouted.inc();
+        {
+            let mut sessions = lock_recover(&self.sessions);
+            for (sid, st) in sessions.iter_mut() {
+                if st.worker == idx {
+                    if let Some(new_idx) = self.first_healthy(*sid) {
+                        st.worker = new_idx;
+                        self.metrics.sessions_rerouted.inc();
+                    }
                 }
+            }
+        }
+        // Resubmit in original wire order (timestamps are per-session,
+        // so sorting on (session, timestamp) preserves each session's
+        // ordering). Each resubmission draws a *fresh* timestamp under
+        // the session's order guard — concurrent submitters may already
+        // have written later timestamps to the rerouted worker, and the
+        // watermark only needs monotonicity, not density.
+        retry.sort_by_key(|p| (p.session, p.timestamp));
+        for p in retry {
+            if let Some(payload) = p.payload {
+                self.metrics.requests_retried.inc();
+                self.submit_inner(p.session, payload, p.sink, p.retries_left - 1);
             }
         }
     }
@@ -391,23 +501,23 @@ impl RouterShared {
     fn submit_inner(
         &self,
         session: u64,
-        frame: &ImageFrame,
-        tx: mpsc::Sender<MpResult<Detections>>,
+        payload: ServingPayload,
+        sink: ReplySink,
+        retries_left: u32,
     ) {
         // A body beyond the wire cap would cross the socket only to
         // have the worker's codec reject the declared length and sever
         // the connection — failing every in-flight request on it and
         // rerouting all its sessions for one bad submission. Resolve
-        // the oversized frame here, typed, without touching any worker.
-        if frame.data.len() > MAX_REQUEST_PIXELS {
-            let _ = tx.send(Err(MpError::Validation(format!(
-                "router: {}x{}x{} frame carries {} pixels; a request frame \
-                 can carry at most {MAX_REQUEST_PIXELS} — resize before \
-                 submitting",
-                frame.width,
-                frame.height,
-                frame.channels,
-                frame.data.len()
+        // the oversized payload here, typed, without touching any
+        // worker.
+        let encoded = REQUEST_OVERHEAD + payload_encoded_len(&payload);
+        if encoded > MAX_FRAME_LEN {
+            sink.send(Err(MpError::Validation(format!(
+                "router: {} payload encodes to {encoded} bytes; a request \
+                 body is capped at {MAX_FRAME_LEN} — shrink the payload \
+                 before submitting",
+                payload.summary()
             ))));
             return;
         }
@@ -417,7 +527,11 @@ impl RouterShared {
         };
         // One reroute retry: a write failure marks the worker down
         // (rerouting the session), then the second attempt goes to the
-        // session's new worker.
+        // session's new worker. This is distinct from the retry budget,
+        // which governs resubmission of *written* requests at
+        // mark_down — a failed write provably never reached the worker,
+        // so retrying it here is unconditionally safe.
+        let mut sink = sink;
         for _attempt in 0..2 {
             let (idx, order) = {
                 let mut sessions = lock_recover(&self.sessions);
@@ -435,7 +549,7 @@ impl RouterShared {
                             sessions.get_mut(&session).expect("just inserted")
                         }
                         None => {
-                            let _ = tx.send(Err(MpError::Runtime(
+                            sink.send(Err(MpError::Runtime(
                                 "router: no healthy workers".into(),
                             )));
                             return;
@@ -451,7 +565,7 @@ impl RouterShared {
                             }
                         }
                         None => {
-                            let _ = tx.send(Err(MpError::Runtime(
+                            sink.send(Err(MpError::Runtime(
                                 "router: no healthy workers".into(),
                             )));
                             return;
@@ -465,16 +579,19 @@ impl RouterShared {
                 None => continue, // raced with mark_down; re-resolve
             };
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            lock_recover(&conn.pending).insert(id, Pending { tx: tx.clone() });
+            // Retain a payload copy only while the budget allows a
+            // resubmission to use it.
+            let retained = if retries_left > 0 {
+                Some(payload.clone())
+            } else {
+                None
+            };
             let mut req = WireRequest {
                 id,
                 session,
                 timestamp: 0, // assigned under the order guard below
                 deadline_us,
-                width: frame.width as u32,
-                height: frame.height as u32,
-                channels: frame.channels as u32,
-                pixels: frame.data.to_vec(),
+                payload: payload.clone(),
             };
             // The order guard spans timestamp assignment AND the write
             // (see `SessionState::order`). A timestamp consumed by a
@@ -484,6 +601,16 @@ impl RouterShared {
                 let mut next_ts = lock_recover(&order);
                 req.timestamp = *next_ts;
                 *next_ts += 1;
+                lock_recover(&conn.pending).insert(
+                    id,
+                    Pending {
+                        sink,
+                        session,
+                        timestamp: req.timestamp,
+                        payload: retained,
+                        retries_left,
+                    },
+                );
                 let mut w = lock_recover(&conn.writer);
                 write_frame(&mut *w, &Frame::Request(req))
                     .and_then(|()| w.flush().map_err(MpError::from))
@@ -496,25 +623,45 @@ impl RouterShared {
                     // connection is no longer the installed one, any
                     // entry still in the map missed the drain: pull it
                     // back and retry. (If it's gone, the drain caught
-                    // it and the caller already has WorkerLost.)
+                    // it — the caller already has WorkerLost, or the
+                    // resubmission owns it now.)
                     let still_installed = match &*lock_recover(&self.workers[idx].state) {
                         SlotState::Up(cur) => Arc::ptr_eq(cur, &conn),
                         SlotState::Down { .. } => false,
                     };
-                    if !still_installed && lock_recover(&conn.pending).remove(&id).is_some() {
-                        continue;
+                    if !still_installed {
+                        match lock_recover(&conn.pending).remove(&id) {
+                            Some(p) => {
+                                sink = p.sink;
+                                continue;
+                            }
+                            None => return,
+                        }
                     }
                     self.metrics.requests.inc();
                     return;
                 }
                 Err(_) => {
-                    lock_recover(&conn.pending).remove(&id);
+                    // Reclaim the slot before mark_down so the drain
+                    // cannot also resolve it (a failed write provably
+                    // never reached the worker — resubmitting it from
+                    // the drain would be fine, but resolving it twice
+                    // would not).
+                    match lock_recover(&conn.pending).remove(&id) {
+                        Some(p) => sink = p.sink,
+                        None => {
+                            // mark_down's drain beat us to it: the
+                            // request is already failed or resubmitted.
+                            self.mark_down(idx, &conn);
+                            return;
+                        }
+                    }
                     self.mark_down(idx, &conn);
                     // fall through to the retry
                 }
             }
         }
-        let _ = tx.send(Err(MpError::Runtime("router: no healthy workers".into())));
+        sink.send(Err(MpError::Runtime("router: no healthy workers".into())));
     }
 }
 
@@ -570,7 +717,7 @@ fn spawn_reader(
                             if reply.result.is_ok() {
                                 shared.workers[idx].goodput.inc();
                             }
-                            let _ = p.tx.send(reply.result);
+                            p.sink.send(reply.result);
                         }
                     }
                     Frame::HealthPong { nonce, .. } => {

@@ -46,6 +46,7 @@ use std::time::Duration;
 use crate::error::{MpError, MpResult};
 use crate::graph::{InputHandle, SidePackets};
 use crate::packet::Packet;
+use crate::serving::payload::ServingPayload;
 use crate::serving::pool::PooledGraph;
 use crate::sync::lock_recover;
 use crate::timestamp::Timestamp;
@@ -226,6 +227,110 @@ impl StreamingSession {
         // idempotent, as the notifier contract requires.)
         let death = Arc::clone(&demux);
         graph.set_fail_notifier(move |e| death.fail_all(e));
+        graph.start_run(side)?;
+        let input = graph.input_handle(input_stream)?;
+        Ok(StreamingSession {
+            graph: Some(graph),
+            input,
+            demux,
+            state: Mutex::new(SessionState {
+                next_ts: 0,
+                submitted: 0,
+            }),
+            max_timestamps,
+        })
+    }
+
+    /// Start a session that demultiplexes **several** output streams:
+    /// each timestamp resolves once every listed stream has produced its
+    /// packet for that timestamp, and the ticket receives one
+    /// [`ServingPayload::Map`] packet keyed by stream name in the
+    /// declared order — the serving layer's multi-output aggregation
+    /// seam (a catalog graph like `pose_landmark` declares `pose` and
+    /// `angles`; a request wants both, synchronized). A single-stream
+    /// list degenerates to [`StreamingSession::start`], which delivers
+    /// the raw output packet without wrapping.
+    ///
+    /// A stream that never fires for a submitted timestamp leaves that
+    /// ticket pending; the owner's batch timeout (and the run-death
+    /// flush) bound the wait exactly as for single-output sessions.
+    pub fn start_multi(
+        mut graph: PooledGraph,
+        input_stream: &str,
+        output_streams: &[String],
+        side: SidePackets,
+        max_timestamps: u64,
+    ) -> MpResult<StreamingSession> {
+        match output_streams {
+            [] => {
+                return Err(MpError::Validation(
+                    "streaming session needs at least one output stream".into(),
+                ))
+            }
+            [only] => {
+                return StreamingSession::start(graph, input_stream, only, side, max_timestamps)
+            }
+            _ => {}
+        }
+        let demux = Arc::new(Demux {
+            pending: Mutex::new(HashMap::new()),
+            resolved: AtomicU64::new(0),
+            notify: Mutex::new(None),
+        });
+        // Per-timestamp partial rows: one slot per output stream, in
+        // declared order. An entry leaves the map exactly once — when
+        // its last slot fills (delivered) or on run death (cleared).
+        type PartialRows = Mutex<HashMap<i64, Vec<Option<Packet>>>>;
+        let partials: Arc<PartialRows> = Arc::new(Mutex::new(HashMap::new()));
+        let names: Arc<Vec<String>> = Arc::new(output_streams.to_vec());
+        let slots = output_streams.len();
+        for (idx, stream) in output_streams.iter().enumerate() {
+            let router = Arc::clone(&demux);
+            let rows = Arc::clone(&partials);
+            let names = Arc::clone(&names);
+            graph.observe_output(stream, move |pkt| {
+                let ts = pkt.timestamp().raw();
+                let complete = {
+                    let mut rows = lock_recover(&rows);
+                    let row = rows.entry(ts).or_insert_with(|| vec![None; slots]);
+                    row[idx] = Some(pkt.clone());
+                    if row.iter().all(Option::is_some) {
+                        rows.remove(&ts)
+                    } else {
+                        None
+                    }
+                };
+                let Some(row) = complete else { return };
+                let mut entries = Vec::with_capacity(slots);
+                let mut failure = None;
+                for (name, slot) in names.iter().zip(row) {
+                    let pkt = slot.expect("row complete");
+                    match ServingPayload::from_packet(&pkt) {
+                        Ok(p) => entries.push((name.clone(), p)),
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
+                    }
+                }
+                let result = match failure {
+                    None => Ok(Packet::new(
+                        ServingPayload::Map(entries),
+                        Timestamp::new(ts),
+                    )),
+                    Some(e) => Err(e),
+                };
+                router.deliver(ts, result);
+            })?;
+        }
+        let death = Arc::clone(&demux);
+        let dead_rows = Arc::clone(&partials);
+        graph.set_fail_notifier(move |e| {
+            // Orphaned partial rows can never complete once the run is
+            // dead; drop them before flushing their tickets.
+            lock_recover(&dead_rows).clear();
+            death.fail_all(e);
+        });
         graph.start_run(side)?;
         let input = graph.input_handle(input_stream)?;
         Ok(StreamingSession {

@@ -5,13 +5,21 @@
 //!
 //! Every frame on the socket is `u32 length (LE)` followed by `length`
 //! body bytes; the body is a one-byte tag plus tag-specific fields, all
-//! little-endian, strings and pixel payloads length-prefixed. There is
+//! little-endian, strings and payload bodies length-prefixed. There is
 //! deliberately no self-describing schema layer — the format is
 //! versioned as a whole through the [`Frame::Hello`] handshake
 //! ([`WIRE_VERSION`]), matching the crate's zero-dependency rule.
 //!
-//! Three properties the rest of the distributed layer leans on:
+//! Four properties the rest of the distributed layer leans on:
 //!
+//! * **Typed payloads round-trip.** Requests and Ok replies carry one
+//!   tagged [`ServingPayload`] — image frame, f32 tensor, detection
+//!   list, landmark list, or a named map of payloads (recursive, depth
+//!   bounded by [`MAX_PAYLOAD_DEPTH`] on decode) — so every catalog
+//!   graph serves over the wire with the same types it serves
+//!   in-process. A frame payload's declared dimensions are validated
+//!   against its pixel count at decode time; a mismatch is a typed
+//!   decode error, never a panic downstream.
 //! * **Typed errors round-trip.** [`MpError::Overloaded`],
 //!   [`MpError::DeadlineExceeded`], [`MpError::TimestampViolation`] and
 //!   [`MpError::WorkerLost`] cross the hop field-for-field, so a router
@@ -37,12 +45,15 @@
 use std::io::{Read, Write};
 
 use crate::error::{MpError, MpResult};
-use crate::perception::types::{Detection, Detections, Rect};
+use crate::perception::types::{Detection, Detections, LandmarkList, Rect};
 use crate::perception::ImageFrame;
+use crate::serving::payload::ServingPayload;
 
 /// Version negotiated by the [`Frame::Hello`] handshake. Bump on any
-/// encoding change; peers refuse mismatched versions.
-pub const WIRE_VERSION: u16 = 1;
+/// encoding change; peers refuse mismatched versions. Version 2
+/// replaced the raw request pixel body with tagged [`ServingPayload`]
+/// encodings on both requests and replies.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Hard cap on one frame's body length (64 MiB): frames declaring more
 /// are rejected before allocation. Enforced on **both** sides —
@@ -52,16 +63,29 @@ pub const WIRE_VERSION: u16 = 1;
 /// request on it down).
 pub const MAX_FRAME_LEN: usize = 1 << 26;
 
-/// Fixed bytes of a [`Frame::Request`] body before the pixel payload:
-/// tag, id, session, timestamp, deadline, width/height/channels, pixel
-/// count. Kept in sync with `encode_frame`.
-const REQUEST_BODY_OVERHEAD: usize = 1 + 8 + 8 + 8 + 8 + 4 + 4 + 4 + 4;
+/// Fixed bytes of a [`Frame::Request`] body before its payload: tag,
+/// id, session, timestamp, deadline. Kept in sync with `encode_frame`.
+/// Senders pre-check `REQUEST_OVERHEAD + payload_encoded_len(&p)`
+/// against [`MAX_FRAME_LEN`] (the router does, in `submit_inner`) so
+/// they never produce a request the peer's codec is guaranteed to
+/// reject.
+pub const REQUEST_OVERHEAD: usize = 1 + 8 + 8 + 8 + 8;
 
-/// Most pixels one request frame can carry without its body exceeding
-/// [`MAX_FRAME_LEN`]. A sender that checks against this bound (the
-/// router does, in `submit_inner`) never produces a request the peer's
-/// codec is guaranteed to reject.
+/// Fixed bytes of a request body carrying a frame payload: the request
+/// overhead plus the frame payload's header (payload tag,
+/// width/height/channels, pixel count). Kept in sync with
+/// `put_payload`.
+const REQUEST_BODY_OVERHEAD: usize = REQUEST_OVERHEAD + 1 + 4 + 4 + 4 + 4;
+
+/// Most pixels one frame-payload request can carry without its body
+/// exceeding [`MAX_FRAME_LEN`].
 pub const MAX_REQUEST_PIXELS: usize = (MAX_FRAME_LEN - REQUEST_BODY_OVERHEAD) / 4;
+
+/// Decode-side bound on [`ServingPayload::Map`] nesting: a body can
+/// declare maps-in-maps, and an unbounded recursive decode would turn
+/// 64 MiB of nested tags into a stack overflow. The catalog needs
+/// depth 2 (a map of landmark lists); 8 leaves headroom.
+pub const MAX_PAYLOAD_DEPTH: usize = 8;
 
 /// Sentinel for "no deadline" in [`WireRequest::deadline_us`].
 pub const NO_DEADLINE: u64 = u64::MAX;
@@ -80,35 +104,19 @@ pub struct WireRequest {
     /// Remaining deadline budget in µs ([`NO_DEADLINE`] = none),
     /// re-anchored at the worker on arrival.
     pub deadline_us: u64,
-    /// The frame, raw: the worker resizes/tensorizes exactly as a local
-    /// submission would.
-    pub width: u32,
-    pub height: u32,
-    pub channels: u32,
-    pub pixels: Vec<f32>,
+    /// The request's typed payload, already validated by the decoder
+    /// (frame dimensions match the pixel count, map nesting bounded).
+    /// The worker **moves** it into submission — decode allocates each
+    /// payload exactly once; nothing on the request path clones it.
+    pub payload: ServingPayload,
 }
 
 impl WireRequest {
-    /// Reassemble the request's image (validated: pixel count must
-    /// match the declared dimensions).
-    pub fn to_frame(&self) -> MpResult<ImageFrame> {
-        let expect = self.width as usize * self.height as usize * self.channels as usize;
-        if expect == 0 || self.pixels.len() != expect {
-            return Err(wire_err(format!(
-                "request {}: {}x{}x{} declares {expect} pixels, got {}",
-                self.id,
-                self.width,
-                self.height,
-                self.channels,
-                self.pixels.len()
-            )));
-        }
-        Ok(ImageFrame::new(
-            self.width as usize,
-            self.height as usize,
-            self.channels as usize,
-            self.pixels.clone(),
-        ))
+    /// Move the payload out for submission, leaving a cheap empty
+    /// tensor behind (the request header stays readable for reply
+    /// correlation).
+    pub fn take_payload(&mut self) -> ServingPayload {
+        std::mem::replace(&mut self.payload, ServingPayload::Tensor(Vec::new()))
     }
 }
 
@@ -119,7 +127,7 @@ pub struct WireReply {
     pub session: u64,
     /// Echo of the request's timestamp (watermark evidence).
     pub timestamp: i64,
-    pub result: MpResult<Detections>,
+    pub result: MpResult<ServingPayload>,
 }
 
 /// Worker-side load evidence carried on every health pong.
@@ -174,6 +182,13 @@ const ERR_DEADLINE: u8 = 1;
 const ERR_TS_VIOLATION: u8 = 2;
 const ERR_WORKER_LOST: u8 = 3;
 const ERR_OTHER: u8 = 4;
+
+/// [`ServingPayload`] variant tags (requests and Ok replies).
+const P_FRAME: u8 = 0;
+const P_TENSOR: u8 = 1;
+const P_DETECTIONS: u8 = 2;
+const P_LANDMARKS: u8 = 3;
+const P_MAP: u8 = 4;
 
 fn wire_err(msg: impl Into<String>) -> MpError {
     MpError::Io(format!("wire: {}", msg.into()))
@@ -266,6 +281,77 @@ fn put_detections(b: &mut Vec<u8>, dets: &Detections) {
     }
 }
 
+/// Encode one tagged [`ServingPayload`] (requests and Ok replies).
+/// Map entries recurse; the *decoder* bounds nesting at
+/// [`MAX_PAYLOAD_DEPTH`], so a deeper map encodes fine locally but is
+/// refused by every conforming peer.
+fn put_payload(b: &mut Vec<u8>, p: &ServingPayload) {
+    match p {
+        ServingPayload::Frame(f) => {
+            put_u8(b, P_FRAME);
+            put_u32(b, f.width as u32);
+            put_u32(b, f.height as u32);
+            put_u32(b, f.channels as u32);
+            put_u32(b, f.data.len() as u32);
+            for v in f.data.iter() {
+                put_f32(b, *v);
+            }
+        }
+        ServingPayload::Tensor(t) => {
+            put_u8(b, P_TENSOR);
+            put_u32(b, t.len() as u32);
+            for v in t {
+                put_f32(b, *v);
+            }
+        }
+        ServingPayload::Detections(d) => {
+            put_u8(b, P_DETECTIONS);
+            put_detections(b, d);
+        }
+        ServingPayload::Landmarks(l) => {
+            put_u8(b, P_LANDMARKS);
+            put_u32(b, l.points.len() as u32);
+            for (x, y) in &l.points {
+                put_f32(b, *x);
+                put_f32(b, *y);
+            }
+        }
+        ServingPayload::Map(m) => {
+            put_u8(b, P_MAP);
+            put_u32(b, m.len() as u32);
+            for (name, entry) in m {
+                put_str(b, name);
+                put_payload(b, entry);
+            }
+        }
+    }
+}
+
+/// Exact encoded length of one payload — the send-side pre-check
+/// ([`REQUEST_OVERHEAD`] + this against [`MAX_FRAME_LEN`]) without
+/// encoding anything.
+pub fn payload_encoded_len(p: &ServingPayload) -> usize {
+    match p {
+        ServingPayload::Frame(f) => 1 + 4 * 4 + 4 * f.data.len(),
+        ServingPayload::Tensor(t) => 1 + 4 + 4 * t.len(),
+        ServingPayload::Detections(d) => {
+            // Per detection: bbox + score (5 × f32), class id, and the
+            // track-id presence byte (+8 when present).
+            1 + 4
+                + d.iter()
+                    .map(|det| 5 * 4 + 4 + 1 + if det.track_id.is_some() { 8 } else { 0 })
+                    .sum::<usize>()
+        }
+        ServingPayload::Landmarks(l) => 1 + 4 + 8 * l.points.len(),
+        ServingPayload::Map(m) => {
+            1 + 4
+                + m.iter()
+                    .map(|(name, entry)| 4 + name.len() + payload_encoded_len(entry))
+                    .sum::<usize>()
+        }
+    }
+}
+
 /// Encode `frame` as one length-prefixed wire frame.
 pub fn encode_frame(frame: &Frame) -> Vec<u8> {
     let mut body = Vec::new();
@@ -280,13 +366,7 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             put_u64(&mut body, r.session);
             put_i64(&mut body, r.timestamp);
             put_u64(&mut body, r.deadline_us);
-            put_u32(&mut body, r.width);
-            put_u32(&mut body, r.height);
-            put_u32(&mut body, r.channels);
-            put_u32(&mut body, r.pixels.len() as u32);
-            for p in &r.pixels {
-                put_f32(&mut body, *p);
-            }
+            put_payload(&mut body, &r.payload);
         }
         Frame::Reply(r) => {
             put_u8(&mut body, TAG_REPLY);
@@ -294,9 +374,9 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             put_u64(&mut body, r.session);
             put_i64(&mut body, r.timestamp);
             match &r.result {
-                Ok(dets) => {
+                Ok(payload) => {
                     put_u8(&mut body, 1);
-                    put_detections(&mut body, dets);
+                    put_payload(&mut body, payload);
                 }
                 Err(e) => {
                     put_u8(&mut body, 0);
@@ -456,6 +536,73 @@ fn get_detections(c: &mut Cur<'_>) -> MpResult<Detections> {
     Ok(dets)
 }
 
+/// Decode one tagged payload. Every size field is validated against the
+/// remaining body (allocations are capped at [`MAX_FRAME_LEN`] worth of
+/// elements) and frame dimensions are cross-checked against the pixel
+/// count *before* an [`ImageFrame`] is built — `ImageFrame::new` asserts
+/// on a mismatch, and a corrupt frame must decode to an error, never a
+/// panic. Map nesting is bounded by [`MAX_PAYLOAD_DEPTH`] so a crafted
+/// body cannot recurse the decoder off the stack.
+fn get_payload(c: &mut Cur<'_>, depth: usize) -> MpResult<ServingPayload> {
+    Ok(match c.u8()? {
+        P_FRAME => {
+            let width = c.u32()? as usize;
+            let height = c.u32()? as usize;
+            let channels = c.u32()? as usize;
+            let n = c.u32()? as usize;
+            let expected = width
+                .checked_mul(height)
+                .and_then(|p| p.checked_mul(channels));
+            if expected != Some(n) || n == 0 {
+                return Err(wire_err(format!(
+                    "frame payload dims {width}x{height}x{channels} disagree \
+                     with pixel count {n}"
+                )));
+            }
+            let mut pixels = Vec::with_capacity(n.min(MAX_FRAME_LEN / 4));
+            for _ in 0..n {
+                pixels.push(c.f32()?);
+            }
+            ServingPayload::Frame(ImageFrame::new(width, height, channels, pixels))
+        }
+        P_TENSOR => {
+            let n = c.u32()? as usize;
+            let mut values = Vec::with_capacity(n.min(MAX_FRAME_LEN / 4));
+            for _ in 0..n {
+                values.push(c.f32()?);
+            }
+            ServingPayload::Tensor(values)
+        }
+        P_DETECTIONS => ServingPayload::Detections(get_detections(c)?),
+        P_LANDMARKS => {
+            let n = c.u32()? as usize;
+            let mut points = Vec::with_capacity(n.min(MAX_FRAME_LEN / 8));
+            for _ in 0..n {
+                let x = c.f32()?;
+                let y = c.f32()?;
+                points.push((x, y));
+            }
+            ServingPayload::Landmarks(LandmarkList { points })
+        }
+        P_MAP => {
+            if depth >= MAX_PAYLOAD_DEPTH {
+                return Err(wire_err(format!(
+                    "map payload nests deeper than {MAX_PAYLOAD_DEPTH} levels"
+                )));
+            }
+            let n = c.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(1 << 10));
+            for _ in 0..n {
+                let name = c.str()?;
+                let value = get_payload(c, depth + 1)?;
+                entries.push((name, value));
+            }
+            ServingPayload::Map(entries)
+        }
+        t => return Err(wire_err(format!("unknown payload tag {t}"))),
+    })
+}
+
 /// Decode one frame body (the bytes after the length prefix).
 pub fn decode_body(body: &[u8]) -> MpResult<Frame> {
     let mut c = Cur { buf: body, pos: 0 };
@@ -466,23 +613,13 @@ pub fn decode_body(body: &[u8]) -> MpResult<Frame> {
             let session = c.u64()?;
             let timestamp = c.i64()?;
             let deadline_us = c.u64()?;
-            let width = c.u32()?;
-            let height = c.u32()?;
-            let channels = c.u32()?;
-            let n = c.u32()? as usize;
-            let mut pixels = Vec::with_capacity(n.min(MAX_FRAME_LEN / 4));
-            for _ in 0..n {
-                pixels.push(c.f32()?);
-            }
+            let payload = get_payload(&mut c, 0)?;
             Frame::Request(WireRequest {
                 id,
                 session,
                 timestamp,
                 deadline_us,
-                width,
-                height,
-                channels,
-                pixels,
+                payload,
             })
         }
         TAG_REPLY => {
@@ -490,7 +627,7 @@ pub fn decode_body(body: &[u8]) -> MpResult<Frame> {
             let session = c.u64()?;
             let timestamp = c.i64()?;
             let result = if c.u8()? != 0 {
-                Ok(get_detections(&mut c)?)
+                Ok(get_payload(&mut c, 0)?)
             } else {
                 Err(get_error(&mut c)?)
             };
@@ -573,11 +710,20 @@ mod tests {
             session: 42,
             timestamp: 1337,
             deadline_us: 50_000,
-            width: 2,
-            height: 2,
-            channels: 1,
-            pixels: vec![0.0, 0.25, 0.5, 1.0],
+            payload: ServingPayload::Frame(ImageFrame::new(2, 2, 1, vec![0.0, 0.25, 0.5, 1.0])),
         }
+    }
+
+    fn sample_dets() -> Detections {
+        vec![
+            Detection {
+                bbox: Rect::new(0.1, 0.2, 0.3, 0.4),
+                score: 0.9,
+                class_id: 3,
+                track_id: Some(77),
+            },
+            Detection::new(Rect::new(0.5, 0.5, 0.1, 0.1), 0.6, 0),
+        ]
     }
 
     #[test]
@@ -590,40 +736,144 @@ mod tests {
     }
 
     #[test]
-    fn request_reassembles_its_image() {
-        let req = sample_request();
-        let img = req.to_frame().unwrap();
-        assert_eq!((img.width, img.height, img.channels), (2, 2, 1));
-        assert_eq!(img.data.as_slice(), &[0.0, 0.25, 0.5, 1.0]);
-        // Mismatched pixel counts are rejected, not asserted on.
-        let mut bad = sample_request();
-        bad.pixels.pop();
-        assert!(bad.to_frame().is_err());
+    fn take_payload_moves_without_cloning() {
+        let mut req = sample_request();
+        match req.take_payload() {
+            ServingPayload::Frame(img) => {
+                assert_eq!((img.width, img.height, img.channels), (2, 2, 1));
+                assert_eq!(img.data.as_slice(), &[0.0, 0.25, 0.5, 1.0]);
+            }
+            other => panic!("wrong payload: {other:?}"),
+        }
+        // The header stays readable for reply correlation; the payload
+        // slot is the cheap empty sentinel.
+        assert_eq!(req.id, 7);
+        assert_eq!(req.payload, ServingPayload::Tensor(Vec::new()));
+    }
+
+    #[test]
+    fn frame_payload_dims_are_validated_on_decode() {
+        // Corrupt the encoded pixel-count field so width*height*channels
+        // no longer matches it: the decoder must return a typed error,
+        // not feed mismatched dims to ImageFrame::new (which asserts).
+        let mut body = encode_frame(&Frame::Request(sample_request()))[4..].to_vec();
+        let count_at = REQUEST_OVERHEAD + 1 + 4 + 4 + 4;
+        body[count_at..count_at + 4].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_body(&body).is_err());
+        // Zero-area frames are refused too.
+        for dim_at in [
+            REQUEST_OVERHEAD + 1,
+            REQUEST_OVERHEAD + 1 + 4,
+            REQUEST_OVERHEAD + 1 + 8,
+        ] {
+            let mut zeroed = encode_frame(&Frame::Request(sample_request()))[4..].to_vec();
+            zeroed[dim_at..dim_at + 4].copy_from_slice(&0u32.to_le_bytes());
+            zeroed[count_at..count_at + 4].copy_from_slice(&0u32.to_le_bytes());
+            assert!(decode_body(&zeroed).is_err());
+        }
+    }
+
+    #[test]
+    fn every_payload_variant_round_trips() {
+        let payloads = vec![
+            ServingPayload::Tensor(vec![1.0, -2.5, 0.0]),
+            ServingPayload::Tensor(Vec::new()),
+            ServingPayload::Detections(sample_dets()),
+            ServingPayload::Detections(Vec::new()),
+            ServingPayload::Landmarks(LandmarkList {
+                points: vec![(0.1, 0.2), (0.3, 0.4)],
+            }),
+            ServingPayload::Map(vec![
+                (
+                    "pose".into(),
+                    ServingPayload::Landmarks(LandmarkList {
+                        points: vec![(0.5, 0.5)],
+                    }),
+                ),
+                (
+                    "angles".into(),
+                    ServingPayload::Map(vec![(
+                        "left_elbow".into(),
+                        ServingPayload::Tensor(vec![1.57]),
+                    )]),
+                ),
+            ]),
+        ];
+        for payload in payloads {
+            let req = WireRequest {
+                payload: payload.clone(),
+                ..sample_request()
+            };
+            match round_trip(&Frame::Request(req)) {
+                Frame::Request(got) => assert_eq!(got.payload, payload),
+                other => panic!("wrong frame: {other:?}"),
+            }
+            let reply = Frame::Reply(WireReply {
+                id: 9,
+                session: 42,
+                timestamp: 5,
+                result: Ok(payload.clone()),
+            });
+            match round_trip(&reply) {
+                Frame::Reply(got) => assert_eq!(got.result.unwrap(), payload),
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn map_nesting_is_bounded_on_decode() {
+        // One level past MAX_PAYLOAD_DEPTH must decode to an error; at
+        // the bound it round-trips (encode has no depth limit — the
+        // bound protects the decoder's stack from crafted bodies).
+        let deep = |levels: usize| {
+            let mut p = ServingPayload::Tensor(vec![1.0]);
+            for _ in 0..levels {
+                p = ServingPayload::Map(vec![("inner".into(), p)]);
+            }
+            p
+        };
+        let ok = Frame::Reply(WireReply {
+            id: 1,
+            session: 2,
+            timestamp: 3,
+            result: Ok(deep(MAX_PAYLOAD_DEPTH)),
+        });
+        match round_trip(&ok) {
+            Frame::Reply(r) => assert!(r.result.is_ok()),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let bomb = encode_frame(&Frame::Reply(WireReply {
+            id: 1,
+            session: 2,
+            timestamp: 3,
+            result: Ok(deep(MAX_PAYLOAD_DEPTH + 1)),
+        }));
+        assert!(decode_body(&bomb[4..]).is_err());
+    }
+
+    #[test]
+    fn unknown_payload_tags_are_rejected() {
+        let mut body = encode_frame(&Frame::Request(sample_request()))[4..].to_vec();
+        body[REQUEST_OVERHEAD] = 0xEE;
+        assert!(decode_body(&body).is_err());
     }
 
     #[test]
     fn ok_reply_round_trips_detections() {
-        let dets = vec![
-            Detection {
-                bbox: Rect::new(0.1, 0.2, 0.3, 0.4),
-                score: 0.9,
-                class_id: 3,
-                track_id: Some(77),
-            },
-            Detection::new(Rect::new(0.5, 0.5, 0.1, 0.1), 0.6, 0),
-        ];
+        let dets = sample_dets();
         let reply = Frame::Reply(WireReply {
             id: 9,
             session: 42,
             timestamp: 5,
-            result: Ok(dets.clone()),
+            result: Ok(ServingPayload::Detections(dets.clone())),
         });
         match round_trip(&reply) {
             Frame::Reply(got) => {
                 assert_eq!(got.id, 9);
                 assert_eq!(got.session, 42);
                 assert_eq!(got.timestamp, 5);
-                assert_eq!(got.result.unwrap(), dets);
+                assert_eq!(got.result.unwrap(), ServingPayload::Detections(dets));
             }
             other => panic!("wrong frame: {other:?}"),
         }
@@ -773,8 +1023,9 @@ mod tests {
         // One pixel past the bound tips the body over MAX_FRAME_LEN;
         // write_frame must error with zero bytes written, keeping the
         // connection usable.
+        let n = MAX_REQUEST_PIXELS + 1;
         let req = WireRequest {
-            pixels: vec![0.0; MAX_REQUEST_PIXELS + 1],
+            payload: ServingPayload::Frame(ImageFrame::new(n, 1, 1, vec![0.0; n])),
             ..sample_request()
         };
         let mut sink = Vec::new();

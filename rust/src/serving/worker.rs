@@ -10,7 +10,13 @@
 //! * one **reader thread per connection** demuxes request frames to
 //!   per-wire-session [`ServerHandle`]s (each session gets its own
 //!   handle, i.e. its own reply-FIFO client) and submits through
-//!   [`ServerHandle::submit_callback`] — no thread parks per request;
+//!   [`ServerHandle::submit_payload_callback`] — no thread parks per
+//!   request. The request's typed payload (already validated by the
+//!   wire decoder) is **moved** out of the frame into submission,
+//!   never cloned; a payload whose kind disagrees with the served
+//!   graph's I/O descriptor comes back as the same typed
+//!   [`MpError::PacketTypeMismatch`](crate::error::MpError) a local
+//!   caller would get;
 //! * completions are delivered by the batcher into the callback, which
 //!   enqueues a reply frame onto the connection's single **writer
 //!   thread** (frames never interleave: one writer owns the socket's
@@ -272,7 +278,7 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
             Err(_) => break, // EOF / severed / garbage: connection over
         };
         match frame {
-            Frame::Request(req) => {
+            Frame::Request(mut req) => {
                 let entry = sessions.entry(req.session).or_insert_with(|| {
                     shared.sessions.fetch_add(1, Ordering::Relaxed);
                     SessionEntry {
@@ -295,18 +301,6 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
                     }));
                     continue;
                 }
-                let image = match req.to_frame() {
-                    Ok(img) => img,
-                    Err(e) => {
-                        let _ = out_tx.send(Frame::Reply(WireReply {
-                            id: req.id,
-                            session: req.session,
-                            timestamp: req.timestamp,
-                            result: Err(e),
-                        }));
-                        continue;
-                    }
-                };
                 entry.last_ts = req.timestamp;
                 // Re-anchor the remaining deadline budget at arrival
                 // (conservative by exactly the transit time).
@@ -317,17 +311,23 @@ fn serve_conn(mut stream: TcpStream, _id: u64, shared: &WorkerShared) {
                 };
                 let reply_to = out_tx.clone();
                 let (id, session, timestamp) = (req.id, req.session, req.timestamp);
-                entry.handle.submit_callback(&image, deadline, move |result| {
-                    // A send after the connection died is dropped on the
-                    // floor — the router already failed the request with
-                    // WorkerLost when it saw the socket go.
-                    let _ = reply_to.send(Frame::Reply(WireReply {
-                        id,
-                        session,
-                        timestamp,
-                        result,
-                    }));
-                });
+                // Move the payload out of the frame (the decoder already
+                // validated it); submission is the payload's second and
+                // last owner — nothing on this path clones it.
+                entry
+                    .handle
+                    .submit_payload_callback(req.take_payload(), deadline, move |result| {
+                        // A send after the connection died is dropped on
+                        // the floor — the router already failed the
+                        // request with WorkerLost when it saw the socket
+                        // go.
+                        let _ = reply_to.send(Frame::Reply(WireReply {
+                            id,
+                            session,
+                            timestamp,
+                            result,
+                        }));
+                    });
             }
             Frame::HealthPing { nonce } => {
                 let _ = out_tx.send(Frame::HealthPong {

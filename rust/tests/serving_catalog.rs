@@ -1,0 +1,204 @@
+//! Catalog graphs served end to end through the typed data plane
+//! (serving module docs, "The typed data plane"): every graph in the
+//! scenario catalog — pose landmarks, the holistic multi-model merge,
+//! and the detection cascade — serves [`ServingPayload`]s in-process,
+//! over a loopback socket worker behind a [`Router`], and across a
+//! mid-stream blue-green config swap. None of them needs an artifact
+//! dir: catalog configs declare no engine side packets.
+#![cfg(not(feature = "xla"))]
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{payload_frame, recv_within};
+use mediapipe::serving::{
+    install_catalog, GraphRegistry, PayloadKind, PipelineServer, Router, RouterConfig,
+    ServerConfig, ServingMode, ServingPayload, WorkerServer, DETECTION_CASCADE, HOLISTIC,
+    POSE_LANDMARK,
+};
+
+const REPLY_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// A streaming server over a private registry holding the catalog.
+/// No `artifact_dir` stub: catalog graphs are engine-less.
+fn catalog_server(name: &str) -> PipelineServer {
+    let reg = Arc::new(GraphRegistry::new());
+    install_catalog(&reg).unwrap();
+    PipelineServer::start(ServerConfig {
+        graph_name: Some(name.into()),
+        registry: Some(reg),
+        mode: ServingMode::Streaming,
+        pipeline_depth: 2,
+        pool_capacity: 2,
+        executor_threads: 2,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn expect_map(p: &ServingPayload) -> &[(String, ServingPayload)] {
+    match p {
+        ServingPayload::Map(m) => m,
+        other => panic!("expected a map payload, got {}", other.summary()),
+    }
+}
+
+fn expect_landmarks(p: &ServingPayload, what: &str) -> usize {
+    match p {
+        ServingPayload::Landmarks(l) => {
+            for &(x, y) in &l.points {
+                assert!(
+                    x.is_finite() && y.is_finite(),
+                    "{what}: non-finite landmark ({x}, {y})"
+                );
+            }
+            l.points.len()
+        }
+        other => panic!("{what}: expected landmarks, got {}", other.summary()),
+    }
+}
+
+/// One pose-landmark result: `pose` (the 33-point skeleton) plus
+/// `angles` (a nested map of four single-element tensors).
+fn assert_pose_result(result: &ServingPayload) {
+    let map = expect_map(result);
+    assert_eq!(map.len(), 2, "pose result should carry both outputs");
+    let pose = result.entry("pose").expect("'pose' entry");
+    assert_eq!(expect_landmarks(pose, "pose"), 33);
+    let angles = result.entry("angles").expect("'angles' entry");
+    let angle_map = expect_map(angles);
+    assert_eq!(angle_map.len(), 4);
+    for joint in ["left_elbow", "right_elbow", "left_knee", "right_knee"] {
+        match angles.entry(joint) {
+            Some(ServingPayload::Tensor(t)) => assert_eq!(t.len(), 1, "{joint} tensor"),
+            other => panic!("{joint}: expected a 1-element tensor, got {other:?}"),
+        }
+    }
+}
+
+/// One holistic result: pose + two hands + face, all landmark lists,
+/// decomposed into a named map by the data plane.
+fn assert_holistic_result(result: &ServingPayload) {
+    assert_eq!(
+        expect_landmarks(result.entry("pose").expect("'pose' entry"), "holistic pose"),
+        33
+    );
+    for hand in ["hand_0", "hand_1"] {
+        let l = result.entry(hand).unwrap_or_else(|| panic!("'{hand}' entry"));
+        assert_eq!(expect_landmarks(l, hand), 21);
+    }
+    assert_eq!(
+        expect_landmarks(result.entry("face").expect("'face' entry"), "holistic face"),
+        468
+    );
+}
+
+/// One cascade result: `tracked` detections plus `landmarks` — five
+/// points (center + corners) per tracked box, a structural invariant
+/// that holds whether or not the template matcher fired this frame.
+fn assert_cascade_result(result: &ServingPayload) {
+    let map = expect_map(result);
+    assert_eq!(map.len(), 2, "cascade result should carry both outputs");
+    let tracked = match result.entry("tracked").expect("'tracked' entry") {
+        ServingPayload::Detections(d) => d.len(),
+        other => panic!("tracked: expected detections, got {}", other.summary()),
+    };
+    let landmarks = result.entry("landmarks").expect("'landmarks' entry");
+    let points = expect_landmarks(landmarks, "cascade");
+    assert_eq!(
+        points,
+        tracked * 5,
+        "landmarks should carry center + four corners per tracked box"
+    );
+}
+
+fn assert_result(name: &str, result: &ServingPayload) {
+    match name {
+        POSE_LANDMARK => assert_pose_result(result),
+        HOLISTIC => assert_holistic_result(result),
+        DETECTION_CASCADE => assert_cascade_result(result),
+        other => panic!("unknown catalog graph '{other}'"),
+    }
+}
+
+#[test]
+fn every_catalog_graph_serves_typed_payloads_in_process() {
+    for name in [POSE_LANDMARK, HOLISTIC, DETECTION_CASCADE] {
+        let server = catalog_server(name);
+        let d = server.descriptor();
+        assert_eq!(d.input_kind, PayloadKind::Frame, "{name} input kind");
+        let handle = server.handle();
+        // A pipelined burst of successive timestamps on one session.
+        let pending: Vec<_> = (0..6)
+            .map(|i| {
+                let frame = payload_frame(0.2 + i as f32 * 0.1);
+                handle.submit_payload(ServingPayload::Frame(frame))
+            })
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let result = recv_within(&rx, REPLY_TIMEOUT, "in-process catalog reply")
+                .unwrap_or_else(|e| panic!("{name} frame {i}: {e}"));
+            assert_result(name, &result);
+        }
+    }
+}
+
+#[test]
+fn every_catalog_graph_serves_over_a_loopback_worker_and_router() {
+    for name in [POSE_LANDMARK, HOLISTIC, DETECTION_CASCADE] {
+        let worker = WorkerServer::start("127.0.0.1:0", catalog_server(name)).unwrap();
+        let mut cfg = RouterConfig::new(vec![worker.local_addr().to_string()]);
+        cfg.health_interval = Duration::from_millis(20);
+        let router = Router::start(cfg).unwrap();
+        const SESSIONS: u64 = 3;
+        const FRAMES: u64 = 4;
+        let mut pending = Vec::new();
+        for ts in 0..FRAMES {
+            for s in 0..SESSIONS {
+                let value = 0.1 + (s * FRAMES + ts) as f32 * 0.05;
+                let rx = router.submit_payload(s, ServingPayload::Frame(payload_frame(value)));
+                pending.push(rx);
+            }
+        }
+        for rx in pending {
+            let result = recv_within(&rx, REPLY_TIMEOUT, "routed catalog reply")
+                .unwrap_or_else(|e| panic!("{name} over the wire: {e}"));
+            assert_result(name, &result);
+        }
+        assert_eq!(router.metrics().workers_lost.get(), 0, "{name} router health");
+    }
+}
+
+#[test]
+fn catalog_sessions_survive_a_mid_stream_blue_green_swap() {
+    use mediapipe::prelude::GraphConfig;
+    use mediapipe::serving::{detection_cascade_config, holistic_config, pose_landmark_config};
+    let configs: [(&str, fn() -> GraphConfig); 3] = [
+        (POSE_LANDMARK, pose_landmark_config),
+        (HOLISTIC, holistic_config),
+        (DETECTION_CASCADE, detection_cascade_config),
+    ];
+    for (name, config) in configs {
+        let server = catalog_server(name);
+        let handle = server.handle();
+        for i in 0..3 {
+            let rx = handle.submit_payload(ServingPayload::Frame(payload_frame(0.3)));
+            let result = recv_within(&rx, REPLY_TIMEOUT, "pre-swap reply")
+                .unwrap_or_else(|e| panic!("{name} pre-swap frame {i}: {e}"));
+            assert_result(name, &result);
+        }
+        // Same-shape successor: the I/O contract is unchanged, so the
+        // swap publishes and in-flight sessions drain blue-green.
+        let v2 = server.swap_graph(&config()).unwrap();
+        assert_eq!(v2, 2, "{name} swap should publish version 2");
+        for i in 0..3 {
+            let rx = handle.submit_payload(ServingPayload::Frame(payload_frame(0.6)));
+            let result = recv_within(&rx, REPLY_TIMEOUT, "post-swap reply")
+                .unwrap_or_else(|e| panic!("{name} post-swap frame {i}: {e}"));
+            assert_result(name, &result);
+        }
+    }
+}

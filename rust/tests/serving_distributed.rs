@@ -15,6 +15,10 @@
 //!   hang), the empty pool answers with a typed routing error, and a
 //!   revived worker is re-admitted only after the configured
 //!   consecutive health-check passes;
+//! * **retry budget** — with `retry_budget` > 0 a stranded request is
+//!   transparently resubmitted on its session's rerouted worker
+//!   (`requests_retried` counts it) and the caller sees exactly one
+//!   answer: the successful resubmission;
 //! * **watermarks survive the hop** — a raw socket sending a stale wire
 //!   timestamp gets the same typed [`MpError::TimestampViolation`] a
 //!   local streaming session would raise, and the session's watermark
@@ -32,7 +36,8 @@ use mediapipe::prelude::*;
 use mediapipe::serving::pipeline::staged_pipeline_config;
 use mediapipe::serving::wire::{self, Frame, WireReply, WireRequest};
 use mediapipe::serving::{
-    GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig, WorkerServer,
+    GraphRegistry, PipelineServer, Router, RouterConfig, ServerConfig, ServingPayload,
+    WorkerServer,
 };
 
 const REPLY_TIMEOUT: Duration = Duration::from_secs(20);
@@ -56,6 +61,10 @@ fn fast_router_config(workers: Vec<String>) -> RouterConfig {
     let mut cfg = RouterConfig::new(workers);
     cfg.health_interval = Duration::from_millis(20);
     cfg.health_passes = 2;
+    // Fail-fast: the tests below assert on typed WorkerLost for
+    // stranded in-flight requests; transparent resubmission has its own
+    // test (`retry_budget_resubmits_inflight_requests...`).
+    cfg.retry_budget = 0;
     cfg
 }
 
@@ -229,7 +238,7 @@ fn oversized_frames_resolve_typed_without_flapping_the_worker() {
     let w = start_worker(&[100]);
     let router = Router::start(fast_router_config(vec![w.local_addr().to_string()])).unwrap();
     recv_within(&router.submit(0, &payload_frame(1.0)), REPLY_TIMEOUT, "warm-up").unwrap();
-    // A frame whose encoding would blow the wire cap must resolve at
+    // A payload whose encoding would blow the wire cap must resolve at
     // the router with a typed validation error — never be written to
     // the worker, whose codec would reject the length and sever the
     // connection (failing unrelated in-flight requests).
@@ -238,7 +247,7 @@ fn oversized_frames_resolve_typed_without_flapping_the_worker() {
     let huge = mediapipe::perception::ImageFrame::new(side, side, 1, vec![0.0; side * side]);
     match recv_within(&router.submit(0, &huge), REPLY_TIMEOUT, "oversized reply") {
         Err(MpError::Validation(msg)) => {
-            assert!(msg.contains("pixels"), "error names the bound: {msg}")
+            assert!(msg.contains("capped"), "error names the bound: {msg}")
         }
         other => panic!("expected a typed validation error, got: {other:?}"),
     }
@@ -286,6 +295,55 @@ fn concurrent_submits_on_one_session_keep_wire_order() {
 }
 
 #[test]
+fn retry_budget_resubmits_inflight_requests_on_the_rerouted_worker() {
+    // With a retry budget, a request stranded inside a dying worker is
+    // transparently resubmitted on its session's rerouted worker — the
+    // reply is known-absent (it rode the dead connection), so the
+    // caller sees exactly one answer, and it is the successful one.
+    let w0 = start_worker(&[3_000]);
+    let w1 = start_worker(&[3_000]);
+    let workers = [&w0, &w1];
+    let mut cfg = fast_router_config(vec![
+        w0.local_addr().to_string(),
+        w1.local_addr().to_string(),
+    ]);
+    cfg.retry_budget = 1;
+    let router = Router::start(cfg).unwrap();
+    const SESSIONS: u64 = 16;
+    let warm: Vec<_> = (0..SESSIONS)
+        .map(|s| router.submit(s, &payload_frame(1.0)))
+        .collect();
+    for rx in warm {
+        recv_within(&rx, REPLY_TIMEOUT, "warm-up reply").unwrap();
+    }
+    let goodput = router.goodput();
+    assert!(goodput[0].1 > 0 && goodput[1].1 > 0, "warm-up spread: {goodput:?}");
+    let victim = if goodput[0].1 >= goodput[1].1 { 0 } else { 1 };
+    // Put a full wave in flight against 3ms stages and kill the busier
+    // worker mid-window: every request must still resolve Ok with its
+    // own payload — the stranded ones via resubmission on the survivor.
+    let mut wave = Vec::new();
+    for s in 0..SESSIONS {
+        wave.push(router.submit(s, &payload_frame(2.0)));
+    }
+    workers[victim].kill();
+    for rx in wave {
+        let dets = recv_within(&rx, REPLY_TIMEOUT, "retried reply").unwrap();
+        assert!(
+            (dets[0].score - 2.0).abs() < 1e-3,
+            "a resubmitted request must carry its original payload: {dets:?}"
+        );
+    }
+    assert!(
+        router.metrics().requests_retried.get() >= 1,
+        "killing the busier worker mid-window should exercise the retry \
+         budget: {}",
+        router.report()
+    );
+    assert!(router.metrics().workers_lost.get() >= 1);
+}
+
+#[test]
 fn zero_health_misses_is_rejected_at_config_validation() {
     let mut cfg = fast_router_config(vec!["127.0.0.1:1".into()]);
     cfg.health_misses = 0;
@@ -293,6 +351,17 @@ fn zero_health_misses_is_rejected_at_config_validation() {
         Err(MpError::Validation(msg)) => assert!(msg.contains("health_misses")),
         Err(e) => panic!("expected a validation error, got: {e}"),
         Ok(_) => panic!("zero health_misses must be rejected at start"),
+    }
+}
+
+#[test]
+fn excessive_retry_budget_is_rejected_at_config_validation() {
+    let mut cfg = fast_router_config(vec!["127.0.0.1:1".into()]);
+    cfg.retry_budget = 9;
+    match Router::start(cfg) {
+        Err(MpError::Validation(msg)) => assert!(msg.contains("retry_budget")),
+        Err(e) => panic!("expected a validation error, got: {e}"),
+        Ok(_) => panic!("a retry_budget beyond the cap must be rejected at start"),
     }
 }
 
@@ -320,10 +389,7 @@ fn stale_wire_timestamps_are_rejected_typed_without_touching_the_server() {
             session: 7,
             timestamp: ts,
             deadline_us: wire::NO_DEADLINE,
-            width: 8,
-            height: 8,
-            channels: 1,
-            pixels: vec![1.0; 64],
+            payload: ServingPayload::Frame(payload_frame(1.0)),
         })
     };
     // In-order timestamp: served.

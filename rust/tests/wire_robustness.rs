@@ -1,0 +1,218 @@
+//! Wire-format robustness (serving module docs, "Distributed
+//! serving"): a hostile or corrupt peer must never crash a worker or a
+//! router. For every frame type — requests carrying every payload
+//! variant, Ok and Err replies, health probes, metrics, goodbye — the
+//! decoder answers every strict truncation with a typed error (never a
+//! panic), survives deterministic byte corruption without panicking,
+//! and refuses declared lengths past `MAX_FRAME_LEN` before allocating
+//! a byte of body.
+#![cfg(not(feature = "xla"))]
+
+use std::io::Cursor;
+
+use mediapipe::perception::{Detection, ImageFrame, LandmarkList, Rect};
+use mediapipe::prelude::{MpError, MpResult};
+use mediapipe::serving::wire::{
+    decode_body, encode_frame, read_frame, Frame, WireReply, WireRequest, WorkerStats,
+    MAX_FRAME_LEN, NO_DEADLINE, WIRE_VERSION,
+};
+use mediapipe::serving::ServingPayload;
+
+/// Deterministic corruption source (no `rand`, no clock): a 64-bit LCG
+/// with Knuth's multiplier, seeded per frame shape.
+struct Lcg(u64);
+
+impl Lcg {
+    fn step(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+fn request_with(payload: ServingPayload) -> Frame {
+    Frame::Request(WireRequest {
+        id: 9,
+        session: 4,
+        timestamp: 100,
+        deadline_us: NO_DEADLINE,
+        payload,
+    })
+}
+
+fn reply_with(result: MpResult<ServingPayload>) -> Frame {
+    Frame::Reply(WireReply {
+        id: 9,
+        session: 4,
+        timestamp: 100,
+        result,
+    })
+}
+
+fn sample_dets() -> Vec<Detection> {
+    vec![
+        Detection {
+            bbox: Rect::new(0.1, 0.2, 0.3, 0.4),
+            score: 0.9,
+            class_id: 3,
+            track_id: Some(77),
+        },
+        Detection::new(Rect::new(0.5, 0.5, 0.1, 0.1), 0.6, 0),
+    ]
+}
+
+/// One representative of every frame tag, with every payload variant
+/// (including a nested map) and every typed error shape inside the
+/// request/reply arms.
+fn every_frame() -> Vec<Frame> {
+    vec![
+        Frame::Hello {
+            version: WIRE_VERSION,
+        },
+        request_with(ServingPayload::Frame(ImageFrame::new(
+            2,
+            3,
+            1,
+            vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5],
+        ))),
+        request_with(ServingPayload::Tensor(vec![1.0, -2.0, 3.5])),
+        request_with(ServingPayload::Detections(sample_dets())),
+        request_with(ServingPayload::Landmarks(LandmarkList::new(vec![
+            (0.1, 0.9),
+            (0.5, 0.5),
+        ]))),
+        request_with(ServingPayload::Map(vec![
+            (
+                "pose".to_string(),
+                ServingPayload::Landmarks(LandmarkList::new(vec![(0.2, 0.8)])),
+            ),
+            (
+                "angles".to_string(),
+                ServingPayload::Map(vec![(
+                    "left_elbow".to_string(),
+                    ServingPayload::Tensor(vec![1.57]),
+                )]),
+            ),
+        ])),
+        reply_with(Ok(ServingPayload::Detections(sample_dets()))),
+        reply_with(Ok(ServingPayload::Tensor(vec![0.25; 7]))),
+        reply_with(Err(MpError::Overloaded {
+            queued: 12,
+            estimated_wait_us: 9_000,
+        })),
+        reply_with(Err(MpError::DeadlineExceeded { waited_us: 5_500 })),
+        reply_with(Err(MpError::TimestampViolation {
+            stream: "frame".to_string(),
+            packet_ts: 3,
+            bound: 9,
+        })),
+        reply_with(Err(MpError::WorkerLost {
+            worker: "127.0.0.1:9".to_string(),
+        })),
+        reply_with(Err(MpError::Runtime("backend fault".to_string()))),
+        Frame::HealthPing { nonce: 0xDEAD },
+        Frame::HealthPong {
+            nonce: 0xDEAD,
+            stats: WorkerStats {
+                requests: 10,
+                errors: 1,
+                shed: 2,
+                expired: 3,
+                sessions: 4,
+            },
+        },
+        Frame::MetricsRequest,
+        Frame::MetricsReport {
+            text: "requests 10\n".to_string(),
+        },
+        Frame::Goodbye {
+            reason: "draining".to_string(),
+        },
+    ]
+}
+
+/// The encoded body (the bytes `decode_body` sees), without the
+/// 4-byte length prefix `encode_frame` reserves.
+fn body_of(frame: &Frame) -> Vec<u8> {
+    encode_frame(frame)[4..].to_vec()
+}
+
+#[test]
+fn every_truncation_of_every_frame_is_a_typed_error() {
+    for frame in every_frame() {
+        let body = body_of(&frame);
+        // The full body must decode (sanity: the fixture is valid)...
+        decode_body(&body).unwrap_or_else(|e| panic!("intact {frame:?} should decode: {e}"));
+        // ...and every strict prefix must be refused with an error —
+        // all field and element counts are explicit on the wire, so a
+        // truncated body can never alias a shorter valid one.
+        for cut in 0..body.len() {
+            match decode_body(&body[..cut]) {
+                Ok(got) => panic!("{frame:?} truncated to {cut} bytes decoded as {got:?}"),
+                Err(MpError::Io(msg)) => {
+                    assert!(msg.starts_with("wire:"), "untyped decode error: {msg}")
+                }
+                Err(other) => panic!("truncation should surface as Io, got {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_corruption_never_panics_the_decoder() {
+    for (i, frame) in every_frame().into_iter().enumerate() {
+        let body = body_of(&frame);
+        let mut rng = Lcg(0x9E3779B97F4A7C15 ^ ((i as u64) << 7));
+        // 64 single-byte corruptions per frame shape: any position, any
+        // xor mask (including count/length/tag fields — the decoder
+        // must answer each with Ok-or-Err, never a panic or an
+        // unbounded allocation; counts are clamped to `MAX_FRAME_LEN`
+        // worth of elements before any reserve).
+        for _ in 0..64 {
+            let mut corrupt = body.clone();
+            let pos = (rng.step() as usize) % corrupt.len();
+            let mask = (rng.step() as u8) | 1; // never a no-op flip
+            corrupt[pos] ^= mask;
+            let _ = decode_body(&corrupt);
+        }
+        // Truncation + corruption combined.
+        for _ in 0..32 {
+            let cut = (rng.step() as usize) % body.len();
+            let mut corrupt = body[..cut].to_vec();
+            if !corrupt.is_empty() {
+                let pos = (rng.step() as usize) % corrupt.len();
+                corrupt[pos] ^= (rng.step() as u8) | 1;
+            }
+            let _ = decode_body(&corrupt);
+        }
+    }
+}
+
+#[test]
+fn oversized_declared_lengths_are_refused_before_allocation() {
+    // A length prefix one past the cap, followed by no body at all: the
+    // reader must refuse on the prefix alone — if it tried to allocate
+    // or read the declared body, it would error differently (EOF) or
+    // OOM on a hostile multi-GiB declaration.
+    let declared = (MAX_FRAME_LEN as u32) + 1;
+    let mut stream = Cursor::new(declared.to_le_bytes().to_vec());
+    match read_frame(&mut stream) {
+        Err(MpError::Io(msg)) => assert!(
+            msg.contains("exceeds") || msg.contains("cap") || msg.contains("declares"),
+            "refusal should name the cap: {msg}"
+        ),
+        other => panic!("oversized declaration should be refused, got {other:?}"),
+    }
+    assert_eq!(stream.position(), 4, "nothing past the prefix should be read");
+}
+
+#[test]
+fn a_stream_truncated_mid_body_errors_instead_of_hanging() {
+    let bytes = encode_frame(&every_frame()[1]);
+    // Keep the length prefix and half the declared body.
+    let half = 4 + (bytes.len() - 4) / 2;
+    let mut stream = Cursor::new(bytes[..half].to_vec());
+    assert!(read_frame(&mut stream).is_err(), "mid-body EOF must error");
+}
